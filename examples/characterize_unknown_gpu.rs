@@ -1,0 +1,53 @@
+//! Characterise "unknown" GPUs: run the paper's three micro-benchmarks
+//! (update period, transient response, averaging window) against simulated
+//! cards *without looking at their hidden profiles*, then reveal the truth
+//! and check what the methodology recovered — a per-GPU slice of Fig. 14.
+//!
+//! Run: `cargo run --release --example characterize_unknown_gpu`
+
+use gpupower::experiments::common::{measure_update_period, probe_transient, probe_window, TransientClass};
+use gpupower::sim::{find_model, sensor_pipeline, DriverEpoch, GpuDevice, PipelineKind, PowerField};
+
+fn main() {
+    let candidates =
+        ["V100 PCIe-16G", "Quadro RTX 8000", "A100 PCIe-40G", "H100 PCIe", "RTX 3090", "Tesla K40"];
+    let (driver, field) = (DriverEpoch::Post530, PowerField::Instant);
+
+    println!("{:<18} {:>10} {:>12} {:>10} | {:>10} {:>10}", "GPU", "update ms", "transient", "window ms", "TRUE upd", "TRUE win");
+    println!("{}", "-".repeat(84));
+    for (i, name) in candidates.iter().enumerate() {
+        let model = find_model(name).unwrap();
+        let device = GpuDevice::new(model, 0, 1000 + i as u64);
+
+        // --- what the micro-benchmarks see (no access to ground truth) ---
+        let update = measure_update_period(&device, driver, field, 7 + i as u64);
+        let transient = probe_transient(&device, driver, field, 77 + i as u64);
+        let window = match (update, &transient) {
+            (Some(u), Some(t)) if t.class != TransientClass::LogarithmicLag => {
+                probe_window(&device, driver, field, u, 0.75, 777 + i as u64)
+            }
+            _ => None,
+        };
+
+        // --- the hidden truth, for comparison ---
+        let spec = sensor_pipeline(model.generation, field, driver);
+        let (true_u, true_w) = match spec.kind {
+            PipelineKind::Boxcar { window_ms } => {
+                (format!("{:.0}", spec.update_ms), format!("{window_ms:.0}"))
+            }
+            PipelineKind::RcFilter { .. } => (format!("{:.0}", spec.update_ms), "RC".into()),
+            _ => ("N/A".into(), "N/A".into()),
+        };
+
+        println!(
+            "{:<18} {:>10} {:>12} {:>10} | {:>10} {:>10}",
+            model.name,
+            update.map_or("N/A".into(), |u| format!("{:.0}", u * 1000.0)),
+            transient.as_ref().map_or("-".into(), |t| format!("{:?}", t.class).chars().take(12).collect::<String>()),
+            window.map_or("-".into(), |w| format!("{:.0}", w * 1000.0)),
+            true_u,
+            true_w,
+        );
+    }
+    println!("\n(the 'measured' columns used only polled nvidia-smi values, as on real hardware)");
+}

@@ -1,0 +1,55 @@
+//! Quickstart: measure a workload's energy on a simulated A100 with
+//! nvidia-smi — the naive way and the paper's good-practice way — and
+//! compare both against the PMD ground truth.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use gpupower::bench::workloads::workload_by_name;
+use gpupower::measure::{
+    good_practice::measure_good_practice, naive::measure_naive, GoodPracticeConfig,
+    MeasurementRig, SensorCharacterization,
+};
+use gpupower::sim::{find_model, DriverEpoch, GpuDevice, PowerField};
+
+fn main() {
+    // an A100 under the post-530 driver, queried via power.draw.instant
+    let device = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, 7);
+    println!(
+        "device: {} (sensor tolerance: gradient {:.4}, offset {:+.2} W)",
+        device.model.name, device.tolerance.gradient, device.tolerance.offset_w
+    );
+    let rig = MeasurementRig::new(device, DriverEpoch::Post530, PowerField::Instant, 42);
+
+    // what the paper's micro-benchmarks tell us about this sensor:
+    // 100 ms update period, 25 ms averaging window -> 75% of activity unseen
+    let sensor = SensorCharacterization { update_s: 0.1, window_s: 0.025, rise_s: 0.1 };
+    println!(
+        "sensor: update 100 ms, window 25 ms -> only {:.0}% of runtime is measured\n",
+        sensor.window_s / sensor.update_s * 100.0
+    );
+
+    let workload = workload_by_name("resnet50").unwrap();
+    println!("workload: {} ({})", workload.name, workload.application);
+
+    // naive: run once, trust the numbers
+    let naive = measure_naive(&rig, workload, 0.02, 1);
+    println!("\nnaive single run:");
+    println!(
+        "  energy: {:.1} J  (truth {:.1} J)  error {:+.2}%",
+        naive.energy_j, naive.truth_j, naive.pct_error
+    );
+
+    // good practice: >=32 reps / >=5 s, 8 phase shifts, 4 trials,
+    // rise-time discard, boxcar shift
+    let good = measure_good_practice(&rig, workload, &sensor, &GoodPracticeConfig::default());
+    println!("\ngood practice ({} reps, shifts: {}):", good.reps, good.shifted);
+    println!(
+        "  mean power {:.1} W, energy/iteration {:.2} J, error {:+.2}% (std {:.2}%)",
+        good.mean_power_w, good.energy_per_iteration_j, good.mean_pct_error, good.std_pct_error
+    );
+    println!(
+        "\nerror |{:.1}%| (naive) -> |{:.1}%| (good practice)",
+        naive.pct_error.abs(),
+        good.mean_pct_error.abs()
+    );
+}

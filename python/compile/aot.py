@@ -1,0 +1,101 @@
+"""AOT: lower every L2 entry point to HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.boxcar import TRACE_LEN
+from .kernels.fma_chain import BLOCK, NSIZE
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+ENTRIES = {
+    "fma_chain": (model.fma_chain_entry, (i32(1), f32(NSIZE))),
+    "boxcar_emulate": (
+        model.boxcar_emulate_entry,
+        (f32(TRACE_LEN), i32(1), i32(model.NQ)),
+    ),
+    "window_loss_grid": (
+        model.window_loss_grid_entry,
+        (f32(TRACE_LEN), f32(model.NQ), i32(model.NQ), i32(model.NGRID)),
+    ),
+    "energy_pipeline": (
+        model.energy_pipeline_entry,
+        (f32(model.NP), f32(model.NP), f32(model.NP), f32(1), f32(1)),
+    ),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single entry point")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = [args.only] if args.only else list(ENTRIES)
+    for name in names:
+        fn, specs = ENTRIES[name]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "nsize": NSIZE,
+        "block": BLOCK,
+        "trace_len": TRACE_LEN,
+        "nq": model.NQ,
+        "ngrid": model.NGRID,
+        "np": model.NP,
+        "entries": {
+            name: {
+                "inputs": [
+                    {"dtype": str(s.dtype), "shape": list(s.shape)} for s in specs
+                ]
+            }
+            for name, (_, specs) in ENTRIES.items()
+        },
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

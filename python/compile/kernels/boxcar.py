@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: sliding boxcar average over a high-rate power trace.
+
+The sensor pipeline the paper reverse-engineers is exactly this operator: the
+reported power at time ``t`` is the mean of the true power over the trailing
+``window`` samples. This kernel produces the *dense* boxcar-filtered trace used
+by the Fig. 10/11 emulations; the L2 graph then gathers it at the smi query
+timestamps.
+
+Single-block kernel: a 9 s trace at 5 kHz is 45 000 f32 = 176 KiB, far below
+VMEM capacity, so the whole trace is staged at once and the prefix-sum runs
+in-core (O(n), not O(n*w) convolution -- see DESIGN.md section 7).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TRACE_LEN = 45_000  # 9 s at 5 kHz, the paper's Fig. 11 capture length
+
+
+def _kernel(window_ref, x_ref, o_ref):
+    x = x_ref[...]
+    w = window_ref[0]
+    n = x.shape[0]
+    # associative_scan, NOT jnp.cumsum: on the CPU backend cumsum lowers to
+    # a ReduceWindow that executes in O(n^2) (≈400 ms for 45 k samples);
+    # the scan is O(n log n) (measured ~100x faster; EXPERIMENTS.md §Perf)
+    csum = jax.lax.associative_scan(jnp.add, x)
+    idx = jnp.arange(n)
+    lo = idx - w  # exclusive start of the trailing window
+    lo_clamped = jnp.maximum(lo, -1)
+    start_sum = jnp.where(lo_clamped < 0, 0.0, csum[jnp.maximum(lo_clamped, 0)])
+    count = (idx - lo_clamped).astype(jnp.float32)
+    o_ref[...] = (csum - start_sum) / jnp.maximum(count, 1.0)
+
+
+def sliding_boxcar(x: jax.Array, window: jax.Array) -> jax.Array:
+    """Trailing-window moving average.
+
+    Args:
+      x: f32[n] trace.
+      window: i32[1] window length in samples (>=1; clamped at trace start).
+
+    Returns:
+      f32[n]; ``out[i] = mean(x[max(0, i-w+1) : i+1])``.
+    """
+    n = x.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(window, x)

@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: the paper's benchmark-load FMA chain (Listing 1), re-thought for TPU.
+
+The CUDA original runs one thread per element and a serially-dependent chain
+
+    x = x * 2 + 2
+    x = x / 2 - 1        (net identity -- but only if actually executed)
+
+for ``niter`` iterations, with ``nblocks = SM_count * fraction`` controlling the
+power amplitude and ``niter`` controlling the duration (linear, Fig. 5).
+
+TPU adaptation (DESIGN.md section "Hardware-Adaptation"):
+  * the element vector is tiled into VMEM blocks via BlockSpec (the HBM<->VMEM
+    schedule CUDA expressed with threadblocks);
+  * the chain runs as a ``lax.fori_loop`` *inside* the kernel, so the 2*niter
+    VPU ops are serially data-dependent and cannot be algebraically collapsed;
+  * ``niter`` arrives as a runtime scalar so a single AOT artifact covers every
+    duration (the Rust coordinator sweeps it for the Fig. 5 calibration).
+
+``interpret=True`` always: on this CPU PJRT stack a real TPU lowering would emit
+a Mosaic custom-call the CPU plugin cannot execute. Correctness is pinned by
+``ref.py`` (pure jnp) via pytest + hypothesis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# Default artifact geometry. 16384 f32 = 64 KiB per operand; block 2048 f32 =
+# 8 KiB, an 8-step grid -- comfortably within a single TPU core's ~16 MiB VMEM
+# with double buffering, and fast enough under interpret mode.
+NSIZE = 16384
+BLOCK = 2048
+
+
+def _kernel(niter_ref, x_ref, o_ref):
+    """One VMEM block of the FMA chain."""
+    niter = niter_ref[0]
+
+    def body(_, v):
+        v = v * 2.0 + 2.0
+        v = v / 2.0 - 1.0
+        return v
+
+    o_ref[...] = lax.fori_loop(0, niter, body, x_ref[...])
+
+
+def fma_chain(x: jax.Array, niter: jax.Array, *, block: int = BLOCK) -> jax.Array:
+    """Run the FMA chain over ``x`` for ``niter`` iterations.
+
+    Args:
+      x: f32[n] work vector (n divisible by ``block``).
+      niter: i32[1] chain length (runtime-dynamic).
+      block: VMEM block size in elements.
+
+    Returns:
+      f32[n]; numerically ~equal to ``x`` (the chain is an identity when
+      executed), which is what makes it a pure *power/duration* load.
+    """
+    n = x.shape[0]
+    if n % block:
+        raise ValueError(f"n={n} not divisible by block={block}")
+    grid = n // block
+    return pl.pallas_call(
+        _kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),        # niter: broadcast scalar
+            pl.BlockSpec((block,), lambda i: (i,)),    # x: one VMEM tile per step
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(niter, x)

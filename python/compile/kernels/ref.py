@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels. pytest asserts kernel == ref."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def fma_chain_ref(x, niter):
+    """Reference FMA chain: same serial semantics, no Pallas."""
+
+    def body(_, v):
+        v = v * 2.0 + 2.0
+        v = v / 2.0 - 1.0
+        return v
+
+    return lax.fori_loop(0, jnp.asarray(niter).reshape(()).astype(jnp.int32), body, x)
+
+
+def sliding_boxcar_ref(x, window):
+    """Reference trailing boxcar; O(n*w) direct form, trusted by inspection."""
+    x = jnp.asarray(x, jnp.float32)
+    w = int(window)
+    n = x.shape[0]
+    out = []
+    for i in range(n):
+        lo = max(0, i - w + 1)
+        out.append(x[lo : i + 1].mean())
+    return jnp.stack(out)
+
+
+def sliding_boxcar_ref_fast(x, window):
+    """Vectorised reference (cumsum form) for large-n property tests."""
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.asarray(window).reshape(()).astype(jnp.int32)
+    n = x.shape[0]
+    csum = jnp.cumsum(x)
+    idx = jnp.arange(n)
+    lo = jnp.maximum(idx - w, -1)
+    start = jnp.where(lo < 0, 0.0, csum[jnp.maximum(lo, 0)])
+    count = (idx - lo).astype(jnp.float32)
+    return (csum - start) / jnp.maximum(count, 1.0)

@@ -1,0 +1,129 @@
+"""Pallas kernel vs pure-jnp oracle -- the core L1 correctness signal."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.boxcar import sliding_boxcar
+from compile.kernels.fma_chain import BLOCK, NSIZE, fma_chain
+
+
+def _fma(x, niter, block=BLOCK):
+    return np.asarray(fma_chain(jnp.asarray(x, jnp.float32), jnp.array([niter], jnp.int32), block=block))
+
+
+class TestFmaChain:
+    def test_identity_property(self):
+        """(x*2+2)/2-1 == x each iteration: the chain is a pure duration load."""
+        x = np.linspace(-10, 10, NSIZE).astype(np.float32)
+        out = _fma(x, 100)
+        np.testing.assert_allclose(out, x, rtol=1e-5, atol=1e-5)
+
+    def test_zero_iters_is_passthrough(self):
+        x = np.random.default_rng(0).normal(size=NSIZE).astype(np.float32)
+        np.testing.assert_array_equal(_fma(x, 0), x)
+
+    def test_matches_ref(self):
+        x = np.random.default_rng(1).normal(size=NSIZE).astype(np.float32)
+        want = np.asarray(ref.fma_chain_ref(jnp.asarray(x), 17))
+        np.testing.assert_allclose(_fma(x, 17), want, rtol=1e-6)
+
+    def test_bad_block_raises(self):
+        with pytest.raises(ValueError):
+            fma_chain(jnp.zeros(100, jnp.float32), jnp.array([1], jnp.int32), block=64)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        niter=st.integers(min_value=0, max_value=64),
+        log2n=st.integers(min_value=7, max_value=13),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_property_sweep_shapes(self, niter, log2n, seed):
+        """Hypothesis sweep over sizes/iteration counts vs the ref oracle."""
+        n = 2**log2n
+        block = min(n, 512)
+        x = np.random.default_rng(seed).uniform(-4, 4, size=n).astype(np.float32)
+        got = _fma(x, niter, block=block)
+        want = np.asarray(ref.fma_chain_ref(jnp.asarray(x), niter))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(niter=st.integers(min_value=0, max_value=32))
+    def test_property_identity_any_niter(self, niter):
+        x = np.linspace(0.5, 3.0, 1024).astype(np.float32)
+        np.testing.assert_allclose(_fma(x, niter, block=256), x, rtol=1e-5, atol=1e-5)
+
+
+class TestSlidingBoxcar:
+    def _run(self, x, w):
+        return np.asarray(sliding_boxcar(jnp.asarray(x, jnp.float32), jnp.array([w], jnp.int32)))
+
+    def test_window_one_is_identity(self):
+        # cumsum-difference form: identity up to fp cancellation error
+        x = np.random.default_rng(2).normal(size=333).astype(np.float32)
+        np.testing.assert_allclose(self._run(x, 1), x, rtol=1e-4, atol=2e-5)
+
+    def test_matches_direct_ref(self):
+        x = np.random.default_rng(3).normal(size=200).astype(np.float32)
+        want = np.asarray(ref.sliding_boxcar_ref(x, 17))
+        np.testing.assert_allclose(self._run(x, 17), want, rtol=1e-4, atol=1e-5)
+
+    def test_constant_trace_invariant(self):
+        """Boxcar of a constant is the constant, for any window."""
+        x = np.full(500, 123.25, np.float32)
+        for w in (1, 7, 100, 500, 1000):
+            np.testing.assert_allclose(self._run(x, w), x, rtol=1e-5)
+
+    def test_full_window_is_running_mean(self):
+        x = np.arange(100, dtype=np.float32)
+        got = self._run(x, 1000)  # window longer than trace -> running mean
+        want = np.cumsum(x) / np.arange(1, 101)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_square_wave_attenuation(self):
+        """A window equal to the square-wave period flattens it to the mean --
+        the paper's Fig. 10 RTX 3090 observation."""
+        period = 100
+        x = np.tile(np.concatenate([np.full(50, 200.0), np.full(50, 80.0)]), 20).astype(np.float32)
+        out = self._run(x, period)
+        steady = out[2 * period:]
+        assert np.all(np.abs(steady - 140.0) < 1.5)
+
+    def test_fractional_window_preserves_swing(self):
+        """A window = period/4 keeps high/low excursions -- Fig. 10 A100."""
+        x = np.tile(np.concatenate([np.full(50, 200.0), np.full(50, 80.0)]), 20).astype(np.float32)
+        out = self._run(x, 25)
+        steady = out[200:]
+        assert steady.max() > 195.0 and steady.min() < 85.0
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(min_value=2, max_value=400),
+        w=st.integers(min_value=1, max_value=500),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_property_vs_fast_ref(self, n, w, seed):
+        # associative_scan sums in tree order vs the ref's sequential
+        # cumsum; with f32 and values up to 400 the prefix differences can
+        # reach ~1e-2 after cancellation, hence the tolerance
+        x = np.random.default_rng(seed).uniform(0, 400, size=n).astype(np.float32)
+        want = np.asarray(ref.sliding_boxcar_ref_fast(jnp.asarray(x), w))
+        np.testing.assert_allclose(self._run(x, w), want, rtol=5e-4, atol=5e-2)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(min_value=10, max_value=300),
+        w=st.integers(min_value=1, max_value=300),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_property_bounds(self, n, w, seed):
+        """Boxcar output is bounded by the input range (convexity), up to
+        f32 prefix-cancellation error (~1e-4 relative)."""
+        x = np.random.default_rng(seed).uniform(50, 700, size=n).astype(np.float32)
+        out = self._run(x, w)
+        tol = 1e-6 * float(x.sum()) + 1e-2
+        assert out.min() >= x.min() - tol
+        assert out.max() <= x.max() + tol

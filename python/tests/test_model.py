@@ -1,0 +1,146 @@
+"""L2 graph tests: emulation, loss grid, energy pipeline semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels.boxcar import TRACE_LEN
+
+RNG = np.random.default_rng(42)
+
+
+def _square_trace(period_samples, hi=300.0, lo=60.0, n=TRACE_LEN, phase=0, noise=0.0, seed=7):
+    i = (np.arange(n) + phase) % period_samples
+    t = np.where(i < period_samples // 2, hi, lo).astype(np.float32)
+    if noise:
+        t = t + np.random.default_rng(seed).normal(0, noise, n).astype(np.float32)
+    return t
+
+
+def _smi_idx(update_samples, n=TRACE_LEN, nq=model.NQ, start=0):
+    idx = start + np.arange(1, nq + 1) * update_samples
+    return np.clip(idx, 0, n - 1).astype(np.int32)
+
+
+class TestBoxcarEmulate:
+    def test_flat_trace(self):
+        trace = jnp.full((TRACE_LEN,), 150.0, jnp.float32)
+        idx = jnp.asarray(_smi_idx(500))
+        (out,) = model.boxcar_emulate_entry(trace, jnp.array([125], jnp.int32), idx)
+        np.testing.assert_allclose(np.asarray(out), 150.0, rtol=1e-5)
+
+    def test_window_fraction_preserves_swing(self):
+        """25 ms window / 100 ms period (A100): emulated values reach hi and lo."""
+        trace = jnp.asarray(_square_trace(500))  # 100 ms at 5 kHz
+        idx = jnp.asarray(_smi_idx(500))
+        # 25 ms = 125 samples; sample instants at multiples of the period see
+        # the trailing low half-cycle.
+        (out,) = model.boxcar_emulate_entry(trace, jnp.array([125], jnp.int32), idx)
+        out = np.asarray(out)
+        assert out.min() < 70.0  # trailing window fully in the low state
+
+    def test_window_equal_period_flattens(self):
+        trace = jnp.asarray(_square_trace(500))
+        idx = jnp.asarray(_smi_idx(500))
+        (out,) = model.boxcar_emulate_entry(trace, jnp.array([500], jnp.int32), idx)
+        np.testing.assert_allclose(np.asarray(out), 180.0, atol=2.0)
+
+
+class TestWindowLossGrid:
+    def _observed(self, trace, true_window, idx):
+        (obs,) = model.boxcar_emulate_entry(
+            jnp.asarray(trace), jnp.array([true_window], jnp.int32), jnp.asarray(idx)
+        )
+        return obs
+
+    def test_minimum_at_true_window(self):
+        """The loss grid recovers the ground-truth averaging window -- the core
+        of the paper's section 4.3 estimator (Fig. 12)."""
+        # aliased load: period = 3/4 of the 100 ms update period, plus sensor
+        # noise (pure periodic squares are shape-degenerate across windows)
+        trace = _square_trace(375, noise=2.0)
+        idx = _smi_idx(500, start=137)
+        obs = self._observed(trace, 125, idx)
+        windows = jnp.asarray((np.arange(model.NGRID) + 1) * 5, jnp.int32)  # 1..64 ms
+        (losses,) = model.window_loss_grid_entry(
+            jnp.asarray(trace), obs, jnp.asarray(idx), windows
+        )
+        best = int(np.asarray(windows)[np.argmin(np.asarray(losses))])
+        assert abs(best - 125) <= 10  # within two grid steps of 25 ms
+
+    @settings(max_examples=8, deadline=None)
+    @given(true_w=st.sampled_from([50, 125, 250]), period=st.sampled_from([333, 375, 400, 625]))
+    def test_property_recovery(self, true_w, period):
+        trace = _square_trace(period, noise=2.0, seed=period)
+        idx = _smi_idx(500, start=211)
+        obs = self._observed(trace, true_w, idx)
+        windows = jnp.asarray((np.arange(model.NGRID) + 1) * 5, jnp.int32)
+        (losses,) = model.window_loss_grid_entry(
+            jnp.asarray(trace), obs, jnp.asarray(idx), windows
+        )
+        best = int(np.asarray(windows)[np.argmin(np.asarray(losses))])
+        assert abs(best - true_w) <= 15
+
+
+class TestEnergyPipeline:
+    def _run(self, power, ts, valid=None, shift=0.0, discard=0.0):
+        n = model.NP
+        p = np.zeros(n, np.float32)
+        t = np.zeros(n, np.float32)
+        v = np.zeros(n, np.float32)
+        p[: len(power)] = power
+        t[: len(ts)] = ts
+        v[: len(power)] = 1.0 if valid is None else valid
+        e, d = model.energy_pipeline_entry(
+            jnp.asarray(p), jnp.asarray(t), jnp.asarray(v),
+            jnp.array([shift], jnp.float32), jnp.array([discard], jnp.float32),
+        )
+        return float(e), float(d)
+
+    def test_constant_power(self):
+        ts = np.arange(100) * 0.1
+        e, d = self._run(np.full(100, 200.0), ts)
+        assert abs(e - 200.0 * 9.9) < 1e-2
+        assert abs(d - 9.9) < 1e-4
+
+    def test_discard_rise_time(self):
+        ts = np.arange(100) * 0.1
+        e, _ = self._run(np.full(100, 200.0), ts, discard=5.0)
+        # only segments fully past 5.0 s contribute: 4.9 s worth
+        assert abs(e - 200.0 * 4.9) < 1e-2
+
+    def test_shift_moves_discard_boundary(self):
+        ts = np.arange(100) * 0.1
+        e_noshift, _ = self._run(np.full(100, 100.0), ts, discard=5.0)
+        e_shift, _ = self._run(np.full(100, 100.0), ts, shift=1.0, discard=5.0)
+        assert e_shift < e_noshift  # shifting earlier removes ~1 s more
+
+    def test_padding_excluded(self):
+        ts = np.arange(10) * 1.0
+        e, d = self._run(np.full(10, 50.0), ts)
+        assert abs(e - 50.0 * 9.0) < 1e-3
+        assert abs(d - 9.0) < 1e-5
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 512))
+    def test_property_matches_trapz(self, seed, n):
+        r = np.random.default_rng(seed)
+        p = r.uniform(50, 400, n).astype(np.float32)
+        ts = np.cumsum(r.uniform(0.01, 0.2, n)).astype(np.float32)
+        e, d = self._run(p, ts)
+        np.testing.assert_allclose(e, np.trapezoid(p, ts), rtol=1e-3)
+        np.testing.assert_allclose(d, ts[-1] - ts[0], rtol=1e-4)
+
+
+class TestAotLowering:
+    def test_all_entries_lower(self):
+        """Every artifact entry point lowers to HLO text without error."""
+        from compile.aot import ENTRIES, to_hlo_text
+
+        for name, (fn, specs) in ENTRIES.items():
+            text = to_hlo_text(jax.jit(fn).lower(*specs))
+            assert "ENTRY" in text, name
+            assert len(text) > 500, name

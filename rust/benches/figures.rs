@@ -1,0 +1,119 @@
+//! End-to-end benches: one per paper table/figure (DESIGN.md §5). Each
+//! bench times regenerating that figure's data with the same code the CLI
+//! uses, so `cargo bench --bench figures` is both a performance gate and a
+//! smoke-run of the whole evaluation.
+
+#[path = "harness.rs"]
+mod harness;
+use harness::{bench, report, BenchRow};
+
+use gpupower::coordinator::{Fleet, FleetConfig, Scheduler};
+use gpupower::experiments as ex;
+use gpupower::measure::GoodPracticeConfig;
+use gpupower::runtime::ArtifactRuntime;
+use gpupower::sim::{DriverEpoch, PowerField};
+
+fn main() {
+    let seed = 2024;
+    let rt = ArtifactRuntime::load_default().ok();
+    if rt.is_none() {
+        eprintln!("[bench] artifacts not found; fig05 and artifact paths skipped");
+    }
+    let mut rows: Vec<BenchRow> = Vec::new();
+
+    rows.push(bench("table1_catalogue", 1, 20, || {
+        let t = ex::tables::table1();
+        assert!(!t.rows.is_empty());
+    }));
+    rows.push(bench("table2_workloads", 1, 20, || {
+        let t = ex::tables::table2();
+        assert_eq!(t.rows.len(), 9);
+    }));
+    rows.push(bench("fig01_motivation", 1, 3, || {
+        let r = ex::fig01_motivation::run(seed);
+        assert!(!r.readings.is_empty());
+    }));
+    if let Some(rt) = &rt {
+        rows.push(bench("fig05_calibration (PJRT fma_chain)", 1, 3, || {
+            let r = ex::fig05_calibration::run(rt).unwrap();
+            // loose gate: this harness measures wall time while the whole
+            // bench suite loads the machine; the strict R2>0.99 check lives
+            // in the (quiescent) test suite and the e2e example
+            assert!(r.sweep.fit.r2 > 0.9, "r2 = {}", r.sweep.fit.r2);
+        }));
+    }
+    rows.push(bench("fig06_update_period (4 GPUs)", 0, 3, || {
+        let rs = ex::fig06_update_period::run(&["V100 PCIe", "A100 PCIe-40G"], seed);
+        assert_eq!(rs.len(), 2);
+    }));
+    rows.push(bench("fig07_transient (4 classes)", 0, 2, || {
+        let rs = ex::fig07_transient::run(seed);
+        assert_eq!(rs.len(), 4);
+    }));
+    rows.push(bench("fig08_steady_state (7x8 levels)", 0, 2, || {
+        let r = ex::fig08_steady_state::run(seed);
+        assert!(r.fit.r2 > 0.99);
+    }));
+    rows.push(bench("fig09_gradient_offset (20 cards, 2 reps)", 0, 1, || {
+        let fits = ex::fig09_gradient_offset::run(seed, 2);
+        assert!(fits.len() >= 15);
+    }));
+    rows.push(bench("fig10_boxcar_alias", 0, 2, || {
+        let (a, b) = ex::fig10_boxcar_alias::run(seed);
+        assert!(b.relative_swing > a.relative_swing);
+    }));
+    rows.push(bench("fig11_reconstruction (artifact path)", 0, 3, || {
+        let r = ex::fig11_reconstruction::run(seed, rt.as_ref());
+        assert!(r.mse_pmd < 0.2);
+    }));
+    rows.push(bench("fig12_window_loss (3 GPUs x 64 grid)", 0, 2, || {
+        let c = ex::fig12_window_loss::run(seed, rt.as_ref());
+        assert_eq!(c.len(), 3);
+    }));
+    rows.push(bench("fig13_window_dist (3 GPUs, 2 runs/frac)", 0, 1, || {
+        let rs = ex::fig13_window_dist::run(2, seed);
+        assert_eq!(rs.len(), 3);
+    }));
+    rows.push(bench("fig14_matrix (13 gens x drivers)", 0, 1, || {
+        let cells = ex::fig14_matrix::run(seed);
+        assert!(cells.len() > 20);
+    }));
+    rows.push(bench("fig15_case1 (3 periods, 4 trials)", 0, 1, || {
+        let rs = ex::fig15_case1::run(4, seed);
+        assert_eq!(rs.len(), 3);
+    }));
+    rows.push(bench("fig16_case2 (3 periods, 4 trials)", 0, 1, || {
+        let rs = ex::fig16_case2::run(4, seed);
+        assert_eq!(rs.len(), 3);
+    }));
+    rows.push(bench("fig17_case3 (3x3 grid, 4 trials)", 0, 1, || {
+        let rs = ex::fig17_case3::run(4, seed);
+        assert_eq!(rs.len(), 9);
+    }));
+    rows.push(bench("fig18_evaluation (9 workloads x 3 cases)", 0, 1, || {
+        let cfg = GoodPracticeConfig { trials: 2, min_reps: 8, min_runtime_s: 1.0, ..Default::default() };
+        let o = ex::fig18_evaluation::run(&cfg, seed);
+        assert_eq!(o.len(), 3);
+    }));
+    rows.push(bench("fig19_gh200", 0, 2, || {
+        let r = ex::fig19_gh200::run(seed);
+        assert!(r.acpi_max_noise_w > 100.0);
+    }));
+    rows.push(bench("fleet_16_gpus (coordinator)", 0, 1, || {
+        let fleet = Fleet::build(FleetConfig {
+            size: 16,
+            models: vec!["A100".into(), "3090".into()],
+            driver: DriverEpoch::Post530,
+            field: PowerField::Instant,
+            seed,
+        });
+        let sched = Scheduler {
+            concurrency: 8,
+            config: GoodPracticeConfig { trials: 1, min_reps: 8, min_runtime_s: 1.0, ..Default::default() },
+        };
+        let (outcomes, _) = sched.run(&fleet, None);
+        assert_eq!(outcomes.len(), 16);
+    }));
+
+    report("figure regeneration benches", &rows);
+}

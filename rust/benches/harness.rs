@@ -1,0 +1,45 @@
+//! Tiny shared bench harness (criterion is unavailable in this offline
+//! build): warm-up + N timed iterations, reporting mean / min / max.
+
+use std::time::Instant;
+
+/// One bench result row.
+pub struct BenchRow {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+    /// optional throughput annotation
+    pub note: String,
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchRow {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64() * 1000.0);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::MAX, f64::min);
+    let max = times.iter().cloned().fold(f64::MIN, f64::max);
+    BenchRow { name: name.to_string(), iters, mean_ms: mean, min_ms: min, max_ms: max, note: String::new() }
+}
+
+/// Print rows as an aligned table.
+pub fn report(title: &str, rows: &[BenchRow]) {
+    println!("\n=== {title} ===");
+    println!("{:<44} {:>6} {:>12} {:>12} {:>12}  {}", "benchmark", "iters", "mean ms", "min ms", "max ms", "note");
+    println!("{}", "-".repeat(110));
+    for r in rows {
+        println!(
+            "{:<44} {:>6} {:>12.3} {:>12.3} {:>12.3}  {}",
+            r.name, r.iters, r.mean_ms, r.min_ms, r.max_ms, r.note
+        );
+    }
+}

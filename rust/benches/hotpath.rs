@@ -1,0 +1,110 @@
+//! Hot-path micro-benches (the §Perf targets in DESIGN.md):
+//!   L3 — trace synthesis (samples/s), prefix sums, boxcar emulation,
+//!        window estimation, sensor pipeline, fleet query routing;
+//!   L1/L2 — PJRT artifact execution latency (fma_chain, boxcar_emulate,
+//!        window_loss_grid, energy_pipeline).
+
+#[path = "harness.rs"]
+mod harness;
+use harness::{bench, report, BenchRow};
+
+use gpupower::estimator::boxcar::{estimate_window, window_loss, EstimatorConfig};
+use gpupower::runtime::ArtifactRuntime;
+use gpupower::sim::sensor::run_pipeline;
+use gpupower::sim::{find_model, ActivitySignal, GpuDevice, PipelineSpec};
+
+fn main() {
+    let mut rows: Vec<BenchRow> = Vec::new();
+    let device = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, 7);
+    let act = ActivitySignal::square_wave(0.3, 0.075, 0.5, 1.0, 110);
+
+    // --- L3 simulator hot paths ---
+    let mut r = bench("synthesize 9s @10kHz (90k samples)", 1, 10, || {
+        let t = device.synthesize(&act, 0.0, 9.0);
+        assert_eq!(t.len(), 90_000);
+    });
+    r.note = format!("{:.1} Msamples/s", 0.09 / (r.mean_ms / 1000.0));
+    rows.push(r);
+
+    let truth = device.synthesize(&act, 0.0, 9.0);
+    let mut r = bench("prefix_sums (90k)", 1, 50, || {
+        let p = truth.prefix_sums();
+        assert_eq!(p.len(), 90_000);
+    });
+    r.note = format!("{:.0} Msamples/s", 0.09 / (r.mean_ms / 1000.0));
+    rows.push(r);
+
+    let prefix = truth.prefix_sums();
+    let ts: Vec<f64> = (0..85).map(|k| 1.0 + k as f64 * 0.1).collect();
+    let obs: Vec<f64> = ts.iter().map(|&t| truth.window_mean_with(&prefix, t, 0.025)).collect();
+    rows.push(bench("window_loss (85 queries)", 5, 200, || {
+        let l = window_loss(&truth, &prefix, &ts, &obs, 0.02);
+        assert!(l.is_finite());
+    }));
+
+    let stream = run_pipeline(&device, PipelineSpec::boxcar(100.0, 25.0), &truth, 5);
+    let observed: Vec<(f64, f64)> = stream.readings.iter().map(|x| (x.t, x.watts)).collect();
+    rows.push(bench("estimate_window (grid32 + NM)", 1, 10, || {
+        let e = estimate_window(&truth, &observed, EstimatorConfig::default());
+        assert!(e.window_s > 0.0);
+    }));
+
+    rows.push(bench("sensor pipeline boxcar (90 updates)", 1, 50, || {
+        let s = run_pipeline(&device, PipelineSpec::boxcar(100.0, 25.0), &truth, 5);
+        assert!(s.readings.len() > 80);
+    }));
+
+    let pmd = gpupower::pmd::Pmd::new(3);
+    rows.push(bench("pmd measure 9s @5kHz", 1, 20, || {
+        let m = pmd.measure(&device, &truth);
+        assert_eq!(m.len(), 45_000);
+    }));
+
+    // --- L1/L2 PJRT artifact execution ---
+    match ArtifactRuntime::load_default() {
+        Ok(rt) => {
+            let x = vec![0.5f32; rt.manifest.nsize];
+            let mut r = bench("PJRT fma_chain niter=10000", 2, 10, || {
+                let (_, _) = rt.fma_chain(10_000, &x).unwrap();
+            });
+            r.note = format!(
+                "{:.2} Gflop/s (2 flops x {} x 10k iters)",
+                2.0 * rt.manifest.nsize as f64 * 10_000.0 / (r.mean_ms / 1000.0) / 1e9,
+                rt.manifest.nsize
+            );
+            rows.push(r);
+
+            let trace: Vec<f32> = truth
+                .downsample(5000.0)
+                .samples
+                .iter()
+                .copied()
+                .chain(std::iter::repeat(0.0))
+                .take(rt.manifest.trace_len)
+                .collect();
+            let idx: Vec<i32> =
+                (0..rt.manifest.nq).map(|k| (600 + k * 340).min(rt.manifest.trace_len - 1) as i32).collect();
+            rows.push(bench("PJRT boxcar_emulate (45k trace)", 2, 20, || {
+                let e = rt.boxcar_emulate(&trace, 125, &idx).unwrap();
+                assert_eq!(e.len(), rt.manifest.nq);
+            }));
+
+            let observed: Vec<f32> = idx.iter().map(|&i| trace[i as usize]).collect();
+            let windows: Vec<i32> = (1..=rt.manifest.ngrid as i32).map(|i| i * 12).collect();
+            rows.push(bench("PJRT window_loss_grid (64 windows)", 2, 10, || {
+                let l = rt.window_loss_grid(&trace, &observed, &idx, &windows).unwrap();
+                assert_eq!(l.len(), rt.manifest.ngrid);
+            }));
+
+            let series: Vec<(f64, f64)> = (0..500).map(|i| (i as f64 * 0.02, 200.0)).collect();
+            let (p, t, v) = rt.pack_series(&series).unwrap();
+            rows.push(bench("PJRT energy_pipeline (1024 slots)", 2, 20, || {
+                let (e, _) = rt.energy_pipeline(&p, &t, &v, 0.0, 0.0).unwrap();
+                assert!(e > 0.0);
+            }));
+        }
+        Err(e) => eprintln!("[bench] artifact benches skipped: {e}"),
+    }
+
+    report("hot-path benches", &rows);
+}

@@ -1,0 +1,95 @@
+//! Fig. 5: calibrate the FMA chain length → execution time relationship.
+//!
+//! The paper: "linear regression was used to determine the gradient between
+//! the time measured for a set of arbitrary chain lengths" — both their
+//! RTX 3090 and A100 fits have R² = 1.000. We do exactly that against the
+//! real AOT kernel running on PJRT: time `fma_chain` for a sweep of `niter`
+//! values and fit a line.
+
+use anyhow::Result;
+
+use crate::estimator::linreg::{fit, LinearFit};
+use crate::runtime::ArtifactRuntime;
+
+/// A niter → milliseconds calibration.
+#[derive(Debug, Clone, Copy)]
+pub struct Calibration {
+    /// ms per iteration (the Fig. 5 slope).
+    pub ms_per_iter: f64,
+    /// fixed overhead ms (launch + readback).
+    pub overhead_ms: f64,
+    /// fit quality; the paper reports 1.000.
+    pub r2: f64,
+}
+
+impl Calibration {
+    /// Chain length needed for a target duration.
+    pub fn niter_for_ms(&self, ms: f64) -> i32 {
+        (((ms - self.overhead_ms) / self.ms_per_iter).round().max(1.0)) as i32
+    }
+
+    /// Predicted duration for a chain length.
+    pub fn ms_for_niter(&self, niter: i32) -> f64 {
+        self.overhead_ms + self.ms_per_iter * niter as f64
+    }
+}
+
+/// Sweep + per-point timing data (for reporting the Fig. 5 scatter).
+#[derive(Debug, Clone)]
+pub struct CalibrationSweep {
+    pub niters: Vec<i32>,
+    pub measured_ms: Vec<f64>,
+    pub fit: LinearFit,
+}
+
+/// Time the kernel for `niters` (each `reps` times, keeping the minimum —
+/// standard microbenchmark practice) and fit the line.
+pub fn calibrate_sweep(rt: &ArtifactRuntime, niters: &[i32], reps: usize) -> Result<CalibrationSweep> {
+    let x = vec![0.5f32; rt.manifest.nsize];
+    // warm-up: first execution pays one-time costs
+    let _ = rt.fma_chain(niters[0], &x)?;
+    let mut measured = Vec::with_capacity(niters.len());
+    for &n in niters {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let (_, dt) = rt.fma_chain(n, &x)?;
+            best = best.min(dt.as_secs_f64() * 1000.0);
+        }
+        measured.push(best);
+    }
+    let xs: Vec<f64> = niters.iter().map(|&n| n as f64).collect();
+    let f = fit(&xs, &measured);
+    Ok(CalibrationSweep { niters: niters.to_vec(), measured_ms: measured, fit: f })
+}
+
+/// Standard calibration: geometric sweep of chain lengths. The sweep spans
+/// the range the benchmark loads actually use (tens of ms), so the fit
+/// interpolates rather than extrapolates.
+pub fn calibrate(rt: &ArtifactRuntime) -> Result<Calibration> {
+    let niters = [1000, 2000, 4000, 8000, 16000, 32000, 64000];
+    let sweep = calibrate_sweep(rt, &niters, 3)?;
+    Ok(Calibration {
+        ms_per_iter: sweep.fit.slope,
+        overhead_ms: sweep.fit.intercept.max(0.0),
+        r2: sweep.fit.r2,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn niter_roundtrip() {
+        let c = Calibration { ms_per_iter: 0.01, overhead_ms: 0.5, r2: 1.0 };
+        let n = c.niter_for_ms(50.0);
+        assert_eq!(n, 4950);
+        assert!((c.ms_for_niter(n) - 50.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn niter_never_below_one() {
+        let c = Calibration { ms_per_iter: 1.0, overhead_ms: 10.0, r2: 1.0 };
+        assert_eq!(c.niter_for_ms(0.1), 1);
+    }
+}

@@ -1,0 +1,111 @@
+//! The paper's micro-benchmark suite (§3.4): a precisely controllable
+//! square-wave GPU load.
+//!
+//! High state: the AOT-compiled Pallas FMA-chain kernel executed via PJRT
+//! (`runtime::ArtifactRuntime::fma_chain`); duration is controlled through
+//! the chain length after a linear-regression calibration (Fig. 5,
+//! [`calibrate`]). Low state: a timed sleep. Amplitude: fraction of SMs
+//! active (block count over SM count in the paper; the simulator's `util`).
+
+pub mod calibrate;
+pub mod replay;
+pub mod workloads;
+
+pub use calibrate::{calibrate, Calibration};
+pub use replay::{parse_trace_csv, production_trace, to_trace_csv};
+pub use workloads::{workload_by_name, Workload, WORKLOADS};
+
+use crate::sim::activity::ActivitySignal;
+
+/// Specification of one benchmark-load run.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchmarkLoad {
+    /// Square-wave period, seconds.
+    pub period_s: f64,
+    /// Fraction of the period spent in the high state.
+    pub duty: f64,
+    /// Fraction of SMs active during the high state (amplitude knob).
+    pub sm_fraction: f64,
+    /// Number of periods.
+    pub cycles: usize,
+    /// Start time, seconds.
+    pub t_start: f64,
+}
+
+impl BenchmarkLoad {
+    /// A standard 50%-duty load.
+    pub fn new(period_s: f64, sm_fraction: f64, cycles: usize) -> Self {
+        BenchmarkLoad { period_s, duty: 0.5, sm_fraction, cycles, t_start: 0.5 }
+    }
+
+    /// The activity signal this load induces on the device.
+    pub fn activity(&self) -> ActivitySignal {
+        ActivitySignal::square_wave(self.t_start, self.period_s, self.duty, self.sm_fraction, self.cycles)
+    }
+
+    /// Activity with extra *controlled delays*: after every
+    /// `reps_per_shift` cycles, insert a `shift_s` pause (the paper's
+    /// Case-3 phase-shifting strategy, §5.1).
+    pub fn activity_with_shifts(&self, reps_per_shift: usize, shift_s: f64) -> ActivitySignal {
+        let mut act = ActivitySignal::idle();
+        let mut t = self.t_start;
+        for k in 0..self.cycles {
+            act.push(t, self.period_s * self.duty, self.sm_fraction);
+            t += self.period_s;
+            if reps_per_shift > 0 && (k + 1) % reps_per_shift == 0 && k + 1 < self.cycles {
+                t += shift_s;
+            }
+        }
+        act
+    }
+
+    /// Total wall time of the load.
+    pub fn duration_s(&self) -> f64 {
+        self.period_s * self.cycles as f64
+    }
+
+    /// End time.
+    pub fn t_end(&self) -> f64 {
+        self.t_start + self.duration_s()
+    }
+
+    /// The chain length (`niter`) the calibrated kernel needs for the high
+    /// state of this load.
+    pub fn niter_for(&self, cal: &Calibration) -> i32 {
+        cal.niter_for_ms(self.period_s * self.duty * 1000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn activity_matches_spec() {
+        let b = BenchmarkLoad::new(0.1, 0.8, 10);
+        let a = b.activity();
+        assert_eq!(a.segments.len(), 10);
+        assert!((a.busy_time() - 0.5).abs() < 1e-9);
+        assert_eq!(a.segments[0].util, 0.8);
+    }
+
+    #[test]
+    fn shifts_insert_pauses() {
+        let b = BenchmarkLoad::new(0.1, 1.0, 8);
+        let plain = b.activity();
+        let shifted = b.activity_with_shifts(2, 0.025);
+        // 3 shifts inserted (after cycles 2, 4, 6)
+        let extra = shifted.t_end() - plain.t_end();
+        assert!((extra - 3.0 * 0.025).abs() < 1e-9, "extra={extra}");
+        assert_eq!(shifted.segments.len(), plain.segments.len());
+    }
+
+    #[test]
+    fn zero_shift_equals_plain() {
+        let b = BenchmarkLoad::new(0.05, 0.5, 5);
+        let a = b.activity_with_shifts(0, 0.01);
+        let p = b.activity();
+        assert_eq!(a.segments.len(), p.segments.len());
+        assert!((a.t_end() - p.t_end()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,204 @@
+//! The nine real-workload signatures (Table 2): CUBLAS, CUFFT, nvJPEG,
+//! Stereo Disparity, Black-Scholes, Quasi-random Generation, ResNet-50,
+//! RetinaNet, BERT.
+//!
+//! Fig. 18 evaluates *measurement methods*, not workloads; what matters is
+//! a diverse set of realistic power shapes. Each signature is a repeating
+//! phase pattern (utilisation, duration) capturing the workload's duty
+//! structure: dense GEMM plateaus (CUBLAS/BERT), bursty kernels with
+//! host-side gaps (nvJPEG), alternating compute/memory phases (CUFFT),
+//! iteration-structured training/inference loops (ResNet/RetinaNet).
+
+use crate::sim::activity::ActivitySignal;
+
+/// One phase of a workload's repeating pattern.
+#[derive(Debug, Clone, Copy)]
+pub struct Phase {
+    /// SM utilisation fraction during the phase.
+    pub util: f64,
+    /// Phase duration, seconds.
+    pub duration_s: f64,
+}
+
+/// A named workload signature.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: &'static str,
+    pub application: &'static str,
+    pub source: &'static str,
+    /// The repeating phase pattern (one "iteration" of the workload).
+    pub pattern: &'static [Phase],
+}
+
+impl Workload {
+    /// Duration of one iteration.
+    pub fn iteration_s(&self) -> f64 {
+        self.pattern.iter().map(|p| p.duration_s).sum()
+    }
+
+    /// Activity signal for `reps` iterations starting at `t_start`.
+    pub fn activity(&self, t_start: f64, reps: usize) -> ActivitySignal {
+        let mut act = ActivitySignal::idle();
+        let mut t = t_start;
+        for _ in 0..reps {
+            for ph in self.pattern {
+                if ph.util > 0.0 {
+                    act.push(t, ph.duration_s, ph.util);
+                }
+                t += ph.duration_s;
+            }
+        }
+        act
+    }
+
+    /// Activity with controlled delays after every `reps_per_shift`
+    /// iterations (good-practice Case 3).
+    pub fn activity_with_shifts(
+        &self,
+        t_start: f64,
+        reps: usize,
+        reps_per_shift: usize,
+        shift_s: f64,
+    ) -> ActivitySignal {
+        let mut act = ActivitySignal::idle();
+        let mut t = t_start;
+        for k in 0..reps {
+            for ph in self.pattern {
+                if ph.util > 0.0 {
+                    act.push(t, ph.duration_s, ph.util);
+                }
+                t += ph.duration_s;
+            }
+            if reps_per_shift > 0 && (k + 1) % reps_per_shift == 0 && k + 1 < reps {
+                t += shift_s;
+            }
+        }
+        act
+    }
+}
+
+/// Table 2: the nine selected benchmarks.
+pub const WORKLOADS: &[Workload] = &[
+    Workload {
+        name: "cublas",
+        application: "Linear Algebra (GEMM)",
+        source: "NV Library",
+        // long dense plateaus at near-full utilisation
+        pattern: &[Phase { util: 0.97, duration_s: 0.085 }, Phase { util: 0.0, duration_s: 0.006 }],
+    },
+    Workload {
+        name: "cufft",
+        application: "Signal Processing",
+        source: "NV Library",
+        // alternating compute / memory-bound stages
+        pattern: &[
+            Phase { util: 0.85, duration_s: 0.022 },
+            Phase { util: 0.45, duration_s: 0.018 },
+            Phase { util: 0.0, duration_s: 0.004 },
+        ],
+    },
+    Workload {
+        name: "nvjpeg",
+        application: "Image Compression",
+        source: "NV Library",
+        // short bursts with host-side gaps
+        pattern: &[Phase { util: 0.65, duration_s: 0.011 }, Phase { util: 0.0, duration_s: 0.013 }],
+    },
+    Workload {
+        name: "stereo_disparity",
+        application: "Computer Vision",
+        source: "Domain Specific",
+        pattern: &[Phase { util: 0.78, duration_s: 0.032 }, Phase { util: 0.0, duration_s: 0.009 }],
+    },
+    Workload {
+        name: "black_scholes",
+        application: "Computational Finance",
+        source: "Domain Specific",
+        // memory-bandwidth-bound: moderate utilisation, very regular
+        pattern: &[Phase { util: 0.60, duration_s: 0.046 }, Phase { util: 0.0, duration_s: 0.005 }],
+    },
+    Workload {
+        name: "quasirandom",
+        application: "Monte Carlo",
+        source: "Domain Specific",
+        pattern: &[Phase { util: 0.88, duration_s: 0.017 }, Phase { util: 0.0, duration_s: 0.007 }],
+    },
+    Workload {
+        name: "resnet50",
+        application: "Image Classification",
+        source: "MLPerf",
+        // per-batch loop: fwd (high), bwd (higher), optimizer + dataloader dip
+        pattern: &[
+            Phase { util: 0.82, duration_s: 0.035 },
+            Phase { util: 0.95, duration_s: 0.058 },
+            Phase { util: 0.35, duration_s: 0.012 },
+            Phase { util: 0.0, duration_s: 0.008 },
+        ],
+    },
+    Workload {
+        name: "retinanet",
+        application: "Object Detection",
+        source: "MLPerf",
+        pattern: &[
+            Phase { util: 0.88, duration_s: 0.064 },
+            Phase { util: 0.55, duration_s: 0.021 },
+            Phase { util: 0.0, duration_s: 0.011 },
+        ],
+    },
+    Workload {
+        name: "bert",
+        application: "Natural Language Processing",
+        source: "MLPerf",
+        // large attention GEMMs: sustained near-TDP with brief host sync
+        pattern: &[Phase { util: 0.96, duration_s: 0.124 }, Phase { util: 0.0, duration_s: 0.009 }],
+    },
+];
+
+/// Find a workload by name.
+pub fn workload_by_name(name: &str) -> Option<&'static Workload> {
+    WORKLOADS.iter().find(|w| w.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nine_workloads() {
+        assert_eq!(WORKLOADS.len(), 9);
+    }
+
+    #[test]
+    fn iteration_durations_positive_and_varied() {
+        let durs: Vec<f64> = WORKLOADS.iter().map(|w| w.iteration_s()).collect();
+        assert!(durs.iter().all(|&d| d > 0.005));
+        let min = durs.iter().cloned().fold(f64::MAX, f64::min);
+        let max = durs.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(max / min > 3.0, "range of execution times (paper §5.2)");
+    }
+
+    #[test]
+    fn activity_repeats_pattern() {
+        let w = workload_by_name("resnet50").unwrap();
+        let act = w.activity(1.0, 10);
+        // 3 busy phases per iteration
+        assert_eq!(act.segments.len(), 30);
+        assert!((act.t_start() - 1.0).abs() < 1e-12);
+        let expect_end = 1.0 + 10.0 * w.iteration_s();
+        assert!((act.t_end() - expect_end).abs() < 0.02);
+    }
+
+    #[test]
+    fn shifts_extend_duration() {
+        let w = workload_by_name("bert").unwrap();
+        let plain = w.activity(0.0, 16);
+        let shifted = w.activity_with_shifts(0.0, 16, 2, 0.025);
+        assert!((shifted.t_end() - plain.t_end() - 7.0 * 0.025).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lookup_case_insensitive() {
+        assert!(workload_by_name("BERT").is_some());
+        assert!(workload_by_name("nope").is_none());
+    }
+}

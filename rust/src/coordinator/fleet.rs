@@ -1,0 +1,185 @@
+//! A simulated datacenter fleet of GPUs.
+
+use crate::rng::Rng;
+use crate::sim::device::GpuDevice;
+use crate::sim::profile::{DriverEpoch, GpuModel, PowerField, CATALOGUE};
+
+/// Fleet composition config.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of cards.
+    pub size: usize,
+    /// Restrict to these model-name substrings (empty = whole catalogue,
+    /// weighted by the paper's tested counts).
+    pub models: Vec<String>,
+    /// Driver epoch for every node.
+    pub driver: DriverEpoch,
+    /// Power field queried by the telemetry collector.
+    pub field: PowerField,
+    pub seed: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            size: 64,
+            models: Vec::new(),
+            driver: DriverEpoch::Post530,
+            field: PowerField::Draw,
+            seed: 7,
+        }
+    }
+}
+
+/// One fleet node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: usize,
+    pub device: GpuDevice,
+}
+
+/// The instantiated fleet.
+#[derive(Debug)]
+pub struct Fleet {
+    pub nodes: Vec<Node>,
+    pub config: FleetConfig,
+}
+
+impl Fleet {
+    /// Build a fleet: models drawn from the catalogue proportionally to the
+    /// paper's tested counts (or the filtered subset).
+    pub fn build(config: FleetConfig) -> Self {
+        let pool: Vec<&'static GpuModel> = if config.models.is_empty() {
+            CATALOGUE.iter().collect()
+        } else {
+            CATALOGUE
+                .iter()
+                .filter(|m| {
+                    config
+                        .models
+                        .iter()
+                        .any(|q| m.name.to_lowercase().contains(&q.to_lowercase()))
+                })
+                .collect()
+        };
+        assert!(!pool.is_empty(), "no models matched the fleet filter");
+        // weighted by tested_count
+        let weights: Vec<u32> = pool.iter().map(|m| m.tested_count.max(1)).collect();
+        let total: u32 = weights.iter().sum();
+        let mut rng = Rng::new(config.seed);
+        let nodes = (0..config.size)
+            .map(|id| {
+                let mut pick = rng.below(total as u64) as u32;
+                let mut model = pool[0];
+                for (m, w) in pool.iter().zip(&weights) {
+                    if pick < *w {
+                        model = m;
+                        break;
+                    }
+                    pick -= w;
+                }
+                Node { id, device: GpuDevice::new(model, id as u32, config.seed) }
+            })
+            .collect();
+        Fleet { nodes, config }
+    }
+
+    /// Fleet size.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+}
+
+/// Aggregated fleet measurement report.
+#[derive(Debug, Clone, Default)]
+pub struct FleetReport {
+    /// Sum of ground-truth energies, joules.
+    pub truth_j: f64,
+    /// Sum of naive-method energies, joules.
+    pub naive_j: f64,
+    /// Sum of good-practice energies, joules.
+    pub good_j: f64,
+    /// Per-node percentage errors (naive, good practice).
+    pub node_errors: Vec<(f64, f64)>,
+    pub nodes_measured: usize,
+}
+
+impl FleetReport {
+    /// Fleet-level percentage error of the naive accounting.
+    pub fn naive_pct(&self) -> f64 {
+        100.0 * (self.naive_j - self.truth_j) / self.truth_j
+    }
+
+    /// Fleet-level percentage error of the good-practice accounting.
+    pub fn good_pct(&self) -> f64 {
+        100.0 * (self.good_j - self.truth_j) / self.truth_j
+    }
+
+    /// Annualised cost error in USD for a fleet scaled to `n_gpus`,
+    /// assuming the measured-window power mix is representative and
+    /// `usd_per_kwh` electricity (the paper's $1M/year example).
+    pub fn annual_cost_error_usd(&self, n_gpus: usize, usd_per_kwh: f64) -> f64 {
+        if self.truth_j <= 0.0 || self.nodes_measured == 0 {
+            return 0.0;
+        }
+        let err_w_per_gpu = (self.naive_j - self.truth_j) / self.truth_j
+            * (self.truth_j / self.nodes_measured as f64); // J error per GPU over the window
+        // scale: J error per measured second per GPU → W → kWh/year
+        let _ = err_w_per_gpu;
+        let frac_err = (self.naive_j - self.truth_j) / self.truth_j;
+        let mean_w = 300.0; // representative data-center GPU draw
+        let kwh_year = mean_w * 24.0 * 365.0 / 1000.0;
+        frac_err.abs() * kwh_year * usd_per_kwh * n_gpus as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_respects_size_and_filter() {
+        let f = Fleet::build(FleetConfig {
+            size: 32,
+            models: vec!["A100".into()],
+            ..Default::default()
+        });
+        assert_eq!(f.len(), 32);
+        assert!(f.nodes.iter().all(|n| n.device.model.name.contains("A100")));
+    }
+
+    #[test]
+    fn mixed_fleet_has_variety() {
+        let f = Fleet::build(FleetConfig { size: 200, ..Default::default() });
+        let distinct: std::collections::HashSet<&str> =
+            f.nodes.iter().map(|n| n.device.model.name).collect();
+        assert!(distinct.len() > 5, "got {} distinct models", distinct.len());
+    }
+
+    #[test]
+    fn nodes_have_distinct_tolerances() {
+        let f = Fleet::build(FleetConfig { size: 10, models: vec!["3090".into()], ..Default::default() });
+        let g0 = f.nodes[0].device.tolerance.gradient;
+        assert!(f.nodes.iter().skip(1).any(|n| n.device.tolerance.gradient != g0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_filter_panics() {
+        Fleet::build(FleetConfig { models: vec!["no-such-gpu".into()], ..Default::default() });
+    }
+
+    #[test]
+    fn cost_error_scales_with_fleet() {
+        let r = FleetReport { truth_j: 1000.0, naive_j: 1050.0, good_j: 1010.0, node_errors: vec![], nodes_measured: 10 };
+        let c10k = r.annual_cost_error_usd(10_000, 0.15);
+        let c1k = r.annual_cost_error_usd(1_000, 0.15);
+        assert!((c10k / c1k - 10.0).abs() < 1e-9);
+        assert!(c10k > 100_000.0, "5% of 10k GPUs is real money: {c10k}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Fleet coordinator: datacenter-scale measurement campaigns over many
+//! simulated GPUs (tokio).
+//!
+//! The paper's motivation is fleet-level: "for a data centre with 10,000
+//! GPUs [a ±5% error] would lead to an extra $1 million in electricity cost
+//! yearly". The coordinator instantiates a mixed fleet from the catalogue,
+//! runs workloads on every card concurrently, measures each with both the
+//! naive method and the good practice, and aggregates the fleet-level
+//! energy accounting error.
+
+pub mod fleet;
+pub mod scheduler;
+
+pub use fleet::{Fleet, FleetConfig, FleetReport};
+pub use scheduler::{MeasurementJob, MeasurementOutcome, Scheduler};

@@ -1,0 +1,228 @@
+//! Measurement scheduler: run measurement jobs across the fleet
+//! concurrently (std scoped threads — this environment is offline, so the
+//! coordinator uses a dependency-free worker pool) and aggregate results.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use super::fleet::{Fleet, FleetReport};
+use crate::bench::workloads::{Workload, WORKLOADS};
+use crate::measure::{
+    good_practice::measure_good_practice, naive::measure_naive, GoodPracticeConfig,
+    MeasurementRig, SensorCharacterization,
+};
+use crate::sim::profile::sensor_pipeline;
+use crate::sim::PipelineKind;
+
+/// One measurement job: a workload on one node.
+#[derive(Debug, Clone)]
+pub struct MeasurementJob {
+    pub node_id: usize,
+    pub workload: &'static Workload,
+}
+
+/// Outcome of one job.
+#[derive(Debug, Clone)]
+pub struct MeasurementOutcome {
+    pub node_id: usize,
+    pub workload: &'static str,
+    pub model: &'static str,
+    pub naive_pct_error: f64,
+    pub good_pct_error: f64,
+    /// Good-practice measured power, watts.
+    pub power_w: f64,
+    /// One-iteration ground-truth energy, joules.
+    pub truth_j: f64,
+}
+
+/// Fleet-wide measurement scheduler: a fixed pool of workers pulling node
+/// jobs from a shared queue.
+#[derive(Debug)]
+pub struct Scheduler {
+    /// Max concurrent node measurements.
+    pub concurrency: usize,
+    pub config: GoodPracticeConfig,
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Scheduler { concurrency: num_threads(), config: GoodPracticeConfig::default() }
+    }
+}
+
+fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Measure one node; `None` when the sensor is unsupported (Fermi).
+fn measure_node(
+    device: crate::sim::GpuDevice,
+    node_id: usize,
+    driver: crate::sim::DriverEpoch,
+    field: crate::sim::PowerField,
+    wl: &'static Workload,
+    cfg: &GoodPracticeConfig,
+) -> Option<MeasurementOutcome> {
+    let spec = sensor_pipeline(device.model.generation, field, driver);
+    if !spec.is_measured() {
+        return None;
+    }
+    let sensor = SensorCharacterization {
+        update_s: spec.update_ms / 1000.0,
+        window_s: match spec.kind {
+            PipelineKind::Boxcar { window_ms } => window_ms / 1000.0,
+            _ => spec.update_ms / 1000.0,
+        },
+        rise_s: device.model.rise_ms / 1000.0,
+    };
+    let model = device.model.name;
+    let rig = MeasurementRig::new(device, driver, field, 0xF1EE7 ^ node_id as u64);
+    let naive = measure_naive(&rig, wl, cfg.poll_period_s, node_id as u64);
+    let good = measure_good_practice(&rig, wl, &sensor, cfg);
+    Some(MeasurementOutcome {
+        node_id,
+        workload: wl.name,
+        model,
+        naive_pct_error: naive.pct_error,
+        good_pct_error: good.mean_pct_error,
+        power_w: good.mean_power_w,
+        truth_j: naive.truth_j,
+    })
+}
+
+impl Scheduler {
+    /// Run one workload on every fleet node (round-robin through the
+    /// Table 2 suite when `workload` is `None`), measuring each node with
+    /// both the naive and the good-practice method.
+    pub fn run(
+        &self,
+        fleet: &Fleet,
+        workload: Option<&'static Workload>,
+    ) -> (Vec<MeasurementOutcome>, FleetReport) {
+        let jobs: Vec<MeasurementJob> = fleet
+            .nodes
+            .iter()
+            .map(|n| MeasurementJob {
+                node_id: n.id,
+                workload: workload.unwrap_or(&WORKLOADS[n.id % WORKLOADS.len()]),
+            })
+            .collect();
+        let queue = Arc::new(Mutex::new(jobs));
+        let (tx, rx) = mpsc::channel::<MeasurementOutcome>();
+        let driver = fleet.config.driver;
+        let field = fleet.config.field;
+        let cfg = self.config;
+
+        std::thread::scope(|scope| {
+            for _ in 0..self.concurrency.max(1) {
+                let queue = Arc::clone(&queue);
+                let tx = tx.clone();
+                let nodes = &fleet.nodes;
+                scope.spawn(move || loop {
+                    let job = { queue.lock().unwrap().pop() };
+                    let Some(job) = job else { break };
+                    let device = nodes[job.node_id].device.clone();
+                    if let Some(out) =
+                        measure_node(device, job.node_id, driver, field, job.workload, &cfg)
+                    {
+                        let _ = tx.send(out);
+                    }
+                });
+            }
+            drop(tx);
+        });
+
+        let mut outcomes: Vec<MeasurementOutcome> = rx.into_iter().collect();
+        outcomes.sort_by_key(|o| o.node_id);
+
+        let mut report = FleetReport::default();
+        for o in &outcomes {
+            report.truth_j += o.truth_j;
+            report.naive_j += o.truth_j * (1.0 + o.naive_pct_error / 100.0);
+            report.good_j += o.truth_j * (1.0 + o.good_pct_error / 100.0);
+            report.node_errors.push((o.naive_pct_error, o.good_pct_error));
+        }
+        report.nodes_measured = outcomes.len();
+        (outcomes, report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fleet::FleetConfig;
+    use crate::sim::profile::{DriverEpoch, PowerField};
+
+    fn small_cfg() -> GoodPracticeConfig {
+        // keep tests fast: fewer trials, shorter runtime floor
+        GoodPracticeConfig { trials: 2, min_reps: 8, min_runtime_s: 1.0, ..Default::default() }
+    }
+
+    #[test]
+    fn scheduler_measures_all_nodes() {
+        let fleet = Fleet::build(FleetConfig {
+            size: 4,
+            models: vec!["A100".into()],
+            driver: DriverEpoch::Post530,
+            field: PowerField::Instant,
+            seed: 5,
+        });
+        let sched = Scheduler { concurrency: 2, config: small_cfg() };
+        let (outcomes, report) = sched.run(&fleet, None);
+        assert_eq!(outcomes.len(), 4);
+        assert_eq!(report.nodes_measured, 4);
+        assert!(report.truth_j > 0.0);
+    }
+
+    #[test]
+    fn good_practice_beats_naive_fleetwide() {
+        let fleet = Fleet::build(FleetConfig {
+            size: 6,
+            models: vec!["A100".into()],
+            driver: DriverEpoch::Post530,
+            field: PowerField::Instant,
+            seed: 11,
+        });
+        let sched = Scheduler { concurrency: 4, config: small_cfg() };
+        let (outcomes, _) = sched.run(&fleet, Some(&WORKLOADS[0]));
+        let mean_abs = |f: &dyn Fn(&MeasurementOutcome) -> f64| {
+            outcomes.iter().map(|o| f(o).abs()).sum::<f64>() / outcomes.len() as f64
+        };
+        let naive = mean_abs(&|o| o.naive_pct_error);
+        let good = mean_abs(&|o| o.good_pct_error);
+        assert!(good < naive, "good practice ({good:.1}%) must beat naive ({naive:.1}%)");
+    }
+
+    #[test]
+    fn unmeasurable_nodes_are_skipped() {
+        let fleet = Fleet::build(FleetConfig {
+            size: 3,
+            models: vec!["C2050".into()],
+            driver: DriverEpoch::Pre530,
+            field: PowerField::Draw,
+            seed: 2,
+        });
+        let sched = Scheduler { concurrency: 2, config: small_cfg() };
+        let (outcomes, report) = sched.run(&fleet, None);
+        assert!(outcomes.is_empty());
+        assert_eq!(report.nodes_measured, 0);
+    }
+
+    #[test]
+    fn deterministic_across_concurrency_levels() {
+        let fleet = Fleet::build(FleetConfig {
+            size: 5,
+            models: vec!["3090".into()],
+            driver: DriverEpoch::Post530,
+            field: PowerField::Instant,
+            seed: 21,
+        });
+        let a = Scheduler { concurrency: 1, config: small_cfg() }.run(&fleet, None).0;
+        let b = Scheduler { concurrency: 4, config: small_cfg() }.run(&fleet, None).0;
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.node_id, y.node_id);
+            assert!((x.good_pct_error - y.good_pct_error).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Ordinary least squares y = a·x + b with R² — used for the Fig. 5
+//! niter→duration calibration and the Fig. 8 steady-state error fit.
+
+/// Fit result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearFit {
+    /// Slope (the paper's "gradient").
+    pub slope: f64,
+    /// Intercept (the paper's "offset" / "y-intercept").
+    pub intercept: f64,
+    /// Coefficient of determination.
+    pub r2: f64,
+    pub n: usize,
+}
+
+impl LinearFit {
+    /// Predict y for x.
+    #[inline]
+    pub fn predict(&self, x: f64) -> f64 {
+        self.slope * x + self.intercept
+    }
+
+    /// Invert: x for y.
+    #[inline]
+    pub fn solve_x(&self, y: f64) -> f64 {
+        (y - self.intercept) / self.slope
+    }
+}
+
+/// Least-squares fit over paired samples. Panics if fewer than 2 points or
+/// degenerate x.
+pub fn fit(xs: &[f64], ys: &[f64]) -> LinearFit {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need at least 2 points");
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        let dx = x - mx;
+        let dy = y - my;
+        sxx += dx * dx;
+        sxy += dx * dy;
+        syy += dy * dy;
+    }
+    assert!(sxx > 0.0, "degenerate x values");
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    LinearFit { slope, intercept, r2, n: xs.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn exact_line() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 1.0).collect();
+        let f = fit(&xs, &ys);
+        assert!((f.slope - 3.0).abs() < 1e-12);
+        assert!((f.intercept - 1.0).abs() < 1e-12);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_line_recovers_params() {
+        let mut rng = Rng::new(4);
+        let xs: Vec<f64> = (0..2000).map(|i| i as f64 / 10.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 0.95 * x + 5.0 + rng.normal_ms(0.0, 2.0)).collect();
+        let f = fit(&xs, &ys);
+        assert!((f.slope - 0.95).abs() < 0.01);
+        assert!((f.intercept - 5.0).abs() < 1.0);
+        assert!(f.r2 > 0.99);
+    }
+
+    #[test]
+    fn predict_and_solve_roundtrip() {
+        let f = LinearFit { slope: 2.0, intercept: -1.0, r2: 1.0, n: 2 };
+        assert_eq!(f.predict(3.0), 5.0);
+        assert_eq!(f.solve_x(5.0), 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn degenerate_x_panics() {
+        fit(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Numerical substrate: statistics, regression, optimisation, and the
+//! boxcar-window estimation machinery (paper §4).
+
+pub mod boxcar;
+pub mod linreg;
+pub mod neldermead;
+pub mod rc_correction;
+pub mod stats;
+
+pub use boxcar::{emulate_smi, estimate_window, window_loss, EstimatorConfig, WindowEstimate};
+pub use linreg::{fit, LinearFit};
+pub use neldermead::{minimize, minimize_scalar, MinimizeResult, Options};
+pub use rc_correction::{estimate_tau, invert_rc};
+pub use stats::{histogram, iqr, mean, median, pct_error, percentile, std_dev, violin, ViolinSummary};

@@ -1,0 +1,221 @@
+//! Nelder-Mead simplex minimisation — the paper's §4.3 step 6 ("Minimise
+//! the loss function using Nelder-Mead, with initial power window set as
+//! half of the power update frequency").
+//!
+//! General N-dimensional implementation with the standard reflection /
+//! expansion / contraction / shrink coefficients, plus a 1-D convenience
+//! wrapper (the window estimation is one-dimensional).
+
+/// Result of a minimisation run.
+#[derive(Debug, Clone)]
+pub struct MinimizeResult {
+    /// Best point found.
+    pub x: Vec<f64>,
+    /// Loss at the best point.
+    pub fx: f64,
+    /// Function evaluations used.
+    pub evals: usize,
+    /// True if the simplex converged within tolerance.
+    pub converged: bool,
+}
+
+/// Options for the solver.
+#[derive(Debug, Clone, Copy)]
+pub struct Options {
+    pub max_evals: usize,
+    /// Convergence: simplex spread in f below this.
+    pub f_tol: f64,
+    /// Convergence: simplex spread in x below this.
+    pub x_tol: f64,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options { max_evals: 400, f_tol: 1e-10, x_tol: 1e-8 }
+    }
+}
+
+/// Minimise `f` starting from `x0` with initial simplex scale `scale`.
+pub fn minimize<F: FnMut(&[f64]) -> f64>(
+    mut f: F,
+    x0: &[f64],
+    scale: f64,
+    opts: Options,
+) -> MinimizeResult {
+    let n = x0.len();
+    assert!(n >= 1);
+    let (alpha, gamma, rho, sigma) = (1.0, 2.0, 0.5, 0.5);
+
+    // initial simplex: x0 plus one offset vertex per dimension
+    let mut simplex: Vec<Vec<f64>> = Vec::with_capacity(n + 1);
+    simplex.push(x0.to_vec());
+    for i in 0..n {
+        let mut v = x0.to_vec();
+        v[i] += if v[i].abs() > 1e-12 { scale * v[i].abs() } else { scale };
+        simplex.push(v);
+    }
+    let mut evals = 0usize;
+    let mut fs: Vec<f64> = simplex
+        .iter()
+        .map(|v| {
+            evals += 1;
+            f(v)
+        })
+        .collect();
+
+    while evals < opts.max_evals {
+        // order vertices by loss
+        let mut order: Vec<usize> = (0..=n).collect();
+        order.sort_by(|&a, &b| fs[a].partial_cmp(&fs[b]).unwrap());
+        let best = order[0];
+        let worst = order[n];
+        let second_worst = order[n - 1];
+
+        // convergence checks
+        let f_spread = (fs[worst] - fs[best]).abs();
+        let x_spread = simplex
+            .iter()
+            .map(|v| {
+                v.iter()
+                    .zip(&simplex[best])
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0, f64::max)
+            })
+            .fold(0.0, f64::max);
+        if f_spread < opts.f_tol && x_spread < opts.x_tol {
+            return MinimizeResult { x: simplex[best].clone(), fx: fs[best], evals, converged: true };
+        }
+
+        // centroid of all but worst
+        let mut centroid = vec![0.0; n];
+        for (i, v) in simplex.iter().enumerate() {
+            if i != worst {
+                for (c, &x) in centroid.iter_mut().zip(v) {
+                    *c += x / n as f64;
+                }
+            }
+        }
+
+        let point = |coef: f64, from: &[f64]| -> Vec<f64> {
+            centroid.iter().zip(from).map(|(&c, &w)| c + coef * (c - w)).collect()
+        };
+
+        // reflection
+        let xr = point(alpha, &simplex[worst]);
+        let fr = {
+            evals += 1;
+            f(&xr)
+        };
+        if fr < fs[best] {
+            // expansion
+            let xe = point(gamma, &simplex[worst]);
+            let fe = {
+                evals += 1;
+                f(&xe)
+            };
+            if fe < fr {
+                simplex[worst] = xe;
+                fs[worst] = fe;
+            } else {
+                simplex[worst] = xr;
+                fs[worst] = fr;
+            }
+        } else if fr < fs[second_worst] {
+            simplex[worst] = xr;
+            fs[worst] = fr;
+        } else {
+            // contraction (toward the better of worst/reflected)
+            let (xc, towards_reflected) = if fr < fs[worst] {
+                (point(-rho, &xr), true)
+            } else {
+                (point(-rho, &simplex[worst].clone()), false)
+            };
+            let fc = {
+                evals += 1;
+                f(&xc)
+            };
+            let cmp = if towards_reflected { fr } else { fs[worst] };
+            if fc < cmp {
+                simplex[worst] = xc;
+                fs[worst] = fc;
+            } else {
+                // shrink toward best
+                let best_v = simplex[best].clone();
+                for i in 0..=n {
+                    if i == best {
+                        continue;
+                    }
+                    for (x, &b) in simplex[i].iter_mut().zip(&best_v) {
+                        *x = b + sigma * (*x - b);
+                    }
+                    evals += 1;
+                    fs[i] = f(&simplex[i]);
+                }
+            }
+        }
+    }
+
+    let mut best = 0;
+    for i in 1..fs.len() {
+        if fs[i] < fs[best] {
+            best = i;
+        }
+    }
+    MinimizeResult { x: simplex[best].clone(), fx: fs[best], evals, converged: false }
+}
+
+/// 1-D convenience wrapper (window estimation).
+pub fn minimize_scalar<F: FnMut(f64) -> f64>(
+    mut f: F,
+    x0: f64,
+    scale: f64,
+    opts: Options,
+) -> MinimizeResult {
+    minimize(|v| f(v[0]), &[x0], scale, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_1d() {
+        let r = minimize_scalar(|x| (x - 3.5) * (x - 3.5), 0.0, 0.5, Options::default());
+        assert!((r.x[0] - 3.5).abs() < 1e-4, "x={}", r.x[0]);
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn rosenbrock_2d() {
+        let rosen = |v: &[f64]| {
+            let (x, y) = (v[0], v[1]);
+            (1.0 - x).powi(2) + 100.0 * (y - x * x).powi(2)
+        };
+        let r = minimize(rosen, &[-1.2, 1.0], 0.1, Options { max_evals: 4000, ..Default::default() });
+        assert!((r.x[0] - 1.0).abs() < 1e-2 && (r.x[1] - 1.0).abs() < 1e-2, "{:?}", r.x);
+    }
+
+    #[test]
+    fn respects_eval_budget() {
+        let mut calls = 0usize;
+        let _ = minimize(
+            |v| {
+                calls += 1;
+                v[0] * v[0]
+            },
+            &[10.0],
+            1.0,
+            Options { max_evals: 50, ..Default::default() },
+        );
+        // shrink steps may add up to n evals past the cap
+        assert!(calls <= 55, "calls={calls}");
+    }
+
+    #[test]
+    fn piecewise_noisy_valley() {
+        // loss shaped like the Fig. 12 curves: noisy but with a clear minimum
+        let f = |x: f64| (x - 25.0).abs().sqrt() + 0.01 * (x * 7.0).sin();
+        let r = minimize_scalar(f, 50.0, 0.5, Options { max_evals: 300, ..Default::default() });
+        assert!((r.x[0] - 25.0).abs() < 1.5, "x={}", r.x[0]);
+    }
+}

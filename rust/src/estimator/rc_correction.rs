@@ -1,0 +1,145 @@
+//! RC-distortion inversion for Kepler/Maxwell-era sensors (§7 related
+//! work: Burtscher et al. modelled the K20's "capacitor charging"
+//! readings and proposed a correction — we implement both the time-constant
+//! estimation and the inversion, giving the good-practice library a path
+//! for the RC-distorted generations the paper skipped as end-of-life).
+//!
+//! Model: the published reading is `s(t)` with `τ·ds/dt = p(t) − s(t)`.
+//! Given samples `s_k` at times `t_k`, the true power over `(t_{k-1}, t_k]`
+//! (assumed piecewise-constant) is recovered exactly:
+//!
+//! `p_k = (s_k − s_{k-1}·e^{−Δ/τ}) / (1 − e^{−Δ/τ})`
+
+use crate::sim::trace::SampleSeries;
+
+/// Estimate the RC time constant from a step response: fit `ln(1 − s̃)`
+/// against `t` over the rising portion (s̃ = normalised reading).
+pub fn estimate_tau(readings: &[(f64, f64)], t_step: f64) -> Option<f64> {
+    // steady levels before/after the step
+    let pre: Vec<f64> = readings.iter().filter(|(t, _)| *t < t_step).map(|p| p.1).collect();
+    let post: Vec<f64> = readings
+        .iter()
+        .filter(|(t, _)| *t > t_step + 2.0)
+        .map(|p| p.1)
+        .collect();
+    if pre.len() < 3 || post.len() < 3 {
+        return None;
+    }
+    let s0 = crate::estimator::stats::median(&pre);
+    let s1 = crate::estimator::stats::median(&post);
+    if (s1 - s0).abs() < 1.0 {
+        return None;
+    }
+    // collect (t - t_step, ln(1 - normalised)) on the rise
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for &(t, s) in readings.iter().filter(|(t, _)| *t > t_step && *t < t_step + 2.0) {
+        let frac = (s - s0) / (s1 - s0);
+        if (0.05..0.95).contains(&frac) {
+            xs.push(t - t_step);
+            ys.push((1.0 - frac).ln());
+        }
+    }
+    if xs.len() < 4 {
+        return None;
+    }
+    let fit = crate::estimator::linreg::fit(&xs, &ys);
+    if fit.slope >= 0.0 {
+        return None;
+    }
+    Some(-1.0 / fit.slope)
+}
+
+/// Invert the RC filter: recover piecewise-constant true power from the
+/// distorted readings. The first sample has no history and is passed
+/// through unchanged.
+pub fn invert_rc(readings: &SampleSeries, tau_s: f64) -> SampleSeries {
+    let pts = &readings.points;
+    if pts.is_empty() {
+        return SampleSeries::default();
+    }
+    let mut out = Vec::with_capacity(pts.len());
+    out.push(pts[0]);
+    for w in pts.windows(2) {
+        let (t0, s0) = w[0];
+        let (t1, s1) = w[1];
+        let dt = t1 - t0;
+        if dt <= 0.0 {
+            out.push((t1, s1));
+            continue;
+        }
+        let a = (-dt / tau_s).exp();
+        let p = (s1 - s0 * a) / (1.0 - a);
+        out.push((t1, p));
+    }
+    SampleSeries { points: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::measure::energy::mean_power;
+    use crate::sim::profile::{find_model, DriverEpoch, PowerField};
+    use crate::sim::{ActivitySignal, GpuDevice};
+    use crate::smi::NvidiaSmi;
+
+    /// Build an RC-distorted capture on the K40 (15 ms updates, τ = 80 ms).
+    fn k40_capture(act: &ActivitySignal, t_end: f64) -> (GpuDevice, crate::sim::PowerTrace, NvidiaSmi) {
+        let device = GpuDevice::new(find_model("Tesla K40").unwrap(), 0, 404);
+        let truth = device.synthesize(act, 0.0, t_end);
+        let smi = NvidiaSmi::attach(device.clone(), DriverEpoch::Pre530, &truth, 405);
+        (device, truth, smi)
+    }
+
+    #[test]
+    fn tau_estimated_from_step_response() {
+        let act = ActivitySignal::burst(1.0, 5.0, 1.0);
+        let (_, _, smi) = k40_capture(&act, 7.0);
+        let readings: Vec<(f64, f64)> =
+            smi.stream(PowerField::Draw).readings.iter().map(|r| (r.t, r.watts)).collect();
+        let tau = estimate_tau(&readings, 1.0).expect("tau");
+        assert!((tau - 0.080).abs() < 0.02, "tau = {tau}");
+    }
+
+    #[test]
+    fn inversion_recovers_square_wave_mean() {
+        // an RC-distorted square wave reads wrong mean over partial windows;
+        // inversion restores the true mean power to within a few percent
+        let act = ActivitySignal::square_wave(1.0, 0.3, 0.5, 1.0, 12);
+        let (device, truth, smi) = k40_capture(&act, 6.0);
+        let readings = SampleSeries {
+            points: smi.stream(PowerField::Draw).readings.iter().map(|r| (r.t, r.watts)).collect(),
+        };
+        let corrected = invert_rc(&readings, 0.080);
+        let p_true = device.tolerance.apply(truth.energy_between(1.5, 4.4) / 2.9);
+        let p_raw = mean_power(&readings, 1.5, 4.4);
+        let p_fix = mean_power(&corrected, 1.5, 4.4);
+        // correction must not be worse, and must land within 5%
+        assert!((p_fix - p_true).abs() <= (p_raw - p_true).abs() + 1.0);
+        assert!((p_fix - p_true).abs() / p_true < 0.05, "fix {p_fix} vs true {p_true}");
+    }
+
+    #[test]
+    fn inversion_sharpens_step_response() {
+        // after inversion, the step reaches 90% of its final level within
+        // a couple of update periods instead of ~2.3 tau
+        let act = ActivitySignal::burst(1.0, 5.0, 1.0);
+        let (_, _, smi) = k40_capture(&act, 7.0);
+        let readings = SampleSeries {
+            points: smi.stream(PowerField::Draw).readings.iter().map(|r| (r.t, r.watts)).collect(),
+        };
+        let corrected = invert_rc(&readings, 0.080);
+        let final_level = mean_power(&corrected, 4.0, 5.5);
+        let early_fix = mean_power(&corrected, 1.06, 1.12);
+        let early_raw = mean_power(&readings, 1.06, 1.12);
+        assert!(early_fix > 0.9 * final_level, "corrected step {early_fix} vs {final_level}");
+        assert!(early_raw < 0.8 * final_level, "raw is distorted: {early_raw}");
+    }
+
+    #[test]
+    fn invert_empty_and_degenerate() {
+        assert!(invert_rc(&SampleSeries::default(), 0.1).points.is_empty());
+        let s = SampleSeries { points: vec![(0.0, 100.0)] };
+        assert_eq!(invert_rc(&s, 0.1).points, vec![(0.0, 100.0)]);
+    }
+}

@@ -1,0 +1,163 @@
+//! Descriptive statistics used across the experiments.
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// p-th percentile (0..=100), linear interpolation.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Median.
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Interquartile range (25th..75th percentile).
+pub fn iqr(xs: &[f64]) -> (f64, f64) {
+    (percentile(xs, 25.0), percentile(xs, 75.0))
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets.
+/// Returns (bin_edges, counts); out-of-range values clamp to end bins.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> (Vec<f64>, Vec<usize>) {
+    assert!(bins > 0 && hi > lo);
+    let width = (hi - lo) / bins as f64;
+    let edges: Vec<f64> = (0..=bins).map(|i| lo + i as f64 * width).collect();
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        let i = (((x - lo) / width).floor() as i64).clamp(0, bins as i64 - 1) as usize;
+        counts[i] += 1;
+    }
+    (edges, counts)
+}
+
+/// Five-number summary used for the Fig. 13 violin plots.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ViolinSummary {
+    pub median: f64,
+    pub q1: f64,
+    pub q3: f64,
+    /// Lower adjacent value: smallest datum ≥ q1 - 1.5·IQR.
+    pub lo_adjacent: f64,
+    /// Upper adjacent value: largest datum ≤ q3 + 1.5·IQR.
+    pub hi_adjacent: f64,
+    pub std_dev: f64,
+    pub n: usize,
+}
+
+/// Compute a violin summary (the paper's Fig. 13 plot elements).
+pub fn violin(xs: &[f64]) -> ViolinSummary {
+    let (q1, q3) = iqr(xs);
+    let whisker = 1.5 * (q3 - q1);
+    let lo_fence = q1 - whisker;
+    let hi_fence = q3 + whisker;
+    let lo_adjacent = xs.iter().cloned().filter(|&x| x >= lo_fence).fold(f64::INFINITY, f64::min);
+    let hi_adjacent = xs.iter().cloned().filter(|&x| x <= hi_fence).fold(f64::NEG_INFINITY, f64::max);
+    ViolinSummary {
+        median: median(xs),
+        q1,
+        q3,
+        lo_adjacent,
+        hi_adjacent,
+        std_dev: std_dev(xs),
+        n: xs.len(),
+    }
+}
+
+/// Mean absolute percentage error of `measured` against `truth`.
+pub fn pct_error(measured: f64, truth: f64) -> f64 {
+    100.0 * (measured - truth) / truth
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let xs = [0.5, 1.5, 1.6, 2.5, 9.9, -3.0, 30.0];
+        let (edges, counts) = histogram(&xs, 0.0, 10.0, 10);
+        assert_eq!(edges.len(), 11);
+        assert_eq!(counts[0], 2); // 0.5 and clamped -3.0
+        assert_eq!(counts[1], 2);
+        assert_eq!(counts[9], 2); // 9.9 and clamped 30.0
+        assert_eq!(counts.iter().sum::<usize>(), xs.len());
+    }
+
+    #[test]
+    fn violin_of_uniform_block() {
+        let xs: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        let v = violin(&xs);
+        assert_eq!(v.median, 50.0);
+        assert_eq!(v.q1, 25.0);
+        assert_eq!(v.q3, 75.0);
+        assert_eq!(v.lo_adjacent, 0.0);
+        assert_eq!(v.hi_adjacent, 100.0);
+        assert_eq!(v.n, 101);
+    }
+
+    #[test]
+    fn violin_excludes_outliers_from_whiskers() {
+        let mut xs: Vec<f64> = (0..100).map(|i| i as f64 / 10.0).collect();
+        xs.push(1000.0); // outlier
+        let v = violin(&xs);
+        assert!(v.hi_adjacent < 20.0);
+    }
+
+    #[test]
+    fn pct_error_signs() {
+        assert!((pct_error(95.0, 100.0) + 5.0).abs() < 1e-12);
+        assert!((pct_error(105.0, 100.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[]), 0.0);
+        assert_eq!(median(&[]), 0.0);
+    }
+}

@@ -1,0 +1,190 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! * **A1 — shift count**: how many controlled delays does Case 3 actually
+//!   need? (the paper picks 8; sweep 0/2/4/8/16)
+//! * **A2 — estimator grid size**: the Fig. 12 grid scan seeds Nelder-Mead;
+//!   how coarse can it be before the estimate degrades?
+//! * **A3 — polling period**: how fast must the logger poll to resolve the
+//!   update period?
+//! * **A4 — energy counter design**: continuous vs windowed integration
+//!   (the future-work extension; smi::energy_counter).
+//! * **A5 — fault robustness**: good-practice error under sample dropout.
+
+use crate::estimator::boxcar::{estimate_window, EstimatorConfig};
+use crate::estimator::stats::{mean, median, std_dev};
+use crate::measure::energy::{mean_power, shift_earlier};
+use crate::measure::{MeasurementRig, RepeatableLoad, SensorCharacterization};
+use crate::report::{f, Table};
+use crate::sim::faults::drop_samples;
+use crate::sim::profile::{find_model, DriverEpoch, PipelineSpec, PowerField};
+use crate::sim::sensor::run_pipeline;
+use crate::sim::{ActivitySignal, GpuDevice};
+use crate::smi::energy_counter::{run_counter, CounterDesign};
+use crate::smi::NvidiaSmi;
+
+/// A1: Case-3 error std vs number of controlled shifts.
+pub fn shift_count_ablation(trials: usize, seed: u64) -> Table {
+    let mut t = Table::new(
+        "A1 — Case 3 (A100, 100 ms load): error std vs controlled shifts",
+        &["shifts", "corrected mean %", "corrected std %"],
+    );
+    for shifts in [0usize, 2, 4, 8, 16] {
+        let pts = super::fig17_case3::run_cell(0.1, shifts, trials, seed);
+        let last = pts.last().unwrap();
+        t.row(&[
+            shifts.to_string(),
+            f(last.corrected_mean_pct, 2),
+            f(last.corrected_std_pct, 2),
+        ]);
+    }
+    t
+}
+
+/// A2: window-estimate error vs grid size (A100, 25/100).
+pub fn grid_size_ablation(runs: usize, seed: u64) -> Table {
+    let mut t = Table::new(
+        "A2 — window estimator: |error| vs coarse-grid size (A100 25/100 ms)",
+        &["grid points", "median |err| ms", "mean evals"],
+    );
+    for grid in [0usize, 4, 8, 16, 32, 64] {
+        let mut errs = Vec::new();
+        let mut evals = Vec::new();
+        for run in 0..runs {
+            let s = seed ^ ((grid * 100 + run) as u64).wrapping_mul(0x9E37_79B9);
+            let device = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, s);
+            let act = ActivitySignal::square_wave(0.3, 0.075, 0.5, 1.0, 110);
+            let truth = device.synthesize(&act, 0.0, 9.0);
+            let stream = run_pipeline(&device, PipelineSpec::boxcar(100.0, 25.0), &truth, s ^ 1);
+            let obs: Vec<(f64, f64)> = stream.readings.iter().map(|r| (r.t, r.watts)).collect();
+            let est = estimate_window(
+                &truth,
+                &obs,
+                EstimatorConfig { update_period_s: 0.1, discard_s: 1.0, grid },
+            );
+            errs.push((est.window_s * 1000.0 - 25.0).abs());
+            evals.push(est.evals as f64);
+        }
+        t.row(&[grid.to_string(), f(median(&errs), 2), f(mean(&evals), 0)]);
+    }
+    t
+}
+
+/// A3: measured update period vs polling cadence (V100: truth 20 ms).
+pub fn poll_period_ablation(seed: u64) -> Table {
+    let mut t = Table::new(
+        "A3 — measured update period vs polling cadence (V100, truth 20 ms)",
+        &["poll ms", "median update ms", "detected"],
+    );
+    let device = GpuDevice::new(find_model("V100 PCIe").unwrap(), 0, seed);
+    for poll_ms in [1.0, 2.0, 5.0, 10.0, 20.0, 50.0] {
+        let act = ActivitySignal::square_wave(0.2, 0.02, 0.5, 1.0, 280);
+        let truth = device.synthesize(&act, 0.0, 6.5);
+        let smi = NvidiaSmi::attach(device.clone(), DriverEpoch::Pre530, &truth, seed ^ 7);
+        let log = smi.poll(PowerField::Draw, poll_ms / 1000.0, 0.3, 6.3);
+        let periods = log.update_periods();
+        if periods.len() < 5 {
+            t.row(&[f(poll_ms, 0), "-".into(), "false".into()]);
+        } else {
+            t.row(&[f(poll_ms, 0), f(median(&periods) * 1000.0, 1), "true".into()]);
+        }
+    }
+    t
+}
+
+/// A4: energy-counter designs vs PMD on the aliased A100 load.
+pub fn energy_counter_ablation(seed: u64) -> Table {
+    let mut t = Table::new(
+        "A4 — NVML energy-counter designs (A100, aliased 100 ms load)",
+        &["design", "energy err % vs truth"],
+    );
+    let device = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, seed);
+    let act = ActivitySignal::square_wave(0.5, 0.1004, 0.5, 1.0, 60);
+    let truth = device.synthesize(&act, 0.0, 7.0);
+    let spec = PipelineSpec::boxcar(100.0, 25.0);
+    let want = device.tolerance.apply(truth.energy_between(1.0, 6.0) / 5.0) * 5.0;
+    for design in [CounterDesign::Continuous, CounterDesign::Windowed] {
+        let c = run_counter(&device, spec, &truth, design);
+        let e = c.energy_between_j(1.0, 6.0);
+        t.row(&[format!("{design:?}"), f(100.0 * (e - want) / want, 2)]);
+    }
+    t
+}
+
+/// A5: good-practice-style measurement error under sample dropout.
+pub fn fault_robustness_ablation(trials: usize, seed: u64) -> Table {
+    let mut t = Table::new(
+        "A5 — corrected measurement error under poll-sample dropout (RTX 3090)",
+        &["dropout %", "mean err %", "std err %"],
+    );
+    let sensor = SensorCharacterization { update_s: 0.1, window_s: 0.1, rise_s: 0.25 };
+    let device = GpuDevice::new(find_model("RTX 3090").unwrap(), 0, seed);
+    let rig = MeasurementRig::new(device, DriverEpoch::Post530, PowerField::Instant, seed);
+    for dropout in [0.0, 0.1, 0.3, 0.5] {
+        let mut errs = Vec::new();
+        for trial in 0..trials {
+            let load = crate::bench::BenchmarkLoad::new(0.1, 1.0, 50);
+            let act = load.build(0.75, 50, 0, 0.0);
+            let t_end = act.t_end();
+            let cap = rig.capture(&act, 0.0, t_end + 0.6, seed ^ trial as u64);
+            let log = cap.smi.poll(PowerField::Instant, 0.02, 0.4, t_end + 0.4);
+            let lossy = drop_samples(&log.series, dropout, seed ^ (trial as u64) << 4);
+            let shifted = shift_earlier(&lossy, sensor.window_s / 2.0);
+            let t_a = 0.75 + 0.4; // discard rise
+            let p = mean_power(&shifted, t_a, t_end);
+            let truth = cap.pmd_trace.energy_between(t_a, t_end) / (t_end - t_a);
+            errs.push(100.0 * (p - truth) / truth);
+        }
+        t.row(&[f(dropout * 100.0, 0), f(mean(&errs), 2), f(std_dev(&errs), 2)]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shift_ablation_monotone_trend() {
+        let t = shift_count_ablation(6, 300);
+        assert_eq!(t.rows.len(), 5);
+        let std_at = |i: usize| t.rows[i][2].parse::<f64>().unwrap();
+        // 8 shifts must beat 0 shifts decisively
+        assert!(std_at(3) < std_at(0), "8 shifts {} !< 0 shifts {}", std_at(3), std_at(0));
+    }
+
+    #[test]
+    fn grid_ablation_runs() {
+        let t = grid_size_ablation(3, 301);
+        assert_eq!(t.rows.len(), 6);
+        // with a reasonable grid the median error is small
+        let err32 = t.rows[4][1].parse::<f64>().unwrap();
+        assert!(err32 < 8.0, "grid=32 err {err32}");
+    }
+
+    #[test]
+    fn poll_ablation_detects_at_fast_cadence() {
+        let t = poll_period_ablation(302);
+        assert_eq!(t.rows[0][2], "true"); // 1 ms
+        assert_eq!(t.rows[1][2], "true"); // 2 ms
+        let err = (t.rows[1][1].parse::<f64>().unwrap() - 20.0).abs();
+        assert!(err < 4.0);
+    }
+
+    #[test]
+    fn counter_ablation_continuous_wins() {
+        let t = energy_counter_ablation(303);
+        let cont = t.rows[0][1].parse::<f64>().unwrap().abs();
+        let wind = t.rows[1][1].parse::<f64>().unwrap().abs();
+        assert!(cont < 2.0, "continuous {cont}");
+        assert!(cont <= wind + 0.5, "continuous {cont} vs windowed {wind}");
+    }
+
+    #[test]
+    fn fault_ablation_degrades_gracefully() {
+        let t = fault_robustness_ablation(4, 304);
+        let e0 = t.rows[0][1].parse::<f64>().unwrap();
+        let e50 = t.rows[3][1].parse::<f64>().unwrap();
+        // even 50% dropout moves the mean error by only a few points
+        assert!((e0 - e50).abs() < 5.0, "{e0} vs {e50}");
+    }
+}

@@ -1,0 +1,233 @@
+//! Shared characterisation routines used by the figure experiments: these
+//! are the paper's three micro-benchmarks (§4.1–4.3) packaged as functions
+//! that see *only* what a real user of nvidia-smi would see (polled
+//! readings), never the simulator's hidden profile.
+
+use crate::estimator::boxcar::{estimate_window, EstimatorConfig};
+use crate::estimator::stats::median;
+use crate::sim::activity::ActivitySignal;
+use crate::sim::device::GpuDevice;
+use crate::sim::profile::{DriverEpoch, PowerField};
+use crate::smi::NvidiaSmi;
+
+/// §4.1: measure the power update period by polling fast during a
+/// varying load and taking the median time between value changes.
+pub fn measure_update_period(device: &GpuDevice, driver: DriverEpoch, field: PowerField, seed: u64) -> Option<f64> {
+    // 20 ms square wave guarantees the value changes at almost every update
+    let act = ActivitySignal::square_wave(0.2, 0.02, 0.5, 1.0, 220);
+    let truth = device.synthesize(&act, 0.0, 5.0);
+    let smi = NvidiaSmi::attach(device.clone(), driver, &truth, seed);
+    let log = smi.poll(field, 0.002, 0.3, 4.8);
+    let periods = log.update_periods();
+    if periods.len() < 5 {
+        return None;
+    }
+    Some(median(&periods))
+}
+
+/// Transient-response classes observed in Fig. 7.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransientClass {
+    /// Case 1: actual rise near-instant; smi follows at the next update.
+    InstantActualInstantSmi,
+    /// Case 2: actual power ramps over hundreds of ms; smi tracks it.
+    SlowActualTrackedSmi,
+    /// Case 3: smi lags with ~linear growth over 1 s (1 s average window).
+    LinearLag,
+    /// Case 4: logarithmic growth (RC distortion, Kepler/Maxwell).
+    LogarithmicLag,
+}
+
+/// Result of the §4.2 transient probe.
+#[derive(Debug, Clone, Copy)]
+pub struct TransientResult {
+    pub class: TransientClass,
+    /// 10→90% rise time of the *actual* (PMD-visible) power, seconds.
+    pub actual_rise_s: f64,
+    /// 10→90% rise time of the smi-reported power, seconds.
+    pub smi_rise_s: f64,
+}
+
+/// §4.2: single 6 s step; classify the smi response.
+pub fn probe_transient(
+    device: &GpuDevice,
+    driver: DriverEpoch,
+    field: PowerField,
+    seed: u64,
+) -> Option<TransientResult> {
+    let t_step = 1.0;
+    let act = ActivitySignal::burst(t_step, 6.0, 1.0);
+    let truth = device.synthesize(&act, 0.0, 8.0);
+    let smi = NvidiaSmi::attach(device.clone(), driver, &truth, seed);
+    let log = smi.poll(field, 0.01, 0.0, 8.0);
+    if log.series.points.len() < 20 {
+        return None;
+    }
+
+    // actual rise time from the truth trace (smoothed by a 10 ms window)
+    let prefix = truth.prefix_sums();
+    let smooth = |t: f64| truth.window_mean_with(&prefix, t, 0.01);
+    let p_lo = smooth(0.9);
+    let p_hi = smooth(6.5);
+    let rise = |f: &dyn Fn(f64) -> f64| -> f64 {
+        let p10 = p_lo + 0.1 * (p_hi - p_lo);
+        let p90 = p_lo + 0.9 * (p_hi - p_lo);
+        let mut t10 = None;
+        let mut t90 = None;
+        let mut t = t_step - 0.05;
+        while t < 7.0 {
+            let p = f(t);
+            if t10.is_none() && p >= p10 {
+                t10 = Some(t);
+            }
+            if p >= p90 {
+                t90 = Some(t);
+                break;
+            }
+            t += 0.005;
+        }
+        match (t10, t90) {
+            (Some(a), Some(b)) => b - a,
+            _ => f64::NAN,
+        }
+    };
+    let actual_rise_s = rise(&smooth);
+
+    // smi rise time from the polled log (normalise against its own levels)
+    let s_lo = {
+        let pre: Vec<f64> =
+            log.series.points.iter().filter(|p| p.0 < t_step - 0.1).map(|p| p.1).collect();
+        median(&pre)
+    };
+    let s_hi = {
+        let post: Vec<f64> =
+            log.series.points.iter().filter(|p| p.0 > 4.0 && p.0 < 6.5).map(|p| p.1).collect();
+        median(&post)
+    };
+    let smi_at = |t: f64| -> f64 {
+        log.series
+            .points
+            .iter()
+            .take_while(|p| p.0 <= t)
+            .last()
+            .map(|p| p.1)
+            .unwrap_or(s_lo)
+    };
+    if (s_hi - s_lo).abs() < 1e-9 {
+        return None; // degenerate: sensor never moved
+    }
+    // rescale the smi signal onto the actual power axis and reuse the riser
+    let smi_rise_s = rise(&|t| p_lo + (smi_at(t) - s_lo) / (s_hi - s_lo) * (p_hi - p_lo));
+
+    // classification thresholds (Fig. 7's four shapes)
+    let class = if smi_rise_s > 0.6 {
+        TransientClass::LinearLag
+    } else if smi_rise_s > 0.12 && actual_rise_s < 0.5 * smi_rise_s {
+        TransientClass::LogarithmicLag
+    } else if actual_rise_s > 0.15 {
+        TransientClass::SlowActualTrackedSmi
+    } else {
+        TransientClass::InstantActualInstantSmi
+    };
+    Some(TransientResult { class, actual_rise_s, smi_rise_s })
+}
+
+/// §4.3: estimate the boxcar averaging window with the aliased square-wave
+/// method. `period_frac` is the load period as a fraction of the update
+/// period (the paper uses 2/3, 3/4, 4/5, 6/5, 5/4, 4/3).
+pub fn probe_window(
+    device: &GpuDevice,
+    driver: DriverEpoch,
+    field: PowerField,
+    update_s: f64,
+    period_frac: f64,
+    seed: u64,
+) -> Option<f64> {
+    let period_s = update_s * period_frac;
+    let cycles = (8.5 / period_s) as usize;
+    let act = ActivitySignal::square_wave(0.3, period_s, 0.5, 1.0, cycles);
+    let truth = device.synthesize(&act, 0.0, 9.0);
+    let smi = NvidiaSmi::attach(device.clone(), driver, &truth, seed);
+    let stream = smi.stream(field);
+    if stream.readings.len() < 16 {
+        return None;
+    }
+    let observed: Vec<(f64, f64)> = stream.readings.iter().map(|r| (r.t, r.watts)).collect();
+    let est = estimate_window(
+        &truth,
+        &observed,
+        EstimatorConfig { update_period_s: update_s, ..Default::default() },
+    );
+    Some(est.window_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::profile::find_model;
+
+    fn dev(name: &str, seed: u64) -> GpuDevice {
+        GpuDevice::new(find_model(name).unwrap(), 0, seed)
+    }
+
+    #[test]
+    fn update_period_v100_is_20ms() {
+        let p = measure_update_period(&dev("V100 PCIe", 1), DriverEpoch::Pre530, PowerField::Draw, 2)
+            .unwrap();
+        assert!((p - 0.020).abs() < 0.004, "p={p}");
+    }
+
+    #[test]
+    fn update_period_a100_is_100ms() {
+        let p =
+            measure_update_period(&dev("A100 PCIe-40G", 1), DriverEpoch::Pre530, PowerField::Draw, 2)
+                .unwrap();
+        assert!((p - 0.100).abs() < 0.015, "p={p}");
+    }
+
+    #[test]
+    fn update_period_unsupported_is_none() {
+        let p = measure_update_period(&dev("C2050", 1), DriverEpoch::Pre530, PowerField::Draw, 2);
+        assert!(p.is_none());
+    }
+
+    #[test]
+    fn transient_h100_instant_is_case1() {
+        let r = probe_transient(&dev("H100", 3), DriverEpoch::Post530, PowerField::Instant, 4).unwrap();
+        assert_eq!(r.class, TransientClass::InstantActualInstantSmi, "{r:?}");
+    }
+
+    #[test]
+    fn transient_3090_tracks_slow_board_rise() {
+        let r = probe_transient(&dev("RTX 3090", 3), DriverEpoch::V530, PowerField::Draw, 4).unwrap();
+        assert_eq!(r.class, TransientClass::SlowActualTrackedSmi, "{r:?}");
+        assert!(r.actual_rise_s > 0.15 && r.actual_rise_s < 0.45, "{r:?}");
+    }
+
+    #[test]
+    fn transient_ampere_pre530_is_linear_lag() {
+        let r = probe_transient(&dev("RTX A6000", 3), DriverEpoch::Pre530, PowerField::Draw, 4).unwrap();
+        assert_eq!(r.class, TransientClass::LinearLag, "{r:?}");
+        assert!(r.smi_rise_s > 0.6, "1 s window rises slowly: {r:?}");
+    }
+
+    #[test]
+    fn transient_kepler_is_logarithmic() {
+        let r = probe_transient(&dev("Tesla K40", 3), DriverEpoch::Pre530, PowerField::Draw, 4).unwrap();
+        assert_eq!(r.class, TransientClass::LogarithmicLag, "{r:?}");
+    }
+
+    #[test]
+    fn window_probe_recovers_a100() {
+        let w = probe_window(
+            &dev("A100 PCIe-40G", 5),
+            DriverEpoch::Post530,
+            PowerField::Instant,
+            0.1,
+            0.75,
+            6,
+        )
+        .unwrap();
+        assert!((w - 0.025).abs() < 0.008, "w={w}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Shared machinery for the §5.1 exploration (Figs. 15–17): energy
+//! measurement error as a function of repetition count, with and without
+//! the good-practice corrections, for the three averaging-window cases.
+
+use crate::bench::BenchmarkLoad;
+use crate::estimator::stats::{mean, pct_error, std_dev};
+use crate::measure::energy::{mean_power, shift_earlier};
+use crate::measure::{MeasurementRig, RepeatableLoad, SensorCharacterization};
+use crate::rng::Rng;
+use crate::sim::device::GpuDevice;
+use crate::sim::profile::{find_model, DriverEpoch, PowerField};
+
+/// Configuration of one case sweep.
+#[derive(Debug, Clone)]
+pub struct CaseConfig {
+    pub model: &'static str,
+    pub driver: DriverEpoch,
+    pub field: PowerField,
+    /// What the micro-benchmarks learned about this sensor.
+    pub sensor: SensorCharacterization,
+    /// Benchmark-load square-wave period, seconds.
+    pub period_s: f64,
+    /// Repetition counts to sweep.
+    pub reps_list: Vec<usize>,
+    /// Trials per repetition count (paper: 32).
+    pub trials: usize,
+    /// Controlled delays per run (paper Case 3: 0 / 4 / 8).
+    pub shifts: usize,
+    pub seed: u64,
+}
+
+/// Error statistics at one repetition count.
+#[derive(Debug, Clone, Copy)]
+pub struct RepsPoint {
+    pub reps: usize,
+    /// Raw integration over the kernel execution period.
+    pub naive_mean_pct: f64,
+    pub naive_std_pct: f64,
+    /// With rise-time discard + boxcar shift applied.
+    pub corrected_mean_pct: f64,
+    pub corrected_std_pct: f64,
+}
+
+/// Run the sweep.
+pub fn run_case(cfg: &CaseConfig) -> Vec<RepsPoint> {
+    let device = GpuDevice::new(find_model(cfg.model).unwrap(), 0, cfg.seed);
+    let rig = MeasurementRig::new(device, cfg.driver, cfg.field, cfg.seed);
+    let poll_s = (cfg.sensor.update_s / 4.0).clamp(0.005, 0.02);
+    let mut rng = Rng::new(cfg.seed ^ 0xCA5E);
+
+    let mut out = Vec::with_capacity(cfg.reps_list.len());
+    for &reps in &cfg.reps_list {
+        let mut naive_errs = Vec::with_capacity(cfg.trials);
+        let mut corr_errs = Vec::with_capacity(cfg.trials);
+        for trial in 0..cfg.trials {
+            // randomised 0-1 s delay between trials (paper)
+            let t_start = 0.5 + rng.uniform();
+            let load = BenchmarkLoad::new(cfg.period_s, 1.0, reps);
+            let reps_per_shift = if cfg.shifts > 0 { (reps / cfg.shifts).max(1) } else { 0 };
+            let act = load.build(t_start, reps, reps_per_shift, cfg.sensor.window_s);
+            let t_end = act.t_end();
+            let boot = cfg.seed ^ ((reps * 1000 + trial) as u64).wrapping_mul(0x9E37_79B9);
+            let t_tail = cfg.sensor.window_s + 2.0 * cfg.sensor.update_s;
+            let cap = rig.capture(&act, 0.0, t_end + t_tail + 0.3, boot);
+            let log = cap.smi.poll(
+                cfg.field,
+                poll_s,
+                t_start - 2.0 * cfg.sensor.window_s.max(cfg.sensor.update_s),
+                t_end + t_tail,
+            );
+
+            let truth_between = |a: f64, b: f64| {
+                cap.pmd_trace.energy_between(a, b) / (b - a)
+            };
+
+            // naive: integrate the raw readings over the kernel window
+            let p_naive = mean_power(&log.series, t_start, t_end);
+            naive_errs.push(pct_error(p_naive, truth_between(t_start, t_end)));
+
+            // corrected: shift by the boxcar group delay, discard settle reps
+            let shifted = shift_earlier(&log.series, cfg.sensor.window_s / 2.0);
+            let settle = cfg.sensor.rise_s + cfg.sensor.window_s;
+            let discard = ((settle / cfg.period_s).ceil() as usize).min(reps.saturating_sub(1));
+            let t_a = t_start + discard as f64 * cfg.period_s;
+            let p_corr = mean_power(&shifted, t_a, t_end);
+            corr_errs.push(pct_error(p_corr, truth_between(t_a, t_end)));
+        }
+        out.push(RepsPoint {
+            reps,
+            naive_mean_pct: mean(&naive_errs),
+            naive_std_pct: std_dev(&naive_errs),
+            corrected_mean_pct: mean(&corr_errs),
+            corrected_std_pct: std_dev(&corr_errs),
+        });
+    }
+    out
+}
+
+/// Render a sweep as a table.
+pub fn table(title: &str, points: &[RepsPoint]) -> crate::report::Table {
+    use crate::report::f;
+    let mut t = crate::report::Table::new(
+        title,
+        &["reps", "naive mean %", "naive std %", "corrected mean %", "corrected std %"],
+    );
+    for p in points {
+        t.row(&[
+            p.reps.to_string(),
+            f(p.naive_mean_pct, 2),
+            f(p.naive_std_pct, 2),
+            f(p.corrected_mean_pct, 2),
+            f(p.corrected_std_pct, 2),
+        ]);
+    }
+    t
+}
+
+/// Default repetition sweep (paper-style doubling).
+pub fn default_reps() -> Vec<usize> {
+    vec![1, 2, 4, 8, 16, 32, 64]
+}

@@ -1,0 +1,86 @@
+//! Fig. 1: the motivating observation — nvidia-smi can report drastically
+//! different power (80–200 W) for the *same* CUDA kernel on an A100,
+//! because only 25 ms of every 100 ms is measured.
+
+use crate::report::{f, Table};
+use crate::sim::activity::ActivitySignal;
+use crate::sim::device::GpuDevice;
+use crate::sim::profile::{find_model, DriverEpoch, PowerField};
+use crate::smi::NvidiaSmi;
+
+/// Result: the smi readings observed while one 325 ms program (kernel run
+/// 4 times) executes.
+#[derive(Debug, Clone)]
+pub struct Fig01Result {
+    /// (time, reported W) during the program.
+    pub readings: Vec<(f64, f64)>,
+    pub min_w: f64,
+    pub max_w: f64,
+    /// Kernel-iteration start times (the green dotted lines).
+    pub iteration_starts: Vec<f64>,
+}
+
+/// Run the Fig. 1 scenario with a given boot seed (phase).
+pub fn run(seed: u64) -> Fig01Result {
+    let device = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, seed);
+    // a 325 ms program: the kernel executed 4 times (~45 ms each with
+    // ~36 ms gaps, as in the figure)
+    let t0 = 1.0;
+    let mut act = ActivitySignal::idle();
+    let mut starts = Vec::new();
+    for k in 0..4 {
+        let t = t0 + k as f64 * 0.0813;
+        starts.push(t);
+        act.push(t, 0.045, 1.0);
+    }
+    let truth = device.synthesize(&act, 0.0, 2.5);
+    let smi = NvidiaSmi::attach(device, DriverEpoch::Post530, &truth, seed ^ 0xF1);
+    let readings: Vec<(f64, f64)> = smi
+        .stream(PowerField::Instant)
+        .readings
+        .iter()
+        .filter(|r| r.t >= t0 - 0.05 && r.t <= t0 + 0.375)
+        .map(|r| (r.t, r.watts))
+        .collect();
+    let min_w = readings.iter().map(|r| r.1).fold(f64::MAX, f64::min);
+    let max_w = readings.iter().map(|r| r.1).fold(f64::MIN, f64::max);
+    Fig01Result { readings, min_w, max_w, iteration_starts: starts }
+}
+
+/// Run across several boot phases and tabulate the spread.
+pub fn table(seeds: &[u64]) -> Table {
+    let mut t = Table::new(
+        "Fig. 1 — same kernel, drastically different reported power (A100)",
+        &["boot phase #", "min W", "max W", "spread W"],
+    );
+    for (i, &s) in seeds.iter().enumerate() {
+        let r = run(s);
+        t.row(&[format!("{i}"), f(r.min_w, 1), f(r.max_w, 1), f(r.max_w - r.min_w, 1)]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn readings_span_a_wide_range_across_phases() {
+        // across boot phases the same program must show a large spread
+        let mut global_min = f64::MAX;
+        let mut global_max = f64::MIN;
+        for s in 0..8 {
+            let r = run(s);
+            global_min = global_min.min(r.min_w);
+            global_max = global_max.max(r.max_w);
+        }
+        assert!(global_max - global_min > 80.0, "spread {global_min}..{global_max}");
+    }
+
+    #[test]
+    fn four_iterations_marked() {
+        let r = run(1);
+        assert_eq!(r.iteration_starts.len(), 4);
+        assert!(!r.readings.is_empty());
+    }
+}

@@ -1,0 +1,42 @@
+//! Fig. 5: chain-length → kernel-time linearity (R² = 1.000).
+//!
+//! Unlike the other experiments this one exercises the *real* compute
+//! artifact: the Pallas FMA-chain kernel, AOT-lowered to HLO and executed
+//! on the PJRT CPU client. The wall-clock scaling replaces the paper's
+//! CUDA timing; the linear fit is the same.
+
+use anyhow::Result;
+
+use crate::bench::calibrate::{calibrate_sweep, CalibrationSweep};
+use crate::report::{f, Table};
+use crate::runtime::ArtifactRuntime;
+
+/// Result: the measured sweep and fit.
+#[derive(Debug, Clone)]
+pub struct Fig05Result {
+    pub sweep: CalibrationSweep,
+}
+
+/// Run the calibration sweep on the loaded artifact runtime.
+pub fn run(rt: &ArtifactRuntime) -> Result<Fig05Result> {
+    let niters: Vec<i32> = (1..=8).map(|k| k * 1000).collect();
+    let sweep = calibrate_sweep(rt, &niters, 5)?;
+    Ok(Fig05Result { sweep })
+}
+
+/// Tabulate.
+pub fn table(r: &Fig05Result) -> Table {
+    let mut t = Table::new(
+        "Fig. 5 — FMA-chain iterations vs execution time (PJRT, Pallas kernel)",
+        &["niter", "measured ms", "fit ms"],
+    );
+    for (n, ms) in r.sweep.niters.iter().zip(&r.sweep.measured_ms) {
+        t.row(&[n.to_string(), f(*ms, 3), f(r.sweep.fit.predict(*n as f64), 3)]);
+    }
+    t.row(&[
+        "R²".into(),
+        f(r.sweep.fit.r2, 4),
+        format!("slope {:.3} µs/iter", r.sweep.fit.slope * 1000.0),
+    ]);
+    t
+}

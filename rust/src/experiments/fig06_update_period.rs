@@ -1,0 +1,78 @@
+//! Fig. 6: histogram of the measured power update period (V100 → 20 ms,
+//! A100 → ~101 ms).
+
+use crate::estimator::stats::{histogram, median};
+use crate::report::{f, Table};
+use crate::sim::activity::ActivitySignal;
+use crate::sim::device::GpuDevice;
+use crate::sim::profile::{find_model, DriverEpoch, PowerField};
+use crate::smi::NvidiaSmi;
+
+/// Result for one GPU.
+#[derive(Debug, Clone)]
+pub struct UpdatePeriodResult {
+    pub model: &'static str,
+    /// All observed update periods, seconds.
+    pub periods: Vec<f64>,
+    pub median_s: f64,
+    /// Histogram over 0..0.2 s, 50 bins.
+    pub hist: (Vec<f64>, Vec<usize>),
+}
+
+/// Measure one model's update period distribution.
+pub fn run_one(model: &str, driver: DriverEpoch, field: PowerField, seed: u64) -> Option<UpdatePeriodResult> {
+    let device = GpuDevice::new(find_model(model)?, 0, seed);
+    let act = ActivitySignal::square_wave(0.2, 0.02, 0.5, 1.0, 280);
+    let truth = device.synthesize(&act, 0.0, 6.5);
+    let smi = NvidiaSmi::attach(device, driver, &truth, seed ^ 0x66);
+    let log = smi.poll(field, 0.002, 0.3, 6.3);
+    let periods = log.update_periods();
+    if periods.len() < 5 {
+        return None;
+    }
+    let median_s = median(&periods);
+    let hist = histogram(&periods, 0.0, 0.2, 50);
+    Some(UpdatePeriodResult { model: find_model(model).unwrap().name, periods, median_s, hist })
+}
+
+/// The paper's Fig. 6 pair (V100, A100) plus any extra models.
+pub fn run(models: &[&str], seed: u64) -> Vec<UpdatePeriodResult> {
+    models
+        .iter()
+        .filter_map(|m| run_one(m, DriverEpoch::Pre530, PowerField::Draw, seed))
+        .collect()
+}
+
+/// Tabulate medians.
+pub fn table(results: &[UpdatePeriodResult]) -> Table {
+    let mut t = Table::new(
+        "Fig. 6 — power update period (median of observed change intervals)",
+        &["GPU", "median ms", "n samples"],
+    );
+    for r in results {
+        t.row(&[r.model.into(), f(r.median_s * 1000.0, 1), r.periods.len().to_string()]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v100_and_a100_medians_match_paper() {
+        let rs = run(&["V100 PCIe", "A100 PCIe-40G"], 9);
+        assert_eq!(rs.len(), 2);
+        assert!((rs[0].median_s - 0.020).abs() < 0.004, "V100 {}", rs[0].median_s);
+        assert!((rs[1].median_s - 0.100).abs() < 0.012, "A100 {}", rs[1].median_s);
+    }
+
+    #[test]
+    fn histogram_peaks_at_median() {
+        let r = run_one("V100 PCIe", DriverEpoch::Pre530, PowerField::Draw, 5).unwrap();
+        let (edges, counts) = &r.hist;
+        let peak_bin = counts.iter().enumerate().max_by_key(|(_, c)| **c).unwrap().0;
+        let peak_center = (edges[peak_bin] + edges[peak_bin + 1]) / 2.0;
+        assert!((peak_center - r.median_s).abs() < 0.01);
+    }
+}

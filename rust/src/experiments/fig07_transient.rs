@@ -1,0 +1,110 @@
+//! Fig. 7: the four transient-response classes.
+//!
+//! Case 1 — instant actual rise, smi follows at the next update (H100
+//! instant). Case 2 — actual power ramps over hundreds of ms, smi tracks
+//! it (RTX 3090). Case 3 — smi lags linearly over 1 s (1 s average
+//! window). Case 4 — logarithmic growth (Kepler/Maxwell RC distortion).
+
+use super::common::{probe_transient, TransientClass, TransientResult};
+use crate::report::{f, Table};
+use crate::sim::device::GpuDevice;
+use crate::sim::profile::{find_model, DriverEpoch, PowerField};
+
+/// One scenario of the figure.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub label: &'static str,
+    pub model: &'static str,
+    pub driver: DriverEpoch,
+    pub field: PowerField,
+    pub expected: TransientClass,
+}
+
+/// The paper's four panels.
+pub fn scenarios() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            label: "case 1: instant rise, next-update smi",
+            model: "H100",
+            driver: DriverEpoch::Post530,
+            field: PowerField::Instant,
+            expected: TransientClass::InstantActualInstantSmi,
+        },
+        Scenario {
+            label: "case 2: slow actual rise, tracked",
+            model: "RTX 3090",
+            driver: DriverEpoch::V530,
+            field: PowerField::Draw,
+            expected: TransientClass::SlowActualTrackedSmi,
+        },
+        Scenario {
+            label: "case 3: linear 1 s lag (average)",
+            model: "RTX A6000",
+            driver: DriverEpoch::Pre530,
+            field: PowerField::Draw,
+            expected: TransientClass::LinearLag,
+        },
+        Scenario {
+            label: "case 4: logarithmic (RC)",
+            model: "Tesla K40",
+            driver: DriverEpoch::Pre530,
+            field: PowerField::Draw,
+            expected: TransientClass::LogarithmicLag,
+        },
+    ]
+}
+
+/// Run all four scenarios.
+pub fn run(seed: u64) -> Vec<(Scenario, Option<TransientResult>)> {
+    scenarios()
+        .into_iter()
+        .map(|s| {
+            let device = GpuDevice::new(find_model(s.model).unwrap(), 0, seed);
+            let r = probe_transient(&device, s.driver, s.field, seed ^ 0x77);
+            (s, r)
+        })
+        .collect()
+}
+
+/// Tabulate.
+pub fn table(results: &[(Scenario, Option<TransientResult>)]) -> Table {
+    let mut t = Table::new(
+        "Fig. 7 — transient response classes",
+        &["scenario", "GPU", "actual rise ms", "smi rise ms", "class", "matches paper"],
+    );
+    for (s, r) in results {
+        match r {
+            Some(r) => t.row(&[
+                s.label.into(),
+                s.model.into(),
+                f(r.actual_rise_s * 1000.0, 0),
+                f(r.smi_rise_s * 1000.0, 0),
+                format!("{:?}", r.class),
+                (r.class == s.expected).to_string(),
+            ]),
+            None => t.row(&[
+                s.label.into(),
+                s.model.into(),
+                "-".into(),
+                "-".into(),
+                "no data".into(),
+                "false".into(),
+            ]),
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_four_classes_recovered() {
+        let results = run(13);
+        for (s, r) in &results {
+            let r = r.expect(s.label);
+            assert_eq!(r.class, s.expected, "{}: {:?}", s.label, r);
+        }
+    }
+}

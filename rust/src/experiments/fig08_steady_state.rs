@@ -1,0 +1,107 @@
+//! Fig. 8: steady-state nvidia-smi vs PMD power, 7 load levels × 8 reps,
+//! near-perfect linear relationship (R² = 0.9999) whose gradient ≠ 1.
+
+use crate::estimator::linreg::{fit, LinearFit};
+use crate::measure::MeasurementRig;
+use crate::report::{f, Table};
+use crate::sim::activity::ActivitySignal;
+use crate::sim::device::GpuDevice;
+use crate::sim::profile::{find_model, DriverEpoch, PowerField};
+
+/// The paper's 7 load levels: idle, then SM fractions.
+pub const LEVELS: [f64; 7] = [0.0, 0.01, 0.2, 0.4, 0.6, 0.8, 1.0];
+
+/// Result of one steady-state sweep.
+#[derive(Debug, Clone)]
+pub struct SteadyStateResult {
+    pub model: &'static str,
+    /// (PMD W, smi W) pairs — 7 levels × reps.
+    pub points: Vec<(f64, f64)>,
+    pub fit: LinearFit,
+}
+
+/// Run the sweep on one device (default: the paper's RTX 3090).
+pub fn run_device(device: GpuDevice, driver: DriverEpoch, field: PowerField, reps: usize, seed: u64) -> SteadyStateResult {
+    let rig = MeasurementRig::new(device, driver, field, seed);
+    let mut points = Vec::new();
+    for (li, &level) in LEVELS.iter().enumerate() {
+        for rep in 0..reps {
+            let boot = seed ^ ((li * 100 + rep) as u64).wrapping_mul(0x9E37_79B9);
+            let act = if level == 0.0 {
+                ActivitySignal::idle()
+            } else {
+                ActivitySignal::burst(0.5, 3.0, level)
+            };
+            let cap = rig.capture(&act, 0.0, 4.0, boot);
+            // measure once fully settled (2.5 s after the step)
+            let p_pmd = cap.pmd_trace.window_mean(3.4, 0.8);
+            let p_smi = match cap.smi.query(field, 3.4) {
+                Some(w) => w,
+                None => continue,
+            };
+            points.push((p_pmd, p_smi));
+        }
+    }
+    let (xs, ys): (Vec<f64>, Vec<f64>) = points.iter().copied().unzip();
+    let model = rig.device.model.name;
+    SteadyStateResult { model, points, fit: fit(&xs, &ys) }
+}
+
+/// Default run: RTX 3090, instant field, 8 reps (paper setup).
+pub fn run(seed: u64) -> SteadyStateResult {
+    let device = GpuDevice::new(find_model("RTX 3090").unwrap(), 0, seed);
+    run_device(device, DriverEpoch::Post530, PowerField::Instant, 8, seed)
+}
+
+/// Tabulate.
+pub fn table(r: &SteadyStateResult) -> Table {
+    let mut t = Table::new(
+        format!("Fig. 8 — steady-state smi vs PMD ({})", r.model),
+        &["metric", "value"],
+    );
+    t.row(&["points".into(), r.points.len().to_string()]);
+    t.row(&["gradient".into(), f(r.fit.slope, 4)]);
+    t.row(&["offset W".into(), f(r.fit.intercept, 2)]);
+    t.row(&["R²".into(), f(r.fit.r2, 5)]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relationship_is_linear_with_nonunit_gradient() {
+        let r = run(41);
+        assert!(r.fit.r2 > 0.998, "R²={}", r.fit.r2);
+        // the gradient embeds the card tolerance and the PMD rail gap;
+        // it must differ from exactly 1 but stay within a ±8% band
+        assert!((r.fit.slope - 1.0).abs() > 0.002, "gradient exactly 1 is wrong");
+        assert!((r.fit.slope - 1.0).abs() < 0.09, "gradient={}", r.fit.slope);
+    }
+
+    #[test]
+    fn seven_clusters_present() {
+        let r = run(42);
+        assert_eq!(r.points.len(), 7 * 8);
+        // clusters: idle is far from the active levels
+        let mut pmds: Vec<f64> = r.points.iter().map(|p| p.0).collect();
+        pmds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(pmds[8] - pmds[7] > 20.0, "idle cluster separated (pstate gap)");
+    }
+
+    #[test]
+    fn power_limit_compresses_top_cluster() {
+        // spacing between the 80% and 100% clusters is smaller than between
+        // 60% and 80% (Fig. 8's "less further apart due to the power limit")
+        let r = run(43);
+        let cluster_mean = |lvl_idx: usize| {
+            let chunk: Vec<f64> =
+                r.points[lvl_idx * 8..(lvl_idx + 1) * 8].iter().map(|p| p.0).collect();
+            crate::estimator::stats::mean(&chunk)
+        };
+        let d_60_80 = cluster_mean(5) - cluster_mean(4);
+        let d_80_100 = cluster_mean(6) - cluster_mean(5);
+        assert!(d_80_100 < d_60_80, "{d_80_100} !< {d_60_80}");
+    }
+}

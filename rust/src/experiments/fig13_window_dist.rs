@@ -1,0 +1,103 @@
+//! Fig. 13: distribution of the window estimate over repeated runs at the
+//! paper's six period fractions (2/3, 3/4, 4/5, 6/5, 5/4, 4/3 of the
+//! update period), shown as violin summaries; std devs of a few ms.
+
+use super::common::probe_window;
+use crate::estimator::stats::{std_dev, violin, ViolinSummary};
+use crate::report::{f, Table};
+use crate::sim::device::GpuDevice;
+use crate::sim::profile::{find_model, sensor_pipeline, DriverEpoch, PipelineKind, PowerField};
+
+/// The paper's six load-period fractions.
+pub const FRACTIONS: [f64; 6] = [2.0 / 3.0, 0.75, 0.8, 1.2, 1.25, 4.0 / 3.0];
+
+/// Distribution result for one GPU.
+#[derive(Debug, Clone)]
+pub struct WindowDistResult {
+    pub model: &'static str,
+    /// All estimates, ms.
+    pub estimates_ms: Vec<f64>,
+    pub violin: ViolinSummary,
+    pub std_ms: f64,
+    pub true_window_ms: f64,
+}
+
+/// Run `runs_per_fraction` estimates per fraction on one model.
+pub fn run_one(model: &str, runs_per_fraction: usize, seed: u64) -> WindowDistResult {
+    let m = find_model(model).unwrap();
+    let (driver, field) = (DriverEpoch::Post530, PowerField::Instant);
+    let spec = sensor_pipeline(m.generation, field, driver);
+    let update_s = spec.update_ms / 1000.0;
+    let true_window_ms = match spec.kind {
+        PipelineKind::Boxcar { window_ms } => window_ms,
+        _ => f64::NAN,
+    };
+    let mut estimates_ms = Vec::new();
+    for (fi, &frac) in FRACTIONS.iter().enumerate() {
+        for run in 0..runs_per_fraction {
+            let s = seed ^ ((fi * 1000 + run) as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let device = GpuDevice::new(m, 0, s);
+            if let Some(w) = probe_window(&device, driver, field, update_s, frac, s ^ 0xD15) {
+                estimates_ms.push(w * 1000.0);
+            }
+        }
+    }
+    WindowDistResult {
+        model: m.name,
+        violin: violin(&estimates_ms),
+        std_ms: std_dev(&estimates_ms),
+        estimates_ms,
+        true_window_ms,
+    }
+}
+
+/// The paper's three GPUs (reduced run count is fine for smoke use).
+pub fn run(runs_per_fraction: usize, seed: u64) -> Vec<WindowDistResult> {
+    ["GTX 1080 Ti", "A100 PCIe-40G", "RTX 3090"]
+        .iter()
+        .map(|m| run_one(m, runs_per_fraction, seed))
+        .collect()
+}
+
+/// Tabulate violin summaries.
+pub fn table(results: &[WindowDistResult]) -> Table {
+    let mut t = Table::new(
+        "Fig. 13 — window-estimate distribution (violin summary, ms)",
+        &["GPU", "true", "median", "q1", "q3", "lo-adj", "hi-adj", "std", "n"],
+    );
+    for r in results {
+        t.row(&[
+            r.model.into(),
+            f(r.true_window_ms, 0),
+            f(r.violin.median, 1),
+            f(r.violin.q1, 1),
+            f(r.violin.q3, 1),
+            f(r.violin.lo_adjacent, 1),
+            f(r.violin.hi_adjacent, 1),
+            f(r.std_ms, 1),
+            r.violin.n.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn medians_near_truth_with_small_spread() {
+        // 4 runs/fraction (24 estimates per GPU) keeps the test quick
+        for r in run(4, 90) {
+            assert!(
+                (r.violin.median - r.true_window_ms).abs() < r.true_window_ms.max(10.0) * 0.35,
+                "{}: median {} vs true {}",
+                r.model,
+                r.violin.median,
+                r.true_window_ms
+            );
+            // paper std devs are 1.2-3.3 ms; allow slack for reduced runs
+            assert!(r.std_ms < 12.0, "{}: std {}", r.model, r.std_ms);
+        }
+    }
+}

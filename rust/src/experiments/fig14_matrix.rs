@@ -1,0 +1,172 @@
+//! Fig. 14: the summary matrix — for every generation × driver version ×
+//! field, the *measured* behaviour (rise class, update period, averaging
+//! window), recovered purely by running the micro-benchmarks against the
+//! emulated sensor, then compared against the encoded ground truth.
+//!
+//! This is the reproduction's central validation: the paper's methodology,
+//! applied to our simulated fleet, must re-derive the table the paper
+//! published.
+
+use super::common::{measure_update_period, probe_transient, probe_window, TransientClass};
+use crate::report::{f, Table};
+use crate::sim::device::GpuDevice;
+use crate::sim::profile::{
+    sensor_pipeline, DriverEpoch, Generation, GpuModel, PipelineKind, PowerField, CATALOGUE,
+};
+
+/// One measured cell of the matrix.
+#[derive(Debug, Clone)]
+pub struct MatrixCell {
+    pub generation: Generation,
+    pub model: &'static str,
+    pub driver: DriverEpoch,
+    pub field: PowerField,
+    /// Measured update period, ms (None = unsupported).
+    pub update_ms: Option<f64>,
+    /// Measured averaging window, ms (None = not boxcar / unsupported).
+    pub window_ms: Option<f64>,
+    /// Measured transient class.
+    pub transient: Option<TransientClass>,
+    /// Ground truth for comparison.
+    pub truth_update_ms: Option<f64>,
+    pub truth_window_ms: Option<f64>,
+}
+
+impl MatrixCell {
+    /// Did the measurement recover the encoded ground truth?
+    pub fn matches_truth(&self) -> bool {
+        match (self.truth_update_ms, self.update_ms) {
+            (None, None) => true,
+            (Some(t), Some(m)) => {
+                let update_ok = (m - t).abs() < t * 0.25 + 2.0;
+                let window_ok = match (self.truth_window_ms, self.window_ms) {
+                    (Some(tw), Some(mw)) => (mw - tw).abs() < tw * 0.4 + 6.0,
+                    (None, _) => true, // RC/estimation: no boxcar window to recover
+                    (Some(_), None) => false,
+                };
+                update_ok && window_ok
+            }
+            _ => false,
+        }
+    }
+}
+
+/// Representative model for a generation (first catalogue entry).
+pub fn representative(gen: Generation) -> Option<&'static GpuModel> {
+    CATALOGUE.iter().find(|m| m.generation == gen)
+}
+
+/// Measure one cell.
+pub fn measure_cell(gen: Generation, driver: DriverEpoch, field: PowerField, seed: u64) -> Option<MatrixCell> {
+    let model = representative(gen)?;
+    let device = GpuDevice::new(model, 0, seed);
+    let spec = sensor_pipeline(gen, field, driver);
+    let (truth_update_ms, truth_window_ms) = match spec.kind {
+        PipelineKind::Boxcar { window_ms } => (Some(spec.update_ms), Some(window_ms)),
+        PipelineKind::RcFilter { .. } => (Some(spec.update_ms), None),
+        // Estimation-based boards (Fermi 2.0 era): the 5 W-quantised
+        // activity estimate barely moves under the probe wave, so the
+        // cadence is unobservable — the paper likewise reports these as a
+        // category of their own rather than with measured parameters.
+        PipelineKind::Estimation | PipelineKind::Unsupported => (None, None),
+    };
+
+    let update = measure_update_period(&device, driver, field, seed ^ 0x14A);
+    let transient = probe_transient(&device, driver, field, seed ^ 0x14B);
+    // window estimation strategy depends on the transient class:
+    //  * LogarithmicLag (RC distortion): there is no boxcar window;
+    //  * LinearLag: the window is much longer than the update period and
+    //    outside the aliasing probe's scan range — but a step through a
+    //    w-wide boxcar rises 10→90% in exactly 0.8·w, so the Fig. 7 probe
+    //    already measured it;
+    //  * otherwise: the §4.3 aliased-square-wave estimator.
+    let window = match (update, &transient) {
+        (Some(u), Some(tr)) => match tr.class {
+            TransientClass::LogarithmicLag => None,
+            TransientClass::LinearLag => Some(tr.smi_rise_s / 0.8 * 1000.0),
+            _ => probe_window(&device, driver, field, u, 0.75, seed ^ 0x14C).map(|w| w * 1000.0),
+        },
+        _ => None,
+    };
+    Some(MatrixCell {
+        generation: gen,
+        model: model.name,
+        driver,
+        field,
+        update_ms: update.map(|u| u * 1000.0),
+        window_ms: window,
+        transient: transient.map(|r| r.class),
+        truth_update_ms,
+        truth_window_ms,
+    })
+}
+
+/// Build the full matrix (all generations × drivers for `power.draw`, plus
+/// the post-530 average/instant fields).
+pub fn run(seed: u64) -> Vec<MatrixCell> {
+    let mut cells = Vec::new();
+    for gen in Generation::ALL {
+        if gen == Generation::GraceHopper {
+            continue; // separate §6 experiment (fig19)
+        }
+        for driver in DriverEpoch::ALL {
+            let fields: &[PowerField] = match driver {
+                DriverEpoch::Post530 => &PowerField::ALL,
+                _ => &[PowerField::Draw],
+            };
+            for &field in fields {
+                if let Some(c) = measure_cell(gen, driver, field, seed) {
+                    cells.push(c);
+                }
+            }
+        }
+    }
+    cells
+}
+
+/// Tabulate.
+pub fn table(cells: &[MatrixCell]) -> Table {
+    let mut t = Table::new(
+        "Fig. 14 — measured sensor-pipeline matrix (vs encoded truth)",
+        &["generation", "driver", "field", "update ms", "window ms", "transient", "matches"],
+    );
+    for c in cells {
+        t.row(&[
+            c.generation.name().into(),
+            c.driver.name().into(),
+            c.field.query_name().into(),
+            c.update_ms.map_or("N/A".into(), |v| f(v, 0)),
+            c.window_ms.map_or("-".into(), |v| f(v, 0)),
+            c.transient.map_or("-".into(), |v| format!("{v:?}")),
+            c.matches_truth().to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_cells_recover_ground_truth() {
+        // spot-check the paper's headline cells instead of the full (slow) matrix
+        let cases = [
+            (Generation::AmpereGa100, DriverEpoch::Post530, PowerField::Instant),
+            (Generation::Volta, DriverEpoch::Pre530, PowerField::Draw),
+            (Generation::Turing, DriverEpoch::V530, PowerField::Draw),
+            (Generation::Hopper, DriverEpoch::Post530, PowerField::Instant),
+        ];
+        for (gen, driver, field) in cases {
+            let c = measure_cell(gen, driver, field, 140).unwrap();
+            assert!(c.matches_truth(), "{:?}/{:?}/{:?}: {:?}", gen, driver, field, c);
+        }
+    }
+
+    #[test]
+    fn unsupported_cells_report_na() {
+        let c = measure_cell(Generation::Fermi1, DriverEpoch::Pre530, PowerField::Draw, 141).unwrap();
+        assert!(c.update_ms.is_none());
+        assert!(c.matches_truth());
+    }
+}

@@ -1,0 +1,94 @@
+//! Fig. 15 — Case 1: averaging window == power update period (RTX 3090,
+//! instant option, 100 ms / 100 ms). Error vs repetition count for short /
+//! medium / long loads; corrections (discard rise reps, shift 100 ms)
+//! reach the steady-state margin with fewer repetitions.
+
+use super::energy_cases::{default_reps, run_case, CaseConfig, RepsPoint};
+use crate::measure::SensorCharacterization;
+use crate::report::Table;
+use crate::sim::profile::{DriverEpoch, PowerField};
+
+/// Sensor knowledge for this case (from the micro-benchmarks).
+pub fn sensor() -> SensorCharacterization {
+    SensorCharacterization { update_s: 0.1, window_s: 0.1, rise_s: 0.25 }
+}
+
+/// The three load periods: 25%, 100%, 800% of the update period.
+pub const PERIODS_S: [f64; 3] = [0.025, 0.1, 0.8];
+
+/// Run one load period.
+pub fn run_period(period_s: f64, trials: usize, seed: u64) -> Vec<RepsPoint> {
+    run_case(&CaseConfig {
+        model: "RTX 3090",
+        driver: DriverEpoch::Post530,
+        field: PowerField::Instant,
+        sensor: sensor(),
+        period_s,
+        reps_list: default_reps(),
+        trials,
+        shifts: 0,
+        seed,
+    })
+}
+
+/// Run all three periods.
+pub fn run(trials: usize, seed: u64) -> Vec<(f64, Vec<RepsPoint>)> {
+    PERIODS_S.iter().map(|&p| (p, run_period(p, trials, seed))).collect()
+}
+
+/// Tabulate.
+pub fn tables(results: &[(f64, Vec<RepsPoint>)]) -> Vec<Table> {
+    results
+        .iter()
+        .map(|(p, pts)| {
+            super::energy_cases::table(
+                &format!("Fig. 15 — Case 1 (100/100 ms), load period {:.0} ms", p * 1000.0),
+                pts,
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_converges_with_repetitions() {
+        let pts = run_period(0.1, 6, 150);
+        let first = &pts[0];
+        let last = pts.last().unwrap();
+        // more reps -> smaller spread
+        assert!(
+            last.naive_std_pct < first.naive_std_pct,
+            "std must shrink: {} -> {}",
+            first.naive_std_pct,
+            last.naive_std_pct
+        );
+        // converged error should approximate the steady-state margin (< ~10%)
+        assert!(last.naive_mean_pct.abs() < 10.0, "mean={}", last.naive_mean_pct);
+    }
+
+    #[test]
+    fn few_repetitions_underestimate() {
+        // the rise time means early reps read low -> negative error at reps=1
+        let pts = run_period(0.1, 8, 151);
+        assert!(pts[0].naive_mean_pct < -4.0, "reps=1 error {}", pts[0].naive_mean_pct);
+    }
+
+    #[test]
+    fn correction_accelerates_convergence() {
+        let pts = run_period(0.1, 6, 152);
+        // at a mid repetition count, corrected |error - converged| is smaller
+        let converged = pts.last().unwrap().corrected_mean_pct;
+        let mid = &pts[3]; // 8 reps
+        assert!(
+            (mid.corrected_mean_pct - converged).abs()
+                <= (mid.naive_mean_pct - converged).abs() + 0.5,
+            "corrected {} vs naive {} (converged {})",
+            mid.corrected_mean_pct,
+            mid.naive_mean_pct,
+            converged
+        );
+    }
+}

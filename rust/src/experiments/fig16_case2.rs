@@ -1,0 +1,81 @@
+//! Fig. 16 — Case 2: averaging window (1 s) longer than the update period
+//! (100 ms): the default on Ampere/Ada/Hopper. Convergence needs more
+//! repetitions; discarding the initial 1250 ms (250 ms rise + 1 s average)
+//! restores Case-1-like accuracy.
+
+use super::energy_cases::{default_reps, run_case, CaseConfig, RepsPoint};
+use crate::measure::SensorCharacterization;
+use crate::report::Table;
+use crate::sim::profile::{DriverEpoch, PowerField};
+
+/// Sensor knowledge: RTX 3090 `power.draw` post-530 (1 s window).
+pub fn sensor() -> SensorCharacterization {
+    SensorCharacterization { update_s: 0.1, window_s: 1.0, rise_s: 0.25 }
+}
+
+/// Load periods: 25%, 100%, 800% of the update period.
+pub const PERIODS_S: [f64; 3] = [0.025, 0.1, 0.8];
+
+/// Run one load period.
+pub fn run_period(period_s: f64, trials: usize, seed: u64) -> Vec<RepsPoint> {
+    run_case(&CaseConfig {
+        model: "RTX 3090",
+        driver: DriverEpoch::Post530,
+        field: PowerField::Draw, // 1 s window
+        sensor: sensor(),
+        period_s,
+        reps_list: default_reps(),
+        trials,
+        shifts: 0,
+        seed,
+    })
+}
+
+/// Run all periods.
+pub fn run(trials: usize, seed: u64) -> Vec<(f64, Vec<RepsPoint>)> {
+    PERIODS_S.iter().map(|&p| (p, run_period(p, trials, seed))).collect()
+}
+
+/// Tabulate.
+pub fn tables(results: &[(f64, Vec<RepsPoint>)]) -> Vec<Table> {
+    results
+        .iter()
+        .map(|(p, pts)| {
+            super::energy_cases::table(
+                &format!("Fig. 16 — Case 2 (1000/100 ms), load period {:.0} ms", p * 1000.0),
+                pts,
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slower_convergence_than_case1() {
+        // at low repetition counts the 1 s ramp-up biases the naive reading
+        // down much harder than in Case 1
+        let c2 = run_period(0.1, 6, 160);
+        let c1 = super::super::fig15_case1::run_period(0.1, 6, 160);
+        assert!(
+            c2[1].naive_mean_pct < c1[1].naive_mean_pct - 3.0,
+            "case2 {} should underestimate more than case1 {}",
+            c2[1].naive_mean_pct,
+            c1[1].naive_mean_pct
+        );
+    }
+
+    #[test]
+    fn discard_restores_accuracy() {
+        let pts = run_period(0.1, 6, 161);
+        let last = pts.last().unwrap();
+        assert!(
+            last.corrected_mean_pct.abs() < 10.0,
+            "corrected error {}",
+            last.corrected_mean_pct
+        );
+        assert!(last.corrected_std_pct < 3.0, "corrected std {}", last.corrected_std_pct);
+    }
+}

@@ -1,0 +1,167 @@
+//! Fig. 18: the headline evaluation — energy error of the naive method vs
+//! the good practice for the nine Table 2 workloads under all three
+//! averaging-window cases. Paper: naive up to ~70% error, good practice
+//! ≈ 5% across the board; average reduction 34.38%, per-case std ≈ 0.25%.
+
+use crate::bench::workloads::WORKLOADS;
+use crate::estimator::stats::{mean, std_dev};
+use crate::measure::{
+    good_practice::measure_good_practice, naive::measure_naive, GoodPracticeConfig,
+    MeasurementRig, SensorCharacterization,
+};
+use crate::report::{f, Table};
+use crate::sim::device::GpuDevice;
+use crate::sim::profile::{find_model, DriverEpoch, PowerField};
+
+/// The three cases (model, driver, field, sensor knowledge).
+#[derive(Debug, Clone, Copy)]
+pub struct Case {
+    pub label: &'static str,
+    pub model: &'static str,
+    pub driver: DriverEpoch,
+    pub field: PowerField,
+    pub sensor: SensorCharacterization,
+}
+
+/// The paper's three case setups.
+pub fn cases() -> [Case; 3] {
+    [
+        Case {
+            label: "100/100 (RTX 3090 instant)",
+            model: "RTX 3090",
+            driver: DriverEpoch::Post530,
+            field: PowerField::Instant,
+            sensor: SensorCharacterization { update_s: 0.1, window_s: 0.1, rise_s: 0.25 },
+        },
+        Case {
+            label: "1000/100 (RTX 3090 draw)",
+            model: "RTX 3090",
+            driver: DriverEpoch::Post530,
+            field: PowerField::Draw,
+            sensor: SensorCharacterization { update_s: 0.1, window_s: 1.0, rise_s: 0.25 },
+        },
+        Case {
+            label: "25/100 (A100 instant)",
+            model: "A100 PCIe-40G",
+            driver: DriverEpoch::Post530,
+            field: PowerField::Instant,
+            sensor: SensorCharacterization { update_s: 0.1, window_s: 0.025, rise_s: 0.1 },
+        },
+    ]
+}
+
+/// Per-workload outcome in one case.
+#[derive(Debug, Clone)]
+pub struct WorkloadOutcome {
+    pub workload: &'static str,
+    pub naive_pct: f64,
+    pub good_pct: f64,
+}
+
+/// Per-case aggregate.
+#[derive(Debug, Clone)]
+pub struct CaseOutcome {
+    pub case: Case,
+    pub workloads: Vec<WorkloadOutcome>,
+    pub naive_mean_abs: f64,
+    pub good_mean_abs: f64,
+    pub good_std: f64,
+}
+
+/// Run one case over all nine workloads.
+pub fn run_one(case: Case, cfg: &GoodPracticeConfig, seed: u64) -> CaseOutcome {
+    let mut outcomes = Vec::with_capacity(WORKLOADS.len());
+    for (wi, wl) in WORKLOADS.iter().enumerate() {
+        let device = GpuDevice::new(find_model(case.model).unwrap(), 0, seed ^ wi as u64);
+        let rig = MeasurementRig::new(device, case.driver, case.field, seed ^ (wi as u64) << 8);
+        let naive = measure_naive(&rig, wl, cfg.poll_period_s, seed ^ 0xE18);
+        let good = measure_good_practice(&rig, wl, &case.sensor, cfg);
+        outcomes.push(WorkloadOutcome {
+            workload: wl.name,
+            naive_pct: naive.pct_error,
+            good_pct: good.mean_pct_error,
+        });
+    }
+    let naive_abs: Vec<f64> = outcomes.iter().map(|o| o.naive_pct.abs()).collect();
+    let good_abs: Vec<f64> = outcomes.iter().map(|o| o.good_pct.abs()).collect();
+    let good_raw: Vec<f64> = outcomes.iter().map(|o| o.good_pct).collect();
+    CaseOutcome {
+        case,
+        naive_mean_abs: mean(&naive_abs),
+        good_mean_abs: mean(&good_abs),
+        good_std: std_dev(&good_raw),
+        workloads: outcomes,
+    }
+}
+
+/// Run all three cases.
+pub fn run(cfg: &GoodPracticeConfig, seed: u64) -> Vec<CaseOutcome> {
+    cases().into_iter().map(|c| run_one(c, cfg, seed)).collect()
+}
+
+/// Tabulate one case.
+pub fn table(outcome: &CaseOutcome) -> Table {
+    let mut t = Table::new(
+        format!("Fig. 18 — naive vs good practice, case {}", outcome.case.label),
+        &["workload", "naive %err", "good practice %err"],
+    );
+    for w in &outcome.workloads {
+        t.row(&[w.workload.into(), f(w.naive_pct, 2), f(w.good_pct, 2)]);
+    }
+    t.row(&[
+        "mean |err|".into(),
+        f(outcome.naive_mean_abs, 2),
+        f(outcome.good_mean_abs, 2),
+    ]);
+    t.row(&["std (good)".into(), "-".into(), f(outcome.good_std, 2)]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> GoodPracticeConfig {
+        GoodPracticeConfig { trials: 2, min_reps: 16, min_runtime_s: 2.0, ..Default::default() }
+    }
+
+    #[test]
+    fn good_practice_beats_naive_in_every_case() {
+        for outcome in run(&quick_cfg(), 180) {
+            assert!(
+                outcome.good_mean_abs < outcome.naive_mean_abs,
+                "case {}: good {:.2}% !< naive {:.2}%",
+                outcome.case.label,
+                outcome.good_mean_abs,
+                outcome.naive_mean_abs
+            );
+        }
+    }
+
+    #[test]
+    fn good_practice_error_is_single_digit() {
+        for outcome in run(&quick_cfg(), 181) {
+            assert!(
+                outcome.good_mean_abs < 10.0,
+                "case {}: {:.2}%",
+                outcome.case.label,
+                outcome.good_mean_abs
+            );
+        }
+    }
+
+    #[test]
+    fn good_practice_is_stable_across_workloads() {
+        // quick_cfg uses 2 trials / 16 reps / 2 s (vs the paper's 4/32/5 s),
+        // so the spread bound is looser here; the full-config CLI run
+        // reproduces the paper's sub-percent std (EXPERIMENTS.md)
+        for outcome in run(&quick_cfg(), 182) {
+            assert!(
+                outcome.good_std < 6.0,
+                "case {}: std {:.2}%",
+                outcome.case.label,
+                outcome.good_std
+            );
+        }
+    }
+}

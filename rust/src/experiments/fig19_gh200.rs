@@ -1,0 +1,99 @@
+//! Fig. 19 / §6: the Grace Hopper GH200 evaluation — separate then
+//! simultaneous CPU and GPU loads, captured by nvidia-smi (Average /
+//! Instant), the CPU-domain sensor, and the ACPI 50 ms sensor.
+
+use crate::estimator::stats::median;
+use crate::report::{f, Table};
+use crate::sim::activity::ActivitySignal;
+use crate::sim::superchip::{Superchip, SuperchipCapture};
+
+/// Scalar findings extracted from the capture.
+#[derive(Debug)]
+pub struct Fig19Result {
+    pub capture: SuperchipCapture,
+    /// Instant − Average at idle, watts (paper: consistently positive).
+    pub idle_gap_w: f64,
+    /// Instant rise during the CPU-only phase, watts.
+    pub instant_cpu_response_w: f64,
+    /// Average rise during the CPU-only phase, watts (should be ~0).
+    pub average_cpu_response_w: f64,
+    /// GPU-domain coverage (window/update): 20/100 = 0.2.
+    pub gpu_coverage: f64,
+    /// CPU-domain coverage: 10/100 = 0.1.
+    pub cpu_coverage: f64,
+    /// Largest ACPI deviation from its median, watts (paper: >100 W).
+    pub acpi_max_noise_w: f64,
+}
+
+/// Run the §6 protocol: CPU burst at 1–3 s, GPU burst at 4–6 s, both at
+/// 7–9 s.
+pub fn run(seed: u64) -> Fig19Result {
+    let chip = Superchip::new(seed);
+    let cpu = {
+        let mut a = ActivitySignal::burst(1.0, 2.0, 1.0);
+        a.push(7.0, 2.0, 1.0);
+        a
+    };
+    let gpu = {
+        let mut a = ActivitySignal::burst(4.0, 2.0, 1.0);
+        a.push(7.0, 2.0, 1.0);
+        a
+    };
+    let capture = chip.capture(&gpu, &cpu, 0.0, 10.0);
+
+    let v = |s: &crate::sim::sensor::SensorStream, t: f64| s.value_at(t).unwrap_or(f64::NAN);
+    let idle_gap_w = v(&capture.smi_instant, 0.9) - v(&capture.smi_average, 0.9);
+    let instant_cpu_response_w = v(&capture.smi_instant, 2.6) - v(&capture.smi_instant, 0.9);
+    let average_cpu_response_w = v(&capture.smi_average, 2.9) - v(&capture.smi_average, 0.9);
+    let acpi_vals: Vec<f64> = capture.acpi.iter().map(|p| p.1).collect();
+    let acpi_med = median(&acpi_vals);
+    let acpi_max_noise_w = acpi_vals.iter().map(|x| (x - acpi_med).abs()).fold(0.0, f64::max);
+
+    Fig19Result {
+        capture,
+        idle_gap_w,
+        instant_cpu_response_w,
+        average_cpu_response_w,
+        gpu_coverage: 0.020 / 0.100,
+        cpu_coverage: 0.010 / 0.100,
+        acpi_max_noise_w,
+    }
+}
+
+/// Tabulate.
+pub fn table(r: &Fig19Result) -> Table {
+    let mut t = Table::new("Fig. 19 — GH200 Grace Hopper evaluation", &["finding", "value"]);
+    t.row(&["Instant − Average at idle (W)".into(), f(r.idle_gap_w, 1)]);
+    t.row(&["Instant response to CPU-only load (W)".into(), f(r.instant_cpu_response_w, 1)]);
+    t.row(&["Average response to CPU-only load (W)".into(), f(r.average_cpu_response_w, 1)]);
+    t.row(&["GPU activity measured (window/update)".into(), format!("{:.0}%", r.gpu_coverage * 100.0)]);
+    t.row(&["CPU activity measured (window/update)".into(), format!("{:.0}%", r.cpu_coverage * 100.0)]);
+    t.row(&["max ACPI noise excursion (W)".into(), f(r.acpi_max_noise_w, 0)]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instant_is_module_level() {
+        let r = run(190);
+        assert!(r.idle_gap_w > 50.0, "Instant > Average at idle: {}", r.idle_gap_w);
+        assert!(r.instant_cpu_response_w > 150.0, "Instant reacts to CPU: {}", r.instant_cpu_response_w);
+        assert!(r.average_cpu_response_w.abs() < 40.0, "Average ignores CPU: {}", r.average_cpu_response_w);
+    }
+
+    #[test]
+    fn coverage_is_worse_than_a100() {
+        let r = run(191);
+        assert!(r.gpu_coverage < 0.25, "GPU 20% < A100's 25%");
+        assert!(r.cpu_coverage < r.gpu_coverage, "CPU 10% is the worst");
+    }
+
+    #[test]
+    fn acpi_noise_exceeds_100w() {
+        let r = run(192);
+        assert!(r.acpi_max_noise_w > 100.0, "{}", r.acpi_max_noise_w);
+    }
+}

@@ -1,0 +1,25 @@
+//! One module per paper figure/table (DESIGN.md §5). Each exposes a
+//! `run(...) -> <FigureResult>` returning structured data plus a
+//! `render()`-able table, so the CLI, examples, tests and benches all share
+//! the same code path that regenerates the paper's evaluation artefacts.
+
+pub mod ablations;
+pub mod common;
+pub mod energy_cases;
+pub mod fig01_motivation;
+pub mod fig05_calibration;
+pub mod fig06_update_period;
+pub mod fig07_transient;
+pub mod fig08_steady_state;
+pub mod fig09_gradient_offset;
+pub mod fig10_boxcar_alias;
+pub mod fig11_reconstruction;
+pub mod fig12_window_loss;
+pub mod fig13_window_dist;
+pub mod fig14_matrix;
+pub mod fig15_case1;
+pub mod fig16_case2;
+pub mod fig17_case3;
+pub mod fig18_evaluation;
+pub mod fig19_gh200;
+pub mod tables;

@@ -1,0 +1,64 @@
+//! Tables 1 and 2 of the paper, regenerated from the catalogue and the
+//! workload suite.
+
+use crate::bench::workloads::WORKLOADS;
+use crate::report::Table;
+use crate::sim::profile::{total_cards, ProductLine, CATALOGUE};
+
+/// Table 1: the tested-GPU catalogue.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        format!("Table 1 — tested GPUs ({} cards total)", total_cards()),
+        &["architecture", "model", "line", "form", "TDP W", "# tested"],
+    );
+    for m in CATALOGUE {
+        let line = match m.line {
+            ProductLine::Tesla => "Tesla",
+            ProductLine::Quadro => "Quadro",
+            ProductLine::GeForce => "GeForce",
+        };
+        t.row(&[
+            m.generation.name().into(),
+            m.name.into(),
+            line.into(),
+            format!("{:?}", m.form),
+            format!("{:.0}", m.tdp_w),
+            m.tested_count.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Table 2: the benchmark suite.
+pub fn table2() -> Table {
+    let mut t = Table::new(
+        "Table 2 — selected benchmarks",
+        &["source", "benchmark", "application", "iteration ms"],
+    );
+    for w in WORKLOADS {
+        t.row(&[
+            w.source.into(),
+            w.name.into(),
+            w.application.into(),
+            format!("{:.1}", w.iteration_s() * 1000.0),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_lists_every_model() {
+        let t = table1();
+        assert_eq!(t.rows.len(), CATALOGUE.len());
+        assert!(t.title.contains("cards total"));
+    }
+
+    #[test]
+    fn table2_lists_nine_benchmarks() {
+        assert_eq!(table2().rows.len(), 9);
+    }
+}

@@ -1,0 +1,38 @@
+//! # gpupower
+//!
+//! A full-system reproduction of *"Part-time Power Measurements:
+//! nvidia-smi's Lack of Attention"* (Yang, Adámek, Armour — SC'24).
+//!
+//! The crate provides:
+//! * [`sim`] — a ground-truth GPU power-behaviour simulator covering all 12
+//!   architecture generations of the paper's 70-GPU study (the hardware
+//!   substitute; DESIGN.md §2);
+//! * [`smi`] — an emulation of the `nvidia-smi` power query surface,
+//!   including driver-epoch-dependent field semantics;
+//! * [`pmd`] — the external shunt-resistor power meter (ground truth);
+//! * [`bench`] — the paper's micro-benchmark suite: a controllable
+//!   square-wave load whose compute is the AOT-compiled Pallas FMA-chain
+//!   kernel executed via PJRT, plus the nine real-workload signatures;
+//! * [`estimator`] — statistics, linear regression, Nelder-Mead, and the
+//!   boxcar-window estimation machinery (paper §4);
+//! * [`measure`] — the paper's headline contribution: the good-practice
+//!   energy measurement library (§5);
+//! * [`experiments`] — one module per paper figure/table;
+//! * [`coordinator`] — a tokio fleet orchestrator for datacenter-scale
+//!   simulated measurement campaigns;
+//! * [`runtime`] — the PJRT artifact runtime (Python never runs at request
+//!   time).
+
+pub mod bench;
+pub mod coordinator;
+pub mod estimator;
+pub mod experiments;
+pub mod measure;
+pub mod pmd;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod smi;
+
+pub use sim::{ActivitySignal, GpuDevice, PowerTrace};

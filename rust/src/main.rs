@@ -1,0 +1,385 @@
+//! `repro` — CLI for the gpupower reproduction.
+//!
+//! One subcommand per paper figure/table, plus the fleet daemon and the
+//! sensor characterisation tool. Results print as tables and are also
+//! written as CSV under `results/`. (Hand-rolled argument parsing: this
+//! build environment is offline, so the crate carries no CLI dependency.)
+
+use anyhow::Result;
+
+use gpupower::coordinator::{Fleet, FleetConfig, Scheduler};
+use gpupower::experiments as ex;
+use gpupower::measure::GoodPracticeConfig;
+use gpupower::report::Table;
+use gpupower::runtime::ArtifactRuntime;
+use gpupower::sim::profile::{DriverEpoch, PowerField};
+
+const USAGE: &str = "repro — reproduction of 'Part-time Power Measurements' (SC'24)
+
+USAGE: repro [--seed N] [--out DIR] [--no-artifacts] <command> [options]
+
+COMMANDS:
+  fig1                      same kernel, drastically different reported power
+  fig5                      FMA-chain calibration linearity (needs artifacts)
+  fig6                      power update period histograms
+  fig7                      the four transient-response classes
+  fig8                      steady-state error (RTX 3090)
+  fig9  [--reps N]          per-card gradient/offset scatter
+  fig10                     boxcar aliasing (RTX 3090 vs A100)
+  fig11                     smi reconstruction from PMD / square wave
+  fig12                     window-estimation loss curves
+  fig13 [--runs N]          window-estimate distributions
+  fig14                     the generation x driver matrix
+  fig15 [--trials N]        Case 1 energy error vs repetitions
+  fig16 [--trials N]        Case 2
+  fig17 [--trials N]        Case 3 with controlled phase shifts
+  fig18 [--trials N]        naive vs good practice, nine workloads
+  fig19                     GH200 Grace Hopper evaluation
+  ablations [--trials N]    design-choice ablations (A1-A5)
+  table1                    the GPU catalogue
+  table2                    the workload suite
+  all                       every experiment (reduced trial counts)
+  fleet [--gpus N] [--model NAME ...]   datacenter fleet campaign
+  characterize MODEL [--driver D] [--field F]  sensor characterisation
+";
+
+/// Minimal flag parser: scans for `--flag value` pairs and positionals.
+struct Args {
+    items: Vec<String>,
+}
+
+impl Args {
+    fn new() -> Self {
+        Args { items: std::env::args().skip(1).collect() }
+    }
+    fn flag_value(&self, name: &str) -> Option<&str> {
+        self.items
+            .iter()
+            .position(|a| a == name)
+            .and_then(|i| self.items.get(i + 1))
+            .map(|s| s.as_str())
+    }
+    fn flag_values(&self, name: &str) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.items.len() {
+            if self.items[i] == name {
+                if let Some(v) = self.items.get(i + 1) {
+                    out.push(v.clone());
+                    i += 1;
+                }
+            }
+            i += 1;
+        }
+        out
+    }
+    fn has(&self, name: &str) -> bool {
+        self.items.iter().any(|a| a == name)
+    }
+    fn usize_flag(&self, name: &str, default: usize) -> usize {
+        self.flag_value(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    /// Positionals: items that are not flags or flag values.
+    fn positionals(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut skip = false;
+        for (i, a) in self.items.iter().enumerate() {
+            if skip {
+                skip = false;
+                continue;
+            }
+            if a.starts_with("--") {
+                // boolean flags take no value
+                let boolean = matches!(a.as_str(), "--no-artifacts");
+                if !boolean && i + 1 < self.items.len() {
+                    skip = true;
+                }
+                continue;
+            }
+            out.push(a.as_str());
+        }
+        out
+    }
+}
+fn save_and_print(out_dir: &str, name: &str, t: &Table) {
+    println!("{}", t.render());
+    let path = format!("{out_dir}/{name}.csv");
+    if let Err(e) = t.write_csv(&path) {
+        eprintln!("warning: could not write {path}: {e}");
+    }
+}
+
+fn parse_driver(s: &str) -> DriverEpoch {
+    match s.to_lowercase().as_str() {
+        "pre530" | "pre-530" => DriverEpoch::Pre530,
+        "530" | "v530" => DriverEpoch::V530,
+        _ => DriverEpoch::Post530,
+    }
+}
+
+fn parse_field(s: &str) -> PowerField {
+    match s.to_lowercase().as_str() {
+        "average" | "power.draw.average" => PowerField::Average,
+        "instant" | "power.draw.instant" => PowerField::Instant,
+        _ => PowerField::Draw,
+    }
+}
+
+fn load_runtime(no_artifacts: bool) -> Option<ArtifactRuntime> {
+    if no_artifacts {
+        return None;
+    }
+    match ArtifactRuntime::load_default() {
+        Ok(rt) => {
+            eprintln!("[runtime] PJRT platform: {}", rt.platform());
+            Some(rt)
+        }
+        Err(e) => {
+            eprintln!("[runtime] artifacts unavailable ({e}); pure-Rust fallbacks in use");
+            None
+        }
+    }
+}
+
+
+fn main() -> Result<()> {
+    let args = Args::new();
+    let seed: u64 = args.flag_value("--seed").and_then(|v| v.parse().ok()).unwrap_or(2024);
+    let out = args.flag_value("--out").unwrap_or("results").to_string();
+    let no_artifacts = args.has("--no-artifacts");
+    std::fs::create_dir_all(&out).ok();
+    let pos = args.positionals();
+    let Some(cmd) = pos.first().copied() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+
+    match cmd {
+        "fig1" => {
+            let t = ex::fig01_motivation::table(&(0..8).map(|i| seed + i).collect::<Vec<_>>());
+            save_and_print(&out, "fig01", &t);
+        }
+        "fig5" => {
+            let rt = load_runtime(no_artifacts)
+                .ok_or_else(|| anyhow::anyhow!("fig5 requires artifacts (run `make artifacts`)"))?;
+            let r = ex::fig05_calibration::run(&rt)?;
+            save_and_print(&out, "fig05", &ex::fig05_calibration::table(&r));
+        }
+        "fig6" => {
+            let rs = ex::fig06_update_period::run(&["V100 PCIe", "A100 PCIe-40G", "RTX 3090", "H100"], seed);
+            save_and_print(&out, "fig06", &ex::fig06_update_period::table(&rs));
+        }
+        "fig7" => {
+            let rs = ex::fig07_transient::run(seed);
+            save_and_print(&out, "fig07", &ex::fig07_transient::table(&rs));
+        }
+        "fig8" => {
+            let r = ex::fig08_steady_state::run(seed);
+            save_and_print(&out, "fig08", &ex::fig08_steady_state::table(&r));
+        }
+        "fig9" => {
+            let reps = args.usize_flag("--reps", 4);
+            let fits = ex::fig09_gradient_offset::run(seed, reps);
+            save_and_print(&out, "fig09", &ex::fig09_gradient_offset::table(&fits));
+        }
+        "fig10" => {
+            let (a, b) = ex::fig10_boxcar_alias::run(seed);
+            save_and_print(&out, "fig10", &ex::fig10_boxcar_alias::table(&a, &b));
+        }
+        "fig11" => {
+            let rt = load_runtime(no_artifacts);
+            let r = ex::fig11_reconstruction::run(seed, rt.as_ref());
+            save_and_print(&out, "fig11", &ex::fig11_reconstruction::table(&r));
+        }
+        "fig12" => {
+            let rt = load_runtime(no_artifacts);
+            let curves = ex::fig12_window_loss::run(seed, rt.as_ref());
+            save_and_print(&out, "fig12", &ex::fig12_window_loss::table(&curves));
+        }
+        "fig13" => {
+            let runs = args.usize_flag("--runs", 32);
+            let rs = ex::fig13_window_dist::run(runs, seed);
+            save_and_print(&out, "fig13", &ex::fig13_window_dist::table(&rs));
+        }
+        "fig14" => {
+            let cells = ex::fig14_matrix::run(seed);
+            save_and_print(&out, "fig14", &ex::fig14_matrix::table(&cells));
+            let ok = cells.iter().filter(|c| c.matches_truth()).count();
+            println!("matrix cells matching encoded ground truth: {ok}/{}", cells.len());
+        }
+        "fig15" => {
+            let trials = args.usize_flag("--trials", 32);
+            let rs = ex::fig15_case1::run(trials, seed);
+            for (i, t) in ex::fig15_case1::tables(&rs).iter().enumerate() {
+                save_and_print(&out, &format!("fig15_{i}"), t);
+            }
+        }
+        "fig16" => {
+            let trials = args.usize_flag("--trials", 32);
+            let rs = ex::fig16_case2::run(trials, seed);
+            for (i, t) in ex::fig16_case2::tables(&rs).iter().enumerate() {
+                save_and_print(&out, &format!("fig16_{i}"), t);
+            }
+        }
+        "fig17" => {
+            let trials = args.usize_flag("--trials", 32);
+            let rs = ex::fig17_case3::run(trials, seed);
+            for (i, t) in ex::fig17_case3::tables(&rs).iter().enumerate() {
+                save_and_print(&out, &format!("fig17_{i}"), t);
+            }
+        }
+        "fig18" => {
+            let trials = args.usize_flag("--trials", 4);
+            let cfg = GoodPracticeConfig { trials, ..Default::default() };
+            let outcomes = ex::fig18_evaluation::run(&cfg, seed);
+            let mut naive_sum = 0.0;
+            let mut good_sum = 0.0;
+            for (i, o) in outcomes.iter().enumerate() {
+                save_and_print(&out, &format!("fig18_{i}"), &ex::fig18_evaluation::table(o));
+                naive_sum += o.naive_mean_abs;
+                good_sum += o.good_mean_abs;
+            }
+            println!(
+                "average |error|: naive {:.2}% -> good practice {:.2}% (reduction {:.2} points)",
+                naive_sum / 3.0,
+                good_sum / 3.0,
+                (naive_sum - good_sum) / 3.0
+            );
+        }
+        "fig19" => {
+            let r = ex::fig19_gh200::run(seed);
+            save_and_print(&out, "fig19", &ex::fig19_gh200::table(&r));
+        }
+        "ablations" => {
+            let trials = args.usize_flag("--trials", 8);
+            save_and_print(&out, "ablation_a1", &ex::ablations::shift_count_ablation(trials, seed));
+            save_and_print(&out, "ablation_a2", &ex::ablations::grid_size_ablation(trials, seed));
+            save_and_print(&out, "ablation_a3", &ex::ablations::poll_period_ablation(seed));
+            save_and_print(&out, "ablation_a4", &ex::ablations::energy_counter_ablation(seed));
+            save_and_print(&out, "ablation_a5", &ex::ablations::fault_robustness_ablation(trials, seed));
+        }
+        "table1" => save_and_print(&out, "table1", &ex::tables::table1()),
+        "table2" => save_and_print(&out, "table2", &ex::tables::table2()),
+        "all" => {
+            let rt = load_runtime(no_artifacts);
+            save_and_print(&out, "table1", &ex::tables::table1());
+            save_and_print(&out, "table2", &ex::tables::table2());
+            save_and_print(&out, "fig01", &ex::fig01_motivation::table(&(0..8).map(|i| seed + i).collect::<Vec<_>>()));
+            if let Some(rt) = &rt {
+                let r = ex::fig05_calibration::run(rt)?;
+                save_and_print(&out, "fig05", &ex::fig05_calibration::table(&r));
+            }
+            let rs = ex::fig06_update_period::run(&["V100 PCIe", "A100 PCIe-40G", "RTX 3090", "H100"], seed);
+            save_and_print(&out, "fig06", &ex::fig06_update_period::table(&rs));
+            save_and_print(&out, "fig07", &ex::fig07_transient::table(&ex::fig07_transient::run(seed)));
+            save_and_print(&out, "fig08", &ex::fig08_steady_state::table(&ex::fig08_steady_state::run(seed)));
+            save_and_print(&out, "fig09", &ex::fig09_gradient_offset::table(&ex::fig09_gradient_offset::run(seed, 2)));
+            let (a, b) = ex::fig10_boxcar_alias::run(seed);
+            save_and_print(&out, "fig10", &ex::fig10_boxcar_alias::table(&a, &b));
+            let r11 = ex::fig11_reconstruction::run(seed, rt.as_ref());
+            save_and_print(&out, "fig11", &ex::fig11_reconstruction::table(&r11));
+            save_and_print(&out, "fig12", &ex::fig12_window_loss::table(&ex::fig12_window_loss::run(seed, rt.as_ref())));
+            save_and_print(&out, "fig13", &ex::fig13_window_dist::table(&ex::fig13_window_dist::run(8, seed)));
+            let cells = ex::fig14_matrix::run(seed);
+            save_and_print(&out, "fig14", &ex::fig14_matrix::table(&cells));
+            for (i, t) in ex::fig15_case1::tables(&ex::fig15_case1::run(8, seed)).iter().enumerate() {
+                save_and_print(&out, &format!("fig15_{i}"), t);
+            }
+            for (i, t) in ex::fig16_case2::tables(&ex::fig16_case2::run(8, seed)).iter().enumerate() {
+                save_and_print(&out, &format!("fig16_{i}"), t);
+            }
+            for (i, t) in ex::fig17_case3::tables(&ex::fig17_case3::run(8, seed)).iter().enumerate() {
+                save_and_print(&out, &format!("fig17_{i}"), t);
+            }
+            let cfg = GoodPracticeConfig { trials: 3, ..Default::default() };
+            for (i, o) in ex::fig18_evaluation::run(&cfg, seed).iter().enumerate() {
+                save_and_print(&out, &format!("fig18_{i}"), &ex::fig18_evaluation::table(o));
+            }
+            save_and_print(&out, "fig19", &ex::fig19_gh200::table(&ex::fig19_gh200::run(seed)));
+        }
+        "fleet" => {
+            let gpus = args.usize_flag("--gpus", 64);
+            let model = args.flag_values("--model");
+            let fleet = Fleet::build(FleetConfig {
+                size: gpus,
+                models: model,
+                driver: DriverEpoch::Post530,
+                field: PowerField::Instant,
+                seed,
+            });
+            let sched = Scheduler::default();
+            let (outcomes, report) = sched.run(&fleet, None);
+            let mut t = Table::new(
+                format!("fleet of {} GPUs — per-node measurement", fleet.len()),
+                &["node", "model", "workload", "naive %err", "good %err", "power W"],
+            );
+            for o in &outcomes {
+                t.row(&[
+                    o.node_id.to_string(),
+                    o.model.into(),
+                    o.workload.into(),
+                    format!("{:.2}", o.naive_pct_error),
+                    format!("{:.2}", o.good_pct_error),
+                    format!("{:.1}", o.power_w),
+                ]);
+            }
+            save_and_print(&out, "fleet", &t);
+            println!(
+                "fleet energy accounting error: naive {:+.2}% | good practice {:+.2}%",
+                report.naive_pct(),
+                report.good_pct()
+            );
+            println!(
+                "scaled to 10,000 GPUs at $0.15/kWh, the naive error is worth ${:.0}/year",
+                report.annual_cost_error_usd(10_000, 0.15)
+            );
+        }
+        "characterize" => {
+            let model = pos
+                .get(1)
+                .copied()
+                .ok_or_else(|| anyhow::anyhow!("usage: repro characterize MODEL"))?;
+            let device = gpupower::sim::GpuDevice::new(
+                gpupower::sim::find_model(model)
+                    .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'; see `repro table1`"))?,
+                0,
+                seed,
+            );
+            let driver = parse_driver(args.flag_value("--driver").unwrap_or("post530"));
+            let field = parse_field(args.flag_value("--field").unwrap_or("instant"));
+            let mut t = Table::new(
+                format!("sensor characterisation — {} ({:?}, {})", device.model.name, driver, field.query_name()),
+                &["property", "measured"],
+            );
+            match ex::common::measure_update_period(&device, driver, field, seed) {
+                Some(u) => {
+                    t.row(&["update period".into(), format!("{:.1} ms", u * 1000.0)]);
+                    if let Some(tr) = ex::common::probe_transient(&device, driver, field, seed ^ 1) {
+                        t.row(&["transient class".into(), format!("{:?}", tr.class)]);
+                        t.row(&["actual rise".into(), format!("{:.0} ms", tr.actual_rise_s * 1000.0)]);
+                        t.row(&["smi rise".into(), format!("{:.0} ms", tr.smi_rise_s * 1000.0)]);
+                        if tr.class != ex::common::TransientClass::LogarithmicLag {
+                            if let Some(w) =
+                                ex::common::probe_window(&device, driver, field, u, 0.75, seed ^ 2)
+                            {
+                                t.row(&["averaging window".into(), format!("{:.1} ms", w * 1000.0)]);
+                                t.row(&[
+                                    "activity coverage".into(),
+                                    format!("{:.0}%", (w / u).min(1.0) * 100.0),
+                                ]);
+                            }
+                        }
+                    }
+                }
+                None => t.row(&["update period".into(), "N/A (power readings unsupported)".into()]),
+            }
+            save_and_print(&out, "characterize", &t);
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Steady-state error correction (paper §5.3).
+//!
+//! Each card's sensor reads `gradient·P + offset` (Fig. 8/9). Once the
+//! gradient/offset are calibrated against a reference meter, applying the
+//! inverse transform removes the power-domain error, leaving only the
+//! time-domain error the good-practice procedure already corrected:
+//! "Applying the power measurement error gradient and offset as a
+//! transform on the nvidia-smi data will reduce the error to nearly zero."
+
+use crate::estimator::linreg::{fit, LinearFit};
+use crate::sim::trace::SampleSeries;
+
+/// Calibrated power-domain correction for one card.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerCorrection {
+    /// Fitted gradient (reported / true).
+    pub gradient: f64,
+    /// Fitted offset, watts.
+    pub offset_w: f64,
+    pub r2: f64,
+}
+
+impl PowerCorrection {
+    /// Identity (no correction available).
+    pub fn identity() -> Self {
+        PowerCorrection { gradient: 1.0, offset_w: 0.0, r2: 1.0 }
+    }
+
+    /// Build from a steady-state calibration: paired (reference W,
+    /// reported W) cluster means across power levels (the Fig. 8 fit).
+    pub fn from_steady_state(reference_w: &[f64], reported_w: &[f64]) -> Self {
+        let f: LinearFit = fit(reference_w, reported_w);
+        PowerCorrection { gradient: f.slope, offset_w: f.intercept, r2: f.r2 }
+    }
+
+    /// Correct a reported power reading back to true watts.
+    #[inline]
+    pub fn correct(&self, reported_w: f64) -> f64 {
+        (reported_w - self.offset_w) / self.gradient
+    }
+
+    /// Correct a whole series.
+    pub fn correct_series(&self, s: &SampleSeries) -> SampleSeries {
+        SampleSeries { points: s.points.iter().map(|&(t, p)| (t, self.correct(p))).collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_steady_state_recovers_transform() {
+        let truth: Vec<f64> = vec![30.0, 80.0, 150.0, 220.0, 300.0, 380.0];
+        let reported: Vec<f64> = truth.iter().map(|p| 0.96 * p + 4.0).collect();
+        let c = PowerCorrection::from_steady_state(&truth, &reported);
+        assert!((c.gradient - 0.96).abs() < 1e-9);
+        assert!((c.offset_w - 4.0).abs() < 1e-9);
+        assert!((c.correct(0.96 * 200.0 + 4.0) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let c = PowerCorrection::identity();
+        assert_eq!(c.correct(123.0), 123.0);
+    }
+
+    #[test]
+    fn correct_series_applies_pointwise() {
+        let c = PowerCorrection { gradient: 2.0, offset_w: 10.0, r2: 1.0 };
+        let s = SampleSeries { points: vec![(0.0, 110.0), (1.0, 210.0)] };
+        let out = c.correct_series(&s);
+        assert_eq!(out.points[0].1, 50.0);
+        assert_eq!(out.points[1].1, 100.0);
+    }
+}

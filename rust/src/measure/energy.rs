@@ -1,0 +1,95 @@
+//! Energy integration primitives shared by the naive and good-practice
+//! measurement paths.
+
+use crate::sim::trace::SampleSeries;
+
+/// Trapezoidal energy (J) of a polled power series over `[t0, t1]`,
+/// clipping boundary segments to the interval (partial segments count
+/// proportionally — matches integrating the zero-order-hold signal).
+pub fn integrate_clipped(series: &SampleSeries, t0: f64, t1: f64) -> f64 {
+    let mut e = 0.0;
+    for w in series.points.windows(2) {
+        let (ta, pa) = w[0];
+        let (tb, pb) = w[1];
+        if tb <= t0 || ta >= t1 {
+            continue;
+        }
+        let lo = ta.max(t0);
+        let hi = tb.min(t1);
+        if hi <= lo {
+            continue;
+        }
+        // linear interpolation of power at the clipped endpoints
+        let frac = |t: f64| (t - ta) / (tb - ta);
+        let p_lo = pa + (pb - pa) * frac(lo);
+        let p_hi = pa + (pb - pa) * frac(hi);
+        e += 0.5 * (p_lo + p_hi) * (hi - lo);
+    }
+    e
+}
+
+/// Mean power (W) of a series over `[t0, t1]` by clipped integration.
+pub fn mean_power(series: &SampleSeries, t0: f64, t1: f64) -> f64 {
+    let d = t1 - t0;
+    if d <= 0.0 {
+        return 0.0;
+    }
+    integrate_clipped(series, t0, t1) / d
+}
+
+/// Shift every timestamp earlier by `shift_s` (the paper's boxcar-latency
+/// compensation: "the reported power draw actually corresponds to the GPU
+/// activity from [window] prior").
+pub fn shift_earlier(series: &SampleSeries, shift_s: f64) -> SampleSeries {
+    SampleSeries { points: series.points.iter().map(|&(t, p)| (t - shift_s, p)).collect() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat(p: f64, n: usize, dt: f64) -> SampleSeries {
+        SampleSeries { points: (0..n).map(|i| (i as f64 * dt, p)).collect() }
+    }
+
+    #[test]
+    fn clipped_integration_full_range() {
+        let s = flat(100.0, 11, 0.1); // 0..1.0 s
+        assert!((integrate_clipped(&s, 0.0, 1.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clipped_integration_partial_segments() {
+        let s = flat(100.0, 11, 0.1);
+        // [0.05, 0.95]: 0.9 s of 100 W
+        assert!((integrate_clipped(&s, 0.05, 0.95) - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clip_interpolates_ramp() {
+        let s = SampleSeries { points: vec![(0.0, 0.0), (1.0, 100.0)] };
+        // over [0.5, 1.0]: mean power 75 W -> 37.5 J
+        assert!((integrate_clipped(&s, 0.5, 1.0) - 37.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_power_flat() {
+        let s = flat(250.0, 101, 0.01);
+        assert!((mean_power(&s, 0.2, 0.8) - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shift_earlier_moves_times() {
+        let s = flat(10.0, 3, 1.0);
+        let sh = shift_earlier(&s, 0.5);
+        assert_eq!(sh.points[0].0, -0.5);
+        assert_eq!(sh.points[2].0, 1.5);
+    }
+
+    #[test]
+    fn out_of_range_is_zero() {
+        let s = flat(100.0, 5, 0.1);
+        assert_eq!(integrate_clipped(&s, 10.0, 11.0), 0.0);
+        assert_eq!(mean_power(&s, 1.0, 1.0), 0.0);
+    }
+}

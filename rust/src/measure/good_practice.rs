@@ -1,0 +1,225 @@
+//! The paper's §5.1 good-practice energy measurement procedure:
+//!
+//! 1. Execute the target program for ≥32 consecutive iterations or until a
+//!    minimum runtime of 5 s; if data loss occurs (averaging window shorter
+//!    than the update period), insert 8 controlled delays evenly spaced
+//!    within the repetitions.
+//! 2. Perform four separate trials with a randomised delay between each.
+//! 3. Post-process: discard repetitions during rise time, and shift the
+//!    data to synchronise with GPU activity (boxcar latency).
+//! 4. Optionally apply the steady-state gradient/offset correction (§5.3).
+
+use super::energy::{mean_power, shift_earlier};
+use super::{MeasurementRig, PowerCorrection, RepeatableLoad, SensorCharacterization};
+use crate::estimator::stats::{mean, pct_error, std_dev};
+use crate::rng::Rng;
+
+/// Configuration of the good-practice procedure (paper defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct GoodPracticeConfig {
+    /// Minimum consecutive iterations (paper: 32).
+    pub min_reps: usize,
+    /// Minimum total runtime, seconds (paper: 5).
+    pub min_runtime_s: f64,
+    /// Controlled delays to insert when the window undersamples (paper: 8).
+    pub shifts: usize,
+    /// Independent trials with randomised inter-trial delay (paper: 4).
+    pub trials: usize,
+    /// nvidia-smi polling cadence, seconds.
+    pub poll_period_s: f64,
+    /// Optional steady-state power correction.
+    pub correction: Option<PowerCorrection>,
+}
+
+impl Default for GoodPracticeConfig {
+    fn default() -> Self {
+        GoodPracticeConfig {
+            min_reps: 32,
+            min_runtime_s: 5.0,
+            shifts: 8,
+            trials: 4,
+            poll_period_s: 0.02,
+            correction: None,
+        }
+    }
+}
+
+/// Aggregated outcome across trials.
+#[derive(Debug, Clone)]
+pub struct GoodPracticeResult {
+    /// Per-trial percentage error vs the PMD.
+    pub trial_pct_errors: Vec<f64>,
+    /// Mean percentage error.
+    pub mean_pct_error: f64,
+    /// Std-dev of the per-trial errors.
+    pub std_pct_error: f64,
+    /// Mean measured power over the analysis window, watts.
+    pub mean_power_w: f64,
+    /// Energy for one iteration of the program, joules.
+    pub energy_per_iteration_j: f64,
+    /// Iterations actually used per trial.
+    pub reps: usize,
+    /// Whether phase shifts were applied.
+    pub shifted: bool,
+}
+
+/// Run the full §5.1 procedure for `load` on `rig`.
+///
+/// `sensor` carries only the knowledge the micro-benchmarks provide
+/// (update period, window, rise time) — the procedure never touches the
+/// simulator's hidden profile.
+pub fn measure_good_practice<L: RepeatableLoad>(
+    rig: &MeasurementRig,
+    load: &L,
+    sensor: &SensorCharacterization,
+    cfg: &GoodPracticeConfig,
+) -> GoodPracticeResult {
+    // Step 1: repetitions to cover both floors.
+    let iter_s = load.iteration_s();
+    let reps = cfg.min_reps.max((cfg.min_runtime_s / iter_s).ceil() as usize);
+    let (reps_per_shift, shift_s, shifted) = if sensor.has_data_loss() && cfg.shifts > 0 {
+        ((reps / cfg.shifts).max(1), sensor.window_s, true)
+    } else {
+        (0, 0.0, false)
+    };
+
+    let mut rng = Rng::new(rig.seed ^ 0x60D0);
+    let mut trial_errors = Vec::with_capacity(cfg.trials);
+    let mut powers = Vec::with_capacity(cfg.trials);
+
+    for trial in 0..cfg.trials {
+        // Step 2: randomised alignment delay between trials.
+        let t_start = 0.5 + rng.uniform();
+        let activity = load.build(t_start, reps, reps_per_shift, shift_s);
+        let t_busy_end = activity.t_end();
+        let boot_seed = rig.seed ^ (trial as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
+        // synthesize/poll past the end so the shifted series still covers
+        // the analysis window even for a 1 s boxcar (Case 2)
+        let t_tail = sensor.window_s + 2.0 * sensor.update_s;
+        let cap = rig.capture(&activity, 0.0, t_busy_end + t_tail + 0.3, boot_seed);
+
+        let log = cap.smi.poll(
+            rig.field,
+            cfg.poll_period_s,
+            t_start - 2.0 * sensor.window_s.max(sensor.update_s),
+            t_busy_end + t_tail,
+        );
+
+        // Step 3a: shift readings earlier by the boxcar group delay (the
+        // reading at t is the mean over [t-w, t], i.e. activity centred
+        // w/2 prior).
+        let mut series = shift_earlier(&log.series, sensor.window_s / 2.0);
+        // Step 3b: optional steady-state correction.
+        if let Some(c) = &cfg.correction {
+            series = c.correct_series(&series);
+        }
+        // Step 3c: discard whole repetitions covering rise time + window ramp.
+        let settle_s = sensor.rise_s + sensor.window_s;
+        let discard_iters = (settle_s / iter_s).ceil();
+        let t_analysis_start = t_start + discard_iters * iter_s;
+
+        let p_smi = mean_power(&series, t_analysis_start, t_busy_end);
+        let p_truth = {
+            let prefix = cap.pmd_trace.prefix_sums();
+            let i0 = cap.pmd_trace.index_of(t_analysis_start);
+            let i1 = cap.pmd_trace.index_of(t_busy_end);
+            let n = (i1 - i0).max(1) as f64;
+            let base = if i0 == 0 { 0.0 } else { prefix[i0 - 1] };
+            (prefix[i1] - base) / n
+        };
+        trial_errors.push(pct_error(p_smi, p_truth));
+        powers.push(p_smi);
+    }
+
+    let mean_power_w = mean(&powers);
+    GoodPracticeResult {
+        mean_pct_error: mean(&trial_errors),
+        std_pct_error: std_dev(&trial_errors),
+        trial_pct_errors: trial_errors,
+        mean_power_w,
+        energy_per_iteration_j: mean_power_w * iter_s,
+        reps,
+        shifted,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::BenchmarkLoad;
+    use crate::sim::device::GpuDevice;
+    use crate::sim::profile::{find_model, DriverEpoch, PowerField};
+
+    fn rig(model: &str, driver: DriverEpoch, field: PowerField, seed: u64) -> MeasurementRig {
+        let device = GpuDevice::new(find_model(model).unwrap(), 0, seed);
+        MeasurementRig::new(device, driver, field, seed)
+    }
+
+    #[test]
+    fn case1_error_converges_to_steady_state_margin() {
+        // RTX 3090 instant (100/100): good practice error ≈ the card's
+        // steady-state tolerance, with sub-percent spread (Fig. 15).
+        let r = rig("RTX 3090", DriverEpoch::Post530, PowerField::Instant, 31);
+        let sensor = SensorCharacterization { update_s: 0.1, window_s: 0.1, rise_s: 0.25 };
+        let load = BenchmarkLoad::new(0.1, 1.0, 1);
+        let out = measure_good_practice(&r, &load, &sensor, &GoodPracticeConfig::default());
+        // error should be small and stable (tolerance is ±5%, plus the PMD's
+        // 3.3 V rail gap of ~+2-3%)
+        assert!(out.mean_pct_error.abs() < 10.0, "mean={:.2}%", out.mean_pct_error);
+        assert!(out.std_pct_error < 2.0, "std={:.2}%", out.std_pct_error);
+        assert!(!out.shifted);
+        assert_eq!(out.reps, 50); // 5 s / 0.1 s
+    }
+
+    #[test]
+    fn case3_shifts_are_applied_on_a100() {
+        let r = rig("A100 PCIe-40G", DriverEpoch::Post530, PowerField::Instant, 33);
+        let sensor = SensorCharacterization { update_s: 0.1, window_s: 0.025, rise_s: 0.1 };
+        let load = BenchmarkLoad::new(0.1, 1.0, 1);
+        let out = measure_good_practice(&r, &load, &sensor, &GoodPracticeConfig::default());
+        assert!(out.shifted, "25/100 must trigger controlled delays");
+        assert!(out.std_pct_error < 5.0, "shifts stabilise the error, std={:.2}", out.std_pct_error);
+    }
+
+    #[test]
+    fn correction_reduces_error_to_near_zero() {
+        // calibrate the correction from the card's actual tolerance and the
+        // PMD's rail gap, then expect sub-percent residual (§5.3)
+        let r = rig("RTX 3090", DriverEpoch::Post530, PowerField::Instant, 35);
+        let sensor = SensorCharacterization { update_s: 0.1, window_s: 0.1, rise_s: 0.25 };
+        let load = BenchmarkLoad::new(0.1, 1.0, 1);
+        let plain = measure_good_practice(&r, &load, &sensor, &GoodPracticeConfig::default());
+        // steady-state calibration: reported vs PMD at several levels
+        let mut ref_w = Vec::new();
+        let mut rep_w = Vec::new();
+        for (i, util) in [0.2, 0.4, 0.6, 0.8, 1.0].iter().enumerate() {
+            let act = crate::sim::ActivitySignal::burst(0.5, 3.0, *util);
+            let cap = r.capture(&act, 0.0, 4.0, 1000 + i as u64);
+            let p_pmd = cap.pmd_trace.window_mean(3.3, 1.0);
+            let p_smi = cap.smi.query(PowerField::Instant, 3.3).unwrap();
+            ref_w.push(p_pmd);
+            rep_w.push(p_smi);
+        }
+        let corr = PowerCorrection::from_steady_state(&ref_w, &rep_w);
+        let cfg = GoodPracticeConfig { correction: Some(corr), ..Default::default() };
+        let fixed = measure_good_practice(&r, &load, &sensor, &cfg);
+        assert!(
+            fixed.mean_pct_error.abs() < plain.mean_pct_error.abs(),
+            "correction must shrink error: {:.2}% -> {:.2}%",
+            plain.mean_pct_error,
+            fixed.mean_pct_error
+        );
+        assert!(fixed.mean_pct_error.abs() < 2.0, "residual {:.2}%", fixed.mean_pct_error);
+    }
+
+    #[test]
+    fn reps_respect_min_runtime() {
+        let r = rig("RTX 3090", DriverEpoch::Post530, PowerField::Instant, 36);
+        let sensor = SensorCharacterization { update_s: 0.1, window_s: 0.1, rise_s: 0.25 };
+        // 25 ms iterations: 5 s floor -> 200 reps
+        let load = BenchmarkLoad::new(0.025, 1.0, 1);
+        let cfg = GoodPracticeConfig { trials: 1, ..Default::default() };
+        let out = measure_good_practice(&r, &load, &sensor, &cfg);
+        assert_eq!(out.reps, 200);
+    }
+}

@@ -1,0 +1,128 @@
+//! The paper's contribution: energy measurement via nvidia-smi, done right.
+//!
+//! * [`naive`] — what the surveyed literature does: run the program once,
+//!   integrate whatever nvidia-smi reports over the kernel window (errors
+//!   up to ~70%, Fig. 18).
+//! * [`good_practice`] — the paper's §5.1 procedure: ≥32 repetitions or
+//!   ≥5 s, controlled phase-shift delays when the averaging window
+//!   undersamples, multiple randomised trials, rise-time discard, boxcar
+//!   latency shift, and the optional steady-state linear correction.
+//! * [`correction`] — the Fig. 8 gradient/offset inversion.
+//!
+//! The [`MeasurementRig`] owns the simulated card + instrument pairing and
+//! the [`SensorCharacterization`] describes what the micro-benchmarks
+//! learned about the sensor — the measurement procedures consume only
+//! those learned parameters, never the simulator's hidden ground truth.
+
+pub mod correction;
+pub mod energy;
+pub mod good_practice;
+pub mod naive;
+
+pub use correction::PowerCorrection;
+pub use good_practice::{GoodPracticeConfig, GoodPracticeResult};
+pub use naive::NaiveResult;
+
+use crate::pmd::Pmd;
+use crate::sim::activity::ActivitySignal;
+use crate::sim::device::GpuDevice;
+use crate::sim::profile::{DriverEpoch, PowerField};
+use crate::sim::trace::PowerTrace;
+use crate::smi::NvidiaSmi;
+
+/// A device + driver + instrument pairing for one measurement campaign.
+#[derive(Debug)]
+pub struct MeasurementRig {
+    pub device: GpuDevice,
+    pub driver: DriverEpoch,
+    pub field: PowerField,
+    pub pmd: Pmd,
+    /// Campaign seed (trial boot phases and alignment delays derive from it).
+    pub seed: u64,
+}
+
+/// One realised capture: ground truth + both instruments.
+#[derive(Debug)]
+pub struct Capture {
+    pub truth: PowerTrace,
+    pub smi: NvidiaSmi,
+    pub pmd_trace: PowerTrace,
+}
+
+impl MeasurementRig {
+    pub fn new(device: GpuDevice, driver: DriverEpoch, field: PowerField, seed: u64) -> Self {
+        let pmd = Pmd::new(seed ^ 0xBEEF);
+        MeasurementRig { device, driver, field, pmd, seed }
+    }
+
+    /// Run a workload (as an activity signal) on the simulated card and
+    /// capture both the nvidia-smi view and the PMD ground truth.
+    pub fn capture(&self, activity: &ActivitySignal, t0: f64, t1: f64, boot_seed: u64) -> Capture {
+        let truth = self.device.synthesize(activity, t0, t1);
+        let smi = NvidiaSmi::attach(self.device.clone(), self.driver, &truth, boot_seed);
+        let pmd_trace = self.pmd.measure(&self.device, &truth);
+        Capture { truth, smi, pmd_trace }
+    }
+}
+
+/// What the micro-benchmark characterisation learned about a sensor —
+/// the only knowledge the good-practice procedure is allowed to use.
+#[derive(Debug, Clone, Copy)]
+pub struct SensorCharacterization {
+    /// Power update period, seconds (Fig. 6 experiment).
+    pub update_s: f64,
+    /// Boxcar averaging window, seconds (Fig. 12 experiment).
+    pub window_s: f64,
+    /// Board power rise time, seconds (Fig. 7 experiment).
+    pub rise_s: f64,
+}
+
+impl SensorCharacterization {
+    /// True when the window undersamples the update period — the paper's
+    /// "data loss" condition requiring controlled phase shifts (Case 3).
+    pub fn has_data_loss(&self) -> bool {
+        self.window_s < 0.9 * self.update_s
+    }
+}
+
+/// A load that can be repeated N times with optional phase-shift delays —
+/// implemented by both the micro-benchmark square wave and the Table 2
+/// workload signatures.
+pub trait RepeatableLoad {
+    /// One iteration's duration, seconds.
+    fn iteration_s(&self) -> f64;
+    /// Name for reports.
+    fn name(&self) -> &str;
+    /// Build the activity for `reps` iterations starting at `t_start`,
+    /// inserting a `shift_s` pause after every `reps_per_shift` iterations
+    /// (0 = no shifts).
+    fn build(&self, t_start: f64, reps: usize, reps_per_shift: usize, shift_s: f64)
+        -> ActivitySignal;
+}
+
+impl RepeatableLoad for crate::bench::BenchmarkLoad {
+    fn iteration_s(&self) -> f64 {
+        self.period_s
+    }
+    fn name(&self) -> &str {
+        "benchmark_load"
+    }
+    fn build(&self, t_start: f64, reps: usize, reps_per_shift: usize, shift_s: f64) -> ActivitySignal {
+        let mut b = *self;
+        b.t_start = t_start;
+        b.cycles = reps;
+        b.activity_with_shifts(reps_per_shift, shift_s)
+    }
+}
+
+impl RepeatableLoad for crate::bench::Workload {
+    fn iteration_s(&self) -> f64 {
+        Self::iteration_s(self)
+    }
+    fn name(&self) -> &str {
+        self.name
+    }
+    fn build(&self, t_start: f64, reps: usize, reps_per_shift: usize, shift_s: f64) -> ActivitySignal {
+        self.activity_with_shifts(t_start, reps, reps_per_shift, shift_s)
+    }
+}

@@ -1,0 +1,99 @@
+//! The naive measurement: what most surveyed papers do (§2.6) — run the
+//! workload once, poll nvidia-smi, integrate over the kernel execution
+//! window, take the number as ground truth.
+
+use super::energy::mean_power;
+use super::{MeasurementRig, RepeatableLoad};
+use crate::estimator::stats::pct_error;
+
+/// Outcome of one naive measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct NaiveResult {
+    /// Energy nvidia-smi implies for the program, joules.
+    pub energy_j: f64,
+    /// PMD ground-truth energy over the same window, joules.
+    pub truth_j: f64,
+    /// Percentage error vs the PMD.
+    pub pct_error: f64,
+    /// Mean reported power over the window, watts.
+    pub mean_power_w: f64,
+}
+
+/// Measure one run of `load` naively: single execution, power integrated
+/// over exactly the kernel execution window, no corrections.
+pub fn measure_naive<L: RepeatableLoad>(
+    rig: &MeasurementRig,
+    load: &L,
+    poll_period_s: f64,
+    run_seed: u64,
+) -> NaiveResult {
+    // one repetition, started at an arbitrary (uncontrolled) time
+    let mut rng = crate::rng::Rng::new(rig.seed ^ run_seed);
+    let t_start = 0.5 + rng.uniform();
+    let activity = load.build(t_start, 1, 0, 0.0);
+    let t_end = activity.t_end();
+    let cap = rig.capture(&activity, 0.0, t_end + 0.5, rig.seed ^ run_seed ^ 0xB001);
+
+    let log = cap.smi.poll(rig.field, poll_period_s, t_start - poll_period_s, t_end + poll_period_s);
+    // integrate reported power over the kernel window, as-is
+    let p_smi = mean_power(&log.series, t_start, t_end);
+    let duration = t_end - t_start;
+    let energy_j = p_smi * duration;
+    let truth_j = cap.pmd_trace.energy_between(t_start, t_end);
+    NaiveResult {
+        energy_j,
+        truth_j,
+        pct_error: pct_error(energy_j, truth_j),
+        mean_power_w: p_smi,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::BenchmarkLoad;
+    use crate::sim::device::GpuDevice;
+    use crate::sim::profile::{find_model, DriverEpoch, PowerField};
+
+    #[test]
+    fn naive_single_run_has_substantial_error_on_a100() {
+        // Case 3 (25/100): a single 100 ms iteration leaves 75% unobserved,
+        // so across boot phases the naive error is large and random.
+        let device = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, 42);
+        let rig = MeasurementRig::new(device, DriverEpoch::Post530, PowerField::Instant, 1);
+        let load = BenchmarkLoad::new(0.1, 1.0, 1);
+        let mut errors = Vec::new();
+        for s in 0..12 {
+            let r = measure_naive(&rig, &load, 0.02, s);
+            errors.push(r.pct_error.abs());
+        }
+        let max = errors.iter().cloned().fold(0.0, f64::max);
+        assert!(max > 10.0, "naive A100 error should spike, max={max:.1}%");
+    }
+
+    #[test]
+    fn naive_reports_positive_energy() {
+        // V530 driver: 100 ms window, so a single 0.4 s run reads plausibly
+        let device = GpuDevice::new(find_model("RTX 3090").unwrap(), 0, 9);
+        let rig = MeasurementRig::new(device, DriverEpoch::V530, PowerField::Draw, 2);
+        let load = BenchmarkLoad::new(0.4, 1.0, 1);
+        let r = measure_naive(&rig, &load, 0.02, 3);
+        assert!(r.energy_j > 0.0 && r.truth_j > 0.0);
+        assert!(r.mean_power_w > 50.0);
+    }
+
+    #[test]
+    fn naive_underestimates_with_1s_average_window() {
+        // Case 2: 1 s averaging window on a short program -> the reading
+        // ramps up and the single-run integral underestimates badly.
+        let device = GpuDevice::new(find_model("RTX 3090").unwrap(), 0, 17);
+        let rig = MeasurementRig::new(device, DriverEpoch::Pre530, PowerField::Draw, 5);
+        let load = BenchmarkLoad::new(0.8, 1.0, 1); // 0.4 s busy
+        let mut mean_err = 0.0;
+        for s in 0..8 {
+            mean_err += measure_naive(&rig, &load, 0.02, 100 + s).pct_error;
+        }
+        mean_err /= 8.0;
+        assert!(mean_err < -20.0, "1 s window must underestimate, got {mean_err:.1}%");
+    }
+}

@@ -1,0 +1,250 @@
+//! PJRT artifact runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire request-path bridge: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`, one cached
+//! executable per entry point (compilation happens once, at load).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Static artifact geometry, mirrored from `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub nsize: usize,
+    pub block: usize,
+    pub trace_len: usize,
+    pub nq: usize,
+    pub ngrid: usize,
+    pub np: usize,
+}
+
+impl Manifest {
+    /// Parse the flat integer fields out of the manifest JSON. The file is
+    /// machine-generated with a fixed shape, so a targeted scan (no JSON
+    /// dependency in this offline environment) is sufficient and is covered
+    /// by the artifact integration tests.
+    pub fn parse(text: &str) -> Result<Self> {
+        let get = |key: &str| -> Result<usize> {
+            let pat = format!("\"{key}\":");
+            let at = text
+                .find(&pat)
+                .ok_or_else(|| anyhow!("manifest missing key '{key}'"))?;
+            let rest = &text[at + pat.len()..];
+            let digits: String =
+                rest.chars().skip_while(|c| c.is_whitespace()).take_while(|c| c.is_ascii_digit()).collect();
+            digits.parse::<usize>().with_context(|| format!("manifest key '{key}'"))
+        };
+        Ok(Manifest {
+            nsize: get("nsize")?,
+            block: get("block")?,
+            trace_len: get("trace_len")?,
+            nq: get("nq")?,
+            ngrid: get("ngrid")?,
+            np: get("np")?,
+        })
+    }
+}
+
+/// Loaded-and-compiled artifact bundle.
+pub struct ArtifactRuntime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+}
+
+impl std::fmt::Debug for ArtifactRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArtifactRuntime")
+            .field("dir", &self.dir)
+            .field("entries", &self.exes.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+/// Entry points in the artifact bundle.
+pub const ENTRIES: [&str; 4] =
+    ["fma_chain", "boxcar_emulate", "window_loss_grid", "energy_pipeline"];
+
+impl ArtifactRuntime {
+    /// Load every artifact from `dir` and compile it on the CPU PJRT client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::parse(
+            &std::fs::read_to_string(dir.join("manifest.json"))
+                .with_context(|| format!("reading {}/manifest.json — run `make artifacts`", dir.display()))?,
+        )?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for name in ENTRIES {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            exes.insert(name.to_string(), exe);
+        }
+        Ok(ArtifactRuntime { client, exes, manifest, dir })
+    }
+
+    /// Load from the conventional `artifacts/` directory next to the
+    /// workspace root (honours `GPUPOWER_ARTIFACTS` env override).
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("GPUPOWER_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn exe(&self, name: &str) -> &xla::PjRtLoadedExecutable {
+        &self.exes[name]
+    }
+
+    /// Execute the FMA-chain benchmark kernel (the paper's Listing 1 load)
+    /// and return (output vector, wall-clock execution time).
+    ///
+    /// Wall-clock is linear in `niter` (Fig. 5) — the coordinator regresses
+    /// this to calibrate the square-wave high state.
+    pub fn fma_chain(&self, niter: i32, x: &[f32]) -> Result<(Vec<f32>, Duration)> {
+        if x.len() != self.manifest.nsize {
+            return Err(anyhow!("fma_chain expects {} elements, got {}", self.manifest.nsize, x.len()));
+        }
+        let niter_l = xla::Literal::vec1(&[niter]);
+        let x_l = xla::Literal::vec1(x);
+        let start = Instant::now();
+        let result = self
+            .exe("fma_chain")
+            .execute::<xla::Literal>(&[niter_l, x_l])
+            .map_err(|e| anyhow!("fma_chain execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fma_chain readback: {e:?}"))?;
+        let elapsed = start.elapsed();
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("{e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        Ok((out, elapsed))
+    }
+
+    /// Emulate nvidia-smi readings from a ground-truth trace: trailing
+    /// `window` (in samples) mean at each of the `nq` sample indices.
+    pub fn boxcar_emulate(&self, trace: &[f32], window: i32, sample_idx: &[i32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        if trace.len() != m.trace_len || sample_idx.len() != m.nq {
+            return Err(anyhow!(
+                "boxcar_emulate expects trace[{}], idx[{}]; got {}/{}",
+                m.trace_len, m.nq, trace.len(), sample_idx.len()
+            ));
+        }
+        let result = self
+            .exe("boxcar_emulate")
+            .execute::<xla::Literal>(&[
+                xla::Literal::vec1(trace),
+                xla::Literal::vec1(&[window]),
+                xla::Literal::vec1(sample_idx),
+            ])
+            .map_err(|e| anyhow!("boxcar_emulate execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        result
+            .to_tuple1()
+            .map_err(|e| anyhow!("{e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Evaluate the shape-normalised MSE loss for `ngrid` candidate windows
+    /// in one fused XLA call (the Fig. 12 grid scan).
+    pub fn window_loss_grid(
+        &self,
+        trace: &[f32],
+        observed: &[f32],
+        sample_idx: &[i32],
+        windows: &[i32],
+    ) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        if trace.len() != m.trace_len
+            || observed.len() != m.nq
+            || sample_idx.len() != m.nq
+            || windows.len() != m.ngrid
+        {
+            return Err(anyhow!("window_loss_grid shape mismatch"));
+        }
+        let result = self
+            .exe("window_loss_grid")
+            .execute::<xla::Literal>(&[
+                xla::Literal::vec1(trace),
+                xla::Literal::vec1(observed),
+                xla::Literal::vec1(sample_idx),
+                xla::Literal::vec1(windows),
+            ])
+            .map_err(|e| anyhow!("window_loss_grid execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        result
+            .to_tuple1()
+            .map_err(|e| anyhow!("{e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Good-practice energy post-processing: trapezoidal integration with
+    /// rise-time discard and timestamp shift. Returns (joules, seconds).
+    pub fn energy_pipeline(
+        &self,
+        power: &[f32],
+        ts: &[f32],
+        valid: &[f32],
+        shift_s: f32,
+        discard_until_s: f32,
+    ) -> Result<(f64, f64)> {
+        let m = &self.manifest;
+        if power.len() != m.np || ts.len() != m.np || valid.len() != m.np {
+            return Err(anyhow!("energy_pipeline expects [{}] inputs", m.np));
+        }
+        let result = self
+            .exe("energy_pipeline")
+            .execute::<xla::Literal>(&[
+                xla::Literal::vec1(power),
+                xla::Literal::vec1(ts),
+                xla::Literal::vec1(valid),
+                xla::Literal::vec1(&[shift_s]),
+                xla::Literal::vec1(&[discard_until_s]),
+            ])
+            .map_err(|e| anyhow!("energy_pipeline execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let (e, d) = result.to_tuple2().map_err(|e| anyhow!("{e:?}"))?;
+        let e = e.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let d = d.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((e as f64, d as f64))
+    }
+
+    /// Pack a (t, W) series into the fixed-size energy-pipeline inputs.
+    pub fn pack_series(&self, series: &[(f64, f64)]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let np = self.manifest.np;
+        if series.len() > np {
+            return Err(anyhow!("series of {} exceeds pipeline capacity {}", series.len(), np));
+        }
+        let mut power = vec![0.0f32; np];
+        let mut ts = vec![0.0f32; np];
+        let mut valid = vec![0.0f32; np];
+        for (i, &(t, w)) in series.iter().enumerate() {
+            ts[i] = t as f32;
+            power[i] = w as f32;
+            valid[i] = 1.0;
+        }
+        Ok((power, ts, valid))
+    }
+}

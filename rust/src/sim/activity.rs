@@ -1,0 +1,165 @@
+//! GPU activity signals: what the device is asked to compute, over time.
+//!
+//! The benchmark load (paper §3.4) and the real-workload suite (Table 2) both
+//! reduce to a piecewise-constant utilisation signal: at each instant some
+//! fraction of the SMs is busy. The device model (device.rs) turns this into
+//! electrical power.
+
+/// One contiguous interval of constant utilisation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segment {
+    /// Start time, seconds.
+    pub t0: f64,
+    /// End time, seconds (exclusive).
+    pub t1: f64,
+    /// Fraction of SMs active, 0..=1 (the paper's `PERCENT` knob).
+    pub util: f64,
+}
+
+/// Piecewise-constant activity signal; gaps between segments are idle.
+#[derive(Debug, Clone, Default)]
+pub struct ActivitySignal {
+    /// Segments sorted by start time, non-overlapping.
+    pub segments: Vec<Segment>,
+}
+
+impl ActivitySignal {
+    /// Empty (always idle) signal.
+    pub fn idle() -> Self {
+        Self::default()
+    }
+
+    /// A single constant-utilisation burst.
+    pub fn burst(t0: f64, duration: f64, util: f64) -> Self {
+        ActivitySignal { segments: vec![Segment { t0, t1: t0 + duration, util }] }
+    }
+
+    /// The paper's square-wave benchmark load: `cycles` periods of
+    /// `period_s`, each `duty` fraction at `util`, the rest asleep
+    /// (`usleep` in Listing 1).
+    pub fn square_wave(t_start: f64, period_s: f64, duty: f64, util: f64, cycles: usize) -> Self {
+        let mut segments = Vec::with_capacity(cycles);
+        for k in 0..cycles {
+            let t0 = t_start + k as f64 * period_s;
+            segments.push(Segment { t0, t1: t0 + period_s * duty, util });
+        }
+        ActivitySignal { segments }
+    }
+
+    /// Append another signal's segments (must start after our last one).
+    pub fn extend(&mut self, other: &ActivitySignal) {
+        if let (Some(last), Some(first)) = (self.segments.last(), other.segments.first()) {
+            assert!(first.t0 >= last.t1 - 1e-12, "segments must be appended in order");
+        }
+        self.segments.extend_from_slice(&other.segments);
+    }
+
+    /// Append a burst at the end.
+    pub fn push(&mut self, t0: f64, duration: f64, util: f64) {
+        if let Some(last) = self.segments.last() {
+            assert!(t0 >= last.t1 - 1e-12, "segments must be appended in order");
+        }
+        self.segments.push(Segment { t0, t1: t0 + duration, util });
+    }
+
+    /// Utilisation at time `t` (binary search).
+    pub fn util_at(&self, t: f64) -> f64 {
+        // binary search on t0
+        let mut lo = 0usize;
+        let mut hi = self.segments.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.segments[mid].t0 <= t {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        if lo == 0 {
+            return 0.0;
+        }
+        let seg = &self.segments[lo - 1];
+        if t < seg.t1 {
+            seg.util
+        } else {
+            0.0
+        }
+    }
+
+    /// Earliest segment start, or 0.
+    pub fn t_start(&self) -> f64 {
+        self.segments.first().map_or(0.0, |s| s.t0)
+    }
+
+    /// Latest segment end, or 0.
+    pub fn t_end(&self) -> f64 {
+        self.segments.last().map_or(0.0, |s| s.t1)
+    }
+
+    /// Total busy time, seconds.
+    pub fn busy_time(&self) -> f64 {
+        self.segments.iter().map(|s| s.t1 - s.t0).sum()
+    }
+
+    /// Intervals during which the device is busy (for the naive measurement
+    /// window: "integrate power over the kernel execution period").
+    pub fn busy_intervals(&self) -> Vec<(f64, f64)> {
+        self.segments.iter().map(|s| (s.t0, s.t1)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_wave_shape() {
+        let a = ActivitySignal::square_wave(1.0, 0.1, 0.5, 0.8, 3);
+        assert_eq!(a.segments.len(), 3);
+        assert_eq!(a.util_at(1.01), 0.8);
+        assert_eq!(a.util_at(1.06), 0.0); // sleep half
+        assert_eq!(a.util_at(1.11), 0.8); // second cycle
+        assert_eq!(a.util_at(0.5), 0.0); // before start
+        assert_eq!(a.util_at(5.0), 0.0); // after end
+    }
+
+    #[test]
+    fn burst_bounds() {
+        let a = ActivitySignal::burst(2.0, 0.5, 1.0);
+        assert_eq!(a.t_start(), 2.0);
+        assert_eq!(a.t_end(), 2.5);
+        assert!((a.busy_time() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn util_at_segment_edges() {
+        let a = ActivitySignal::burst(1.0, 1.0, 0.6);
+        assert_eq!(a.util_at(1.0), 0.6); // inclusive start
+        assert_eq!(a.util_at(2.0), 0.0); // exclusive end
+    }
+
+    #[test]
+    fn push_maintains_order() {
+        let mut a = ActivitySignal::idle();
+        a.push(0.0, 1.0, 0.5);
+        a.push(2.0, 1.0, 0.7);
+        assert_eq!(a.util_at(2.5), 0.7);
+        assert_eq!(a.util_at(1.5), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_out_of_order_panics() {
+        let mut a = ActivitySignal::burst(5.0, 1.0, 0.5);
+        a.push(0.0, 1.0, 0.5);
+    }
+
+    #[test]
+    fn busy_intervals_roundtrip() {
+        let a = ActivitySignal::square_wave(0.0, 0.2, 0.25, 1.0, 2);
+        let iv = a.busy_intervals();
+        assert_eq!(iv.len(), 2);
+        assert!((iv[0].1 - 0.05).abs() < 1e-12);
+        assert!((iv[1].0 - 0.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,319 @@
+//! The physical GPU card model: activity → electrical board power.
+//!
+//! Converts an [`ActivitySignal`] into a ground-truth [`PowerTrace`] at
+//! [`TRUE_HZ`], modelling:
+//!   * idle pstates (low idle after ≥1 s of no activity, elevated idle
+//!     around kernels — the Fig. 8 "Idle cluster is further away since it's
+//!     on a lower GPU pstate" effect),
+//!   * utilisation → power amplitude (the SM-fraction knob, Fig. 8's seven
+//!     clusters),
+//!   * first-order board rise/fall dynamics (Fig. 7 case 1 vs case 2),
+//!   * the software power limit (Fig. 8's 420 W cap),
+//!   * measurement-independent electrical noise,
+//! and the per-card *component tolerance* that makes every physical card's
+//! on-board sensor read `gradient·P + offset` (Fig. 9).
+
+use super::activity::ActivitySignal;
+use super::profile::GpuModel;
+use super::trace::{PowerTrace, TRUE_HZ};
+use crate::rng::Rng;
+
+/// Per-card randomness: the shunt-resistor tolerance shows up as a linear
+/// transform on the *reported* power (paper §4.2 "Steady State Error").
+#[derive(Debug, Clone, Copy)]
+pub struct CardTolerance {
+    /// Multiplicative sensor error, ≈ N(1, 0.025) clamped to ±5%.
+    pub gradient: f64,
+    /// Additive sensor error, watts, ≈ N(0, 3).
+    pub offset_w: f64,
+}
+
+impl CardTolerance {
+    /// Draw a card's tolerance from the component distribution.
+    pub fn draw(rng: &mut Rng) -> Self {
+        CardTolerance {
+            gradient: rng.normal_clamped(1.0, 0.022, 0.05),
+            offset_w: rng.normal_clamped(0.0, 3.0, 8.0),
+        }
+    }
+
+    /// Apply the sensor error to a true power value.
+    #[inline]
+    pub fn apply(&self, true_w: f64) -> f64 {
+        self.gradient * true_w + self.offset_w
+    }
+
+    /// Invert the error (the paper's final correction step, §5.3).
+    #[inline]
+    pub fn invert(&self, reported_w: f64) -> f64 {
+        (reported_w - self.offset_w) / self.gradient
+    }
+}
+
+/// A concrete simulated card: a model plus this card's manufacturing draw.
+#[derive(Debug, Clone)]
+pub struct GpuDevice {
+    pub model: &'static GpuModel,
+    pub tolerance: CardTolerance,
+    /// Seed for this card's noise streams (deterministic per card).
+    pub seed: u64,
+    /// Serial tag (distinguishes cards of the same model).
+    pub serial: u32,
+}
+
+impl GpuDevice {
+    /// Create card `serial` of `model`, deriving tolerance from `fleet_seed`.
+    pub fn new(model: &'static GpuModel, serial: u32, fleet_seed: u64) -> Self {
+        let mut rng = Rng::new(fleet_seed ^ (serial as u64).wrapping_mul(0x5851_F42D_4C95_7F2D));
+        // mix in the model name so different models under one seed differ
+        for b in model.name.bytes() {
+            rng = rng.fork(b as u64);
+        }
+        let tolerance = CardTolerance::draw(&mut rng);
+        let seed = rng.next_u64();
+        GpuDevice { model, tolerance, seed, serial }
+    }
+
+    /// Elevated idle power while the driver holds a high pstate.
+    fn active_idle_w(&self) -> f64 {
+        self.model.idle_w * 1.9 + 4.0
+    }
+
+    /// Steady-state electrical power for a utilisation level.
+    ///
+    /// Slightly sub-linear in `util` (shared uncore/HBM power), which
+    /// produces Fig. 8's pattern: middle clusters equally spaced, the 100%
+    /// cluster pulled in by the power limit.
+    pub fn steady_power_w(&self, util: f64) -> f64 {
+        if util <= 0.0 {
+            return self.model.idle_w;
+        }
+        // an all-SM FMA chain can push the board past its TDP into the
+        // software power limit (Fig. 8: the 3090's 100% cluster compresses
+        // against the 420 W cap)
+        let dynamic = (self.model.tdp_w * 1.25 - self.active_idle_w()) * util.powf(0.93);
+        (self.active_idle_w() + dynamic).min(self.model.power_limit_w)
+    }
+
+    /// Synthesize the ground-truth board power trace for an activity signal
+    /// over `[t0, t1)` at [`TRUE_HZ`].
+    ///
+    /// This is the simulator's hot path: one first-order filter pass over
+    /// `(t1-t0) * 10_000` samples, no allocation beyond the output.
+    pub fn synthesize(&self, activity: &ActivitySignal, t0: f64, t1: f64) -> PowerTrace {
+        let n = ((t1 - t0) * TRUE_HZ).round() as usize;
+        let dt = 1.0 / TRUE_HZ;
+        let mut rng = Rng::new(self.seed);
+        let mut samples = Vec::with_capacity(n);
+
+        // Two-pole dynamics: switching power slews fast (clocks gate within
+        // milliseconds — the PMD sees clean square waves, Fig. 10), while a
+        // slower thermal/DVFS component carries the last ~25% of the swing
+        // and sets the model-specific 10→90% rise time (Fig. 7 case 2).
+        let w_slow = self.model.ramp_frac;
+        let w_fast = 1.0 - w_slow;
+        let tau_fast = 0.006;
+        // With the fast pole settled, the 90% crossing is set by the slow
+        // pole: t90 ≈ τs·ln(w_slow/0.1) when the ramp carries >10% of the
+        // swing (Fig. 7 case-2 boards). Boards with ramp_frac ≤ 0.1 slew
+        // essentially instantly (clean Fig. 10 squares) and τs only shapes
+        // a small settle tail.
+        let tau_slow = if w_slow > 0.1 {
+            (self.model.rise_ms / 1000.0) / (w_slow / 0.1f64).ln()
+        } else {
+            (self.model.rise_ms / 1000.0).max(0.02)
+        };
+        let tau_fall_fast = 0.004;
+        let tau_fall_slow = 0.060;
+
+        // pstate bookkeeping: drop to low idle after 1 s of inactivity
+        let mut last_active = f64::NEG_INFINITY;
+        let mut p_fast = self.model.idle_w * w_fast; // fast pole state
+        let mut p_slow = self.model.idle_w * w_slow; // slow pole state
+
+        // Hot-path state (EXPERIMENTS.md §Perf): time is monotonic, so a
+        // segment cursor replaces the per-sample binary search, and the
+        // steady-power target (a powf) is recomputed only when the
+        // (utilisation, pstate) state actually changes.
+        let segs = &activity.segments;
+        let mut cursor = 0usize;
+        let mut cached_util = f64::NAN;
+        let mut cached_pstate = false;
+        let mut target = self.model.idle_w;
+        for i in 0..n {
+            let t = t0 + i as f64 * dt;
+            while cursor < segs.len() && t >= segs[cursor].t1 {
+                cursor += 1;
+            }
+            let util = if cursor < segs.len() && t >= segs[cursor].t0 {
+                segs[cursor].util
+            } else {
+                0.0
+            };
+            if util > 0.0 {
+                last_active = t;
+            }
+            let high_pstate = t - last_active < 1.0;
+            if util != cached_util || high_pstate != cached_pstate {
+                cached_util = util;
+                cached_pstate = high_pstate;
+                target = if util > 0.0 {
+                    self.steady_power_w(util)
+                } else if high_pstate {
+                    self.active_idle_w()
+                } else {
+                    self.model.idle_w
+                };
+            }
+            let (tf, ts) = if target * w_fast > p_fast {
+                (tau_fast, tau_slow)
+            } else {
+                (tau_fall_fast, tau_fall_slow)
+            };
+            p_fast += (target * w_fast - p_fast) * (dt / tf).min(1.0);
+            p_slow += (target * w_slow - p_slow) * (dt / ts).min(1.0);
+            let p = p_fast + p_slow;
+            let noise = rng.normal_fast_ms(0.0, 0.4 + 0.004 * p);
+            let sample = (p + noise).clamp(0.0, self.model.power_limit_w * 1.02);
+            samples.push(sample as f32);
+        }
+        PowerTrace::from_samples(TRUE_HZ, t0, samples)
+    }
+
+    /// Power drawn through the 3.3 V PCIe slot rail (not captured by the
+    /// PMD riser — up to 10 W of systematic PMD underestimate, §3.2).
+    pub fn rail_3v3_w(&self, total_w: f64) -> f64 {
+        (0.035 * total_w).min(10.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::profile::find_model;
+
+    fn dev(name: &str) -> GpuDevice {
+        GpuDevice::new(find_model(name).unwrap(), 0, 1234)
+    }
+
+    #[test]
+    fn tolerance_within_bounds() {
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let t = CardTolerance::draw(&mut rng);
+            assert!((0.95..=1.05).contains(&t.gradient));
+            assert!(t.offset_w.abs() <= 8.0);
+        }
+    }
+
+    #[test]
+    fn tolerance_invert_roundtrip() {
+        let t = CardTolerance { gradient: 0.97, offset_w: 2.5 };
+        let p = 234.5;
+        assert!((t.invert(t.apply(p)) - p).abs() < 1e-9);
+    }
+
+    #[test]
+    fn same_serial_same_tolerance() {
+        let a = dev("RTX 3090");
+        let b = dev("RTX 3090");
+        assert_eq!(a.tolerance.gradient, b.tolerance.gradient);
+    }
+
+    #[test]
+    fn different_serials_differ() {
+        let m = find_model("RTX 3090").unwrap();
+        let a = GpuDevice::new(m, 0, 1234);
+        let b = GpuDevice::new(m, 1, 1234);
+        assert_ne!(a.tolerance.gradient, b.tolerance.gradient);
+    }
+
+    #[test]
+    fn steady_power_monotonic_and_capped() {
+        let d = dev("RTX 3090");
+        let mut prev = 0.0;
+        for i in 0..=10 {
+            let u = i as f64 / 10.0;
+            let p = d.steady_power_w(u);
+            assert!(p >= prev, "monotonic at u={u}");
+            assert!(p <= d.model.power_limit_w);
+            prev = p;
+        }
+        assert!(d.steady_power_w(1.0) > 300.0);
+    }
+
+    #[test]
+    fn synthesize_idle_is_near_idle_power() {
+        let d = dev("A100 PCIe-40G");
+        let trace = d.synthesize(&ActivitySignal::idle(), 0.0, 2.0);
+        assert_eq!(trace.len(), 20_000);
+        let m = trace.mean_w();
+        assert!((m - d.model.idle_w).abs() < 3.0, "mean={m}");
+    }
+
+    #[test]
+    fn synthesize_burst_reaches_steady_state() {
+        let d = dev("A100 PCIe-40G");
+        let act = ActivitySignal::burst(0.5, 2.0, 1.0);
+        let trace = d.synthesize(&act, 0.0, 3.0);
+        let steady = trace.window_mean(2.4, 0.2);
+        let want = d.steady_power_w(1.0);
+        assert!((steady - want).abs() < want * 0.03, "steady={steady} want={want}");
+    }
+
+    #[test]
+    fn rise_time_scales_with_model() {
+        // RTX 3090 (250 ms) must take visibly longer to rise than V100 (60 ms)
+        let act = ActivitySignal::burst(0.1, 3.0, 1.0);
+        let rise_of = |name: &str| {
+            let d = dev(name);
+            let trace = d.synthesize(&act, 0.0, 3.0);
+            let p_max = d.steady_power_w(1.0);
+            let p10 = d.model.idle_w + 0.1 * (p_max - d.model.idle_w);
+            let p90 = d.model.idle_w + 0.9 * (p_max - d.model.idle_w);
+            let mut t10 = None;
+            let mut t90 = None;
+            for i in 0..trace.len() {
+                let p = trace.samples[i] as f64;
+                if t10.is_none() && p >= p10 {
+                    t10 = Some(trace.time_of(i));
+                }
+                if t90.is_none() && p >= p90 {
+                    t90 = Some(trace.time_of(i));
+                    break;
+                }
+            }
+            t90.unwrap() - t10.unwrap()
+        };
+        let slow = rise_of("RTX 3090");
+        let fast = rise_of("V100 PCIe-16G");
+        assert!(slow > 2.0 * fast, "slow={slow} fast={fast}");
+        assert!((slow - 0.25).abs() < 0.1, "3090 rise ≈ 250 ms, got {slow}");
+    }
+
+    #[test]
+    fn power_limit_respected() {
+        let d = dev("RTX 3090");
+        let act = ActivitySignal::burst(0.0, 2.0, 1.0);
+        let trace = d.synthesize(&act, 0.0, 2.0);
+        let max = trace.samples.iter().cloned().fold(f32::MIN, f32::max) as f64;
+        assert!(max <= d.model.power_limit_w * 1.02 + 1e-6);
+    }
+
+    #[test]
+    fn pstate_drop_after_one_second_idle() {
+        let d = dev("RTX 3090");
+        let act = ActivitySignal::burst(0.0, 0.5, 1.0);
+        let trace = d.synthesize(&act, 0.0, 4.0);
+        let just_after = trace.window_mean(1.3, 0.1); // high pstate idle
+        let much_later = trace.window_mean(3.9, 0.1); // low pstate idle
+        assert!(just_after > much_later + 5.0, "pstates: {just_after} vs {much_later}");
+    }
+
+    #[test]
+    fn rail_3v3_capped_at_10w() {
+        let d = dev("RTX 3090");
+        assert!(d.rail_3v3_w(400.0) <= 10.0);
+        assert!(d.rail_3v3_w(50.0) > 1.0);
+    }
+}

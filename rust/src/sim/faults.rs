@@ -1,0 +1,101 @@
+//! Fault injection for the measurement path: things that go wrong in real
+//! telemetry collection and that the good practice must survive.
+//!
+//! * **Sample dropout** — the polling process gets descheduled and misses
+//!   queries (common under load on a busy host);
+//! * **Driver restart** — the sensor's boot phase changes mid-campaign
+//!   (nvidia-smi's averaging start time is unobservable, §4.3, and a
+//!   restart re-randomises it);
+//! * **Stuck reading** — the value stops updating for a stretch (observed
+//!   in the wild on passively-cooled cards under thermal throttling).
+
+use crate::rng::Rng;
+use crate::sim::trace::SampleSeries;
+
+/// Drop each sample independently with probability `p`.
+pub fn drop_samples(series: &SampleSeries, p: f64, seed: u64) -> SampleSeries {
+    let mut rng = Rng::new(seed ^ 0xD80);
+    SampleSeries {
+        points: series.points.iter().copied().filter(|_| rng.uniform() >= p).collect(),
+    }
+}
+
+/// Remove a contiguous outage of `duration_s` starting at `t_start`.
+pub fn outage(series: &SampleSeries, t_start: f64, duration_s: f64) -> SampleSeries {
+    SampleSeries {
+        points: series
+            .points
+            .iter()
+            .copied()
+            .filter(|(t, _)| *t < t_start || *t >= t_start + duration_s)
+            .collect(),
+    }
+}
+
+/// Hold the last value for `duration_s` starting at `t_start` (stuck sensor).
+pub fn stick_readings(series: &SampleSeries, t_start: f64, duration_s: f64) -> SampleSeries {
+    let mut held: Option<f64> = None;
+    SampleSeries {
+        points: series
+            .points
+            .iter()
+            .map(|&(t, w)| {
+                if t >= t_start && t < t_start + duration_s {
+                    let v = *held.get_or_insert(w);
+                    (t, v)
+                } else {
+                    (t, w)
+                }
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::measure::energy::mean_power;
+
+    fn series() -> SampleSeries {
+        SampleSeries { points: (0..1000).map(|i| (i as f64 * 0.01, 200.0 + (i % 10) as f64)).collect() }
+    }
+
+    #[test]
+    fn dropout_keeps_roughly_expected_fraction() {
+        let s = drop_samples(&series(), 0.3, 1);
+        let frac = s.points.len() as f64 / 1000.0;
+        assert!((frac - 0.7).abs() < 0.06, "kept {frac}");
+    }
+
+    #[test]
+    fn dropout_preserves_mean_power() {
+        // trapezoidal mean over a slowly-varying signal survives 30% dropout
+        let clean = mean_power(&series(), 1.0, 9.0);
+        let lossy = mean_power(&drop_samples(&series(), 0.3, 2), 1.0, 9.0);
+        assert!((clean - lossy).abs() / clean < 0.01, "{clean} vs {lossy}");
+    }
+
+    #[test]
+    fn outage_removes_interval() {
+        let s = outage(&series(), 2.0, 1.0);
+        assert!(s.points.iter().all(|(t, _)| *t < 2.0 || *t >= 3.0));
+        assert_eq!(s.points.len(), 900);
+    }
+
+    #[test]
+    fn stuck_readings_hold_value() {
+        let s = stick_readings(&series(), 5.0, 0.5);
+        let stuck: Vec<f64> =
+            s.points.iter().filter(|(t, _)| (5.0..5.5).contains(t)).map(|(_, w)| *w).collect();
+        assert!(stuck.windows(2).all(|w| w[0] == w[1]));
+        assert_eq!(stuck.len(), 50);
+    }
+
+    #[test]
+    fn empty_series_safe() {
+        let empty = SampleSeries::default();
+        assert!(drop_samples(&empty, 0.5, 1).points.is_empty());
+        assert!(outage(&empty, 0.0, 1.0).points.is_empty());
+        assert!(stick_readings(&empty, 0.0, 1.0).points.is_empty());
+    }
+}

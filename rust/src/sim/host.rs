@@ -1,0 +1,145 @@
+//! Multi-GPU host model: one `nvidia-smi` process polling several cards.
+//!
+//! The paper tested "same card in different host machines" and DGX-class
+//! boxes (8×V100, §7). On a real host, one poller queries the GPUs
+//! *serially* — each NVML query costs a few milliseconds — so on an 8-GPU
+//! machine the effective per-GPU cadence is the requested period plus
+//! 8×(query latency), and the GPUs are sampled at staggered phases. This
+//! module models that and exposes the distortion so campaigns can budget
+//! their polling.
+
+use crate::rng::Rng;
+use crate::sim::device::GpuDevice;
+use crate::sim::profile::{DriverEpoch, PowerField};
+use crate::sim::trace::{PowerTrace, SampleSeries};
+use crate::smi::NvidiaSmi;
+
+/// A host with several GPUs and one serial poller.
+#[derive(Debug)]
+pub struct Host {
+    pub smis: Vec<NvidiaSmi>,
+    /// Per-query latency of one NVML call, seconds (~2-5 ms in practice).
+    pub query_latency_s: f64,
+    seed: u64,
+}
+
+impl Host {
+    /// Attach `devices` to captures of the same activity window.
+    pub fn attach(
+        devices: Vec<GpuDevice>,
+        driver: DriverEpoch,
+        truths: &[PowerTrace],
+        query_latency_s: f64,
+        seed: u64,
+    ) -> Self {
+        assert_eq!(devices.len(), truths.len());
+        let smis = devices
+            .into_iter()
+            .zip(truths)
+            .enumerate()
+            .map(|(i, (d, t))| NvidiaSmi::attach(d, driver, t, seed ^ (i as u64 + 1) * 0x9E37))
+            .collect();
+        Host { smis, query_latency_s, seed }
+    }
+
+    /// Number of GPUs.
+    pub fn len(&self) -> usize {
+        self.smis.len()
+    }
+
+    /// True if no GPUs.
+    pub fn is_empty(&self) -> bool {
+        self.smis.is_empty()
+    }
+
+    /// Poll every GPU serially at a requested cadence: each sweep visits
+    /// GPU 0..n in order, paying `query_latency_s` per query; the next
+    /// sweep starts `period_s` after the previous sweep *began*, or
+    /// immediately if the sweep overran the period (the real `-lms`
+    /// behaviour). Returns one series per GPU.
+    pub fn poll_all(&self, field: PowerField, period_s: f64, t0: f64, t1: f64) -> Vec<SampleSeries> {
+        let mut rng = Rng::new(self.seed ^ 0x4057);
+        let mut out: Vec<SampleSeries> = (0..self.len()).map(|_| SampleSeries::default()).collect();
+        let mut sweep_start = t0;
+        while sweep_start < t1 {
+            let mut t = sweep_start;
+            for (i, smi) in self.smis.iter().enumerate() {
+                let jitter = rng.normal_fast_ms(0.0, self.query_latency_s * 0.1);
+                t += (self.query_latency_s + jitter).max(self.query_latency_s * 0.5);
+                if t >= t1 {
+                    break;
+                }
+                if let Some(w) = smi.query(field, t) {
+                    out[i].points.push((t, w));
+                }
+            }
+            // next sweep: period from sweep start, or back-to-back if overrun
+            sweep_start = if t - sweep_start >= period_s { t } else { sweep_start + period_s };
+        }
+        out
+    }
+
+    /// Effective per-GPU polling period (what a sweep actually achieves).
+    pub fn effective_period_s(&self, requested_s: f64) -> f64 {
+        requested_s.max(self.len() as f64 * self.query_latency_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::activity::ActivitySignal;
+    use crate::sim::profile::find_model;
+
+    fn host(n: usize, latency: f64) -> Host {
+        let act = ActivitySignal::square_wave(0.3, 0.05, 0.5, 1.0, 80);
+        let model = find_model("V100 PCIe").unwrap();
+        let devices: Vec<GpuDevice> = (0..n).map(|i| GpuDevice::new(model, i as u32, 50)).collect();
+        let truths: Vec<PowerTrace> =
+            devices.iter().map(|d| d.synthesize(&act, 0.0, 5.0)).collect();
+        Host::attach(devices, DriverEpoch::Pre530, &truths, latency, 51)
+    }
+
+    #[test]
+    fn all_gpus_get_samples() {
+        let h = host(4, 0.003);
+        let series = h.poll_all(PowerField::Draw, 0.05, 0.2, 4.8);
+        assert_eq!(series.len(), 4);
+        for s in &series {
+            assert!(s.points.len() > 50, "{}", s.points.len());
+        }
+    }
+
+    #[test]
+    fn gpus_sampled_at_staggered_phases() {
+        let h = host(4, 0.003);
+        let series = h.poll_all(PowerField::Draw, 0.05, 0.2, 4.8);
+        // GPU k's samples trail GPU 0's by ~k x latency within each sweep
+        let d01 = series[1].points[0].0 - series[0].points[0].0;
+        assert!(d01 > 0.001 && d01 < 0.01, "stagger {d01}");
+    }
+
+    #[test]
+    fn many_gpus_degrade_effective_cadence() {
+        // 8 GPUs at 4 ms latency: a 10 ms requested period is impossible
+        let h = host(8, 0.004);
+        assert!((h.effective_period_s(0.010) - 0.032).abs() < 1e-9);
+        let series = h.poll_all(PowerField::Draw, 0.010, 0.2, 4.8);
+        let gaps: Vec<f64> = series[0].points.windows(2).map(|w| w[1].0 - w[0].0).collect();
+        let med = {
+            let mut g = gaps.clone();
+            g.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            g[g.len() / 2]
+        };
+        assert!(med > 0.025, "overrun sweeps: median gap {med}");
+    }
+
+    #[test]
+    fn single_gpu_matches_requested_period() {
+        let h = host(1, 0.002);
+        let series = h.poll_all(PowerField::Draw, 0.05, 0.2, 4.8);
+        let n = series[0].points.len();
+        // ~ (4.6 s / 50 ms) sweeps
+        assert!((80..=95).contains(&n), "{n}");
+    }
+}

@@ -1,0 +1,31 @@
+//! The GPU power-behaviour simulator: the substrate that replaces the
+//! paper's 70+ physical GPUs (DESIGN.md §2).
+//!
+//! Layering:
+//! ```text
+//!   ActivitySignal  (what the workload asks of the GPU)
+//!        │  device.rs: pstates, amplitude, rise dynamics, power limit, noise
+//!        ▼
+//!   PowerTrace      (ground-truth board power @ 10 kHz)
+//!        ├─ sensor.rs: boxcar/RC/estimation pipeline → nvidia-smi readings
+//!        └─ pmd (crate::pmd): 5 kHz ADC-quantised external meter
+//! ```
+
+pub mod activity;
+pub mod device;
+pub mod faults;
+pub mod host;
+pub mod profile;
+pub mod sensor;
+pub mod superchip;
+pub mod trace;
+
+pub use activity::{ActivitySignal, Segment};
+pub use device::{CardTolerance, GpuDevice};
+pub use profile::{
+    find_model, sensor_pipeline, total_cards, DriverEpoch, FormFactor, Generation, GpuModel,
+    PipelineKind, PipelineSpec, PowerField, ProductLine, CATALOGUE,
+};
+pub use sensor::{run_pipeline, Reading, SensorStream};
+pub use superchip::{CpuDomain, Superchip, SuperchipCapture};
+pub use trace::{PowerTrace, SampleSeries, TRUE_HZ};

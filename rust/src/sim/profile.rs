@@ -1,0 +1,422 @@
+//! Ground-truth sensor-pipeline profiles and the GPU catalogue (Table 1).
+//!
+//! This module encodes the paper's Fig. 14 matrix — for every architecture
+//! generation and driver epoch, what each nvidia-smi power field actually
+//! computes (update period, boxcar window, or RC-filter distortion) — plus
+//! the physical catalogue of tested models. The experiments in
+//! `experiments/` must *re-discover* these parameters from the emulated
+//! sensor outputs alone, which is how we validate the paper's methodology.
+
+/// NVIDIA architecture generations with distinct sensor behaviour (Fig. 14).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Generation {
+    Fermi1,
+    Fermi2,
+    Kepler1,
+    Kepler2,
+    Maxwell1,
+    Maxwell2,
+    Pascal,
+    Volta,
+    Turing,
+    /// GA100 die (A100): 25 ms window on every driver.
+    AmpereGa100,
+    /// Every other Ampere die (GA102 etc.).
+    Ampere,
+    Ada,
+    /// GH100 die (H100).
+    Hopper,
+    /// GH200 module (Grace CPU + Hopper GPU); see superchip.rs.
+    GraceHopper,
+}
+
+impl Generation {
+    /// All generations, oldest first (Fig. 14 row order reversed).
+    pub const ALL: [Generation; 14] = [
+        Generation::Fermi1,
+        Generation::Fermi2,
+        Generation::Kepler1,
+        Generation::Kepler2,
+        Generation::Maxwell1,
+        Generation::Maxwell2,
+        Generation::Pascal,
+        Generation::Volta,
+        Generation::Turing,
+        Generation::AmpereGa100,
+        Generation::Ampere,
+        Generation::Ada,
+        Generation::Hopper,
+        Generation::GraceHopper,
+    ];
+
+    /// Human name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Generation::Fermi1 => "Fermi 1.0",
+            Generation::Fermi2 => "Fermi 2.0",
+            Generation::Kepler1 => "Kepler 1.0",
+            Generation::Kepler2 => "Kepler 2.0",
+            Generation::Maxwell1 => "Maxwell 1.0",
+            Generation::Maxwell2 => "Maxwell 2.0",
+            Generation::Pascal => "Pascal",
+            Generation::Volta => "Volta",
+            Generation::Turing => "Turing",
+            Generation::AmpereGa100 => "Ampere (GA100)",
+            Generation::Ampere => "Ampere",
+            Generation::Ada => "Ada Lovelace",
+            Generation::Hopper => "Hopper",
+            Generation::GraceHopper => "Grace Hopper (GH200)",
+        }
+    }
+}
+
+/// Product line (Table 1 columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ProductLine {
+    /// Data-center ("Tesla") parts.
+    Tesla,
+    /// Professional workstation ("Quadro") parts.
+    Quadro,
+    /// Gaming ("GeForce") parts.
+    GeForce,
+}
+
+/// Physical form factor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FormFactor {
+    Pcie,
+    Sxm,
+    Mobile,
+    /// Superchip module (GH200).
+    Module,
+}
+
+/// Driver release epochs with distinct nvidia-smi field semantics (§2.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DriverEpoch {
+    /// Before 530 (released before 2023-03-30): only `power.draw`.
+    Pre530,
+    /// The 530 series: `power.draw` switched to a 100 ms window on
+    /// Ampere/Ada, then reverted.
+    V530,
+    /// After 530: `power.draw.average` and `power.draw.instant` added.
+    Post530,
+}
+
+impl DriverEpoch {
+    pub const ALL: [DriverEpoch; 3] = [DriverEpoch::Pre530, DriverEpoch::V530, DriverEpoch::Post530];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DriverEpoch::Pre530 => "pre-530",
+            DriverEpoch::V530 => "530",
+            DriverEpoch::Post530 => "post-530",
+        }
+    }
+}
+
+/// nvidia-smi power query fields.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PowerField {
+    /// `power.draw` — the original/default field.
+    Draw,
+    /// `power.draw.average` (post-530 only).
+    Average,
+    /// `power.draw.instant` (post-530 only).
+    Instant,
+}
+
+impl PowerField {
+    pub const ALL: [PowerField; 3] = [PowerField::Draw, PowerField::Average, PowerField::Instant];
+
+    pub fn query_name(&self) -> &'static str {
+        match self {
+            PowerField::Draw => "power.draw",
+            PowerField::Average => "power.draw.average",
+            PowerField::Instant => "power.draw.instant",
+        }
+    }
+}
+
+/// What a sensor pipeline actually computes for a field.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PipelineKind {
+    /// Trailing boxcar average of `window_ms`, re-published every update.
+    Boxcar { window_ms: f64 },
+    /// First-order RC low-pass (the Kepler/Maxwell "capacitor charging"
+    /// distortion, Burtscher et al.).
+    RcFilter { tau_ms: f64 },
+    /// Activity-counter *estimation*, not measurement (cheap Fermi-era
+    /// boards, Quadro K620): biased and quantised.
+    Estimation,
+    /// Field or power management not supported at all.
+    Unsupported,
+}
+
+/// Full pipeline spec for one (generation, field, driver) combination.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PipelineSpec {
+    /// Interval between value republications, ms.
+    pub update_ms: f64,
+    pub kind: PipelineKind,
+}
+
+impl PipelineSpec {
+    pub const fn boxcar(update_ms: f64, window_ms: f64) -> Self {
+        PipelineSpec { update_ms, kind: PipelineKind::Boxcar { window_ms } }
+    }
+    pub const fn rc(update_ms: f64, tau_ms: f64) -> Self {
+        PipelineSpec { update_ms, kind: PipelineKind::RcFilter { tau_ms } }
+    }
+    pub const fn unsupported() -> Self {
+        PipelineSpec { update_ms: 0.0, kind: PipelineKind::Unsupported }
+    }
+    pub const fn estimation(update_ms: f64) -> Self {
+        PipelineSpec { update_ms, kind: PipelineKind::Estimation }
+    }
+
+    /// True if this pipeline reports anything useful.
+    pub fn is_measured(&self) -> bool {
+        matches!(self.kind, PipelineKind::Boxcar { .. } | PipelineKind::RcFilter { .. })
+    }
+
+    /// Fraction of wall time covered by the averaging window (the paper's
+    /// headline "25% of the runtime is sampled" for A100/H100).
+    pub fn coverage(&self) -> f64 {
+        match self.kind {
+            PipelineKind::Boxcar { window_ms } => (window_ms / self.update_ms).min(1.0),
+            PipelineKind::RcFilter { .. } => 1.0, // IIR: everything contributes, distorted
+            _ => 0.0,
+        }
+    }
+}
+
+/// The Fig. 14 matrix: what each field computes on each generation/driver.
+///
+/// Encodings follow DESIGN.md §6 (derived from Fig. 14 + §4/§6 text).
+pub fn sensor_pipeline(gen: Generation, field: PowerField, driver: DriverEpoch) -> PipelineSpec {
+    use DriverEpoch::*;
+    use Generation::*;
+    use PowerField::*;
+
+    // Fields that don't exist before the post-530 drivers.
+    if matches!(field, Average | Instant) && !matches!(driver, Post530) {
+        return PipelineSpec::unsupported();
+    }
+
+    match gen {
+        Fermi1 => PipelineSpec::unsupported(),
+        Fermi2 => PipelineSpec::estimation(100.0),
+        // Kepler/Maxwell: RC-filter distortion ("logarithmic growth");
+        // Kepler updates every 15 ms (Burtscher's K20 observation), Maxwell
+        // every 100 ms. Average/Instant fields just alias Draw here.
+        Kepler1 | Kepler2 => PipelineSpec::rc(15.0, 80.0),
+        Maxwell1 | Maxwell2 => PipelineSpec::rc(100.0, 80.0),
+        // Pascal/Volta: 20 ms update, 10 ms window (50% coverage).
+        Pascal | Volta => PipelineSpec::boxcar(20.0, 10.0),
+        // Turing: 100 ms update, full-period window.
+        Turing => PipelineSpec::boxcar(100.0, 100.0),
+        // A100: 25 ms window on ALL drivers and fields except the post-530
+        // explicit average (1 s).
+        AmpereGa100 => match field {
+            Average => PipelineSpec::boxcar(100.0, 1000.0),
+            _ => PipelineSpec::boxcar(100.0, 25.0),
+        },
+        // Other Ampere + Ada: pre-530 `power.draw` = 1 s average; 530 series
+        // = 100 ms; post-530 draw/average = 1 s, instant = 100 ms.
+        Ampere | Ada => match (driver, field) {
+            (Pre530, Draw) => PipelineSpec::boxcar(100.0, 1000.0),
+            (V530, Draw) => PipelineSpec::boxcar(100.0, 100.0),
+            (Post530, Draw) | (Post530, Average) => PipelineSpec::boxcar(100.0, 1000.0),
+            (Post530, Instant) => PipelineSpec::boxcar(100.0, 100.0),
+            _ => PipelineSpec::unsupported(),
+        },
+        // H100: draw/average = 1 s; instant = 25 ms.
+        Hopper => match (driver, field) {
+            (Post530, Instant) => PipelineSpec::boxcar(100.0, 25.0),
+            _ => PipelineSpec::boxcar(100.0, 1000.0),
+        },
+        // GH200 GPU domain: 20 ms window / 100 ms update (80% unmeasured).
+        // The module-level "Instant" quirk is modelled in superchip.rs.
+        GraceHopper => match field {
+            Average => PipelineSpec::boxcar(100.0, 1000.0),
+            _ => PipelineSpec::boxcar(100.0, 20.0),
+        },
+    }
+}
+
+/// Static description of a GPU model (one Table 1 row).
+#[derive(Debug, Clone)]
+pub struct GpuModel {
+    pub name: &'static str,
+    pub generation: Generation,
+    pub line: ProductLine,
+    pub form: FormFactor,
+    /// Board TDP, watts.
+    pub tdp_w: f64,
+    /// Software power limit (Fig. 8's 420 W cap on the RTX 3090), watts.
+    pub power_limit_w: f64,
+    /// Idle power at the low pstate, watts.
+    pub idle_w: f64,
+    /// Streaming multiprocessor count (amplitude control granularity).
+    pub sm_count: u32,
+    /// Board-level power rise time constant, ms (the paper's Fig. 7 case 2
+    /// "actual power takes several hundred ms to rise"; RTX 3090 ≈ 250 ms).
+    pub rise_ms: f64,
+    /// Fraction of the power swing carried by the slow (thermal/DVFS) ramp.
+    /// > 0.1 produces a visible Fig. 7 case-2 ramp whose 10→90% time is
+    /// `rise_ms`; ≤ 0.1 means the board slews essentially instantly.
+    pub ramp_frac: f64,
+    /// Number of physical cards of this model tested in the paper.
+    pub tested_count: u32,
+}
+
+/// Table 1: the full catalogue of tested GPUs.
+pub const CATALOGUE: &[GpuModel] = &[
+    // Hopper
+    GpuModel { name: "H100 PCIe", generation: Generation::Hopper, line: ProductLine::Tesla, form: FormFactor::Pcie, tdp_w: 350.0, power_limit_w: 350.0, idle_w: 25.0, sm_count: 114, rise_ms: 120.0, ramp_frac: 0.08, tested_count: 10 },
+    GpuModel { name: "GH200 480GB", generation: Generation::GraceHopper, line: ProductLine::Tesla, form: FormFactor::Module, tdp_w: 1000.0, power_limit_w: 1000.0, idle_w: 90.0, sm_count: 132, rise_ms: 120.0, ramp_frac: 0.08, tested_count: 1 },
+    // Ada
+    GpuModel { name: "RTX 4090", generation: Generation::Ada, line: ProductLine::GeForce, form: FormFactor::Pcie, tdp_w: 450.0, power_limit_w: 450.0, idle_w: 20.0, sm_count: 128, rise_ms: 200.0, ramp_frac: 0.3, tested_count: 1 },
+    // Ampere
+    GpuModel { name: "A100 PCIe-40G", generation: Generation::AmpereGa100, line: ProductLine::Tesla, form: FormFactor::Pcie, tdp_w: 250.0, power_limit_w: 250.0, idle_w: 35.0, sm_count: 108, rise_ms: 100.0, ramp_frac: 0.08, tested_count: 4 },
+    GpuModel { name: "A100 PCIe-80G", generation: Generation::AmpereGa100, line: ProductLine::Tesla, form: FormFactor::Pcie, tdp_w: 300.0, power_limit_w: 300.0, idle_w: 40.0, sm_count: 108, rise_ms: 100.0, ramp_frac: 0.08, tested_count: 4 },
+    GpuModel { name: "A100 SXM4-40G", generation: Generation::AmpereGa100, line: ProductLine::Tesla, form: FormFactor::Sxm, tdp_w: 400.0, power_limit_w: 400.0, idle_w: 45.0, sm_count: 108, rise_ms: 100.0, ramp_frac: 0.08, tested_count: 2 },
+    GpuModel { name: "A10", generation: Generation::Ampere, line: ProductLine::Tesla, form: FormFactor::Pcie, tdp_w: 150.0, power_limit_w: 150.0, idle_w: 18.0, sm_count: 72, rise_ms: 180.0, ramp_frac: 0.3, tested_count: 1 },
+    GpuModel { name: "RTX A6000", generation: Generation::Ampere, line: ProductLine::Quadro, form: FormFactor::Pcie, tdp_w: 300.0, power_limit_w: 300.0, idle_w: 22.0, sm_count: 84, rise_ms: 220.0, ramp_frac: 0.3, tested_count: 10 },
+    GpuModel { name: "RTX A5000", generation: Generation::Ampere, line: ProductLine::Quadro, form: FormFactor::Pcie, tdp_w: 230.0, power_limit_w: 230.0, idle_w: 20.0, sm_count: 64, rise_ms: 220.0, ramp_frac: 0.3, tested_count: 1 },
+    GpuModel { name: "RTX 3090", generation: Generation::Ampere, line: ProductLine::GeForce, form: FormFactor::Pcie, tdp_w: 350.0, power_limit_w: 420.0, idle_w: 25.0, sm_count: 82, rise_ms: 250.0, ramp_frac: 0.3, tested_count: 5 },
+    GpuModel { name: "RTX 3070 Ti", generation: Generation::Ampere, line: ProductLine::GeForce, form: FormFactor::Pcie, tdp_w: 290.0, power_limit_w: 290.0, idle_w: 15.0, sm_count: 48, rise_ms: 230.0, ramp_frac: 0.3, tested_count: 1 },
+    // Turing
+    GpuModel { name: "Quadro RTX 8000", generation: Generation::Turing, line: ProductLine::Quadro, form: FormFactor::Pcie, tdp_w: 260.0, power_limit_w: 260.0, idle_w: 20.0, sm_count: 72, rise_ms: 80.0, ramp_frac: 0.08, tested_count: 4 },
+    GpuModel { name: "TITAN RTX", generation: Generation::Turing, line: ProductLine::GeForce, form: FormFactor::Pcie, tdp_w: 280.0, power_limit_w: 280.0, idle_w: 18.0, sm_count: 72, rise_ms: 80.0, ramp_frac: 0.08, tested_count: 4 },
+    GpuModel { name: "RTX 2080 Ti", generation: Generation::Turing, line: ProductLine::GeForce, form: FormFactor::Pcie, tdp_w: 250.0, power_limit_w: 250.0, idle_w: 15.0, sm_count: 68, rise_ms: 80.0, ramp_frac: 0.08, tested_count: 1 },
+    GpuModel { name: "RTX 2060 Super", generation: Generation::Turing, line: ProductLine::GeForce, form: FormFactor::Pcie, tdp_w: 175.0, power_limit_w: 175.0, idle_w: 10.0, sm_count: 34, rise_ms: 80.0, ramp_frac: 0.08, tested_count: 1 },
+    GpuModel { name: "GTX 1650 Ti Mobile", generation: Generation::Turing, line: ProductLine::GeForce, form: FormFactor::Mobile, tdp_w: 55.0, power_limit_w: 55.0, idle_w: 5.0, sm_count: 16, rise_ms: 60.0, ramp_frac: 0.08, tested_count: 1 },
+    // Volta
+    GpuModel { name: "V100 SXM2-16G", generation: Generation::Volta, line: ProductLine::Tesla, form: FormFactor::Sxm, tdp_w: 300.0, power_limit_w: 300.0, idle_w: 28.0, sm_count: 80, rise_ms: 60.0, ramp_frac: 0.08, tested_count: 2 },
+    GpuModel { name: "V100 PCIe-16G", generation: Generation::Volta, line: ProductLine::Tesla, form: FormFactor::Pcie, tdp_w: 250.0, power_limit_w: 250.0, idle_w: 25.0, sm_count: 80, rise_ms: 60.0, ramp_frac: 0.08, tested_count: 2 },
+    // Pascal
+    GpuModel { name: "P100 PCIe-16G", generation: Generation::Pascal, line: ProductLine::Tesla, form: FormFactor::Pcie, tdp_w: 250.0, power_limit_w: 250.0, idle_w: 25.0, sm_count: 56, rise_ms: 60.0, ramp_frac: 0.08, tested_count: 5 },
+    GpuModel { name: "TITAN Xp", generation: Generation::Pascal, line: ProductLine::GeForce, form: FormFactor::Pcie, tdp_w: 250.0, power_limit_w: 250.0, idle_w: 14.0, sm_count: 30, rise_ms: 60.0, ramp_frac: 0.08, tested_count: 1 },
+    GpuModel { name: "GTX 1080 Ti", generation: Generation::Pascal, line: ProductLine::GeForce, form: FormFactor::Pcie, tdp_w: 250.0, power_limit_w: 250.0, idle_w: 12.0, sm_count: 28, rise_ms: 60.0, ramp_frac: 0.08, tested_count: 1 },
+    GpuModel { name: "GTX 1080", generation: Generation::Pascal, line: ProductLine::GeForce, form: FormFactor::Pcie, tdp_w: 180.0, power_limit_w: 180.0, idle_w: 10.0, sm_count: 20, rise_ms: 60.0, ramp_frac: 0.08, tested_count: 1 },
+    // Maxwell
+    GpuModel { name: "Tesla M40", generation: Generation::Maxwell2, line: ProductLine::Tesla, form: FormFactor::Pcie, tdp_w: 250.0, power_limit_w: 250.0, idle_w: 18.0, sm_count: 24, rise_ms: 60.0, ramp_frac: 0.08, tested_count: 1 },
+    GpuModel { name: "TITAN X (Maxwell)", generation: Generation::Maxwell2, line: ProductLine::GeForce, form: FormFactor::Pcie, tdp_w: 250.0, power_limit_w: 250.0, idle_w: 15.0, sm_count: 24, rise_ms: 60.0, ramp_frac: 0.08, tested_count: 1 },
+    GpuModel { name: "Quadro K620", generation: Generation::Maxwell1, line: ProductLine::Quadro, form: FormFactor::Pcie, tdp_w: 45.0, power_limit_w: 45.0, idle_w: 4.0, sm_count: 3, rise_ms: 60.0, ramp_frac: 0.08, tested_count: 1 },
+    GpuModel { name: "GTX 745", generation: Generation::Maxwell1, line: ProductLine::GeForce, form: FormFactor::Pcie, tdp_w: 55.0, power_limit_w: 55.0, idle_w: 5.0, sm_count: 3, rise_ms: 60.0, ramp_frac: 0.08, tested_count: 1 },
+    // Kepler
+    GpuModel { name: "Tesla K80", generation: Generation::Kepler2, line: ProductLine::Tesla, form: FormFactor::Pcie, tdp_w: 300.0, power_limit_w: 300.0, idle_w: 30.0, sm_count: 26, rise_ms: 60.0, ramp_frac: 0.08, tested_count: 1 },
+    GpuModel { name: "Tesla K40", generation: Generation::Kepler1, line: ProductLine::Tesla, form: FormFactor::Pcie, tdp_w: 235.0, power_limit_w: 235.0, idle_w: 21.0, sm_count: 15, rise_ms: 60.0, ramp_frac: 0.08, tested_count: 1 },
+    // Fermi
+    GpuModel { name: "Tesla M2090", generation: Generation::Fermi2, line: ProductLine::Tesla, form: FormFactor::Pcie, tdp_w: 225.0, power_limit_w: 225.0, idle_w: 30.0, sm_count: 16, rise_ms: 60.0, ramp_frac: 0.08, tested_count: 1 },
+    GpuModel { name: "Tesla C2050", generation: Generation::Fermi1, line: ProductLine::Tesla, form: FormFactor::Pcie, tdp_w: 238.0, power_limit_w: 238.0, idle_w: 32.0, sm_count: 14, rise_ms: 60.0, ramp_frac: 0.08, tested_count: 1 },
+];
+
+/// Look up a model by (case-insensitive substring) name.
+pub fn find_model(name: &str) -> Option<&'static GpuModel> {
+    let needle = name.to_lowercase();
+    CATALOGUE.iter().find(|m| m.name.to_lowercase().contains(&needle))
+}
+
+/// Total number of physical cards in the catalogue (the paper's ">70 GPUs").
+pub fn total_cards() -> u32 {
+    CATALOGUE.iter().map(|m| m.tested_count).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalogue_spans_all_generations() {
+        for gen in Generation::ALL {
+            assert!(
+                CATALOGUE.iter().any(|m| m.generation == gen),
+                "no model for {}",
+                gen.name()
+            );
+        }
+    }
+
+    #[test]
+    fn catalogue_has_over_70_cards() {
+        assert!(total_cards() > 70, "total={}", total_cards());
+    }
+
+    #[test]
+    fn a100_window_is_25ms_on_every_driver() {
+        for d in DriverEpoch::ALL {
+            let spec = sensor_pipeline(Generation::AmpereGa100, PowerField::Draw, d);
+            assert_eq!(spec.kind, PipelineKind::Boxcar { window_ms: 25.0 });
+            assert!((spec.coverage() - 0.25).abs() < 1e-12, "A100 covers 25%");
+        }
+    }
+
+    #[test]
+    fn h100_instant_is_quarter_coverage() {
+        let spec = sensor_pipeline(Generation::Hopper, PowerField::Instant, DriverEpoch::Post530);
+        assert_eq!(spec.kind, PipelineKind::Boxcar { window_ms: 25.0 });
+        assert!((spec.coverage() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ampere_draw_semantics_change_with_driver() {
+        use DriverEpoch::*;
+        let w = |d| match sensor_pipeline(Generation::Ampere, PowerField::Draw, d).kind {
+            PipelineKind::Boxcar { window_ms } => window_ms,
+            k => panic!("unexpected {k:?}"),
+        };
+        assert_eq!(w(Pre530), 1000.0);
+        assert_eq!(w(V530), 100.0);
+        assert_eq!(w(Post530), 1000.0);
+    }
+
+    #[test]
+    fn new_fields_absent_on_old_drivers() {
+        let spec = sensor_pipeline(Generation::Ampere, PowerField::Instant, DriverEpoch::Pre530);
+        assert_eq!(spec.kind, PipelineKind::Unsupported);
+    }
+
+    #[test]
+    fn fermi_unsupported_or_estimation() {
+        assert_eq!(
+            sensor_pipeline(Generation::Fermi1, PowerField::Draw, DriverEpoch::Post530).kind,
+            PipelineKind::Unsupported
+        );
+        assert_eq!(
+            sensor_pipeline(Generation::Fermi2, PowerField::Draw, DriverEpoch::Post530).kind,
+            PipelineKind::Estimation
+        );
+    }
+
+    #[test]
+    fn kepler_is_rc_filtered() {
+        let spec = sensor_pipeline(Generation::Kepler1, PowerField::Draw, DriverEpoch::Pre530);
+        assert!(matches!(spec.kind, PipelineKind::RcFilter { .. }));
+        assert_eq!(spec.update_ms, 15.0);
+    }
+
+    #[test]
+    fn pascal_volta_half_coverage() {
+        for g in [Generation::Pascal, Generation::Volta] {
+            let spec = sensor_pipeline(g, PowerField::Draw, DriverEpoch::Pre530);
+            assert!((spec.coverage() - 0.5).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn find_model_by_substring() {
+        assert!(find_model("3090").is_some());
+        assert!(find_model("a100 pcie-40g").is_some());
+        assert!(find_model("nonexistent-gpu").is_none());
+    }
+
+    #[test]
+    fn rtx3090_power_limit_is_420() {
+        let m = find_model("RTX 3090").unwrap();
+        assert_eq!(m.power_limit_w, 420.0);
+        assert_eq!(m.rise_ms, 250.0);
+    }
+}

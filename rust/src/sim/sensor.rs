@@ -1,0 +1,307 @@
+//! The on-board sensor pipeline: ground-truth power → published readings.
+//!
+//! This is the mechanism the paper reverse-engineers. For each
+//! (generation, field, driver) the pipeline (profile.rs) is either:
+//!   * a trailing **boxcar** of `window_ms`, republished every `update_ms`
+//!     (the "part-time" attention: A100 looks at 25 ms out of every 100 ms);
+//!   * an **RC filter** (Kepler/Maxwell "capacitor charging" distortion);
+//!   * an activity-based **estimation** (Fermi 2.0 era), or unsupported.
+//!
+//! Update instants are anchored at a *boot phase* the user can neither
+//! observe nor control (paper §4.3: "nvidia-smi starts measuring at boot
+//! time ... no way to synchronise with it").
+
+use super::device::GpuDevice;
+use super::profile::{PipelineKind, PipelineSpec};
+use super::trace::PowerTrace;
+use crate::rng::Rng;
+
+/// One published sensor reading.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Reading {
+    /// Publication time, seconds.
+    pub t: f64,
+    /// Reported board power, watts (already includes the card tolerance).
+    pub watts: f64,
+}
+
+/// A realised sensor stream: the internal update series for one field.
+#[derive(Debug, Clone)]
+pub struct SensorStream {
+    pub spec: PipelineSpec,
+    /// Boot phase in `[0, update_ms)`: offset of update instants.
+    pub phase_s: f64,
+    /// Updates in chronological order.
+    pub readings: Vec<Reading>,
+}
+
+impl SensorStream {
+    /// The value a query at time `t` returns: the most recent publication
+    /// (nvidia-smi holds the value between updates). `None` before the
+    /// first update or for unsupported pipelines.
+    pub fn value_at(&self, t: f64) -> Option<f64> {
+        if self.readings.is_empty() {
+            return None;
+        }
+        // binary search for last reading with .t <= t
+        let mut lo = 0usize;
+        let mut hi = self.readings.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.readings[mid].t <= t {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        if lo == 0 {
+            None
+        } else {
+            Some(self.readings[lo - 1].watts)
+        }
+    }
+}
+
+/// Generate the sensor update stream for `device` over a ground-truth trace.
+///
+/// `boot_seed` fixes the (unobservable) phase; quantisation matches
+/// nvidia-smi's 2-decimal output.
+pub fn run_pipeline(
+    device: &GpuDevice,
+    spec: PipelineSpec,
+    truth: &PowerTrace,
+    boot_seed: u64,
+) -> SensorStream {
+    let mut rng = Rng::new(boot_seed ^ device.seed);
+    let update_s = spec.update_ms / 1000.0;
+    let phase_s = if update_s > 0.0 { rng.uniform() * update_s } else { 0.0 };
+
+    let readings = match spec.kind {
+        PipelineKind::Unsupported => Vec::new(),
+        PipelineKind::Boxcar { window_ms } => {
+            boxcar_readings(device, truth, update_s, phase_s, window_ms / 1000.0, &mut rng)
+        }
+        PipelineKind::RcFilter { tau_ms } => {
+            rc_readings(device, truth, update_s, phase_s, tau_ms / 1000.0, &mut rng)
+        }
+        PipelineKind::Estimation => estimation_readings(device, truth, update_s, phase_s, &mut rng),
+    };
+    SensorStream { spec, phase_s, readings }
+}
+
+/// Quantise to nvidia-smi's printed resolution (0.01 W).
+#[inline]
+fn quantise(w: f64) -> f64 {
+    (w * 100.0).round() / 100.0
+}
+
+fn update_times(truth: &PowerTrace, update_s: f64, phase_s: f64) -> Vec<f64> {
+    // first update at or after truth.t0, aligned to boot phase
+    let mut out = Vec::new();
+    if update_s <= 0.0 {
+        return out;
+    }
+    let k0 = ((truth.t0 - phase_s) / update_s).ceil() as i64;
+    let mut k = k0;
+    loop {
+        let t = phase_s + k as f64 * update_s;
+        if t >= truth.t_end() {
+            break;
+        }
+        if t >= truth.t0 {
+            out.push(t);
+        }
+        k += 1;
+    }
+    out
+}
+
+fn boxcar_readings(
+    device: &GpuDevice,
+    truth: &PowerTrace,
+    update_s: f64,
+    phase_s: f64,
+    window_s: f64,
+    rng: &mut Rng,
+) -> Vec<Reading> {
+    let prefix = truth.prefix_sums();
+    update_times(truth, update_s, phase_s)
+        .into_iter()
+        .map(|t| {
+            let mean = truth.window_mean_with(&prefix, t, window_s);
+            // small publication jitter in the *time* domain (±1 ms) models
+            // the driver's internal scheduling noise seen in Fig. 6
+            let jitter = rng.normal_ms(0.0, 0.0008);
+            Reading { t: t + jitter, watts: quantise(device.tolerance.apply(mean)) }
+        })
+        .collect()
+}
+
+fn rc_readings(
+    device: &GpuDevice,
+    truth: &PowerTrace,
+    update_s: f64,
+    phase_s: f64,
+    tau_s: f64,
+    rng: &mut Rng,
+) -> Vec<Reading> {
+    // run the IIR filter at the truth rate, then sample at update instants
+    let dt = truth.dt();
+    let alpha = (dt / tau_s).min(1.0);
+    let mut state = truth.samples.first().copied().unwrap_or(0.0) as f64;
+    let mut filtered = Vec::with_capacity(truth.len());
+    for &p in &truth.samples {
+        state += alpha * (p as f64 - state);
+        filtered.push(state as f32);
+    }
+    let f = PowerTrace::from_samples(truth.hz, truth.t0, filtered);
+    update_times(truth, update_s, phase_s)
+        .into_iter()
+        .map(|t| {
+            let jitter = rng.normal_ms(0.0, 0.0008);
+            Reading { t: t + jitter, watts: quantise(device.tolerance.apply(f.at(t))) }
+        })
+        .collect()
+}
+
+fn estimation_readings(
+    device: &GpuDevice,
+    truth: &PowerTrace,
+    update_s: f64,
+    phase_s: f64,
+    rng: &mut Rng,
+) -> Vec<Reading> {
+    // activity-counter estimation: coarse, biased, heavily quantised
+    // (5 W steps), with a fixed per-card bias up to ±15%
+    let bias = 1.0 + (rng.uniform() - 0.5) * 0.3;
+    let prefix = truth.prefix_sums();
+    update_times(truth, update_s, phase_s)
+        .into_iter()
+        .map(|t| {
+            let mean = truth.window_mean_with(&prefix, t, update_s);
+            let est = (mean * bias / 5.0).round() * 5.0;
+            Reading { t, watts: est.max(device.model.idle_w * 0.5) }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::activity::ActivitySignal;
+    use crate::sim::profile::{find_model, PipelineSpec};
+    use crate::sim::trace::TRUE_HZ;
+
+    fn dev() -> GpuDevice {
+        GpuDevice::new(find_model("RTX 3090").unwrap(), 0, 99)
+    }
+
+    fn flat_trace(watts: f32, secs: f64) -> PowerTrace {
+        PowerTrace::from_samples(TRUE_HZ, 0.0, vec![watts; (secs * TRUE_HZ) as usize])
+    }
+
+    #[test]
+    fn update_cadence_matches_spec() {
+        let d = dev();
+        let spec = PipelineSpec::boxcar(100.0, 25.0);
+        let s = run_pipeline(&d, spec, &flat_trace(200.0, 3.0), 7);
+        // ~30 updates over 3 s at 100 ms
+        assert!((29..=31).contains(&s.readings.len()), "{}", s.readings.len());
+        // median gap ≈ 100 ms
+        let mut gaps: Vec<f64> =
+            s.readings.windows(2).map(|w| w[1].t - w[0].t).collect();
+        gaps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = gaps[gaps.len() / 2];
+        assert!((med - 0.1).abs() < 0.005, "median gap {med}");
+    }
+
+    #[test]
+    fn flat_power_reports_tolerance_transformed_value() {
+        let d = dev();
+        let spec = PipelineSpec::boxcar(100.0, 100.0);
+        let s = run_pipeline(&d, spec, &flat_trace(200.0, 2.0), 7);
+        let want = d.tolerance.apply(200.0);
+        for r in &s.readings {
+            assert!((r.watts - want).abs() < 0.5, "{} vs {want}", r.watts);
+        }
+    }
+
+    #[test]
+    fn value_at_holds_between_updates() {
+        let d = dev();
+        let spec = PipelineSpec::boxcar(100.0, 100.0);
+        let s = run_pipeline(&d, spec, &flat_trace(100.0, 1.0), 7);
+        let r1 = s.readings[3];
+        let mid = r1.t + 0.04; // between update 3 and 4
+        assert_eq!(s.value_at(mid), Some(r1.watts));
+        assert_eq!(s.value_at(-1.0), None);
+    }
+
+    #[test]
+    fn boot_phase_varies_with_seed() {
+        let d = dev();
+        let spec = PipelineSpec::boxcar(100.0, 25.0);
+        let t = flat_trace(100.0, 1.0);
+        let a = run_pipeline(&d, spec, &t, 1);
+        let b = run_pipeline(&d, spec, &t, 2);
+        assert_ne!(a.phase_s, b.phase_s);
+        assert!(a.phase_s < 0.1 && b.phase_s < 0.1);
+    }
+
+    #[test]
+    fn unsupported_pipeline_is_empty() {
+        let d = dev();
+        let s = run_pipeline(&d, PipelineSpec::unsupported(), &flat_trace(100.0, 1.0), 7);
+        assert!(s.readings.is_empty());
+        assert_eq!(s.value_at(0.5), None);
+    }
+
+    #[test]
+    fn rc_filter_lags_step() {
+        // step from idle to high: RC-filtered reading must be visibly below
+        // the true level shortly after the step, then converge
+        let d = GpuDevice::new(find_model("Tesla K40").unwrap(), 0, 5);
+        let act = ActivitySignal::burst(1.0, 3.0, 1.0);
+        let truth = d.synthesize(&act, 0.0, 4.0);
+        let spec = PipelineSpec::rc(15.0, 80.0);
+        let s = run_pipeline(&d, spec, &truth, 3);
+        let steady = d.tolerance.apply(d.steady_power_w(1.0));
+        let shortly = s.value_at(1.06).unwrap(); // 60 ms after step
+        let later = s.value_at(2.5).unwrap();
+        assert!(shortly < 0.8 * steady, "RC lag: {shortly} vs {steady}");
+        assert!((later - steady).abs() < 0.08 * steady, "converged: {later} vs {steady}");
+    }
+
+    #[test]
+    fn boxcar_25_of_100_misses_activity() {
+        // ~100 ms square wave with 50% duty on a 25/100 pipeline: the slight
+        // detune sweeps the phase, so updates see mostly-high or mostly-low
+        // windows -> swing. (An exactly-100 ms wave phase-locks to the
+        // updates and every reading is identical — the Fig. 10 aliasing.)
+        let d = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, 42);
+        let act = ActivitySignal::square_wave(0.5, 0.107, 0.5, 1.0, 58);
+        let truth = d.synthesize(&act, 0.0, 7.0);
+        let spec = PipelineSpec::boxcar(100.0, 25.0);
+        let s = run_pipeline(&d, spec, &truth, 11);
+        let vals: Vec<f64> =
+            s.readings.iter().filter(|r| r.t > 1.5 && r.t < 6.0).map(|r| r.watts).collect();
+        let max = vals.iter().cloned().fold(f64::MIN, f64::max);
+        let min = vals.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max - min > 40.0, "25/100 window must swing, got {min}..{max}");
+    }
+
+    #[test]
+    fn boxcar_full_window_flattens_square_wave() {
+        // Fig. 10 RTX 3090: window == period -> flat readings at the midpoint
+        let d = dev();
+        let act = ActivitySignal::square_wave(0.5, 0.1, 0.5, 1.0, 60);
+        let truth = d.synthesize(&act, 0.0, 7.0);
+        let spec = PipelineSpec::boxcar(100.0, 100.0);
+        let s = run_pipeline(&d, spec, &truth, 11);
+        let vals: Vec<f64> =
+            s.readings.iter().filter(|r| r.t > 2.0 && r.t < 6.0).map(|r| r.watts).collect();
+        let max = vals.iter().cloned().fold(f64::MIN, f64::max);
+        let min = vals.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max - min < 30.0, "full window must flatten, got {min}..{max}");
+    }
+}

@@ -1,0 +1,225 @@
+//! GH200 Grace-Hopper superchip model (paper §6).
+//!
+//! Two coupled power domains in one package:
+//!   * GPU (Hopper): sensor updates every 100 ms, window 20 ms → 80 % of
+//!     GPU activity unmeasured;
+//!   * CPU (72-core Grace): updates every 100 ms, window 10 ms → 90 %
+//!     unmeasured;
+//! plus the paper's two quirks:
+//!   * the nvidia-smi **Instant** field reports the *whole-module* power
+//!     (GPU + CPU + LPDDR5X), while **Average** reports the GPU domain —
+//!     so Instant consistently exceeds Average even at idle;
+//!   * the **ACPI** sensor publishes a 50 ms average that is anomalously
+//!     flat with discrete >100 W noise excursions.
+
+use super::activity::ActivitySignal;
+use super::device::GpuDevice;
+use super::profile::{find_model, PipelineSpec};
+use super::sensor::{run_pipeline, SensorStream};
+use super::trace::{PowerTrace, TRUE_HZ};
+use crate::rng::Rng;
+
+/// CPU domain model (a Grace CPU is not a `GpuModel`; keep it minimal).
+#[derive(Debug, Clone)]
+pub struct CpuDomain {
+    pub idle_w: f64,
+    pub tdp_w: f64,
+    /// rise time constant, ms
+    pub rise_ms: f64,
+}
+
+impl Default for CpuDomain {
+    fn default() -> Self {
+        // 72-core Grace: ~100 W idle-ish package, 500 W max
+        CpuDomain { idle_w: 70.0, tdp_w: 500.0, rise_ms: 40.0 }
+    }
+}
+
+impl CpuDomain {
+    /// Synthesize the CPU package power for a utilisation signal.
+    pub fn synthesize(&self, activity: &ActivitySignal, t0: f64, t1: f64, seed: u64) -> PowerTrace {
+        let n = ((t1 - t0) * TRUE_HZ).round() as usize;
+        let dt = 1.0 / TRUE_HZ;
+        let tau = (self.rise_ms / 1000.0) / 2.2;
+        let mut rng = Rng::new(seed);
+        let mut p = self.idle_w;
+        let mut samples = Vec::with_capacity(n);
+        for i in 0..n {
+            let t = t0 + i as f64 * dt;
+            let util = activity.util_at(t);
+            let target = self.idle_w + (self.tdp_w - self.idle_w) * util.powf(0.97);
+            let tdir = if target > p { tau } else { 0.03 };
+            p += (target - p) * (dt / tdir).min(1.0);
+            samples.push((p + rng.normal_ms(0.0, 1.2)).max(0.0) as f32);
+        }
+        PowerTrace::from_samples(TRUE_HZ, t0, samples)
+    }
+}
+
+/// The full GH200 module.
+#[derive(Debug, Clone)]
+pub struct Superchip {
+    pub gpu: GpuDevice,
+    pub cpu: CpuDomain,
+    /// LPDDR5X + fabric baseline, watts.
+    pub dram_w: f64,
+    pub seed: u64,
+}
+
+/// All sensor outputs of one GH200 capture.
+#[derive(Debug)]
+pub struct SuperchipCapture {
+    pub gpu_truth: PowerTrace,
+    pub cpu_truth: PowerTrace,
+    pub module_truth: PowerTrace,
+    /// nvidia-smi "Average": GPU domain, 1 s window.
+    pub smi_average: SensorStream,
+    /// nvidia-smi "Instant": **whole module**, 20 ms window (the quirk).
+    pub smi_instant: SensorStream,
+    /// CPU-domain sensor (10 ms window / 100 ms update).
+    pub cpu_sensor: SensorStream,
+    /// ACPI 50 ms average with discrete noise.
+    pub acpi: Vec<(f64, f64)>,
+}
+
+impl Superchip {
+    pub fn new(seed: u64) -> Self {
+        let model = find_model("GH200").expect("GH200 in catalogue");
+        Superchip {
+            gpu: GpuDevice::new(model, 0, seed),
+            cpu: CpuDomain::default(),
+            dram_w: 60.0,
+            seed,
+        }
+    }
+
+    /// Run separate/simultaneous CPU+GPU loads and capture every sensor
+    /// (the Fig. 19 experiment).
+    pub fn capture(
+        &self,
+        gpu_load: &ActivitySignal,
+        cpu_load: &ActivitySignal,
+        t0: f64,
+        t1: f64,
+    ) -> SuperchipCapture {
+        let gpu_truth = self.gpu.synthesize(gpu_load, t0, t1);
+        let cpu_truth = self.cpu.synthesize(cpu_load, t0, t1, self.seed ^ 0xC0FFEE);
+        let module_truth = PowerTrace::from_samples(
+            TRUE_HZ,
+            t0,
+            gpu_truth
+                .samples
+                .iter()
+                .zip(&cpu_truth.samples)
+                .map(|(&g, &c)| g + c + self.dram_w as f32)
+                .collect(),
+        );
+
+        // Average: GPU domain over 1 s; Instant: module over 20 ms.
+        let smi_average =
+            run_pipeline(&self.gpu, PipelineSpec::boxcar(100.0, 1000.0), &gpu_truth, self.seed ^ 1);
+        let smi_instant = run_pipeline(
+            &self.gpu,
+            PipelineSpec::boxcar(100.0, 20.0),
+            &module_truth,
+            self.seed ^ 2,
+        );
+        let cpu_sensor =
+            run_pipeline(&self.gpu, PipelineSpec::boxcar(100.0, 10.0), &cpu_truth, self.seed ^ 3);
+
+        // ACPI: 50 ms module average, anomalously flat (heavy smoothing)
+        // punctuated by discrete >100 W excursions.
+        let mut rng = Rng::new(self.seed ^ 4);
+        let prefix = module_truth.prefix_sums();
+        let mut acpi = Vec::new();
+        let mut t = t0 + 0.05;
+        let mut smooth = module_truth.window_mean_with(&prefix, t, 0.05);
+        while t < module_truth.t_end() {
+            let mean = module_truth.window_mean_with(&prefix, t, 0.05);
+            // over-smoothed tracker -> "extremely flat" waveform
+            smooth += 0.08 * (mean - smooth);
+            let mut v = smooth;
+            if rng.uniform() < 0.06 {
+                // discrete noise fluctuation exceeding 100 W
+                v += (rng.uniform_range(100.0, 180.0)) * if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+            }
+            acpi.push((t, v.max(0.0)));
+            t += 0.05;
+        }
+
+        SuperchipCapture { gpu_truth, cpu_truth, module_truth, smi_average, smi_instant, cpu_sensor, acpi }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cap() -> SuperchipCapture {
+        let chip = Superchip::new(77);
+        // CPU-only burst, then GPU-only, then both (Fig. 19 protocol)
+        let cpu = {
+            let mut a = ActivitySignal::burst(1.0, 2.0, 1.0);
+            a.push(7.0, 2.0, 1.0);
+            a
+        };
+        let gpu = {
+            let mut a = ActivitySignal::burst(4.0, 2.0, 1.0);
+            a.push(7.0, 2.0, 1.0);
+            a
+        };
+        chip.capture(&gpu, &cpu, 0.0, 10.0)
+    }
+
+    #[test]
+    fn instant_exceeds_average_at_idle() {
+        // the paper's first GH200 finding: Instant (module) > Average (GPU)
+        let c = cap();
+        let inst = c.smi_instant.value_at(0.9).unwrap();
+        let avg = c.smi_average.value_at(0.9).unwrap();
+        assert!(inst > avg + 50.0, "instant={inst} avg={avg}");
+    }
+
+    #[test]
+    fn instant_reacts_to_cpu_load() {
+        // during the CPU-only phase, Instant rises but GPU Average does not
+        let c = cap();
+        let idle_inst = c.smi_instant.value_at(0.9).unwrap();
+        let cpu_inst = c.smi_instant.value_at(2.5).unwrap();
+        assert!(cpu_inst > idle_inst + 150.0, "{cpu_inst} vs {idle_inst}");
+        let avg_idle = c.smi_average.value_at(0.9).unwrap();
+        let avg_cpu = c.smi_average.value_at(2.9).unwrap();
+        assert!((avg_cpu - avg_idle).abs() < 40.0, "GPU average unaffected by CPU load");
+    }
+
+    #[test]
+    fn module_truth_is_sum() {
+        let c = cap();
+        let i = 50_000; // t = 5 s, GPU-only phase
+        let m = c.module_truth.samples[i];
+        let want = c.gpu_truth.samples[i] + c.cpu_truth.samples[i] + 60.0;
+        assert!((m - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn acpi_has_large_discrete_noise() {
+        let c = cap();
+        let vals: Vec<f64> = c.acpi.iter().map(|p| p.1).collect();
+        let median = {
+            let mut v = vals.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[v.len() / 2]
+        };
+        let max_dev = vals.iter().map(|v| (v - median).abs()).fold(0.0, f64::max);
+        assert!(max_dev > 100.0, "ACPI noise must exceed 100 W, got {max_dev}");
+    }
+
+    #[test]
+    fn cpu_sensor_updates_every_100ms() {
+        let c = cap();
+        let gaps: Vec<f64> = c.cpu_sensor.readings.windows(2).map(|w| w[1].t - w[0].t).collect();
+        let mut g = gaps.clone();
+        g.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((g[g.len() / 2] - 0.1).abs() < 0.01);
+    }
+}

@@ -1,0 +1,272 @@
+//! Uniformly-sampled power traces — the simulator's fundamental data type.
+//!
+//! A [`PowerTrace`] is a fixed-rate series of instantaneous board power
+//! samples. The ground-truth synthesis runs at [`TRUE_HZ`] (10 kHz), well
+//! above every sensor rate in the system (PMD 5 kHz, nvidia-smi 10–67 Hz),
+//! so every downstream pipeline is a pure downsampling/filtering of it.
+
+/// Ground-truth synthesis rate (Hz). 10 kHz = 0.1 ms resolution.
+pub const TRUE_HZ: f64 = 10_000.0;
+
+/// A uniformly-sampled power trace in watts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerTrace {
+    /// Sample rate in Hz.
+    pub hz: f64,
+    /// Time of sample 0, seconds.
+    pub t0: f64,
+    /// Instantaneous power samples, watts.
+    pub samples: Vec<f32>,
+}
+
+impl PowerTrace {
+    /// An empty trace at the given rate.
+    pub fn new(hz: f64, t0: f64) -> Self {
+        PowerTrace { hz, t0, samples: Vec::new() }
+    }
+
+    /// Construct from samples.
+    pub fn from_samples(hz: f64, t0: f64, samples: Vec<f32>) -> Self {
+        PowerTrace { hz, t0, samples }
+    }
+
+    /// Number of samples.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True if no samples.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Sample spacing in seconds.
+    #[inline]
+    pub fn dt(&self) -> f64 {
+        1.0 / self.hz
+    }
+
+    /// Duration covered, seconds.
+    #[inline]
+    pub fn duration(&self) -> f64 {
+        self.samples.len() as f64 / self.hz
+    }
+
+    /// End time (exclusive), seconds.
+    #[inline]
+    pub fn t_end(&self) -> f64 {
+        self.t0 + self.duration()
+    }
+
+    /// Timestamp of sample `i`.
+    #[inline]
+    pub fn time_of(&self, i: usize) -> f64 {
+        self.t0 + i as f64 / self.hz
+    }
+
+    /// Index of the last sample at or before time `t`, clamped into range.
+    #[inline]
+    pub fn index_of(&self, t: f64) -> usize {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        let i = ((t - self.t0) * self.hz).floor();
+        (i.max(0.0) as usize).min(self.samples.len() - 1)
+    }
+
+    /// Instantaneous power at time `t` (zero-order hold).
+    #[inline]
+    pub fn at(&self, t: f64) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples[self.index_of(t)] as f64
+        }
+    }
+
+    /// Inclusive prefix sums (f64 to avoid drift over long traces);
+    /// `prefix[i] = sum(samples[0..=i])`. The O(1)-per-query substrate for
+    /// boxcar averaging — this is the hot path of the whole estimator.
+    pub fn prefix_sums(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.samples.len());
+        let mut acc = 0.0f64;
+        for &s in &self.samples {
+            acc += s as f64;
+            out.push(acc);
+        }
+        out
+    }
+
+    /// Mean power over the window `[t - window_s, t]`, clamped to trace
+    /// bounds, using precomputed prefix sums.
+    pub fn window_mean_with(&self, prefix: &[f64], t: f64, window_s: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let hi = self.index_of(t);
+        let lo_f = ((t - window_s - self.t0) * self.hz).floor();
+        let lo = lo_f.max(-1.0) as i64; // exclusive lower index, -1 = trace start
+        let lo = lo.min(hi as i64 - 1); // at least one sample
+        let base = if lo < 0 { 0.0 } else { prefix[lo as usize] };
+        let count = hi as i64 - lo;
+        (prefix[hi] - base) / count as f64
+    }
+
+    /// Mean power over `[t - window_s, t]` (computes prefix sums internally;
+    /// prefer [`Self::window_mean_with`] in loops).
+    pub fn window_mean(&self, t: f64, window_s: f64) -> f64 {
+        self.window_mean_with(&self.prefix_sums(), t, window_s)
+    }
+
+    /// Energy in joules over the whole trace (rectangle rule; exact for a
+    /// zero-order-hold signal).
+    pub fn energy_j(&self) -> f64 {
+        self.samples.iter().map(|&s| s as f64).sum::<f64>() * self.dt()
+    }
+
+    /// Energy in joules over `[t_start, t_end]`.
+    pub fn energy_between(&self, t_start: f64, t_end: f64) -> f64 {
+        if self.samples.is_empty() || t_end <= t_start {
+            return 0.0;
+        }
+        let i0 = self.index_of(t_start);
+        let i1 = self.index_of(t_end);
+        self.samples[i0..=i1].iter().map(|&s| s as f64).sum::<f64>() * self.dt()
+    }
+
+    /// Mean power over the whole trace, watts.
+    pub fn mean_w(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().map(|&s| s as f64).sum::<f64>() / self.samples.len() as f64
+        }
+    }
+
+    /// Resample to a lower rate by striding (used by the PMD's 5 kHz view).
+    pub fn downsample(&self, new_hz: f64) -> PowerTrace {
+        assert!(new_hz <= self.hz, "downsample only");
+        let stride = (self.hz / new_hz).round() as usize;
+        let samples = self.samples.iter().step_by(stride.max(1)).copied().collect();
+        PowerTrace { hz: self.hz / stride.max(1) as f64, t0: self.t0, samples }
+    }
+}
+
+/// A timestamped, non-uniform power sample series (what pollers observe).
+#[derive(Debug, Clone, Default)]
+pub struct SampleSeries {
+    /// (time seconds, watts)
+    pub points: Vec<(f64, f64)>,
+}
+
+impl SampleSeries {
+    /// Trapezoidal energy over the series, joules.
+    pub fn energy_j(&self) -> f64 {
+        let mut e = 0.0;
+        for w in self.points.windows(2) {
+            let (t0, p0) = w[0];
+            let (t1, p1) = w[1];
+            e += 0.5 * (p0 + p1) * (t1 - t0);
+        }
+        e
+    }
+
+    /// Trapezoidal energy restricted to `[t_start, t_end]` (segments fully
+    /// inside the interval).
+    pub fn energy_between(&self, t_start: f64, t_end: f64) -> f64 {
+        let mut e = 0.0;
+        for w in self.points.windows(2) {
+            let (t0, p0) = w[0];
+            let (t1, p1) = w[1];
+            if t0 >= t_start && t1 <= t_end {
+                e += 0.5 * (p0 + p1) * (t1 - t0);
+            }
+        }
+        e
+    }
+
+    /// Mean of the power values.
+    pub fn mean_w(&self) -> f64 {
+        if self.points.is_empty() {
+            0.0
+        } else {
+            self.points.iter().map(|p| p.1).sum::<f64>() / self.points.len() as f64
+        }
+    }
+
+    /// Values only.
+    pub fn values(&self) -> Vec<f64> {
+        self.points.iter().map(|p| p.1).collect()
+    }
+
+    /// Times only.
+    pub fn times(&self) -> Vec<f64> {
+        self.points.iter().map(|p| p.0).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(n: usize) -> PowerTrace {
+        PowerTrace::from_samples(1000.0, 0.0, (0..n).map(|i| i as f32).collect())
+    }
+
+    #[test]
+    fn index_and_time_roundtrip() {
+        let t = ramp(1000);
+        for i in [0usize, 1, 499, 999] {
+            assert_eq!(t.index_of(t.time_of(i)), i);
+        }
+    }
+
+    #[test]
+    fn index_clamps() {
+        let t = ramp(10);
+        assert_eq!(t.index_of(-5.0), 0);
+        assert_eq!(t.index_of(100.0), 9);
+    }
+
+    #[test]
+    fn window_mean_matches_direct() {
+        let t = ramp(1000);
+        let prefix = t.prefix_sums();
+        // window of 100 ms = 100 samples ending at t=0.5 (index 500)
+        let m = t.window_mean_with(&prefix, 0.5, 0.1);
+        // samples 401..=500 inclusive -> mean 450.5
+        assert!((m - 450.5).abs() < 1.0, "m={m}");
+    }
+
+    #[test]
+    fn window_mean_clamps_at_start() {
+        let t = ramp(100);
+        let m = t.window_mean(0.001, 10.0); // window far beyond trace start
+        // samples 0..=1 -> 0.5
+        assert!((m - 0.5).abs() < 0.51, "m={m}");
+    }
+
+    #[test]
+    fn energy_constant_power() {
+        let t = PowerTrace::from_samples(1000.0, 0.0, vec![200.0; 2000]);
+        assert!((t.energy_j() - 400.0).abs() < 1e-6);
+        assert!((t.energy_between(0.5, 1.5) - 200.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn downsample_halves() {
+        let t = ramp(1000);
+        let d = t.downsample(500.0);
+        assert_eq!(d.len(), 500);
+        assert_eq!(d.samples[1], 2.0);
+        assert!((d.hz - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn series_energy_trapezoid() {
+        let s = SampleSeries { points: vec![(0.0, 100.0), (1.0, 200.0), (2.0, 200.0)] };
+        assert!((s.energy_j() - (150.0 + 200.0)).abs() < 1e-9);
+    }
+}

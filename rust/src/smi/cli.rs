@@ -1,0 +1,147 @@
+//! nvidia-smi-compatible text output: `--query-gpu=... --format=csv`.
+//!
+//! The emulation is usable as a drop-in data source for tooling that
+//! parses nvidia-smi CSV logs (CarbonTracker-style collectors, §7): the
+//! same field names, the same `[N/A]` convention, the same two-decimal
+//! watt formatting.
+
+use super::NvidiaSmi;
+use crate::sim::profile::PowerField;
+
+/// A parsed `--query-gpu` field list.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum QueryField {
+    Name,
+    PowerDraw,
+    PowerDrawAverage,
+    PowerDrawInstant,
+    PowerLimit,
+    Timestamp,
+}
+
+impl QueryField {
+    /// Parse one field name as nvidia-smi spells it.
+    pub fn parse(s: &str) -> Option<QueryField> {
+        match s.trim() {
+            "name" => Some(QueryField::Name),
+            "power.draw" => Some(QueryField::PowerDraw),
+            "power.draw.average" => Some(QueryField::PowerDrawAverage),
+            "power.draw.instant" => Some(QueryField::PowerDrawInstant),
+            "power.limit" => Some(QueryField::PowerLimit),
+            "timestamp" => Some(QueryField::Timestamp),
+            _ => None,
+        }
+    }
+
+    /// CSV header, as nvidia-smi prints it.
+    pub fn header(&self) -> &'static str {
+        match self {
+            QueryField::Name => "name",
+            QueryField::PowerDraw => "power.draw [W]",
+            QueryField::PowerDrawAverage => "power.draw.average [W]",
+            QueryField::PowerDrawInstant => "power.draw.instant [W]",
+            QueryField::PowerLimit => "power.limit [W]",
+            QueryField::Timestamp => "timestamp",
+        }
+    }
+}
+
+/// Parse a full `--query-gpu=a,b,c` list; unknown fields are an error,
+/// like the real CLI.
+pub fn parse_query(list: &str) -> Result<Vec<QueryField>, String> {
+    list.split(',')
+        .map(|f| QueryField::parse(f).ok_or_else(|| format!("Field \"{}\" is not a valid field to query.", f.trim())))
+        .collect()
+}
+
+/// Render one CSV row at simulation time `t`.
+pub fn format_row(smi: &NvidiaSmi, fields: &[QueryField], t: f64) -> String {
+    fields
+        .iter()
+        .map(|f| match f {
+            QueryField::Name => smi.device.model.name.to_string(),
+            QueryField::PowerDraw => watt(smi.query(PowerField::Draw, t)),
+            QueryField::PowerDrawAverage => watt(smi.query(PowerField::Average, t)),
+            QueryField::PowerDrawInstant => watt(smi.query(PowerField::Instant, t)),
+            QueryField::PowerLimit => format!("{:.2} W", smi.device.model.power_limit_w),
+            QueryField::Timestamp => format!("{t:.3}"),
+        })
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+fn watt(v: Option<f64>) -> String {
+    match v {
+        Some(w) => format!("{w:.2} W"),
+        None => "[N/A]".to_string(),
+    }
+}
+
+/// Full CSV log: header + one row per polling instant (`-lms` emulation).
+pub fn format_log(smi: &NvidiaSmi, fields: &[QueryField], period_s: f64, t0: f64, t1: f64) -> String {
+    let mut out = String::new();
+    out.push_str(&fields.iter().map(|f| f.header()).collect::<Vec<_>>().join(", "));
+    out.push('\n');
+    let mut t = t0;
+    while t < t1 {
+        out.push_str(&format_row(smi, fields, t));
+        out.push('\n');
+        t += period_s;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::activity::ActivitySignal;
+    use crate::sim::device::GpuDevice;
+    use crate::sim::profile::{find_model, DriverEpoch};
+
+    fn smi(driver: DriverEpoch) -> NvidiaSmi {
+        let device = GpuDevice::new(find_model("RTX 3090").unwrap(), 0, 3);
+        let truth = device.synthesize(&ActivitySignal::burst(0.5, 2.0, 1.0), 0.0, 3.0);
+        NvidiaSmi::attach(device, driver, &truth, 5)
+    }
+
+    #[test]
+    fn parse_accepts_real_field_names() {
+        let q = parse_query("timestamp,name,power.draw,power.draw.instant").unwrap();
+        assert_eq!(q.len(), 4);
+        assert_eq!(q[2], QueryField::PowerDraw);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_fields() {
+        let e = parse_query("power.draw,bogus.field").unwrap_err();
+        assert!(e.contains("bogus.field"));
+    }
+
+    #[test]
+    fn row_formats_watts_with_two_decimals() {
+        let s = smi(DriverEpoch::Post530);
+        let fields = parse_query("name,power.draw").unwrap();
+        let row = format_row(&s, &fields, 2.0);
+        assert!(row.starts_with("RTX 3090, "));
+        assert!(row.ends_with(" W"), "{row}");
+        let w: f64 = row.split(", ").nth(1).unwrap().trim_end_matches(" W").parse().unwrap();
+        assert!(w > 100.0);
+    }
+
+    #[test]
+    fn unsupported_fields_print_na() {
+        let s = smi(DriverEpoch::Pre530);
+        let fields = parse_query("power.draw.instant").unwrap();
+        assert_eq!(format_row(&s, &fields, 2.0), "[N/A]");
+    }
+
+    #[test]
+    fn log_has_header_and_rows() {
+        let s = smi(DriverEpoch::Post530);
+        let fields = parse_query("timestamp,power.draw").unwrap();
+        let log = format_log(&s, &fields, 0.1, 0.5, 1.5);
+        let lines: Vec<&str> = log.lines().collect();
+        assert_eq!(lines[0], "timestamp, power.draw [W]");
+        assert_eq!(lines.len(), 11);
+    }
+}

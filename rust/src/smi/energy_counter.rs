@@ -1,0 +1,130 @@
+//! Extension experiment: the NVML total-energy counter
+//! (`nvmlDeviceGetTotalEnergyConsumption`, Volta+).
+//!
+//! The paper's future-work question is whether the millijoule counter
+//! sidesteps the "part-time" power problem. We model both designs found in
+//! the field:
+//!   * a counter that integrates the *full-rate internal* sensor
+//!     (continuous integration — the ideal case), and
+//!   * a counter that integrates the same *windowed* samples the power
+//!     field reports (inherits the A100's 75% blindness).
+//! The `experiments::ablations` module compares them against the PMD.
+
+use crate::sim::device::GpuDevice;
+use crate::sim::profile::PipelineSpec;
+use crate::sim::trace::PowerTrace;
+
+/// Which internal signal the counter integrates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CounterDesign {
+    /// Integrates the true board power continuously (ideal).
+    Continuous,
+    /// Integrates one boxcar sample per update period (windowed).
+    Windowed,
+}
+
+/// An NVML-style monotonically-increasing energy counter, millijoules.
+#[derive(Debug, Clone)]
+pub struct EnergyCounter {
+    pub design: CounterDesign,
+    /// (time, mJ since boot) — counter values at update instants.
+    pub samples: Vec<(f64, u64)>,
+}
+
+/// Realise the counter over a ground-truth capture.
+pub fn run_counter(
+    device: &GpuDevice,
+    spec: PipelineSpec,
+    truth: &PowerTrace,
+    design: CounterDesign,
+) -> EnergyCounter {
+    let update_s = spec.update_ms / 1000.0;
+    let window_s = match spec.kind {
+        crate::sim::profile::PipelineKind::Boxcar { window_ms } => window_ms / 1000.0,
+        _ => update_s,
+    };
+    let prefix = truth.prefix_sums();
+    let mut samples = Vec::new();
+    let mut acc_mj = 0.0f64;
+    let mut t = truth.t0 + update_s;
+    let mut t_prev = truth.t0;
+    while t < truth.t_end() {
+        let p = match design {
+            // continuous: the true mean power over the whole update interval
+            CounterDesign::Continuous => truth.window_mean_with(&prefix, t, t - t_prev),
+            // windowed: only the trailing window is visible
+            CounterDesign::Windowed => truth.window_mean_with(&prefix, t, window_s),
+        };
+        acc_mj += device.tolerance.apply(p) * (t - t_prev) * 1000.0;
+        samples.push((t, acc_mj as u64));
+        t_prev = t;
+        t += update_s;
+    }
+    EnergyCounter { design, samples }
+}
+
+impl EnergyCounter {
+    /// Energy between two times, joules (reads the counter like a client
+    /// would: difference of the latest samples at each time).
+    pub fn energy_between_j(&self, t0: f64, t1: f64) -> f64 {
+        let at = |t: f64| -> u64 {
+            self.samples
+                .iter()
+                .take_while(|(ts, _)| *ts <= t)
+                .last()
+                .map(|(_, mj)| *mj)
+                .unwrap_or(0)
+        };
+        (at(t1).saturating_sub(at(t0))) as f64 / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::activity::ActivitySignal;
+    use crate::sim::profile::find_model;
+
+    fn capture() -> (GpuDevice, PowerTrace) {
+        let device = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, 91);
+        // aliased square wave: the adversarial case for the 25/100 window
+        let act = ActivitySignal::square_wave(0.5, 0.1004, 0.5, 1.0, 60);
+        let truth = device.synthesize(&act, 0.0, 7.0);
+        (device, truth)
+    }
+
+    #[test]
+    fn counter_is_monotonic() {
+        let (device, truth) = capture();
+        for design in [CounterDesign::Continuous, CounterDesign::Windowed] {
+            let c = run_counter(&device, PipelineSpec::boxcar(100.0, 25.0), &truth, design);
+            assert!(c.samples.windows(2).all(|w| w[1].1 >= w[0].1), "{design:?}");
+            assert!(c.samples.len() > 60);
+        }
+    }
+
+    #[test]
+    fn continuous_counter_beats_windowed_on_a100() {
+        // the paper-shaped result: a counter that integrates continuously is
+        // immune to the 25/100 blindness; one that integrates windowed
+        // samples inherits it
+        let (device, truth) = capture();
+        let spec = PipelineSpec::boxcar(100.0, 25.0);
+        let cont = run_counter(&device, spec, &truth, CounterDesign::Continuous);
+        let wind = run_counter(&device, spec, &truth, CounterDesign::Windowed);
+        let want = device.tolerance.apply(truth.energy_between(1.0, 6.0) / 5.0) * 5.0;
+        let e_c = cont.energy_between_j(1.0, 6.0);
+        let e_w = wind.energy_between_j(1.0, 6.0);
+        let err = |e: f64| 100.0 * (e - want).abs() / want;
+        assert!(err(e_c) < 2.0, "continuous err {:.2}%", err(e_c));
+        assert!(err(e_c) < err(e_w), "continuous {:.2}% !< windowed {:.2}%", err(e_c), err(e_w));
+    }
+
+    #[test]
+    fn energy_between_handles_out_of_range() {
+        let (device, truth) = capture();
+        let c = run_counter(&device, PipelineSpec::boxcar(100.0, 25.0), &truth, CounterDesign::Continuous);
+        assert_eq!(c.energy_between_j(-5.0, -1.0), 0.0);
+        assert!(c.energy_between_j(0.0, 100.0) > 0.0);
+    }
+}

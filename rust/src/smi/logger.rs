@@ -1,0 +1,143 @@
+//! Polling logger: `nvidia-smi --query-gpu=... -lms <period>` emulation.
+//!
+//! The CLI's actual query period "can deviate by several milliseconds"
+//! (paper §4.1); the poller reproduces that jitter so the update-period
+//! histogram experiment (Fig. 6) sees realistic data.
+
+use super::NvidiaSmi;
+use crate::sim::profile::PowerField;
+use crate::sim::trace::SampleSeries;
+
+/// A captured polling session.
+#[derive(Debug, Clone, Default)]
+pub struct PollLog {
+    /// (query time, reported watts); unsupported queries are skipped.
+    pub series: SampleSeries,
+    /// Requested cadence, seconds.
+    pub period_s: f64,
+}
+
+impl PollLog {
+    /// Lengths (in consecutive queries) of runs with an identical reported
+    /// value — the paper's method for measuring the power update period.
+    pub fn constant_run_lengths(&self) -> Vec<usize> {
+        let mut runs = Vec::new();
+        let pts = &self.series.points;
+        if pts.is_empty() {
+            return runs;
+        }
+        let mut len = 1usize;
+        for w in pts.windows(2) {
+            if (w[1].1 - w[0].1).abs() < 1e-9 {
+                len += 1;
+            } else {
+                runs.push(len);
+                len = 1;
+            }
+        }
+        runs.push(len);
+        runs
+    }
+
+    /// Durations (seconds) between value *changes* — the observable power
+    /// update periods.
+    pub fn update_periods(&self) -> Vec<f64> {
+        let pts = &self.series.points;
+        let mut out = Vec::new();
+        let mut last_change_t = match pts.first() {
+            Some(p) => p.0,
+            None => return out,
+        };
+        for w in pts.windows(2) {
+            if (w[1].1 - w[0].1).abs() >= 1e-9 {
+                out.push(w[1].0 - last_change_t);
+                last_change_t = w[1].0;
+            }
+        }
+        out
+    }
+}
+
+/// Fixed-cadence poller with realistic timing jitter.
+#[derive(Debug, Clone, Copy)]
+pub struct Poller {
+    pub period_s: f64,
+    /// Jitter std-dev as a fraction of the period (clamped at ±3 ms).
+    pub jitter_frac: f64,
+}
+
+impl Poller {
+    pub fn new(period_s: f64) -> Self {
+        Poller { period_s, jitter_frac: 0.15 }
+    }
+
+    /// Poll `field` from `t0` to `t1`.
+    pub fn run(&self, smi: &NvidiaSmi, field: PowerField, t0: f64, t1: f64) -> PollLog {
+        let mut rng = smi.query_rng();
+        let mut points = Vec::new();
+        let mut t = t0;
+        while t < t1 {
+            if let Some(w) = smi.query(field, t) {
+                points.push((t, w));
+            }
+            let jitter = rng
+                .normal_ms(0.0, self.period_s * self.jitter_frac)
+                .clamp(-0.003, 0.003);
+            t += (self.period_s + jitter).max(self.period_s * 0.25);
+        }
+        PollLog { series: SampleSeries { points }, period_s: self.period_s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::activity::ActivitySignal;
+    use crate::sim::device::GpuDevice;
+    use crate::sim::profile::{find_model, DriverEpoch};
+
+    fn smi() -> NvidiaSmi {
+        let device = GpuDevice::new(find_model("V100 PCIe").unwrap(), 0, 11);
+        // square wave so values actually change between updates
+        let act = ActivitySignal::square_wave(0.2, 0.02, 0.5, 1.0, 200);
+        let truth = device.synthesize(&act, 0.0, 5.0);
+        NvidiaSmi::attach(device, DriverEpoch::Pre530, &truth, 999)
+    }
+
+    #[test]
+    fn poll_count_matches_cadence() {
+        let s = smi();
+        let log = s.poll(PowerField::Draw, 0.005, 0.0, 5.0);
+        // 5 s at 5 ms -> ~1000 queries, allow jitter slack
+        assert!((900..=1100).contains(&log.series.points.len()), "{}", log.series.points.len());
+    }
+
+    #[test]
+    fn run_lengths_reflect_update_period() {
+        // V100: 20 ms update period, polled at 5 ms -> runs of ~4
+        let s = smi();
+        let log = s.poll(PowerField::Draw, 0.005, 0.5, 4.5);
+        let mut runs = log.constant_run_lengths();
+        runs.sort_unstable();
+        let med = runs[runs.len() / 2];
+        assert!((3..=5).contains(&med), "median run {med}");
+    }
+
+    #[test]
+    fn update_periods_median_20ms() {
+        let s = smi();
+        let log = s.poll(PowerField::Draw, 0.002, 0.5, 4.5);
+        let mut p = log.update_periods();
+        assert!(!p.is_empty());
+        p.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = p[p.len() / 2];
+        assert!((med - 0.020).abs() < 0.005, "median update period {med}");
+    }
+
+    #[test]
+    fn empty_log_no_panic() {
+        let log = PollLog::default();
+        assert!(log.constant_run_lengths().is_empty());
+        assert!(log.update_periods().is_empty());
+    }
+}

@@ -1,0 +1,139 @@
+//! `nvidia-smi` emulation: the query surface the paper studies (§2.4).
+//!
+//! A [`NvidiaSmi`] binds a simulated card + driver epoch to a captured
+//! ground-truth trace, realises the internal sensor streams for every power
+//! field, and answers queries exactly like the CLI: the reported value is
+//! the last *published* reading, held constant between updates, with query
+//! timestamps jittering by a few milliseconds around the requested cadence.
+
+pub mod cli;
+pub mod energy_counter;
+pub mod logger;
+
+pub use cli::{format_log, format_row, parse_query, QueryField};
+pub use energy_counter::{run_counter, CounterDesign, EnergyCounter};
+pub use logger::{PollLog, Poller};
+
+use crate::rng::Rng;
+use crate::sim::device::GpuDevice;
+use crate::sim::profile::{sensor_pipeline, DriverEpoch, PowerField};
+use crate::sim::sensor::{run_pipeline, SensorStream};
+use crate::sim::trace::PowerTrace;
+
+/// An nvidia-smi instance attached to one simulated GPU.
+#[derive(Debug)]
+pub struct NvidiaSmi {
+    pub device: GpuDevice,
+    pub driver: DriverEpoch,
+    /// Boot seed: fixes the unobservable sensor phase for this boot.
+    pub boot_seed: u64,
+    streams: Vec<(PowerField, SensorStream)>,
+    truth_t_end: f64,
+}
+
+impl NvidiaSmi {
+    /// "Boot" the driver against a ground-truth power capture: realise the
+    /// internal sensor stream for each supported field.
+    pub fn attach(device: GpuDevice, driver: DriverEpoch, truth: &PowerTrace, boot_seed: u64) -> Self {
+        let mut streams = Vec::new();
+        for field in PowerField::ALL {
+            let spec = sensor_pipeline(device.model.generation, field, driver);
+            let stream = run_pipeline(&device, spec, truth, boot_seed ^ field_tag(field));
+            streams.push((field, stream));
+        }
+        NvidiaSmi { device, driver, boot_seed, streams, truth_t_end: truth.t_end() }
+    }
+
+    /// The realised internal stream for a field (what the paper's
+    /// experiments reverse-engineer).
+    pub fn stream(&self, field: PowerField) -> &SensorStream {
+        &self.streams.iter().find(|(f, _)| *f == field).unwrap().1
+    }
+
+    /// Query a power field at time `t`, like
+    /// `nvidia-smi --query-gpu=power.draw`. `None` when the field/driver
+    /// combination is unsupported ("[N/A]") or before the first update.
+    pub fn query(&self, field: PowerField, t: f64) -> Option<f64> {
+        self.stream(field).value_at(t)
+    }
+
+    /// Poll a field at a fixed cadence over a window, with realistic
+    /// query-time jitter ("the actual period can deviate by several
+    /// milliseconds", §4.1).
+    pub fn poll(&self, field: PowerField, period_s: f64, t0: f64, t1: f64) -> PollLog {
+        Poller::new(period_s).run(self, field, t0, t1)
+    }
+
+    /// End of the attached capture.
+    pub fn t_end(&self) -> f64 {
+        self.truth_t_end
+    }
+
+    /// Per-boot RNG for query jitter, derived from the boot seed.
+    pub(crate) fn query_rng(&self) -> Rng {
+        Rng::new(self.boot_seed ^ 0x5149)
+    }
+}
+
+fn field_tag(field: PowerField) -> u64 {
+    match field {
+        PowerField::Draw => 0x11,
+        PowerField::Average => 0x22,
+        PowerField::Instant => 0x33,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::activity::ActivitySignal;
+    use crate::sim::profile::find_model;
+
+    fn smi_for(model: &str, driver: DriverEpoch) -> NvidiaSmi {
+        let device = GpuDevice::new(find_model(model).unwrap(), 0, 321);
+        let act = ActivitySignal::burst(1.0, 2.0, 1.0);
+        let truth = device.synthesize(&act, 0.0, 4.0);
+        NvidiaSmi::attach(device, driver, &truth, 555)
+    }
+
+    #[test]
+    fn query_returns_plausible_power() {
+        let smi = smi_for("RTX 3090", DriverEpoch::Post530);
+        let w = smi.query(PowerField::Instant, 2.5).unwrap();
+        assert!(w > 250.0 && w < 450.0, "w={w}");
+    }
+
+    #[test]
+    fn old_driver_lacks_new_fields() {
+        let smi = smi_for("RTX 3090", DriverEpoch::Pre530);
+        assert!(smi.query(PowerField::Instant, 2.0).is_none());
+        assert!(smi.query(PowerField::Average, 2.0).is_none());
+        assert!(smi.query(PowerField::Draw, 2.0).is_some());
+    }
+
+    #[test]
+    fn fermi_reports_nothing() {
+        let smi = smi_for("C2050", DriverEpoch::Pre530);
+        assert!(smi.query(PowerField::Draw, 2.0).is_none());
+    }
+
+    #[test]
+    fn value_held_between_updates() {
+        let smi = smi_for("RTX 3090", DriverEpoch::Post530);
+        // two queries 1 ms apart almost surely fall in the same 100 ms update
+        let a = smi.query(PowerField::Draw, 2.0500).unwrap();
+        let b = smi.query(PowerField::Draw, 2.0510).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn average_lags_instant_after_step() {
+        // post-530 H100: instant (25 ms window) reaches steady state long
+        // before average (1 s window)
+        let smi = smi_for("H100", DriverEpoch::Post530);
+        let t = 1.35; // 350 ms after the step
+        let inst = smi.query(PowerField::Instant, t).unwrap();
+        let avg = smi.query(PowerField::Average, t).unwrap();
+        assert!(inst > avg + 30.0, "inst={inst} avg={avg}");
+    }
+}

@@ -1,0 +1,203 @@
+//! Cross-module integration tests: the full measurement workflow composed
+//! end-to-end (simulator → sensor → characterisation → good practice →
+//! correction), the fleet coordinator, and the figure experiments'
+//! headline shapes. No artifacts required (see artifact_runtime.rs for the
+//! PJRT path).
+
+use gpupower::bench::workloads::{workload_by_name, WORKLOADS};
+use gpupower::bench::BenchmarkLoad;
+use gpupower::coordinator::{Fleet, FleetConfig, Scheduler};
+use gpupower::experiments::common::{measure_update_period, probe_transient, probe_window};
+use gpupower::measure::{
+    good_practice::measure_good_practice, naive::measure_naive, GoodPracticeConfig,
+    MeasurementRig, PowerCorrection, SensorCharacterization,
+};
+use gpupower::sim::{find_model, ActivitySignal, DriverEpoch, GpuDevice, PowerField};
+
+/// The complete paper workflow on an A100, with zero hidden knowledge:
+/// characterise the sensor from polled readings only, then use what was
+/// learned to measure a workload accurately.
+#[test]
+fn full_workflow_blind_characterise_then_measure() {
+    let device = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, 2001);
+    let (driver, field) = (DriverEpoch::Post530, PowerField::Instant);
+
+    // 1. characterise
+    let update = measure_update_period(&device, driver, field, 1).expect("update");
+    assert!((update - 0.1).abs() < 0.02, "update {update}");
+    let tr = probe_transient(&device, driver, field, 2).expect("transient");
+    let window = probe_window(&device, driver, field, update, 0.75, 3).expect("window");
+    assert!((window - 0.025).abs() < 0.01, "window {window}");
+
+    // 2. measure with the learned characterisation
+    let sensor = SensorCharacterization {
+        update_s: update,
+        window_s: window,
+        rise_s: tr.actual_rise_s.max(0.02) + 0.05,
+    };
+    let rig = MeasurementRig::new(device, driver, field, 2002);
+    let wl = workload_by_name("bert").unwrap();
+    let naive = measure_naive(&rig, wl, 0.02, 5);
+    let good = measure_good_practice(&rig, wl, &sensor, &GoodPracticeConfig::default());
+    assert!(
+        good.mean_pct_error.abs() < naive.pct_error.abs().max(8.0),
+        "good {:.2}% vs naive {:.2}%",
+        good.mean_pct_error,
+        naive.pct_error
+    );
+    assert!(good.std_pct_error < 3.0, "std {:.2}", good.std_pct_error);
+}
+
+/// Steady-state calibration + linear correction drives the residual error
+/// to near zero (paper §5.3).
+#[test]
+fn correction_pipeline_reaches_subpercent_error() {
+    let device = GpuDevice::new(find_model("RTX 3090").unwrap(), 0, 2010);
+    let (driver, field) = (DriverEpoch::Post530, PowerField::Instant);
+    let rig = MeasurementRig::new(device, driver, field, 2011);
+
+    // Fig. 8-style steady-state sweep against the PMD
+    let mut ref_w = Vec::new();
+    let mut rep_w = Vec::new();
+    for (i, util) in [0.2, 0.4, 0.6, 0.8, 1.0].iter().enumerate() {
+        let act = ActivitySignal::burst(0.5, 3.0, *util);
+        let cap = rig.capture(&act, 0.0, 4.0, 3000 + i as u64);
+        ref_w.push(cap.pmd_trace.window_mean(3.4, 0.8));
+        rep_w.push(cap.smi.query(field, 3.4).unwrap());
+    }
+    let corr = PowerCorrection::from_steady_state(&ref_w, &rep_w);
+    assert!(corr.r2 > 0.999, "calibration fit r2 {}", corr.r2);
+
+    let sensor = SensorCharacterization { update_s: 0.1, window_s: 0.1, rise_s: 0.25 };
+    let load = BenchmarkLoad::new(0.1, 1.0, 1);
+    let cfg = GoodPracticeConfig { correction: Some(corr), ..Default::default() };
+    let fixed = measure_good_practice(&rig, &load, &sensor, &cfg);
+    assert!(fixed.mean_pct_error.abs() < 1.5, "residual {:.2}%", fixed.mean_pct_error);
+}
+
+/// Every Table 2 workload is measurable on the flagship models without
+/// pathological errors under the good practice.
+#[test]
+fn all_workloads_measurable_on_flagships() {
+    for model in ["A100 PCIe-40G", "RTX 3090"] {
+        let device = GpuDevice::new(find_model(model).unwrap(), 0, 2020);
+        let spec = gpupower::sim::sensor_pipeline(
+            device.model.generation,
+            PowerField::Instant,
+            DriverEpoch::Post530,
+        );
+        let window = match spec.kind {
+            gpupower::sim::PipelineKind::Boxcar { window_ms } => window_ms / 1000.0,
+            k => panic!("{k:?}"),
+        };
+        let sensor = SensorCharacterization {
+            update_s: spec.update_ms / 1000.0,
+            window_s: window,
+            rise_s: device.model.rise_ms / 1000.0,
+        };
+        let rig = MeasurementRig::new(device, DriverEpoch::Post530, PowerField::Instant, 2021);
+        let cfg = GoodPracticeConfig { trials: 2, min_reps: 12, min_runtime_s: 1.5, ..Default::default() };
+        for wl in WORKLOADS {
+            let r = measure_good_practice(&rig, wl, &sensor, &cfg);
+            assert!(
+                r.mean_pct_error.abs() < 12.0,
+                "{model}/{}: {:.2}%",
+                wl.name,
+                r.mean_pct_error
+            );
+            assert!(r.mean_power_w > 50.0, "{model}/{}: {:.1} W", wl.name, r.mean_power_w);
+        }
+    }
+}
+
+/// Fleet coordinator: mixed fleet, per-node good practice beats naive in
+/// aggregate, unsupported nodes skipped, deterministic under concurrency.
+#[test]
+fn fleet_campaign_end_to_end() {
+    let fleet = Fleet::build(FleetConfig {
+        size: 12,
+        models: vec!["A100".into(), "3090".into(), "H100".into()],
+        driver: DriverEpoch::Post530,
+        field: PowerField::Instant,
+        seed: 31,
+    });
+    let sched = Scheduler {
+        concurrency: 4,
+        config: GoodPracticeConfig { trials: 2, min_reps: 8, min_runtime_s: 1.0, ..Default::default() },
+    };
+    let (outcomes, report) = sched.run(&fleet, None);
+    assert_eq!(outcomes.len(), 12);
+    assert!(report.good_pct().abs() < report.naive_pct().abs() + 3.0);
+    // the naive fleet error is material money at datacenter scale
+    let usd = report.annual_cost_error_usd(10_000, 0.15);
+    assert!(usd.is_finite() && usd >= 0.0);
+}
+
+/// Driver-version semantics flow through the whole stack: the same card
+/// reports different window behaviour on different drivers (Fig. 14).
+#[test]
+fn driver_epochs_change_observable_behaviour() {
+    let device = GpuDevice::new(find_model("RTX A6000").unwrap(), 0, 2030);
+    // pre-530 power.draw: 1 s window -> step rises slowly in smi
+    let pre = probe_transient(&device, DriverEpoch::Pre530, PowerField::Draw, 5).unwrap();
+    // 530 power.draw: 100 ms window -> fast
+    let v530 = probe_transient(&device, DriverEpoch::V530, PowerField::Draw, 5).unwrap();
+    // the A6000 board itself ramps over ~220 ms (case 2), so the 530
+    // driver's 100 ms window still shows a board-limited rise; the 1 s window
+    // dominates it by >2x
+    assert!(pre.smi_rise_s > 2.0 * v530.smi_rise_s, "pre {} vs 530 {}", pre.smi_rise_s, v530.smi_rise_s);
+}
+
+/// The paper's headline A100 finding, end to end: a 100 ms-periodic load
+/// measured naively swings wildly across boot phases; the shift strategy
+/// stabilises it.
+#[test]
+fn a100_part_time_headline() {
+    let cells = gpupower::experiments::fig17_case3::run_cell(0.1, 8, 8, 41);
+    let stable = cells.last().unwrap();
+    assert!(stable.corrected_std_pct < 6.0, "shifted std {:.2}", stable.corrected_std_pct);
+
+    let wild = gpupower::experiments::fig17_case3::run_cell(0.1, 0, 8, 41);
+    let unstable = wild.last().unwrap();
+    assert!(
+        unstable.corrected_std_pct > stable.corrected_std_pct,
+        "{} !> {}",
+        unstable.corrected_std_pct,
+        stable.corrected_std_pct
+    );
+}
+
+/// Extension modules compose: a recorded production trace replayed on a
+/// multi-GPU host, polled serially, with the Kepler RC distortion
+/// corrected before integration.
+#[test]
+fn replay_host_and_rc_correction_compose() {
+    use gpupower::bench::replay::{parse_trace_csv, production_trace, to_trace_csv};
+    use gpupower::estimator::rc_correction::invert_rc;
+    use gpupower::measure::energy::mean_power;
+    use gpupower::sim::host::Host;
+
+    // 1. generate a production trace and round-trip it through CSV
+    let trace = production_trace(0.5, 5.0, 25.0, 61);
+    let replayed = parse_trace_csv(&to_trace_csv(&trace)).unwrap();
+    assert_eq!(trace.segments.len(), replayed.segments.len());
+
+    // 2. replay on a 4-GPU K40 host (RC-distorted sensors, 15 ms updates)
+    let model = find_model("Tesla K40").unwrap();
+    let devices: Vec<GpuDevice> = (0..4).map(|i| GpuDevice::new(model, i, 62)).collect();
+    let truths: Vec<gpupower::sim::PowerTrace> =
+        devices.iter().map(|d| d.synthesize(&replayed, 0.0, 6.0)).collect();
+    let host = Host::attach(devices.clone(), DriverEpoch::Pre530, &truths, 0.003, 63);
+    let series = host.poll_all(PowerField::Draw, 0.01, 0.3, 5.8);
+    assert_eq!(series.len(), 4);
+
+    // 3. RC-correct each GPU's series and compare against its own truth
+    for (i, s) in series.iter().enumerate() {
+        assert!(s.points.len() > 100, "gpu {i}: {}", s.points.len());
+        let fixed = invert_rc(s, 0.080);
+        let p_fix = mean_power(&fixed, 1.0, 5.0);
+        let p_true = devices[i].tolerance.apply(truths[i].energy_between(1.0, 5.0) / 4.0);
+        let err = ((p_fix - p_true) / p_true).abs();
+        assert!(err < 0.08, "gpu {i}: corrected err {:.1}%", err * 100.0);
+    }
+}

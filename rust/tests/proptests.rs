@@ -1,0 +1,235 @@
+//! Property-based tests over the coordinator's invariants (routing,
+//! batching, state — here: sensor pipelines, window estimation, energy
+//! integration, statistics). The offline build has no proptest crate, so
+//! the harness below drives randomised cases from the crate's own
+//! deterministic RNG: every failure prints the case seed, which fully
+//! reproduces it.
+
+use gpupower::estimator::boxcar::{estimate_window, normalise, EstimatorConfig};
+use gpupower::estimator::linreg::fit;
+use gpupower::estimator::neldermead::{minimize_scalar, Options};
+use gpupower::estimator::stats::{mean, median, percentile, std_dev, violin};
+use gpupower::measure::energy::{integrate_clipped, mean_power};
+use gpupower::rng::Rng;
+use gpupower::sim::sensor::run_pipeline;
+use gpupower::sim::trace::SampleSeries;
+use gpupower::sim::{find_model, ActivitySignal, GpuDevice, PipelineSpec, PowerTrace, CATALOGUE};
+
+/// Run `n` random cases, reporting the failing case index.
+fn for_cases(n: u64, base_seed: u64, f: impl Fn(u64, &mut Rng)) {
+    for case in 0..n {
+        let seed = base_seed ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        f(seed, &mut rng);
+    }
+}
+
+#[test]
+fn prop_window_mean_bounded_by_extremes() {
+    for_cases(60, 1, |seed, rng| {
+        let n = 50 + (rng.below(2000) as usize);
+        let samples: Vec<f32> =
+            (0..n).map(|_| rng.uniform_range(10.0, 500.0) as f32).collect();
+        let t = PowerTrace::from_samples(1000.0, 0.0, samples.clone());
+        let prefix = t.prefix_sums();
+        let lo = samples.iter().cloned().fold(f32::MAX, f32::min) as f64;
+        let hi = samples.iter().cloned().fold(f32::MIN, f32::max) as f64;
+        for _ in 0..20 {
+            let at = rng.uniform_range(0.0, t.duration());
+            let w = rng.uniform_range(0.001, 3.0);
+            let m = t.window_mean_with(&prefix, at, w);
+            assert!(m >= lo - 1e-3 && m <= hi + 1e-3, "case {seed}: {m} outside [{lo},{hi}]");
+        }
+    });
+}
+
+#[test]
+fn prop_energy_additive_over_subintervals() {
+    for_cases(40, 2, |seed, rng| {
+        let n = 100 + (rng.below(900) as usize);
+        let pts: Vec<(f64, f64)> = (0..n)
+            .scan(0.0, |t, _| {
+                *t += rng.uniform_range(0.001, 0.1);
+                Some((*t, rng.uniform_range(20.0, 400.0)))
+            })
+            .collect();
+        let s = SampleSeries { points: pts.clone() };
+        let (t0, t1) = (pts[0].0, pts[n - 1].0);
+        let tm = t0 + (t1 - t0) * rng.uniform();
+        let whole = integrate_clipped(&s, t0, t1);
+        let parts = integrate_clipped(&s, t0, tm) + integrate_clipped(&s, tm, t1);
+        assert!((whole - parts).abs() < 1e-6 * whole.max(1.0), "case {seed}: {whole} != {parts}");
+    });
+}
+
+#[test]
+fn prop_mean_power_between_min_max() {
+    for_cases(40, 3, |seed, rng| {
+        let n = 10 + (rng.below(200) as usize);
+        let pts: Vec<(f64, f64)> = (0..n)
+            .scan(0.0, |t, _| {
+                *t += rng.uniform_range(0.01, 0.05);
+                Some((*t, rng.uniform_range(50.0, 300.0)))
+            })
+            .collect();
+        let lo = pts.iter().map(|p| p.1).fold(f64::MAX, f64::min);
+        let hi = pts.iter().map(|p| p.1).fold(f64::MIN, f64::max);
+        let s = SampleSeries { points: pts.clone() };
+        let m = mean_power(&s, pts[0].0, pts[n - 1].0);
+        assert!(m >= lo - 1e-9 && m <= hi + 1e-9, "case {seed}");
+    });
+}
+
+#[test]
+fn prop_sensor_pipeline_never_reports_outside_tolerance_envelope() {
+    // readings = gradient*boxcar + offset, and boxcar stays inside the
+    // trace extremes -> readings stay inside the transformed envelope
+    for_cases(25, 4, |seed, rng| {
+        let model = CATALOGUE[rng.below(CATALOGUE.len() as u64) as usize].clone();
+        let device = GpuDevice::new(
+            gpupower::sim::find_model(model.name).unwrap(),
+            (seed & 0xF) as u32,
+            seed,
+        );
+        let act = ActivitySignal::square_wave(0.2, 0.06, 0.5, 1.0, 30);
+        let truth = device.synthesize(&act, 0.0, 2.5);
+        let lo = truth.samples.iter().cloned().fold(f32::MAX, f32::min) as f64;
+        let hi = truth.samples.iter().cloned().fold(f32::MIN, f32::max) as f64;
+        let spec = PipelineSpec::boxcar(50.0, rng.uniform_range(5.0, 50.0));
+        let stream = run_pipeline(&device, spec, &truth, seed ^ 0xAB);
+        let t = &device.tolerance;
+        let env_lo = t.apply(lo).min(t.apply(hi)) - 0.01;
+        let env_hi = t.apply(lo).max(t.apply(hi)) + 0.01;
+        for r in &stream.readings {
+            assert!(
+                r.watts >= env_lo && r.watts <= env_hi,
+                "case {seed} ({}): {} outside [{env_lo},{env_hi}]",
+                model.name,
+                r.watts
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_window_estimator_recovers_random_windows() {
+    // the §4.3 estimator must recover arbitrary (not just catalogued)
+    // boxcar windows from observed readings
+    for_cases(10, 5, |seed, rng| {
+        let device = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, seed);
+        let update_ms = 100.0;
+        let window_ms = rng.uniform_range(15.0, 100.0);
+        let frac = [0.66, 0.75, 0.8, 1.25][rng.below(4) as usize];
+        let period_s = update_ms / 1000.0 * frac;
+        let act = ActivitySignal::square_wave(0.3, period_s, 0.5, 1.0, (8.5 / period_s) as usize);
+        let truth = device.synthesize(&act, 0.0, 9.0);
+        let stream =
+            run_pipeline(&device, PipelineSpec::boxcar(update_ms, window_ms), &truth, seed ^ 1);
+        let observed: Vec<(f64, f64)> = stream.readings.iter().map(|r| (r.t, r.watts)).collect();
+        let est = estimate_window(
+            &truth,
+            &observed,
+            EstimatorConfig { update_period_s: 0.1, ..Default::default() },
+        );
+        let err_ms = (est.window_s * 1000.0 - window_ms).abs();
+        assert!(err_ms < window_ms.max(20.0) * 0.45, "case {seed}: true {window_ms:.1}, est {:.1}", est.window_s * 1000.0);
+    });
+}
+
+#[test]
+fn prop_linreg_recovers_random_lines() {
+    for_cases(50, 6, |seed, rng| {
+        let slope = rng.uniform_range(-5.0, 5.0);
+        let icept = rng.uniform_range(-100.0, 100.0);
+        let noise = rng.uniform_range(0.0, 0.5);
+        let xs: Vec<f64> = (0..400).map(|i| i as f64 * 0.1).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| slope * x + icept + rng.normal_ms(0.0, noise)).collect();
+        let f = fit(&xs, &ys);
+        assert!((f.slope - slope).abs() < 0.05 + noise * 0.1, "case {seed}");
+        assert!((f.intercept - icept).abs() < 1.0 + noise, "case {seed}");
+    });
+}
+
+#[test]
+fn prop_neldermead_finds_random_quadratic_minima() {
+    for_cases(50, 7, |seed, rng| {
+        let x_star = rng.uniform_range(-50.0, 50.0);
+        let scale = rng.uniform_range(0.1, 10.0);
+        let r = minimize_scalar(
+            |x| scale * (x - x_star) * (x - x_star),
+            rng.uniform_range(-60.0, 60.0),
+            1.0,
+            Options { max_evals: 400, ..Default::default() },
+        );
+        assert!((r.x[0] - x_star).abs() < 1e-2, "case {seed}: {} vs {x_star}", r.x[0]);
+    });
+}
+
+#[test]
+fn prop_stats_invariants() {
+    for_cases(50, 8, |seed, rng| {
+        let n = 2 + rng.below(300) as usize;
+        let xs: Vec<f64> = (0..n).map(|_| rng.uniform_range(-1000.0, 1000.0)).collect();
+        let lo = xs.iter().cloned().fold(f64::MAX, f64::min);
+        let hi = xs.iter().cloned().fold(f64::MIN, f64::max);
+        let m = mean(&xs);
+        assert!(m >= lo - 1e-9 && m <= hi + 1e-9, "case {seed}");
+        assert!(median(&xs) >= lo && median(&xs) <= hi, "case {seed}");
+        assert!(std_dev(&xs) >= 0.0, "case {seed}");
+        assert!(percentile(&xs, 0.0) == lo && percentile(&xs, 100.0) == hi, "case {seed}");
+        let v = violin(&xs);
+        assert!(v.q1 <= v.median && v.median <= v.q3, "case {seed}");
+        assert!(v.lo_adjacent >= lo && v.hi_adjacent <= hi, "case {seed}");
+    });
+}
+
+#[test]
+fn prop_normalise_produces_zero_mean_unit_std() {
+    for_cases(50, 9, |seed, rng| {
+        let n = 3 + rng.below(500) as usize;
+        let mut xs: Vec<f64> = (0..n).map(|_| rng.uniform_range(-10.0, 400.0)).collect();
+        if normalise(&mut xs) {
+            let m = mean(&xs);
+            let s = std_dev(&xs);
+            assert!(m.abs() < 1e-9, "case {seed}: mean {m}");
+            assert!((s - 1.0).abs() < 1e-6, "case {seed}: std {s}");
+        }
+    });
+}
+
+#[test]
+fn prop_device_synthesis_deterministic_and_bounded() {
+    for_cases(20, 10, |seed, rng| {
+        let model = CATALOGUE[rng.below(CATALOGUE.len() as u64) as usize].clone();
+        let device = GpuDevice::new(gpupower::sim::find_model(model.name).unwrap(), 1, seed);
+        let act = ActivitySignal::burst(0.2, 1.0, rng.uniform());
+        let a = device.synthesize(&act, 0.0, 1.5);
+        let b = device.synthesize(&act, 0.0, 1.5);
+        assert_eq!(a.samples, b.samples, "case {seed}: determinism");
+        let limit = device.model.power_limit_w * 1.02 + 1e-6;
+        assert!(a.samples.iter().all(|&s| (0.0..=limit as f32).contains(&s)), "case {seed}");
+    });
+}
+
+#[test]
+fn prop_update_period_respected_for_random_specs() {
+    for_cases(15, 11, |seed, rng| {
+        let device = GpuDevice::new(find_model("RTX 3090").unwrap(), 0, seed);
+        let update_ms = rng.uniform_range(10.0, 150.0);
+        let spec = PipelineSpec::boxcar(update_ms, update_ms * rng.uniform_range(0.2, 1.0));
+        let act = ActivitySignal::square_wave(0.2, 0.03, 0.5, 1.0, 60);
+        let truth = device.synthesize(&act, 0.0, 3.0);
+        let stream = run_pipeline(&device, spec, &truth, seed);
+        let gaps: Vec<f64> = stream.readings.windows(2).map(|w| w[1].t - w[0].t).collect();
+        assert!(!gaps.is_empty(), "case {seed}");
+        let med = {
+            let mut g = gaps.clone();
+            g.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            g[g.len() / 2]
+        };
+        assert!(
+            (med - update_ms / 1000.0).abs() < update_ms / 1000.0 * 0.1 + 0.003,
+            "case {seed}: median gap {med} vs {update_ms} ms"
+        );
+    });
+}
