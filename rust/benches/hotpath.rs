@@ -2,16 +2,55 @@
 //!   L3 — trace synthesis (samples/s), prefix sums, boxcar emulation,
 //!        window estimation, sensor pipeline, fleet query routing;
 //!   L1/L2 — PJRT artifact execution latency (fma_chain, boxcar_emulate,
-//!        window_loss_grid, energy_pipeline).
+//!        window_loss_grid, energy_pipeline);
+//!   L4 — the fleet scheduler campaign: streaming pipeline vs the
+//!        materialise-everything baseline, with a counting allocator
+//!        proving the O(chunk)-per-node allocation claim and a bitwise
+//!        comparison proving identical `MeasurementOutcome`s.
 
 #[path = "harness.rs"]
 mod harness;
 use harness::{bench, report, BenchRow};
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use gpupower::coordinator::{CampaignConfig, Fleet, FleetConfig, Scheduler};
 use gpupower::estimator::boxcar::{estimate_window, window_loss, EstimatorConfig};
+use gpupower::measure::GoodPracticeConfig;
 use gpupower::runtime::ArtifactRuntime;
 use gpupower::sim::sensor::run_pipeline;
-use gpupower::sim::{find_model, ActivitySignal, GpuDevice, PipelineSpec};
+use gpupower::sim::{find_model, ActivitySignal, DriverEpoch, GpuDevice, PipelineSpec, PowerField};
+
+/// Counts every heap allocation (incl. realloc growth) on top of the
+/// system allocator, so the campaign bench can report allocations per
+/// node for both scheduler paths.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs_now() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
 
 fn main() {
     let mut rows: Vec<BenchRow> = Vec::new();
@@ -104,6 +143,79 @@ fn main() {
             }));
         }
         Err(e) => eprintln!("[bench] artifact benches skipped: {e}"),
+    }
+
+    // --- L4: scheduler campaign — streaming vs materialise-everything ---
+    // ISSUE 1 acceptance: the streaming campaign must measure the fleet
+    // with >=2x less wall-time or >=10x fewer heap allocations per node,
+    // with bit-for-bit identical MeasurementOutcome values.
+    {
+        let nodes: usize = std::env::var("CAMPAIGN_NODES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1000);
+        let fleet = Fleet::build(FleetConfig {
+            size: nodes,
+            models: vec!["A100".into()],
+            driver: DriverEpoch::Post530,
+            field: PowerField::Instant,
+            seed: 5,
+        });
+        let cfg =
+            GoodPracticeConfig { trials: 1, min_reps: 4, min_runtime_s: 0.5, ..Default::default() };
+        let sched = Scheduler { concurrency: Scheduler::default().concurrency, config: cfg };
+        let wl = &gpupower::bench::workloads::WORKLOADS[0];
+
+        let mut base_out = None;
+        let a0 = allocs_now();
+        let mut r = bench(&format!("fleet campaign {nodes} nodes, materialised"), 0, 1, || {
+            base_out = Some(sched.run(&fleet, Some(wl)));
+        });
+        let base_allocs = allocs_now() - a0;
+        let base_ms = r.mean_ms;
+        r.note = format!("{:.1} allocs/node", base_allocs as f64 / nodes as f64);
+        rows.push(r);
+
+        let mut stream_out = None;
+        let a1 = allocs_now();
+        let mut r = bench(&format!("fleet campaign {nodes} nodes, streaming"), 0, 1, || {
+            stream_out = Some(sched.run_campaign(&fleet, Some(wl), CampaignConfig::default()));
+        });
+        let stream_allocs = allocs_now() - a1;
+        let stream_ms = r.mean_ms;
+        r.note = format!("{:.2} allocs/node", stream_allocs as f64 / nodes as f64);
+        rows.push(r);
+
+        // identical outcomes, bit for bit
+        let (base_outcomes, _) = base_out.unwrap();
+        let (stream_outcomes, _) = stream_out.unwrap();
+        assert_eq!(base_outcomes.len(), stream_outcomes.len());
+        for (a, b) in base_outcomes.iter().zip(&stream_outcomes) {
+            assert_eq!(a.node_id, b.node_id);
+            assert_eq!(a.naive_pct_error.to_bits(), b.naive_pct_error.to_bits());
+            assert_eq!(a.good_pct_error.to_bits(), b.good_pct_error.to_bits());
+            assert_eq!(a.power_w.to_bits(), b.power_w.to_bits());
+            assert_eq!(a.truth_j.to_bits(), b.truth_j.to_bits());
+            assert_eq!(a.window_s.to_bits(), b.window_s.to_bits());
+        }
+
+        let alloc_ratio = base_allocs as f64 / stream_allocs.max(1) as f64;
+        let speedup = base_ms / stream_ms.max(1e-9);
+        println!(
+            "\ncampaign ({nodes} nodes): materialised {:.0} allocs/node, {:.0} ms | streaming {:.2} allocs/node, {:.0} ms",
+            base_allocs as f64 / nodes as f64,
+            base_ms,
+            stream_allocs as f64 / nodes as f64,
+            stream_ms
+        );
+        println!(
+            "campaign win: {alloc_ratio:.1}x fewer allocations, {speedup:.2}x wall-time, outcomes bit-for-bit identical"
+        );
+        assert!(
+            alloc_ratio >= 10.0 || speedup >= 2.0,
+            "streaming campaign must win >=10x on allocations or >=2x on wall-time \
+             (got {alloc_ratio:.1}x allocs, {speedup:.2}x time)"
+        );
     }
 
     report("hot-path benches", &rows);

@@ -12,7 +12,7 @@ pub mod replay;
 pub mod workloads;
 
 pub use calibrate::{calibrate, Calibration};
-pub use replay::{parse_trace_csv, production_trace, to_trace_csv};
+pub use replay::{parse_trace_csv, production_trace, to_trace_csv, ReplayLoad};
 pub use workloads::{workload_by_name, Workload, WORKLOADS};
 
 use crate::sim::activity::ActivitySignal;

@@ -8,8 +8,9 @@
 //! traces (Poisson request arrivals with log-normal-ish service times) so
 //! the fleet experiments can run on non-periodic load shapes.
 
+use crate::measure::RepeatableLoad;
 use crate::rng::Rng;
-use crate::sim::activity::ActivitySignal;
+use crate::sim::activity::{ActivitySignal, Segment};
 
 /// Parse a `t,util` CSV (header optional; comments with '#') into an
 /// activity signal. Each row starts a segment lasting until the next row;
@@ -97,6 +98,87 @@ pub fn production_trace(
     act
 }
 
+/// A recorded trace as a repeatable measurement load: one "iteration" is
+/// the whole recorded span, replayed back-to-back. This plugs recorded
+/// production telemetry (DCGM/Prometheus exports parsed by
+/// [`parse_trace_csv`], or [`production_trace`] shapes) straight into the
+/// naive/good-practice procedures and the scheduler's streaming pipeline.
+#[derive(Debug, Clone)]
+pub struct ReplayLoad {
+    /// Busy segments normalised so the recording starts at t = 0.
+    base: Vec<Segment>,
+    span_s: f64,
+    name: String,
+}
+
+impl ReplayLoad {
+    /// Wrap a recorded activity signal (must contain at least one busy
+    /// segment; the recording's leading idle time is stripped).
+    pub fn new(name: impl Into<String>, recorded: &ActivitySignal) -> Result<Self, String> {
+        let Some(first) = recorded.segments.first() else {
+            return Err("replay load needs at least one busy segment".into());
+        };
+        let t0 = first.t0;
+        let span_s = recorded.t_end() - t0;
+        if span_s <= 0.0 {
+            return Err("replay load needs a positive recorded span".into());
+        }
+        let base = recorded
+            .segments
+            .iter()
+            .map(|s| Segment { t0: s.t0 - t0, t1: s.t1 - t0, util: s.util })
+            .collect();
+        Ok(ReplayLoad { base, span_s, name: name.into() })
+    }
+
+    /// Parse a `t,util` CSV straight into a load.
+    pub fn from_csv(name: impl Into<String>, text: &str) -> Result<Self, String> {
+        ReplayLoad::new(name, &parse_trace_csv(text)?)
+    }
+
+    /// Duration of one replayed iteration (the recorded span), seconds.
+    pub fn span_s(&self) -> f64 {
+        self.span_s
+    }
+}
+
+impl RepeatableLoad for ReplayLoad {
+    fn iteration_s(&self) -> f64 {
+        self.span_s
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn build(&self, t_start: f64, reps: usize, reps_per_shift: usize, shift_s: f64) -> ActivitySignal {
+        let mut out = ActivitySignal::idle();
+        self.build_into(t_start, reps, reps_per_shift, shift_s, &mut out);
+        out
+    }
+
+    fn build_into(
+        &self,
+        t_start: f64,
+        reps: usize,
+        reps_per_shift: usize,
+        shift_s: f64,
+        out: &mut ActivitySignal,
+    ) {
+        out.segments.clear();
+        let mut t = t_start;
+        for k in 0..reps {
+            for seg in &self.base {
+                out.push(t + seg.t0, seg.t1 - seg.t0, seg.util);
+            }
+            t += self.span_s;
+            if reps_per_shift > 0 && (k + 1) % reps_per_shift == 0 && k + 1 < reps {
+                t += shift_s;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,6 +230,46 @@ mod tests {
         for w in act.segments.windows(2) {
             assert!(w[1].t0 >= w[0].t1 - 1e-12);
         }
+    }
+
+    #[test]
+    fn replay_load_repeats_recording() {
+        let recorded = production_trace(2.0, 1.5, 30.0, 9);
+        let load = ReplayLoad::new("prod", &recorded).unwrap();
+        assert!((load.span_s() - (recorded.t_end() - recorded.t_start())).abs() < 1e-12);
+        let act = load.build(0.5, 3, 0, 0.0);
+        assert_eq!(act.segments.len(), 3 * recorded.segments.len());
+        assert!((act.t_start() - 0.5).abs() < 1e-12);
+        let with_shift = load.build(0.5, 4, 2, 0.1);
+        assert!((with_shift.t_end() - (0.5 + 4.0 * load.span_s() + 0.1)).abs() < 1e-9);
+        // build_into matches build exactly
+        let mut reused = ActivitySignal::idle();
+        load.build_into(0.5, 3, 0, 0.0, &mut reused);
+        assert_eq!(reused.segments, act.segments);
+    }
+
+    #[test]
+    fn replay_load_measures_with_both_pipelines() {
+        use crate::measure::{
+            measure_naive_streaming, naive::measure_naive, MeasureScratch, MeasurementRig,
+        };
+        use crate::sim::profile::{find_model, DriverEpoch, PowerField};
+        let recorded = production_trace(0.0, 1.2, 40.0, 15);
+        let load = ReplayLoad::new("prod", &recorded).unwrap();
+        let device = crate::sim::GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, 77);
+        let rig = MeasurementRig::new(device, DriverEpoch::Post530, PowerField::Instant, 78);
+        let a = measure_naive(&rig, &load, 0.02, 4);
+        assert!(a.energy_j > 0.0 && a.truth_j > 0.0, "{a:?}");
+        let mut scratch = MeasureScratch::new();
+        let b = measure_naive_streaming(&rig, &load, 0.02, 4, &mut scratch);
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        assert_eq!(a.truth_j.to_bits(), b.truth_j.to_bits());
+    }
+
+    #[test]
+    fn replay_load_rejects_empty_recordings() {
+        assert!(ReplayLoad::new("empty", &ActivitySignal::idle()).is_err());
+        assert!(ReplayLoad::from_csv("bad", "0.0,0.5").is_err());
     }
 
     #[test]

@@ -107,9 +107,28 @@ pub struct FleetReport {
     /// Per-node percentage errors (naive, good practice).
     pub node_errors: Vec<(f64, f64)>,
     pub nodes_measured: usize,
+    /// Total measured window time across nodes, seconds (Σ per-node
+    /// kernel-execution windows). Turns the energy sums back into a
+    /// fleet-average draw per GPU.
+    pub measured_s: f64,
 }
 
 impl FleetReport {
+    /// Aggregate per-node outcomes (shared by `Scheduler::run` and the
+    /// streaming campaign mode, so both produce identical reports).
+    pub fn from_outcomes(outcomes: &[super::scheduler::MeasurementOutcome]) -> Self {
+        let mut report = FleetReport::default();
+        for o in outcomes {
+            report.truth_j += o.truth_j;
+            report.naive_j += o.truth_j * (1.0 + o.naive_pct_error / 100.0);
+            report.good_j += o.truth_j * (1.0 + o.good_pct_error / 100.0);
+            report.measured_s += o.window_s;
+            report.node_errors.push((o.naive_pct_error, o.good_pct_error));
+        }
+        report.nodes_measured = outcomes.len();
+        report
+    }
+
     /// Fleet-level percentage error of the naive accounting.
     pub fn naive_pct(&self) -> f64 {
         100.0 * (self.naive_j - self.truth_j) / self.truth_j
@@ -120,21 +139,36 @@ impl FleetReport {
         100.0 * (self.good_j - self.truth_j) / self.truth_j
     }
 
-    /// Annualised cost error in USD for a fleet scaled to `n_gpus`,
-    /// assuming the measured-window power mix is representative and
-    /// `usd_per_kwh` electricity (the paper's $1M/year example).
-    pub fn annual_cost_error_usd(&self, n_gpus: usize, usd_per_kwh: f64) -> f64 {
-        if self.truth_j <= 0.0 || self.nodes_measured == 0 {
+    /// Time-weighted mean ground-truth draw per measured GPU, watts:
+    /// `Σ energy / Σ window time` over the measured nodes.
+    pub fn mean_node_power_w(&self) -> f64 {
+        if self.measured_s <= 0.0 {
+            0.0
+        } else {
+            self.truth_j / self.measured_s
+        }
+    }
+
+    /// The naive method's accounting error per GPU, watts: the fractional
+    /// energy error applied to the fleet's measured mean draw.
+    pub fn err_w_per_gpu(&self) -> f64 {
+        if self.truth_j <= 0.0 {
             return 0.0;
         }
-        let err_w_per_gpu = (self.naive_j - self.truth_j) / self.truth_j
-            * (self.truth_j / self.nodes_measured as f64); // J error per GPU over the window
-        // scale: J error per measured second per GPU → W → kWh/year
-        let _ = err_w_per_gpu;
-        let frac_err = (self.naive_j - self.truth_j) / self.truth_j;
-        let mean_w = 300.0; // representative data-center GPU draw
-        let kwh_year = mean_w * 24.0 * 365.0 / 1000.0;
-        frac_err.abs() * kwh_year * usd_per_kwh * n_gpus as f64
+        (self.naive_j - self.truth_j) / self.truth_j * self.mean_node_power_w()
+    }
+
+    /// Annualised cost error in USD for a fleet scaled to `n_gpus`,
+    /// assuming the measured-window power mix is representative and
+    /// `usd_per_kwh` electricity (the paper's $1M/year example). The
+    /// per-GPU mean draw is derived from the measured energies and window
+    /// durations — not a hard-coded guess.
+    pub fn annual_cost_error_usd(&self, n_gpus: usize, usd_per_kwh: f64) -> f64 {
+        if self.truth_j <= 0.0 || self.nodes_measured == 0 || self.measured_s <= 0.0 {
+            return 0.0;
+        }
+        let kwh_year = self.err_w_per_gpu().abs() * 24.0 * 365.0 / 1000.0;
+        kwh_year * usd_per_kwh * n_gpus as f64
     }
 }
 
@@ -176,10 +210,48 @@ mod tests {
 
     #[test]
     fn cost_error_scales_with_fleet() {
-        let r = FleetReport { truth_j: 1000.0, naive_j: 1050.0, good_j: 1010.0, node_errors: vec![], nodes_measured: 10 };
+        // 3000 J of truth over 10 s of measured windows -> 300 W mean draw;
+        // naive overcounts by 5% -> 15 W per GPU, year-round
+        let r = FleetReport {
+            truth_j: 3000.0,
+            naive_j: 3150.0,
+            good_j: 3030.0,
+            node_errors: vec![],
+            nodes_measured: 10,
+            measured_s: 10.0,
+        };
+        assert!((r.mean_node_power_w() - 300.0).abs() < 1e-9);
+        assert!((r.err_w_per_gpu() - 15.0).abs() < 1e-9);
         let c10k = r.annual_cost_error_usd(10_000, 0.15);
         let c1k = r.annual_cost_error_usd(1_000, 0.15);
         assert!((c10k / c1k - 10.0).abs() < 1e-9);
+        // 15 W * 8760 h = 131.4 kWh/GPU-year -> $19.71/GPU-year at $0.15
+        assert!((c10k - 15.0 * 8.760 * 0.15 * 10_000.0).abs() < 1.0, "c10k = {c10k}");
         assert!(c10k > 100_000.0, "5% of 10k GPUs is real money: {c10k}");
+    }
+
+    #[test]
+    fn cost_error_tracks_measured_draw_not_a_constant() {
+        // same fractional error, half the mean draw -> half the cost error
+        let hot = FleetReport {
+            truth_j: 3000.0,
+            naive_j: 3150.0,
+            good_j: 3000.0,
+            node_errors: vec![],
+            nodes_measured: 5,
+            measured_s: 10.0,
+        };
+        let cool = FleetReport { measured_s: 20.0, ..hot.clone() };
+        let c_hot = hot.annual_cost_error_usd(1_000, 0.15);
+        let c_cool = cool.annual_cost_error_usd(1_000, 0.15);
+        assert!((c_hot / c_cool - 2.0).abs() < 1e-9, "{c_hot} vs {c_cool}");
+    }
+
+    #[test]
+    fn cost_error_degenerate_reports_are_zero() {
+        let empty = FleetReport::default();
+        assert_eq!(empty.annual_cost_error_usd(10_000, 0.15), 0.0);
+        assert_eq!(empty.mean_node_power_w(), 0.0);
+        assert_eq!(empty.err_w_per_gpu(), 0.0);
     }
 }

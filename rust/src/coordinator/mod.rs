@@ -1,15 +1,19 @@
 //! Fleet coordinator: datacenter-scale measurement campaigns over many
-//! simulated GPUs (tokio).
+//! simulated GPUs, on a dependency-free std scoped-thread worker pool
+//! (this environment is offline — no async runtime is involved).
 //!
 //! The paper's motivation is fleet-level: "for a data centre with 10,000
 //! GPUs [a ±5% error] would lead to an extra $1 million in electricity cost
 //! yearly". The coordinator instantiates a mixed fleet from the catalogue,
 //! runs workloads on every card concurrently, measures each with both the
 //! naive method and the good practice, and aggregates the fleet-level
-//! energy accounting error.
+//! energy accounting error. The streaming campaign mode
+//! ([`Scheduler::run_campaign`]) shards the fleet into contiguous node
+//! ranges with deterministic per-shard seeds and reuses one scratch arena
+//! per worker, so campaigns scale past the one-Vec-per-node design.
 
 pub mod fleet;
 pub mod scheduler;
 
 pub use fleet::{Fleet, FleetConfig, FleetReport};
-pub use scheduler::{MeasurementJob, MeasurementOutcome, Scheduler};
+pub use scheduler::{shard_seed, CampaignConfig, MeasurementJob, MeasurementOutcome, Scheduler};

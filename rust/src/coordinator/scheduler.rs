@@ -1,16 +1,31 @@
 //! Measurement scheduler: run measurement jobs across the fleet
 //! concurrently (std scoped threads — this environment is offline, so the
 //! coordinator uses a dependency-free worker pool) and aggregate results.
+//!
+//! Two execution modes:
+//! * [`Scheduler::run`] — the materialised reference path: one
+//!   `PowerTrace` + `NvidiaSmi` per capture, jobs pulled from a shared
+//!   queue. Kept as the baseline the campaign mode is benchmarked (and
+//!   bit-for-bit verified) against.
+//! * [`Scheduler::run_campaign`] — the fleet-scale streaming path: jobs
+//!   are processed in **shards** (contiguous node ranges with
+//!   deterministic per-shard seeds, no per-node queue entries), and every
+//!   worker drives the chunked capture through one reused
+//!   [`MeasureScratch`] arena, so a 1k–10k-node campaign does O(chunk)
+//!   allocation per node instead of O(trace).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
 use super::fleet::{Fleet, FleetReport};
 use crate::bench::workloads::{Workload, WORKLOADS};
+use crate::measure::good_practice::good_practice_core;
 use crate::measure::{
-    good_practice::measure_good_practice, naive::measure_naive, GoodPracticeConfig,
-    MeasurementRig, SensorCharacterization,
+    good_practice::measure_good_practice, naive::measure_naive, naive::measure_naive_streaming,
+    GoodPracticeConfig, MeasureScratch, MeasurementRig, SensorCharacterization,
 };
+use crate::rng::splitmix64;
 use crate::sim::profile::sensor_pipeline;
 use crate::sim::PipelineKind;
 
@@ -33,6 +48,122 @@ pub struct MeasurementOutcome {
     pub power_w: f64,
     /// One-iteration ground-truth energy, joules.
     pub truth_j: f64,
+    /// Duration of the naive measurement window, seconds (feeds the fleet
+    /// report's mean-draw derivation).
+    pub window_s: f64,
+}
+
+/// Sharding parameters for [`Scheduler::run_campaign`].
+#[derive(Debug, Clone, Copy)]
+pub struct CampaignConfig {
+    /// Nodes per shard (contiguous node-id ranges; workers claim whole
+    /// shards, so queue traffic is O(nodes / shard_size)).
+    pub shard_size: usize,
+    /// Campaign seed. `0` (the default) reproduces [`Scheduler::run`]
+    /// bit-for-bit; any other value mixes a deterministic per-shard seed
+    /// into every node's *rig* seed, re-randomising the whole per-node
+    /// measurement setup — sensor boot phases, trial alignment delays,
+    /// and the PMD instrument pairing — while staying reproducible for a
+    /// fixed `(seed, shard_size)`. Use it to model independent repeats of
+    /// a campaign, not a pure re-boot (a re-boot alone would keep the
+    /// same physical PMD).
+    pub seed: u64,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        CampaignConfig { shard_size: 64, seed: 0 }
+    }
+}
+
+/// Deterministic per-shard seed (independent of worker count and claim
+/// order).
+pub fn shard_seed(campaign_seed: u64, shard_index: usize) -> u64 {
+    let mut s = campaign_seed ^ (shard_index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    splitmix64(&mut s)
+}
+
+/// Per-node rig seed; `extra` is 0 in reference mode (and for campaign
+/// seed 0), keeping both schedulers on identical boot phases.
+fn node_rig_seed(node_id: usize, extra: u64) -> u64 {
+    0xF1EE7 ^ node_id as u64 ^ extra
+}
+
+/// The sensor characterisation the campaign hands the good practice —
+/// shared by both scheduler modes.
+fn node_sensor(
+    device: &crate::sim::GpuDevice,
+    field: crate::sim::PowerField,
+    driver: crate::sim::DriverEpoch,
+) -> Option<SensorCharacterization> {
+    let spec = sensor_pipeline(device.model.generation, field, driver);
+    if !spec.is_measured() {
+        return None;
+    }
+    Some(SensorCharacterization {
+        update_s: spec.update_ms / 1000.0,
+        window_s: match spec.kind {
+            PipelineKind::Boxcar { window_ms } => window_ms / 1000.0,
+            _ => spec.update_ms / 1000.0,
+        },
+        rise_s: device.model.rise_ms / 1000.0,
+    })
+}
+
+/// Measure one node; `None` when the sensor is unsupported (Fermi).
+fn measure_node(
+    device: crate::sim::GpuDevice,
+    node_id: usize,
+    driver: crate::sim::DriverEpoch,
+    field: crate::sim::PowerField,
+    wl: &'static Workload,
+    cfg: &GoodPracticeConfig,
+) -> Option<MeasurementOutcome> {
+    let sensor = node_sensor(&device, field, driver)?;
+    let model = device.model.name;
+    let rig = MeasurementRig::new(device, driver, field, node_rig_seed(node_id, 0));
+    let naive = measure_naive(&rig, wl, cfg.poll_period_s, node_id as u64);
+    let good = measure_good_practice(&rig, wl, &sensor, cfg);
+    Some(MeasurementOutcome {
+        node_id,
+        workload: wl.name,
+        model,
+        naive_pct_error: naive.pct_error,
+        good_pct_error: good.mean_pct_error,
+        power_w: good.mean_power_w,
+        truth_j: naive.truth_j,
+        window_s: naive.window_s,
+    })
+}
+
+/// [`measure_node`] on the streaming pipeline with a reused per-worker
+/// scratch arena; identical outcomes for `seed_extra == 0` (pinned by
+/// tests and the hotpath campaign benchmark).
+fn measure_node_streaming(
+    device: crate::sim::GpuDevice,
+    node_id: usize,
+    driver: crate::sim::DriverEpoch,
+    field: crate::sim::PowerField,
+    wl: &'static Workload,
+    cfg: &GoodPracticeConfig,
+    seed_extra: u64,
+    scratch: &mut MeasureScratch,
+) -> Option<MeasurementOutcome> {
+    let sensor = node_sensor(&device, field, driver)?;
+    let model = device.model.name;
+    let rig = MeasurementRig::new(device, driver, field, node_rig_seed(node_id, seed_extra));
+    let naive = measure_naive_streaming(&rig, wl, cfg.poll_period_s, node_id as u64, scratch);
+    let good = good_practice_core(&rig, wl, &sensor, cfg, scratch);
+    Some(MeasurementOutcome {
+        node_id,
+        workload: wl.name,
+        model,
+        naive_pct_error: naive.pct_error,
+        good_pct_error: good.mean_pct_error,
+        power_w: good.mean_power_w,
+        truth_j: naive.truth_j,
+        window_s: naive.window_s,
+    })
 }
 
 /// Fleet-wide measurement scheduler: a fixed pool of workers pulling node
@@ -54,46 +185,11 @@ fn num_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
-/// Measure one node; `None` when the sensor is unsupported (Fermi).
-fn measure_node(
-    device: crate::sim::GpuDevice,
-    node_id: usize,
-    driver: crate::sim::DriverEpoch,
-    field: crate::sim::PowerField,
-    wl: &'static Workload,
-    cfg: &GoodPracticeConfig,
-) -> Option<MeasurementOutcome> {
-    let spec = sensor_pipeline(device.model.generation, field, driver);
-    if !spec.is_measured() {
-        return None;
-    }
-    let sensor = SensorCharacterization {
-        update_s: spec.update_ms / 1000.0,
-        window_s: match spec.kind {
-            PipelineKind::Boxcar { window_ms } => window_ms / 1000.0,
-            _ => spec.update_ms / 1000.0,
-        },
-        rise_s: device.model.rise_ms / 1000.0,
-    };
-    let model = device.model.name;
-    let rig = MeasurementRig::new(device, driver, field, 0xF1EE7 ^ node_id as u64);
-    let naive = measure_naive(&rig, wl, cfg.poll_period_s, node_id as u64);
-    let good = measure_good_practice(&rig, wl, &sensor, cfg);
-    Some(MeasurementOutcome {
-        node_id,
-        workload: wl.name,
-        model,
-        naive_pct_error: naive.pct_error,
-        good_pct_error: good.mean_pct_error,
-        power_w: good.mean_power_w,
-        truth_j: naive.truth_j,
-    })
-}
-
 impl Scheduler {
     /// Run one workload on every fleet node (round-robin through the
     /// Table 2 suite when `workload` is `None`), measuring each node with
-    /// both the naive and the good-practice method.
+    /// both the naive and the good-practice method. This is the
+    /// materialised reference path.
     pub fn run(
         &self,
         fleet: &Fleet,
@@ -134,15 +230,77 @@ impl Scheduler {
 
         let mut outcomes: Vec<MeasurementOutcome> = rx.into_iter().collect();
         outcomes.sort_by_key(|o| o.node_id);
+        let report = FleetReport::from_outcomes(&outcomes);
+        (outcomes, report)
+    }
 
-        let mut report = FleetReport::default();
-        for o in &outcomes {
-            report.truth_j += o.truth_j;
-            report.naive_j += o.truth_j * (1.0 + o.naive_pct_error / 100.0);
-            report.good_j += o.truth_j * (1.0 + o.good_pct_error / 100.0);
-            report.node_errors.push((o.naive_pct_error, o.good_pct_error));
-        }
-        report.nodes_measured = outcomes.len();
+    /// Fleet-scale streaming campaign: workers claim shards (contiguous
+    /// node ranges) off an atomic counter and measure each node through
+    /// the chunked, allocation-free pipeline with one scratch arena per
+    /// worker. With `campaign.seed == 0` the outcomes are bit-for-bit
+    /// identical to [`Self::run`]; results are deterministic for a fixed
+    /// `(seed, shard_size)` regardless of concurrency.
+    pub fn run_campaign(
+        &self,
+        fleet: &Fleet,
+        workload: Option<&'static Workload>,
+        campaign: CampaignConfig,
+    ) -> (Vec<MeasurementOutcome>, FleetReport) {
+        let n = fleet.nodes.len();
+        let shard_size = campaign.shard_size.max(1);
+        let n_shards = (n + shard_size - 1) / shard_size;
+        let next_shard = AtomicUsize::new(0);
+        let driver = fleet.config.driver;
+        let field = fleet.config.field;
+        let cfg = self.config;
+        let workers = self.concurrency.max(1);
+
+        let mut outcomes: Vec<MeasurementOutcome> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let next_shard = &next_shard;
+                    let nodes = &fleet.nodes;
+                    scope.spawn(move || {
+                        let mut scratch = MeasureScratch::new();
+                        let mut local: Vec<MeasurementOutcome> = Vec::new();
+                        loop {
+                            let s = next_shard.fetch_add(1, Ordering::Relaxed);
+                            if s >= n_shards {
+                                break;
+                            }
+                            let seed_extra =
+                                if campaign.seed == 0 { 0 } else { shard_seed(campaign.seed, s) };
+                            let lo = s * shard_size;
+                            let hi = (lo + shard_size).min(n);
+                            for node in &nodes[lo..hi] {
+                                let wl = workload
+                                    .unwrap_or(&WORKLOADS[node.id % WORKLOADS.len()]);
+                                if let Some(out) = measure_node_streaming(
+                                    node.device.clone(),
+                                    node.id,
+                                    driver,
+                                    field,
+                                    wl,
+                                    &cfg,
+                                    seed_extra,
+                                    &mut scratch,
+                                ) {
+                                    local.push(out);
+                                }
+                            }
+                        }
+                        local
+                    })
+                })
+                .collect();
+            let mut all = Vec::with_capacity(n);
+            for h in handles {
+                all.extend(h.join().expect("campaign worker panicked"));
+            }
+            all
+        });
+        outcomes.sort_by_key(|o| o.node_id);
+        let report = FleetReport::from_outcomes(&outcomes);
         (outcomes, report)
     }
 }
@@ -158,31 +316,45 @@ mod tests {
         GoodPracticeConfig { trials: 2, min_reps: 8, min_runtime_s: 1.0, ..Default::default() }
     }
 
-    #[test]
-    fn scheduler_measures_all_nodes() {
-        let fleet = Fleet::build(FleetConfig {
-            size: 4,
-            models: vec!["A100".into()],
+    fn small_fleet(size: usize, models: &[&str], seed: u64) -> Fleet {
+        Fleet::build(FleetConfig {
+            size,
+            models: models.iter().map(|m| m.to_string()).collect(),
             driver: DriverEpoch::Post530,
             field: PowerField::Instant,
-            seed: 5,
-        });
+            seed,
+        })
+    }
+
+    fn assert_outcomes_identical(a: &[MeasurementOutcome], b: &[MeasurementOutcome]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            let id = x.node_id;
+            assert_eq!(x.node_id, y.node_id);
+            assert_eq!(x.workload, y.workload);
+            assert_eq!(x.model, y.model);
+            assert_eq!(x.naive_pct_error.to_bits(), y.naive_pct_error.to_bits(), "node {id}");
+            assert_eq!(x.good_pct_error.to_bits(), y.good_pct_error.to_bits(), "node {id}");
+            assert_eq!(x.power_w.to_bits(), y.power_w.to_bits(), "node {id}");
+            assert_eq!(x.truth_j.to_bits(), y.truth_j.to_bits(), "node {id}");
+            assert_eq!(x.window_s.to_bits(), y.window_s.to_bits(), "node {id}");
+        }
+    }
+
+    #[test]
+    fn scheduler_measures_all_nodes() {
+        let fleet = small_fleet(4, &["A100"], 5);
         let sched = Scheduler { concurrency: 2, config: small_cfg() };
         let (outcomes, report) = sched.run(&fleet, None);
         assert_eq!(outcomes.len(), 4);
         assert_eq!(report.nodes_measured, 4);
         assert!(report.truth_j > 0.0);
+        assert!(report.measured_s > 0.0);
     }
 
     #[test]
     fn good_practice_beats_naive_fleetwide() {
-        let fleet = Fleet::build(FleetConfig {
-            size: 6,
-            models: vec!["A100".into()],
-            driver: DriverEpoch::Post530,
-            field: PowerField::Instant,
-            seed: 11,
-        });
+        let fleet = small_fleet(6, &["A100"], 11);
         let sched = Scheduler { concurrency: 4, config: small_cfg() };
         let (outcomes, _) = sched.run(&fleet, Some(&WORKLOADS[0]));
         let mean_abs = |f: &dyn Fn(&MeasurementOutcome) -> f64| {
@@ -206,17 +378,14 @@ mod tests {
         let (outcomes, report) = sched.run(&fleet, None);
         assert!(outcomes.is_empty());
         assert_eq!(report.nodes_measured, 0);
+        // campaign mode must agree
+        let (c, _) = sched.run_campaign(&fleet, None, CampaignConfig::default());
+        assert!(c.is_empty());
     }
 
     #[test]
     fn deterministic_across_concurrency_levels() {
-        let fleet = Fleet::build(FleetConfig {
-            size: 5,
-            models: vec!["3090".into()],
-            driver: DriverEpoch::Post530,
-            field: PowerField::Instant,
-            seed: 21,
-        });
+        let fleet = small_fleet(5, &["3090"], 21);
         let a = Scheduler { concurrency: 1, config: small_cfg() }.run(&fleet, None).0;
         let b = Scheduler { concurrency: 4, config: small_cfg() }.run(&fleet, None).0;
         assert_eq!(a.len(), b.len());
@@ -224,5 +393,48 @@ mod tests {
             assert_eq!(x.node_id, y.node_id);
             assert!((x.good_pct_error - y.good_pct_error).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn campaign_matches_reference_scheduler_bit_for_bit() {
+        // the acceptance criterion: streaming campaign == materialised run
+        let fleet = small_fleet(5, &["A100", "3090"], 31);
+        let sched = Scheduler { concurrency: 2, config: small_cfg() };
+        let (a, ra) = sched.run(&fleet, None);
+        let (b, rb) = sched.run_campaign(&fleet, None, CampaignConfig::default());
+        assert_outcomes_identical(&a, &b);
+        assert_eq!(ra.truth_j.to_bits(), rb.truth_j.to_bits());
+        assert_eq!(ra.measured_s.to_bits(), rb.measured_s.to_bits());
+    }
+
+    #[test]
+    fn campaign_invariant_to_shard_size_and_concurrency_at_seed_zero() {
+        let fleet = small_fleet(7, &["A100"], 41);
+        let sched1 = Scheduler { concurrency: 1, config: small_cfg() };
+        let sched4 = Scheduler { concurrency: 4, config: small_cfg() };
+        let shard = |s| CampaignConfig { shard_size: s, seed: 0 };
+        let (a, _) = sched1.run_campaign(&fleet, Some(&WORKLOADS[2]), shard(1));
+        let (b, _) = sched4.run_campaign(&fleet, Some(&WORKLOADS[2]), shard(3));
+        let (c, _) = sched4.run_campaign(&fleet, Some(&WORKLOADS[2]), shard(64));
+        assert_outcomes_identical(&a, &b);
+        assert_outcomes_identical(&a, &c);
+    }
+
+    #[test]
+    fn campaign_reseed_changes_boot_phases_deterministically() {
+        let fleet = small_fleet(4, &["A100"], 51);
+        let sched = Scheduler { concurrency: 2, config: small_cfg() };
+        let base = CampaignConfig { shard_size: 2, seed: 0 };
+        let reseeded = CampaignConfig { shard_size: 2, seed: 777 };
+        let (a, _) = sched.run_campaign(&fleet, Some(&WORKLOADS[0]), base);
+        let (b, _) = sched.run_campaign(&fleet, Some(&WORKLOADS[0]), reseeded);
+        let (b2, _) = sched.run_campaign(&fleet, Some(&WORKLOADS[0]), reseeded);
+        // same nodes measured, different boot phases, reproducible reseed
+        assert_eq!(a.len(), b.len());
+        assert!(
+            a.iter().zip(&b).any(|(x, y)| x.naive_pct_error != y.naive_pct_error),
+            "reseeding must perturb at least one node's phases"
+        );
+        assert_outcomes_identical(&b, &b2);
     }
 }

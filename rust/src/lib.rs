@@ -18,8 +18,9 @@
 //! * [`measure`] — the paper's headline contribution: the good-practice
 //!   energy measurement library (§5);
 //! * [`experiments`] — one module per paper figure/table;
-//! * [`coordinator`] — a tokio fleet orchestrator for datacenter-scale
-//!   simulated measurement campaigns;
+//! * [`coordinator`] — a dependency-free fleet orchestrator (std scoped
+//!   threads, no async runtime) for datacenter-scale simulated measurement
+//!   campaigns, including the sharded streaming campaign mode;
 //! * [`runtime`] — the PJRT artifact runtime (Python never runs at request
 //!   time).
 

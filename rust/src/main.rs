@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 
-use gpupower::coordinator::{Fleet, FleetConfig, Scheduler};
+use gpupower::coordinator::{CampaignConfig, Fleet, FleetConfig, Scheduler};
 use gpupower::experiments as ex;
 use gpupower::measure::GoodPracticeConfig;
 use gpupower::report::Table;
@@ -39,7 +39,9 @@ COMMANDS:
   table1                    the GPU catalogue
   table2                    the workload suite
   all                       every experiment (reduced trial counts)
-  fleet [--gpus N] [--model NAME ...]   datacenter fleet campaign
+  fleet [--gpus N] [--model NAME ...] [--shard N] [--campaign-seed N]
+                            datacenter fleet campaign (streaming scheduler;
+                            campaign-seed 0 = canonical boot phases)
   characterize MODEL [--driver D] [--field F]  sensor characterisation
 ";
 
@@ -307,8 +309,15 @@ fn main() -> Result<()> {
                 field: PowerField::Instant,
                 seed,
             });
+            let shard = args.usize_flag("--shard", 64);
+            let campaign_seed: u64 =
+                args.flag_value("--campaign-seed").and_then(|v| v.parse().ok()).unwrap_or(0);
             let sched = Scheduler::default();
-            let (outcomes, report) = sched.run(&fleet, None);
+            let (outcomes, report) = sched.run_campaign(
+                &fleet,
+                None,
+                CampaignConfig { shard_size: shard, seed: campaign_seed },
+            );
             let mut t = Table::new(
                 format!("fleet of {} GPUs — per-node measurement", fleet.len()),
                 &["node", "model", "workload", "naive %err", "good %err", "power W"],

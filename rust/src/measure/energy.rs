@@ -1,14 +1,17 @@
 //! Energy integration primitives shared by the naive and good-practice
-//! measurement paths.
+//! measurement paths. Each primitive has a `_points` form over a raw
+//! `(t, W)` slice — the streaming pipeline integrates scratch buffers
+//! through those — and a [`SampleSeries`] wrapper that delegates to it, so
+//! both paths run the identical arithmetic.
 
 use crate::sim::trace::SampleSeries;
 
-/// Trapezoidal energy (J) of a polled power series over `[t0, t1]`,
+/// Trapezoidal energy (J) of a polled `(t, W)` slice over `[t0, t1]`,
 /// clipping boundary segments to the interval (partial segments count
 /// proportionally — matches integrating the zero-order-hold signal).
-pub fn integrate_clipped(series: &SampleSeries, t0: f64, t1: f64) -> f64 {
+pub fn integrate_clipped_points(points: &[(f64, f64)], t0: f64, t1: f64) -> f64 {
     let mut e = 0.0;
-    for w in series.points.windows(2) {
+    for w in points.windows(2) {
         let (ta, pa) = w[0];
         let (tb, pb) = w[1];
         if tb <= t0 || ta >= t1 {
@@ -28,20 +31,41 @@ pub fn integrate_clipped(series: &SampleSeries, t0: f64, t1: f64) -> f64 {
     e
 }
 
-/// Mean power (W) of a series over `[t0, t1]` by clipped integration.
-pub fn mean_power(series: &SampleSeries, t0: f64, t1: f64) -> f64 {
+/// [`integrate_clipped_points`] over a [`SampleSeries`].
+pub fn integrate_clipped(series: &SampleSeries, t0: f64, t1: f64) -> f64 {
+    integrate_clipped_points(&series.points, t0, t1)
+}
+
+/// Mean power (W) of a `(t, W)` slice over `[t0, t1]` by clipped
+/// integration; 0 for empty or inverted intervals.
+pub fn mean_power_points(points: &[(f64, f64)], t0: f64, t1: f64) -> f64 {
     let d = t1 - t0;
     if d <= 0.0 {
         return 0.0;
     }
-    integrate_clipped(series, t0, t1) / d
+    integrate_clipped_points(points, t0, t1) / d
+}
+
+/// [`mean_power_points`] over a [`SampleSeries`].
+pub fn mean_power(series: &SampleSeries, t0: f64, t1: f64) -> f64 {
+    mean_power_points(&series.points, t0, t1)
+}
+
+/// Shift every timestamp earlier by `shift_s` into a caller-owned buffer
+/// (cleared first) — the paper's boxcar-latency compensation without a
+/// per-trial allocation.
+pub fn shift_earlier_into(points: &[(f64, f64)], shift_s: f64, out: &mut Vec<(f64, f64)>) {
+    out.clear();
+    out.extend(points.iter().map(|&(t, p)| (t - shift_s, p)));
 }
 
 /// Shift every timestamp earlier by `shift_s` (the paper's boxcar-latency
 /// compensation: "the reported power draw actually corresponds to the GPU
 /// activity from [window] prior").
 pub fn shift_earlier(series: &SampleSeries, shift_s: f64) -> SampleSeries {
-    SampleSeries { points: series.points.iter().map(|&(t, p)| (t - shift_s, p)).collect() }
+    let mut points = Vec::with_capacity(series.points.len());
+    shift_earlier_into(&series.points, shift_s, &mut points);
+    SampleSeries { points }
 }
 
 #[cfg(test)]
@@ -87,9 +111,47 @@ mod tests {
     }
 
     #[test]
+    fn shift_earlier_into_reuses_buffer() {
+        let s = flat(10.0, 4, 1.0);
+        let mut buf = Vec::new();
+        shift_earlier_into(&s.points, 0.25, &mut buf);
+        assert_eq!(buf, shift_earlier(&s, 0.25).points);
+        let cap = buf.capacity();
+        shift_earlier_into(&s.points, 0.5, &mut buf);
+        assert_eq!(buf.capacity(), cap);
+        assert_eq!(buf[0].0, -0.5);
+    }
+
+    #[test]
     fn out_of_range_is_zero() {
         let s = flat(100.0, 5, 0.1);
         assert_eq!(integrate_clipped(&s, 10.0, 11.0), 0.0);
         assert_eq!(mean_power(&s, 1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn empty_series_is_zero() {
+        let s = SampleSeries::default();
+        assert_eq!(integrate_clipped(&s, 0.0, 1.0), 0.0);
+        assert_eq!(mean_power(&s, 0.0, 1.0), 0.0);
+        let mut buf = vec![(1.0, 2.0)];
+        shift_earlier_into(&s.points, 0.1, &mut buf);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn single_point_series_is_zero() {
+        // one sample spans no interval: no trapezoid to integrate
+        let s = SampleSeries { points: vec![(0.5, 120.0)] };
+        assert_eq!(integrate_clipped(&s, 0.0, 1.0), 0.0);
+        assert_eq!(mean_power(&s, 0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn inverted_interval_is_zero() {
+        let s = flat(100.0, 11, 0.1);
+        assert_eq!(integrate_clipped(&s, 0.8, 0.2), 0.0);
+        assert_eq!(mean_power(&s, 0.8, 0.2), 0.0);
+        assert_eq!(mean_power(&s, 0.5, 0.5), 0.0);
     }
 }

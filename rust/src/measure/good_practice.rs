@@ -9,10 +9,14 @@
 //!    data to synchronise with GPU activity (boxcar latency).
 //! 4. Optionally apply the steady-state gradient/offset correction (§5.3).
 
-use super::energy::{mean_power, shift_earlier};
-use super::{MeasurementRig, PowerCorrection, RepeatableLoad, SensorCharacterization};
+use super::energy::{mean_power, mean_power_points, shift_earlier, shift_earlier_into};
+use super::{
+    capture_streaming, pmd_window_mean, MeasureScratch, MeasurementRig, PowerCorrection,
+    RepeatableLoad, SensorCharacterization,
+};
 use crate::estimator::stats::{mean, pct_error, std_dev};
 use crate::rng::Rng;
+use crate::smi::poll_readings;
 
 /// Configuration of the good-practice procedure (paper defaults).
 #[derive(Debug, Clone, Copy)]
@@ -121,11 +125,7 @@ pub fn measure_good_practice<L: RepeatableLoad>(
         let p_smi = mean_power(&series, t_analysis_start, t_busy_end);
         let p_truth = {
             let prefix = cap.pmd_trace.prefix_sums();
-            let i0 = cap.pmd_trace.index_of(t_analysis_start);
-            let i1 = cap.pmd_trace.index_of(t_busy_end);
-            let n = (i1 - i0).max(1) as f64;
-            let base = if i0 == 0 { 0.0 } else { prefix[i0 - 1] };
-            (prefix[i1] - base) / n
+            pmd_window_mean(&prefix, cap.pmd_trace.view(), t_analysis_start, t_busy_end)
         };
         trial_errors.push(pct_error(p_smi, p_truth));
         powers.push(p_smi);
@@ -140,6 +140,132 @@ pub fn measure_good_practice<L: RepeatableLoad>(
         energy_per_iteration_j: mean_power_w * iter_s,
         reps,
         shifted,
+    }
+}
+
+/// Aggregate view of a streaming good-practice run; the per-trial errors
+/// stay in the scratch arena (`scratch.trial_errors`) so the fleet hot
+/// path allocates nothing per node.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct GoodPracticeSummary {
+    pub mean_pct_error: f64,
+    pub std_pct_error: f64,
+    pub mean_power_w: f64,
+    pub reps: usize,
+    pub shifted: bool,
+}
+
+/// The §5.1 procedure on the streaming pipeline: identical seeds, trial
+/// structure and arithmetic to [`measure_good_practice`] (pinned
+/// bit-for-bit by tests), but every capture/poll/shift/prefix buffer comes
+/// from the reused per-worker [`MeasureScratch`].
+pub(crate) fn good_practice_core<L: RepeatableLoad>(
+    rig: &MeasurementRig,
+    load: &L,
+    sensor: &SensorCharacterization,
+    cfg: &GoodPracticeConfig,
+    scratch: &mut MeasureScratch,
+) -> GoodPracticeSummary {
+    // Step 1: repetitions to cover both floors.
+    let iter_s = load.iteration_s();
+    let reps = cfg.min_reps.max((cfg.min_runtime_s / iter_s).ceil() as usize);
+    let (reps_per_shift, shift_s, shifted) = if sensor.has_data_loss() && cfg.shifts > 0 {
+        ((reps / cfg.shifts).max(1), sensor.window_s, true)
+    } else {
+        (0, 0.0, false)
+    };
+
+    let mut rng = Rng::new(rig.seed ^ 0x60D0);
+    scratch.trial_errors.clear();
+    scratch.powers.clear();
+
+    for trial in 0..cfg.trials {
+        // Step 2: randomised alignment delay between trials.
+        let t_start = 0.5 + rng.uniform();
+        let mut activity = std::mem::take(&mut scratch.activity);
+        load.build_into(t_start, reps, reps_per_shift, shift_s, &mut activity);
+        let t_busy_end = activity.t_end();
+        let boot_seed = rig.seed ^ (trial as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
+        // synthesize/poll past the end so the shifted series still covers
+        // the analysis window even for a 1 s boxcar (Case 2)
+        let t_tail = sensor.window_s + 2.0 * sensor.update_s;
+        let meta =
+            capture_streaming(rig, &activity, 0.0, t_busy_end + t_tail + 0.3, boot_seed, scratch);
+        scratch.activity = activity;
+
+        scratch.points.clear();
+        poll_readings(
+            &scratch.readings,
+            Rng::new(boot_seed ^ 0x5149),
+            cfg.poll_period_s,
+            0.15,
+            t_start - 2.0 * sensor.window_s.max(sensor.update_s),
+            t_busy_end + t_tail,
+            &mut scratch.points,
+        );
+
+        // Step 3a: shift readings earlier by the boxcar group delay (the
+        // reading at t is the mean over [t-w, t], i.e. activity centred
+        // w/2 prior).
+        shift_earlier_into(&scratch.points, sensor.window_s / 2.0, &mut scratch.shifted);
+        // Step 3b: optional steady-state correction (in place; same values
+        // as PowerCorrection::correct_series).
+        if let Some(c) = &cfg.correction {
+            for p in &mut scratch.shifted {
+                p.1 = c.correct(p.1);
+            }
+        }
+        // Step 3c: discard whole repetitions covering rise time + window ramp.
+        let settle_s = sensor.rise_s + sensor.window_s;
+        let discard_iters = (settle_s / iter_s).ceil();
+        let t_analysis_start = t_start + discard_iters * iter_s;
+
+        let p_smi = mean_power_points(&scratch.shifted, t_analysis_start, t_busy_end);
+        let p_truth = {
+            scratch.pmd_prefix.clear();
+            let mut acc = 0.0f64;
+            for &s in &scratch.pmd {
+                acc += s as f64;
+                scratch.pmd_prefix.push(acc);
+            }
+            pmd_window_mean(
+                &scratch.pmd_prefix,
+                meta.pmd_view(&scratch.pmd),
+                t_analysis_start,
+                t_busy_end,
+            )
+        };
+        scratch.trial_errors.push(pct_error(p_smi, p_truth));
+        scratch.powers.push(p_smi);
+    }
+
+    GoodPracticeSummary {
+        mean_pct_error: mean(&scratch.trial_errors),
+        std_pct_error: std_dev(&scratch.trial_errors),
+        mean_power_w: mean(&scratch.powers),
+        reps,
+        shifted,
+    }
+}
+
+/// [`measure_good_practice`] on the streaming pipeline; bit-for-bit equal
+/// results through the reused scratch arena.
+pub fn measure_good_practice_streaming<L: RepeatableLoad>(
+    rig: &MeasurementRig,
+    load: &L,
+    sensor: &SensorCharacterization,
+    cfg: &GoodPracticeConfig,
+    scratch: &mut MeasureScratch,
+) -> GoodPracticeResult {
+    let core = good_practice_core(rig, load, sensor, cfg, scratch);
+    GoodPracticeResult {
+        trial_pct_errors: scratch.trial_errors.clone(),
+        mean_pct_error: core.mean_pct_error,
+        std_pct_error: core.std_pct_error,
+        mean_power_w: core.mean_power_w,
+        energy_per_iteration_j: core.mean_power_w * load.iteration_s(),
+        reps: core.reps,
+        shifted: core.shifted,
     }
 }
 
@@ -210,6 +336,60 @@ mod tests {
             fixed.mean_pct_error
         );
         assert!(fixed.mean_pct_error.abs() < 2.0, "residual {:.2}%", fixed.mean_pct_error);
+    }
+
+    #[test]
+    fn streaming_matches_materialized_bit_for_bit() {
+        use crate::bench::workloads::workload_by_name;
+        let mut scratch = crate::measure::MeasureScratch::new();
+        let cfg = GoodPracticeConfig { trials: 3, min_reps: 10, min_runtime_s: 1.0, ..Default::default() };
+        for (model, driver, field, window_s) in [
+            ("A100 PCIe-40G", DriverEpoch::Post530, PowerField::Instant, 0.025),
+            ("RTX 3090", DriverEpoch::Post530, PowerField::Instant, 0.1),
+            ("Tesla K40", DriverEpoch::Pre530, PowerField::Draw, 0.015),
+        ] {
+            let r = rig(model, driver, field, 77);
+            let sensor = SensorCharacterization { update_s: 0.1, window_s, rise_s: 0.2 };
+            for wl in ["cublas", "nvjpeg", "bert"] {
+                let load = workload_by_name(wl).unwrap();
+                let a = measure_good_practice(&r, load, &sensor, &cfg);
+                let b = measure_good_practice_streaming(&r, load, &sensor, &cfg, &mut scratch);
+                assert_eq!(a.trial_pct_errors.len(), b.trial_pct_errors.len());
+                for (x, y) in a.trial_pct_errors.iter().zip(&b.trial_pct_errors) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{model}/{wl} trial error");
+                }
+                assert_eq!(a.mean_pct_error.to_bits(), b.mean_pct_error.to_bits(), "{model}/{wl}");
+                assert_eq!(a.std_pct_error.to_bits(), b.std_pct_error.to_bits(), "{model}/{wl}");
+                assert_eq!(a.mean_power_w.to_bits(), b.mean_power_w.to_bits(), "{model}/{wl}");
+                assert_eq!(
+                    a.energy_per_iteration_j.to_bits(),
+                    b.energy_per_iteration_j.to_bits(),
+                    "{model}/{wl}"
+                );
+                assert_eq!(a.reps, b.reps);
+                assert_eq!(a.shifted, b.shifted);
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_correction_matches_materialized() {
+        let r = rig("RTX 3090", DriverEpoch::Post530, PowerField::Instant, 91);
+        let sensor = SensorCharacterization { update_s: 0.1, window_s: 0.1, rise_s: 0.25 };
+        let load = BenchmarkLoad::new(0.1, 1.0, 1);
+        let corr = PowerCorrection { gradient: 0.97, offset_w: 2.0, r2: 1.0 };
+        let cfg = GoodPracticeConfig {
+            trials: 2,
+            min_reps: 10,
+            min_runtime_s: 1.0,
+            correction: Some(corr),
+            ..Default::default()
+        };
+        let a = measure_good_practice(&r, &load, &sensor, &cfg);
+        let mut scratch = crate::measure::MeasureScratch::new();
+        let b = measure_good_practice_streaming(&r, &load, &sensor, &cfg, &mut scratch);
+        assert_eq!(a.mean_pct_error.to_bits(), b.mean_pct_error.to_bits());
+        assert_eq!(a.mean_power_w.to_bits(), b.mean_power_w.to_bits());
     }
 
     #[test]

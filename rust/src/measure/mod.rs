@@ -13,6 +13,16 @@
 //! the [`SensorCharacterization`] describes what the micro-benchmarks
 //! learned about the sensor — the measurement procedures consume only
 //! those learned parameters, never the simulator's hidden ground truth.
+//!
+//! Every procedure exists in two forms that are **bit-for-bit identical**
+//! for a fixed seed (pinned by tests):
+//! * the materialised reference path (`measure_naive`,
+//!   `measure_good_practice`) — captures a full [`PowerTrace`] plus an
+//!   [`NvidiaSmi`] per run, as the experiments always have;
+//! * the streaming path (`measure_naive_streaming`,
+//!   `measure_good_practice_streaming`) — drives a chunked
+//!   [`crate::sim::TraceSampler`] through a per-worker [`MeasureScratch`]
+//!   arena, doing O(chunk) allocation per node instead of O(trace).
 
 pub mod correction;
 pub mod energy;
@@ -20,14 +30,17 @@ pub mod good_practice;
 pub mod naive;
 
 pub use correction::PowerCorrection;
-pub use good_practice::{GoodPracticeConfig, GoodPracticeResult};
-pub use naive::NaiveResult;
+pub use good_practice::{measure_good_practice_streaming, GoodPracticeConfig, GoodPracticeResult};
+pub use naive::{measure_naive_streaming, NaiveResult};
 
 use crate::pmd::Pmd;
 use crate::sim::activity::ActivitySignal;
 use crate::sim::device::GpuDevice;
-use crate::sim::profile::{DriverEpoch, PowerField};
-use crate::sim::trace::PowerTrace;
+use crate::sim::profile::{sensor_pipeline, DriverEpoch, PowerField};
+use crate::sim::sensor::{lookback_samples, Reading, SensorConsumer};
+use crate::sim::trace::{
+    PowerTrace, SampleSource, SamplerBuffers, TraceSampler, TraceView, STREAM_CHUNK, TRUE_HZ,
+};
 use crate::smi::NvidiaSmi;
 
 /// A device + driver + instrument pairing for one measurement campaign.
@@ -65,6 +78,111 @@ impl MeasurementRig {
     }
 }
 
+/// Per-worker scratch arena for the streaming measurement pipeline: every
+/// buffer a capture needs, reused across nodes so a 1k–10k-node campaign
+/// allocates O(chunk) once per worker rather than O(trace) per node.
+#[derive(Debug, Default)]
+pub struct MeasureScratch {
+    /// TraceSampler chunk + prefix-ring allocations (taken/returned per capture).
+    bufs: Option<SamplerBuffers>,
+    /// Realised sensor readings for the rig's queried field.
+    pub(crate) readings: Vec<Reading>,
+    /// PMD samples for the capture window.
+    pub(crate) pmd: Vec<f32>,
+    /// Inclusive prefix sums over `pmd` (good-practice truth windows).
+    pub(crate) pmd_prefix: Vec<f64>,
+    /// Polled `(t, W)` series.
+    pub(crate) points: Vec<(f64, f64)>,
+    /// Boxcar-latency-shifted (and optionally corrected) series.
+    pub(crate) shifted: Vec<(f64, f64)>,
+    /// Reusable activity signal built per trial.
+    pub(crate) activity: ActivitySignal,
+    /// Per-trial percentage errors (good practice).
+    pub(crate) trial_errors: Vec<f64>,
+    /// Per-trial mean powers (good practice).
+    pub(crate) powers: Vec<f64>,
+}
+
+impl MeasureScratch {
+    /// Fresh arena (all buffers grow on first use, then stay).
+    pub fn new() -> Self {
+        MeasureScratch::default()
+    }
+}
+
+/// Geometry of the PMD samples a streaming capture produced.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct CaptureMeta {
+    pub pmd_hz: f64,
+    pub pmd_t0: f64,
+}
+
+impl CaptureMeta {
+    /// View the scratch PMD samples as a trace.
+    pub fn pmd_view<'a>(&self, pmd: &'a [f32]) -> TraceView<'a> {
+        TraceView { hz: self.pmd_hz, t0: self.pmd_t0, samples: pmd }
+    }
+}
+
+/// Streaming equivalent of [`MeasurementRig::capture`]: one chunked pass
+/// over the synthesised ground truth feeding (a) the sensor pipeline of
+/// the rig's queried field and (b) the PMD decimator, into reused scratch
+/// buffers. Produces bit-for-bit the readings/PMD samples the materialised
+/// capture yields for the same seeds (the per-field boot-seed tag makes
+/// the three field streams independent, so realising one is enough).
+pub(crate) fn capture_streaming(
+    rig: &MeasurementRig,
+    activity: &ActivitySignal,
+    t0: f64,
+    t1: f64,
+    boot_seed: u64,
+    scratch: &mut MeasureScratch,
+) -> CaptureMeta {
+    let spec = sensor_pipeline(rig.device.model.generation, rig.field, rig.driver);
+    let source = rig.device.synth_stream(activity, t0, t1);
+    let hz = TRUE_HZ;
+    let total_len = source.total_len();
+    let mut sampler = TraceSampler::with_buffers(
+        source,
+        lookback_samples(&spec, hz),
+        STREAM_CHUNK,
+        scratch.bufs.take().unwrap_or_default(),
+    );
+    let mut sensor = SensorConsumer::new(
+        &rig.device,
+        spec,
+        hz,
+        t0,
+        total_len,
+        boot_seed ^ crate::smi::field_tag(rig.field),
+        STREAM_CHUNK,
+    );
+    let mut pmd = rig.pmd.stream(&rig.device, hz);
+    scratch.readings.clear();
+    scratch.pmd.clear();
+    while sampler.advance() {
+        sensor.push_chunk(sampler.chunk(), sampler.prefix(), &mut scratch.readings);
+        pmd.push_chunk(sampler.chunk(), sampler.chunk_start(), &mut scratch.pmd);
+    }
+    let meta = CaptureMeta { pmd_hz: pmd.out_hz, pmd_t0: t0 };
+    scratch.bufs = Some(sampler.into_buffers());
+    meta
+}
+
+/// Mean PMD power over `[t0, t1]` from precomputed inclusive prefix sums —
+/// the good-practice truth reference, shared verbatim by the materialised
+/// and streaming paths so the arithmetic can never drift between them.
+/// (Historical quirk, kept for reproducibility: with `base = prefix[i0-1]`
+/// the sum spans `i1 - i0 + 1` samples while the divisor is `i1 - i0`; at
+/// the thousands of samples a window covers the bias is negligible.)
+pub(crate) fn pmd_window_mean(prefix: &[f64], view: TraceView<'_>, t0: f64, t1: f64) -> f64 {
+    let i0 = view.index_of(t0);
+    let i1 = view.index_of(t1);
+    let n = (i1 - i0).max(1) as f64;
+    let base = if i0 == 0 { 0.0 } else { prefix[i0 - 1] };
+    (prefix[i1] - base) / n
+}
+
 /// What the micro-benchmark characterisation learned about a sensor —
 /// the only knowledge the good-practice procedure is allowed to use.
 #[derive(Debug, Clone, Copy)]
@@ -98,6 +216,19 @@ pub trait RepeatableLoad {
     /// (0 = no shifts).
     fn build(&self, t_start: f64, reps: usize, reps_per_shift: usize, shift_s: f64)
         -> ActivitySignal;
+    /// [`Self::build`] into a caller-owned signal (cleared first), so the
+    /// streaming pipeline reuses one segment allocation per worker. Must
+    /// produce exactly the segments `build` produces.
+    fn build_into(
+        &self,
+        t_start: f64,
+        reps: usize,
+        reps_per_shift: usize,
+        shift_s: f64,
+        out: &mut ActivitySignal,
+    ) {
+        *out = self.build(t_start, reps, reps_per_shift, shift_s);
+    }
 }
 
 impl RepeatableLoad for crate::bench::BenchmarkLoad {
@@ -113,6 +244,24 @@ impl RepeatableLoad for crate::bench::BenchmarkLoad {
         b.cycles = reps;
         b.activity_with_shifts(reps_per_shift, shift_s)
     }
+    fn build_into(
+        &self,
+        t_start: f64,
+        reps: usize,
+        reps_per_shift: usize,
+        shift_s: f64,
+        out: &mut ActivitySignal,
+    ) {
+        out.segments.clear();
+        let mut t = t_start;
+        for k in 0..reps {
+            out.push(t, self.period_s * self.duty, self.sm_fraction);
+            t += self.period_s;
+            if reps_per_shift > 0 && (k + 1) % reps_per_shift == 0 && k + 1 < reps {
+                t += shift_s;
+            }
+        }
+    }
 }
 
 impl RepeatableLoad for crate::bench::Workload {
@@ -124,5 +273,67 @@ impl RepeatableLoad for crate::bench::Workload {
     }
     fn build(&self, t_start: f64, reps: usize, reps_per_shift: usize, shift_s: f64) -> ActivitySignal {
         self.activity_with_shifts(t_start, reps, reps_per_shift, shift_s)
+    }
+    fn build_into(
+        &self,
+        t_start: f64,
+        reps: usize,
+        reps_per_shift: usize,
+        shift_s: f64,
+        out: &mut ActivitySignal,
+    ) {
+        out.segments.clear();
+        let mut t = t_start;
+        for k in 0..reps {
+            for ph in self.pattern {
+                if ph.util > 0.0 {
+                    out.push(t, ph.duration_s, ph.util);
+                }
+                t += ph.duration_s;
+            }
+            if reps_per_shift > 0 && (k + 1) % reps_per_shift == 0 && k + 1 < reps {
+                t += shift_s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::WORKLOADS;
+    use crate::bench::BenchmarkLoad;
+
+    #[test]
+    fn build_into_matches_build_for_both_load_kinds() {
+        let mut out = ActivitySignal::idle();
+        let bench = BenchmarkLoad::new(0.1, 0.8, 9);
+        bench.build_into(0.7, 9, 2, 0.025, &mut out);
+        assert_eq!(out.segments, bench.build(0.7, 9, 2, 0.025).segments);
+
+        for wl in WORKLOADS {
+            wl.build_into(1.1, 7, 3, 0.05, &mut out);
+            assert_eq!(out.segments, wl.build(1.1, 7, 3, 0.05).segments, "{}", wl.name);
+        }
+    }
+
+    #[test]
+    fn streaming_capture_matches_materialized_capture() {
+        use crate::sim::{find_model, ActivitySignal};
+        for (model, driver, field) in [
+            ("A100 PCIe-40G", DriverEpoch::Post530, PowerField::Instant),
+            ("RTX 3090", DriverEpoch::Pre530, PowerField::Draw),
+            ("Tesla K40", DriverEpoch::Pre530, PowerField::Draw),
+        ] {
+            let device = GpuDevice::new(find_model(model).unwrap(), 0, 404);
+            let rig = MeasurementRig::new(device, driver, field, 405);
+            let act = ActivitySignal::square_wave(0.4, 0.09, 0.5, 1.0, 20);
+            let cap = rig.capture(&act, 0.0, 2.5, 999);
+            let mut scratch = MeasureScratch::new();
+            let meta = capture_streaming(&rig, &act, 0.0, 2.5, 999, &mut scratch);
+            assert_eq!(scratch.readings, cap.smi.stream(field).readings, "{model} readings");
+            assert_eq!(scratch.pmd, cap.pmd_trace.samples, "{model} pmd");
+            assert!((meta.pmd_hz - cap.pmd_trace.hz).abs() < 1e-12);
+        }
     }
 }

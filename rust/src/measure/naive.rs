@@ -1,10 +1,17 @@
 //! The naive measurement: what most surveyed papers do (§2.6) — run the
 //! workload once, poll nvidia-smi, integrate over the kernel execution
 //! window, take the number as ground truth.
+//!
+//! [`measure_naive`] is the materialised reference; [`measure_naive_streaming`]
+//! runs the identical procedure through the chunked capture and a reused
+//! [`MeasureScratch`], producing bit-for-bit the same result (pinned by
+//! tests below) with O(chunk) allocation.
 
-use super::energy::mean_power;
-use super::{MeasurementRig, RepeatableLoad};
+use super::energy::{mean_power, mean_power_points};
+use super::{capture_streaming, MeasureScratch, MeasurementRig, RepeatableLoad};
 use crate::estimator::stats::pct_error;
+use crate::rng::Rng;
+use crate::smi::poll_readings;
 
 /// Outcome of one naive measurement.
 #[derive(Debug, Clone, Copy)]
@@ -17,6 +24,9 @@ pub struct NaiveResult {
     pub pct_error: f64,
     /// Mean reported power over the window, watts.
     pub mean_power_w: f64,
+    /// Duration of the measured kernel-execution window, seconds (used by
+    /// fleet reports to turn energies back into mean draws).
+    pub window_s: f64,
 }
 
 /// Measure one run of `load` naively: single execution, power integrated
@@ -28,7 +38,7 @@ pub fn measure_naive<L: RepeatableLoad>(
     run_seed: u64,
 ) -> NaiveResult {
     // one repetition, started at an arbitrary (uncontrolled) time
-    let mut rng = crate::rng::Rng::new(rig.seed ^ run_seed);
+    let mut rng = Rng::new(rig.seed ^ run_seed);
     let t_start = 0.5 + rng.uniform();
     let activity = load.build(t_start, 1, 0, 0.0);
     let t_end = activity.t_end();
@@ -45,12 +55,56 @@ pub fn measure_naive<L: RepeatableLoad>(
         truth_j,
         pct_error: pct_error(energy_j, truth_j),
         mean_power_w: p_smi,
+        window_s: duration,
+    }
+}
+
+/// [`measure_naive`] on the streaming pipeline: same seeds, same polling,
+/// same integration — through reused scratch buffers and without
+/// materialising the ground-truth trace.
+pub fn measure_naive_streaming<L: RepeatableLoad>(
+    rig: &MeasurementRig,
+    load: &L,
+    poll_period_s: f64,
+    run_seed: u64,
+    scratch: &mut MeasureScratch,
+) -> NaiveResult {
+    let mut rng = Rng::new(rig.seed ^ run_seed);
+    let t_start = 0.5 + rng.uniform();
+    let mut activity = std::mem::take(&mut scratch.activity);
+    load.build_into(t_start, 1, 0, 0.0, &mut activity);
+    let t_end = activity.t_end();
+    let boot_seed = rig.seed ^ run_seed ^ 0xB001;
+    let meta = capture_streaming(rig, &activity, 0.0, t_end + 0.5, boot_seed, scratch);
+    scratch.activity = activity;
+
+    scratch.points.clear();
+    poll_readings(
+        &scratch.readings,
+        Rng::new(boot_seed ^ 0x5149),
+        poll_period_s,
+        0.15,
+        t_start - poll_period_s,
+        t_end + poll_period_s,
+        &mut scratch.points,
+    );
+    let p_smi = mean_power_points(&scratch.points, t_start, t_end);
+    let duration = t_end - t_start;
+    let energy_j = p_smi * duration;
+    let truth_j = meta.pmd_view(&scratch.pmd).energy_between(t_start, t_end);
+    NaiveResult {
+        energy_j,
+        truth_j,
+        pct_error: pct_error(energy_j, truth_j),
+        mean_power_w: p_smi,
+        window_s: duration,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bench::workloads::WORKLOADS;
     use crate::bench::BenchmarkLoad;
     use crate::sim::device::GpuDevice;
     use crate::sim::profile::{find_model, DriverEpoch, PowerField};
@@ -80,6 +134,7 @@ mod tests {
         let r = measure_naive(&rig, &load, 0.02, 3);
         assert!(r.energy_j > 0.0 && r.truth_j > 0.0);
         assert!(r.mean_power_w > 50.0);
+        assert!((r.window_s - 0.4).abs() < 1e-9);
     }
 
     #[test]
@@ -95,5 +150,29 @@ mod tests {
         }
         mean_err /= 8.0;
         assert!(mean_err < -20.0, "1 s window must underestimate, got {mean_err:.1}%");
+    }
+
+    #[test]
+    fn streaming_matches_materialized_bit_for_bit() {
+        let mut scratch = MeasureScratch::new();
+        for (model, driver, field, seed) in [
+            ("A100 PCIe-40G", DriverEpoch::Post530, PowerField::Instant, 7u64),
+            ("RTX 3090", DriverEpoch::Pre530, PowerField::Draw, 8),
+            ("V100 PCIe-16G", DriverEpoch::Pre530, PowerField::Draw, 9),
+            ("Tesla K40", DriverEpoch::Pre530, PowerField::Draw, 10),
+        ] {
+            let device = GpuDevice::new(find_model(model).unwrap(), 0, seed);
+            let rig = MeasurementRig::new(device, driver, field, seed ^ 0xFEED);
+            for (w, wl) in WORKLOADS.iter().enumerate().take(3) {
+                let a = measure_naive(&rig, wl, 0.02, w as u64);
+                // scratch deliberately reused across models and workloads
+                let b = measure_naive_streaming(&rig, wl, 0.02, w as u64, &mut scratch);
+                assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{model}/{}", wl.name);
+                assert_eq!(a.truth_j.to_bits(), b.truth_j.to_bits(), "{model}/{}", wl.name);
+                assert_eq!(a.pct_error.to_bits(), b.pct_error.to_bits(), "{model}/{}", wl.name);
+                assert_eq!(a.mean_power_w.to_bits(), b.mean_power_w.to_bits(), "{model}/{}", wl.name);
+                assert_eq!(a.window_s.to_bits(), b.window_s.to_bits(), "{model}/{}", wl.name);
+            }
+        }
     }
 }

@@ -82,28 +82,79 @@ impl Pmd {
     /// Measure a device's ground-truth board power trace.
     ///
     /// Returns the PMD's 5 kHz power trace: total board power minus the
-    /// 3.3 V rail, seen through the ADC.
+    /// 3.3 V rail, seen through the ADC. Implemented on top of
+    /// [`PmdStream`], so the materialised and streaming paths share the
+    /// per-sample arithmetic (bit-for-bit).
     pub fn measure(&self, device: &GpuDevice, truth: &PowerTrace) -> PowerTrace {
-        let stride = (truth.hz / self.sample_hz).round().max(1.0) as usize;
-        let mut rng = Rng::new(self.seed ^ 0xAD0C);
-        let mut samples = Vec::with_capacity(truth.len() / stride + 1);
-        for i in (0..truth.len()).step_by(stride) {
-            let total = truth.samples[i] as f64;
-            let captured = total - device.rail_3v3_w(total);
-            // supply voltage wanders slightly under load
-            let v_true = self.rail_v - 0.05 * (captured / 400.0) + rng.normal_fast_ms(0.0, 0.01);
-            let i_true = captured / v_true;
-            let v = self.adc.quantise_v(v_true + self.v_bias + rng.normal_fast_ms(0.0, self.adc.v_err * 0.15));
-            let a = self.adc.quantise_i(i_true + self.i_bias + rng.normal_fast_ms(0.0, self.adc.i_err * 0.15));
-            samples.push((v * a).max(0.0) as f32);
+        let mut stream = self.stream(device, truth.hz);
+        let mut samples = Vec::with_capacity(truth.len() / stream.stride + 1);
+        stream.push_chunk(&truth.samples, 0, &mut samples);
+        PowerTrace::from_samples(stream.out_hz, truth.t0, samples)
+    }
+
+    /// Streaming decimator over a ground-truth stream at `truth_hz`: feed
+    /// it chunks in order and it appends the PMD's ADC-quantised samples.
+    /// The fleet hot path uses this so the 10 kHz truth never materialises.
+    pub fn stream(&self, device: &GpuDevice, truth_hz: f64) -> PmdStream {
+        let stride = (truth_hz / self.sample_hz).round().max(1.0) as usize;
+        PmdStream {
+            adc: self.adc,
+            rail_v: self.rail_v,
+            v_bias: self.v_bias,
+            i_bias: self.i_bias,
+            rng: Rng::new(self.seed ^ 0xAD0C),
+            stride,
+            next_idx: 0,
+            device: device.clone(),
+            out_hz: truth_hz / stride as f64,
         }
-        PowerTrace::from_samples(truth.hz / stride as f64, truth.t0, samples)
     }
 
     /// Ground-truth energy over an interval, joules (what the paper calls
     /// "energy calculated using PMD data").
     pub fn energy_j(&self, device: &GpuDevice, truth: &PowerTrace, t0: f64, t1: f64) -> f64 {
         self.measure(device, truth).energy_between(t0, t1)
+    }
+}
+
+/// Streaming PMD capture state: strided sampling + per-sample ADC noise,
+/// carried across chunk boundaries. Created by [`Pmd::stream`].
+#[derive(Debug)]
+pub struct PmdStream {
+    adc: AdcModel,
+    rail_v: f64,
+    v_bias: f64,
+    i_bias: f64,
+    rng: Rng,
+    stride: usize,
+    next_idx: usize,
+    device: GpuDevice,
+    /// Output sample rate after striding, Hz.
+    pub out_hz: f64,
+}
+
+impl PmdStream {
+    /// Consume the ground-truth chunk starting at global sample index
+    /// `chunk_start`, appending the PMD samples it covers to `out`.
+    /// Chunks must be fed contiguously and in order.
+    pub fn push_chunk(&mut self, chunk: &[f32], chunk_start: usize, out: &mut Vec<f32>) {
+        let end = chunk_start + chunk.len();
+        while self.next_idx < end {
+            debug_assert!(self.next_idx >= chunk_start, "chunks fed out of order");
+            let total = chunk[self.next_idx - chunk_start] as f64;
+            let captured = total - self.device.rail_3v3_w(total);
+            // supply voltage wanders slightly under load
+            let v_true = self.rail_v - 0.05 * (captured / 400.0) + self.rng.normal_fast_ms(0.0, 0.01);
+            let i_true = captured / v_true;
+            let v = self
+                .adc
+                .quantise_v(v_true + self.v_bias + self.rng.normal_fast_ms(0.0, self.adc.v_err * 0.15));
+            let a = self
+                .adc
+                .quantise_i(i_true + self.i_bias + self.rng.normal_fast_ms(0.0, self.adc.i_err * 0.15));
+            out.push((v * a).max(0.0) as f32);
+            self.next_idx += self.stride;
+        }
     }
 }
 
@@ -165,6 +216,23 @@ mod tests {
         assert_eq!(a.v_bias, b.v_bias);
         let c = Pmd::new(2);
         assert_ne!(a.v_bias, c.v_bias);
+    }
+
+    #[test]
+    fn pmd_stream_chunking_matches_measure() {
+        let (d, pmd) = rig();
+        let act = ActivitySignal::burst(0.3, 1.0, 0.9);
+        let truth = d.synthesize(&act, 0.0, 1.5);
+        let whole = pmd.measure(&d, &truth);
+        let mut stream = pmd.stream(&d, truth.hz);
+        let mut chunked: Vec<f32> = Vec::new();
+        let mut start = 0usize;
+        for chunk in truth.samples.chunks(333) {
+            stream.push_chunk(chunk, start, &mut chunked);
+            start += chunk.len();
+        }
+        assert_eq!(chunked, whole.samples);
+        assert!((stream.out_hz - whole.hz).abs() < 1e-12);
     }
 
     #[test]

@@ -13,9 +13,9 @@
 //! and the per-card *component tolerance* that makes every physical card's
 //! on-board sensor read `gradient·P + offset` (Fig. 9).
 
-use super::activity::ActivitySignal;
+use super::activity::{ActivitySignal, Segment};
 use super::profile::GpuModel;
-use super::trace::{PowerTrace, TRUE_HZ};
+use super::trace::{PowerTrace, SampleSource, TRUE_HZ};
 use crate::rng::Rng;
 
 /// Per-card randomness: the shunt-resistor tolerance shows up as a linear
@@ -99,12 +99,29 @@ impl GpuDevice {
     /// over `[t0, t1)` at [`TRUE_HZ`].
     ///
     /// This is the simulator's hot path: one first-order filter pass over
-    /// `(t1-t0) * 10_000` samples, no allocation beyond the output.
+    /// `(t1-t0) * 10_000` samples, no allocation beyond the output. The
+    /// per-sample state machine lives in [`SynthStream`]; this method just
+    /// drains it into one vector, so the materialised and streaming paths
+    /// produce bit-for-bit identical samples by construction.
     pub fn synthesize(&self, activity: &ActivitySignal, t0: f64, t1: f64) -> PowerTrace {
-        let n = ((t1 - t0) * TRUE_HZ).round() as usize;
-        let dt = 1.0 / TRUE_HZ;
-        let mut rng = Rng::new(self.seed);
+        let mut stream = self.synth_stream(activity, t0, t1);
+        let n = stream.total_len();
         let mut samples = Vec::with_capacity(n);
+        while stream.fill(&mut samples, n) > 0 {}
+        PowerTrace::from_samples(TRUE_HZ, t0, samples)
+    }
+
+    /// Chunked synthesis of the same trace [`Self::synthesize`] builds:
+    /// a [`SampleSource`] for the streaming measurement pipeline, which
+    /// pulls fixed-size blocks instead of materialising 10 kHz ground
+    /// truth per node.
+    pub fn synth_stream<'a>(
+        &'a self,
+        activity: &'a ActivitySignal,
+        t0: f64,
+        t1: f64,
+    ) -> SynthStream<'a> {
+        let n = ((t1 - t0) * TRUE_HZ).round() as usize;
 
         // Two-pole dynamics: switching power slews fast (clocks gate within
         // milliseconds — the PMD sees clean square waves, Fig. 10), while a
@@ -112,7 +129,6 @@ impl GpuDevice {
         // and sets the model-specific 10→90% rise time (Fig. 7 case 2).
         let w_slow = self.model.ramp_frac;
         let w_fast = 1.0 - w_slow;
-        let tau_fast = 0.006;
         // With the fast pole settled, the 90% crossing is set by the slow
         // pole: t90 ≈ τs·ln(w_slow/0.1) when the ramp carries >10% of the
         // swing (Fig. 7 case-2 boards). Boards with ramp_frac ≤ 0.1 slew
@@ -123,67 +139,122 @@ impl GpuDevice {
         } else {
             (self.model.rise_ms / 1000.0).max(0.02)
         };
-        let tau_fall_fast = 0.004;
-        let tau_fall_slow = 0.060;
 
-        // pstate bookkeeping: drop to low idle after 1 s of inactivity
-        let mut last_active = f64::NEG_INFINITY;
-        let mut p_fast = self.model.idle_w * w_fast; // fast pole state
-        let mut p_slow = self.model.idle_w * w_slow; // slow pole state
-
-        // Hot-path state (EXPERIMENTS.md §Perf): time is monotonic, so a
-        // segment cursor replaces the per-sample binary search, and the
-        // steady-power target (a powf) is recomputed only when the
-        // (utilisation, pstate) state actually changes.
-        let segs = &activity.segments;
-        let mut cursor = 0usize;
-        let mut cached_util = f64::NAN;
-        let mut cached_pstate = false;
-        let mut target = self.model.idle_w;
-        for i in 0..n {
-            let t = t0 + i as f64 * dt;
-            while cursor < segs.len() && t >= segs[cursor].t1 {
-                cursor += 1;
-            }
-            let util = if cursor < segs.len() && t >= segs[cursor].t0 {
-                segs[cursor].util
-            } else {
-                0.0
-            };
-            if util > 0.0 {
-                last_active = t;
-            }
-            let high_pstate = t - last_active < 1.0;
-            if util != cached_util || high_pstate != cached_pstate {
-                cached_util = util;
-                cached_pstate = high_pstate;
-                target = if util > 0.0 {
-                    self.steady_power_w(util)
-                } else if high_pstate {
-                    self.active_idle_w()
-                } else {
-                    self.model.idle_w
-                };
-            }
-            let (tf, ts) = if target * w_fast > p_fast {
-                (tau_fast, tau_slow)
-            } else {
-                (tau_fall_fast, tau_fall_slow)
-            };
-            p_fast += (target * w_fast - p_fast) * (dt / tf).min(1.0);
-            p_slow += (target * w_slow - p_slow) * (dt / ts).min(1.0);
-            let p = p_fast + p_slow;
-            let noise = rng.normal_fast_ms(0.0, 0.4 + 0.004 * p);
-            let sample = (p + noise).clamp(0.0, self.model.power_limit_w * 1.02);
-            samples.push(sample as f32);
+        SynthStream {
+            device: self,
+            segs: &activity.segments,
+            t0,
+            n,
+            produced: 0,
+            rng: Rng::new(self.seed),
+            w_slow,
+            w_fast,
+            tau_slow,
+            last_active: f64::NEG_INFINITY,
+            p_fast: self.model.idle_w * w_fast,
+            p_slow: self.model.idle_w * w_slow,
+            cursor: 0,
+            cached_util: f64::NAN,
+            cached_pstate: false,
+            target: self.model.idle_w,
         }
-        PowerTrace::from_samples(TRUE_HZ, t0, samples)
     }
 
     /// Power drawn through the 3.3 V PCIe slot rail (not captured by the
     /// PMD riser — up to 10 W of systematic PMD underestimate, §3.2).
     pub fn rail_3v3_w(&self, total_w: f64) -> f64 {
         (0.035 * total_w).min(10.0)
+    }
+}
+
+/// Chunked ground-truth synthesis: the per-sample state machine behind
+/// [`GpuDevice::synthesize`], exposed as a [`SampleSource`] so consumers
+/// can process the trace in O(chunk) memory. Chunk boundaries never change
+/// the produced samples (the state carries across `fill` calls).
+#[derive(Debug)]
+pub struct SynthStream<'a> {
+    device: &'a GpuDevice,
+    segs: &'a [Segment],
+    t0: f64,
+    n: usize,
+    produced: usize,
+    rng: Rng,
+    w_slow: f64,
+    w_fast: f64,
+    tau_slow: f64,
+    // pstate bookkeeping: drop to low idle after 1 s of inactivity
+    last_active: f64,
+    p_fast: f64, // fast pole state
+    p_slow: f64, // slow pole state
+    // Hot-path state (EXPERIMENTS.md §Perf): time is monotonic, so a
+    // segment cursor replaces the per-sample binary search, and the
+    // steady-power target (a powf) is recomputed only when the
+    // (utilisation, pstate) state actually changes.
+    cursor: usize,
+    cached_util: f64,
+    cached_pstate: bool,
+    target: f64,
+}
+
+impl SampleSource for SynthStream<'_> {
+    fn hz(&self) -> f64 {
+        TRUE_HZ
+    }
+
+    fn t0(&self) -> f64 {
+        self.t0
+    }
+
+    fn total_len(&self) -> usize {
+        self.n
+    }
+
+    fn fill(&mut self, out: &mut Vec<f32>, max: usize) -> usize {
+        let dt = 1.0 / TRUE_HZ;
+        let tau_fast = 0.006;
+        let tau_fall_fast = 0.004;
+        let tau_fall_slow = 0.060;
+        let end = (self.produced + max).min(self.n);
+        for i in self.produced..end {
+            let t = self.t0 + i as f64 * dt;
+            while self.cursor < self.segs.len() && t >= self.segs[self.cursor].t1 {
+                self.cursor += 1;
+            }
+            let util = if self.cursor < self.segs.len() && t >= self.segs[self.cursor].t0 {
+                self.segs[self.cursor].util
+            } else {
+                0.0
+            };
+            if util > 0.0 {
+                self.last_active = t;
+            }
+            let high_pstate = t - self.last_active < 1.0;
+            if util != self.cached_util || high_pstate != self.cached_pstate {
+                self.cached_util = util;
+                self.cached_pstate = high_pstate;
+                self.target = if util > 0.0 {
+                    self.device.steady_power_w(util)
+                } else if high_pstate {
+                    self.device.active_idle_w()
+                } else {
+                    self.device.model.idle_w
+                };
+            }
+            let (tf, ts) = if self.target * self.w_fast > self.p_fast {
+                (tau_fast, self.tau_slow)
+            } else {
+                (tau_fall_fast, tau_fall_slow)
+            };
+            self.p_fast += (self.target * self.w_fast - self.p_fast) * (dt / tf).min(1.0);
+            self.p_slow += (self.target * self.w_slow - self.p_slow) * (dt / ts).min(1.0);
+            let p = self.p_fast + self.p_slow;
+            let noise = self.rng.normal_fast_ms(0.0, 0.4 + 0.004 * p);
+            let sample = (p + noise).clamp(0.0, self.device.model.power_limit_w * 1.02);
+            out.push(sample as f32);
+        }
+        let count = end - self.produced;
+        self.produced = end;
+        count
     }
 }
 
@@ -315,5 +386,18 @@ mod tests {
         let d = dev("RTX 3090");
         assert!(d.rail_3v3_w(400.0) <= 10.0);
         assert!(d.rail_3v3_w(50.0) > 1.0);
+    }
+
+    #[test]
+    fn synth_stream_chunking_matches_synthesize() {
+        let d = dev("RTX 3090");
+        let act = ActivitySignal::square_wave(0.2, 0.08, 0.5, 1.0, 20);
+        let whole = d.synthesize(&act, 0.0, 2.0);
+        // odd chunk size: per-sample state must carry across fills
+        let mut stream = d.synth_stream(&act, 0.0, 2.0);
+        let mut chunked: Vec<f32> = Vec::new();
+        while stream.fill(&mut chunked, 517) > 0 {}
+        assert_eq!(chunked, whole.samples);
+        assert_eq!(stream.total_len(), whole.len());
     }
 }

@@ -21,11 +21,17 @@ pub mod superchip;
 pub mod trace;
 
 pub use activity::{ActivitySignal, Segment};
-pub use device::{CardTolerance, GpuDevice};
+pub use device::{CardTolerance, GpuDevice, SynthStream};
 pub use profile::{
     find_model, sensor_pipeline, total_cards, DriverEpoch, FormFactor, Generation, GpuModel,
     PipelineKind, PipelineSpec, PowerField, ProductLine, CATALOGUE,
 };
-pub use sensor::{run_pipeline, Reading, SensorStream};
+pub use sensor::{
+    lookback_samples, run_pipeline, run_pipeline_chunked, value_at_readings, Reading,
+    SensorConsumer, SensorStream,
+};
 pub use superchip::{CpuDomain, Superchip, SuperchipCapture};
-pub use trace::{PowerTrace, SampleSeries, TRUE_HZ};
+pub use trace::{
+    PowerTrace, SampleSeries, SampleSource, SamplerBuffers, StreamingPrefix, TraceReplay,
+    TraceSampler, TraceView, STREAM_CHUNK, TRUE_HZ,
+};

@@ -10,10 +10,18 @@
 //! Update instants are anchored at a *boot phase* the user can neither
 //! observe nor control (paper §4.3: "nvidia-smi starts measuring at boot
 //! time ... no way to synchronise with it").
+//!
+//! The pipeline is implemented as a **streaming consumer**
+//! ([`SensorConsumer`]): it sees the ground truth one chunk at a time via
+//! the [`TraceSampler`] prefix window and never needs the full trace.
+//! [`run_pipeline`] feeds a materialised trace through the same consumer,
+//! so the reference and streaming paths are one code path.
 
 use super::device::GpuDevice;
 use super::profile::{PipelineKind, PipelineSpec};
-use super::trace::PowerTrace;
+use super::trace::{
+    PowerTrace, SamplerBuffers, StreamingPrefix, TraceReplay, TraceSampler, STREAM_CHUNK,
+};
 use crate::rng::Rng;
 
 /// One published sensor reading.
@@ -40,26 +48,44 @@ impl SensorStream {
     /// (nvidia-smi holds the value between updates). `None` before the
     /// first update or for unsupported pipelines.
     pub fn value_at(&self, t: f64) -> Option<f64> {
-        if self.readings.is_empty() {
-            return None;
-        }
-        // binary search for last reading with .t <= t
-        let mut lo = 0usize;
-        let mut hi = self.readings.len();
-        while lo < hi {
-            let mid = (lo + hi) / 2;
-            if self.readings[mid].t <= t {
-                lo = mid + 1;
-            } else {
-                hi = mid;
-            }
-        }
-        if lo == 0 {
-            None
+        value_at_readings(&self.readings, t)
+    }
+}
+
+/// Last published reading at or before `t` over a chronologically sorted
+/// readings slice — shared by [`SensorStream::value_at`] and the streaming
+/// measurement path (which keeps readings in a reused scratch buffer).
+pub fn value_at_readings(readings: &[Reading], t: f64) -> Option<f64> {
+    if readings.is_empty() {
+        return None;
+    }
+    // binary search for last reading with .t <= t
+    let mut lo = 0usize;
+    let mut hi = readings.len();
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if readings[mid].t <= t {
+            lo = mid + 1;
         } else {
-            Some(self.readings[lo - 1].watts)
+            hi = mid;
         }
     }
+    if lo == 0 {
+        None
+    } else {
+        Some(readings[lo - 1].watts)
+    }
+}
+
+/// Trailing prefix-window lookback (in samples) the spec's consumer needs
+/// from a [`TraceSampler`]: the boxcar (or estimation) averaging window.
+pub fn lookback_samples(spec: &PipelineSpec, hz: f64) -> usize {
+    let window_s = match spec.kind {
+        PipelineKind::Boxcar { window_ms } => window_ms / 1000.0,
+        PipelineKind::Estimation => spec.update_ms / 1000.0,
+        PipelineKind::RcFilter { .. } | PipelineKind::Unsupported => 0.0,
+    };
+    (window_s * hz).ceil() as usize + 4
 }
 
 /// Generate the sensor update stream for `device` over a ground-truth trace.
@@ -72,21 +98,31 @@ pub fn run_pipeline(
     truth: &PowerTrace,
     boot_seed: u64,
 ) -> SensorStream {
-    let mut rng = Rng::new(boot_seed ^ device.seed);
-    let update_s = spec.update_ms / 1000.0;
-    let phase_s = if update_s > 0.0 { rng.uniform() * update_s } else { 0.0 };
+    run_pipeline_chunked(device, spec, truth, boot_seed, STREAM_CHUNK)
+}
 
-    let readings = match spec.kind {
-        PipelineKind::Unsupported => Vec::new(),
-        PipelineKind::Boxcar { window_ms } => {
-            boxcar_readings(device, truth, update_s, phase_s, window_ms / 1000.0, &mut rng)
-        }
-        PipelineKind::RcFilter { tau_ms } => {
-            rc_readings(device, truth, update_s, phase_s, tau_ms / 1000.0, &mut rng)
-        }
-        PipelineKind::Estimation => estimation_readings(device, truth, update_s, phase_s, &mut rng),
-    };
-    SensorStream { spec, phase_s, readings }
+/// [`run_pipeline`] with an explicit chunk size. Chunking never changes
+/// the readings; tests pin this with odd sizes.
+pub fn run_pipeline_chunked(
+    device: &GpuDevice,
+    spec: PipelineSpec,
+    truth: &PowerTrace,
+    boot_seed: u64,
+    chunk_size: usize,
+) -> SensorStream {
+    let mut readings = Vec::new();
+    let mut sampler = TraceSampler::with_buffers(
+        TraceReplay::new(truth),
+        lookback_samples(&spec, truth.hz),
+        chunk_size,
+        SamplerBuffers::default(),
+    );
+    let mut consumer =
+        SensorConsumer::new(device, spec, truth.hz, truth.t0, truth.len(), boot_seed, chunk_size);
+    while sampler.advance() {
+        consumer.push_chunk(sampler.chunk(), sampler.prefix(), &mut readings);
+    }
+    SensorStream { spec, phase_s: consumer.phase_s(), readings }
 }
 
 /// Quantise to nvidia-smi's printed resolution (0.01 W).
@@ -95,94 +131,168 @@ fn quantise(w: f64) -> f64 {
     (w * 100.0).round() / 100.0
 }
 
-fn update_times(truth: &PowerTrace, update_s: f64, phase_s: f64) -> Vec<f64> {
-    // first update at or after truth.t0, aligned to boot phase
-    let mut out = Vec::new();
-    if update_s <= 0.0 {
-        return out;
-    }
-    let k0 = ((truth.t0 - phase_s) / update_s).ceil() as i64;
-    let mut k = k0;
-    loop {
-        let t = phase_s + k as f64 * update_s;
-        if t >= truth.t_end() {
-            break;
-        }
-        if t >= truth.t0 {
-            out.push(t);
-        }
-        k += 1;
-    }
-    out
+/// Per-kind streaming state.
+#[derive(Debug)]
+enum KindState {
+    /// Trailing mean of `window_s` via the shared prefix window.
+    Boxcar { window_s: f64 },
+    /// IIR filter run at the truth rate; a short ring keeps the filtered
+    /// values of the current chunk for sampling at update instants.
+    Rc { alpha: f64, state: f64, initialized: bool, ring: Vec<f32> },
+    /// Activity-counter estimation: biased, 5 W-quantised update means.
+    Estimation { bias: f64 },
+    /// Never publishes.
+    Unsupported,
 }
 
-fn boxcar_readings(
-    device: &GpuDevice,
-    truth: &PowerTrace,
+/// Streaming sensor pipeline: consumes ground-truth chunks (through the
+/// [`TraceSampler`]'s prefix window) and appends published [`Reading`]s as
+/// soon as their update instants are covered. Holds O(chunk) state.
+#[derive(Debug)]
+pub struct SensorConsumer {
     update_s: f64,
     phase_s: f64,
-    window_s: f64,
-    rng: &mut Rng,
-) -> Vec<Reading> {
-    let prefix = truth.prefix_sums();
-    update_times(truth, update_s, phase_s)
-        .into_iter()
-        .map(|t| {
-            let mean = truth.window_mean_with(&prefix, t, window_s);
+    t0: f64,
+    t_end: f64,
+    rng: Rng,
+    tolerance: super::device::CardTolerance,
+    idle_w: f64,
+    next_k: i64,
+    done: bool,
+    kind: KindState,
+}
+
+impl SensorConsumer {
+    /// Consumer for one pipeline over a trace with the given geometry
+    /// (`hz`, `t0`, `total_len`). RNG use matches the historical pipeline
+    /// exactly: boot phase first, then (for estimation) the per-card bias,
+    /// then one publication-jitter draw per update in order.
+    pub fn new(
+        device: &GpuDevice,
+        spec: PipelineSpec,
+        hz: f64,
+        t0: f64,
+        total_len: usize,
+        boot_seed: u64,
+        chunk_size: usize,
+    ) -> Self {
+        let mut rng = Rng::new(boot_seed ^ device.seed);
+        let update_s = spec.update_ms / 1000.0;
+        let phase_s = if update_s > 0.0 { rng.uniform() * update_s } else { 0.0 };
+
+        let kind = match spec.kind {
+            PipelineKind::Unsupported => KindState::Unsupported,
+            PipelineKind::Boxcar { window_ms } => {
+                KindState::Boxcar { window_s: window_ms / 1000.0 }
+            }
+            PipelineKind::RcFilter { tau_ms } => {
+                let dt = 1.0 / hz;
+                KindState::Rc {
+                    alpha: (dt / (tau_ms / 1000.0)).min(1.0),
+                    state: 0.0,
+                    initialized: false,
+                    ring: vec![0.0; chunk_size.max(1) + 4],
+                }
+            }
+            PipelineKind::Estimation => {
+                // fixed per-card bias up to ±15%
+                let bias = 1.0 + (rng.uniform() - 0.5) * 0.3;
+                KindState::Estimation { bias }
+            }
+        };
+
+        let active = update_s > 0.0 && !matches!(kind, KindState::Unsupported);
+        let next_k = if active { ((t0 - phase_s) / update_s).ceil() as i64 } else { 0 };
+        SensorConsumer {
+            update_s,
+            phase_s,
+            t0,
+            t_end: t0 + total_len as f64 / hz,
+            rng,
+            tolerance: device.tolerance,
+            idle_w: device.model.idle_w,
+            next_k,
+            done: !active,
+            kind,
+        }
+    }
+
+    /// The realised boot phase, seconds.
+    pub fn phase_s(&self) -> f64 {
+        self.phase_s
+    }
+
+    /// Consume the next ground-truth chunk (already pushed into `prefix`)
+    /// and publish every update instant it covers.
+    pub fn push_chunk(&mut self, chunk: &[f32], prefix: &StreamingPrefix, out: &mut Vec<Reading>) {
+        // RC: extend the IIR over the chunk first, keeping the filtered
+        // values for sampling below.
+        if let KindState::Rc { alpha, state, initialized, ring } = &mut self.kind {
+            let cap = ring.len();
+            let mut idx = prefix.produced() - chunk.len();
+            if !*initialized && !chunk.is_empty() {
+                *state = chunk[0] as f64;
+                *initialized = true;
+            }
+            for &p in chunk {
+                *state += *alpha * (p as f64 - *state);
+                ring[idx % cap] = *state as f32;
+                idx += 1;
+            }
+        }
+        if self.done {
+            return;
+        }
+
+        let produced = prefix.produced();
+        loop {
+            let t = self.phase_s + self.next_k as f64 * self.update_s;
+            if t >= self.t_end {
+                self.done = true;
+                break;
+            }
+            if t < self.t0 {
+                self.next_k += 1;
+                continue;
+            }
+            let hi = prefix.index_of(t);
+            if hi >= produced {
+                break; // update instant not yet covered; wait for more samples
+            }
             // small publication jitter in the *time* domain (±1 ms) models
-            // the driver's internal scheduling noise seen in Fig. 6
-            let jitter = rng.normal_ms(0.0, 0.0008);
-            Reading { t: t + jitter, watts: quantise(device.tolerance.apply(mean)) }
-        })
-        .collect()
-}
-
-fn rc_readings(
-    device: &GpuDevice,
-    truth: &PowerTrace,
-    update_s: f64,
-    phase_s: f64,
-    tau_s: f64,
-    rng: &mut Rng,
-) -> Vec<Reading> {
-    // run the IIR filter at the truth rate, then sample at update instants
-    let dt = truth.dt();
-    let alpha = (dt / tau_s).min(1.0);
-    let mut state = truth.samples.first().copied().unwrap_or(0.0) as f64;
-    let mut filtered = Vec::with_capacity(truth.len());
-    for &p in &truth.samples {
-        state += alpha * (p as f64 - state);
-        filtered.push(state as f32);
+            // the driver's internal scheduling noise seen in Fig. 6; it is
+            // clamped well inside the inter-update gap so adjacent readings
+            // can never swap order (value_at's binary search relies on the
+            // sortedness invariant). Estimation publishes unjittered.
+            let (watts, jittered) = match &self.kind {
+                KindState::Boxcar { window_s } => {
+                    let mean = prefix.window_mean(t, *window_s);
+                    (quantise(self.tolerance.apply(mean)), true)
+                }
+                KindState::Rc { ring, .. } => {
+                    let filtered = ring[hi % ring.len()] as f64;
+                    (quantise(self.tolerance.apply(filtered)), true)
+                }
+                KindState::Estimation { bias } => {
+                    // coarse, biased, heavily quantised (5 W steps)
+                    let mean = prefix.window_mean(t, self.update_s);
+                    let est = (mean * bias / 5.0).round() * 5.0;
+                    (est.max(self.idle_w * 0.5), false)
+                }
+                KindState::Unsupported => unreachable!("inactive consumer"),
+            };
+            let t_pub = if jittered { t + self.jitter() } else { t };
+            out.push(Reading { t: t_pub, watts });
+            self.next_k += 1;
+        }
     }
-    let f = PowerTrace::from_samples(truth.hz, truth.t0, filtered);
-    update_times(truth, update_s, phase_s)
-        .into_iter()
-        .map(|t| {
-            let jitter = rng.normal_ms(0.0, 0.0008);
-            Reading { t: t + jitter, watts: quantise(device.tolerance.apply(f.at(t))) }
-        })
-        .collect()
-}
 
-fn estimation_readings(
-    device: &GpuDevice,
-    truth: &PowerTrace,
-    update_s: f64,
-    phase_s: f64,
-    rng: &mut Rng,
-) -> Vec<Reading> {
-    // activity-counter estimation: coarse, biased, heavily quantised
-    // (5 W steps), with a fixed per-card bias up to ±15%
-    let bias = 1.0 + (rng.uniform() - 0.5) * 0.3;
-    let prefix = truth.prefix_sums();
-    update_times(truth, update_s, phase_s)
-        .into_iter()
-        .map(|t| {
-            let mean = truth.window_mean_with(&prefix, t, update_s);
-            let est = (mean * bias / 5.0).round() * 5.0;
-            Reading { t, watts: est.max(device.model.idle_w * 0.5) }
-        })
-        .collect()
+    /// Publication jitter, clamped to < half the update period so the
+    /// published timestamps stay strictly increasing.
+    fn jitter(&mut self) -> f64 {
+        let bound = 0.45 * self.update_s;
+        self.rng.normal_ms(0.0, 0.0008).clamp(-bound, bound)
+    }
 }
 
 #[cfg(test)]
@@ -303,5 +413,46 @@ mod tests {
         let max = vals.iter().cloned().fold(f64::MIN, f64::max);
         let min = vals.iter().cloned().fold(f64::MAX, f64::min);
         assert!(max - min < 30.0, "full window must flatten, got {min}..{max}");
+    }
+
+    #[test]
+    fn chunk_size_never_changes_readings() {
+        // boxcar, RC and estimation must all be chunk-size invariant
+        let d = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, 13);
+        let act = ActivitySignal::square_wave(0.3, 0.075, 0.5, 1.0, 40);
+        let truth = d.synthesize(&act, 0.0, 3.5);
+        for spec in [
+            PipelineSpec::boxcar(100.0, 25.0),
+            PipelineSpec::boxcar(100.0, 1000.0),
+            PipelineSpec::rc(15.0, 80.0),
+            PipelineSpec::estimation(100.0),
+        ] {
+            let a = run_pipeline_chunked(&d, spec, &truth, 21, 4096);
+            let b = run_pipeline_chunked(&d, spec, &truth, 21, 257);
+            let c = run_pipeline_chunked(&d, spec, &truth, 21, truth.len() + 1);
+            assert_eq!(a.readings, b.readings, "{spec:?}");
+            assert_eq!(a.readings, c.readings, "{spec:?}");
+            assert_eq!(a.phase_s, b.phase_s);
+        }
+    }
+
+    #[test]
+    fn tiny_update_period_readings_stay_strictly_sorted() {
+        // regression: publication jitter used to be unclamped, so a 2 ms
+        // update period with 0.8 ms jitter sigma produced swapped adjacent
+        // timestamps and silently broke value_at's sortedness invariant
+        let d = dev();
+        for spec in [PipelineSpec::boxcar(2.0, 1.0), PipelineSpec::rc(2.0, 80.0)] {
+            let s = run_pipeline(&d, spec, &flat_trace(200.0, 2.0), 3);
+            assert!(s.readings.len() > 500, "{}", s.readings.len());
+            for w in s.readings.windows(2) {
+                assert!(
+                    w[1].t > w[0].t,
+                    "{spec:?}: readings swapped: {} !> {}",
+                    w[1].t,
+                    w[0].t
+                );
+            }
+        }
     }
 }

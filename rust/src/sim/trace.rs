@@ -4,9 +4,22 @@
 //! samples. The ground-truth synthesis runs at [`TRUE_HZ`] (10 kHz), well
 //! above every sensor rate in the system (PMD 5 kHz, nvidia-smi 10–67 Hz),
 //! so every downstream pipeline is a pure downsampling/filtering of it.
+//!
+//! Two access models share the same query math (via [`TraceView`]):
+//! * materialised — a [`PowerTrace`] holding the full sample vector, used
+//!   by the experiments and as the reference path;
+//! * streaming — a [`TraceSampler`] pulls fixed-size blocks from a
+//!   [`SampleSource`] and maintains incremental prefix sums in a ring
+//!   ([`StreamingPrefix`]), so the fleet hot path never materialises the
+//!   10 kHz ground truth and does O(chunk) allocation per node.
 
 /// Ground-truth synthesis rate (Hz). 10 kHz = 0.1 ms resolution.
 pub const TRUE_HZ: f64 = 10_000.0;
+
+/// Samples per streaming block. 4096 samples = ~0.4 s of ground truth at
+/// [`TRUE_HZ`]; small enough to stay cache-resident, large enough to
+/// amortise per-chunk bookkeeping.
+pub const STREAM_CHUNK: usize = 4096;
 
 /// A uniformly-sampled power trace in watts.
 #[derive(Debug, Clone, PartialEq)]
@@ -66,6 +79,99 @@ impl PowerTrace {
         self.t0 + i as f64 / self.hz
     }
 
+    /// Borrowed view sharing the query math with the streaming path.
+    #[inline]
+    pub fn view(&self) -> TraceView<'_> {
+        TraceView { hz: self.hz, t0: self.t0, samples: &self.samples }
+    }
+
+    /// Index of the last sample at or before time `t`, clamped into range.
+    #[inline]
+    pub fn index_of(&self, t: f64) -> usize {
+        self.view().index_of(t)
+    }
+
+    /// Instantaneous power at time `t` (zero-order hold).
+    #[inline]
+    pub fn at(&self, t: f64) -> f64 {
+        self.view().at(t)
+    }
+
+    /// Inclusive prefix sums (f64 to avoid drift over long traces);
+    /// `prefix[i] = sum(samples[0..=i])`. The O(1)-per-query substrate for
+    /// boxcar averaging — this is the hot path of the whole estimator.
+    pub fn prefix_sums(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.samples.len());
+        self.prefix_sums_into(&mut out);
+        out
+    }
+
+    /// [`Self::prefix_sums`] into a caller-owned buffer (cleared first), so
+    /// per-node loops can reuse one allocation.
+    pub fn prefix_sums_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        let mut acc = 0.0f64;
+        for &s in &self.samples {
+            acc += s as f64;
+            out.push(acc);
+        }
+    }
+
+    /// Mean power over the window `[t - window_s, t]`, clamped to trace
+    /// bounds, using precomputed prefix sums.
+    pub fn window_mean_with(&self, prefix: &[f64], t: f64, window_s: f64) -> f64 {
+        self.view().window_mean_with(prefix, t, window_s)
+    }
+
+    /// Mean power over `[t - window_s, t]` (computes prefix sums internally;
+    /// prefer [`Self::window_mean_with`] in loops).
+    pub fn window_mean(&self, t: f64, window_s: f64) -> f64 {
+        self.window_mean_with(&self.prefix_sums(), t, window_s)
+    }
+
+    /// Energy in joules over the whole trace (rectangle rule; exact for a
+    /// zero-order-hold signal).
+    pub fn energy_j(&self) -> f64 {
+        self.samples.iter().map(|&s| s as f64).sum::<f64>() * self.dt()
+    }
+
+    /// Energy in joules over `[t_start, t_end]`.
+    pub fn energy_between(&self, t_start: f64, t_end: f64) -> f64 {
+        self.view().energy_between(t_start, t_end)
+    }
+
+    /// Mean power over the whole trace, watts.
+    pub fn mean_w(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().map(|&s| s as f64).sum::<f64>() / self.samples.len() as f64
+        }
+    }
+
+    /// Resample to a lower rate by striding (used by the PMD's 5 kHz view).
+    pub fn downsample(&self, new_hz: f64) -> PowerTrace {
+        assert!(new_hz <= self.hz, "downsample only");
+        let stride = (self.hz / new_hz).round() as usize;
+        let samples = self.samples.iter().step_by(stride.max(1)).copied().collect();
+        PowerTrace { hz: self.hz / stride.max(1) as f64, t0: self.t0, samples }
+    }
+}
+
+/// A borrowed uniformly-sampled trace: the shared implementation of the
+/// index/energy/window math used by both [`PowerTrace`] and the streaming
+/// measurement path (which views reused scratch buffers through it).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceView<'a> {
+    /// Sample rate in Hz.
+    pub hz: f64,
+    /// Time of sample 0, seconds.
+    pub t0: f64,
+    /// Instantaneous power samples, watts.
+    pub samples: &'a [f32],
+}
+
+impl TraceView<'_> {
     /// Index of the last sample at or before time `t`, clamped into range.
     #[inline]
     pub fn index_of(&self, t: f64) -> usize {
@@ -86,21 +192,23 @@ impl PowerTrace {
         }
     }
 
-    /// Inclusive prefix sums (f64 to avoid drift over long traces);
-    /// `prefix[i] = sum(samples[0..=i])`. The O(1)-per-query substrate for
-    /// boxcar averaging — this is the hot path of the whole estimator.
-    pub fn prefix_sums(&self) -> Vec<f64> {
-        let mut out = Vec::with_capacity(self.samples.len());
-        let mut acc = 0.0f64;
-        for &s in &self.samples {
-            acc += s as f64;
-            out.push(acc);
-        }
-        out
+    /// Sample spacing in seconds.
+    #[inline]
+    pub fn dt(&self) -> f64 {
+        1.0 / self.hz
     }
 
-    /// Mean power over the window `[t - window_s, t]`, clamped to trace
-    /// bounds, using precomputed prefix sums.
+    /// Energy in joules over `[t_start, t_end]` (rectangle rule).
+    pub fn energy_between(&self, t_start: f64, t_end: f64) -> f64 {
+        if self.samples.is_empty() || t_end <= t_start {
+            return 0.0;
+        }
+        let i0 = self.index_of(t_start);
+        let i1 = self.index_of(t_end);
+        self.samples[i0..=i1].iter().map(|&s| s as f64).sum::<f64>() * self.dt()
+    }
+
+    /// Mean power over `[t - window_s, t]` using precomputed prefix sums.
     pub fn window_mean_with(&self, prefix: &[f64], t: f64, window_s: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -113,44 +221,250 @@ impl PowerTrace {
         let count = hi as i64 - lo;
         (prefix[hi] - base) / count as f64
     }
+}
 
-    /// Mean power over `[t - window_s, t]` (computes prefix sums internally;
-    /// prefer [`Self::window_mean_with`] in loops).
+/// A producer of uniformly-sampled power blocks: either live synthesis
+/// (`sim::device::SynthStream`) or replay of a materialised trace
+/// ([`TraceReplay`]). Chunk boundaries never affect the produced values.
+pub trait SampleSource {
+    /// Sample rate, Hz.
+    fn hz(&self) -> f64;
+    /// Time of sample 0, seconds.
+    fn t0(&self) -> f64;
+    /// Total number of samples this source will produce.
+    fn total_len(&self) -> usize;
+    /// Append up to `max` further samples to `out`; returns how many were
+    /// appended (0 = exhausted).
+    fn fill(&mut self, out: &mut Vec<f32>, max: usize) -> usize;
+}
+
+/// Replays a materialised [`PowerTrace`] as a [`SampleSource`], so the
+/// streaming consumers are exercised by exactly the same code on both the
+/// reference and the hot path.
+#[derive(Debug)]
+pub struct TraceReplay<'a> {
+    trace: &'a PowerTrace,
+    pos: usize,
+}
+
+impl<'a> TraceReplay<'a> {
+    /// Replay `trace` from its first sample.
+    pub fn new(trace: &'a PowerTrace) -> Self {
+        TraceReplay { trace, pos: 0 }
+    }
+}
+
+impl SampleSource for TraceReplay<'_> {
+    fn hz(&self) -> f64 {
+        self.trace.hz
+    }
+
+    fn t0(&self) -> f64 {
+        self.trace.t0
+    }
+
+    fn total_len(&self) -> usize {
+        self.trace.len()
+    }
+
+    fn fill(&mut self, out: &mut Vec<f32>, max: usize) -> usize {
+        let end = (self.pos + max).min(self.trace.len());
+        out.extend_from_slice(&self.trace.samples[self.pos..end]);
+        let n = end - self.pos;
+        self.pos = end;
+        n
+    }
+}
+
+/// Incremental inclusive prefix sums over a bounded trailing window of a
+/// streamed trace. Accumulation order is identical to
+/// [`PowerTrace::prefix_sums`], so window means computed here are
+/// bit-for-bit equal to the materialised path; only the last
+/// `capacity` values are retained (window + chunk lookback).
+#[derive(Debug)]
+pub struct StreamingPrefix {
+    hz: f64,
+    t0: f64,
+    total_len: usize,
+    ring: Vec<f64>,
+    filled: usize,
+    acc: f64,
+}
+
+impl StreamingPrefix {
+    /// Fresh prefix window retaining `capacity` trailing values.
+    pub fn new(hz: f64, t0: f64, total_len: usize, capacity: usize) -> Self {
+        Self::reuse(Vec::new(), hz, t0, total_len, capacity)
+    }
+
+    /// Like [`Self::new`], but reusing a previous ring allocation.
+    pub fn reuse(mut ring: Vec<f64>, hz: f64, t0: f64, total_len: usize, capacity: usize) -> Self {
+        ring.clear();
+        ring.resize(capacity.max(1), 0.0);
+        StreamingPrefix { hz, t0, total_len, ring, filled: 0, acc: 0.0 }
+    }
+
+    /// Recover the ring allocation for reuse.
+    fn into_ring(self) -> Vec<f64> {
+        self.ring
+    }
+
+    /// Consume the next block of samples (in stream order).
+    pub fn push(&mut self, samples: &[f32]) {
+        let cap = self.ring.len();
+        for &s in samples {
+            self.acc += s as f64;
+            self.ring[self.filled % cap] = self.acc;
+            self.filled += 1;
+        }
+    }
+
+    /// Number of samples consumed so far.
+    #[inline]
+    pub fn produced(&self) -> usize {
+        self.filled
+    }
+
+    /// Sample rate, Hz.
+    #[inline]
+    pub fn hz(&self) -> f64 {
+        self.hz
+    }
+
+    /// Time of sample 0, seconds.
+    #[inline]
+    pub fn t0(&self) -> f64 {
+        self.t0
+    }
+
+    /// Total samples the underlying source will produce.
+    #[inline]
+    pub fn total_len(&self) -> usize {
+        self.total_len
+    }
+
+    /// Prefix value at sample index `i` (must lie inside the retained
+    /// trailing window). Hard assert rather than `debug_assert`: queries
+    /// happen per sensor *update* (tens per simulated second), so the
+    /// bounds check is free relative to the work it guards, and a caller
+    /// that under-sizes its lookback must fail loudly instead of silently
+    /// reading a stale ring slot in release builds.
+    #[inline]
+    pub fn prefix_at(&self, i: usize) -> f64 {
+        assert!(
+            i < self.filled && i + self.ring.len() >= self.filled,
+            "prefix index {i} outside retained window (filled {}, cap {})",
+            self.filled,
+            self.ring.len()
+        );
+        self.ring[i % self.ring.len()]
+    }
+
+    /// Index of the last sample at or before `t`, clamped into the *total*
+    /// trace range (identical to [`PowerTrace::index_of`]).
+    #[inline]
+    pub fn index_of(&self, t: f64) -> usize {
+        if self.total_len == 0 {
+            return 0;
+        }
+        let i = ((t - self.t0) * self.hz).floor();
+        (i.max(0.0) as usize).min(self.total_len - 1)
+    }
+
+    /// Mean power over `[t - window_s, t]`; formula identical to
+    /// [`PowerTrace::window_mean_with`]. The caller must only query times
+    /// whose sample index has already been produced.
     pub fn window_mean(&self, t: f64, window_s: f64) -> f64 {
-        self.window_mean_with(&self.prefix_sums(), t, window_s)
-    }
-
-    /// Energy in joules over the whole trace (rectangle rule; exact for a
-    /// zero-order-hold signal).
-    pub fn energy_j(&self) -> f64 {
-        self.samples.iter().map(|&s| s as f64).sum::<f64>() * self.dt()
-    }
-
-    /// Energy in joules over `[t_start, t_end]`.
-    pub fn energy_between(&self, t_start: f64, t_end: f64) -> f64 {
-        if self.samples.is_empty() || t_end <= t_start {
+        if self.total_len == 0 {
             return 0.0;
         }
-        let i0 = self.index_of(t_start);
-        let i1 = self.index_of(t_end);
-        self.samples[i0..=i1].iter().map(|&s| s as f64).sum::<f64>() * self.dt()
+        let hi = self.index_of(t);
+        let lo_f = ((t - window_s - self.t0) * self.hz).floor();
+        let lo = lo_f.max(-1.0) as i64; // exclusive lower index, -1 = trace start
+        let lo = lo.min(hi as i64 - 1); // at least one sample
+        let base = if lo < 0 { 0.0 } else { self.prefix_at(lo as usize) };
+        let count = hi as i64 - lo;
+        (self.prefix_at(hi) - base) / count as f64
+    }
+}
+
+/// Reusable allocations for a [`TraceSampler`]; hand them back between
+/// captures so a long campaign allocates once per worker, not per node.
+#[derive(Debug, Default)]
+pub struct SamplerBuffers {
+    chunk: Vec<f32>,
+    ring: Vec<f64>,
+}
+
+/// Chunked trace synthesis driver: pulls fixed-size blocks from a
+/// [`SampleSource`] and maintains the [`StreamingPrefix`] over them. This
+/// is the tentpole of the streaming measurement pipeline — consumers
+/// (sensor pipelines, the PMD decimator) see each block exactly once and
+/// the full trace is never materialised.
+#[derive(Debug)]
+pub struct TraceSampler<S> {
+    source: S,
+    chunk: Vec<f32>,
+    chunk_start: usize,
+    chunk_size: usize,
+    prefix: StreamingPrefix,
+}
+
+impl<S: SampleSource> TraceSampler<S> {
+    /// Sampler with fresh buffers; `lookback` is the number of trailing
+    /// prefix values consumers may query behind the newest sample (the
+    /// largest boxcar window, in samples).
+    pub fn new(source: S, lookback: usize) -> Self {
+        Self::with_buffers(source, lookback, STREAM_CHUNK, SamplerBuffers::default())
     }
 
-    /// Mean power over the whole trace, watts.
-    pub fn mean_w(&self) -> f64 {
-        if self.samples.is_empty() {
-            0.0
-        } else {
-            self.samples.iter().map(|&s| s as f64).sum::<f64>() / self.samples.len() as f64
+    /// Sampler reusing `bufs` with an explicit chunk size (chunking never
+    /// changes produced values; tests exercise odd sizes).
+    pub fn with_buffers(
+        source: S,
+        lookback: usize,
+        chunk_size: usize,
+        bufs: SamplerBuffers,
+    ) -> Self {
+        let chunk_size = chunk_size.max(1);
+        let cap = lookback + chunk_size + 4;
+        let prefix =
+            StreamingPrefix::reuse(bufs.ring, source.hz(), source.t0(), source.total_len(), cap);
+        TraceSampler { source, chunk: bufs.chunk, chunk_start: 0, chunk_size, prefix }
+    }
+
+    /// Pull the next block; false when the source is exhausted.
+    pub fn advance(&mut self) -> bool {
+        self.chunk_start = self.prefix.produced();
+        self.chunk.clear();
+        if self.source.fill(&mut self.chunk, self.chunk_size) == 0 {
+            return false;
         }
+        self.prefix.push(&self.chunk);
+        true
     }
 
-    /// Resample to a lower rate by striding (used by the PMD's 5 kHz view).
-    pub fn downsample(&self, new_hz: f64) -> PowerTrace {
-        assert!(new_hz <= self.hz, "downsample only");
-        let stride = (self.hz / new_hz).round() as usize;
-        let samples = self.samples.iter().step_by(stride.max(1)).copied().collect();
-        PowerTrace { hz: self.hz / stride.max(1) as f64, t0: self.t0, samples }
+    /// The current block of samples.
+    #[inline]
+    pub fn chunk(&self) -> &[f32] {
+        &self.chunk
+    }
+
+    /// Global index of the current block's first sample.
+    #[inline]
+    pub fn chunk_start(&self) -> usize {
+        self.chunk_start
+    }
+
+    /// The prefix-sum window over everything produced so far.
+    #[inline]
+    pub fn prefix(&self) -> &StreamingPrefix {
+        &self.prefix
+    }
+
+    /// Recover the buffers for the next capture.
+    pub fn into_buffers(self) -> SamplerBuffers {
+        SamplerBuffers { chunk: self.chunk, ring: self.prefix.into_ring() }
     }
 }
 
@@ -268,5 +582,81 @@ mod tests {
     fn series_energy_trapezoid() {
         let s = SampleSeries { points: vec![(0.0, 100.0), (1.0, 200.0), (2.0, 200.0)] };
         assert!((s.energy_j() - (150.0 + 200.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn streaming_prefix_matches_materialized_window_means() {
+        let t = ramp(5000);
+        let prefix = t.prefix_sums();
+        // push in deliberately odd chunk sizes; ring large enough to keep
+        // every index queried below
+        let mut sp = StreamingPrefix::new(t.hz, t.t0, t.len(), 8192);
+        for chunk in t.samples.chunks(313) {
+            sp.push(chunk);
+        }
+        assert_eq!(sp.produced(), t.len());
+        for (at, w) in [(0.5, 0.1), (1.2, 0.01), (4.999, 2.0), (0.0005, 5.0), (3.3, 0.2)] {
+            // windows capped at 0.2 s (200 samples); the 8192 ring retains
+            // the whole 5000-sample trace, so every index is available
+            let want = t.window_mean_with(&prefix, at, w.min(0.2));
+            let got = sp.window_mean(at, w.min(0.2));
+            assert_eq!(got.to_bits(), want.to_bits(), "at={at} w={w}");
+        }
+    }
+
+    #[test]
+    fn streaming_prefix_exact_values_near_tail() {
+        let t = ramp(100);
+        let prefix = t.prefix_sums();
+        let mut sp = StreamingPrefix::new(t.hz, t.t0, t.len(), 64);
+        sp.push(&t.samples);
+        for i in 60..100 {
+            assert_eq!(sp.prefix_at(i).to_bits(), prefix[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn trace_sampler_replays_all_samples_in_order() {
+        let t = ramp(1000);
+        let mut sampler =
+            TraceSampler::with_buffers(TraceReplay::new(&t), 16, 96, SamplerBuffers::default());
+        let mut collected: Vec<f32> = Vec::new();
+        let mut starts = Vec::new();
+        while sampler.advance() {
+            starts.push(sampler.chunk_start());
+            collected.extend_from_slice(sampler.chunk());
+        }
+        assert_eq!(collected, t.samples);
+        assert_eq!(starts[0], 0);
+        assert_eq!(starts[1], 96);
+        assert_eq!(sampler.prefix().produced(), 1000);
+        let bufs = sampler.into_buffers();
+        // buffers survive for reuse
+        assert!(bufs.ring.capacity() >= 16 + 96);
+    }
+
+    #[test]
+    fn trace_view_matches_powertrace_queries() {
+        let t = ramp(500);
+        let v = t.view();
+        for at in [0.0, 0.123, 0.4999, 2.0, -1.0] {
+            assert_eq!(v.index_of(at), t.index_of(at));
+            assert_eq!(v.at(at).to_bits(), t.at(at).to_bits());
+        }
+        assert_eq!(
+            v.energy_between(0.1, 0.3).to_bits(),
+            t.energy_between(0.1, 0.3).to_bits()
+        );
+    }
+
+    #[test]
+    fn prefix_sums_into_reuses_buffer() {
+        let t = ramp(100);
+        let mut buf = Vec::new();
+        t.prefix_sums_into(&mut buf);
+        assert_eq!(buf, t.prefix_sums());
+        let cap = buf.capacity();
+        t.prefix_sums_into(&mut buf);
+        assert_eq!(buf.capacity(), cap);
     }
 }

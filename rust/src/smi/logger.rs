@@ -5,7 +5,9 @@
 //! histogram experiment (Fig. 6) sees realistic data.
 
 use super::NvidiaSmi;
+use crate::rng::Rng;
 use crate::sim::profile::PowerField;
+use crate::sim::sensor::{value_at_readings, Reading};
 use crate::sim::trace::SampleSeries;
 
 /// A captured polling session.
@@ -73,19 +75,41 @@ impl Poller {
 
     /// Poll `field` from `t0` to `t1`.
     pub fn run(&self, smi: &NvidiaSmi, field: PowerField, t0: f64, t1: f64) -> PollLog {
-        let mut rng = smi.query_rng();
         let mut points = Vec::new();
-        let mut t = t0;
-        while t < t1 {
-            if let Some(w) = smi.query(field, t) {
-                points.push((t, w));
-            }
-            let jitter = rng
-                .normal_ms(0.0, self.period_s * self.jitter_frac)
-                .clamp(-0.003, 0.003);
-            t += (self.period_s + jitter).max(self.period_s * 0.25);
-        }
+        poll_readings(
+            &smi.stream(field).readings,
+            smi.query_rng(),
+            self.period_s,
+            self.jitter_frac,
+            t0,
+            t1,
+            &mut points,
+        );
         PollLog { series: SampleSeries { points }, period_s: self.period_s }
+    }
+}
+
+/// The polling loop itself, over a raw readings slice: shared by
+/// [`Poller::run`] and the streaming measurement path (which polls
+/// scratch-buffer readings without constructing an `NvidiaSmi`). Appends
+/// `(query time, watts)` pairs to `out`; unsupported/early queries are
+/// skipped exactly like the CLI's `[N/A]` rows.
+pub fn poll_readings(
+    readings: &[Reading],
+    mut rng: Rng,
+    period_s: f64,
+    jitter_frac: f64,
+    t0: f64,
+    t1: f64,
+    out: &mut Vec<(f64, f64)>,
+) {
+    let mut t = t0;
+    while t < t1 {
+        if let Some(w) = value_at_readings(readings, t) {
+            out.push((t, w));
+        }
+        let jitter = rng.normal_ms(0.0, period_s * jitter_frac).clamp(-0.003, 0.003);
+        t += (period_s + jitter).max(period_s * 0.25);
     }
 }
 

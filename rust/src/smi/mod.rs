@@ -12,7 +12,7 @@ pub mod logger;
 
 pub use cli::{format_log, format_row, parse_query, QueryField};
 pub use energy_counter::{run_counter, CounterDesign, EnergyCounter};
-pub use logger::{PollLog, Poller};
+pub use logger::{poll_readings, PollLog, Poller};
 
 use crate::rng::Rng;
 use crate::sim::device::GpuDevice;
@@ -75,7 +75,10 @@ impl NvidiaSmi {
     }
 }
 
-fn field_tag(field: PowerField) -> u64 {
+/// Per-field RNG tag: each field's sensor stream derives an independent
+/// boot seed, so realising only one field (the streaming measurement path)
+/// yields bit-for-bit the same readings as realising all three.
+pub(crate) fn field_tag(field: PowerField) -> u64 {
     match field {
         PowerField::Draw => 0x11,
         PowerField::Average => 0x22,

@@ -10,10 +10,16 @@ use gpupower::estimator::linreg::fit;
 use gpupower::estimator::neldermead::{minimize_scalar, Options};
 use gpupower::estimator::stats::{mean, median, percentile, std_dev, violin};
 use gpupower::measure::energy::{integrate_clipped, mean_power};
+use gpupower::measure::{
+    measure_naive_streaming, naive::measure_naive, MeasureScratch, MeasurementRig,
+};
 use gpupower::rng::Rng;
-use gpupower::sim::sensor::run_pipeline;
+use gpupower::sim::sensor::{run_pipeline, run_pipeline_chunked};
 use gpupower::sim::trace::SampleSeries;
-use gpupower::sim::{find_model, ActivitySignal, GpuDevice, PipelineSpec, PowerTrace, CATALOGUE};
+use gpupower::sim::{
+    find_model, ActivitySignal, DriverEpoch, GpuDevice, PipelineSpec, PowerField, PowerTrace,
+    CATALOGUE,
+};
 
 /// Run `n` random cases, reporting the failing case index.
 fn for_cases(n: u64, base_seed: u64, f: impl Fn(u64, &mut Rng)) {
@@ -208,6 +214,80 @@ fn prop_device_synthesis_deterministic_and_bounded() {
         assert_eq!(a.samples, b.samples, "case {seed}: determinism");
         let limit = device.model.power_limit_w * 1.02 + 1e-6;
         assert!(a.samples.iter().all(|&s| (0.0..=limit as f32).contains(&s)), "case {seed}");
+    });
+}
+
+#[test]
+fn prop_sensor_readings_strictly_time_ordered_for_all_kinds() {
+    // the sortedness invariant SensorStream::value_at's binary search
+    // depends on — must hold for every pipeline kind, seed, and update
+    // period, including ones small enough that unclamped publication
+    // jitter used to swap adjacent readings
+    for_cases(40, 12, |seed, rng| {
+        let model = CATALOGUE[rng.below(CATALOGUE.len() as u64) as usize].clone();
+        let device = GpuDevice::new(find_model(model.name).unwrap(), 3, seed);
+        let update_ms = rng.uniform_range(2.0, 120.0);
+        let spec = match rng.below(3) {
+            0 => PipelineSpec::boxcar(update_ms, update_ms * rng.uniform_range(0.1, 1.2)),
+            1 => PipelineSpec::rc(update_ms, rng.uniform_range(20.0, 150.0)),
+            _ => PipelineSpec::estimation(update_ms),
+        };
+        let act = ActivitySignal::square_wave(0.2, 0.05, 0.5, 1.0, 40);
+        let truth = device.synthesize(&act, 0.0, 2.5);
+        let stream = run_pipeline(&device, spec, &truth, seed ^ 0x51);
+        assert!(!stream.readings.is_empty(), "case {seed}: no readings for {spec:?}");
+        for w in stream.readings.windows(2) {
+            assert!(
+                w[1].t > w[0].t,
+                "case {seed} ({spec:?}): readings swapped: {} !> {}",
+                w[1].t,
+                w[0].t
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_pipeline_chunk_size_invariant() {
+    // streaming consumers must be agnostic to chunk boundaries
+    for_cases(10, 13, |seed, rng| {
+        let device = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 1, seed);
+        let spec = match rng.below(3) {
+            0 => PipelineSpec::boxcar(100.0, rng.uniform_range(5.0, 1000.0)),
+            1 => PipelineSpec::rc(15.0, 80.0),
+            _ => PipelineSpec::estimation(100.0),
+        };
+        let act = ActivitySignal::square_wave(0.3, 0.075, 0.5, 1.0, 30);
+        let truth = device.synthesize(&act, 0.0, 3.0);
+        let chunk = 64 + rng.below(8000) as usize;
+        let a = run_pipeline_chunked(&device, spec, &truth, seed, 4096);
+        let b = run_pipeline_chunked(&device, spec, &truth, seed, chunk);
+        assert_eq!(a.readings, b.readings, "case {seed}: chunk {chunk} diverged ({spec:?})");
+    });
+}
+
+#[test]
+fn prop_streaming_naive_measurement_matches_materialized() {
+    // the streaming pipeline is only allowed to change cost, never values
+    let combos = [
+        ("A100 PCIe-40G", DriverEpoch::Post530, PowerField::Instant),
+        ("RTX 3090", DriverEpoch::Pre530, PowerField::Draw),
+        ("H100 PCIe", DriverEpoch::Post530, PowerField::Average),
+        ("Tesla K40", DriverEpoch::Pre530, PowerField::Draw),
+        ("GTX 1080 Ti", DriverEpoch::Pre530, PowerField::Draw),
+    ];
+    let scratch = std::cell::RefCell::new(MeasureScratch::new());
+    for_cases(10, 14, |seed, rng| {
+        let (model, driver, field) = combos[rng.below(combos.len() as u64) as usize];
+        let device = GpuDevice::new(find_model(model).unwrap(), 0, seed);
+        let rig = MeasurementRig::new(device, driver, field, seed ^ 0xACE);
+        let wl = &gpupower::bench::workloads::WORKLOADS
+            [rng.below(gpupower::bench::workloads::WORKLOADS.len() as u64) as usize];
+        let a = measure_naive(&rig, wl, 0.02, seed ^ 3);
+        let b = measure_naive_streaming(&rig, wl, 0.02, seed ^ 3, &mut scratch.borrow_mut());
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "case {seed} {model}");
+        assert_eq!(a.truth_j.to_bits(), b.truth_j.to_bits(), "case {seed} {model}");
+        assert_eq!(a.mean_power_w.to_bits(), b.mean_power_w.to_bits(), "case {seed} {model}");
     });
 }
 

@@ -1,0 +1,112 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate (this build
+//! environment is offline, so the real crates.io package is unavailable).
+//! It exposes exactly the subset the workspace uses: [`Error`], [`Result`],
+//! the [`anyhow!`] macro, and the [`Context`] extension trait.
+
+use std::fmt;
+
+/// A string-backed error value. Context added via [`Context`] is prepended
+/// to the message, mirroring how `anyhow` renders its context chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Attach context to failures, like `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        s.parse::<u32>().with_context(|| format!("parsing '{s}'"))
+    }
+
+    #[test]
+    fn context_is_prepended() {
+        let e = parse("zzz").unwrap_err();
+        let rendered = format!("{e}");
+        assert!(rendered.starts_with("parsing 'zzz': "), "{rendered}");
+        assert!(parse("41").is_ok());
+    }
+
+    #[test]
+    fn macro_and_from_conversions() {
+        let e: Error = anyhow!("failure {}", 7);
+        assert_eq!(format!("{e}"), "failure 7");
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "boom");
+        let e: Error = io.into();
+        assert!(format!("{e:?}").contains("boom"));
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        assert!(none.context("missing").is_err());
+        assert_eq!(Some(3u8).context("missing").unwrap(), 3);
+    }
+}

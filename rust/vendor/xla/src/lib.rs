@@ -1,0 +1,134 @@
+//! Stub of the `xla` (xla-rs) PJRT surface used by `gpupower::runtime`.
+//!
+//! This offline build has no XLA shared library, so [`PjRtClient::cpu`]
+//! fails with a descriptive error. Every caller in the workspace already
+//! treats a failed runtime load as "artifacts unavailable" and falls back
+//! to the pure-Rust paths, so the stub keeps the whole crate compiling and
+//! testable while preserving the real call-site API for a future build
+//! that links the actual backend.
+
+/// Error type; call sites render it with `{:?}`.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable() -> XlaError {
+    XlaError("XLA/PJRT backend not linked in this build (offline stub)".to_string())
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] always fails in the stub.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create the CPU client. Always unavailable in the stub build.
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable())
+    }
+
+    /// Platform name for diagnostics.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation into a loaded executable.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO text file. Unavailable in the stub build.
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed module proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals, returning per-device,
+    /// per-output buffers. Unreachable in the stub (no client can exist),
+    /// but kept API-compatible.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// A device-resident buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// A host literal value.
+#[derive(Debug)]
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Unpack a 1-element tuple.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    /// Unpack a 2-element tuple.
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(unavailable())
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+
+    /// Read the first element.
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err:?}").contains("stub"));
+    }
+}
