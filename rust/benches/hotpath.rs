@@ -218,5 +218,77 @@ fn main() {
         );
     }
 
+    // --- L5: telemetry service — ingest throughput + O(1) alloc/reading ---
+    // ISSUE 2 acceptance: ingesting more readings must not allocate
+    // proportionally — per-node costs (identification, account vectors)
+    // are fixed, batch buffers are pool-recycled, and the capture runs
+    // through reused scratch arenas. Two runs differing only in window
+    // length isolate the marginal allocations per additional reading.
+    {
+        let nodes: usize = std::env::var("TELEMETRY_NODES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(24);
+        let fleet = Fleet::build(FleetConfig {
+            size: nodes,
+            models: vec!["A100".into(), "3090".into()],
+            driver: DriverEpoch::Post530,
+            field: PowerField::Instant,
+            seed: 9,
+        });
+        let cfg_short = gpupower::telemetry::TelemetryConfig { duration_s: 30.0, ..Default::default() };
+        let cfg_long = gpupower::telemetry::TelemetryConfig { duration_s: 40.0, ..Default::default() };
+
+        let mut snap = None;
+        let a0 = allocs_now();
+        let mut r = bench(&format!("telemetry {nodes} nodes, 30 s window"), 0, 1, || {
+            snap = Some(gpupower::telemetry::run_service(&fleet, &cfg_short));
+        });
+        let short_allocs = allocs_now() - a0;
+        let short = snap.take().unwrap();
+        r.note = format!(
+            "{:.2} Mreadings/s, {:.2} allocs/reading",
+            short.stats.readings as f64 / (r.mean_ms / 1000.0) / 1e6,
+            short_allocs as f64 / short.stats.readings.max(1) as f64
+        );
+        rows.push(r);
+
+        let a1 = allocs_now();
+        let mut r = bench(&format!("telemetry {nodes} nodes, 40 s window"), 0, 1, || {
+            snap = Some(gpupower::telemetry::run_service(&fleet, &cfg_long));
+        });
+        let long_allocs = allocs_now() - a1;
+        let long = snap.take().unwrap();
+        r.note = format!(
+            "{:.2} Mreadings/s, {:.2} allocs/reading",
+            long.stats.readings as f64 / (r.mean_ms / 1000.0) / 1e6,
+            long_allocs as f64 / long.stats.readings.max(1) as f64
+        );
+        rows.push(r);
+
+        let extra_readings = long.stats.readings.saturating_sub(short.stats.readings);
+        let extra_allocs = long_allocs.saturating_sub(short_allocs);
+        let marginal = extra_allocs as f64 / extra_readings.max(1) as f64;
+        println!(
+            "\ntelemetry ({nodes} nodes): 30 s = {} readings / {} allocs | 40 s = {} readings / {} allocs",
+            short.stats.readings, short_allocs, long.stats.readings, long_allocs
+        );
+        println!(
+            "telemetry win: {marginal:.4} marginal allocations per additional ingested reading (O(1) amortised)"
+        );
+        // 10 s more window at 2 ms polling ≈ 5000 extra readings per node;
+        // scale the floor with the TELEMETRY_NODES knob instead of assuming
+        // the default fleet size
+        assert!(
+            extra_readings > 2_000 * nodes as u64,
+            "longer window must ingest substantially more readings (got {extra_readings} for {nodes} nodes)"
+        );
+        assert!(
+            marginal < 0.05,
+            "ingestion must be O(1) alloc per reading: {marginal:.4} marginal allocs/reading"
+        );
+        assert_eq!(short.stats.nodes, nodes, "every node accounted");
+    }
+
     report("hot-path benches", &rows);
 }

@@ -14,7 +14,7 @@
 //!    `window_loss_grid` HLO artifact evaluates that grid in one call).
 
 use super::neldermead::{minimize_scalar, Options};
-use crate::sim::trace::PowerTrace;
+use crate::sim::trace::{PowerTrace, TraceView};
 
 /// Emulate nvidia-smi readings: trailing `window_s` mean of `reference`
 /// at each timestamp. Uses precomputed prefix sums (hot path).
@@ -93,17 +93,65 @@ pub struct WindowEstimate {
 }
 
 /// Estimate the boxcar window from observed smi readings against a
-/// reference trace. `observed` is (timestamp, watts) pairs.
+/// reference trace. `observed` is (timestamp, watts) pairs. Thin wrapper
+/// over [`estimate_window_view`] (one implementation of the penalty /
+/// grid / simplex logic), keeping the historical panic on thin input.
 pub fn estimate_window(
     reference: &PowerTrace,
     observed: &[(f64, f64)],
     cfg: EstimatorConfig,
 ) -> WindowEstimate {
+    estimate_window_view(reference.view(), observed, cfg, &mut WindowScratch::new())
+        .expect("need at least 8 observations after discard")
+}
+
+/// Reusable buffers for [`estimate_window_view`], so an online caller
+/// (the telemetry registry identifying thousands of sensors) does O(1)
+/// allocation per node after warm-up instead of two allocations per loss
+/// evaluation.
+#[derive(Debug, Default)]
+pub struct WindowScratch {
+    prefix: Vec<f64>,
+    ts: Vec<f64>,
+    emu: Vec<f64>,
+    obs: Vec<f64>,
+}
+
+impl WindowScratch {
+    /// Fresh scratch (buffers grow on first use, then stay).
+    pub fn new() -> Self {
+        WindowScratch::default()
+    }
+}
+
+/// [`estimate_window`] over a borrowed [`TraceView`] reference with
+/// caller-owned scratch buffers. Returns `None` (instead of panicking)
+/// when fewer than 8 observations survive the discard — an online
+/// identification pass must degrade gracefully on thin streams.
+pub fn estimate_window_view(
+    reference: TraceView<'_>,
+    observed: &[(f64, f64)],
+    cfg: EstimatorConfig,
+    scratch: &mut WindowScratch,
+) -> Option<WindowEstimate> {
+    let WindowScratch { prefix, ts, emu, obs } = scratch;
     let t_min = reference.t0 + cfg.discard_s;
-    let (ts, vals): (Vec<f64>, Vec<f64>) =
-        observed.iter().copied().filter(|(t, _)| *t >= t_min).unzip();
-    assert!(ts.len() >= 8, "need at least 8 observations after discard");
-    let prefix = reference.prefix_sums();
+    ts.clear();
+    obs.clear();
+    for &(t, v) in observed {
+        if t >= t_min {
+            ts.push(t);
+            obs.push(v);
+        }
+    }
+    if ts.len() < 8 || reference.samples.is_empty() {
+        return None;
+    }
+    reference.prefix_sums_into(prefix);
+    // the observed series never changes across evaluations: z-score it once
+    // (a degenerate — zero-spread — series keeps the historical
+    // infinite-loss landscape rather than erroring out)
+    let obs_ok = normalise(obs);
 
     let mut evals = 0usize;
     let mut loss_of = |w: f64| -> f64 {
@@ -115,11 +163,17 @@ pub fn estimate_window(
         if w > 4.0 * cfg.update_period_s {
             return 10.0 + (w - 4.0 * cfg.update_period_s);
         }
-        window_loss(reference, &prefix, &ts, &vals, w)
+        emu.clear();
+        emu.extend(ts.iter().map(|&t| reference.window_mean_with(prefix, t, w)));
+        if !normalise(emu) || !obs_ok {
+            return f64::INFINITY;
+        }
+        emu.iter().zip(obs.iter()).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
+            / emu.len() as f64
     };
 
-    // optional coarse grid (mirrors the window_loss_grid artifact)
-    let mut x0 = cfg.update_period_s / 2.0; // paper's initial guess
+    // coarse grid scan (mirrors estimate_window), then simplex refinement
+    let mut x0 = cfg.update_period_s / 2.0;
     if cfg.grid > 0 {
         let mut best = (x0, f64::INFINITY);
         for i in 0..cfg.grid {
@@ -133,7 +187,7 @@ pub fn estimate_window(
     }
 
     let r = minimize_scalar(&mut loss_of, x0, 0.25, Options { max_evals: 120, ..Default::default() });
-    WindowEstimate { window_s: r.x[0], loss: r.fx, evals }
+    Some(WindowEstimate { window_s: r.x[0], loss: r.fx, evals })
 }
 
 #[cfg(test)]
@@ -193,6 +247,42 @@ mod tests {
             let l = window_loss(&truth, &prefix, &ts, &vals, w);
             assert!(l_true < l, "loss(25ms)={l_true} !< loss({}ms)={l}", w * 1000.0);
         }
+    }
+
+    #[test]
+    fn view_estimator_agrees_with_materialised_estimator() {
+        let device = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, 21);
+        let act = ActivitySignal::square_wave(0.3, 0.075, 0.5, 1.0, 110);
+        let truth = device.synthesize(&act, 0.0, 9.0);
+        let stream = run_pipeline(&device, PipelineSpec::boxcar(100.0, 25.0), &truth, 30);
+        let observed: Vec<(f64, f64)> = stream.readings.iter().map(|r| (r.t, r.watts)).collect();
+        let cfg = EstimatorConfig { update_period_s: 0.1, ..Default::default() };
+        let a = estimate_window(&truth, &observed, cfg);
+        let mut scratch = WindowScratch::new();
+        let b = estimate_window_view(truth.view(), &observed, cfg, &mut scratch).unwrap();
+        // identical grid + simplex arithmetic -> identical estimate
+        assert_eq!(a.window_s.to_bits(), b.window_s.to_bits());
+        assert_eq!(a.evals, b.evals);
+        // scratch reuse: second call must not grow the buffers
+        let cap = scratch.emu.capacity();
+        let b2 = estimate_window_view(truth.view(), &observed, cfg, &mut scratch).unwrap();
+        assert_eq!(b.window_s.to_bits(), b2.window_s.to_bits());
+        assert_eq!(scratch.emu.capacity(), cap);
+    }
+
+    #[test]
+    fn view_estimator_thin_stream_is_none() {
+        let device = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, 22);
+        let truth = device.synthesize(&ActivitySignal::idle(), 0.0, 2.0);
+        let observed = vec![(1.1, 100.0), (1.2, 101.0)];
+        let mut scratch = WindowScratch::new();
+        let r = estimate_window_view(
+            truth.view(),
+            &observed,
+            EstimatorConfig::default(),
+            &mut scratch,
+        );
+        assert!(r.is_none());
     }
 
     #[test]

@@ -7,7 +7,10 @@ pub mod neldermead;
 pub mod rc_correction;
 pub mod stats;
 
-pub use boxcar::{emulate_smi, estimate_window, window_loss, EstimatorConfig, WindowEstimate};
+pub use boxcar::{
+    emulate_smi, estimate_window, estimate_window_view, window_loss, EstimatorConfig,
+    WindowEstimate, WindowScratch,
+};
 pub use linreg::{fit, LinearFit};
 pub use neldermead::{minimize, minimize_scalar, MinimizeResult, Options};
 pub use rc_correction::{estimate_tau, invert_rc};

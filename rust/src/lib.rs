@@ -21,6 +21,11 @@
 //! * [`coordinator`] — a dependency-free fleet orchestrator (std scoped
 //!   threads, no async runtime) for datacenter-scale simulated measurement
 //!   campaigns, including the sharded streaming campaign mode;
+//! * [`telemetry`] — the online fleet-telemetry service: sharded
+//!   bounded-queue ingestion of nvidia-smi poll streams, live sensor
+//!   identification converging to the encoded ground truth, and
+//!   streaming corrected energy accounts with error bounds
+//!   (`repro telemetry`);
 //! * [`runtime`] — the PJRT artifact runtime (Python never runs at request
 //!   time).
 
@@ -35,5 +40,6 @@ pub mod rng;
 pub mod runtime;
 pub mod sim;
 pub mod smi;
+pub mod telemetry;
 
 pub use sim::{ActivitySignal, GpuDevice, PowerTrace};

@@ -13,6 +13,7 @@ use gpupower::measure::GoodPracticeConfig;
 use gpupower::report::Table;
 use gpupower::runtime::ArtifactRuntime;
 use gpupower::sim::profile::{DriverEpoch, PowerField};
+use gpupower::telemetry;
 
 const USAGE: &str = "repro — reproduction of 'Part-time Power Measurements' (SC'24)
 
@@ -42,17 +43,52 @@ COMMANDS:
   fleet [--gpus N] [--model NAME ...] [--shard N] [--campaign-seed N]
                             datacenter fleet campaign (streaming scheduler;
                             campaign-seed 0 = canonical boot phases)
+  telemetry [--gpus N] [--duration S] [--bucket S] [--model NAME ...]
+            [--shard N] [--batch N] [--queue N]
+                            online fleet-telemetry service: streaming
+                            ingestion, live sensor identification, corrected
+                            energy accounts with error bounds
   characterize MODEL [--driver D] [--field F]  sensor characterisation
+
+Flags accept both `--flag value` and `--flag=value`.
 ";
 
-/// Minimal flag parser: scans for `--flag value` pairs and positionals.
+/// Boolean switches (flags that take no value). Centralised so that
+/// `Args::positionals` can never silently swallow the positional after a
+/// newly added switch — add new boolean flags HERE, not in `positionals`.
+const BOOLEAN_FLAGS: &[&str] = &["--no-artifacts"];
+
+/// Minimal flag parser: scans for `--flag value` / `--flag=value` pairs
+/// and positionals.
 struct Args {
     items: Vec<String>,
 }
 
 impl Args {
     fn new() -> Self {
-        Args { items: std::env::args().skip(1).collect() }
+        Self::from_items(std::env::args().skip(1).collect())
+    }
+    /// `--flag=value` is normalised to `--flag value` at construction, so
+    /// every accessor supports both spellings. A boolean switch keeps only
+    /// its name (`--no-artifacts=true` sets the switch) — splitting it
+    /// would leak the value as a bogus positional.
+    fn from_items(raw: Vec<String>) -> Self {
+        let mut items = Vec::with_capacity(raw.len());
+        for a in raw {
+            match a.find('=') {
+                Some(eq) if a.starts_with("--") => {
+                    items.push(a[..eq].to_string());
+                    if !Self::is_boolean(&a[..eq]) {
+                        items.push(a[eq + 1..].to_string());
+                    }
+                }
+                _ => items.push(a),
+            }
+        }
+        Args { items }
+    }
+    fn is_boolean(name: &str) -> bool {
+        BOOLEAN_FLAGS.contains(&name)
     }
     fn flag_value(&self, name: &str) -> Option<&str> {
         self.items
@@ -81,6 +117,9 @@ impl Args {
     fn usize_flag(&self, name: &str, default: usize) -> usize {
         self.flag_value(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+    fn f64_flag(&self, name: &str, default: f64) -> f64 {
+        self.flag_value(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
     /// Positionals: items that are not flags or flag values.
     fn positionals(&self) -> Vec<&str> {
         let mut out = Vec::new();
@@ -91,9 +130,7 @@ impl Args {
                 continue;
             }
             if a.starts_with("--") {
-                // boolean flags take no value
-                let boolean = matches!(a.as_str(), "--no-artifacts");
-                if !boolean && i + 1 < self.items.len() {
+                if !Self::is_boolean(a) && i + 1 < self.items.len() {
                     skip = true;
                 }
                 continue;
@@ -343,6 +380,48 @@ fn main() -> Result<()> {
                 report.annual_cost_error_usd(10_000, 0.15)
             );
         }
+        "telemetry" => {
+            let gpus = args.usize_flag("--gpus", 64);
+            let fleet = Fleet::build(FleetConfig {
+                size: gpus,
+                models: args.flag_values("--model"),
+                driver: DriverEpoch::Post530,
+                field: PowerField::Instant,
+                seed,
+            });
+            let cfg = telemetry::TelemetryConfig {
+                duration_s: args.f64_flag("--duration", 40.0),
+                bucket_s: args.f64_flag("--bucket", 1.0),
+                batch_size: args.usize_flag("--batch", 512),
+                queue_depth: args.usize_flag("--queue", 64),
+                shard_size: args.usize_flag("--shard", 16),
+                seed,
+                ..Default::default()
+            };
+            let snap = telemetry::run_service(&fleet, &cfg);
+            // score identification against the same pipeline the fleet ran
+            let (field, driver) = (fleet.config.field, fleet.config.driver);
+            save_and_print(
+                &out,
+                "telemetry_energy",
+                &telemetry::query::fleet_energy_table(&snap, 0.0, snap.duration_s),
+            );
+            save_and_print(
+                &out,
+                "telemetry_generations",
+                &telemetry::query::generation_breakdown(&snap, field, driver),
+            );
+            save_and_print(&out, "telemetry_top", &telemetry::query::top_misestimated(&snap, 10));
+            println!(
+                "ingested {} readings in {} batches from {} nodes over {:.0} s",
+                snap.stats.readings, snap.stats.batches, snap.stats.nodes, snap.duration_s
+            );
+            println!("{}", telemetry::query::registry_summary(&snap.registry, field, driver));
+            println!(
+                "scaled to 10,000 GPUs at $0.15/kWh, trusting the naive account is worth ${:.0}/year",
+                telemetry::query::annual_cost_error_usd(&snap, 10_000, 0.15)
+            );
+        }
         "characterize" => {
             let model = pos
                 .get(1)
@@ -391,4 +470,54 @@ fn main() -> Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(items: &[&str]) -> Args {
+        Args::from_items(items.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn equals_syntax_matches_space_syntax() {
+        let a = args(&["fleet", "--gpus=128", "--model=A100"]);
+        let b = args(&["fleet", "--gpus", "128", "--model", "A100"]);
+        assert_eq!(a.usize_flag("--gpus", 0), 128);
+        assert_eq!(b.usize_flag("--gpus", 0), 128);
+        assert_eq!(a.flag_values("--model"), b.flag_values("--model"));
+        assert_eq!(a.positionals(), vec!["fleet"]);
+        assert_eq!(b.positionals(), vec!["fleet"]);
+    }
+
+    #[test]
+    fn boolean_flags_do_not_swallow_positionals() {
+        let a = args(&["--no-artifacts", "fig11"]);
+        assert_eq!(a.positionals(), vec!["fig11"]);
+        assert!(a.has("--no-artifacts"));
+        // `=value` on a boolean switch sets the switch without leaking a
+        // bogus positional
+        let c = args(&["--no-artifacts=true", "fig11"]);
+        assert!(c.has("--no-artifacts"));
+        assert_eq!(c.positionals(), vec!["fig11"]);
+        // regression: a value-taking flag before the command still skips
+        // its value only
+        let b = args(&["--seed", "7", "characterize", "A100"]);
+        assert_eq!(b.positionals(), vec!["characterize", "A100"]);
+    }
+
+    #[test]
+    fn f64_and_missing_flags_fall_back() {
+        let a = args(&["telemetry", "--duration=32.5"]);
+        assert!((a.f64_flag("--duration", 40.0) - 32.5).abs() < 1e-12);
+        assert!((a.f64_flag("--bucket", 1.0) - 1.0).abs() < 1e-12);
+        assert_eq!(a.flag_value("--nope"), None);
+    }
+
+    #[test]
+    fn equals_in_positional_is_preserved() {
+        let a = args(&["characterize", "A100=weird"]);
+        assert_eq!(a.positionals(), vec!["characterize", "A100=weird"]);
+    }
 }

@@ -54,11 +54,13 @@ impl Table {
         out
     }
 
-    /// Write as CSV.
+    /// Write as CSV (RFC 4180 quoting: commas, quotes, and line breaks
+    /// all force the cell into quotes — an unquoted newline would corrupt
+    /// the row structure).
     pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
         let mut s = String::new();
         let esc = |c: &str| {
-            if c.contains(',') || c.contains('"') {
+            if c.contains(',') || c.contains('"') || c.contains('\n') || c.contains('\r') {
                 format!("\"{}\"", c.replace('"', "\"\""))
             } else {
                 c.to_string()
@@ -112,5 +114,31 @@ mod tests {
         t.write_csv(&path).unwrap();
         let s = std::fs::read_to_string(&path).unwrap();
         assert!(s.contains("\"hello, world\""));
+    }
+
+    #[test]
+    fn csv_quotes_line_breaks() {
+        // regression: unquoted newlines/CRs corrupted the CSV row structure
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["multi\nline".into(), "carriage\rreturn".into()]);
+        t.row(&["plain".into(), "also plain".into()]);
+        let dir = std::env::temp_dir().join("gpupower_test_csv_nl");
+        let path = dir.join("t.csv");
+        t.write_csv(&path).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.contains("\"multi\nline\""));
+        assert!(s.contains("\"carriage\rreturn\""));
+        // a CSV reader honouring quotes sees exactly 3 records: count the
+        // line breaks that are outside quoted cells
+        let mut in_quotes = false;
+        let mut records = 0;
+        for ch in s.chars() {
+            match ch {
+                '"' => in_quotes = !in_quotes,
+                '\n' if !in_quotes => records += 1,
+                _ => {}
+            }
+        }
+        assert_eq!(records, 3, "header + 2 rows:\n{s}");
     }
 }

@@ -109,12 +109,7 @@ impl PowerTrace {
     /// [`Self::prefix_sums`] into a caller-owned buffer (cleared first), so
     /// per-node loops can reuse one allocation.
     pub fn prefix_sums_into(&self, out: &mut Vec<f64>) {
-        out.clear();
-        let mut acc = 0.0f64;
-        for &s in &self.samples {
-            acc += s as f64;
-            out.push(acc);
-        }
+        self.view().prefix_sums_into(out);
     }
 
     /// Mean power over the window `[t - window_s, t]`, clamped to trace
@@ -220,6 +215,20 @@ impl TraceView<'_> {
         let base = if lo < 0 { 0.0 } else { prefix[lo as usize] };
         let count = hi as i64 - lo;
         (prefix[hi] - base) / count as f64
+    }
+
+    /// Inclusive prefix sums into a caller-owned buffer (cleared first) —
+    /// the single implementation behind [`PowerTrace::prefix_sums_into`]
+    /// and the telemetry identification paths, so the accumulation
+    /// arithmetic (and therefore every bit-for-bit parity pin built on
+    /// it) can never drift between copies.
+    pub fn prefix_sums_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        let mut acc = 0.0f64;
+        for &s in self.samples {
+            acc += s as f64;
+            out.push(acc);
+        }
     }
 }
 

@@ -10,6 +10,13 @@ use crate::sim::profile::PowerField;
 use crate::sim::sensor::{value_at_readings, Reading};
 use crate::sim::trace::SampleSeries;
 
+/// Threshold below which two reported values count as "the same
+/// publication": nvidia-smi prints 0.01 W resolution, so any genuine
+/// republication differs by at least half a quantum. Shared with the
+/// telemetry registry's online update-period identification so the two
+/// change-detection scans can never diverge.
+pub const VALUE_CHANGE_EPS: f64 = 1e-9;
+
 /// A captured polling session.
 #[derive(Debug, Clone, Default)]
 pub struct PollLog {
@@ -30,7 +37,7 @@ impl PollLog {
         }
         let mut len = 1usize;
         for w in pts.windows(2) {
-            if (w[1].1 - w[0].1).abs() < 1e-9 {
+            if (w[1].1 - w[0].1).abs() < VALUE_CHANGE_EPS {
                 len += 1;
             } else {
                 runs.push(len);
@@ -51,7 +58,7 @@ impl PollLog {
             None => return out,
         };
         for w in pts.windows(2) {
-            if (w[1].1 - w[0].1).abs() >= 1e-9 {
+            if (w[1].1 - w[0].1).abs() >= VALUE_CHANGE_EPS {
                 out.push(w[1].0 - last_change_t);
                 last_change_t = w[1].0;
             }
@@ -163,5 +170,54 @@ mod tests {
         let log = PollLog::default();
         assert!(log.constant_run_lengths().is_empty());
         assert!(log.update_periods().is_empty());
+    }
+
+    fn log_of(points: &[(f64, f64)]) -> PollLog {
+        PollLog { series: SampleSeries { points: points.to_vec() }, period_s: 0.01 }
+    }
+
+    #[test]
+    fn single_point_is_one_run_no_periods() {
+        let log = log_of(&[(0.5, 100.0)]);
+        assert_eq!(log.constant_run_lengths(), vec![1]);
+        assert!(log.update_periods().is_empty());
+    }
+
+    #[test]
+    fn all_identical_readings_are_one_run() {
+        let log = log_of(&[(0.0, 250.0), (0.01, 250.0), (0.02, 250.0), (0.03, 250.0)]);
+        assert_eq!(log.constant_run_lengths(), vec![4]);
+        assert!(log.update_periods().is_empty(), "no value ever changes");
+    }
+
+    #[test]
+    fn epsilon_threshold_splits_runs_exactly() {
+        // |Δ| < 1e-9 counts as "same value"; |Δ| >= 1e-9 is a change
+        let below = log_of(&[(0.0, 100.0), (0.01, 100.0 + 0.9e-9)]);
+        assert_eq!(below.constant_run_lengths(), vec![2]);
+        assert!(below.update_periods().is_empty());
+
+        let at = log_of(&[(0.0, 100.0), (0.01, 100.0 + 1.5e-9), (0.03, 100.0 + 3e-9)]);
+        assert_eq!(at.constant_run_lengths(), vec![1, 1, 1]);
+        let p = at.update_periods();
+        assert_eq!(p.len(), 2);
+        assert!((p[0] - 0.01).abs() < 1e-12);
+        assert!((p[1] - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn runs_and_periods_agree_on_change_count() {
+        // n runs <=> n-1 changes <=> n-1 update periods
+        let log = log_of(&[
+            (0.00, 100.0),
+            (0.01, 100.0),
+            (0.02, 140.0),
+            (0.03, 140.0),
+            (0.04, 90.0),
+            (0.05, 90.0),
+        ]);
+        let runs = log.constant_run_lengths();
+        assert_eq!(runs, vec![2, 2, 2]);
+        assert_eq!(log.update_periods().len(), runs.len() - 1);
     }
 }

@@ -1,0 +1,238 @@
+//! Sharded, bounded-queue ingestion of per-node reading batches.
+//!
+//! Producer workers claim contiguous node shards off an atomic counter
+//! (like `coordinator::scheduler::run_campaign`), simulate each node's
+//! observation window through the chunked streaming capture (the 10 kHz
+//! ground truth is never materialised), poll it exactly like
+//! `smi::Poller`, run the identification probes, and push the poll stream
+//! to the accounting consumer as fixed-size [`IngestMsg::Batch`]es over a
+//! **bounded** queue (backpressure instead of unbounded buffering).
+//!
+//! Allocation discipline: each worker owns one [`NodeScratch`] arena
+//! (capture + poll + identification buffers, reused node to node), and
+//! batch buffers are recycled through a pool channel fed back by the
+//! consumer — so ingestion performs O(1) amortised allocation per reading
+//! (asserted by the `hotpath` benchmark's counting allocator).
+//!
+//! Everything a node produces is a pure function of
+//! `(device, driver, field, service seed, node id, schedule, config)`, so
+//! the stream is deterministic for a fixed seed regardless of worker
+//! count, shard size, or batch size — and bit-for-bit equal to the
+//! materialised batch reference (`MeasurementRig::capture` +
+//! `smi::Poller`), which the integration tests pin.
+
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::Mutex;
+
+use crate::bench::workloads::{Workload, WORKLOADS};
+use crate::measure::{capture_streaming, MeasureScratch, MeasurementRig};
+use crate::rng::{splitmix64, Rng};
+use crate::sim::activity::ActivitySignal;
+use crate::sim::profile::{DriverEpoch, Generation, PowerField};
+use crate::sim::GpuDevice;
+use crate::smi::poll_readings;
+
+use super::accounting::{pmd_bucket_energies, BucketSpec};
+use super::registry::{identify, IdentifyScratch, ProbeSchedule, SensorIdentity};
+use super::TelemetryConfig;
+
+/// Deterministic per-node rig seed (independent of worker/shard claim
+/// order; mirrors `coordinator::scheduler::shard_seed`'s construction).
+pub fn node_rig_seed(service_seed: u64, node_id: usize) -> u64 {
+    let mut s = service_seed ^ (node_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x7E1E;
+    splitmix64(&mut s)
+}
+
+/// Per-node sensor boot seed (fixes the unobservable update phase).
+pub fn node_boot_seed(rig_seed: u64) -> u64 {
+    rig_seed ^ 0xB007
+}
+
+/// The production workload a node runs after calibration (round-robin
+/// through the Table 2 suite, like the fleet scheduler).
+pub fn node_workload(node_id: usize) -> &'static Workload {
+    &WORKLOADS[node_id % WORKLOADS.len()]
+}
+
+/// Build a node's full observation activity into a caller-owned signal:
+/// the calibration probes, then production-workload iterations filling
+/// the remaining window.
+pub fn node_activity_into(
+    sched: &ProbeSchedule,
+    node_id: usize,
+    duration_s: f64,
+    out: &mut ActivitySignal,
+) {
+    out.segments.clear();
+    sched.append_activity(out);
+    let wl = node_workload(node_id);
+    let iter_s = wl.iteration_s();
+    let mut t = sched.calibration_end();
+    while t + iter_s <= duration_s - 0.05 {
+        for ph in wl.pattern {
+            if ph.util > 0.0 {
+                out.push(t, ph.duration_s, ph.util);
+            }
+            t += ph.duration_s;
+        }
+    }
+}
+
+/// Messages flowing from ingest workers to the accounting consumer.
+#[derive(Debug)]
+pub enum IngestMsg {
+    /// A node finished calibration: identity + ground-truth bucket
+    /// energies; its reading batches follow.
+    NodeStart(Box<NodeStart>),
+    /// One batch of polled `(t, W)` readings, in stream order per node.
+    Batch { node_id: usize, points: Vec<(f64, f64)> },
+    /// The node's stream is complete.
+    NodeEnd { node_id: usize },
+}
+
+/// Per-node stream header.
+#[derive(Debug)]
+pub struct NodeStart {
+    pub node_id: usize,
+    pub model: &'static str,
+    pub generation: Generation,
+    pub identity: SensorIdentity,
+    /// PMD ground-truth energy per accounting bucket, joules.
+    pub truth_j: Vec<f64>,
+}
+
+/// Ingest throughput counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IngestStats {
+    pub nodes: usize,
+    pub batches: u64,
+    pub readings: u64,
+}
+
+/// Per-worker scratch arena: capture/poll buffers plus identification
+/// buffers, reused across every node the worker processes.
+#[derive(Debug, Default)]
+pub struct NodeScratch {
+    pub(crate) measure: MeasureScratch,
+    pub(crate) id: IdentifyScratch,
+    pub(crate) truth: Vec<f64>,
+}
+
+impl NodeScratch {
+    pub fn new() -> Self {
+        NodeScratch::default()
+    }
+}
+
+/// Simulate, identify, and stream one node. Batch buffers come from the
+/// recycling `pool` when available; send errors (consumer gone) are
+/// ignored — the service is already unwinding.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn produce_node(
+    device: GpuDevice,
+    node_id: usize,
+    driver: DriverEpoch,
+    field: PowerField,
+    cfg: &TelemetryConfig,
+    sched: &ProbeSchedule,
+    spec: BucketSpec,
+    duration_s: f64,
+    scratch: &mut NodeScratch,
+    tx: &SyncSender<IngestMsg>,
+    pool: &Mutex<Receiver<Vec<(f64, f64)>>>,
+) {
+    let model = device.model.name;
+    let generation = device.model.generation;
+    let rig_seed = node_rig_seed(cfg.seed, node_id);
+    let boot_seed = node_boot_seed(rig_seed);
+    let rig = MeasurementRig::new(device, driver, field, rig_seed);
+
+    let mut activity = std::mem::take(&mut scratch.measure.activity);
+    node_activity_into(sched, node_id, duration_s, &mut activity);
+    let meta = capture_streaming(&rig, &activity, 0.0, duration_s, boot_seed, &mut scratch.measure);
+    scratch.measure.activity = activity;
+
+    scratch.measure.points.clear();
+    poll_readings(
+        &scratch.measure.readings,
+        Rng::new(boot_seed ^ 0x5149),
+        cfg.poll_period_s,
+        0.15,
+        0.0,
+        duration_s,
+        &mut scratch.measure.points,
+    );
+
+    let identity = identify(
+        &scratch.measure.points,
+        meta.pmd_view(&scratch.measure.pmd),
+        sched,
+        &mut scratch.id,
+    );
+    pmd_bucket_energies(meta.pmd_view(&scratch.measure.pmd), &spec, &mut scratch.truth);
+
+    let start = NodeStart { node_id, model, generation, identity, truth_j: scratch.truth.clone() };
+    if tx.send(IngestMsg::NodeStart(Box::new(start))).is_err() {
+        return;
+    }
+    for chunk in scratch.measure.points.chunks(cfg.batch_size.max(1)) {
+        let mut buf = match pool.lock() {
+            Ok(rx) => rx.try_recv().unwrap_or_default(),
+            Err(_) => Vec::new(),
+        };
+        buf.clear();
+        buf.extend_from_slice(chunk);
+        if tx.send(IngestMsg::Batch { node_id, points: buf }).is_err() {
+            return;
+        }
+    }
+    let _ = tx.send(IngestMsg::NodeEnd { node_id });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_seeds_are_distinct_and_deterministic() {
+        let a = node_rig_seed(7, 0);
+        let b = node_rig_seed(7, 1);
+        let c = node_rig_seed(8, 0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, node_rig_seed(7, 0));
+        assert_ne!(node_boot_seed(a), a);
+    }
+
+    #[test]
+    fn activity_covers_probes_then_workload() {
+        let sched = ProbeSchedule::default();
+        let mut act = ActivitySignal::idle();
+        node_activity_into(&sched, 3, 40.0, &mut act);
+        // ordered, ends before the observation window closes
+        for w in act.segments.windows(2) {
+            assert!(w[1].t0 >= w[0].t1 - 1e-12);
+        }
+        assert!(act.t_end() <= 40.0);
+        assert!(act.t_end() > sched.calibration_end(), "workload phase present");
+        // rebuilding into a used buffer yields identical segments
+        let mut again = ActivitySignal::burst(0.0, 99.0, 1.0);
+        node_activity_into(&sched, 3, 40.0, &mut again);
+        assert_eq!(act.segments, again.segments);
+    }
+
+    #[test]
+    fn short_window_has_probes_only() {
+        let sched = ProbeSchedule::default();
+        let mut act = ActivitySignal::idle();
+        node_activity_into(&sched, 0, sched.calibration_end() + 0.1, &mut act);
+        assert!(act.t_end() <= sched.calibration_end());
+    }
+
+    #[test]
+    fn workload_round_robin() {
+        assert_eq!(node_workload(0).name, WORKLOADS[0].name);
+        assert_eq!(node_workload(WORKLOADS.len()).name, WORKLOADS[0].name);
+        assert_ne!(node_workload(1).name, node_workload(2).name);
+    }
+}

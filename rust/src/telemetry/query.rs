@@ -1,0 +1,155 @@
+//! Query API over a [`TelemetrySnapshot`]: the questions a datacenter
+//! operator actually asks, rendered through [`crate::report::Table`].
+//!
+//! * fleet energy over a time range (naive vs corrected vs truth, with
+//!   the coverage-derived error bound);
+//! * per-generation error breakdown + identification accuracy;
+//! * top-k mis-estimated nodes (where the naive account lies most);
+//! * the annualised cost of trusting the naive account, scaled to a
+//!   target fleet size (the paper's "$1 million per year" figure).
+
+use crate::report::{f, Table};
+use crate::sim::profile::{DriverEpoch, PowerField};
+
+use super::accounting::NodeAccount;
+use super::registry::Registry;
+use super::TelemetrySnapshot;
+
+/// Fleet energy over `[t0, t1]` as a table (one row per account).
+pub fn fleet_energy_table(snap: &TelemetrySnapshot, t0: f64, t1: f64) -> Table {
+    let e = snap.fleet_energy(t0, t1);
+    let mut t = Table::new(
+        format!("fleet energy, t = {:.1}..{:.1} s ({} nodes)", e.t0, e.t1, snap.accounts.nodes.len()),
+        &["account", "energy kJ", "vs truth %"],
+    );
+    t.row(&["pmd truth".into(), f(e.truth_j / 1e3, 3), "-".into()]);
+    t.row(&["naive".into(), f(e.naive_j / 1e3, 3), format!("{:+.2}", e.naive_pct())]);
+    t.row(&["corrected".into(), f(e.corrected_j / 1e3, 3), format!("{:+.2}", e.corrected_pct())]);
+    t.row(&["error bound".into(), format!("±{}", f(e.bound_j / 1e3, 3)), "-".into()]);
+    t
+}
+
+/// Per-generation breakdown: accounting error and identification accuracy.
+pub fn generation_breakdown(snap: &TelemetrySnapshot, field: PowerField, driver: DriverEpoch) -> Table {
+    let acc = snap.registry.accuracy(field, driver);
+    let mut t = Table::new(
+        "per-generation accounting error and sensor identification",
+        &["generation", "nodes", "truth kJ", "naive %err", "corrected %err", "id acc %"],
+    );
+    for g in &acc {
+        let (mut truth, mut naive, mut corrected) = (0.0, 0.0, 0.0);
+        for n in snap.accounts.nodes.iter().filter(|n| n.generation == g.generation) {
+            truth += n.truth_total_j();
+            naive += n.naive_total_j();
+            corrected += n.corrected_total_j();
+        }
+        let pct = |x: f64| {
+            if truth > 0.0 {
+                format!("{:+.2}", 100.0 * (x - truth) / truth)
+            } else {
+                "-".into()
+            }
+        };
+        let id_acc = if g.measured > 0 {
+            format!("{:.0}", 100.0 * g.correct as f64 / g.measured as f64)
+        } else {
+            "n/a".into()
+        };
+        t.row(&[
+            g.generation.name().into(),
+            g.nodes.to_string(),
+            f(truth / 1e3, 2),
+            pct(naive),
+            pct(corrected),
+            id_acc,
+        ]);
+    }
+    t
+}
+
+/// The `k` nodes whose naive account deviates most from truth.
+pub fn top_misestimated(snap: &TelemetrySnapshot, k: usize) -> Table {
+    let mut ranked: Vec<&NodeAccount> = snap.accounts.nodes.iter().collect();
+    ranked.sort_by(|a, b| {
+        b.naive_pct()
+            .abs()
+            .partial_cmp(&a.naive_pct().abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.node_id.cmp(&b.node_id))
+    });
+    let mut t = Table::new(
+        format!("top {k} mis-estimated nodes (naive accounting)"),
+        &["node", "model", "sensor", "coverage %", "naive %err", "corrected %err"],
+    );
+    for n in ranked.into_iter().take(k) {
+        t.row(&[
+            n.node_id.to_string(),
+            n.model.into(),
+            format!("{:?}", n.identity.class),
+            f(n.identity.coverage_or_full() * 100.0, 0),
+            format!("{:+.2}", n.naive_pct()),
+            format!("{:+.2}", n.corrected_pct()),
+        ]);
+    }
+    t
+}
+
+/// Annualised naive-accounting cost error scaled to `n_gpus` (USD/year),
+/// with the per-GPU draw derived over the snapshot's actual observation
+/// window (not the rounded-up bucket span).
+pub fn annual_cost_error_usd(snap: &TelemetrySnapshot, n_gpus: usize, usd_per_kwh: f64) -> f64 {
+    snap.accounts.annual_cost_error_usd(n_gpus, usd_per_kwh, snap.duration_s)
+}
+
+/// Identification-accuracy summary of the registry (used by the CLI).
+pub fn registry_summary(reg: &Registry, field: PowerField, driver: DriverEpoch) -> String {
+    let acc = reg.accuracy(field, driver);
+    let measured: usize = acc.iter().map(|g| g.measured).sum();
+    let correct: usize = acc.iter().map(|g| g.correct).sum();
+    format!(
+        "sensor identification: {}/{} measurable nodes match encoded ground truth ({:.0}%)",
+        correct,
+        measured,
+        100.0 * reg.overall_accuracy(field, driver)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Fleet, FleetConfig};
+    use crate::telemetry::{run_service, TelemetryConfig};
+
+    fn snapshot() -> TelemetrySnapshot {
+        let fleet = Fleet::build(FleetConfig {
+            size: 3,
+            models: vec!["A100 PCIe-40G".into(), "3090".into()],
+            driver: DriverEpoch::Post530,
+            field: PowerField::Instant,
+            seed: 81,
+        });
+        run_service(&fleet, &TelemetryConfig { duration_s: 0.0, bucket_s: 2.0, ..Default::default() })
+    }
+
+    #[test]
+    fn tables_render_and_rank() {
+        let snap = snapshot();
+        let e = fleet_energy_table(&snap, 0.0, snap.duration_s);
+        assert_eq!(e.rows.len(), 4);
+        assert!(e.render().contains("pmd truth"));
+
+        let g = generation_breakdown(&snap, PowerField::Instant, DriverEpoch::Post530);
+        assert!(!g.rows.is_empty());
+
+        let top = top_misestimated(&snap, 2);
+        assert_eq!(top.rows.len(), 2);
+        // ranked by |naive error| descending
+        let err = |row: &Vec<String>| row[4].trim_start_matches('+').parse::<f64>().unwrap().abs();
+        assert!(err(&top.rows[0]) >= err(&top.rows[1]));
+
+        let usd = annual_cost_error_usd(&snap, 10_000, 0.15);
+        assert!(usd.is_finite() && usd >= 0.0);
+        assert!(registry_summary(&snap.registry, PowerField::Instant, DriverEpoch::Post530)
+            .contains("sensor identification"));
+    }
+}

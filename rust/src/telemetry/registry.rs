@@ -1,0 +1,634 @@
+//! Online sensor identification: infer each node's power-sensor behaviour
+//! from its reading stream alone, and keep a fleet-wide registry that can
+//! be scored against the encoded `sim::profile` ground truth.
+//!
+//! A real collector cannot ask a GPU what its averaging window is — it has
+//! to *discover* it (paper §4). The registry drives the paper's three
+//! micro-benchmarks as an online calibration protocol ([`ProbeSchedule`])
+//! that every node runs when it joins the fleet:
+//!
+//! 1. **transient probe** — a single long step; classifies the response
+//!    shape (instant / board-limited / RC-distorted) exactly like
+//!    `experiments::common::probe_transient`, but from the ingested poll
+//!    stream;
+//! 2. **update-period probe** — a fast square wave; the update period is
+//!    the median time between value changes (§4.1 / Fig. 6);
+//! 3. **window probes** — two aliased square waves (periods ≈ 3/4 of the
+//!    two update-period families in the catalogue); the averaging window
+//!    is recovered with the incremental boxcar estimator
+//!    ([`crate::estimator::boxcar::estimate_window_view`], §4.3).
+//!
+//! Identification is a pure function of the node's polled readings and its
+//! PMD reference stream, so it is deterministic and the batch-reference
+//! path in tests reproduces it exactly.
+
+use crate::estimator::boxcar::{estimate_window_view, EstimatorConfig, WindowScratch};
+use crate::estimator::stats::median;
+use crate::sim::activity::ActivitySignal;
+use crate::sim::profile::{sensor_pipeline, DriverEpoch, Generation, PipelineKind, PowerField};
+use crate::sim::trace::TraceView;
+// the change-detection epsilon is shared with `PollLog`'s run-length /
+// update-period scans so the online identification can never diverge from
+// the Fig. 6 ground-truth experiments
+use crate::smi::logger::VALUE_CHANGE_EPS as CHANGE_EPS;
+
+/// The calibration timeline every node runs before production accounting.
+/// All times are relative to the node's observation start (t = 0).
+#[derive(Debug, Clone, Copy)]
+pub struct ProbeSchedule {
+    /// Transient probe: step up at `step_t`, down at `step_end`.
+    pub step_t: f64,
+    pub step_end: f64,
+    /// Update-period probe: square wave of `update_period` seconds.
+    pub update_start: f64,
+    pub update_period: f64,
+    pub update_cycles: usize,
+    /// Fast window probe (for ~20 ms update sensors): aliased square wave.
+    pub w_fast_start: f64,
+    pub w_fast_period: f64,
+    pub w_fast_cycles: usize,
+    /// Slow window probe (for ~100 ms update sensors).
+    pub w_slow_start: f64,
+    pub w_slow_period: f64,
+    pub w_slow_cycles: usize,
+}
+
+impl Default for ProbeSchedule {
+    fn default() -> Self {
+        ProbeSchedule {
+            step_t: 1.0,
+            step_end: 7.0,
+            update_start: 8.3,
+            update_period: 0.02,
+            update_cycles: 220, // 4.4 s of 20 ms wave
+            w_fast_start: 13.3,
+            w_fast_period: 0.015,
+            w_fast_cycles: 340, // 5.1 s
+            w_slow_start: 19.0,
+            w_slow_period: 0.075,
+            w_slow_cycles: 76, // 5.7 s
+        }
+    }
+}
+
+impl ProbeSchedule {
+    /// End of the update-period probe.
+    pub fn update_end(&self) -> f64 {
+        self.update_start + self.update_period * self.update_cycles as f64
+    }
+
+    /// End of the fast window probe.
+    pub fn w_fast_end(&self) -> f64 {
+        self.w_fast_start + self.w_fast_period * self.w_fast_cycles as f64
+    }
+
+    /// End of the slow window probe.
+    pub fn w_slow_end(&self) -> f64 {
+        self.w_slow_start + self.w_slow_period * self.w_slow_cycles as f64
+    }
+
+    /// End of the whole calibration phase; production accounting starts
+    /// after this.
+    pub fn calibration_end(&self) -> f64 {
+        self.w_slow_end() + 0.3
+    }
+
+    /// Append the calibration activity (step + three square waves) to a
+    /// caller-owned signal.
+    pub fn append_activity(&self, act: &mut ActivitySignal) {
+        act.push(self.step_t, self.step_end - self.step_t, 1.0);
+        let mut wave = |t0: f64, period: f64, cycles: usize| {
+            for k in 0..cycles {
+                act.push(t0 + k as f64 * period, period * 0.5, 1.0);
+            }
+        };
+        wave(self.update_start, self.update_period, self.update_cycles);
+        wave(self.w_fast_start, self.w_fast_period, self.w_fast_cycles);
+        wave(self.w_slow_start, self.w_slow_period, self.w_slow_cycles);
+    }
+}
+
+/// Sensor behaviour classes the registry distinguishes (a collector-side
+/// view of [`PipelineKind`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SensorClass {
+    /// Trailing boxcar average (the common case).
+    Boxcar,
+    /// First-order RC distortion (Kepler/Maxwell "logarithmic growth").
+    RcFilter,
+    /// Readings exist but never change under a varying load (coarse
+    /// activity estimation, e.g. Fermi 2.0).
+    Quantised,
+    /// No power readings at all.
+    Unsupported,
+}
+
+/// What the registry learned about one node's sensor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SensorIdentity {
+    pub class: SensorClass,
+    /// Identified update period, seconds.
+    pub update_s: Option<f64>,
+    /// Identified averaging window, seconds (boxcar class only).
+    pub window_s: Option<f64>,
+    /// 10→90% rise of the reported power after a step, seconds.
+    pub smi_rise_s: Option<f64>,
+}
+
+impl SensorIdentity {
+    /// Identity for a node that never published a reading.
+    pub fn unsupported() -> Self {
+        SensorIdentity { class: SensorClass::Unsupported, update_s: None, window_s: None, smi_rise_s: None }
+    }
+
+    /// Boxcar latency shift the corrected account should apply (half the
+    /// identified window; 0 when the window is unknown or not a boxcar).
+    pub fn shift_s(&self) -> f64 {
+        match (self.class, self.window_s) {
+            (SensorClass::Boxcar, Some(w)) => w / 2.0,
+            _ => 0.0,
+        }
+    }
+
+    /// Fraction of wall time the sensor attends to (window / update,
+    /// capped at 1); 1.0 when unknown — an RC filter integrates
+    /// everything, and an unidentified sensor gets no bound.
+    pub fn coverage_or_full(&self) -> f64 {
+        match (self.class, self.update_s, self.window_s) {
+            (SensorClass::Boxcar, Some(u), Some(w)) if u > 0.0 => (w / u).min(1.0),
+            _ => 1.0,
+        }
+    }
+}
+
+/// Reusable identification buffers (per ingest worker, reused node to
+/// node so identification allocates O(1) after warm-up).
+#[derive(Debug, Default)]
+pub struct IdentifyScratch {
+    deltas: Vec<f64>,
+    pre: Vec<f64>,
+    post: Vec<f64>,
+    observed: Vec<(f64, f64)>,
+    pmd_prefix: Vec<f64>,
+    win: WindowScratch,
+}
+
+impl IdentifyScratch {
+    pub fn new() -> Self {
+        IdentifyScratch::default()
+    }
+}
+
+
+/// Identify one node's sensor from its polled readings and its PMD
+/// reference capture (simulation-side truth stand-in for the §4.3
+/// "commanded square wave" reference).
+pub fn identify(
+    points: &[(f64, f64)],
+    pmd: TraceView<'_>,
+    sched: &ProbeSchedule,
+    scratch: &mut IdentifyScratch,
+) -> SensorIdentity {
+    if points.len() < 20 {
+        return SensorIdentity::unsupported();
+    }
+
+    // --- §4.1: update period = median time between value changes over the
+    // fast square wave ---
+    scratch.deltas.clear();
+    let mut last_change_t = None;
+    let mut prev: Option<f64> = None;
+    let (u_lo, u_hi) = (sched.update_start + 0.4, sched.update_end());
+    for &(t, w) in points.iter().filter(|p| p.0 >= u_lo && p.0 <= u_hi) {
+        if let Some(pw) = prev {
+            if (w - pw).abs() >= CHANGE_EPS {
+                if let Some(lt) = last_change_t {
+                    scratch.deltas.push(t - lt);
+                }
+                last_change_t = Some(t);
+            }
+        } else {
+            last_change_t = Some(t);
+        }
+        prev = Some(w);
+    }
+    if scratch.deltas.len() < 5 {
+        // readings exist but the sensor never tracks a varying load
+        return SensorIdentity {
+            class: SensorClass::Quantised,
+            update_s: None,
+            window_s: None,
+            smi_rise_s: None,
+        };
+    }
+    let update_s = median(&scratch.deltas);
+
+    // --- §4.2: transient classification over the step probe ---
+    let transient = classify_transient(points, pmd, sched, scratch);
+    if let Some(tr) = transient {
+        if tr.is_rc {
+            return SensorIdentity {
+                class: SensorClass::RcFilter,
+                update_s: Some(update_s),
+                window_s: None,
+                smi_rise_s: Some(tr.smi_rise_s),
+            };
+        }
+        // window ≫ update (the 1 s "LinearLag" families): outside the
+        // aliasing probe's scan range, but a step through a w-wide boxcar
+        // rises 10→90% in exactly 0.8·w (same derivation as Fig. 14)
+        if tr.smi_rise_s > 0.6 {
+            return SensorIdentity {
+                class: SensorClass::Boxcar,
+                update_s: Some(update_s),
+                window_s: Some(tr.smi_rise_s / 0.8),
+                smi_rise_s: Some(tr.smi_rise_s),
+            };
+        }
+    }
+
+    // --- §4.3: averaging window from the aliased wave whose period sits
+    // at ~3/4 of the identified update period ---
+    let (seg_t0, seg_t1) = if update_s < 0.045 {
+        (sched.w_fast_start, sched.w_fast_end())
+    } else {
+        (sched.w_slow_start, sched.w_slow_end())
+    };
+    scratch.observed.clear();
+    let mut prev = f64::NAN;
+    for &(t, w) in points.iter().filter(|p| p.0 >= seg_t0 && p.0 <= seg_t1) {
+        // keep only the first poll of each published value: the estimator
+        // wants the update series, not its zero-order-hold resampling
+        if prev.is_nan() || (w - prev).abs() >= CHANGE_EPS {
+            scratch.observed.push((t, w));
+        }
+        prev = w;
+    }
+    let window_s = if scratch.observed.len() >= 16 && !pmd.samples.is_empty() {
+        let i0 = pmd.index_of(seg_t0);
+        let i1 = pmd.index_of(seg_t1);
+        let seg_view = TraceView {
+            hz: pmd.hz,
+            t0: pmd.t0 + i0 as f64 * pmd.dt(),
+            samples: &pmd.samples[i0..=i1],
+        };
+        estimate_window_view(
+            seg_view,
+            &scratch.observed,
+            EstimatorConfig { update_period_s: update_s, discard_s: 1.0, grid: 32 },
+            &mut scratch.win,
+        )
+        .map(|e| e.window_s)
+        .filter(|&w| w > 0.0 && w <= 4.0 * update_s)
+    } else {
+        None
+    };
+
+    SensorIdentity {
+        class: SensorClass::Boxcar,
+        update_s: Some(update_s),
+        window_s,
+        smi_rise_s: transient.map(|t| t.smi_rise_s),
+    }
+}
+
+/// Transient probe outcome (internal).
+#[derive(Debug, Clone, Copy)]
+struct Transient {
+    smi_rise_s: f64,
+    is_rc: bool,
+}
+
+/// Port of `experiments::common::probe_transient` onto an ingested poll
+/// stream + PMD reference. The RC signature is a reported rise far slower
+/// than the board's own (Kepler's τ ≈ 80 ms exponential stretches the
+/// 10→90% rise to ≈ 180 ms, while a window ≤ update boxcar publishes the
+/// full swing within about one update period); a 1 s-window boxcar
+/// (rise > 0.6 s) is *not* RC — that's Fig. 7 case 3 vs case 4.
+fn classify_transient(
+    points: &[(f64, f64)],
+    pmd: TraceView<'_>,
+    sched: &ProbeSchedule,
+    scratch: &mut IdentifyScratch,
+) -> Option<Transient> {
+    // PMD-side (actual) rise, smoothed by a 10 ms window. Only the step
+    // probe (the first ~step_end seconds) is ever queried, so the prefix
+    // is built over a truncated head view rather than the whole capture.
+    if pmd.samples.is_empty() {
+        return None;
+    }
+    let head_end = pmd.index_of(sched.step_end + 0.5);
+    let head = TraceView { hz: pmd.hz, t0: pmd.t0, samples: &pmd.samples[..=head_end] };
+    head.prefix_sums_into(&mut scratch.pmd_prefix);
+    let smooth = |t: f64| head.window_mean_with(&scratch.pmd_prefix, t, 0.01);
+    let p_lo = smooth(sched.step_t - 0.1);
+    let p_hi = smooth(sched.step_end - 0.5);
+    if p_hi - p_lo < 1.0 {
+        return None; // degenerate step
+    }
+
+    // 10→90% crossing times on the actual power axis
+    let rise = |f: &dyn Fn(f64) -> f64| -> Option<f64> {
+        let p10 = p_lo + 0.1 * (p_hi - p_lo);
+        let p90 = p_lo + 0.9 * (p_hi - p_lo);
+        let mut t10 = None;
+        let mut t = sched.step_t - 0.05;
+        while t < sched.step_end {
+            let p = f(t);
+            if t10.is_none() && p >= p10 {
+                t10 = Some(t);
+            }
+            if p >= p90 {
+                return t10.map(|a| t - a);
+            }
+            t += 0.005;
+        }
+        None
+    };
+    let actual_rise_s = rise(&smooth)?;
+
+    // smi-side rise from the polled readings (zero-order hold)
+    scratch.pre.clear();
+    scratch.post.clear();
+    for &(t, w) in points {
+        if t >= 0.3 && t < sched.step_t - 0.1 {
+            scratch.pre.push(w);
+        } else if t > sched.step_end - 2.0 && t < sched.step_end - 0.5 {
+            scratch.post.push(w);
+        }
+    }
+    if scratch.pre.is_empty() || scratch.post.is_empty() {
+        return None;
+    }
+    let s_lo = median(&scratch.pre);
+    let s_hi = median(&scratch.post);
+    if (s_hi - s_lo).abs() < 1e-9 {
+        return None;
+    }
+    let smi_at = |t: f64| -> f64 {
+        let idx = points.partition_point(|p| p.0 <= t);
+        if idx == 0 {
+            s_lo
+        } else {
+            points[idx - 1].1
+        }
+    };
+    // rescale the smi signal onto the actual power axis and reuse the riser
+    let scaled = |t: f64| p_lo + (smi_at(t) - s_lo) / (s_hi - s_lo) * (p_hi - p_lo);
+    let smi_rise_s = rise(&scaled)?;
+
+    let lagging = actual_rise_s < 0.5 * smi_rise_s && actual_rise_s < 0.09;
+    let is_rc = smi_rise_s > 0.13 && smi_rise_s <= 0.6 && lagging;
+    Some(Transient { smi_rise_s, is_rc })
+}
+
+/// One registered node.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeIdentity {
+    pub node_id: usize,
+    pub model: &'static str,
+    pub generation: Generation,
+    pub identity: SensorIdentity,
+}
+
+/// Fleet-wide identification registry, scorable against the encoded
+/// ground truth.
+#[derive(Debug, Default)]
+pub struct Registry {
+    /// Entries sorted by node id (sorted at finalisation).
+    pub entries: Vec<NodeIdentity>,
+}
+
+/// Per-generation identification accuracy vs `sim::profile` ground truth.
+#[derive(Debug, Clone, Copy)]
+pub struct GenAccuracy {
+    pub generation: Generation,
+    /// Nodes of this generation seen by the registry.
+    pub nodes: usize,
+    /// Nodes whose true pipeline is measurable (boxcar or RC).
+    pub measured: usize,
+    /// Measurable nodes whose class + update period (+ window, for
+    /// boxcars) all match the encoded truth.
+    pub correct: usize,
+}
+
+impl Registry {
+    pub fn insert(&mut self, entry: NodeIdentity) {
+        self.entries.push(entry);
+    }
+
+    /// Sort entries by node id (call once after ingestion completes).
+    pub fn finalize(&mut self) {
+        self.entries.sort_by_key(|e| e.node_id);
+    }
+
+    pub fn get(&self, node_id: usize) -> Option<&NodeIdentity> {
+        self.entries.iter().find(|e| e.node_id == node_id)
+    }
+
+    /// Whether `entry` matches the encoded ground truth for
+    /// `(generation, field, driver)`. `None` when the true pipeline is not
+    /// measurable (excluded from the accuracy metric).
+    pub fn entry_matches_truth(
+        entry: &NodeIdentity,
+        field: PowerField,
+        driver: DriverEpoch,
+    ) -> Option<bool> {
+        let spec = sensor_pipeline(entry.generation, field, driver);
+        let id = &entry.identity;
+        let true_update = spec.update_ms / 1000.0;
+        let update_ok = |est: Option<f64>| {
+            est.map(|e| (e - true_update).abs() <= (0.25 * true_update).max(0.006))
+                .unwrap_or(false)
+        };
+        match spec.kind {
+            PipelineKind::Unsupported | PipelineKind::Estimation => None,
+            // RC distortion: there is no boxcar window to recover, so the
+            // update period is the whole comparison (same leniency as
+            // `fig14_matrix::MatrixCell::matches_truth`) — a 100 ms-update
+            // RC sensor (Maxwell) publishes only 2–3 points per step, so
+            // its class can legitimately read as a coarse boxcar.
+            PipelineKind::RcFilter { .. } => Some(update_ok(id.update_s)),
+            PipelineKind::Boxcar { window_ms } => {
+                let true_w = window_ms / 1000.0;
+                let window_ok = id
+                    .window_s
+                    .map(|w| (w - true_w).abs() <= (0.35 * true_w).max(0.006))
+                    .unwrap_or(false);
+                Some(id.class == SensorClass::Boxcar && update_ok(id.update_s) && window_ok)
+            }
+        }
+    }
+
+    /// Per-generation accuracy breakdown vs ground truth.
+    pub fn accuracy(&self, field: PowerField, driver: DriverEpoch) -> Vec<GenAccuracy> {
+        let mut out: Vec<GenAccuracy> = Vec::new();
+        for e in &self.entries {
+            let slot = match out.iter_mut().find(|g| g.generation == e.generation) {
+                Some(s) => s,
+                None => {
+                    out.push(GenAccuracy {
+                        generation: e.generation,
+                        nodes: 0,
+                        measured: 0,
+                        correct: 0,
+                    });
+                    out.last_mut().unwrap()
+                }
+            };
+            slot.nodes += 1;
+            if let Some(ok) = Self::entry_matches_truth(e, field, driver) {
+                slot.measured += 1;
+                if ok {
+                    slot.correct += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Fraction of measurable nodes identified correctly (the acceptance
+    /// metric: ≥ 0.9 over the catalogue).
+    pub fn overall_accuracy(&self, field: PowerField, driver: DriverEpoch) -> f64 {
+        let acc = self.accuracy(field, driver);
+        let measured: usize = acc.iter().map(|g| g.measured).sum();
+        let correct: usize = acc.iter().map(|g| g.correct).sum();
+        if measured == 0 {
+            1.0
+        } else {
+            correct as f64 / measured as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::measure::{capture_streaming, MeasureScratch, MeasurementRig};
+    use crate::rng::Rng;
+    use crate::sim::profile::find_model;
+    use crate::sim::GpuDevice;
+    use crate::smi::poll_readings;
+
+    /// Produce a node's calibration poll stream exactly like the ingest
+    /// worker does, then identify it.
+    fn identify_model(
+        model: &str,
+        driver: DriverEpoch,
+        field: PowerField,
+        seed: u64,
+    ) -> SensorIdentity {
+        let sched = ProbeSchedule::default();
+        let duration = sched.calibration_end() + 0.5;
+        let device = GpuDevice::new(find_model(model).unwrap(), 0, seed);
+        let rig = MeasurementRig::new(device, driver, field, seed ^ 0x7E1E);
+        let mut act = ActivitySignal::idle();
+        sched.append_activity(&mut act);
+        let mut scratch = MeasureScratch::new();
+        let boot = seed ^ 0xB007;
+        let meta = capture_streaming(&rig, &act, 0.0, duration, boot, &mut scratch);
+        let mut points = Vec::new();
+        poll_readings(
+            &scratch.readings,
+            Rng::new(boot ^ 0x5149),
+            0.002,
+            0.15,
+            0.0,
+            duration,
+            &mut points,
+        );
+        let mut id_scratch = IdentifyScratch::new();
+        identify(&points, meta.pmd_view(&scratch.pmd), &sched, &mut id_scratch)
+    }
+
+    #[test]
+    fn identifies_a100_part_time_window() {
+        let id = identify_model("A100 PCIe-40G", DriverEpoch::Post530, PowerField::Instant, 11);
+        assert_eq!(id.class, SensorClass::Boxcar, "{id:?}");
+        let u = id.update_s.unwrap();
+        assert!((u - 0.1).abs() < 0.02, "update {u}");
+        let w = id.window_s.unwrap();
+        assert!((w - 0.025).abs() < 0.009, "window {w}");
+        assert!(id.coverage_or_full() < 0.45, "A100 attends part-time");
+    }
+
+    #[test]
+    fn identifies_volta_half_coverage() {
+        let id = identify_model("V100 PCIe-16G", DriverEpoch::Pre530, PowerField::Draw, 12);
+        assert_eq!(id.class, SensorClass::Boxcar, "{id:?}");
+        let u = id.update_s.unwrap();
+        assert!((u - 0.02).abs() < 0.006, "update {u}");
+        let w = id.window_s.unwrap();
+        assert!((w - 0.010).abs() < 0.005, "window {w}");
+    }
+
+    #[test]
+    fn identifies_kepler_rc_distortion() {
+        let id = identify_model("Tesla K40", DriverEpoch::Pre530, PowerField::Draw, 13);
+        assert_eq!(id.class, SensorClass::RcFilter, "{id:?}");
+        let u = id.update_s.unwrap();
+        assert!((u - 0.015).abs() < 0.006, "update {u}");
+        assert!(id.window_s.is_none());
+        assert_eq!(id.shift_s(), 0.0);
+    }
+
+    #[test]
+    fn fermi_estimation_is_quantised_or_unsupported() {
+        let id = identify_model("Tesla M2090", DriverEpoch::Pre530, PowerField::Draw, 14);
+        assert!(
+            matches!(id.class, SensorClass::Quantised | SensorClass::Unsupported),
+            "{id:?}"
+        );
+        let none = identify_model("Tesla C2050", DriverEpoch::Pre530, PowerField::Draw, 15);
+        assert_eq!(none.class, SensorClass::Unsupported);
+    }
+
+    #[test]
+    fn empty_stream_is_unsupported() {
+        let sched = ProbeSchedule::default();
+        let mut scratch = IdentifyScratch::new();
+        let pmd = TraceView { hz: 5000.0, t0: 0.0, samples: &[] };
+        let id = identify(&[], pmd, &sched, &mut scratch);
+        assert_eq!(id.class, SensorClass::Unsupported);
+        assert_eq!(id.coverage_or_full(), 1.0);
+    }
+
+    #[test]
+    fn registry_accuracy_counts_generations() {
+        let mut reg = Registry::default();
+        reg.insert(NodeIdentity {
+            node_id: 1,
+            model: "A100 PCIe-40G",
+            generation: Generation::AmpereGa100,
+            identity: SensorIdentity {
+                class: SensorClass::Boxcar,
+                update_s: Some(0.1),
+                window_s: Some(0.026),
+                smi_rise_s: Some(0.05),
+            },
+        });
+        reg.insert(NodeIdentity {
+            node_id: 0,
+            model: "Tesla C2050",
+            generation: Generation::Fermi1,
+            identity: SensorIdentity::unsupported(),
+        });
+        reg.finalize();
+        assert_eq!(reg.entries[0].node_id, 0);
+        let acc = reg.accuracy(PowerField::Instant, DriverEpoch::Post530);
+        assert_eq!(acc.len(), 2);
+        // Fermi1 is unmeasurable -> excluded; A100 correct
+        assert!((reg.overall_accuracy(PowerField::Instant, DriverEpoch::Post530) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn schedule_activity_is_ordered() {
+        let sched = ProbeSchedule::default();
+        let mut act = ActivitySignal::idle();
+        sched.append_activity(&mut act);
+        for w in act.segments.windows(2) {
+            assert!(w[1].t0 >= w[0].t1 - 1e-12);
+        }
+        assert!(act.t_end() < sched.calibration_end());
+    }
+}

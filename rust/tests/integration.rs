@@ -167,6 +167,128 @@ fn a100_part_time_headline() {
     );
 }
 
+/// ISSUE 2 acceptance: the online telemetry service's streaming fleet
+/// accounts are bit-for-bit equal to the batch reference computed from
+/// fully materialised captures (`MeasurementRig::capture` + `smi::Poller`
+/// + per-bucket `integrate_clipped_points`) on the same seeds.
+#[test]
+fn telemetry_accounts_match_materialised_batch_reference_bit_for_bit() {
+    use gpupower::telemetry::{self, accounting, ingest, registry, NodeAccountant, TelemetryConfig};
+
+    let fleet = Fleet::build(FleetConfig {
+        size: 3,
+        models: vec!["A100 PCIe-40G".into(), "3090".into()],
+        driver: DriverEpoch::Post530,
+        field: PowerField::Instant,
+        seed: 91,
+    });
+    let cfg = TelemetryConfig {
+        duration_s: 28.0,
+        bucket_s: 1.5,
+        workers: 3,
+        batch_size: 129,
+        queue_depth: 4,
+        ..Default::default()
+    };
+    let snap = telemetry::run_service(&fleet, &cfg);
+    let sched = snap.schedule;
+    let spec = snap.accounts.spec;
+    let duration = snap.duration_s;
+    assert_eq!(snap.accounts.nodes.len(), 3);
+
+    for node in &fleet.nodes {
+        // materialised reference: full PowerTrace + NvidiaSmi + Poller
+        let rig_seed = ingest::node_rig_seed(cfg.seed, node.id);
+        let boot = ingest::node_boot_seed(rig_seed);
+        let rig = MeasurementRig::new(
+            node.device.clone(),
+            DriverEpoch::Post530,
+            PowerField::Instant,
+            rig_seed,
+        );
+        let mut act = ActivitySignal::idle();
+        ingest::node_activity_into(&sched, node.id, duration, &mut act);
+        let cap = rig.capture(&act, 0.0, duration, boot);
+        let log = cap.smi.poll(PowerField::Instant, cfg.poll_period_s, 0.0, duration);
+
+        let mut id_scratch = registry::IdentifyScratch::new();
+        let identity =
+            registry::identify(&log.series.points, cap.pmd_trace.view(), &sched, &mut id_scratch);
+
+        let mut truth = Vec::new();
+        accounting::pmd_bucket_energies(cap.pmd_trace.view(), &spec, &mut truth);
+        let mut acct = NodeAccountant::for_identity(spec, &identity);
+        acct.push_points(&log.series.points);
+        let reference = acct.finish(
+            node.id,
+            node.device.model.name,
+            node.device.model.generation,
+            identity,
+            truth,
+        );
+
+        let live = snap.accounts.nodes.iter().find(|n| n.node_id == node.id).unwrap();
+        assert_eq!(live.identity, reference.identity, "node {}", node.id);
+        assert_eq!(live.readings, reference.readings, "node {}", node.id);
+        for b in 0..spec.n {
+            assert_eq!(live.naive_j[b].to_bits(), reference.naive_j[b].to_bits(), "node {} naive[{b}]", node.id);
+            assert_eq!(
+                live.corrected_j[b].to_bits(),
+                reference.corrected_j[b].to_bits(),
+                "node {} corrected[{b}]",
+                node.id
+            );
+            assert_eq!(live.bound_j[b].to_bits(), reference.bound_j[b].to_bits(), "node {} bound[{b}]", node.id);
+            assert_eq!(live.truth_j[b].to_bits(), reference.truth_j[b].to_bits(), "node {} truth[{b}]", node.id);
+        }
+    }
+}
+
+/// ISSUE 2 acceptance: the registry's live identification converges to the
+/// encoded `sim::profile` ground truth on ≥ 90% of catalogue nodes.
+#[test]
+fn telemetry_registry_identifies_catalogue_ground_truth() {
+    use gpupower::coordinator::fleet::Node;
+    use gpupower::sim::profile::CATALOGUE;
+    use gpupower::telemetry::{run_service, TelemetryConfig};
+
+    let (driver, field) = (DriverEpoch::Post530, PowerField::Instant);
+    // one node per catalogue model, so every generation is scored
+    let nodes: Vec<Node> = CATALOGUE
+        .iter()
+        .enumerate()
+        .map(|(i, m)| Node { id: i, device: GpuDevice::new(m, i as u32, 0xCAFE) })
+        .collect();
+    let fleet = Fleet {
+        nodes,
+        config: FleetConfig {
+            size: CATALOGUE.len(),
+            models: Vec::new(),
+            driver,
+            field,
+            seed: 0xCAFE,
+        },
+    };
+    let snap = run_service(
+        &fleet,
+        &TelemetryConfig { duration_s: 0.0, bucket_s: 2.0, ..Default::default() },
+    );
+    assert_eq!(snap.registry.entries.len(), CATALOGUE.len());
+
+    let acc = snap.registry.accuracy(field, driver);
+    let measured: usize = acc.iter().map(|g| g.measured).sum();
+    let correct: usize = acc.iter().map(|g| g.correct).sum();
+    assert!(measured >= 25, "most of the catalogue is measurable, got {measured}");
+    let frac = snap.registry.overall_accuracy(field, driver);
+    assert!(
+        frac >= 0.9,
+        "identification must match ground truth on >=90% of measurable nodes: \
+         {correct}/{measured} ({:.0}%)\n{:#?}",
+        100.0 * frac,
+        snap.registry.entries
+    );
+}
+
 /// Extension modules compose: a recorded production trace replayed on a
 /// multi-GPU host, polled serially, with the Kepler RC distortion
 /// corrected before integration.
