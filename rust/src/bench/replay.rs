@@ -15,9 +15,17 @@ use crate::sim::activity::{ActivitySignal, Segment};
 /// Parse a `t,util` CSV (header optional; comments with '#') into an
 /// activity signal. Each row starts a segment lasting until the next row;
 /// rows with util = 0 create gaps. Times must be non-decreasing.
+///
+/// Strictness (regression-pinned): every data row must have exactly two
+/// columns — a row with trailing extra columns is rejected with its line
+/// number rather than silently truncated — and CRLF (`\r\n`) line endings
+/// are accepted. The only row allowed to be non-numeric is a single
+/// two-column header as the first non-comment line.
 pub fn parse_trace_csv(text: &str) -> Result<ActivitySignal, String> {
     let mut rows: Vec<(f64, f64)> = Vec::new();
+    let mut seen_data_or_header = false;
     for (ln, line) in text.lines().enumerate() {
+        // `str::lines` keeps a trailing '\r' on CRLF input; trim removes it
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
@@ -25,8 +33,19 @@ pub fn parse_trace_csv(text: &str) -> Result<ActivitySignal, String> {
         let mut parts = line.split(',');
         let a = parts.next().map(str::trim).unwrap_or("");
         let b = parts.next().map(str::trim).unwrap_or("");
-        if rows.is_empty() && a.parse::<f64>().is_err() {
-            continue; // header row (first non-comment line)
+        let extra = parts.count();
+        if extra > 0 {
+            return Err(format!(
+                "line {}: expected 2 columns (t_seconds,util), got {}",
+                ln + 1,
+                2 + extra
+            ));
+        }
+        if !seen_data_or_header {
+            seen_data_or_header = true;
+            if a.parse::<f64>().is_err() && !b.is_empty() {
+                continue; // two-column header row (first non-comment line)
+            }
         }
         let t: f64 = a.parse().map_err(|_| format!("line {}: bad time '{a}'", ln + 1))?;
         let u: f64 = b.parse().map_err(|_| format!("line {}: bad util '{b}'", ln + 1))?;
@@ -206,6 +225,34 @@ mod tests {
         let csv = "# recorded from dcgm\nt,util\n0.0,1.0\n0.5,0.0\n";
         let act = parse_trace_csv(csv).unwrap();
         assert_eq!(act.segments.len(), 1);
+    }
+
+    #[test]
+    fn parse_rejects_extra_trailing_columns_with_line_number() {
+        // regression: rows with extra columns used to be silently truncated
+        let e = parse_trace_csv("0.0,0.5\n1.0,0.0,junk\n2.0,0.0").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+        assert!(e.contains("expected 2 columns"), "{e}");
+        // a malformed header is rejected too, not skipped
+        let e = parse_trace_csv("t,util,extra\n0.0,0.5\n1.0,0.0").unwrap_err();
+        assert!(e.contains("line 1"), "{e}");
+    }
+
+    #[test]
+    fn parse_handles_crlf_line_endings() {
+        let csv = "t_seconds,util\r\n0.0,0.8\r\n1.0,0.0\r\n2.0,0.5\r\n3.0,0.0\r\n";
+        let act = parse_trace_csv(csv).unwrap();
+        assert_eq!(act.segments.len(), 2);
+        assert_eq!(act.util_at(0.5), 0.8);
+    }
+
+    #[test]
+    fn parse_rejects_non_numeric_rows_after_the_header() {
+        // only the first non-comment line may be a header
+        let e = parse_trace_csv("0.0,0.5\nt,util\n1.0,0.0").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+        // one-column garbage is an error, not a silently skipped header
+        assert!(parse_trace_csv("garbage\n0.0,0.5\n1.0,0.0").is_err());
     }
 
     #[test]

@@ -21,11 +21,15 @@
 //! * [`coordinator`] — a dependency-free fleet orchestrator (std scoped
 //!   threads, no async runtime) for datacenter-scale simulated measurement
 //!   campaigns, including the sharded streaming campaign mode;
-//! * [`telemetry`] — the online fleet-telemetry service: sharded
-//!   bounded-queue ingestion of nvidia-smi poll streams, live sensor
-//!   identification converging to the encoded ground truth, and
-//!   streaming corrected energy accounts with error bounds
-//!   (`repro telemetry`);
+//! * [`telemetry`] — the online fleet-telemetry service: every reading
+//!   source unified behind the `ReadingSource` layer (simulated nodes,
+//!   recorded nvidia-smi CSV logs via the `smi::cli` parser, and a
+//!   streaming fault injector with dropout/outage/stuck/driver-restart
+//!   transforms), sharded bounded-queue ingestion, live sensor
+//!   identification converging to the encoded ground truth (re-run after
+//!   detected driver restarts), and rolling multi-window corrected energy
+//!   accounts with error bounds (`repro telemetry --source
+//!   sim|faulty|replay`);
 //! * [`runtime`] — the PJRT artifact runtime (Python never runs at request
 //!   time).
 

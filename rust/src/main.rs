@@ -43,11 +43,37 @@ COMMANDS:
   fleet [--gpus N] [--model NAME ...] [--shard N] [--campaign-seed N]
                             datacenter fleet campaign (streaming scheduler;
                             campaign-seed 0 = canonical boot phases)
-  telemetry [--gpus N] [--duration S] [--bucket S] [--model NAME ...]
-            [--shard N] [--batch N] [--queue N]
+  telemetry [--gpus N] [--duration S] [--windows N] [--bucket S]
+            [--model NAME ...] [--shard N] [--batch N] [--queue N]
+            [--source sim|faulty|replay] [--replay-log PATH ...]
+            [--dropout P] [--outage T:D ...] [--stuck T:D ...]
+            [--restart T ...]
                             online fleet-telemetry service: streaming
-                            ingestion, live sensor identification, corrected
-                            energy accounts with error bounds
+                            ingestion over the unified ReadingSource layer,
+                            live sensor identification (with re-calibration
+                            after driver restarts), rolling multi-window
+                            corrected energy accounts with error bounds.
+                            --source sim     simulated fleet nodes (default)
+                            --source faulty  simulated nodes behind the
+                                             streaming fault injector:
+                                             --dropout P (per-reading loss),
+                                             --outage T:D / --stuck T:D
+                                             (start:duration windows, s),
+                                             --restart T (driver restart at
+                                             T s; ~1 s blackout, sensor
+                                             epoch re-rolled, node
+                                             re-calibrates)
+                            --source replay  recorded nvidia-smi CSV logs,
+                                             one node per --replay-log PATH.
+                            Recorded-log schema (nvidia-smi
+                            --query-gpu=... --format=csv shape): a header
+                            row naming the fields (e.g. \"timestamp, name,
+                            power.draw [W]\"), then one row per poll; watts
+                            as \"123.45 W\" or \"[N/A]\". The timestamp
+                            column must be *relative seconds* since the
+                            recording started (ms resolution) — convert
+                            nvidia-smi's wall-clock timestamps before
+                            replaying. See examples/nvidia_smi_a100.csv.
   characterize MODEL [--driver D] [--field F]  sensor characterisation
 
 Flags accept both `--flag value` and `--flag=value`.
@@ -162,6 +188,25 @@ fn parse_field(s: &str) -> PowerField {
         "instant" | "power.draw.instant" => PowerField::Instant,
         _ => PowerField::Draw,
     }
+}
+
+/// Parse `--outage`/`--stuck` specs of the form `START:DURATION` (seconds).
+fn parse_fault_windows(specs: &[String]) -> Result<Vec<gpupower::sim::faults::FaultWindow>> {
+    specs
+        .iter()
+        .map(|s| {
+            let (a, b) = s
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("bad fault window '{s}' (want START:DURATION)"))?;
+            let t0: f64 =
+                a.trim().parse().map_err(|_| anyhow::anyhow!("bad fault window start '{s}'"))?;
+            let d: f64 = b
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad fault window duration '{s}'"))?;
+            Ok(gpupower::sim::faults::FaultWindow::new(t0, d))
+        })
+        .collect()
 }
 
 fn load_runtime(no_artifacts: bool) -> Option<ArtifactRuntime> {
@@ -381,16 +426,9 @@ fn main() -> Result<()> {
             );
         }
         "telemetry" => {
-            let gpus = args.usize_flag("--gpus", 64);
-            let fleet = Fleet::build(FleetConfig {
-                size: gpus,
-                models: args.flag_values("--model"),
-                driver: DriverEpoch::Post530,
-                field: PowerField::Instant,
-                seed,
-            });
             let cfg = telemetry::TelemetryConfig {
                 duration_s: args.f64_flag("--duration", 40.0),
+                windows: args.usize_flag("--windows", 1),
                 bucket_s: args.f64_flag("--bucket", 1.0),
                 batch_size: args.usize_flag("--batch", 512),
                 queue_depth: args.usize_flag("--queue", 64),
@@ -398,9 +436,60 @@ fn main() -> Result<()> {
                 seed,
                 ..Default::default()
             };
-            let snap = telemetry::run_service(&fleet, &cfg);
-            // score identification against the same pipeline the fleet ran
-            let (field, driver) = (fleet.config.field, fleet.config.driver);
+            // score identification against the pipeline the fleet ran; a
+            // replayed log set is scored as post-530 instant (the emitter's
+            // default), with unrecognised models excluded from the metric
+            let (snap, field, driver) = match args.flag_value("--source").unwrap_or("sim") {
+                "replay" => {
+                    let paths = args.flag_values("--replay-log");
+                    if paths.is_empty() {
+                        return Err(anyhow::anyhow!(
+                            "--source replay needs at least one --replay-log PATH"
+                        ));
+                    }
+                    let mut logs = Vec::with_capacity(paths.len());
+                    for p in &paths {
+                        logs.push(
+                            std::fs::read_to_string(p)
+                                .map_err(|e| anyhow::anyhow!("cannot read {p}: {e}"))?,
+                        );
+                    }
+                    let snap = telemetry::run_replay_service(&logs, &cfg)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                    (snap, PowerField::Instant, DriverEpoch::Post530)
+                }
+                source @ ("sim" | "faulty") => {
+                    let fleet = Fleet::build(FleetConfig {
+                        size: args.usize_flag("--gpus", 64),
+                        models: args.flag_values("--model"),
+                        driver: DriverEpoch::Post530,
+                        field: PowerField::Instant,
+                        seed,
+                    });
+                    let src = if source == "faulty" {
+                        gpupower::telemetry::ServiceSource::Faulty(gpupower::telemetry::FaultPlan {
+                            dropout: args.f64_flag("--dropout", 0.0),
+                            outages: parse_fault_windows(&args.flag_values("--outage"))?,
+                            stuck: parse_fault_windows(&args.flag_values("--stuck"))?,
+                            restarts: args
+                                .flag_values("--restart")
+                                .iter()
+                                .map(|v| {
+                                    v.parse::<f64>()
+                                        .map_err(|_| anyhow::anyhow!("bad --restart '{v}'"))
+                                })
+                                .collect::<Result<_>>()?,
+                        })
+                    } else {
+                        gpupower::telemetry::ServiceSource::Sim
+                    };
+                    let snap = telemetry::run_service_with(&fleet, &cfg, &src);
+                    (snap, fleet.config.field, fleet.config.driver)
+                }
+                other => {
+                    return Err(anyhow::anyhow!("unknown --source '{other}' (sim|faulty|replay)"))
+                }
+            };
             save_and_print(
                 &out,
                 "telemetry_energy",
@@ -412,6 +501,9 @@ fn main() -> Result<()> {
                 &telemetry::query::generation_breakdown(&snap, field, driver),
             );
             save_and_print(&out, "telemetry_top", &telemetry::query::top_misestimated(&snap, 10));
+            if snap.windows().len() > 1 {
+                save_and_print(&out, "telemetry_windows", &telemetry::query::window_table(&snap));
+            }
             println!(
                 "ingested {} readings in {} batches from {} nodes over {:.0} s",
                 snap.stats.readings, snap.stats.batches, snap.stats.nodes, snap.duration_s

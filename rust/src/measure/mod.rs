@@ -138,6 +138,25 @@ pub(crate) fn capture_streaming(
     boot_seed: u64,
     scratch: &mut MeasureScratch,
 ) -> CaptureMeta {
+    scratch.readings.clear();
+    scratch.pmd.clear();
+    capture_streaming_append(rig, activity, t0, t1, boot_seed, scratch)
+}
+
+/// [`capture_streaming`] without clearing the scratch readings/PMD buffers
+/// first: the telemetry `SimSource` captures a node's observation as a
+/// *sequence* of sensor epochs (a driver restart re-boots the sensor with a
+/// fresh phase mid-stream, §4.3) and concatenates the segments. Segment
+/// boundaries must land on the PMD sample grid for the concatenated PMD
+/// buffer to stay a uniform trace (the caller snaps them).
+pub(crate) fn capture_streaming_append(
+    rig: &MeasurementRig,
+    activity: &ActivitySignal,
+    t0: f64,
+    t1: f64,
+    boot_seed: u64,
+    scratch: &mut MeasureScratch,
+) -> CaptureMeta {
     let spec = sensor_pipeline(rig.device.model.generation, rig.field, rig.driver);
     let source = rig.device.synth_stream(activity, t0, t1);
     let hz = TRUE_HZ;
@@ -158,8 +177,6 @@ pub(crate) fn capture_streaming(
         STREAM_CHUNK,
     );
     let mut pmd = rig.pmd.stream(&rig.device, hz);
-    scratch.readings.clear();
-    scratch.pmd.clear();
     while sampler.advance() {
         sensor.push_chunk(sampler.chunk(), sampler.prefix(), &mut scratch.readings);
         pmd.push_chunk(sampler.chunk(), sampler.chunk_start(), &mut scratch.pmd);

@@ -50,6 +50,11 @@ impl AdcModel {
     }
 }
 
+/// The PMD raw-logger sample rate, Hz (the paper's custom 921 600-baud
+/// logger streams at 5 kHz). Shared with the telemetry restart snapping
+/// so per-epoch capture boundaries always land on this grid.
+pub const PMD_SAMPLE_HZ: f64 = 5_000.0;
+
 /// The PMD instrument.
 #[derive(Debug, Clone)]
 pub struct Pmd {
@@ -71,7 +76,7 @@ impl Pmd {
         let adc = AdcModel::default();
         Pmd {
             adc,
-            sample_hz: 5_000.0,
+            sample_hz: PMD_SAMPLE_HZ,
             rail_v: 12.0,
             v_bias: rng.uniform_range(-0.6, 0.6) * adc.v_err,
             i_bias: rng.uniform_range(-0.6, 0.6) * adc.i_err,

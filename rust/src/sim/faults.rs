@@ -3,51 +3,145 @@
 //!
 //! * **Sample dropout** — the polling process gets descheduled and misses
 //!   queries (common under load on a busy host);
+//! * **Outage** — the collector loses the stream for a contiguous window
+//!   (network partition, nvidia-smi wedged, host reboot);
+//! * **Stuck reading** — the value stops updating for a stretch (observed
+//!   in the wild on passively-cooled cards under thermal throttling);
 //! * **Driver restart** — the sensor's boot phase changes mid-campaign
 //!   (nvidia-smi's averaging start time is unobservable, §4.3, and a
-//!   restart re-randomises it);
-//! * **Stuck reading** — the value stops updating for a stretch (observed
-//!   in the wild on passively-cooled cards under thermal throttling).
+//!   restart re-randomises it). The restart transform itself lives in
+//!   [`crate::telemetry::source`] because it needs the capture pipeline's
+//!   cooperation (a re-booted sensor epoch); this module provides the
+//!   streaming primitives it composes with.
+//!
+//! Every fault exists in two forms that share one implementation:
+//! * a **streaming** state machine ([`Dropout`], [`StuckHold`],
+//!   [`FaultWindow`]) that decides per reading, in stream order, with O(1)
+//!   state — what `telemetry::source::FaultSource` drives chunk by chunk;
+//! * the historical **materialised** helpers ([`drop_samples`], [`outage`],
+//!   [`stick_readings`]) over a [`SampleSeries`], now thin wrappers over
+//!   the streaming forms (pinned equivalent by tests).
+//!
+//! Boundary semantics (regression-pinned):
+//! * all fault windows are half-open `[t0, t0 + duration_s)`; a
+//!   non-positive duration is an empty window (no-op);
+//! * a window starting before the first reading or extending past the last
+//!   simply clips to the data — no error, no phantom readings;
+//! * a stuck sensor holds the **last value published before the window**;
+//!   if the window starts before any reading exists, the first in-window
+//!   reading's value is held instead (there is nothing earlier to hold).
 
 use crate::rng::Rng;
 use crate::sim::trace::SampleSeries;
 
-/// Drop each sample independently with probability `p`.
+/// A half-open fault interval `[t0, t0 + duration_s)`. Non-positive
+/// durations are empty.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultWindow {
+    /// Window start, seconds.
+    pub t0: f64,
+    /// Window length, seconds (`<= 0` means the window never matches).
+    pub duration_s: f64,
+}
+
+impl FaultWindow {
+    pub fn new(t0: f64, duration_s: f64) -> Self {
+        FaultWindow { t0, duration_s }
+    }
+
+    /// End of the window (exclusive), seconds.
+    #[inline]
+    pub fn t1(&self) -> f64 {
+        self.t0 + self.duration_s
+    }
+
+    /// Whether `t` falls inside the (half-open) window.
+    #[inline]
+    pub fn contains(&self, t: f64) -> bool {
+        self.duration_s > 0.0 && t >= self.t0 && t < self.t1()
+    }
+}
+
+/// Streaming dropout: an independent keep/drop decision per reading.
+///
+/// Decisions are consumed in stream order, so for a fixed seed the decision
+/// sequence — and therefore the surviving readings — is a pure function of
+/// the input stream (identical to [`drop_samples`] on the same series).
+#[derive(Debug, Clone)]
+pub struct Dropout {
+    rng: Rng,
+    p: f64,
+}
+
+impl Dropout {
+    /// Dropout with probability `p` per reading. The RNG derivation matches
+    /// the historical `drop_samples` exactly.
+    pub fn new(p: f64, seed: u64) -> Self {
+        Dropout { rng: Rng::new(seed ^ 0xD80), p }
+    }
+
+    /// Decide the next reading in stream order; `true` = keep.
+    #[inline]
+    pub fn keep(&mut self) -> bool {
+        self.rng.uniform() >= self.p
+    }
+}
+
+/// Streaming stuck-sensor transform for one fault window: readings inside
+/// the window all report the last value seen *before* the window (or the
+/// first in-window value when nothing precedes it); readings outside pass
+/// through unchanged. Feed readings in time order.
+#[derive(Debug, Clone)]
+pub struct StuckHold {
+    window: FaultWindow,
+    /// Last value seen outside (before) the window.
+    prev: Option<f64>,
+    /// Value frozen for the duration of the window.
+    held: Option<f64>,
+}
+
+impl StuckHold {
+    pub fn new(window: FaultWindow) -> Self {
+        StuckHold { window, prev: None, held: None }
+    }
+
+    /// Transform one reading (stream order): the reported value.
+    pub fn apply(&mut self, t: f64, w: f64) -> f64 {
+        if self.window.contains(t) {
+            *self.held.get_or_insert(self.prev.unwrap_or(w))
+        } else {
+            self.prev = Some(w);
+            w
+        }
+    }
+}
+
+/// Drop each sample independently with probability `p` (materialised form
+/// of [`Dropout`]).
 pub fn drop_samples(series: &SampleSeries, p: f64, seed: u64) -> SampleSeries {
-    let mut rng = Rng::new(seed ^ 0xD80);
+    let mut dropout = Dropout::new(p, seed);
     SampleSeries {
-        points: series.points.iter().copied().filter(|_| rng.uniform() >= p).collect(),
+        points: series.points.iter().copied().filter(|_| dropout.keep()).collect(),
     }
 }
 
-/// Remove a contiguous outage of `duration_s` starting at `t_start`.
+/// Remove a contiguous outage of `duration_s` starting at `t_start`
+/// (half-open `[t_start, t_start + duration_s)`; non-positive durations
+/// remove nothing, windows outside the data clip harmlessly).
 pub fn outage(series: &SampleSeries, t_start: f64, duration_s: f64) -> SampleSeries {
+    let w = FaultWindow::new(t_start, duration_s);
     SampleSeries {
-        points: series
-            .points
-            .iter()
-            .copied()
-            .filter(|(t, _)| *t < t_start || *t >= t_start + duration_s)
-            .collect(),
+        points: series.points.iter().copied().filter(|&(t, _)| !w.contains(t)).collect(),
     }
 }
 
-/// Hold the last value for `duration_s` starting at `t_start` (stuck sensor).
+/// Hold a stuck value over `[t_start, t_start + duration_s)`: the last
+/// value published before the window (materialised form of [`StuckHold`];
+/// see the module docs for the boundary semantics).
 pub fn stick_readings(series: &SampleSeries, t_start: f64, duration_s: f64) -> SampleSeries {
-    let mut held: Option<f64> = None;
+    let mut hold = StuckHold::new(FaultWindow::new(t_start, duration_s));
     SampleSeries {
-        points: series
-            .points
-            .iter()
-            .map(|&(t, w)| {
-                if t >= t_start && t < t_start + duration_s {
-                    let v = *held.get_or_insert(w);
-                    (t, v)
-                } else {
-                    (t, w)
-                }
-            })
-            .collect(),
+        points: series.points.iter().map(|&(t, w)| (t, hold.apply(t, w))).collect(),
     }
 }
 
@@ -97,5 +191,118 @@ mod tests {
         assert!(drop_samples(&empty, 0.5, 1).points.is_empty());
         assert!(outage(&empty, 0.0, 1.0).points.is_empty());
         assert!(stick_readings(&empty, 0.0, 1.0).points.is_empty());
+    }
+
+    // --- boundary semantics (ISSUE 3 satellite regression tests) ---
+
+    #[test]
+    fn stuck_holds_last_value_before_the_window() {
+        // readings at 0.00..9.99 s carry 200 + (i % 10); the reading just
+        // before t = 5.00 is i = 499 -> 200 + 9 = 209, and that is what the
+        // stuck stretch must report (not the first in-window value 200).
+        let s = stick_readings(&series(), 5.0, 0.5);
+        let first_stuck = s.points.iter().find(|(t, _)| (5.0..5.5).contains(t)).unwrap().1;
+        assert_eq!(first_stuck, 209.0, "held value is the last pre-window value");
+        // after the window the sensor recovers
+        let after = s.points.iter().find(|(t, _)| *t >= 5.5).unwrap();
+        assert_eq!(after.1, 200.0 + ((after.0 / 0.01).round() as i64 % 10) as f64);
+    }
+
+    #[test]
+    fn stuck_window_before_first_sample_holds_first_in_window_value() {
+        // window starts at -1.0, before any reading exists: nothing earlier
+        // to hold, so the first in-window value is frozen
+        let s = stick_readings(&series(), -1.0, 1.5);
+        let in_window: Vec<f64> =
+            s.points.iter().filter(|(t, _)| *t < 0.5).map(|(_, w)| *w).collect();
+        assert_eq!(in_window.len(), 50);
+        assert!(in_window.iter().all(|&w| w == 200.0), "first value 200 held");
+        // first reading past the window is live again
+        let after = s.points.iter().find(|(t, _)| *t >= 0.5).unwrap();
+        assert_eq!(after.1, 200.0);
+    }
+
+    #[test]
+    fn stuck_window_past_the_last_sample_clips() {
+        // window [9.5, 99.5): affects only the tail readings that exist
+        let s = stick_readings(&series(), 9.5, 90.0);
+        let held = s.points.iter().find(|(t, _)| *t >= 9.5).unwrap().1;
+        // reading just before 9.5 is i = 949 -> 200 + 9
+        assert_eq!(held, 209.0);
+        let tail: Vec<f64> =
+            s.points.iter().filter(|(t, _)| *t >= 9.5).map(|(_, w)| *w).collect();
+        assert_eq!(tail.len(), 50);
+        assert!(tail.iter().all(|&w| w == 209.0));
+    }
+
+    #[test]
+    fn non_positive_windows_are_no_ops() {
+        let base = series();
+        for d in [0.0, -1.0] {
+            assert_eq!(outage(&base, 2.0, d).points, base.points, "outage d={d}");
+            assert_eq!(stick_readings(&base, 2.0, d).points, base.points, "stuck d={d}");
+        }
+    }
+
+    #[test]
+    fn outage_windows_clip_to_the_data() {
+        let base = series();
+        // entirely before / entirely after the data: no-ops
+        assert_eq!(outage(&base, -5.0, 2.0).points.len(), 1000);
+        assert_eq!(outage(&base, 50.0, 10.0).points.len(), 1000);
+        // spanning past the end: removes only the tail that exists
+        assert_eq!(outage(&base, 9.0, 100.0).points.len(), 900);
+        // spanning before the start: removes only the head
+        assert_eq!(outage(&base, -5.0, 6.0).points.len(), 900);
+        // covering everything: empty, not an error
+        assert!(outage(&base, -1.0, 100.0).points.is_empty());
+    }
+
+    #[test]
+    fn outage_boundaries_are_half_open() {
+        let s = outage(&series(), 2.0, 1.0);
+        // t = 3.00 is outside [2, 3) and must survive; t = 2.00 must not
+        assert!(s.points.iter().any(|(t, _)| (*t - 3.0).abs() < 1e-12));
+        assert!(!s.points.iter().any(|(t, _)| (*t - 2.0).abs() < 1e-12));
+    }
+
+    // --- streaming == materialised (the FaultSource contract) ---
+
+    #[test]
+    fn streaming_dropout_matches_materialised_bitwise() {
+        let base = series();
+        let want = drop_samples(&base, 0.25, 77);
+        let mut dropout = Dropout::new(0.25, 77);
+        let mut got = Vec::new();
+        // feed in odd-sized chunks: decisions depend only on stream order
+        for chunk in base.points.chunks(37) {
+            for &(t, w) in chunk {
+                if dropout.keep() {
+                    got.push((t, w));
+                }
+            }
+        }
+        assert_eq!(got, want.points);
+    }
+
+    #[test]
+    fn streaming_stuck_matches_materialised() {
+        let base = series();
+        let want = stick_readings(&base, 3.33, 2.0);
+        let mut hold = StuckHold::new(FaultWindow::new(3.33, 2.0));
+        let got: Vec<(f64, f64)> =
+            base.points.iter().map(|&(t, w)| (t, hold.apply(t, w))).collect();
+        assert_eq!(got, want.points);
+    }
+
+    #[test]
+    fn fault_window_contains_is_half_open() {
+        let w = FaultWindow::new(1.0, 0.5);
+        assert!(!w.contains(0.999_999));
+        assert!(w.contains(1.0));
+        assert!(w.contains(1.499_999));
+        assert!(!w.contains(1.5));
+        assert!(!FaultWindow::new(1.0, 0.0).contains(1.0));
+        assert!(!FaultWindow::new(1.0, -2.0).contains(0.5));
     }
 }

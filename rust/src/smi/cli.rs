@@ -1,9 +1,22 @@
-//! nvidia-smi-compatible text output: `--query-gpu=... --format=csv`.
+//! nvidia-smi-compatible text output: `--query-gpu=... --format=csv` —
+//! and the matching **parser** for recorded logs.
 //!
 //! The emulation is usable as a drop-in data source for tooling that
 //! parses nvidia-smi CSV logs (CarbonTracker-style collectors, §7): the
 //! same field names, the same `[N/A]` convention, the same two-decimal
-//! watt formatting.
+//! watt formatting. [`parse_log`] inverts [`format_log`] exactly
+//! (round-trip pinned by tests for every field combination), which is what
+//! lets `telemetry::source::ReplaySource` feed *recorded* nvidia-smi
+//! sessions through the same ingestion pipeline as live simulated nodes.
+//!
+//! Recorded-log schema: a header row naming the queried fields (as printed
+//! by `nvidia-smi --format=csv`, e.g. `timestamp, name, power.draw [W]`),
+//! then one row per poll. Power cells are either `<watts:.2> W` or
+//! `[N/A]`. The timestamp column is **relative seconds** since the
+//! recording started (millisecond resolution) — the one divergence from
+//! a raw nvidia-smi capture, whose wall-clock `YYYY/MM/DD HH:MM:SS.mmm`
+//! stamps must be converted before replay. CRLF line endings are
+//! accepted; malformed rows fail with their line number.
 
 use super::NvidiaSmi;
 use crate::sim::profile::PowerField;
@@ -91,6 +104,191 @@ pub fn format_log(smi: &NvidiaSmi, fields: &[QueryField], period_s: f64, t0: f64
     out
 }
 
+/// One parsed cell of a recorded log (parallel to the header's field).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LogValue {
+    /// `name` column.
+    Text(String),
+    /// A power column, watts; `None` is nvidia-smi's `[N/A]`.
+    Watts(Option<f64>),
+    /// `timestamp` column, seconds.
+    Seconds(f64),
+}
+
+/// A parsed recorded `--query-gpu --format=csv` session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SmiLog {
+    /// The queried fields, in header order.
+    pub fields: Vec<QueryField>,
+    /// One entry per data row; `rows[r][c]` parallels `fields[c]`.
+    pub rows: Vec<Vec<LogValue>>,
+}
+
+/// Parse a header row (`timestamp, name, power.draw [W]`). Accepts both
+/// the CSV-header spellings ([`QueryField::header`]) and the bare
+/// `--query-gpu` names.
+pub fn parse_header(line: &str) -> Result<Vec<QueryField>, String> {
+    line.split(',')
+        .map(|cell| {
+            let cell = cell.trim();
+            QueryField::parse(cell)
+                .or_else(|| {
+                    [
+                        QueryField::Name,
+                        QueryField::PowerDraw,
+                        QueryField::PowerDrawAverage,
+                        QueryField::PowerDrawInstant,
+                        QueryField::PowerLimit,
+                        QueryField::Timestamp,
+                    ]
+                    .into_iter()
+                    .find(|f| f.header() == cell)
+                })
+                .ok_or_else(|| format!("unknown header field '{cell}'"))
+        })
+        .collect()
+}
+
+/// Parse a recorded nvidia-smi CSV log. Inverts [`format_log`]: for any
+/// log that function emits, `parse_log(log)?.format() == log`. Errors are
+/// line-numbered; CRLF endings and blank lines are tolerated.
+pub fn parse_log(text: &str) -> Result<SmiLog, String> {
+    let mut fields: Option<Vec<QueryField>> = None;
+    let mut rows: Vec<Vec<LogValue>> = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim(); // also strips the '\r' of CRLF input
+        if line.is_empty() {
+            continue;
+        }
+        if fields.is_none() {
+            fields = Some(parse_header(line).map_err(|e| format!("line {}: {e}", ln + 1))?);
+            continue;
+        }
+        let fields = fields.as_ref().unwrap();
+        let cells: Vec<&str> = line.split(',').map(str::trim).collect();
+        if cells.len() != fields.len() {
+            return Err(format!(
+                "line {}: expected {} columns, got {}",
+                ln + 1,
+                fields.len(),
+                cells.len()
+            ));
+        }
+        let mut row = Vec::with_capacity(fields.len());
+        for (field, cell) in fields.iter().zip(&cells) {
+            row.push(match field {
+                QueryField::Name => LogValue::Text(cell.to_string()),
+                QueryField::Timestamp => LogValue::Seconds(
+                    cell.parse()
+                        .map_err(|_| format!("line {}: bad timestamp '{cell}'", ln + 1))?,
+                ),
+                _ => {
+                    if *cell == "[N/A]" {
+                        LogValue::Watts(None)
+                    } else {
+                        let w = cell
+                            .strip_suffix(" W")
+                            .ok_or_else(|| {
+                                format!("line {}: power cell '{cell}' is not '<watts> W'", ln + 1)
+                            })?
+                            .parse()
+                            .map_err(|_| format!("line {}: bad watts '{cell}'", ln + 1))?;
+                        LogValue::Watts(Some(w))
+                    }
+                }
+            });
+        }
+        rows.push(row);
+    }
+    match fields {
+        Some(fields) => Ok(SmiLog { fields, rows }),
+        None => Err("log is empty (no header row)".into()),
+    }
+}
+
+impl SmiLog {
+    /// Re-emit the log in [`format_log`]'s exact format (round-trip pin).
+    pub fn format(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.fields.iter().map(|f| f.header()).collect::<Vec<_>>().join(", "));
+        out.push('\n');
+        for row in &self.rows {
+            let rendered: Vec<String> = row
+                .iter()
+                .map(|v| match v {
+                    LogValue::Text(s) => s.clone(),
+                    LogValue::Watts(w) => watt(*w),
+                    LogValue::Seconds(t) => format!("{t:.3}"),
+                })
+                .collect();
+            out.push_str(&rendered.join(", "));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Column index of `field`, if queried.
+    pub fn column(&self, field: &QueryField) -> Option<usize> {
+        self.fields.iter().position(|f| f == field)
+    }
+
+    /// The first power field the log queried (replay's default column).
+    pub fn first_power_field(&self) -> Option<QueryField> {
+        self.fields
+            .iter()
+            .find(|f| {
+                matches!(
+                    f,
+                    QueryField::PowerDraw | QueryField::PowerDrawAverage | QueryField::PowerDrawInstant
+                )
+            })
+            .cloned()
+    }
+
+    /// The recorded device name (first row's `name` cell), if present.
+    pub fn model_name(&self) -> Option<&str> {
+        let c = self.column(&QueryField::Name)?;
+        match self.rows.first()?.get(c)? {
+            LogValue::Text(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Extract `(timestamp, watts)` readings for one power field into a
+    /// caller-owned buffer (cleared first). `[N/A]` rows are skipped, like
+    /// a live poller skips unsupported queries. Errors when the log lacks
+    /// a timestamp column or the requested field.
+    pub fn power_series_into(
+        &self,
+        field: &QueryField,
+        out: &mut Vec<(f64, f64)>,
+    ) -> Result<(), String> {
+        out.clear();
+        let tc = self
+            .column(&QueryField::Timestamp)
+            .ok_or("log has no timestamp column; replay needs one")?;
+        let wc = self
+            .column(field)
+            .ok_or_else(|| format!("log has no '{}' column", field.header()))?;
+        for row in &self.rows {
+            let (LogValue::Seconds(t), LogValue::Watts(w)) = (&row[tc], &row[wc]) else {
+                continue;
+            };
+            if let Some(w) = w {
+                out.push((*t, *w));
+            }
+        }
+        Ok(())
+    }
+
+    /// [`Self::power_series_into`] into a fresh vector.
+    pub fn power_series(&self, field: &QueryField) -> Result<Vec<(f64, f64)>, String> {
+        let mut out = Vec::new();
+        self.power_series_into(field, &mut out)?;
+        Ok(out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,5 +341,97 @@ mod tests {
         let lines: Vec<&str> = log.lines().collect();
         assert_eq!(lines[0], "timestamp, power.draw [W]");
         assert_eq!(lines.len(), 11);
+    }
+
+    /// Satellite 3: emit → parse → re-emit is the identity for **every**
+    /// non-empty combination of query fields, on both a driver epoch where
+    /// all fields report and one where instant/average print `[N/A]` —
+    /// covering the two-decimal watt formatting and the `[N/A]` convention.
+    #[test]
+    fn parse_log_roundtrips_every_field_combination() {
+        const ALL: [QueryField; 6] = [
+            QueryField::Timestamp,
+            QueryField::Name,
+            QueryField::PowerDraw,
+            QueryField::PowerDrawAverage,
+            QueryField::PowerDrawInstant,
+            QueryField::PowerLimit,
+        ];
+        for driver in [DriverEpoch::Post530, DriverEpoch::Pre530] {
+            let s = smi(driver);
+            for mask in 1u32..(1 << ALL.len()) {
+                let fields: Vec<QueryField> = ALL
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| mask & (1 << i) != 0)
+                    .map(|(_, f)| f.clone())
+                    .collect();
+                let text = format_log(&s, &fields, 0.13, 0.4, 1.6);
+                let parsed = parse_log(&text)
+                    .unwrap_or_else(|e| panic!("mask {mask:#b} {driver:?}: {e}\n{text}"));
+                assert_eq!(parsed.fields, fields, "mask {mask:#b}");
+                assert_eq!(parsed.format(), text, "mask {mask:#b} {driver:?} must round-trip");
+            }
+        }
+    }
+
+    #[test]
+    fn parsed_power_series_matches_the_emitted_readings() {
+        let s = smi(DriverEpoch::Post530);
+        let fields = parse_query("timestamp,name,power.draw").unwrap();
+        // end bound off the 0.05 grid so accumulated float error in the
+        // emitter's `t += period` loop cannot change the row count
+        let text = format_log(&s, &fields, 0.05, 0.3, 2.29);
+        let log = parse_log(&text).unwrap();
+        assert_eq!(log.model_name(), Some("RTX 3090"));
+        assert_eq!(log.first_power_field(), Some(QueryField::PowerDraw));
+        let series = log.power_series(&QueryField::PowerDraw).unwrap();
+        assert_eq!(series.len(), 40);
+        for (k, &(t, w)) in series.iter().enumerate() {
+            let t_want = 0.3 + 0.05 * k as f64;
+            assert!((t - t_want).abs() < 5e-4, "timestamp {t} vs {t_want}");
+            // identical readings: the parsed watts equal the emitted value
+            // (the smi query quantised to the printed 0.01 W resolution)
+            let emitted = (s.query(PowerField::Draw, t_want).unwrap() * 100.0).round() / 100.0;
+            assert!((w - emitted).abs() < 5e-3, "row {k}: {w} vs {emitted}");
+        }
+    }
+
+    #[test]
+    fn na_rows_are_skipped_by_power_series() {
+        // pre-530: power.draw.instant prints [N/A] on every row
+        let s = smi(DriverEpoch::Pre530);
+        let fields = parse_query("timestamp,power.draw.instant").unwrap();
+        let log = parse_log(&format_log(&s, &fields, 0.1, 0.5, 1.5)).unwrap();
+        assert_eq!(log.rows.len(), 10);
+        assert!(log.power_series(&QueryField::PowerDrawInstant).unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_log_errors_are_line_numbered() {
+        let e = parse_log("timestamp, power.draw [W]\n0.100, 150.00 W\n0.200, oops W\n")
+            .unwrap_err();
+        assert!(e.contains("line 3"), "{e}");
+        let e = parse_log("timestamp, power.draw [W]\n0.100, 150.00 W, extra\n").unwrap_err();
+        assert!(e.contains("line 2") && e.contains("columns"), "{e}");
+        let e = parse_log("timestamp, bogus [X]\n").unwrap_err();
+        assert!(e.contains("line 1") && e.contains("bogus"), "{e}");
+        // watts must carry the " W" suffix
+        let e = parse_log("power.draw [W]\n150.00\n").unwrap_err();
+        assert!(e.contains("not '<watts> W'"), "{e}");
+        assert!(parse_log("").is_err());
+        assert!(parse_log("   \n\n").is_err());
+    }
+
+    #[test]
+    fn parse_log_accepts_crlf_and_bare_header_names() {
+        let text = "timestamp, power.draw\r\n0.100, 151.25 W\r\n0.200, [N/A]\r\n";
+        let log = parse_log(text).unwrap();
+        assert_eq!(log.fields, vec![QueryField::Timestamp, QueryField::PowerDraw]);
+        assert_eq!(log.rows.len(), 2);
+        let series = log.power_series(&QueryField::PowerDraw).unwrap();
+        assert_eq!(series, vec![(0.1, 151.25)]);
+        // re-emission normalises to the canonical header spelling
+        assert!(log.format().starts_with("timestamp, power.draw [W]\n"));
     }
 }

@@ -10,7 +10,9 @@ pub mod cli;
 pub mod energy_counter;
 pub mod logger;
 
-pub use cli::{format_log, format_row, parse_query, QueryField};
+pub use cli::{
+    format_log, format_row, parse_header, parse_log, parse_query, LogValue, QueryField, SmiLog,
+};
 pub use energy_counter::{run_counter, CounterDesign, EnergyCounter};
 pub use logger::{poll_readings, PollLog, Poller};
 

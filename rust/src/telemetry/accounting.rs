@@ -22,7 +22,7 @@ use crate::measure::energy::integrate_clipped_points;
 use crate::sim::profile::Generation;
 use crate::sim::trace::TraceView;
 
-use super::registry::SensorIdentity;
+use super::registry::{EpochIdentity, SensorIdentity};
 
 /// Geometry of the accounting time buckets: `n` buckets of `bucket_s`
 /// seconds starting at `t0`.
@@ -103,48 +103,97 @@ pub fn pmd_bucket_energies(view: TraceView<'_>, spec: &BucketSpec, out: &mut Vec
     out[b] = acc * dt;
 }
 
-/// Incremental per-node account builder: feed it the node's polled
-/// `(t, W)` readings in stream order (across any batch boundaries) and it
-/// maintains the naive and corrected bucket energies plus the coverage
-/// bookkeeping for the error bound.
-#[derive(Debug)]
-pub struct NodeAccountant {
-    spec: BucketSpec,
+/// One sensor epoch's accounting parameters (internal form of
+/// [`EpochIdentity`]).
+#[derive(Debug, Clone, Copy)]
+struct EpochSpan {
+    /// First reading time of the epoch (`-inf` for a single-epoch stream).
+    t0: f64,
     /// Boxcar latency shift applied to the corrected account, seconds.
     shift_s: f64,
     /// Identified window coverage in [0, 1]; 1.0 when unknown.
     coverage: f64,
+}
+
+/// Incremental per-node account builder: feed it the node's polled
+/// `(t, W)` readings in stream order (across any batch boundaries) and it
+/// maintains the naive and corrected bucket energies plus the coverage
+/// bookkeeping for the error bound.
+///
+/// Epoch semantics (driver restarts): the shift/coverage in force switch
+/// at each epoch's start time. The segment that *bridges* an epoch
+/// boundary (last reading before the restart outage → first reading
+/// after) is integrated by the naive account — that is exactly the
+/// naive method's failure mode — but skipped by the corrected account and
+/// its coverage bookkeeping: the outage is unobserved time, not data.
+#[derive(Debug)]
+pub struct NodeAccountant {
+    spec: BucketSpec,
+    /// Epoch parameter timeline, in ascending `t0` order.
+    epochs: Vec<EpochSpan>,
+    /// Index into `epochs` for the most recent reading.
+    cur: usize,
     last: Option<(f64, f64)>,
+    /// Epoch index of `last`.
+    last_epoch: usize,
     naive_j: Vec<f64>,
     corrected_j: Vec<f64>,
-    /// Seconds of each bucket covered by reading segments.
-    covered_s: Vec<f64>,
+    /// Unobserved seconds per bucket, weighted by each segment's epoch
+    /// `1 - coverage` (the A100's 25% attention leaves 75% of every
+    /// covered second unobserved).
+    uncovered_s: Vec<f64>,
     min_w: Vec<f64>,
     max_w: Vec<f64>,
     readings: u64,
 }
 
 impl NodeAccountant {
-    /// Fresh accountant; `shift_s`/`coverage` come from the node's
-    /// identified [`SensorIdentity`].
+    /// Fresh single-epoch accountant; `shift_s`/`coverage` come from the
+    /// node's identified [`SensorIdentity`].
     pub fn new(spec: BucketSpec, shift_s: f64, coverage: f64) -> Self {
-        NodeAccountant {
+        Self::from_spans(
             spec,
-            shift_s,
-            coverage: coverage.clamp(0.0, 1.0),
-            last: None,
-            naive_j: vec![0.0; spec.n],
-            corrected_j: vec![0.0; spec.n],
-            covered_s: vec![0.0; spec.n],
-            min_w: vec![f64::INFINITY; spec.n],
-            max_w: vec![f64::NEG_INFINITY; spec.n],
-            readings: 0,
-        }
+            vec![EpochSpan { t0: f64::NEG_INFINITY, shift_s, coverage: coverage.clamp(0.0, 1.0) }],
+        )
     }
 
     /// Accountant configured from an identity (boxcar shift + coverage).
     pub fn for_identity(spec: BucketSpec, identity: &SensorIdentity) -> Self {
         Self::new(spec, identity.shift_s(), identity.coverage_or_full())
+    }
+
+    /// Accountant over a per-epoch identity timeline (driver restarts
+    /// re-identify the sensor mid-stream). An empty slice behaves like an
+    /// unidentified single epoch.
+    pub fn for_epochs(spec: BucketSpec, epochs: &[EpochIdentity]) -> Self {
+        if epochs.is_empty() {
+            return Self::new(spec, 0.0, 1.0);
+        }
+        let spans = epochs
+            .iter()
+            .map(|e| EpochSpan {
+                t0: e.t0,
+                shift_s: e.identity.shift_s(),
+                coverage: e.identity.coverage_or_full().clamp(0.0, 1.0),
+            })
+            .collect();
+        Self::from_spans(spec, spans)
+    }
+
+    fn from_spans(spec: BucketSpec, epochs: Vec<EpochSpan>) -> Self {
+        NodeAccountant {
+            spec,
+            epochs,
+            cur: 0,
+            last: None,
+            last_epoch: 0,
+            naive_j: vec![0.0; spec.n],
+            corrected_j: vec![0.0; spec.n],
+            uncovered_s: vec![0.0; spec.n],
+            min_w: vec![f64::INFINITY; spec.n],
+            max_w: vec![f64::NEG_INFINITY; spec.n],
+            readings: 0,
+        }
     }
 
     /// Integrate one `[a, b]` reading segment into a bucket account. The
@@ -165,8 +214,9 @@ impl NodeAccountant {
         }
     }
 
-    /// Seconds of bucket overlap for one raw segment (coverage bookkeeping).
-    fn add_covered(&mut self, a: f64, b: f64) {
+    /// Unobserved-time bookkeeping for one raw segment: each bucket's
+    /// overlap, weighted by the active epoch's `1 - coverage`.
+    fn add_unobserved(&mut self, a: f64, b: f64, frac: f64) {
         if b <= self.spec.t0 || a >= self.spec.t_end() || b <= a {
             return;
         }
@@ -176,7 +226,7 @@ impl NodeAccountant {
             let (lo, hi) = self.spec.bounds(bucket);
             let d = b.min(hi) - a.max(lo);
             if d > 0.0 {
-                self.covered_s[bucket] += d;
+                self.uncovered_s[bucket] += frac * d;
             }
         }
     }
@@ -188,17 +238,26 @@ impl NodeAccountant {
             self.min_w[b] = self.min_w[b].min(w);
             self.max_w[b] = self.max_w[b].max(w);
         }
+        while self.cur + 1 < self.epochs.len() && self.epochs[self.cur + 1].t0 <= t {
+            self.cur += 1;
+        }
         if let Some((lt, lw)) = self.last {
             Self::add_segment(&self.spec, &mut self.naive_j, (lt, lw), (t, w));
-            Self::add_segment(
-                &self.spec,
-                &mut self.corrected_j,
-                (lt - self.shift_s, lw),
-                (t - self.shift_s, w),
-            );
-            self.add_covered(lt, t);
+            if self.cur == self.last_epoch {
+                let ep = self.epochs[self.cur];
+                Self::add_segment(
+                    &self.spec,
+                    &mut self.corrected_j,
+                    (lt - ep.shift_s, lw),
+                    (t - ep.shift_s, w),
+                );
+                let frac = 1.0 - ep.coverage;
+                self.add_unobserved(lt, t, frac);
+            }
+            // else: the segment bridges a driver restart — see the type docs
         }
         self.last = Some((t, w));
+        self.last_epoch = self.cur;
     }
 
     /// Feed a batch of readings.
@@ -223,7 +282,7 @@ impl NodeAccountant {
             .map(|b| {
                 let swing = self.max_w[b] - self.min_w[b];
                 if swing.is_finite() && swing > 0.0 {
-                    (1.0 - self.coverage) * swing * self.covered_s[b]
+                    swing * self.uncovered_s[b]
                 } else {
                     0.0
                 }
@@ -293,6 +352,31 @@ fn pct(measured: f64, truth: f64) -> f64 {
         0.0
     } else {
         100.0 * (measured - truth) / truth
+    }
+}
+
+/// One observation window's fleet aggregate (a contiguous run of whole
+/// buckets) — see [`FleetAccounts::window_snapshots`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowSnapshot {
+    pub index: usize,
+    pub t0: f64,
+    pub t1: f64,
+    pub naive_j: f64,
+    pub corrected_j: f64,
+    pub bound_j: f64,
+    pub truth_j: f64,
+}
+
+impl WindowSnapshot {
+    /// Naive accounting error vs truth over this window, percent.
+    pub fn naive_pct(&self) -> f64 {
+        pct(self.naive_j, self.truth_j)
+    }
+
+    /// Corrected accounting error vs truth over this window, percent.
+    pub fn corrected_pct(&self) -> f64 {
+        pct(self.corrected_j, self.truth_j)
     }
 }
 
@@ -381,6 +465,38 @@ impl FleetAccounts {
         if !out.t0.is_finite() {
             out.t0 = t0;
             out.t1 = t0;
+        }
+        out
+    }
+
+    /// Partition the bucket range into consecutive observation windows of
+    /// `window_s` (rounded to whole buckets, minimum one) and aggregate
+    /// each — the service's rolling multi-window view for continuous
+    /// operation. The last window may be short when the bucket range is
+    /// not an exact multiple.
+    pub fn window_snapshots(&self, window_s: f64) -> Vec<WindowSnapshot> {
+        let per = ((window_s / self.spec.bucket_s).round() as usize).max(1);
+        let mut out = Vec::new();
+        let mut b = 0usize;
+        while b < self.spec.n {
+            let hi = (b + per).min(self.spec.n);
+            let mut w = WindowSnapshot {
+                index: out.len(),
+                t0: self.spec.bounds(b).0,
+                t1: self.spec.bounds(hi - 1).1,
+                naive_j: 0.0,
+                corrected_j: 0.0,
+                bound_j: 0.0,
+                truth_j: 0.0,
+            };
+            for k in b..hi {
+                w.naive_j += self.fleet_naive_j[k];
+                w.corrected_j += self.fleet_corrected_j[k];
+                w.bound_j += self.fleet_bound_j[k];
+                w.truth_j += self.fleet_truth_j[k];
+            }
+            out.push(w);
+            b = hi;
         }
         out
     }
@@ -590,6 +706,105 @@ mod tests {
         assert!((q.truth_j - 180.0).abs() < 1e-9);
         let none = acc.energy_between(10.0, 11.0);
         assert_eq!(none.truth_j, 0.0);
+    }
+
+    #[test]
+    fn epoch_boundary_breaks_corrected_but_not_naive() {
+        use crate::telemetry::registry::SensorClass;
+        let spec = spec3();
+        let boxcar = |w: f64| SensorIdentity {
+            class: SensorClass::Boxcar,
+            update_s: Some(0.1),
+            window_s: Some(w),
+            smi_rise_s: None,
+        };
+        // two epochs: a restart gap between t = 1.0 and t = 1.6
+        let epochs = vec![
+            EpochIdentity { t0: 0.0, identity: boxcar(0.025) },
+            EpochIdentity { t0: 1.6, identity: boxcar(0.05) },
+        ];
+        let pts = [(0.2, 100.0), (1.0, 120.0), (1.6, 90.0), (2.4, 110.0)];
+        let mut acct = NodeAccountant::for_epochs(spec, &epochs);
+        acct.push_points(&pts);
+        let account =
+            acct.finish(0, "m", Generation::Ampere, epochs[1].identity, vec![0.0; spec.n]);
+
+        // naive integrates everything, including the bridging segment
+        let naive_total: f64 = account.naive_j.iter().sum();
+        let want_naive = integrate_clipped_points(&pts, 0.0, 3.0);
+        assert!((naive_total - want_naive).abs() < 1e-9);
+
+        // corrected = epoch-0 segments at shift 12.5 ms + epoch-1 segments
+        // at shift 25 ms; the bridge (1.0 -> 1.6) contributes nothing
+        let e0: Vec<(f64, f64)> = pts[..2].iter().map(|&(t, w)| (t - 0.0125, w)).collect();
+        let e1: Vec<(f64, f64)> = pts[2..].iter().map(|&(t, w)| (t - 0.025, w)).collect();
+        let want_corr =
+            integrate_clipped_points(&e0, 0.0, 3.0) + integrate_clipped_points(&e1, 0.0, 3.0);
+        let corr_total: f64 = account.corrected_j.iter().sum();
+        assert!((corr_total - want_corr).abs() < 1e-9, "{corr_total} vs {want_corr}");
+
+        // the bridge also adds no unobserved time: bucket 1's unobserved
+        // overlap comes only from [1.6, 2.0) at epoch-1 coverage (w/u =
+        // 0.5 -> frac 0.5 -> 0.2 s), scaled by the bucket's value swing
+        // (points at 1.0 s and 1.6 s: 120 - 90 = 30 W)
+        assert!((account.bound_j[1] - 30.0 * 0.2).abs() < 1e-9, "{}", account.bound_j[1]);
+    }
+
+    #[test]
+    fn single_epoch_for_epochs_matches_new_bitwise() {
+        use crate::telemetry::registry::SensorClass;
+        let spec = spec3();
+        let identity = SensorIdentity {
+            class: SensorClass::Boxcar,
+            update_s: Some(0.1),
+            window_s: Some(0.025),
+            smi_rise_s: None,
+        };
+        let pts: Vec<(f64, f64)> =
+            (0..60).map(|i| (i as f64 * 0.05, 100.0 + (i % 9) as f64 * 11.0)).collect();
+        let a = {
+            let mut a = NodeAccountant::for_identity(spec, &identity);
+            a.push_points(&pts);
+            a.finish(0, "m", Generation::Ampere, identity, vec![0.0; spec.n])
+        };
+        let b = {
+            let epochs = vec![EpochIdentity { t0: 0.0, identity }];
+            let mut b = NodeAccountant::for_epochs(spec, &epochs);
+            b.push_points(&pts);
+            b.finish(0, "m", Generation::Ampere, identity, vec![0.0; spec.n])
+        };
+        for bkt in 0..spec.n {
+            assert_eq!(a.naive_j[bkt].to_bits(), b.naive_j[bkt].to_bits());
+            assert_eq!(a.corrected_j[bkt].to_bits(), b.corrected_j[bkt].to_bits());
+            assert_eq!(a.bound_j[bkt].to_bits(), b.bound_j[bkt].to_bits());
+        }
+    }
+
+    #[test]
+    fn window_snapshots_tile_the_buckets_and_sum_to_totals() {
+        let spec = BucketSpec::new(10.0, 1.0); // 10 buckets
+        let mut a = NodeAccountant::new(spec, 0.0, 0.5);
+        let pts: Vec<(f64, f64)> = (0..101).map(|i| (i as f64 * 0.1, 200.0)).collect();
+        a.push_points(&pts);
+        let acc = FleetAccounts::merge(
+            spec,
+            vec![a.finish(0, "m", Generation::Ampere, SensorIdentity::unsupported(), vec![19.0; 10])],
+        );
+        // 4 s windows over 10 buckets -> 4 + 4 + 2
+        let wins = acc.window_snapshots(4.0);
+        assert_eq!(wins.len(), 3);
+        assert_eq!((wins[0].t0, wins[0].t1), (0.0, 4.0));
+        assert_eq!((wins[2].t0, wins[2].t1), (8.0, 10.0));
+        assert_eq!(wins[2].index, 2);
+        let naive: f64 = wins.iter().map(|w| w.naive_j).sum();
+        let total: f64 = acc.fleet_naive_j.iter().sum();
+        assert!((naive - total).abs() < 1e-9);
+        let truth: f64 = wins.iter().map(|w| w.truth_j).sum();
+        assert!((truth - 190.0).abs() < 1e-9);
+        // a window narrower than a bucket clamps to one bucket per window
+        assert_eq!(acc.window_snapshots(0.1).len(), 10);
+        // window errors derive per window
+        assert!(wins[0].naive_pct().is_finite());
     }
 
     #[test]

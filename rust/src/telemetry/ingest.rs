@@ -1,40 +1,52 @@
 //! Sharded, bounded-queue ingestion of per-node reading batches.
 //!
 //! Producer workers claim contiguous node shards off an atomic counter
-//! (like `coordinator::scheduler::run_campaign`), simulate each node's
-//! observation window through the chunked streaming capture (the 10 kHz
-//! ground truth is never materialised), poll it exactly like
-//! `smi::Poller`, run the identification probes, and push the poll stream
-//! to the accounting consumer as fixed-size [`IngestMsg::Batch`]es over a
-//! **bounded** queue (backpressure instead of unbounded buffering).
+//! (like `coordinator::scheduler::run_campaign`), drive each node's
+//! [`super::source::ReadingSource`] — simulated capture, recorded-log
+//! replay, or a fault-injected wrapper — through `produce_source`, and
+//! push the resulting stream to the accounting consumer as fixed-size
+//! [`IngestMsg::Batch`]es over a **bounded** queue (backpressure instead
+//! of unbounded buffering).
+//!
+//! Per node, `produce_source`:
+//! 1. drains the source chunk by chunk into the worker's reused buffer;
+//! 2. splits the stream into sensor epochs with the registry's
+//!    driver-restart detector ([`super::registry::detect_epochs`]);
+//! 3. identifies each epoch from its own calibration origin (inheriting
+//!    the previous epoch's identity when a post-restart epoch carries no
+//!    usable probes);
+//! 4. computes the PMD ground-truth bucket energies when the source has a
+//!    reference (zeros otherwise — recorded logs have no PMD);
+//! 5. emits `NodeStart { epochs, truth } → Batch* → NodeEnd`.
 //!
 //! Allocation discipline: each worker owns one [`NodeScratch`] arena
-//! (capture + poll + identification buffers, reused node to node), and
-//! batch buffers are recycled through a pool channel fed back by the
-//! consumer — so ingestion performs O(1) amortised allocation per reading
-//! (asserted by the `hotpath` benchmark's counting allocator).
+//! (stream + identification + truth buffers, reused node to node) and the
+//! sources reuse their capture arenas the same way; batch buffers are
+//! recycled through a pool channel fed back by the consumer — so ingestion
+//! performs O(1) amortised allocation per reading (asserted by the
+//! `hotpath` benchmark's counting allocator).
 //!
-//! Everything a node produces is a pure function of
-//! `(device, driver, field, service seed, node id, schedule, config)`, so
-//! the stream is deterministic for a fixed seed regardless of worker
-//! count, shard size, or batch size — and bit-for-bit equal to the
-//! materialised batch reference (`MeasurementRig::capture` +
-//! `smi::Poller`), which the integration tests pin.
+//! Everything a node produces is a pure function of its source's inputs
+//! `(device, driver, field, service seed, node id, schedule, fault plan)`
+//! — or of the recorded log text — so the stream is deterministic for a
+//! fixed seed regardless of worker count, shard size, or batch size, and
+//! bit-for-bit equal to the materialised batch reference
+//! (`MeasurementRig::capture` + `smi::Poller`), which the integration
+//! tests pin.
 
 use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Mutex;
 
 use crate::bench::workloads::{Workload, WORKLOADS};
-use crate::measure::{capture_streaming, MeasureScratch, MeasurementRig};
-use crate::rng::{splitmix64, Rng};
+use crate::rng::splitmix64;
 use crate::sim::activity::ActivitySignal;
-use crate::sim::profile::{DriverEpoch, Generation, PowerField};
-use crate::sim::GpuDevice;
-use crate::smi::poll_readings;
+use crate::sim::profile::Generation;
 
 use super::accounting::{pmd_bucket_energies, BucketSpec};
-use super::registry::{identify, IdentifyScratch, ProbeSchedule, SensorIdentity};
-use super::TelemetryConfig;
+use super::registry::{
+    detect_epochs, identify_epoch, EpochIdentity, IdentifyScratch, ProbeSchedule, SensorClass,
+};
+use super::source::{ReadingSource, RESTART_OUTAGE_S};
 
 /// Deterministic per-node rig seed (independent of worker/shard claim
 /// order; mirrors `coordinator::scheduler::shard_seed`'s construction).
@@ -46,6 +58,22 @@ pub fn node_rig_seed(service_seed: u64, node_id: usize) -> u64 {
 /// Per-node sensor boot seed (fixes the unobservable update phase).
 pub fn node_boot_seed(rig_seed: u64) -> u64 {
     rig_seed ^ 0xB007
+}
+
+/// Boot seed for sensor epoch `k` of a node: a driver restart re-rolls the
+/// unobservable phase (§4.3). Epoch 0 is the plain boot seed, so restart-
+/// free captures are bit-for-bit the historical single-epoch streams.
+pub fn epoch_boot_seed(boot_seed: u64, epoch: usize) -> u64 {
+    if epoch == 0 {
+        return boot_seed;
+    }
+    let mut s = boot_seed ^ (epoch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xE60C;
+    splitmix64(&mut s)
+}
+
+/// Per-node fault-state seed (dropout decision stream).
+pub fn node_fault_seed(rig_seed: u64) -> u64 {
+    rig_seed ^ 0xFA17
 }
 
 /// The production workload a node runs after calibration (round-robin
@@ -63,26 +91,47 @@ pub fn node_activity_into(
     duration_s: f64,
     out: &mut ActivitySignal,
 ) {
+    node_activity_with_restarts(sched, node_id, duration_s, &[], out);
+}
+
+/// [`node_activity_into`] for an observation interrupted by driver
+/// restarts: each restart quiesces the workload for [`RESTART_OUTAGE_S`]
+/// (the driver is down), then re-runs the calibration probes from the
+/// recovery point before resuming production iterations. `restarts` must
+/// be the *effective* list (sorted/filtered —
+/// [`super::source::FaultPlan::effective_restarts`]); with an empty list
+/// this reproduces the historical single-epoch activity exactly.
+pub fn node_activity_with_restarts(
+    sched: &ProbeSchedule,
+    node_id: usize,
+    duration_s: f64,
+    restarts: &[f64],
+    out: &mut ActivitySignal,
+) {
     out.segments.clear();
-    sched.append_activity(out);
     let wl = node_workload(node_id);
     let iter_s = wl.iteration_s();
-    let mut t = sched.calibration_end();
-    while t + iter_s <= duration_s - 0.05 {
-        for ph in wl.pattern {
-            if ph.util > 0.0 {
-                out.push(t, ph.duration_s, ph.util);
+    let mut origin = 0.0;
+    for &seg_end in restarts.iter().chain(std::iter::once(&duration_s)) {
+        sched.append_activity_at(origin, out);
+        let mut t = origin + sched.calibration_end();
+        while t + iter_s <= seg_end - 0.05 {
+            for ph in wl.pattern {
+                if ph.util > 0.0 {
+                    out.push(t, ph.duration_s, ph.util);
+                }
+                t += ph.duration_s;
             }
-            t += ph.duration_s;
         }
+        origin = seg_end + RESTART_OUTAGE_S;
     }
 }
 
 /// Messages flowing from ingest workers to the accounting consumer.
 #[derive(Debug)]
 pub enum IngestMsg {
-    /// A node finished calibration: identity + ground-truth bucket
-    /// energies; its reading batches follow.
+    /// A node finished calibration: per-epoch identities + ground-truth
+    /// bucket energies; its reading batches follow.
     NodeStart(Box<NodeStart>),
     /// One batch of polled `(t, W)` readings, in stream order per node.
     Batch { node_id: usize, points: Vec<(f64, f64)> },
@@ -96,9 +145,22 @@ pub struct NodeStart {
     pub node_id: usize,
     pub model: &'static str,
     pub generation: Generation,
-    pub identity: SensorIdentity,
-    /// PMD ground-truth energy per accounting bucket, joules.
+    /// Identification per sensor epoch (one entry unless the stream
+    /// carried driver restarts), ascending by start time.
+    pub epochs: Vec<EpochIdentity>,
+    /// PMD ground-truth energy per accounting bucket, joules (all zero
+    /// when the source carries no reference, e.g. recorded logs).
     pub truth_j: Vec<f64>,
+}
+
+impl NodeStart {
+    /// The node's current (latest-epoch) identity.
+    pub fn identity(&self) -> super::registry::SensorIdentity {
+        self.epochs
+            .last()
+            .map(|e| e.identity)
+            .unwrap_or_else(super::registry::SensorIdentity::unsupported)
+    }
 }
 
 /// Ingest throughput counters.
@@ -109,12 +171,15 @@ pub struct IngestStats {
     pub readings: u64,
 }
 
-/// Per-worker scratch arena: capture/poll buffers plus identification
-/// buffers, reused across every node the worker processes.
+/// Per-worker scratch arena: the assembled node stream, epoch indices,
+/// identification buffers and truth buckets, reused across every node the
+/// worker processes. (The capture-side arenas live inside the sources.)
 #[derive(Debug, Default)]
 pub struct NodeScratch {
-    pub(crate) measure: MeasureScratch,
     pub(crate) id: IdentifyScratch,
+    pub(crate) stream: Vec<(f64, f64)>,
+    pub(crate) epoch_starts: Vec<usize>,
+    pub(crate) epochs: Vec<EpochIdentity>,
     pub(crate) truth: Vec<f64>,
 }
 
@@ -124,69 +189,150 @@ impl NodeScratch {
     }
 }
 
-/// Simulate, identify, and stream one node. Batch buffers come from the
-/// recycling `pool` when available; send errors (consumer gone) are
-/// ignored — the service is already unwinding.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn produce_node(
-    device: GpuDevice,
-    node_id: usize,
-    driver: DriverEpoch,
-    field: PowerField,
-    cfg: &TelemetryConfig,
-    sched: &ProbeSchedule,
-    spec: BucketSpec,
-    duration_s: f64,
-    scratch: &mut NodeScratch,
-    tx: &SyncSender<IngestMsg>,
-    pool: &Mutex<Receiver<Vec<(f64, f64)>>>,
-) {
-    let model = device.model.name;
-    let generation = device.model.generation;
-    let rig_seed = node_rig_seed(cfg.seed, node_id);
-    let boot_seed = node_boot_seed(rig_seed);
-    let rig = MeasurementRig::new(device, driver, field, rig_seed);
+/// The producer side of the bounded queue: batch size, the send handle,
+/// and the buffer-recycling pool.
+pub(crate) struct Emitter<'a> {
+    pub(crate) tx: SyncSender<IngestMsg>,
+    pub(crate) pool: &'a Mutex<Receiver<Vec<(f64, f64)>>>,
+    pub(crate) batch: usize,
+}
 
-    let mut activity = std::mem::take(&mut scratch.measure.activity);
-    node_activity_into(sched, node_id, duration_s, &mut activity);
-    let meta = capture_streaming(&rig, &activity, 0.0, duration_s, boot_seed, &mut scratch.measure);
-    scratch.measure.activity = activity;
-
-    scratch.measure.points.clear();
-    poll_readings(
-        &scratch.measure.readings,
-        Rng::new(boot_seed ^ 0x5149),
-        cfg.poll_period_s,
-        0.15,
-        0.0,
-        duration_s,
-        &mut scratch.measure.points,
-    );
-
-    let identity = identify(
-        &scratch.measure.points,
-        meta.pmd_view(&scratch.measure.pmd),
-        sched,
-        &mut scratch.id,
-    );
-    pmd_bucket_energies(meta.pmd_view(&scratch.measure.pmd), &spec, &mut scratch.truth);
-
-    let start = NodeStart { node_id, model, generation, identity, truth_j: scratch.truth.clone() };
-    if tx.send(IngestMsg::NodeStart(Box::new(start))).is_err() {
-        return;
-    }
-    for chunk in scratch.measure.points.chunks(cfg.batch_size.max(1)) {
-        let mut buf = match pool.lock() {
-            Ok(rx) => rx.try_recv().unwrap_or_default(),
-            Err(_) => Vec::new(),
-        };
-        buf.clear();
-        buf.extend_from_slice(chunk);
-        if tx.send(IngestMsg::Batch { node_id, points: buf }).is_err() {
+impl Emitter<'_> {
+    /// Emit one node's header, its stream as recycled batches, and the end
+    /// marker. Send errors (consumer gone) are ignored — the service is
+    /// already unwinding.
+    fn send_node(&self, start: NodeStart, points: &[(f64, f64)]) {
+        let node_id = start.node_id;
+        if self.tx.send(IngestMsg::NodeStart(Box::new(start))).is_err() {
             return;
         }
+        for chunk in points.chunks(self.batch.max(1)) {
+            let mut buf = match self.pool.lock() {
+                Ok(rx) => rx.try_recv().unwrap_or_default(),
+                Err(_) => Vec::new(),
+            };
+            buf.clear();
+            buf.extend_from_slice(chunk);
+            if self.tx.send(IngestMsg::Batch { node_id, points: buf }).is_err() {
+                return;
+            }
+        }
+        let _ = self.tx.send(IngestMsg::NodeEnd { node_id });
     }
-    let _ = tx.send(IngestMsg::NodeEnd { node_id });
+}
+
+/// Whether an epoch's identification produced anything a later account
+/// could use (a re-calibration that never ran leaves the post-restart
+/// epoch quantised/unsupported — the node then keeps its previous
+/// identity rather than forgetting what it knew).
+fn informative(identity: &super::registry::SensorIdentity) -> bool {
+    !matches!(identity.class, SensorClass::Quantised | SensorClass::Unsupported)
+}
+
+/// Merge a fresh epoch's identification with the node's previous one. The
+/// boot *phase* re-randomises across a restart, but update period and
+/// averaging window are device properties that a mere restart cannot
+/// change — so:
+///
+/// * an uninformative fresh epoch (a gap-triggered split with no probes in
+///   it) keeps the previous identity wholesale;
+/// * a fresh boxcar that recovered the update period but not the window
+///   (failed estimate) inherits the previous window;
+/// * a fresh boxcar whose window estimate *wildly disagrees* with the
+///   previously identified one (> 50%) keeps the previous window: the
+///   stream cannot distinguish a true restart from a long collection
+///   outage, and an "epoch" split off by an outage has no probes at its
+///   origin, so its estimate is production-workload noise. Stability wins
+///   — a device's window does not change across restarts.
+fn reconcile_epoch_identity(
+    prev: super::registry::SensorIdentity,
+    cur: super::registry::SensorIdentity,
+) -> super::registry::SensorIdentity {
+    if !informative(&cur) {
+        return if informative(&prev) { prev } else { cur };
+    }
+    if cur.class == SensorClass::Boxcar && prev.class == SensorClass::Boxcar {
+        if let (Some(pu), Some(cu), Some(pw)) = (prev.update_s, cur.update_s, prev.window_s) {
+            if (cu - pu).abs() <= 0.25 * pu {
+                let keep_prev_window = match cur.window_s {
+                    None => true,
+                    Some(cw) => (cw - pw).abs() > 0.5 * pw,
+                };
+                if keep_prev_window {
+                    return super::registry::SensorIdentity { window_s: Some(pw), ..cur };
+                }
+            }
+        }
+    }
+    cur
+}
+
+/// Drain one prepared source, identify its sensor epoch by epoch, and
+/// stream it to the consumer. Pure function of the source's content, so
+/// worker/shard/batch configuration can never change the result.
+pub(crate) fn produce_source<S: ReadingSource>(
+    source: &mut S,
+    sched: &ProbeSchedule,
+    spec: BucketSpec,
+    gap_s: f64,
+    scratch: &mut NodeScratch,
+    emit: &Emitter<'_>,
+) {
+    // 1. assemble the stream (chunked pulls into the reused buffer)
+    scratch.stream.clear();
+    while source.fill(&mut scratch.stream, 1024) > 0 {}
+
+    // 2. epoch boundaries from the driver-restart signature
+    detect_epochs(&scratch.stream, gap_s, &mut scratch.epoch_starts);
+
+    // 3. identify each epoch from its own origin
+    scratch.epochs.clear();
+    let truth_view = source.truth();
+    if scratch.epoch_starts.is_empty() {
+        // no readings at all: one unidentified epoch
+        let identity = identify_epoch(&[], truth_view, sched, 0.0, &mut scratch.id);
+        scratch.epochs.push(EpochIdentity { t0: 0.0, identity });
+    } else {
+        for (k, &start) in scratch.epoch_starts.iter().enumerate() {
+            let end = scratch
+                .epoch_starts
+                .get(k + 1)
+                .copied()
+                .unwrap_or(scratch.stream.len());
+            let slice = &scratch.stream[start..end];
+            // epoch 0's calibration runs from the stream origin; a
+            // re-calibration runs from the first post-restart reading
+            let origin = if k == 0 { 0.0 } else { slice.first().map(|p| p.0).unwrap_or(0.0) };
+            let t0 = if k == 0 { 0.0 } else { origin };
+            let mut identity = identify_epoch(slice, truth_view, sched, origin, &mut scratch.id);
+            if k > 0 {
+                if let Some(prev) = scratch.epochs.last() {
+                    identity = reconcile_epoch_identity(prev.identity, identity);
+                }
+            }
+            scratch.epochs.push(EpochIdentity { t0, identity });
+        }
+    }
+
+    // 4. ground-truth bucket energies (zeros without a reference)
+    match source.truth() {
+        Some(view) => pmd_bucket_energies(view, &spec, &mut scratch.truth),
+        None => {
+            scratch.truth.clear();
+            scratch.truth.resize(spec.n, 0.0);
+        }
+    }
+
+    // 5. header + batches + end
+    let info = source.info();
+    let start = NodeStart {
+        node_id: info.node_id,
+        model: info.model,
+        generation: info.generation,
+        epochs: scratch.epochs.clone(),
+        truth_j: scratch.truth.clone(),
+    };
+    emit.send_node(start, &scratch.stream);
 }
 
 #[cfg(test)]
@@ -202,6 +348,13 @@ mod tests {
         assert_ne!(a, c);
         assert_eq!(a, node_rig_seed(7, 0));
         assert_ne!(node_boot_seed(a), a);
+        assert_ne!(node_fault_seed(a), node_boot_seed(a));
+        // epoch 0 IS the boot seed; later epochs differ and are stable
+        let boot = node_boot_seed(a);
+        assert_eq!(epoch_boot_seed(boot, 0), boot);
+        assert_ne!(epoch_boot_seed(boot, 1), boot);
+        assert_ne!(epoch_boot_seed(boot, 1), epoch_boot_seed(boot, 2));
+        assert_eq!(epoch_boot_seed(boot, 1), epoch_boot_seed(boot, 1));
     }
 
     #[test]
@@ -234,5 +387,37 @@ mod tests {
         assert_eq!(node_workload(0).name, WORKLOADS[0].name);
         assert_eq!(node_workload(WORKLOADS.len()).name, WORKLOADS[0].name);
         assert_ne!(node_workload(1).name, node_workload(2).name);
+    }
+
+    #[test]
+    fn restart_activity_quiesces_then_recalibrates() {
+        let sched = ProbeSchedule::default();
+        let cal = sched.calibration_end();
+        let restart = cal + 3.0;
+        let duration = restart + RESTART_OUTAGE_S + cal + 2.0;
+        let mut act = ActivitySignal::idle();
+        node_activity_with_restarts(&sched, 1, duration, &[restart], &mut act);
+        // ordered and non-overlapping across the restart
+        for w in act.segments.windows(2) {
+            assert!(w[1].t0 >= w[0].t1 - 1e-12, "{w:?}");
+        }
+        // nothing runs while the driver is down
+        let down = (restart, restart + RESTART_OUTAGE_S);
+        assert!(
+            act.segments.iter().all(|s| s.t1 <= down.0 + 1e-12 || s.t0 >= down.1 - 1e-12),
+            "no activity inside the restart outage"
+        );
+        // the re-calibration step probe appears at its shifted origin
+        let recal_step = down.1 + sched.step_t;
+        assert!(
+            act.segments.iter().any(|s| (s.t0 - recal_step).abs() < 1e-9),
+            "recalibration probes present after the restart"
+        );
+        // no restarts -> identical to node_activity_into
+        let mut plain = ActivitySignal::idle();
+        node_activity_with_restarts(&sched, 1, 40.0, &[], &mut plain);
+        let mut reference = ActivitySignal::idle();
+        node_activity_into(&sched, 1, 40.0, &mut reference);
+        assert_eq!(plain.segments, reference.segments);
     }
 }

@@ -1,5 +1,6 @@
-//! Online fleet-telemetry service: streaming ingestion, live sensor
-//! identification, and corrected energy accounting.
+//! Online fleet-telemetry service: streaming ingestion from any reading
+//! source, live sensor identification with driver-restart re-calibration,
+//! and corrected multi-window energy accounting.
 //!
 //! The paper's headline warning is fleet-scale: with only ~25% of runtime
 //! sampled on A100/H100-class sensors, a datacenter of 10,000s of GPUs
@@ -7,40 +8,56 @@
 //! "$1 million per year" example). Batch measurement campaigns
 //! (`coordinator::Scheduler`) answer that question offline; this module is
 //! the *online* counterpart — a long-running collector that consumes
-//! nvidia-smi poll streams from thousands of simulated nodes and maintains
-//! live, corrected energy accounts:
+//! nvidia-smi poll streams and maintains live, corrected energy accounts:
 //!
-//! * [`ingest`] — sharded producers simulate each node through the
-//!   chunked, allocation-free capture pipeline and push reading batches
-//!   over a bounded queue (backpressure, batch-buffer recycling);
+//! * [`source`] — the unified [`ReadingSource`] layer: simulated nodes
+//!   ([`SimSource`]), recorded nvidia-smi CSV logs ([`ReplaySource`],
+//!   parsed by the `smi::cli` parser that round-trips the emitter), and a
+//!   streaming fault injector ([`FaultSource`]: dropout, outages, stuck
+//!   values, driver restarts) that can wrap either;
+//! * [`ingest`] — sharded producers drive each node's source through the
+//!   chunked, allocation-free pipeline and push reading batches over a
+//!   bounded queue (backpressure, batch-buffer recycling);
 //! * [`registry`] — every node runs the paper's §4 micro-benchmarks as an
 //!   online calibration protocol; the registry converges to the encoded
-//!   `sim::profile` ground truth and scores itself per generation;
+//!   `sim::profile` ground truth, scores itself per generation, and tracks
+//!   *sensor epochs*: a driver restart's outage signature triggers
+//!   re-identification from the post-restart calibration;
 //! * [`accounting`] — per-node and fleet-level time-bucketed energy:
-//!   naive trapezoid, good-practice corrected (boxcar-latency shift from
-//!   the *identified* window) with coverage-derived error bounds, and the
-//!   PMD ground truth — all maintained incrementally, bit-for-bit equal
-//!   to the batch reference;
-//! * [`query`] — fleet energy over a time range, per-generation error
-//!   breakdown, top-k mis-estimated nodes, and the annualised cost error,
-//!   rendered through [`crate::report::Table`].
+//!   naive trapezoid, good-practice corrected (per-epoch boxcar-latency
+//!   shift from the *identified* window) with coverage-derived error
+//!   bounds, and the PMD ground truth — all maintained incrementally,
+//!   bit-for-bit equal to the batch reference — plus rolling
+//!   per-observation-window snapshots for continuous operation;
+//! * [`query`] — fleet energy over a time range, per-window and
+//!   per-generation breakdowns, top-k mis-estimated nodes, and the
+//!   annualised cost error, rendered through [`crate::report::Table`].
 //!
-//! Determinism: for a fixed [`TelemetryConfig::seed`] the accounts, the
-//! registry, and the ingested reading count are bit-for-bit identical
-//! regardless of worker count, shard size, batch size, or queue depth
-//! (per-node streams are pure functions of the seed; fleet aggregation
-//! folds in node-id order). Only `stats.batches` depends on the batch
-//! size, trivially (`ceil(points / batch_size)` per node).
+//! Determinism: for a fixed [`TelemetryConfig::seed`] (and fault plan /
+//! log set) the accounts, the registry, and the ingested reading count are
+//! bit-for-bit identical regardless of worker count, shard size, batch
+//! size, or queue depth (per-node streams are pure functions of their
+//! inputs; fleet aggregation folds in node-id order). Only
+//! `stats.batches` depends on the batch size, trivially
+//! (`ceil(points / batch_size)` per node).
 
 pub mod accounting;
 pub mod ingest;
 pub mod query;
 pub mod registry;
+pub mod source;
 
-pub use accounting::{BucketSpec, FleetAccounts, FleetEnergy, NodeAccount, NodeAccountant};
+pub use accounting::{
+    BucketSpec, FleetAccounts, FleetEnergy, NodeAccount, NodeAccountant, WindowSnapshot,
+};
 pub use ingest::{IngestStats, NodeScratch};
 pub use registry::{
-    GenAccuracy, NodeIdentity, ProbeSchedule, Registry, SensorClass, SensorIdentity,
+    detect_epochs, EpochIdentity, EpochTracker, GenAccuracy, NodeIdentity, ProbeSchedule,
+    Registry, SensorClass, SensorIdentity, DRIVER_RESTART_GAP_S,
+};
+pub use source::{
+    FaultPlan, FaultSource, ReadingSource, ReplaySource, ServiceSource, SimSource, SourceInfo,
+    RESTART_OUTAGE_S,
 };
 
 use std::collections::HashMap;
@@ -49,7 +66,7 @@ use std::sync::{mpsc, Mutex};
 
 use crate::coordinator::Fleet;
 
-use ingest::{produce_node, IngestMsg, NodeStart};
+use ingest::{produce_source, Emitter, IngestMsg, NodeStart};
 
 /// Service configuration.
 #[derive(Debug, Clone, Copy)]
@@ -57,6 +74,10 @@ pub struct TelemetryConfig {
     /// Observation window per node, seconds (clamped up so the
     /// calibration probes always fit).
     pub duration_s: f64,
+    /// Consecutive observation windows (continuous operation: total
+    /// per-node stream time is `windows × duration_s`, snapshotted per
+    /// window). 0 behaves as 1.
+    pub windows: usize,
     /// Accounting bucket width, seconds.
     pub bucket_s: f64,
     /// nvidia-smi polling cadence, seconds (the paper's probes poll at
@@ -70,8 +91,8 @@ pub struct TelemetryConfig {
     pub shard_size: usize,
     /// Producer worker threads.
     pub workers: usize,
-    /// Service seed: fixes every node's boot phase, jitter, and tolerance
-    /// draw.
+    /// Service seed: fixes every node's boot phase, jitter, fault draws,
+    /// and tolerance draw.
     pub seed: u64,
 }
 
@@ -79,6 +100,7 @@ impl Default for TelemetryConfig {
     fn default() -> Self {
         TelemetryConfig {
             duration_s: 40.0,
+            windows: 1,
             bucket_s: 1.0,
             poll_period_s: 0.002,
             batch_size: 512,
@@ -90,12 +112,15 @@ impl Default for TelemetryConfig {
     }
 }
 
-/// Everything the service learned about the fleet in one observation
-/// window.
+/// Everything the service learned about the fleet over its observation
+/// windows.
 #[derive(Debug)]
 pub struct TelemetrySnapshot {
-    /// Effective observation window (after the calibration clamp), seconds.
+    /// Total observed stream time per node (all windows), seconds.
     pub duration_s: f64,
+    /// One observation window's length (after the calibration clamp),
+    /// seconds.
+    pub window_s: f64,
     /// The calibration protocol the nodes ran.
     pub schedule: ProbeSchedule,
     pub accounts: FleetAccounts,
@@ -108,17 +133,34 @@ impl TelemetrySnapshot {
     pub fn fleet_energy(&self, t0: f64, t1: f64) -> FleetEnergy {
         self.accounts.energy_between(t0, t1)
     }
+
+    /// Rolling per-observation-window aggregates (continuous operation).
+    pub fn windows(&self) -> Vec<WindowSnapshot> {
+        self.accounts.window_snapshots(self.window_s)
+    }
 }
 
-/// Run the telemetry service over a fleet for one observation window and
-/// return the snapshot.
-pub fn run_service(fleet: &Fleet, cfg: &TelemetryConfig) -> TelemetrySnapshot {
-    let sched = ProbeSchedule::default();
-    let duration_s = cfg.duration_s.max(sched.calibration_end() + 2.0);
-    let spec = BucketSpec::new(duration_s, cfg.bucket_s);
-    let driver = fleet.config.driver;
-    let field = fleet.config.field;
-    let n = fleet.nodes.len();
+/// One observation window's effective length under `cfg` (the calibration
+/// probes must fit).
+fn effective_window_s(cfg: &TelemetryConfig, sched: &ProbeSchedule) -> f64 {
+    cfg.duration_s.max(sched.calibration_end() + 2.0)
+}
+
+/// The generic service scaffold: a bounded queue between `workers`
+/// producer threads (claiming node shards off an atomic counter, each with
+/// its own source state `W` and scratch arena) and the accounting
+/// consumer. Everything source-specific lives in `init`/`per_node`.
+fn run_core<W, I, P>(
+    n: usize,
+    cfg: &TelemetryConfig,
+    spec: BucketSpec,
+    init: I,
+    per_node: P,
+) -> (Vec<NodeAccount>, Registry, IngestStats)
+where
+    I: Fn() -> W + Sync,
+    P: Fn(&mut W, usize, &mut NodeScratch, &Emitter<'_>) + Sync,
+{
     let shard_size = cfg.shard_size.max(1);
     let n_shards = (n + shard_size - 1) / shard_size;
     let workers = cfg.workers.max(1);
@@ -128,7 +170,7 @@ pub fn run_service(fleet: &Fleet, cfg: &TelemetryConfig) -> TelemetrySnapshot {
     let (pool_tx, pool_rx) = mpsc::channel::<Vec<(f64, f64)>>();
     let pool = Mutex::new(pool_rx);
 
-    let (finished, mut registry, stats) = std::thread::scope(|scope| {
+    std::thread::scope(|scope| {
         // The accounting consumer: drains the bounded queue, maintains one
         // incremental accountant per in-flight node, recycles batch
         // buffers back to the producers.
@@ -141,7 +183,7 @@ pub fn run_service(fleet: &Fleet, cfg: &TelemetryConfig) -> TelemetrySnapshot {
                 match msg {
                     IngestMsg::NodeStart(start) => {
                         stats.nodes += 1;
-                        let acct = NodeAccountant::for_identity(spec, &start.identity);
+                        let acct = NodeAccountant::for_epochs(spec, &start.epochs);
                         inflight.insert(start.node_id, (start, acct));
                     }
                     IngestMsg::Batch { node_id, points } => {
@@ -154,9 +196,15 @@ pub fn run_service(fleet: &Fleet, cfg: &TelemetryConfig) -> TelemetrySnapshot {
                     }
                     IngestMsg::NodeEnd { node_id } => {
                         if let Some((start, acct)) = inflight.remove(&node_id) {
-                            let NodeStart { node_id, model, generation, identity, truth_j } =
-                                *start;
-                            registry.insert(NodeIdentity { node_id, model, generation, identity });
+                            let identity = start.identity();
+                            let NodeStart { node_id, model, generation, epochs, truth_j } = *start;
+                            registry.insert(NodeIdentity {
+                                node_id,
+                                model,
+                                generation,
+                                identity,
+                                epochs,
+                            });
                             finished
                                 .push(acct.finish(node_id, model, generation, identity, truth_j));
                         }
@@ -170,9 +218,12 @@ pub fn run_service(fleet: &Fleet, cfg: &TelemetryConfig) -> TelemetrySnapshot {
             let tx = tx.clone();
             let pool = &pool;
             let next_shard = &next_shard;
-            let nodes = &fleet.nodes;
-            let sched = &sched;
+            let init = &init;
+            let per_node = &per_node;
+            let batch = cfg.batch_size.max(1);
             scope.spawn(move || {
+                let emit = Emitter { tx, pool, batch };
+                let mut state = init();
                 let mut scratch = NodeScratch::new();
                 loop {
                     let s = next_shard.fetch_add(1, Ordering::Relaxed);
@@ -181,31 +232,154 @@ pub fn run_service(fleet: &Fleet, cfg: &TelemetryConfig) -> TelemetrySnapshot {
                     }
                     let lo = s * shard_size;
                     let hi = (lo + shard_size).min(n);
-                    for node in &nodes[lo..hi] {
-                        produce_node(
-                            node.device.clone(),
-                            node.id,
-                            driver,
-                            field,
-                            cfg,
-                            sched,
-                            spec,
-                            duration_s,
-                            &mut scratch,
-                            &tx,
-                            pool,
-                        );
+                    for idx in lo..hi {
+                        per_node(&mut state, idx, &mut scratch, &emit);
                     }
                 }
             });
         }
         drop(tx);
         consumer.join().expect("telemetry consumer panicked")
-    });
+    })
+}
+
+/// Per-worker simulated-source state: plain, or wrapped in the streaming
+/// fault injector.
+enum SimWorker {
+    Plain(SimSource),
+    Faulty(FaultSource<SimSource>),
+}
+
+/// Run the telemetry service over a simulated fleet and return the
+/// snapshot (the original service: [`ServiceSource::Sim`]).
+pub fn run_service(fleet: &Fleet, cfg: &TelemetryConfig) -> TelemetrySnapshot {
+    run_service_with(fleet, cfg, &ServiceSource::Sim)
+}
+
+/// Run the telemetry service with an explicit reading source. For
+/// [`ServiceSource::Replay`] the fleet is ignored (one node per log) and
+/// the logs must be valid — use [`run_replay_service`] directly for error
+/// handling.
+pub fn run_service_with(
+    fleet: &Fleet,
+    cfg: &TelemetryConfig,
+    src: &ServiceSource,
+) -> TelemetrySnapshot {
+    if let ServiceSource::Replay(logs) = src {
+        return run_replay_service(logs, cfg).expect("invalid replay logs");
+    }
+    let sched = ProbeSchedule::default();
+    let window_s = effective_window_s(cfg, &sched);
+    let duration_s = window_s * cfg.windows.max(1) as f64;
+    let spec = BucketSpec::new(duration_s, cfg.bucket_s);
+    let driver = fleet.config.driver;
+    let field = fleet.config.field;
+    let plan = match src {
+        ServiceSource::Faulty(plan) => Some(plan),
+        _ => None,
+    };
+    let restarts = plan
+        .map(|p| p.effective_restarts(&sched, duration_s))
+        .unwrap_or_default();
+    let nodes = &fleet.nodes;
+
+    let (finished, mut registry, stats) = run_core(
+        nodes.len(),
+        cfg,
+        spec,
+        || match plan {
+            None => SimWorker::Plain(SimSource::new()),
+            Some(p) => SimWorker::Faulty(FaultSource::new(SimSource::new(), p.clone())),
+        },
+        |state, idx, scratch, emit| {
+            let node = &nodes[idx];
+            match state {
+                SimWorker::Plain(sim) => {
+                    sim.prepare(
+                        node.device.clone(),
+                        node.id,
+                        driver,
+                        field,
+                        cfg.seed,
+                        cfg.poll_period_s,
+                        &sched,
+                        duration_s,
+                        &[],
+                    );
+                    produce_source(sim, &sched, spec, DRIVER_RESTART_GAP_S, scratch, emit);
+                }
+                SimWorker::Faulty(faulty) => {
+                    let rig_seed = ingest::node_rig_seed(cfg.seed, node.id);
+                    faulty.inner_mut().prepare(
+                        node.device.clone(),
+                        node.id,
+                        driver,
+                        field,
+                        cfg.seed,
+                        cfg.poll_period_s,
+                        &sched,
+                        duration_s,
+                        &restarts,
+                    );
+                    faulty.reset(ingest::node_fault_seed(rig_seed), &restarts);
+                    produce_source(faulty, &sched, spec, DRIVER_RESTART_GAP_S, scratch, emit);
+                }
+            }
+        },
+    );
 
     registry.finalize();
     let accounts = FleetAccounts::merge(spec, finished);
-    TelemetrySnapshot { duration_s, schedule: sched, accounts, registry, stats }
+    TelemetrySnapshot { duration_s, window_s, schedule: sched, accounts, registry, stats }
+}
+
+/// Run the telemetry service over recorded nvidia-smi CSV logs (one node
+/// per log, node ids in log order). Each log is parsed exactly once, up
+/// front; the bucket span covers the *longer* of the configured duration
+/// and the logs' own recorded range, so a long recording is never
+/// silently truncated. The snapshot's truth/bound columns stay zero where
+/// no reference exists.
+pub fn run_replay_service(
+    logs: &[String],
+    cfg: &TelemetryConfig,
+) -> Result<TelemetrySnapshot, String> {
+    use crate::smi::cli::{LogValue, QueryField, SmiLog};
+
+    let mut parsed: Vec<SmiLog> = Vec::with_capacity(logs.len());
+    let mut t_max = 0.0f64;
+    for (i, text) in logs.iter().enumerate() {
+        let log = crate::smi::cli::parse_log(text).map_err(|e| format!("replay log {i}: {e}"))?;
+        if let Some(tc) = log.column(&QueryField::Timestamp) {
+            for row in &log.rows {
+                if let LogValue::Seconds(t) = &row[tc] {
+                    t_max = t_max.max(*t);
+                }
+            }
+        }
+        parsed.push(log);
+    }
+    let sched = ProbeSchedule::default();
+    let window_s = effective_window_s(cfg, &sched);
+    // extend past the last recorded reading so its final bucket exists
+    let duration_s = (window_s * cfg.windows.max(1) as f64).max(t_max + 1e-9);
+    let spec = BucketSpec::new(duration_s, cfg.bucket_s);
+
+    let (finished, mut registry, stats) = run_core(
+        logs.len(),
+        cfg,
+        spec,
+        ReplaySource::new,
+        |src, idx, scratch, emit| {
+            // pre-validated above; a failure here would be a logic error
+            if src.prepare_from_parsed(idx, &parsed[idx]).is_ok() {
+                produce_source(src, &sched, spec, DRIVER_RESTART_GAP_S, scratch, emit);
+            }
+        },
+    );
+
+    registry.finalize();
+    let accounts = FleetAccounts::merge(spec, finished);
+    Ok(TelemetrySnapshot { duration_s, window_s, schedule: sched, accounts, registry, stats })
 }
 
 #[cfg(test)]
@@ -259,6 +433,13 @@ mod tests {
         for (x, y) in a.registry.entries.iter().zip(&b.registry.entries) {
             assert_eq!(x.node_id, y.node_id);
             assert_eq!(x.identity, y.identity);
+            assert_eq!(x.epochs, y.epochs);
+        }
+        assert_eq!(a.windows().len(), b.windows().len());
+        for (x, y) in a.windows().iter().zip(&b.windows()) {
+            assert_eq!(x.naive_j.to_bits(), y.naive_j.to_bits());
+            assert_eq!(x.corrected_j.to_bits(), y.corrected_j.to_bits());
+            assert_eq!(x.truth_j.to_bits(), y.truth_j.to_bits());
         }
     }
 
@@ -288,7 +469,9 @@ mod tests {
         // A100 instant: identified as part-time boxcar on every node
         for e in &snap.registry.entries {
             assert_eq!(e.identity.class, SensorClass::Boxcar, "{e:?}");
+            assert_eq!(e.epochs.len(), 1, "no restarts -> single epoch");
         }
+        assert_eq!(snap.registry.recalibrated(), 0);
         assert!(
             snap.registry.overall_accuracy(PowerField::Instant, DriverEpoch::Post530) > 0.74,
             "uniform A100 fleet must identify nearly all nodes (the hard >=90% catalogue \
@@ -296,6 +479,10 @@ mod tests {
         );
         // part-time coverage -> nonzero error bound
         assert!(whole.bound_j > 0.0);
+        // single window configured -> one rolling snapshot covering it all
+        let wins = snap.windows();
+        assert_eq!(wins.len(), 1);
+        assert!((wins[0].truth_j - whole.truth_j).abs() < 1e-9);
     }
 
     #[test]
@@ -336,5 +523,53 @@ mod tests {
             whole.bound_j,
             (whole.corrected_j - whole.truth_j).abs()
         );
+    }
+
+    #[test]
+    fn multi_window_service_snapshots_every_window() {
+        let fleet = small_fleet(2, &["A100 PCIe-40G"], 75);
+        let cfg = TelemetryConfig { windows: 2, ..fast_cfg() };
+        let snap = run_service(&fleet, &cfg);
+        assert!((snap.duration_s - 2.0 * snap.window_s).abs() < 1e-9);
+        let wins = snap.windows();
+        assert_eq!(wins.len(), 2);
+        for w in &wins {
+            assert!(w.truth_j > 0.0, "every window observed energy: {w:?}");
+            assert!(w.naive_j > 0.0);
+        }
+        assert_eq!(wins[0].t1, wins[1].t0, "windows tile the observation");
+        // the window sums reproduce the whole-range query
+        let whole = snap.fleet_energy(0.0, snap.duration_s);
+        let sum: f64 = wins.iter().map(|w| w.truth_j).sum();
+        assert!((sum - whole.truth_j).abs() < 1e-9);
+    }
+
+    #[test]
+    fn faulty_service_dropout_and_outage_reduce_readings_deterministically() {
+        let fleet = small_fleet(2, &["A100 PCIe-40G"], 76);
+        let cfg = fast_cfg();
+        let clean = run_service(&fleet, &cfg);
+        let plan = FaultPlan {
+            dropout: 0.25,
+            outages: vec![crate::sim::faults::FaultWindow::new(3.0, 1.2)],
+            ..Default::default()
+        };
+        let a = run_service_with(&fleet, &cfg, &ServiceSource::Faulty(plan.clone()));
+        let b = run_service_with(
+            &fleet,
+            &TelemetryConfig { workers: 3, shard_size: 1, batch_size: 61, ..cfg },
+            &ServiceSource::Faulty(plan),
+        );
+        assert_snapshots_identical(&a, &b);
+        assert!(
+            a.stats.readings < (0.85 * clean.stats.readings as f64) as u64,
+            "faults must cost readings: {} vs clean {}",
+            a.stats.readings,
+            clean.stats.readings
+        );
+        // the accounts still close: truth untouched by collection faults
+        for (f, c) in a.accounts.nodes.iter().zip(&clean.accounts.nodes) {
+            assert_eq!(f.truth_total_j().to_bits(), c.truth_total_j().to_bits());
+        }
     }
 }

@@ -94,6 +94,36 @@ pub fn top_misestimated(snap: &TelemetrySnapshot, k: usize) -> Table {
     t
 }
 
+/// Rolling per-observation-window breakdown (continuous operation): one
+/// row per window with all four accounts and the naive/corrected errors.
+pub fn window_table(snap: &TelemetrySnapshot) -> Table {
+    let wins = snap.windows();
+    let mut t = Table::new(
+        format!("rolling window snapshots ({} × {:.1} s)", wins.len(), snap.window_s),
+        &["window", "t0 s", "t1 s", "truth kJ", "naive kJ", "corrected kJ", "naive %err", "corrected %err"],
+    );
+    for w in &wins {
+        let pct = |v: f64| {
+            if w.truth_j > 0.0 {
+                format!("{v:+.2}")
+            } else {
+                "-".into()
+            }
+        };
+        t.row(&[
+            w.index.to_string(),
+            f(w.t0, 1),
+            f(w.t1, 1),
+            f(w.truth_j / 1e3, 3),
+            f(w.naive_j / 1e3, 3),
+            f(w.corrected_j / 1e3, 3),
+            pct(w.naive_pct()),
+            pct(w.corrected_pct()),
+        ]);
+    }
+    t
+}
+
 /// Annualised naive-accounting cost error scaled to `n_gpus` (USD/year),
 /// with the per-GPU draw derived over the snapshot's actual observation
 /// window (not the rounded-up bucket span).
@@ -101,17 +131,23 @@ pub fn annual_cost_error_usd(snap: &TelemetrySnapshot, n_gpus: usize, usd_per_kw
     snap.accounts.annual_cost_error_usd(n_gpus, usd_per_kwh, snap.duration_s)
 }
 
-/// Identification-accuracy summary of the registry (used by the CLI).
+/// Identification-accuracy summary of the registry (used by the CLI),
+/// including how many nodes re-calibrated after a detected driver restart.
 pub fn registry_summary(reg: &Registry, field: PowerField, driver: DriverEpoch) -> String {
     let acc = reg.accuracy(field, driver);
     let measured: usize = acc.iter().map(|g| g.measured).sum();
     let correct: usize = acc.iter().map(|g| g.correct).sum();
-    format!(
+    let mut out = format!(
         "sensor identification: {}/{} measurable nodes match encoded ground truth ({:.0}%)",
         correct,
         measured,
         100.0 * reg.overall_accuracy(field, driver)
-    )
+    );
+    let recal = reg.recalibrated();
+    if recal > 0 {
+        out.push_str(&format!("; {recal} re-identified after restart-sized stream gaps"));
+    }
+    out
 }
 
 #[cfg(test)]
@@ -151,5 +187,9 @@ mod tests {
         assert!(usd.is_finite() && usd >= 0.0);
         assert!(registry_summary(&snap.registry, PowerField::Instant, DriverEpoch::Post530)
             .contains("sensor identification"));
+
+        let wt = window_table(&snap);
+        assert_eq!(wt.rows.len(), snap.windows().len());
+        assert!(wt.render().contains("rolling window snapshots"));
     }
 }

@@ -21,6 +21,23 @@
 //! Identification is a pure function of the node's polled readings and its
 //! PMD reference stream, so it is deterministic and the batch-reference
 //! path in tests reproduces it exactly.
+//!
+//! Two extensions support continuous operation over arbitrary
+//! [`crate::telemetry::source::ReadingSource`]s:
+//!
+//! * **no-reference identification** — a recorded log has no PMD. The §4.3
+//!   estimator's shape comparison is z-scored (affine-invariant), so the
+//!   *commanded* probe square wave stands in for the reference (exactly
+//!   Fig. 12's observation that the commanded wave and the PMD give the
+//!   same loss minimum). RC-vs-board-limited transients cannot be told
+//!   apart without a reference, so replayed Kepler/Maxwell streams read as
+//!   coarse boxcars — the same leniency Fig. 14 grants them;
+//! * **epoch tracking** — a driver restart re-randomises the sensor's boot
+//!   phase and takes the stream down for ~a second. [`EpochTracker`]
+//!   detects that signature (a reading gap ≥ [`DRIVER_RESTART_GAP_S`]) and
+//!   splits the stream into epochs; each epoch re-runs the calibration
+//!   protocol from its own origin ([`identify_epoch`]'s `origin`) and the
+//!   registry keeps the per-epoch history ([`EpochIdentity`]).
 
 use crate::estimator::boxcar::{estimate_window_view, EstimatorConfig, WindowScratch};
 use crate::estimator::stats::median;
@@ -96,15 +113,21 @@ impl ProbeSchedule {
     /// Append the calibration activity (step + three square waves) to a
     /// caller-owned signal.
     pub fn append_activity(&self, act: &mut ActivitySignal) {
-        act.push(self.step_t, self.step_end - self.step_t, 1.0);
+        self.append_activity_at(0.0, act);
+    }
+
+    /// [`Self::append_activity`] with every probe shifted by `origin` —
+    /// the re-calibration a node runs after a detected driver restart.
+    pub fn append_activity_at(&self, origin: f64, act: &mut ActivitySignal) {
+        act.push(origin + self.step_t, self.step_end - self.step_t, 1.0);
         let mut wave = |t0: f64, period: f64, cycles: usize| {
             for k in 0..cycles {
                 act.push(t0 + k as f64 * period, period * 0.5, 1.0);
             }
         };
-        wave(self.update_start, self.update_period, self.update_cycles);
-        wave(self.w_fast_start, self.w_fast_period, self.w_fast_cycles);
-        wave(self.w_slow_start, self.w_slow_period, self.w_slow_cycles);
+        wave(origin + self.update_start, self.update_period, self.update_cycles);
+        wave(origin + self.w_fast_start, self.w_fast_period, self.w_fast_cycles);
+        wave(origin + self.w_slow_start, self.w_slow_period, self.w_slow_cycles);
     }
 }
 
@@ -170,6 +193,8 @@ pub struct IdentifyScratch {
     post: Vec<f64>,
     observed: Vec<(f64, f64)>,
     pmd_prefix: Vec<f64>,
+    /// Synthesized commanded-wave reference (no-PMD identification).
+    synth: Vec<f32>,
     win: WindowScratch,
 }
 
@@ -179,14 +204,48 @@ impl IdentifyScratch {
     }
 }
 
+/// Sample rate of the synthesized commanded-wave reference. Well above the
+/// smallest window the catalogue's probes can resolve (10 ms).
+const SYNTH_REF_HZ: f64 = 4000.0;
+
+/// Fig. 12's "commanded square wave" reference: the §4.3 estimator
+/// z-scores both series (shape-only, affine-invariant), so a unit-amplitude
+/// 50%-duty wave at the probe period stands in for the PMD trace when a
+/// stream carries no reference capture (recorded logs).
+fn commanded_wave_into(period: f64, cycles: usize, out: &mut Vec<f32>) {
+    out.clear();
+    let n = (period * cycles as f64 * SYNTH_REF_HZ).round() as usize;
+    let dt = 1.0 / SYNTH_REF_HZ;
+    for i in 0..n {
+        let phase = (i as f64 * dt) % period;
+        out.push(if phase < 0.5 * period { 1.0 } else { 0.0 });
+    }
+}
 
 /// Identify one node's sensor from its polled readings and its PMD
 /// reference capture (simulation-side truth stand-in for the §4.3
-/// "commanded square wave" reference).
+/// "commanded square wave" reference). Equivalent to
+/// [`identify_epoch`] at origin 0 with a reference present.
 pub fn identify(
     points: &[(f64, f64)],
     pmd: TraceView<'_>,
     sched: &ProbeSchedule,
+    scratch: &mut IdentifyScratch,
+) -> SensorIdentity {
+    identify_epoch(points, Some(pmd), sched, 0.0, scratch)
+}
+
+/// Identify one sensor epoch: `points` is the epoch's reading slice,
+/// `origin` the time its calibration schedule started (0 for the stream
+/// head; the detected post-restart origin for later epochs), and `pmd` the
+/// reference capture when one exists (`None` for recorded logs — the
+/// commanded probe wave is synthesized as the reference instead, and RC
+/// transients cannot be distinguished from board-limited rises).
+pub fn identify_epoch(
+    points: &[(f64, f64)],
+    pmd: Option<TraceView<'_>>,
+    sched: &ProbeSchedule,
+    origin: f64,
     scratch: &mut IdentifyScratch,
 ) -> SensorIdentity {
     if points.len() < 20 {
@@ -198,7 +257,7 @@ pub fn identify(
     scratch.deltas.clear();
     let mut last_change_t = None;
     let mut prev: Option<f64> = None;
-    let (u_lo, u_hi) = (sched.update_start + 0.4, sched.update_end());
+    let (u_lo, u_hi) = (origin + sched.update_start + 0.4, origin + sched.update_end());
     for &(t, w) in points.iter().filter(|p| p.0 >= u_lo && p.0 <= u_hi) {
         if let Some(pw) = prev {
             if (w - pw).abs() >= CHANGE_EPS {
@@ -224,7 +283,7 @@ pub fn identify(
     let update_s = median(&scratch.deltas);
 
     // --- §4.2: transient classification over the step probe ---
-    let transient = classify_transient(points, pmd, sched, scratch);
+    let transient = classify_transient(points, pmd, sched, origin, scratch);
     if let Some(tr) = transient {
         if tr.is_rc {
             return SensorIdentity {
@@ -249,10 +308,20 @@ pub fn identify(
 
     // --- §4.3: averaging window from the aliased wave whose period sits
     // at ~3/4 of the identified update period ---
-    let (seg_t0, seg_t1) = if update_s < 0.045 {
-        (sched.w_fast_start, sched.w_fast_end())
+    let (seg_t0, seg_t1, period, cycles) = if update_s < 0.045 {
+        (
+            origin + sched.w_fast_start,
+            origin + sched.w_fast_end(),
+            sched.w_fast_period,
+            sched.w_fast_cycles,
+        )
     } else {
-        (sched.w_slow_start, sched.w_slow_end())
+        (
+            origin + sched.w_slow_start,
+            origin + sched.w_slow_end(),
+            sched.w_slow_period,
+            sched.w_slow_cycles,
+        )
     };
     scratch.observed.clear();
     let mut prev = f64::NAN;
@@ -264,22 +333,27 @@ pub fn identify(
         }
         prev = w;
     }
-    let window_s = if scratch.observed.len() >= 16 && !pmd.samples.is_empty() {
-        let i0 = pmd.index_of(seg_t0);
-        let i1 = pmd.index_of(seg_t1);
-        let seg_view = TraceView {
-            hz: pmd.hz,
-            t0: pmd.t0 + i0 as f64 * pmd.dt(),
-            samples: &pmd.samples[i0..=i1],
+    let window_s = if scratch.observed.len() >= 16 {
+        let cfg = EstimatorConfig { update_period_s: update_s, discard_s: 1.0, grid: 32 };
+        let est = match pmd {
+            Some(pmd) if !pmd.samples.is_empty() => {
+                let i0 = pmd.index_of(seg_t0);
+                let i1 = pmd.index_of(seg_t1);
+                let seg_view = TraceView {
+                    hz: pmd.hz,
+                    t0: pmd.t0 + i0 as f64 * pmd.dt(),
+                    samples: &pmd.samples[i0..=i1],
+                };
+                estimate_window_view(seg_view, &scratch.observed, cfg, &mut scratch.win)
+            }
+            _ => {
+                commanded_wave_into(period, cycles, &mut scratch.synth);
+                let seg_view =
+                    TraceView { hz: SYNTH_REF_HZ, t0: seg_t0, samples: &scratch.synth };
+                estimate_window_view(seg_view, &scratch.observed, cfg, &mut scratch.win)
+            }
         };
-        estimate_window_view(
-            seg_view,
-            &scratch.observed,
-            EstimatorConfig { update_period_s: update_s, discard_s: 1.0, grid: 32 },
-            &mut scratch.win,
-        )
-        .map(|e| e.window_s)
-        .filter(|&w| w > 0.0 && w <= 4.0 * update_s)
+        est.map(|e| e.window_s).filter(|&w| w > 0.0 && w <= 4.0 * update_s)
     } else {
         None
     };
@@ -304,56 +378,23 @@ struct Transient {
 /// than the board's own (Kepler's τ ≈ 80 ms exponential stretches the
 /// 10→90% rise to ≈ 180 ms, while a window ≤ update boxcar publishes the
 /// full swing within about one update period); a 1 s-window boxcar
-/// (rise > 0.6 s) is *not* RC — that's Fig. 7 case 3 vs case 4.
+/// (rise > 0.6 s) is *not* RC — that's Fig. 7 case 3 vs case 4. Without a
+/// reference (`pmd` = `None`) the board's own rise is unobservable, so the
+/// smi-side rise is measured on its own axis and RC is never flagged.
 fn classify_transient(
     points: &[(f64, f64)],
-    pmd: TraceView<'_>,
+    pmd: Option<TraceView<'_>>,
     sched: &ProbeSchedule,
+    origin: f64,
     scratch: &mut IdentifyScratch,
 ) -> Option<Transient> {
-    // PMD-side (actual) rise, smoothed by a 10 ms window. Only the step
-    // probe (the first ~step_end seconds) is ever queried, so the prefix
-    // is built over a truncated head view rather than the whole capture.
-    if pmd.samples.is_empty() {
-        return None;
-    }
-    let head_end = pmd.index_of(sched.step_end + 0.5);
-    let head = TraceView { hz: pmd.hz, t0: pmd.t0, samples: &pmd.samples[..=head_end] };
-    head.prefix_sums_into(&mut scratch.pmd_prefix);
-    let smooth = |t: f64| head.window_mean_with(&scratch.pmd_prefix, t, 0.01);
-    let p_lo = smooth(sched.step_t - 0.1);
-    let p_hi = smooth(sched.step_end - 0.5);
-    if p_hi - p_lo < 1.0 {
-        return None; // degenerate step
-    }
-
-    // 10→90% crossing times on the actual power axis
-    let rise = |f: &dyn Fn(f64) -> f64| -> Option<f64> {
-        let p10 = p_lo + 0.1 * (p_hi - p_lo);
-        let p90 = p_lo + 0.9 * (p_hi - p_lo);
-        let mut t10 = None;
-        let mut t = sched.step_t - 0.05;
-        while t < sched.step_end {
-            let p = f(t);
-            if t10.is_none() && p >= p10 {
-                t10 = Some(t);
-            }
-            if p >= p90 {
-                return t10.map(|a| t - a);
-            }
-            t += 0.005;
-        }
-        None
-    };
-    let actual_rise_s = rise(&smooth)?;
-
-    // smi-side rise from the polled readings (zero-order hold)
+    // smi-side step levels: medians of the pre-step idle and the step top
     scratch.pre.clear();
     scratch.post.clear();
     for &(t, w) in points {
-        if t >= 0.3 && t < sched.step_t - 0.1 {
+        if t >= origin + 0.3 && t < origin + sched.step_t - 0.1 {
             scratch.pre.push(w);
-        } else if t > sched.step_end - 2.0 && t < sched.step_end - 0.5 {
+        } else if t > origin + sched.step_end - 2.0 && t < origin + sched.step_end - 0.5 {
             scratch.post.push(w);
         }
     }
@@ -373,22 +414,179 @@ fn classify_transient(
             points[idx - 1].1
         }
     };
+
+    // 10→90% crossing times of `f` between thresholds derived from (lo, hi)
+    let rise = |lo: f64, hi: f64, f: &dyn Fn(f64) -> f64| -> Option<f64> {
+        let p10 = lo + 0.1 * (hi - lo);
+        let p90 = lo + 0.9 * (hi - lo);
+        let mut t10 = None;
+        let mut t = origin + sched.step_t - 0.05;
+        while t < origin + sched.step_end {
+            let p = f(t);
+            if t10.is_none() && p >= p10 {
+                t10 = Some(t);
+            }
+            if p >= p90 {
+                return t10.map(|a| t - a);
+            }
+            t += 0.005;
+        }
+        None
+    };
+
+    let Some(pmd) = pmd.filter(|v| !v.samples.is_empty()) else {
+        // reference-free: the smi rise on its own axis; RC undecidable
+        if s_hi - s_lo < 1.0 {
+            return None; // degenerate step
+        }
+        let smi_rise_s = rise(s_lo, s_hi, &smi_at)?;
+        return Some(Transient { smi_rise_s, is_rc: false });
+    };
+
+    // PMD-side (actual) rise, smoothed by a 10 ms window. Only the step
+    // probe (~the epoch's first step_end seconds) is ever queried, so the
+    // prefix is built over a truncated slice rather than the whole capture.
+    let head_start = pmd.index_of(origin);
+    let head_end = pmd.index_of(origin + sched.step_end + 0.5);
+    let head = TraceView {
+        hz: pmd.hz,
+        t0: pmd.t0 + head_start as f64 * pmd.dt(),
+        samples: &pmd.samples[head_start..=head_end],
+    };
+    head.prefix_sums_into(&mut scratch.pmd_prefix);
+    let smooth = |t: f64| head.window_mean_with(&scratch.pmd_prefix, t, 0.01);
+    let p_lo = smooth(origin + sched.step_t - 0.1);
+    let p_hi = smooth(origin + sched.step_end - 0.5);
+    if p_hi - p_lo < 1.0 {
+        return None; // degenerate step
+    }
+
+    let actual_rise_s = rise(p_lo, p_hi, &smooth)?;
+
     // rescale the smi signal onto the actual power axis and reuse the riser
     let scaled = |t: f64| p_lo + (smi_at(t) - s_lo) / (s_hi - s_lo) * (p_hi - p_lo);
-    let smi_rise_s = rise(&scaled)?;
+    let smi_rise_s = rise(p_lo, p_hi, &scaled)?;
 
     let lagging = actual_rise_s < 0.5 * smi_rise_s && actual_rise_s < 0.09;
     let is_rc = smi_rise_s > 0.13 && smi_rise_s <= 0.6 && lagging;
     Some(Transient { smi_rise_s, is_rc })
 }
 
+/// A reading gap that signals a driver restart. Far above any poll jitter
+/// or update period in the catalogue (the slowest sensors republish every
+/// 100 ms), and below the ~1 s a driver restart keeps the stream down.
+/// Shorter outages are treated as plain collection gaps, not restarts.
+/// *Longer* collection outages are indistinguishable from restarts from
+/// the stream alone (the phase is unobservable either way, §4.3), so they
+/// also open a new epoch; the ingest path's identity reconciliation keeps
+/// the previously identified window unless the fresh calibration
+/// confirms a change, so a misclassified outage costs a re-check, not a
+/// corrupted account.
+pub const DRIVER_RESTART_GAP_S: f64 = 0.75;
+
+/// Incremental driver-restart detector: feed reading timestamps in stream
+/// order; a gap of at least `gap_s` between consecutive readings starts a
+/// new sensor epoch (the §4.3 re-randomised boot phase means everything
+/// identified before the gap is stale). O(1) state, so the ingest path can
+/// run it as batches arrive.
+#[derive(Debug, Clone)]
+pub struct EpochTracker {
+    gap_s: f64,
+    last_t: Option<f64>,
+    epochs: usize,
+}
+
+impl Default for EpochTracker {
+    fn default() -> Self {
+        EpochTracker::new(DRIVER_RESTART_GAP_S)
+    }
+}
+
+impl EpochTracker {
+    pub fn new(gap_s: f64) -> Self {
+        EpochTracker { gap_s, last_t: None, epochs: 0 }
+    }
+
+    /// Observe the next reading's timestamp. Returns `Some(t)` when this
+    /// reading is the first of a *new* epoch (a restart-sized gap precedes
+    /// it); the stream's first reading opens epoch 0 silently.
+    pub fn observe(&mut self, t: f64) -> Option<f64> {
+        let boundary = match self.last_t {
+            Some(last) => t - last >= self.gap_s,
+            None => {
+                self.epochs = 1;
+                false
+            }
+        };
+        self.last_t = Some(t);
+        if boundary {
+            self.epochs += 1;
+            Some(t)
+        } else {
+            None
+        }
+    }
+
+    /// Epochs seen so far (0 before any reading).
+    pub fn epochs_seen(&self) -> usize {
+        self.epochs
+    }
+}
+
+/// Batch form of [`EpochTracker`]: start indices of each epoch in
+/// `points` (cleared into `out`; `out[0] == 0` whenever the stream is
+/// non-empty).
+pub fn detect_epochs(points: &[(f64, f64)], gap_s: f64, out: &mut Vec<usize>) {
+    out.clear();
+    if points.is_empty() {
+        return;
+    }
+    out.push(0);
+    let mut tracker = EpochTracker::new(gap_s);
+    for (i, &(t, _)) in points.iter().enumerate() {
+        if tracker.observe(t).is_some() {
+            out.push(i);
+        }
+    }
+}
+
+/// One sensor epoch's identification outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpochIdentity {
+    /// First reading time of the epoch (0 for the stream head).
+    pub t0: f64,
+    pub identity: SensorIdentity,
+}
+
 /// One registered node.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct NodeIdentity {
     pub node_id: usize,
     pub model: &'static str,
     pub generation: Generation,
+    /// The *current* (latest-epoch) identity — what the accountant applies.
     pub identity: SensorIdentity,
+    /// Per-epoch identification history; more than one entry means the
+    /// stream carried a driver restart and the node re-calibrated.
+    pub epochs: Vec<EpochIdentity>,
+}
+
+impl NodeIdentity {
+    /// A single-epoch entry (no restart observed).
+    pub fn single(
+        node_id: usize,
+        model: &'static str,
+        generation: Generation,
+        identity: SensorIdentity,
+    ) -> Self {
+        NodeIdentity {
+            node_id,
+            model,
+            generation,
+            identity,
+            epochs: vec![EpochIdentity { t0: 0.0, identity }],
+        }
+    }
 }
 
 /// Fleet-wide identification registry, scorable against the encoded
@@ -424,6 +622,13 @@ impl Registry {
 
     pub fn get(&self, node_id: usize) -> Option<&NodeIdentity> {
         self.entries.iter().find(|e| e.node_id == node_id)
+    }
+
+    /// Nodes that re-identified mid-stream (≥ 2 sensor epochs — a
+    /// restart-sized gap was detected; see [`DRIVER_RESTART_GAP_S`] for
+    /// why long plain outages count too).
+    pub fn recalibrated(&self) -> usize {
+        self.entries.iter().filter(|e| e.epochs.len() > 1).count()
     }
 
     /// Whether `entry` matches the encoded ground truth for
@@ -596,29 +801,125 @@ mod tests {
     #[test]
     fn registry_accuracy_counts_generations() {
         let mut reg = Registry::default();
-        reg.insert(NodeIdentity {
-            node_id: 1,
-            model: "A100 PCIe-40G",
-            generation: Generation::AmpereGa100,
-            identity: SensorIdentity {
+        reg.insert(NodeIdentity::single(
+            1,
+            "A100 PCIe-40G",
+            Generation::AmpereGa100,
+            SensorIdentity {
                 class: SensorClass::Boxcar,
                 update_s: Some(0.1),
                 window_s: Some(0.026),
                 smi_rise_s: Some(0.05),
             },
-        });
-        reg.insert(NodeIdentity {
-            node_id: 0,
-            model: "Tesla C2050",
-            generation: Generation::Fermi1,
-            identity: SensorIdentity::unsupported(),
-        });
+        ));
+        reg.insert(NodeIdentity::single(
+            0,
+            "Tesla C2050",
+            Generation::Fermi1,
+            SensorIdentity::unsupported(),
+        ));
+        assert_eq!(reg.recalibrated(), 0);
         reg.finalize();
         assert_eq!(reg.entries[0].node_id, 0);
         let acc = reg.accuracy(PowerField::Instant, DriverEpoch::Post530);
         assert_eq!(acc.len(), 2);
         // Fermi1 is unmeasurable -> excluded; A100 correct
         assert!((reg.overall_accuracy(PowerField::Instant, DriverEpoch::Post530) - 1.0).abs() < 1e-9);
+    }
+
+    /// Like `identify_model`, but returns the raw poll stream + PMD so the
+    /// epoch/offset/no-reference variants can be exercised on it.
+    fn poll_model(
+        model: &str,
+        origin: f64,
+        seed: u64,
+    ) -> (Vec<(f64, f64)>, MeasureScratch, crate::measure::CaptureMeta) {
+        let sched = ProbeSchedule::default();
+        let duration = origin + sched.calibration_end() + 0.5;
+        let device = GpuDevice::new(find_model(model).unwrap(), 0, seed);
+        let rig = MeasurementRig::new(
+            device,
+            DriverEpoch::Post530,
+            PowerField::Instant,
+            seed ^ 0x7E1E,
+        );
+        let mut act = ActivitySignal::idle();
+        sched.append_activity_at(origin, &mut act);
+        let mut scratch = MeasureScratch::new();
+        let boot = seed ^ 0xB007;
+        let meta = capture_streaming(&rig, &act, 0.0, duration, boot, &mut scratch);
+        let mut points = Vec::new();
+        poll_readings(
+            &scratch.readings,
+            Rng::new(boot ^ 0x5149),
+            0.002,
+            0.15,
+            0.0,
+            duration,
+            &mut points,
+        );
+        (points, scratch, meta)
+    }
+
+    /// The no-reference path (recorded logs): the commanded probe wave
+    /// stands in for the PMD and still recovers the A100's part-time
+    /// window (Fig. 12's commanded-wave observation).
+    #[test]
+    fn identify_without_reference_recovers_a100_window() {
+        let sched = ProbeSchedule::default();
+        let (points, _scratch, _meta) = poll_model("A100 PCIe-40G", 0.0, 31);
+        let mut id_scratch = IdentifyScratch::new();
+        let id = identify_epoch(&points, None, &sched, 0.0, &mut id_scratch);
+        assert_eq!(id.class, SensorClass::Boxcar, "{id:?}");
+        let u = id.update_s.unwrap();
+        assert!((u - 0.1).abs() < 0.02, "update {u}");
+        let w = id.window_s.expect("commanded-wave reference must yield a window");
+        assert!(w > 0.008 && w < 0.08, "window {w} should be near the true 25 ms");
+        assert!(id.coverage_or_full() < 0.9, "part-time attention visible without a PMD");
+    }
+
+    /// Identification is origin-relative: probes run at t = 6 s identify
+    /// the same sensor class/update as probes at t = 0 (re-calibration
+    /// after a restart relies on this).
+    #[test]
+    fn identify_epoch_honours_a_shifted_origin() {
+        let sched = ProbeSchedule::default();
+        let origin = 6.0;
+        let (points, scratch, meta) = poll_model("A100 PCIe-40G", origin, 32);
+        let mut id_scratch = IdentifyScratch::new();
+        let id =
+            identify_epoch(&points, Some(meta.pmd_view(&scratch.pmd)), &sched, origin, &mut id_scratch);
+        assert_eq!(id.class, SensorClass::Boxcar, "{id:?}");
+        let u = id.update_s.unwrap();
+        assert!((u - 0.1).abs() < 0.02, "update {u}");
+        let w = id.window_s.expect("window identified at shifted origin");
+        assert!((w - 0.025).abs() < 0.012, "window {w}");
+    }
+
+    #[test]
+    fn epoch_tracker_splits_on_restart_sized_gaps() {
+        let mut pts: Vec<(f64, f64)> = (0..100).map(|i| (i as f64 * 0.01, 100.0)).collect();
+        // 1 s hole starting at t = 1.0, then readings resume
+        pts.extend((0..50).map(|i| (2.0 + i as f64 * 0.01, 120.0)));
+        let mut out = Vec::new();
+        detect_epochs(&pts, DRIVER_RESTART_GAP_S, &mut out);
+        assert_eq!(out, vec![0, 100]);
+
+        // sub-threshold gaps are plain collection hiccups, not restarts
+        let mut short: Vec<(f64, f64)> = (0..100).map(|i| (i as f64 * 0.01, 100.0)).collect();
+        short.extend((0..50).map(|i| (1.5 + i as f64 * 0.01, 120.0)));
+        detect_epochs(&short, DRIVER_RESTART_GAP_S, &mut out);
+        assert_eq!(out, vec![0]);
+
+        detect_epochs(&[], DRIVER_RESTART_GAP_S, &mut out);
+        assert!(out.is_empty());
+
+        let mut tracker = EpochTracker::default();
+        assert_eq!(tracker.epochs_seen(), 0);
+        assert_eq!(tracker.observe(0.0), None);
+        assert_eq!(tracker.observe(0.01), None);
+        assert_eq!(tracker.observe(1.5), Some(1.5));
+        assert_eq!(tracker.epochs_seen(), 2);
     }
 
     #[test]

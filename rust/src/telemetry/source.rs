@@ -1,0 +1,548 @@
+//! The unified reading-source layer: everything the telemetry service can
+//! ingest, behind one chunked, allocation-free, scratch-reusing contract.
+//!
+//! The service's producer loop (`ingest::produce_source`) no longer
+//! knows where readings come from — it drives any [`ReadingSource`]:
+//!
+//! * [`SimSource`] — the original behaviour: simulate a fleet node through
+//!   the chunked `capture_streaming` pipeline (10 kHz ground truth never
+//!   materialised, per-worker scratch arenas reused node to node,
+//!   including the GH200/superchip generations in the catalogue), poll it
+//!   like `smi::Poller`, and expose the PMD capture as the truth
+//!   reference. With a restart plan it captures the observation as a
+//!   *sequence of sensor epochs*, each with a freshly randomised boot
+//!   phase (§4.3's unobservable averaging start, re-rolled by a driver
+//!   restart);
+//! * [`ReplaySource`] — a *recorded* nvidia-smi `--query-gpu --format=csv`
+//!   session parsed by [`crate::smi::cli::parse_log`] (which round-trips
+//!   the crate's own emitter). No PMD exists for a recorded log, so
+//!   identification falls back to the commanded-wave reference and the
+//!   accounts carry no truth column — exactly a real collector's epistemic
+//!   position, which is the paper's point;
+//! * [`FaultSource`] — wraps any source and applies the
+//!   [`crate::sim::faults`] transforms *streamingly* (per chunk, O(1)
+//!   state): independent dropout, outage windows, stuck-value windows, and
+//!   the ~[`RESTART_OUTAGE_S`] blackout surrounding each driver restart.
+//!
+//! Determinism: every source is a pure function of its construction
+//! inputs (device/seed/plan or log text), so the service stays bit-for-bit
+//! reproducible across worker/shard/batch/queue configurations.
+
+use crate::measure::{capture_streaming_append, CaptureMeta, MeasureScratch, MeasurementRig};
+use crate::rng::Rng;
+use crate::sim::faults::{Dropout, FaultWindow, StuckHold};
+use crate::sim::profile::{find_model, DriverEpoch, Generation, PowerField};
+use crate::sim::trace::TraceView;
+use crate::sim::GpuDevice;
+use crate::smi::cli::parse_log;
+use crate::smi::poll_readings;
+
+use super::ingest::{epoch_boot_seed, node_activity_with_restarts, node_boot_seed, node_rig_seed};
+use super::registry::ProbeSchedule;
+
+/// How long a driver restart keeps the reading stream down, seconds. Above
+/// [`super::registry::DRIVER_RESTART_GAP_S`], so the epoch tracker always
+/// sees the signature.
+pub const RESTART_OUTAGE_S: f64 = 1.0;
+
+/// Static metadata a source announces ahead of its reading stream.
+#[derive(Debug, Clone, Copy)]
+pub struct SourceInfo {
+    pub node_id: usize,
+    pub model: &'static str,
+    pub generation: Generation,
+}
+
+impl Default for SourceInfo {
+    fn default() -> Self {
+        SourceInfo { node_id: 0, model: "unprepared", generation: Generation::Fermi1 }
+    }
+}
+
+/// A chunked producer of `(t, W)` power readings for one node, plus the
+/// ground-truth reference when one exists. The same contract as the
+/// streaming capture path: `fill` appends in non-decreasing time order
+/// into a caller-owned buffer, returns the count appended, and 0 means
+/// exhausted.
+pub trait ReadingSource {
+    /// Node metadata (valid after the source is prepared).
+    fn info(&self) -> SourceInfo;
+
+    /// Append up to `max` readings to `out`; 0 = stream complete.
+    fn fill(&mut self, out: &mut Vec<(f64, f64)>, max: usize) -> usize;
+
+    /// The PMD reference capture, when the source has one (simulated
+    /// nodes). `None` for recorded logs: identification then synthesizes
+    /// the commanded-wave reference and the truth account stays zero.
+    fn truth(&self) -> Option<TraceView<'_>>;
+}
+
+/// Simulated fleet node as a [`ReadingSource`]. One instance per worker,
+/// re-`prepare`d for each claimed node so every internal buffer (capture
+/// scratch, poll points, PMD samples) is reused — the O(1) amortised
+/// allocation per reading pinned by the hotpath benchmark.
+#[derive(Debug, Default)]
+pub struct SimSource {
+    pub(crate) measure: MeasureScratch,
+    info: SourceInfo,
+    meta: Option<CaptureMeta>,
+    pos: usize,
+}
+
+impl SimSource {
+    pub fn new() -> Self {
+        SimSource::default()
+    }
+
+    /// Realise one node's observation: calibration probes + production
+    /// workload, captured through the chunked streaming pipeline and
+    /// polled at `poll_period_s`. `restarts` (already snapped/filtered —
+    /// see [`FaultPlan::effective_restarts`]) split the capture into
+    /// sensor epochs: each restart re-rolls the boot phase and schedules a
+    /// re-calibration [`RESTART_OUTAGE_S`] after it. With no restarts this
+    /// is bit-for-bit the service's original single-epoch behaviour.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prepare(
+        &mut self,
+        device: GpuDevice,
+        node_id: usize,
+        driver: DriverEpoch,
+        field: PowerField,
+        service_seed: u64,
+        poll_period_s: f64,
+        sched: &ProbeSchedule,
+        duration_s: f64,
+        restarts: &[f64],
+    ) {
+        self.info = SourceInfo {
+            node_id,
+            model: device.model.name,
+            generation: device.model.generation,
+        };
+        let rig_seed = node_rig_seed(service_seed, node_id);
+        let boot_seed = node_boot_seed(rig_seed);
+        let rig = MeasurementRig::new(device, driver, field, rig_seed);
+
+        let mut activity = std::mem::take(&mut self.measure.activity);
+        node_activity_with_restarts(sched, node_id, duration_s, restarts, &mut activity);
+
+        // one capture segment per sensor epoch; readings and PMD samples
+        // concatenate in the shared scratch (restart times sit on the PMD
+        // sample grid, so the PMD buffer stays one uniform trace)
+        self.measure.readings.clear();
+        self.measure.pmd.clear();
+        let mut meta = None;
+        let mut seg_t0 = 0.0;
+        for (k, &seg_t1) in restarts.iter().chain(std::iter::once(&duration_s)).enumerate() {
+            let m = capture_streaming_append(
+                &rig,
+                &activity,
+                seg_t0,
+                seg_t1,
+                epoch_boot_seed(boot_seed, k),
+                &mut self.measure,
+            );
+            if meta.is_none() {
+                meta = Some(m);
+            }
+            seg_t0 = seg_t1;
+        }
+        self.measure.activity = activity;
+
+        self.measure.points.clear();
+        poll_readings(
+            &self.measure.readings,
+            Rng::new(boot_seed ^ 0x5149),
+            poll_period_s,
+            0.15,
+            0.0,
+            duration_s,
+            &mut self.measure.points,
+        );
+        self.meta = meta;
+        self.pos = 0;
+    }
+}
+
+impl ReadingSource for SimSource {
+    fn info(&self) -> SourceInfo {
+        self.info
+    }
+
+    fn fill(&mut self, out: &mut Vec<(f64, f64)>, max: usize) -> usize {
+        let end = (self.pos + max).min(self.measure.points.len());
+        out.extend_from_slice(&self.measure.points[self.pos..end]);
+        let n = end - self.pos;
+        self.pos = end;
+        n
+    }
+
+    fn truth(&self) -> Option<TraceView<'_>> {
+        self.meta.as_ref().map(|m| m.pmd_view(&self.measure.pmd))
+    }
+}
+
+/// A recorded nvidia-smi CSV session as a [`ReadingSource`]. The model is
+/// resolved against the catalogue by the log's `name` column; unrecognised
+/// models register under an unmeasurable generation so they never skew the
+/// identification-accuracy score.
+#[derive(Debug, Default)]
+pub struct ReplaySource {
+    points: Vec<(f64, f64)>,
+    info: SourceInfo,
+    pos: usize,
+}
+
+impl ReplaySource {
+    pub fn new() -> Self {
+        ReplaySource::default()
+    }
+
+    /// Parse one recorded log (see the `smi::cli` schema) and stage it as
+    /// node `node_id`'s stream. Replays the first power column present;
+    /// `[N/A]` rows are skipped like unsupported live queries. Recorded
+    /// logs are assumed to start their calibration prelude at t = 0.
+    pub fn prepare_from_log(&mut self, node_id: usize, text: &str) -> Result<(), String> {
+        let log = parse_log(text)?;
+        self.prepare_from_parsed(node_id, &log)
+    }
+
+    /// [`Self::prepare_from_log`] over an already-parsed session (the
+    /// replay service parses each log exactly once, up front).
+    pub fn prepare_from_parsed(
+        &mut self,
+        node_id: usize,
+        log: &crate::smi::cli::SmiLog,
+    ) -> Result<(), String> {
+        let field = log
+            .first_power_field()
+            .ok_or("log has no power column to replay")?;
+        log.power_series_into(&field, &mut self.points)?;
+        let (model, generation) = match log.model_name().and_then(find_model) {
+            Some(m) => (m.name, m.generation),
+            // Fermi 1.0 pipelines are unmeasurable -> excluded from the
+            // registry accuracy metric rather than mis-scored
+            None => ("unrecognized", Generation::Fermi1),
+        };
+        self.info = SourceInfo { node_id, model, generation };
+        self.pos = 0;
+        Ok(())
+    }
+}
+
+impl ReadingSource for ReplaySource {
+    fn info(&self) -> SourceInfo {
+        self.info
+    }
+
+    fn fill(&mut self, out: &mut Vec<(f64, f64)>, max: usize) -> usize {
+        let end = (self.pos + max).min(self.points.len());
+        out.extend_from_slice(&self.points[self.pos..end]);
+        let n = end - self.pos;
+        self.pos = end;
+        n
+    }
+
+    fn truth(&self) -> Option<TraceView<'_>> {
+        None
+    }
+}
+
+/// What can go wrong with a node's stream during one observation.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Independent per-reading dropout probability.
+    pub dropout: f64,
+    /// Collection outages (readings inside are lost).
+    pub outages: Vec<FaultWindow>,
+    /// Stuck-sensor windows (the last pre-window value is held).
+    pub stuck: Vec<FaultWindow>,
+    /// Driver restart times: the stream goes down for
+    /// [`RESTART_OUTAGE_S`] and the sensor reboots with a fresh epoch.
+    pub restarts: Vec<f64>,
+}
+
+impl FaultPlan {
+    /// Nothing planned?
+    pub fn is_empty(&self) -> bool {
+        self.dropout <= 0.0
+            && self.outages.is_empty()
+            && self.stuck.is_empty()
+            && self.restarts.is_empty()
+    }
+
+    /// The restart times the service will actually apply: snapped to the
+    /// PMD sample grid ([`crate::pmd::PMD_SAMPLE_HZ`], so per-epoch
+    /// captures tile exactly), sorted, deduplicated, and dropped when they
+    /// leave no room to finish the preceding calibration or to
+    /// re-calibrate before `duration_s` ends.
+    pub fn effective_restarts(&self, sched: &ProbeSchedule, duration_s: f64) -> Vec<f64> {
+        let grid = crate::pmd::PMD_SAMPLE_HZ;
+        let mut rs: Vec<f64> =
+            self.restarts.iter().map(|&r| (r * grid).round() / grid).collect();
+        rs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut out: Vec<f64> = Vec::new();
+        let mut min_t = sched.calibration_end();
+        for r in rs {
+            if r >= min_t && r + RESTART_OUTAGE_S + sched.calibration_end() <= duration_s {
+                out.push(r);
+                min_t = r + RESTART_OUTAGE_S + sched.calibration_end();
+            }
+        }
+        out
+    }
+}
+
+/// Streaming fault injector around any [`ReadingSource`]: pulls chunks
+/// from the inner source and applies the plan's transforms per reading,
+/// in stream order. The ground-truth reference passes through untouched —
+/// faults corrupt the *collected* stream, not the board's physics.
+#[derive(Debug)]
+pub struct FaultSource<S> {
+    inner: S,
+    plan: FaultPlan,
+    /// Snapped restart times (blackout windows derive from these).
+    restarts: Vec<f64>,
+    dropout: Dropout,
+    stuck: Vec<StuckHold>,
+    staging: Vec<(f64, f64)>,
+}
+
+impl<S> FaultSource<S> {
+    /// Wrap `inner`; call [`Self::reset`] with a per-node seed before each
+    /// node so the dropout sequence and stuck state are node-deterministic.
+    pub fn new(inner: S, plan: FaultPlan) -> Self {
+        let dropout = Dropout::new(plan.dropout, 0);
+        let stuck = plan.stuck.iter().map(|&w| StuckHold::new(w)).collect();
+        FaultSource { inner, plan, restarts: Vec::new(), dropout, stuck, staging: Vec::new() }
+    }
+
+    /// The wrapped source (to prepare it for the next node).
+    pub fn inner_mut(&mut self) -> &mut S {
+        &mut self.inner
+    }
+
+    /// Re-arm the per-node fault state: a fresh dropout RNG from `seed`,
+    /// fresh stuck windows, and the effective restart blackouts.
+    pub fn reset(&mut self, seed: u64, restarts: &[f64]) {
+        self.dropout = Dropout::new(self.plan.dropout, seed);
+        self.stuck.clear();
+        self.stuck.extend(self.plan.stuck.iter().map(|&w| StuckHold::new(w)));
+        self.restarts.clear();
+        self.restarts.extend_from_slice(restarts);
+    }
+
+    fn blacked_out(&self, t: f64) -> bool {
+        self.plan.outages.iter().any(|w| w.contains(t))
+            || self
+                .restarts
+                .iter()
+                .any(|&r| FaultWindow::new(r, RESTART_OUTAGE_S).contains(t))
+    }
+}
+
+impl<S: ReadingSource> ReadingSource for FaultSource<S> {
+    fn info(&self) -> SourceInfo {
+        self.inner.info()
+    }
+
+    /// Pull from the inner source until at least one reading survives the
+    /// fault transforms (or the inner stream ends) — a fully-dropped chunk
+    /// must not read as end-of-stream.
+    fn fill(&mut self, out: &mut Vec<(f64, f64)>, max: usize) -> usize {
+        let before = out.len();
+        while out.len() == before {
+            self.staging.clear();
+            if self.inner.fill(&mut self.staging, max) == 0 {
+                break;
+            }
+            for i in 0..self.staging.len() {
+                let (t, w) = self.staging[i];
+                if self.blacked_out(t) {
+                    continue;
+                }
+                if !self.dropout.keep() {
+                    continue;
+                }
+                let mut v = w;
+                for hold in &mut self.stuck {
+                    v = hold.apply(t, v);
+                }
+                out.push((t, v));
+            }
+        }
+        out.len() - before
+    }
+
+    fn truth(&self) -> Option<TraceView<'_>> {
+        self.inner.truth()
+    }
+}
+
+/// The service's source selection (`repro telemetry --source ...`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub enum ServiceSource {
+    /// Simulated fleet nodes (the original service).
+    #[default]
+    Sim,
+    /// Simulated nodes behind a streaming fault injector.
+    Faulty(FaultPlan),
+    /// Recorded nvidia-smi CSV logs, one node per log.
+    Replay(Vec<String>),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::faults::{drop_samples, outage, stick_readings};
+    use crate::sim::profile::find_model;
+    use crate::sim::trace::SampleSeries;
+
+    fn a100_source(duration_s: f64, restarts: &[f64]) -> SimSource {
+        let device = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, 5);
+        let mut src = SimSource::new();
+        src.prepare(
+            device,
+            3,
+            DriverEpoch::Post530,
+            PowerField::Instant,
+            2024,
+            0.002,
+            &ProbeSchedule::default(),
+            duration_s,
+            restarts,
+        );
+        src
+    }
+
+    #[test]
+    fn sim_source_streams_the_same_points_for_any_chunk_size() {
+        let sched = ProbeSchedule::default();
+        let duration = sched.calibration_end() + 1.0;
+        let mut a = a100_source(duration, &[]);
+        let mut whole = Vec::new();
+        while a.fill(&mut whole, 10_000) > 0 {}
+        assert!(whole.len() > 1000, "{}", whole.len());
+        assert!(a.truth().is_some());
+
+        let mut b = a100_source(duration, &[]);
+        let mut chunked = Vec::new();
+        while b.fill(&mut chunked, 97) > 0 {}
+        assert_eq!(whole, chunked, "chunk boundaries never change the stream");
+        // preparing again reuses the arenas and reproduces the stream
+        let mut c = a100_source(duration, &[]);
+        let mut again = Vec::new();
+        while c.fill(&mut again, 513) > 0 {}
+        assert_eq!(whole, again);
+    }
+
+    #[test]
+    fn sim_source_restart_rerolls_the_boot_phase() {
+        let sched = ProbeSchedule::default();
+        let cal = sched.calibration_end(); // 25.0 s
+        let restart = cal + 1.0;
+        let duration = restart + RESTART_OUTAGE_S + cal + 1.0;
+        let plan = FaultPlan { restarts: vec![restart], ..Default::default() };
+        let effective = plan.effective_restarts(&sched, duration);
+        assert_eq!(effective.len(), 1);
+
+        let mut plain = a100_source(duration, &[]);
+        let mut with_restart = a100_source(duration, &effective);
+        let mut p0 = Vec::new();
+        let mut p1 = Vec::new();
+        while plain.fill(&mut p0, 8192) > 0 {}
+        while with_restart.fill(&mut p1, 8192) > 0 {}
+        // before the restart the two captures are identical...
+        let pre0: Vec<_> = p0.iter().filter(|p| p.0 < effective[0]).collect();
+        let pre1: Vec<_> = p1.iter().filter(|p| p.0 < effective[0]).collect();
+        assert_eq!(pre0, pre1, "identical until the restart");
+        // ...after it, the re-rolled phase must shift the publication times
+        let post0: Vec<_> = p0.iter().filter(|p| p.0 >= effective[0]).cloned().collect();
+        let post1: Vec<_> = p1.iter().filter(|p| p.0 >= effective[0]).cloned().collect();
+        assert!(!post1.is_empty());
+        assert_ne!(post0, post1, "restart must re-randomise the sensor epoch");
+    }
+
+    #[test]
+    fn effective_restarts_snap_sort_and_filter() {
+        let sched = ProbeSchedule::default();
+        let cal = sched.calibration_end();
+        let plan = FaultPlan {
+            restarts: vec![
+                5.0,               // inside the first calibration: dropped
+                2.0 * cal + 2.0,   // valid
+                cal + 1.000_07,    // valid, snapped to the 0.2 ms grid
+                1000.0,            // past the observation: dropped
+            ],
+            ..Default::default()
+        };
+        let duration = 3.0 * (cal + RESTART_OUTAGE_S) + 10.0;
+        let rs = plan.effective_restarts(&sched, duration);
+        assert_eq!(rs.len(), 2);
+        assert!(rs[0] < rs[1], "sorted");
+        assert!((rs[0] - (cal + 1.0)).abs() < 2e-4, "snapped: {}", rs[0]);
+        // snapped values sit on the 5 kHz grid exactly
+        for r in &rs {
+            assert_eq!((r * 5000.0).round() / 5000.0, *r);
+        }
+        assert!(FaultPlan::default().is_empty());
+        assert!(!plan.is_empty());
+    }
+
+    /// A fault-wrapped source must equal the materialised `sim::faults`
+    /// helpers applied to the clean stream, decision for decision.
+    #[test]
+    fn fault_source_matches_materialised_fault_helpers() {
+        let sched = ProbeSchedule::default();
+        let duration = sched.calibration_end() + 1.0;
+        let mut clean_src = a100_source(duration, &[]);
+        let mut clean = Vec::new();
+        while clean_src.fill(&mut clean, 4096) > 0 {}
+
+        let plan = FaultPlan {
+            dropout: 0.2,
+            outages: vec![FaultWindow::new(3.0, 0.4)],
+            stuck: vec![FaultWindow::new(10.0, 0.5)],
+            restarts: vec![],
+        };
+        let mut faulty = FaultSource::new(a100_source(duration, &[]), plan);
+        faulty.reset(42, &[]);
+        let mut got = Vec::new();
+        while faulty.fill(&mut got, 229) > 0 {}
+
+        // reference: outage first (blackout), then dropout over the
+        // survivors, then the stuck transform — the same order FaultSource
+        // applies per reading
+        let after_outage = outage(&SampleSeries { points: clean }, 3.0, 0.4);
+        let after_drop = drop_samples(&after_outage, 0.2, 42);
+        let want = stick_readings(&after_drop, 10.0, 0.5);
+        assert_eq!(got, want.points);
+        assert!(faulty.truth().is_some(), "faults never touch the reference");
+    }
+
+    #[test]
+    fn replay_source_parses_a_recorded_log() {
+        let text = "timestamp, name, power.draw [W]\n\
+                    0.100, A100 PCIe-40G, 60.00 W\n\
+                    0.200, A100 PCIe-40G, [N/A]\n\
+                    0.300, A100 PCIe-40G, 61.25 W\n";
+        let mut src = ReplaySource::new();
+        src.prepare_from_log(7, text).unwrap();
+        let info = src.info();
+        assert_eq!(info.node_id, 7);
+        assert_eq!(info.model, "A100 PCIe-40G");
+        assert_eq!(info.generation, Generation::AmpereGa100);
+        assert!(src.truth().is_none(), "recorded logs carry no reference");
+        let mut pts = Vec::new();
+        while src.fill(&mut pts, 2) > 0 {}
+        assert_eq!(pts, vec![(0.1, 60.0), (0.3, 61.25)], "[N/A] rows skipped");
+
+        let mut bad = ReplaySource::new();
+        assert!(bad.prepare_from_log(0, "timestamp\n0.1\n").is_err(), "no power column");
+        let unknown = "timestamp, name, power.draw [W]\n0.100, FutureGPU 9000, 60.00 W\n";
+        let mut u = ReplaySource::new();
+        u.prepare_from_log(1, unknown).unwrap();
+        assert_eq!(u.info().model, "unrecognized");
+        assert_eq!(u.info().generation, Generation::Fermi1);
+    }
+}

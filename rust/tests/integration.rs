@@ -289,6 +289,180 @@ fn telemetry_registry_identifies_catalogue_ground_truth() {
     );
 }
 
+/// ISSUE 3 acceptance: the same underlying node observations fed through
+/// `SimSource` and through emit→`ReplaySource` (a recorded nvidia-smi CSV
+/// session of the same capture) agree — naive accounts to CSV
+/// quantisation, corrected accounts within the coverage-derived error
+/// bound — and the recorded stream alone still identifies the A100's
+/// part-time sensor via the commanded-wave reference.
+#[test]
+fn replay_source_reproduces_sim_accounts_within_bound() {
+    use gpupower::smi::cli::{format_log, parse_query};
+    use gpupower::telemetry::{self, ingest, SensorClass, TelemetryConfig};
+
+    let fleet = Fleet::build(FleetConfig {
+        size: 2,
+        models: vec!["A100 PCIe-40G".into()],
+        driver: DriverEpoch::Post530,
+        field: PowerField::Instant,
+        seed: 97,
+    });
+    let cfg = TelemetryConfig { duration_s: 30.0, bucket_s: 2.0, ..Default::default() };
+    let sim = telemetry::run_service(&fleet, &cfg);
+    let duration = sim.duration_s;
+    let sched = sim.schedule;
+
+    // "record" each node: the same capture the service simulated, written
+    // out as a real nvidia-smi CSV session and replayed from text alone
+    let fields = parse_query("timestamp,name,power.draw.instant").unwrap();
+    let mut logs = Vec::new();
+    for node in &fleet.nodes {
+        let rig_seed = ingest::node_rig_seed(cfg.seed, node.id);
+        let boot = ingest::node_boot_seed(rig_seed);
+        let rig = MeasurementRig::new(
+            node.device.clone(),
+            DriverEpoch::Post530,
+            PowerField::Instant,
+            rig_seed,
+        );
+        let mut act = ActivitySignal::idle();
+        ingest::node_activity_into(&sched, node.id, duration, &mut act);
+        let cap = rig.capture(&act, 0.0, duration, boot);
+        logs.push(format_log(&cap.smi, &fields, cfg.poll_period_s, 0.0, duration));
+    }
+    let rep = telemetry::run_replay_service(&logs, &cfg).unwrap();
+    assert_eq!(rep.stats.nodes, 2);
+    assert_eq!(rep.accounts.nodes.len(), 2);
+
+    // identification from the recorded text alone (no PMD exists)
+    for e in &rep.registry.entries {
+        assert_eq!(e.identity.class, SensorClass::Boxcar, "{e:?}");
+        let u = e.identity.update_s.unwrap();
+        assert!((u - 0.1).abs() < 0.02, "update {u}");
+        let w = e.identity.window_s.expect("commanded-wave reference must yield a window");
+        assert!(w > 0.008 && w < 0.08, "window {w} should be near the true 25 ms");
+        assert!(e.identity.coverage_or_full() < 0.9, "part-time attention visible");
+    }
+
+    let whole_sim = sim.fleet_energy(0.0, duration);
+    let whole_rep = rep.fleet_energy(0.0, duration);
+    // naive accounts agree to the log's quantisation (2-decimal watts,
+    // millisecond timestamps, jitter-free recording cadence)
+    assert!(
+        (whole_rep.naive_j - whole_sim.naive_j).abs() < 0.02 * whole_sim.naive_j,
+        "replay naive {:.1} J vs sim naive {:.1} J",
+        whole_rep.naive_j,
+        whole_sim.naive_j
+    );
+    // corrected accounts agree within the coverage-derived error bound
+    assert!(
+        (whole_rep.corrected_j - whole_sim.corrected_j).abs()
+            < whole_sim.bound_j + 0.02 * whole_sim.truth_j,
+        "replay corrected {:.1} J vs sim corrected {:.1} J (bound {:.1} J)",
+        whole_rep.corrected_j,
+        whole_sim.corrected_j,
+        whole_sim.bound_j
+    );
+    // a recorded log carries no PMD: the truth account stays empty
+    assert_eq!(whole_rep.truth_j, 0.0);
+    assert!(whole_sim.truth_j > 0.0);
+}
+
+/// ISSUE 3 acceptance: a mid-stream driver restart injected through
+/// `FaultSource` is detected from the stream, the registry re-identifies
+/// the sensor in the post-restart epoch, and the rolling multi-window
+/// snapshots stay bit-for-bit deterministic across concurrency/batching.
+#[test]
+fn driver_restart_reidentifies_and_multiwindow_stays_deterministic() {
+    use gpupower::telemetry::{
+        self, FaultPlan, SensorClass, ServiceSource, TelemetryConfig,
+    };
+
+    let fleet = Fleet::build(FleetConfig {
+        size: 2,
+        models: vec!["A100 PCIe-40G".into()],
+        driver: DriverEpoch::Post530,
+        field: PowerField::Instant,
+        seed: 98,
+    });
+    let sched = telemetry::ProbeSchedule::default();
+    let window = sched.calibration_end() + 3.0; // 28 s: calibration + work
+    let plan = FaultPlan { dropout: 0.02, restarts: vec![window], ..Default::default() };
+    let cfg = TelemetryConfig {
+        duration_s: window,
+        windows: 2,
+        bucket_s: 2.0,
+        ..Default::default()
+    };
+    let a = telemetry::run_service_with(
+        &fleet,
+        &TelemetryConfig { workers: 1, shard_size: 1, ..cfg },
+        &ServiceSource::Faulty(plan.clone()),
+    );
+    let b = telemetry::run_service_with(
+        &fleet,
+        &TelemetryConfig { workers: 4, shard_size: 1, batch_size: 83, queue_depth: 3, ..cfg },
+        &ServiceSource::Faulty(plan),
+    );
+
+    // every node re-identified after the restart, and both epochs read the
+    // A100's true sensor (update 100 ms, window 25 ms)
+    assert_eq!(a.registry.recalibrated(), 2);
+    for e in &a.registry.entries {
+        assert_eq!(e.epochs.len(), 2, "{e:?}");
+        for ep in &e.epochs {
+            assert_eq!(ep.identity.class, SensorClass::Boxcar, "{ep:?}");
+            let u = ep.identity.update_s.unwrap();
+            assert!((u - 0.1).abs() < 0.02, "update {u}");
+            let w = ep.identity.window_s.expect("window identified in both epochs");
+            assert!((w - 0.025).abs() < 0.012, "window {w}");
+        }
+        assert!(e.epochs[1].t0 > window, "second epoch starts after the restart");
+        assert!(e.epochs[1].t0 < window + 2.0, "and soon after the ~1 s blackout");
+    }
+
+    // rolling multi-window snapshots: both observation windows carry
+    // energy and are bit-for-bit identical across configurations
+    let (wa, wb) = (a.windows(), b.windows());
+    assert_eq!(wa.len(), 2);
+    assert_eq!(wa.len(), wb.len());
+    for (x, y) in wa.iter().zip(&wb) {
+        assert_eq!(x.naive_j.to_bits(), y.naive_j.to_bits(), "window {}", x.index);
+        assert_eq!(x.corrected_j.to_bits(), y.corrected_j.to_bits(), "window {}", x.index);
+        assert_eq!(x.bound_j.to_bits(), y.bound_j.to_bits(), "window {}", x.index);
+        assert_eq!(x.truth_j.to_bits(), y.truth_j.to_bits(), "window {}", x.index);
+        assert!(x.truth_j > 0.0 && x.naive_j > 0.0, "window {}: {x:?}", x.index);
+    }
+    assert_eq!(a.stats.readings, b.stats.readings);
+    for (x, y) in a.registry.entries.iter().zip(&b.registry.entries) {
+        assert_eq!(x.node_id, y.node_id);
+        assert_eq!(x.identity, y.identity);
+        assert_eq!(x.epochs, y.epochs);
+    }
+}
+
+/// The committed example log (the recorded-log schema's reference file)
+/// parses, resolves its model, and flows through the replay service.
+#[test]
+fn committed_example_log_replays_through_the_service() {
+    use gpupower::smi::cli::parse_log;
+    use gpupower::telemetry::{self, TelemetryConfig};
+
+    let text = include_str!("../../examples/nvidia_smi_a100.csv");
+    let log = parse_log(text).unwrap();
+    assert_eq!(log.model_name(), Some("A100 PCIe-40G"));
+    assert_eq!(log.rows.len(), 60);
+
+    let cfg = TelemetryConfig { duration_s: 0.0, bucket_s: 1.0, ..Default::default() };
+    let snap = telemetry::run_replay_service(&[text.to_string()], &cfg).unwrap();
+    assert_eq!(snap.stats.nodes, 1);
+    // one [N/A] row is skipped, like a live unsupported query
+    assert_eq!(snap.stats.readings, 59);
+    let whole = snap.fleet_energy(0.0, snap.duration_s);
+    assert!(whole.naive_j > 0.0, "recorded energy accounted: {whole:?}");
+    assert_eq!(whole.truth_j, 0.0, "no PMD for a recorded log");
+}
+
 /// Extension modules compose: a recorded production trace replayed on a
 /// multi-GPU host, polled serially, with the Kepler RC distortion
 /// corrected before integration.
