@@ -21,15 +21,21 @@
 //! * [`coordinator`] — a dependency-free fleet orchestrator (std scoped
 //!   threads, no async runtime) for datacenter-scale simulated measurement
 //!   campaigns, including the sharded streaming campaign mode;
-//! * [`telemetry`] — the online fleet-telemetry service: every reading
-//!   source unified behind the `ReadingSource` layer (simulated nodes,
-//!   recorded nvidia-smi CSV logs via the `smi::cli` parser, and a
-//!   streaming fault injector with dropout/outage/stuck/driver-restart
-//!   transforms), sharded bounded-queue ingestion, live sensor
-//!   identification converging to the encoded ground truth (re-run after
-//!   detected driver restarts), and rolling multi-window corrected energy
-//!   accounts with error bounds (`repro telemetry --source
-//!   sim|faulty|replay`);
+//! * [`telemetry`] — the online fleet collector as a **live service**:
+//!   `TelemetryService::start(...)` returns a `ServiceHandle` whose
+//!   `snapshot()`/`fleet_energy()` answer queries *while ingestion runs*,
+//!   whose `subscribe()` streams progress events (node identified, epoch
+//!   detected, window closed, re-calibrated), and whose `control()`
+//!   accepts `ControlMsg::Recalibrate{node}`. Under it: the unified
+//!   `ReadingSource` layer (simulated nodes, recorded nvidia-smi CSV logs
+//!   via the `smi::cli` parser — including real wall-clock timestamps —
+//!   and a streaming fault injector with dropout/outage/stuck/restart/
+//!   masked-driver-update transforms), sharded bounded-queue ingestion,
+//!   *incremental* sensor identification (identities final at calibration
+//!   end, not stream close), drift monitoring with adaptive probe-replay
+//!   re-calibration, and rolling multi-window corrected energy accounts
+//!   with error bounds. One-call wrappers `run_service*` remain
+//!   (`repro telemetry --source sim|faulty|replay [--live-every S]`);
 //! * [`runtime`] — the PJRT artifact runtime (Python never runs at request
 //!   time).
 

@@ -47,12 +47,20 @@ COMMANDS:
             [--model NAME ...] [--shard N] [--batch N] [--queue N]
             [--source sim|faulty|replay] [--replay-log PATH ...]
             [--dropout P] [--outage T:D ...] [--stuck T:D ...]
-            [--restart T ...]
-                            online fleet-telemetry service: streaming
-                            ingestion over the unified ReadingSource layer,
-                            live sensor identification (with re-calibration
-                            after driver restarts), rolling multi-window
-                            corrected energy accounts with error bounds.
+            [--restart T ...] [--driver-update T:EPOCH ...]
+            [--live-every S]
+                            the live fleet-telemetry service
+                            (TelemetryService::start -> ServiceHandle):
+                            streaming ingestion over the unified
+                            ReadingSource layer, *incremental* sensor
+                            identification (identities final at
+                            calibration end), adaptive re-calibration
+                            (probe replays when drift is suspected),
+                            rolling multi-window corrected energy accounts
+                            with error bounds.
+                            --live-every S   print rolling mid-ingest
+                                             snapshots every S seconds
+                                             while the service runs
                             --source sim     simulated fleet nodes (default)
                             --source faulty  simulated nodes behind the
                                              streaming fault injector:
@@ -62,7 +70,15 @@ COMMANDS:
                                              --restart T (driver restart at
                                              T s; ~1 s blackout, sensor
                                              epoch re-rolled, node
-                                             re-calibrates)
+                                             re-calibrates),
+                                             --driver-update T:EPOCH
+                                             (masked driver update at T s:
+                                             fast reboot below the restart
+                                             detector's gap, pipeline
+                                             switched to EPOCH = pre530|
+                                             530|post530 — the drift the
+                                             adaptive re-calibration
+                                             catches)
                             --source replay  recorded nvidia-smi CSV logs,
                                              one node per --replay-log PATH.
                             Recorded-log schema (nvidia-smi
@@ -70,10 +86,12 @@ COMMANDS:
                             row naming the fields (e.g. \"timestamp, name,
                             power.draw [W]\"), then one row per poll; watts
                             as \"123.45 W\" or \"[N/A]\". The timestamp
-                            column must be *relative seconds* since the
-                            recording started (ms resolution) — convert
-                            nvidia-smi's wall-clock timestamps before
-                            replaying. See examples/nvidia_smi_a100.csv.
+                            column is either *relative seconds* since the
+                            recording started (ms resolution) or nvidia-
+                            smi's own wall-clock \"YYYY/MM/DD HH:MM:SS.mmm\"
+                            stamps (normalised to relative at the first
+                            reading). See examples/nvidia_smi_a100.csv and
+                            examples/nvidia_smi_a100_wallclock.csv.
   characterize MODEL [--driver D] [--field F]  sensor characterisation
 
 Flags accept both `--flag value` and `--flag=value`.
@@ -207,6 +225,29 @@ fn parse_fault_windows(specs: &[String]) -> Result<Vec<gpupower::sim::faults::Fa
             Ok(gpupower::sim::faults::FaultWindow::new(t0, d))
         })
         .collect()
+}
+
+/// Parse a `--driver-update` spec of the form `T:EPOCH` (seconds and
+/// pre530|530|post530). Unlike the lenient `--driver` flag, a typo here
+/// would silently run the drift experiment against the wrong pipeline, so
+/// unknown epoch names are an error.
+fn parse_driver_update(spec: &str) -> Result<(f64, DriverEpoch)> {
+    let (t, epoch) = spec
+        .split_once(':')
+        .ok_or_else(|| anyhow::anyhow!("bad driver update '{spec}' (want T:EPOCH)"))?;
+    let t: f64 =
+        t.trim().parse().map_err(|_| anyhow::anyhow!("bad driver-update time '{spec}'"))?;
+    let epoch = match epoch.trim().to_lowercase().as_str() {
+        "pre530" | "pre-530" => DriverEpoch::Pre530,
+        "530" | "v530" => DriverEpoch::V530,
+        "post530" | "post-530" => DriverEpoch::Post530,
+        other => {
+            return Err(anyhow::anyhow!(
+                "bad driver-update epoch '{other}' (want pre530|530|post530)"
+            ))
+        }
+    };
+    Ok((t, epoch))
 }
 
 fn load_runtime(no_artifacts: bool) -> Option<ArtifactRuntime> {
@@ -436,60 +477,98 @@ fn main() -> Result<()> {
                 seed,
                 ..Default::default()
             };
+            let live_every = args.f64_flag("--live-every", 0.0);
             // score identification against the pipeline the fleet ran; a
             // replayed log set is scored as post-530 instant (the emitter's
             // default), with unrecognised models excluded from the metric
-            let (snap, field, driver) = match args.flag_value("--source").unwrap_or("sim") {
-                "replay" => {
-                    let paths = args.flag_values("--replay-log");
-                    if paths.is_empty() {
+            let (handle, n_total, field, driver) =
+                match args.flag_value("--source").unwrap_or("sim") {
+                    "replay" => {
+                        let paths = args.flag_values("--replay-log");
+                        if paths.is_empty() {
+                            return Err(anyhow::anyhow!(
+                                "--source replay needs at least one --replay-log PATH"
+                            ));
+                        }
+                        let mut logs = Vec::with_capacity(paths.len());
+                        for p in &paths {
+                            logs.push(
+                                std::fs::read_to_string(p)
+                                    .map_err(|e| anyhow::anyhow!("cannot read {p}: {e}"))?,
+                            );
+                        }
+                        let handle = telemetry::TelemetryService::start_replay(&logs, &cfg)
+                            .map_err(|e| anyhow::anyhow!("{e}"))?;
+                        (handle, logs.len(), PowerField::Instant, DriverEpoch::Post530)
+                    }
+                    source @ ("sim" | "faulty") => {
+                        let fleet = Fleet::build(FleetConfig {
+                            size: args.usize_flag("--gpus", 64),
+                            models: args.flag_values("--model"),
+                            driver: DriverEpoch::Post530,
+                            field: PowerField::Instant,
+                            seed,
+                        });
+                        let src = if source == "faulty" {
+                            gpupower::telemetry::ServiceSource::Faulty(gpupower::telemetry::FaultPlan {
+                                dropout: args.f64_flag("--dropout", 0.0),
+                                outages: parse_fault_windows(&args.flag_values("--outage"))?,
+                                stuck: parse_fault_windows(&args.flag_values("--stuck"))?,
+                                restarts: args
+                                    .flag_values("--restart")
+                                    .iter()
+                                    .map(|v| {
+                                        v.parse::<f64>()
+                                            .map_err(|_| anyhow::anyhow!("bad --restart '{v}'"))
+                                    })
+                                    .collect::<Result<_>>()?,
+                                driver_updates: args
+                                    .flag_values("--driver-update")
+                                    .iter()
+                                    .map(|v| parse_driver_update(v))
+                                    .collect::<Result<_>>()?,
+                            })
+                        } else {
+                            gpupower::telemetry::ServiceSource::Sim
+                        };
+                        let n = fleet.len();
+                        let handle = telemetry::TelemetryService::start(&fleet, &cfg, &src);
+                        (handle, n, fleet.config.field, fleet.config.driver)
+                    }
+                    other => {
                         return Err(anyhow::anyhow!(
-                            "--source replay needs at least one --replay-log PATH"
-                        ));
+                            "unknown --source '{other}' (sim|faulty|replay)"
+                        ))
                     }
-                    let mut logs = Vec::with_capacity(paths.len());
-                    for p in &paths {
-                        logs.push(
-                            std::fs::read_to_string(p)
-                                .map_err(|e| anyhow::anyhow!("cannot read {p}: {e}"))?,
-                        );
+                };
+            if live_every > 0.0 {
+                // rolling mid-ingest snapshots: the service keeps running
+                // while we query it
+                while !handle.is_done() {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        live_every.clamp(0.05, 10.0),
+                    ));
+                    if handle.is_done() {
+                        break;
                     }
-                    let snap = telemetry::run_replay_service(&logs, &cfg)
-                        .map_err(|e| anyhow::anyhow!("{e}"))?;
-                    (snap, PowerField::Instant, DriverEpoch::Post530)
+                    let s = handle.snapshot();
+                    let e = s.fleet_energy(0.0, s.duration_s);
+                    let finished = s.accounts.nodes.iter().filter(|n| n.complete).count();
+                    println!(
+                        "[live] nodes {}/{} streaming, {} finished, {} identified | \
+                         {} readings | naive {:.3} kJ, corrected {:.3} kJ (±{:.3} kJ)",
+                        s.stats.nodes,
+                        n_total,
+                        finished,
+                        s.registry.entries.len(),
+                        s.stats.readings,
+                        e.naive_j / 1e3,
+                        e.corrected_j / 1e3,
+                        e.bound_j / 1e3,
+                    );
                 }
-                source @ ("sim" | "faulty") => {
-                    let fleet = Fleet::build(FleetConfig {
-                        size: args.usize_flag("--gpus", 64),
-                        models: args.flag_values("--model"),
-                        driver: DriverEpoch::Post530,
-                        field: PowerField::Instant,
-                        seed,
-                    });
-                    let src = if source == "faulty" {
-                        gpupower::telemetry::ServiceSource::Faulty(gpupower::telemetry::FaultPlan {
-                            dropout: args.f64_flag("--dropout", 0.0),
-                            outages: parse_fault_windows(&args.flag_values("--outage"))?,
-                            stuck: parse_fault_windows(&args.flag_values("--stuck"))?,
-                            restarts: args
-                                .flag_values("--restart")
-                                .iter()
-                                .map(|v| {
-                                    v.parse::<f64>()
-                                        .map_err(|_| anyhow::anyhow!("bad --restart '{v}'"))
-                                })
-                                .collect::<Result<_>>()?,
-                        })
-                    } else {
-                        gpupower::telemetry::ServiceSource::Sim
-                    };
-                    let snap = telemetry::run_service_with(&fleet, &cfg, &src);
-                    (snap, fleet.config.field, fleet.config.driver)
-                }
-                other => {
-                    return Err(anyhow::anyhow!("unknown --source '{other}' (sim|faulty|replay)"))
-                }
-            };
+            }
+            let snap = handle.join();
             save_and_print(
                 &out,
                 "telemetry_energy",
@@ -508,6 +587,18 @@ fn main() -> Result<()> {
                 "ingested {} readings in {} batches from {} nodes over {:.0} s",
                 snap.stats.readings, snap.stats.batches, snap.stats.nodes, snap.duration_s
             );
+            if snap.stats.recalibrations > 0 {
+                println!(
+                    "adaptive re-calibration: {} probe replay(s) scheduled by the drift monitor",
+                    snap.stats.recalibrations
+                );
+            }
+            if snap.stats.drift_suspected > 0 {
+                println!(
+                    "drift suspected on {} node stream(s) that cannot re-probe (recorded logs)",
+                    snap.stats.drift_suspected
+                );
+            }
             println!("{}", telemetry::query::registry_summary(&snap.registry, field, driver));
             println!(
                 "scaled to 10,000 GPUs at $0.15/kWh, trusting the naive account is worth ${:.0}/year",

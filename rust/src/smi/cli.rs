@@ -12,11 +12,19 @@
 //! Recorded-log schema: a header row naming the queried fields (as printed
 //! by `nvidia-smi --format=csv`, e.g. `timestamp, name, power.draw [W]`),
 //! then one row per poll. Power cells are either `<watts:.2> W` or
-//! `[N/A]`. The timestamp column is **relative seconds** since the
-//! recording started (millisecond resolution) — the one divergence from
-//! a raw nvidia-smi capture, whose wall-clock `YYYY/MM/DD HH:MM:SS.mmm`
-//! stamps must be converted before replay. CRLF line endings are
-//! accepted; malformed rows fail with their line number.
+//! `[N/A]`. The timestamp column accepts **either** format:
+//!
+//! * relative seconds since the recording started (what [`format_log`]
+//!   emits, millisecond resolution), or
+//! * the real `nvidia-smi --query-gpu=timestamp` wall-clock format
+//!   `YYYY/MM/DD HH:MM:SS.mmm` — normalised at parse time to relative
+//!   seconds at the **first reading**, so raw recorded sessions replay
+//!   without preprocessing (midnight/month/leap-year rollovers included;
+//!   re-emission via [`SmiLog::format`] then prints the normalised
+//!   relative form). Mixing the two formats in one log is an error.
+//!
+//! CRLF line endings are accepted; malformed rows fail with their line
+//! number.
 
 use super::NvidiaSmi;
 use crate::sim::profile::PowerField;
@@ -149,12 +157,71 @@ pub fn parse_header(line: &str) -> Result<Vec<QueryField>, String> {
         .collect()
 }
 
+/// Days since 1970-01-01 for a civil date (Howard Hinnant's
+/// `days_from_civil`; handles leap years and the Gregorian 100/400 rules).
+fn days_from_civil(y: i64, m: u32, d: u32) -> i64 {
+    let y = if m <= 2 { y - 1 } else { y };
+    let era = (if y >= 0 { y } else { y - 399 }) / 400;
+    let yoe = (y - era * 400) as u64; // [0, 399]
+    let mp = (m as u64 + 9) % 12; // Mar=0 .. Feb=11
+    let doy = (153 * mp + 2) / 5 + d as u64 - 1;
+    let doe = yoe * 365 + yoe / 4 - yoe / 100 + doy;
+    era * 146_097 + doe as i64
+}
+
+/// Days in `m` of year `y` (Gregorian).
+fn days_in_month(y: i64, m: u32) -> u32 {
+    match m {
+        1 | 3 | 5 | 7 | 8 | 10 | 12 => 31,
+        4 | 6 | 9 | 11 => 30,
+        2 => {
+            if y % 4 == 0 && (y % 100 != 0 || y % 400 == 0) {
+                29
+            } else {
+                28
+            }
+        }
+        _ => 0,
+    }
+}
+
+/// Parse nvidia-smi's wall-clock timestamp (`YYYY/MM/DD HH:MM:SS.mmm`)
+/// into absolute seconds since the Unix epoch. `None` when the cell is
+/// not in that format or names an impossible calendar date (so the
+/// relative-seconds form can be tried first and malformed rows fail with
+/// their line number rather than silently shifting).
+fn parse_wallclock(cell: &str) -> Option<f64> {
+    let (date, time) = cell.split_once(' ')?;
+    let mut dp = date.split('/');
+    let y: i64 = dp.next()?.parse().ok()?;
+    let mo: u32 = dp.next()?.parse().ok()?;
+    let dd: u32 = dp.next()?.parse().ok()?;
+    if dp.next().is_some() || !(1..=12).contains(&mo) || dd < 1 || dd > days_in_month(y, mo) {
+        return None;
+    }
+    let mut tp = time.split(':');
+    let h: u32 = tp.next()?.parse().ok()?;
+    let mi: u32 = tp.next()?.parse().ok()?;
+    let sec: f64 = tp.next()?.parse().ok()?;
+    if tp.next().is_some() || h > 23 || mi > 59 || !(0.0..60.0).contains(&sec) {
+        return None;
+    }
+    let days = days_from_civil(y, mo, dd);
+    Some(days as f64 * 86_400.0 + h as f64 * 3_600.0 + mi as f64 * 60.0 + sec)
+}
+
 /// Parse a recorded nvidia-smi CSV log. Inverts [`format_log`]: for any
-/// log that function emits, `parse_log(log)?.format() == log`. Errors are
-/// line-numbered; CRLF endings and blank lines are tolerated.
+/// log that function emits, `parse_log(log)?.format() == log`. Wall-clock
+/// timestamps (the raw nvidia-smi format) are accepted too and normalised
+/// to relative seconds at the first reading — parsing such a log is
+/// therefore *idempotent* rather than an exact inverse: re-emitting and
+/// re-parsing yields the same normalised log. Errors are line-numbered;
+/// CRLF endings and blank lines are tolerated.
 pub fn parse_log(text: &str) -> Result<SmiLog, String> {
     let mut fields: Option<Vec<QueryField>> = None;
     let mut rows: Vec<Vec<LogValue>> = Vec::new();
+    let mut saw_wallclock = false;
+    let mut saw_relative = false;
     for (ln, raw) in text.lines().enumerate() {
         let line = raw.trim(); // also strips the '\r' of CRLF input
         if line.is_empty() {
@@ -178,10 +245,17 @@ pub fn parse_log(text: &str) -> Result<SmiLog, String> {
         for (field, cell) in fields.iter().zip(&cells) {
             row.push(match field {
                 QueryField::Name => LogValue::Text(cell.to_string()),
-                QueryField::Timestamp => LogValue::Seconds(
-                    cell.parse()
-                        .map_err(|_| format!("line {}: bad timestamp '{cell}'", ln + 1))?,
-                ),
+                QueryField::Timestamp => {
+                    if let Ok(t) = cell.parse::<f64>() {
+                        saw_relative = true;
+                        LogValue::Seconds(t)
+                    } else if let Some(t) = parse_wallclock(cell) {
+                        saw_wallclock = true;
+                        LogValue::Seconds(t)
+                    } else {
+                        return Err(format!("line {}: bad timestamp '{cell}'", ln + 1));
+                    }
+                }
                 _ => {
                     if *cell == "[N/A]" {
                         LogValue::Watts(None)
@@ -200,10 +274,33 @@ pub fn parse_log(text: &str) -> Result<SmiLog, String> {
         }
         rows.push(row);
     }
-    match fields {
-        Some(fields) => Ok(SmiLog { fields, rows }),
-        None => Err("log is empty (no header row)".into()),
+    let Some(fields) = fields else {
+        return Err("log is empty (no header row)".into());
+    };
+    if saw_wallclock && saw_relative {
+        return Err("log mixes wall-clock and relative timestamps".into());
     }
+    if saw_wallclock {
+        // normalise to relative seconds at the first reading
+        let tc = fields
+            .iter()
+            .position(|f| *f == QueryField::Timestamp)
+            .expect("wall-clock timestamps imply a timestamp column");
+        let t0 = rows.iter().find_map(|r| match &r[tc] {
+            LogValue::Seconds(t) => Some(*t),
+            _ => None,
+        });
+        if let Some(t0) = t0 {
+            for row in &mut rows {
+                if let LogValue::Seconds(t) = &mut row[tc] {
+                    // round to the emitted millisecond resolution so the
+                    // normalised log re-emits losslessly
+                    *t = ((*t - t0) * 1000.0).round() / 1000.0;
+                }
+            }
+        }
+    }
+    Ok(SmiLog { fields, rows })
 }
 
 impl SmiLog {
@@ -421,6 +518,68 @@ mod tests {
         assert!(e.contains("not '<watts> W'"), "{e}");
         assert!(parse_log("").is_err());
         assert!(parse_log("   \n\n").is_err());
+    }
+
+    /// Satellite: real nvidia-smi wall-clock timestamps are accepted and
+    /// normalised to relative seconds at the first reading — including a
+    /// midnight rollover — and the result round-trips idempotently.
+    #[test]
+    fn parse_log_normalises_wallclock_timestamps() {
+        let wall = "timestamp, name, power.draw [W]\n\
+                    2024/03/14 23:59:58.500, A100 PCIe-40G, 60.00 W\n\
+                    2024/03/14 23:59:59.600, A100 PCIe-40G, 61.25 W\n\
+                    2024/03/15 00:00:01.100, A100 PCIe-40G, [N/A]\n\
+                    2024/03/15 00:00:02.250, A100 PCIe-40G, 62.50 W\n";
+        let log = parse_log(wall).unwrap();
+        let series = log.power_series(&QueryField::PowerDraw).unwrap();
+        assert_eq!(series, vec![(0.0, 60.0), (1.1, 61.25), (3.75, 62.5)]);
+
+        // identical to the equivalent relative-seconds log
+        let rel = "timestamp, name, power.draw [W]\n\
+                   0.000, A100 PCIe-40G, 60.00 W\n\
+                   1.100, A100 PCIe-40G, 61.25 W\n\
+                   2.600, A100 PCIe-40G, [N/A]\n\
+                   3.750, A100 PCIe-40G, 62.50 W\n";
+        assert_eq!(log, parse_log(rel).unwrap());
+
+        // round-trip is idempotent: the re-emission is the normalised
+        // relative log, and parsing it again is a fixed point
+        let emitted = log.format();
+        assert_eq!(emitted, rel);
+        assert_eq!(parse_log(&emitted).unwrap(), log);
+    }
+
+    #[test]
+    fn wallclock_parsing_handles_calendar_rollovers_and_rejects_garbage() {
+        // leap-day and month rollover: 2024/02/29 23:59:59 -> 2024/03/01
+        let a = parse_wallclock("2024/02/29 23:59:59.000").unwrap();
+        let b = parse_wallclock("2024/03/01 00:00:01.000").unwrap();
+        assert!((b - a - 2.0).abs() < 1e-6, "leap-day rollover: {}", b - a);
+        // year rollover
+        let a = parse_wallclock("2023/12/31 23:59:59.900").unwrap();
+        let b = parse_wallclock("2024/01/01 00:00:00.100").unwrap();
+        assert!((b - a - 0.2).abs() < 1e-6);
+        // millisecond resolution survives
+        let t = parse_wallclock("2024/03/14 09:26:53.123").unwrap();
+        assert!((t % 60.0 - 53.123).abs() < 1e-6);
+
+        assert!(parse_wallclock("2024-03-14 09:26:53.123").is_none(), "wrong separators");
+        assert!(parse_wallclock("2024/13/14 09:26:53.123").is_none(), "bad month");
+        assert!(parse_wallclock("2024/03/14 24:00:00.000").is_none(), "bad hour");
+        assert!(parse_wallclock("2024/03/14").is_none(), "date only");
+        // impossible calendar dates are rejected, not silently shifted
+        assert!(parse_wallclock("2024/02/31 00:00:00.000").is_none(), "Feb 31");
+        assert!(parse_wallclock("2023/02/29 00:00:00.000").is_none(), "non-leap Feb 29");
+        assert!(parse_wallclock("2024/04/31 00:00:00.000").is_none(), "Apr 31");
+        assert!(parse_wallclock("2100/02/29 00:00:00.000").is_none(), "century non-leap");
+
+        // in a log: a malformed stamp is a line-numbered error, and mixing
+        // formats is rejected
+        let e = parse_log("timestamp\n2024/03/14 09:26:53.123\n2024-03-14 09:26:54\n")
+            .unwrap_err();
+        assert!(e.contains("line 3"), "{e}");
+        let e = parse_log("timestamp\n0.100\n2024/03/14 09:26:53.123\n").unwrap_err();
+        assert!(e.contains("mixes"), "{e}");
     }
 
     #[test]

@@ -71,6 +71,51 @@ impl BucketSpec {
     fn clamped(&self, t: f64) -> usize {
         (((t - self.t0) / self.bucket_s).floor().max(0.0) as usize).min(self.n - 1)
     }
+
+    /// Clamp a query range into the bucketed span: NaN endpoints degrade
+    /// to the span start, everything else clips to `[t0, t_end]`. Shared
+    /// by every whole-bucket range query so they agree on edge semantics.
+    pub fn clamp_range(&self, t0: f64, t1: f64) -> (f64, f64) {
+        let cl = |t: f64| {
+            if t.is_nan() {
+                self.t0
+            } else {
+                t.clamp(self.t0, self.t_end())
+            }
+        };
+        (cl(t0), cl(t1))
+    }
+
+    /// Visit every bucket overlapping the clamped query `[t0, t1]` and
+    /// return the whole-bucket extent actually covered (`(q0, q0)` for an
+    /// empty, inverted, or out-of-range query). The single range walk
+    /// behind both [`FleetAccounts::energy_between`] and the live
+    /// service's lock-level `fleet_energy`, so the two can never disagree
+    /// about edge semantics.
+    pub fn visit_range<F: FnMut(usize)>(&self, t0: f64, t1: f64, mut f: F) -> (f64, f64) {
+        let (q0, q1) = self.clamp_range(t0, t1);
+        if q1 <= q0 {
+            return (q0, q0);
+        }
+        let (mut o0, mut o1) = (q0, q0);
+        let mut hit = false;
+        for b in 0..self.n {
+            let (lo, hi) = self.bounds(b);
+            if hi <= q0 || lo >= q1 {
+                continue;
+            }
+            if !hit {
+                o0 = lo;
+                o1 = hi;
+                hit = true;
+            } else {
+                o0 = o0.min(lo);
+                o1 = o1.max(hi);
+            }
+            f(b);
+        }
+        (o0, o1)
+    }
 }
 
 /// PMD ground-truth energy per bucket: `out[b] = Σ samples in bucket b × dt`.
@@ -126,16 +171,35 @@ struct EpochSpan {
 /// after) is integrated by the naive account — that is exactly the
 /// naive method's failure mode — but skipped by the corrected account and
 /// its coverage bookkeeping: the outage is unobserved time, not data.
+///
+/// Live-service operation: epochs need not be known up front. A span is
+/// announced with [`Self::open_epoch`] *before* its readings arrive and
+/// its parameters land later via [`Self::identify_span`] (the service
+/// identifies a sensor only once its calibration phase completes).
+/// Readings governed by a not-yet-identified span are integrated into the
+/// naive account eagerly but *deferred* for the corrected account, then
+/// drained in stream order when the identity arrives — so the corrected
+/// bucket sums are bit-for-bit what an up-front epoch timeline produces.
 #[derive(Debug)]
 pub struct NodeAccountant {
     spec: BucketSpec,
     /// Epoch parameter timeline, in ascending `t0` order.
     epochs: Vec<EpochSpan>,
-    /// Index into `epochs` for the most recent reading.
+    /// `epochs[..identified]` carry real parameters; at most one
+    /// placeholder span (the last) may be awaiting identification.
+    identified: usize,
+    /// Index into `epochs` for the corrected account's most recent
+    /// drained reading.
     cur: usize,
-    last: Option<(f64, f64)>,
-    /// Epoch index of `last`.
-    last_epoch: usize,
+    /// Most recent reading (naive account watermark).
+    naive_last: Option<(f64, f64)>,
+    /// Most recent corrected-drained reading.
+    corr_last: Option<(f64, f64)>,
+    /// Epoch index of `corr_last`.
+    corr_last_epoch: usize,
+    /// Readings awaiting their span's identification (corrected account
+    /// only), in stream order.
+    pending: std::collections::VecDeque<(f64, f64)>,
     naive_j: Vec<f64>,
     corrected_j: Vec<f64>,
     /// Unobserved seconds per bucket, weighted by each segment's epoch
@@ -180,19 +244,59 @@ impl NodeAccountant {
         Self::from_spans(spec, spans)
     }
 
+    /// Accountant with no spans yet — the live service's starting state;
+    /// pair with [`Self::open_epoch`] / [`Self::identify_span`].
+    pub fn fresh(spec: BucketSpec) -> Self {
+        Self::from_spans(spec, Vec::new())
+    }
+
     fn from_spans(spec: BucketSpec, epochs: Vec<EpochSpan>) -> Self {
+        let identified = epochs.len();
         NodeAccountant {
             spec,
             epochs,
+            identified,
             cur: 0,
-            last: None,
-            last_epoch: 0,
+            naive_last: None,
+            corr_last: None,
+            corr_last_epoch: 0,
+            pending: std::collections::VecDeque::new(),
             naive_j: vec![0.0; spec.n],
             corrected_j: vec![0.0; spec.n],
             uncovered_s: vec![0.0; spec.n],
             min_w: vec![f64::INFINITY; spec.n],
             max_w: vec![f64::NEG_INFINITY; spec.n],
             readings: 0,
+        }
+    }
+
+    /// Announce a new sensor epoch starting at `t0`. Must be called before
+    /// any reading of that epoch is pushed, and only once the previous
+    /// span has been identified (the service closes an epoch — identifying
+    /// it — before opening the next).
+    pub fn open_epoch(&mut self, t0: f64) {
+        assert_eq!(
+            self.identified,
+            self.epochs.len(),
+            "previous epoch must be identified before opening a new one"
+        );
+        self.epochs.push(EpochSpan { t0, shift_s: 0.0, coverage: 1.0 });
+    }
+
+    /// Supply the identity of the oldest unidentified span, draining every
+    /// deferred reading it governs through the corrected account.
+    pub fn identify_span(&mut self, identity: &SensorIdentity) {
+        assert!(self.identified < self.epochs.len(), "no span awaiting identification");
+        self.epochs[self.identified] = EpochSpan {
+            t0: self.epochs[self.identified].t0,
+            shift_s: identity.shift_s(),
+            coverage: identity.coverage_or_full().clamp(0.0, 1.0),
+        };
+        self.identified += 1;
+        if self.identified == self.epochs.len() {
+            while let Some((t, w)) = self.pending.pop_front() {
+                self.corr_push(t, w);
+            }
         }
     }
 
@@ -216,19 +320,51 @@ impl NodeAccountant {
 
     /// Unobserved-time bookkeeping for one raw segment: each bucket's
     /// overlap, weighted by the active epoch's `1 - coverage`.
-    fn add_unobserved(&mut self, a: f64, b: f64, frac: f64) {
-        if b <= self.spec.t0 || a >= self.spec.t_end() || b <= a {
+    fn add_unobserved(
+        spec: &BucketSpec,
+        uncovered_s: &mut [f64],
+        a: f64,
+        b: f64,
+        frac: f64,
+    ) {
+        if b <= spec.t0 || a >= spec.t_end() || b <= a {
             return;
         }
-        let b_lo = self.spec.clamped(a);
-        let b_hi = self.spec.clamped(b);
+        let b_lo = spec.clamped(a);
+        let b_hi = spec.clamped(b);
         for bucket in b_lo..=b_hi {
-            let (lo, hi) = self.spec.bounds(bucket);
+            let (lo, hi) = spec.bounds(bucket);
             let d = b.min(hi) - a.max(lo);
             if d > 0.0 {
-                self.uncovered_s[bucket] += frac * d;
+                uncovered_s[bucket] += frac * d;
             }
         }
+    }
+
+    /// Drive one reading through the corrected account + coverage
+    /// bookkeeping (the epoch-aware half of the old single push path; the
+    /// arithmetic and its stream order are unchanged, so deferred drains
+    /// reproduce the up-front-timeline results bit for bit).
+    fn corr_push(&mut self, t: f64, w: f64) {
+        while self.cur + 1 < self.epochs.len() && self.epochs[self.cur + 1].t0 <= t {
+            self.cur += 1;
+        }
+        if let Some((lt, lw)) = self.corr_last {
+            if self.cur == self.corr_last_epoch && !self.epochs.is_empty() {
+                let ep = self.epochs[self.cur];
+                Self::add_segment(
+                    &self.spec,
+                    &mut self.corrected_j,
+                    (lt - ep.shift_s, lw),
+                    (t - ep.shift_s, w),
+                );
+                let frac = 1.0 - ep.coverage;
+                Self::add_unobserved(&self.spec, &mut self.uncovered_s, lt, t, frac);
+            }
+            // else: the segment bridges a driver restart — see the type docs
+        }
+        self.corr_last = Some((t, w));
+        self.corr_last_epoch = self.cur;
     }
 
     /// Feed one polled reading (stream order).
@@ -238,32 +374,97 @@ impl NodeAccountant {
             self.min_w[b] = self.min_w[b].min(w);
             self.max_w[b] = self.max_w[b].max(w);
         }
-        while self.cur + 1 < self.epochs.len() && self.epochs[self.cur + 1].t0 <= t {
-            self.cur += 1;
-        }
-        if let Some((lt, lw)) = self.last {
+        if let Some((lt, lw)) = self.naive_last {
             Self::add_segment(&self.spec, &mut self.naive_j, (lt, lw), (t, w));
-            if self.cur == self.last_epoch {
-                let ep = self.epochs[self.cur];
-                Self::add_segment(
-                    &self.spec,
-                    &mut self.corrected_j,
-                    (lt - ep.shift_s, lw),
-                    (t - ep.shift_s, w),
-                );
-                let frac = 1.0 - ep.coverage;
-                self.add_unobserved(lt, t, frac);
-            }
-            // else: the segment bridges a driver restart — see the type docs
         }
-        self.last = Some((t, w));
-        self.last_epoch = self.cur;
+        self.naive_last = Some((t, w));
+        if !self.epochs.is_empty() && self.identified == self.epochs.len() {
+            self.corr_push(t, w);
+        } else {
+            self.pending.push_back((t, w));
+        }
     }
 
     /// Feed a batch of readings.
     pub fn push_points(&mut self, points: &[(f64, f64)]) {
         for &(t, w) in points {
             self.push_point(t, w);
+        }
+    }
+
+    /// One bucket's current `(naive_j, corrected_j, bound_j)` — the live
+    /// service's lock-cheap range queries read these directly instead of
+    /// cloning a full account view.
+    pub fn bucket_energy(&self, b: usize) -> (f64, f64, f64) {
+        let swing = self.max_w[b] - self.min_w[b];
+        let bound = if swing.is_finite() && swing > 0.0 { swing * self.uncovered_s[b] } else { 0.0 };
+        (self.naive_j[b], self.corrected_j[b], bound)
+    }
+
+    /// Time up to which every bucket is final: later readings (naive), the
+    /// corrected drain (deferred readings + the shift reaching backwards)
+    /// and min/max swing bookkeeping can no longer change buckets ending
+    /// at or before this watermark. Conservative: an epoch whose identity
+    /// is still pending might carry any shift up to the hard cap
+    /// [`super::registry::MAX_SHIFT_S`] (which `SensorIdentity::shift_s`
+    /// enforces), so that cap is always subtracted.
+    pub fn frozen_before(&self) -> f64 {
+        let naive_t = match self.naive_last {
+            Some((t, _)) => t,
+            None => return f64::NEG_INFINITY,
+        };
+        let corr_t = self.pending.front().map(|p| p.0).unwrap_or(naive_t);
+        let max_shift = self
+            .epochs[..self.identified]
+            .iter()
+            .map(|e| e.shift_s)
+            .fold(super::registry::MAX_SHIFT_S, f64::max);
+        naive_t.min(corr_t) - max_shift
+    }
+
+    /// Non-consuming snapshot of the account as it stands — the live
+    /// service's mid-ingest view. Buckets below [`Self::frozen_before`]
+    /// are final (`frozen_n` of them, from the left); later buckets are
+    /// partial sums over the readings seen so far.
+    pub fn account_view(
+        &self,
+        node_id: usize,
+        model: &'static str,
+        generation: Generation,
+        identity: SensorIdentity,
+        truth_j: Vec<f64>,
+        complete: bool,
+    ) -> NodeAccount {
+        assert_eq!(truth_j.len(), self.spec.n, "truth bucket arity");
+        let bound_j: Vec<f64> = (0..self.spec.n)
+            .map(|b| {
+                let swing = self.max_w[b] - self.min_w[b];
+                if swing.is_finite() && swing > 0.0 {
+                    swing * self.uncovered_s[b]
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let frozen_n = if complete {
+            self.spec.n
+        } else {
+            let wm = self.frozen_before();
+            (0..self.spec.n).take_while(|&b| self.spec.bounds(b).1 <= wm).count()
+        };
+        NodeAccount {
+            node_id,
+            model,
+            generation,
+            identity,
+            spec: self.spec,
+            naive_j: self.naive_j.clone(),
+            corrected_j: self.corrected_j.clone(),
+            bound_j,
+            truth_j,
+            readings: self.readings,
+            complete,
+            frozen_n,
         }
     }
 
@@ -277,31 +478,10 @@ impl NodeAccountant {
         identity: SensorIdentity,
         truth_j: Vec<f64>,
     ) -> NodeAccount {
-        assert_eq!(truth_j.len(), self.spec.n, "truth bucket arity");
-        let bound_j: Vec<f64> = (0..self.spec.n)
-            .map(|b| {
-                let swing = self.max_w[b] - self.min_w[b];
-                if swing.is_finite() && swing > 0.0 {
-                    swing * self.uncovered_s[b]
-                } else {
-                    0.0
-                }
-            })
-            .collect();
-        NodeAccount {
-            node_id,
-            model,
-            generation,
-            identity,
-            spec: self.spec,
-            naive_j: self.naive_j,
-            corrected_j: self.corrected_j,
-            bound_j,
-            truth_j,
-            readings: self.readings,
-        }
+        self.account_view(node_id, model, generation, identity, truth_j, true)
     }
 }
+
 
 /// A finished per-node account: bucketed naive/corrected/truth energies.
 #[derive(Debug, Clone)]
@@ -321,6 +501,14 @@ pub struct NodeAccount {
     pub truth_j: Vec<f64>,
     /// Readings ingested for this node.
     pub readings: u64,
+    /// Whether the node's stream has ended (a finished account) or this is
+    /// a live mid-ingest view.
+    pub complete: bool,
+    /// Leading buckets that are final: for a complete account all of them,
+    /// for a live view the buckets whose end lies below the accountant's
+    /// freeze watermark — those values are bit-for-bit what the finished
+    /// account will hold.
+    pub frozen_n: usize,
 }
 
 impl NodeAccount {
@@ -402,6 +590,22 @@ impl FleetEnergy {
     }
 }
 
+/// The bucket ranges `[lo, hi)` of the consecutive observation windows a
+/// `window_s`-wide rolling view tiles the spec into (shared by
+/// [`FleetAccounts::window_snapshots`] and the service's `WindowClosed`
+/// progress events so the two can never disagree about boundaries).
+pub fn window_tiles(spec: &BucketSpec, window_s: f64) -> Vec<(usize, usize)> {
+    let per = ((window_s / spec.bucket_s).round() as usize).max(1);
+    let mut out = Vec::new();
+    let mut b = 0usize;
+    while b < spec.n {
+        let hi = (b + per).min(spec.n);
+        out.push((b, hi));
+        b = hi;
+    }
+    out
+}
+
 /// Fleet-level accounts: per-node accounts plus their bucket-wise sums.
 /// The merge folds nodes in ascending `node_id` order, so the fleet sums
 /// are deterministic regardless of worker count or completion order.
@@ -440,33 +644,23 @@ impl FleetAccounts {
     }
 
     /// Fleet energy over `[t0, t1]` at whole-bucket granularity: every
-    /// bucket overlapping the range contributes fully.
+    /// bucket overlapping the range contributes fully. The query range is
+    /// clamped to the bucketed span first ([`BucketSpec::visit_range`]);
+    /// an inverted, NaN, or fully out-of-range `[t0, t1]` yields zeroed
+    /// totals over an empty range anchored at the clamped start — never
+    /// garbage indices.
     pub fn energy_between(&self, t0: f64, t1: f64) -> FleetEnergy {
-        let mut out = FleetEnergy {
-            t0: f64::INFINITY,
-            t1: f64::NEG_INFINITY,
-            naive_j: 0.0,
-            corrected_j: 0.0,
-            bound_j: 0.0,
-            truth_j: 0.0,
-        };
-        for b in 0..self.spec.n {
-            let (lo, hi) = self.spec.bounds(b);
-            if hi <= t0 || lo >= t1 {
-                continue;
-            }
-            out.t0 = out.t0.min(lo);
-            out.t1 = out.t1.max(hi);
-            out.naive_j += self.fleet_naive_j[b];
-            out.corrected_j += self.fleet_corrected_j[b];
-            out.bound_j += self.fleet_bound_j[b];
-            out.truth_j += self.fleet_truth_j[b];
-        }
-        if !out.t0.is_finite() {
-            out.t0 = t0;
-            out.t1 = t0;
-        }
-        out
+        let mut naive_j = 0.0;
+        let mut corrected_j = 0.0;
+        let mut bound_j = 0.0;
+        let mut truth_j = 0.0;
+        let (ot0, ot1) = self.spec.visit_range(t0, t1, |b| {
+            naive_j += self.fleet_naive_j[b];
+            corrected_j += self.fleet_corrected_j[b];
+            bound_j += self.fleet_bound_j[b];
+            truth_j += self.fleet_truth_j[b];
+        });
+        FleetEnergy { t0: ot0, t1: ot1, naive_j, corrected_j, bound_j, truth_j }
     }
 
     /// Partition the bucket range into consecutive observation windows of
@@ -475,30 +669,28 @@ impl FleetAccounts {
     /// operation. The last window may be short when the bucket range is
     /// not an exact multiple.
     pub fn window_snapshots(&self, window_s: f64) -> Vec<WindowSnapshot> {
-        let per = ((window_s / self.spec.bucket_s).round() as usize).max(1);
-        let mut out = Vec::new();
-        let mut b = 0usize;
-        while b < self.spec.n {
-            let hi = (b + per).min(self.spec.n);
-            let mut w = WindowSnapshot {
-                index: out.len(),
-                t0: self.spec.bounds(b).0,
-                t1: self.spec.bounds(hi - 1).1,
-                naive_j: 0.0,
-                corrected_j: 0.0,
-                bound_j: 0.0,
-                truth_j: 0.0,
-            };
-            for k in b..hi {
-                w.naive_j += self.fleet_naive_j[k];
-                w.corrected_j += self.fleet_corrected_j[k];
-                w.bound_j += self.fleet_bound_j[k];
-                w.truth_j += self.fleet_truth_j[k];
-            }
-            out.push(w);
-            b = hi;
-        }
-        out
+        window_tiles(&self.spec, window_s)
+            .into_iter()
+            .enumerate()
+            .map(|(index, (b, hi))| {
+                let mut w = WindowSnapshot {
+                    index,
+                    t0: self.spec.bounds(b).0,
+                    t1: self.spec.bounds(hi - 1).1,
+                    naive_j: 0.0,
+                    corrected_j: 0.0,
+                    bound_j: 0.0,
+                    truth_j: 0.0,
+                };
+                for k in b..hi {
+                    w.naive_j += self.fleet_naive_j[k];
+                    w.corrected_j += self.fleet_corrected_j[k];
+                    w.bound_j += self.fleet_bound_j[k];
+                    w.truth_j += self.fleet_truth_j[k];
+                }
+                w
+            })
+            .collect()
     }
 
     /// Fleet naive error over the whole observation, percent.
@@ -805,6 +997,126 @@ mod tests {
         assert_eq!(acc.window_snapshots(0.1).len(), 10);
         // window errors derive per window
         assert!(wins[0].naive_pct().is_finite());
+    }
+
+    /// The live-service path (spans opened before their identities are
+    /// known, corrected integration deferred and drained) is bit-for-bit
+    /// the up-front epoch-timeline accountant.
+    #[test]
+    fn incremental_epoch_announcement_matches_upfront_timeline_bitwise() {
+        use crate::telemetry::registry::SensorClass;
+        let spec = spec3();
+        let boxcar = |w: f64| SensorIdentity {
+            class: SensorClass::Boxcar,
+            update_s: Some(0.1),
+            window_s: Some(w),
+            smi_rise_s: None,
+        };
+        let epochs = vec![
+            EpochIdentity { t0: 0.0, identity: boxcar(0.025) },
+            EpochIdentity { t0: 1.6, identity: boxcar(0.05) },
+        ];
+        let pts: Vec<(f64, f64)> =
+            (0..60).map(|i| (i as f64 * 0.05, 100.0 + (i % 7) as f64 * 13.0)).collect();
+
+        let upfront = {
+            let mut a = NodeAccountant::for_epochs(spec, &epochs);
+            a.push_points(&pts);
+            a.finish(0, "m", Generation::Ampere, epochs[1].identity, vec![0.0; spec.n])
+        };
+
+        // live: epoch 0 opens, its points arrive *before* its identity,
+        // which lands mid-stream; epoch 1 opens at the boundary and is
+        // identified only after the stream ends
+        let live = {
+            let mut a = NodeAccountant::fresh(spec);
+            a.open_epoch(0.0);
+            let split_id = 20; // identity for epoch 0 arrives here
+            let boundary = pts.partition_point(|p| p.0 < 1.6);
+            for (i, &(t, w)) in pts.iter().enumerate() {
+                if i == split_id {
+                    a.identify_span(&epochs[0].identity);
+                }
+                if i == boundary {
+                    a.open_epoch(1.6);
+                }
+                a.push_point(t, w);
+            }
+            a.identify_span(&epochs[1].identity);
+            a.finish(0, "m", Generation::Ampere, epochs[1].identity, vec![0.0; spec.n])
+        };
+
+        for b in 0..spec.n {
+            assert_eq!(upfront.naive_j[b].to_bits(), live.naive_j[b].to_bits(), "bucket {b}");
+            assert_eq!(
+                upfront.corrected_j[b].to_bits(),
+                live.corrected_j[b].to_bits(),
+                "bucket {b}"
+            );
+            assert_eq!(upfront.bound_j[b].to_bits(), live.bound_j[b].to_bits(), "bucket {b}");
+        }
+        assert!(live.complete);
+        assert_eq!(live.frozen_n, spec.n);
+    }
+
+    /// A mid-ingest `account_view` reports frozen buckets whose values are
+    /// final — identical to the finished account's same buckets.
+    #[test]
+    fn account_view_frozen_buckets_are_final() {
+        let spec = BucketSpec::new(10.0, 1.0);
+        let identity = SensorIdentity::unsupported();
+        let pts: Vec<(f64, f64)> =
+            (0..101).map(|i| (i as f64 * 0.1, 150.0 + (i % 5) as f64 * 20.0)).collect();
+
+        let mut a = NodeAccountant::fresh(spec);
+        a.open_epoch(0.0);
+        a.identify_span(&identity);
+        let cut = 64; // mid-stream: last pushed t = 6.3 s
+        a.push_points(&pts[..cut]);
+        let mid = a.account_view(0, "m", Generation::Ampere, identity, vec![0.0; spec.n], false);
+        assert!(!mid.complete);
+        // watermark 6.3 - 0.5 (shift allowance) = 5.8 -> buckets 0..5 final
+        assert_eq!(mid.frozen_n, 5);
+
+        a.push_points(&pts[cut..]);
+        let done = a.finish(0, "m", Generation::Ampere, identity, vec![0.0; spec.n]);
+        for b in 0..mid.frozen_n {
+            assert_eq!(mid.naive_j[b].to_bits(), done.naive_j[b].to_bits(), "bucket {b}");
+            assert_eq!(mid.corrected_j[b].to_bits(), done.corrected_j[b].to_bits(), "bucket {b}");
+            assert_eq!(mid.bound_j[b].to_bits(), done.bound_j[b].to_bits(), "bucket {b}");
+        }
+    }
+
+    /// Satellite: inverted, out-of-range and NaN query ranges clamp to the
+    /// bucketed span and return zeroed totals.
+    #[test]
+    fn energy_between_clamps_inverted_and_out_of_range_queries() {
+        let spec = spec3();
+        let mut a = NodeAccountant::new(spec, 0.0, 1.0);
+        a.push_points(&[(0.0, 100.0), (3.0, 100.0)]);
+        let acc = FleetAccounts::merge(
+            spec,
+            vec![a.finish(0, "m", Generation::Ampere, ident(), vec![90.0, 90.0, 90.0])],
+        );
+        // inverted
+        let inv = acc.energy_between(2.5, 0.5);
+        assert_eq!(inv.naive_j, 0.0);
+        assert_eq!(inv.truth_j, 0.0);
+        assert_eq!((inv.t0, inv.t1), (2.5, 2.5));
+        // fully before / after the span
+        let before = acc.energy_between(-10.0, -5.0);
+        assert_eq!(before.truth_j, 0.0);
+        assert_eq!((before.t0, before.t1), (0.0, 0.0), "clamped to the span start");
+        let after = acc.energy_between(50.0, 60.0);
+        assert_eq!(after.truth_j, 0.0);
+        assert_eq!((after.t0, after.t1), (3.0, 3.0), "clamped to the span end");
+        // NaN endpoints degrade to an empty query, not garbage
+        let nan = acc.energy_between(f64::NAN, f64::NAN);
+        assert_eq!(nan.truth_j, 0.0);
+        // overlapping ranges still clamp outwards to whole buckets
+        let part = acc.energy_between(-5.0, 1.5);
+        assert_eq!((part.t0, part.t1), (0.0, 2.0));
+        assert!((part.truth_j - 180.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,26 +1,47 @@
-//! Sharded, bounded-queue ingestion of per-node reading batches.
+//! Sharded, bounded-queue ingestion of per-node reading batches — the
+//! producer half of the live [`super::service::TelemetryService`].
 //!
 //! Producer workers claim contiguous node shards off an atomic counter
 //! (like `coordinator::scheduler::run_campaign`), drive each node's
 //! [`super::source::ReadingSource`] — simulated capture, recorded-log
-//! replay, or a fault-injected wrapper — through `produce_source`, and
-//! push the resulting stream to the accounting consumer as fixed-size
-//! [`IngestMsg::Batch`]es over a **bounded** queue (backpressure instead
-//! of unbounded buffering).
+//! replay, or a fault-injected wrapper — through the crate-internal
+//! `stream_source` loop, and
+//! push the node's life as a *message protocol* over a **bounded** queue
+//! (backpressure instead of unbounded buffering):
 //!
-//! Per node, `produce_source`:
-//! 1. drains the source chunk by chunk into the worker's reused buffer;
-//! 2. splits the stream into sensor epochs with the registry's
-//!    driver-restart detector ([`super::registry::detect_epochs`]);
-//! 3. identifies each epoch from its own calibration origin (inheriting
-//!    the previous epoch's identity when a post-restart epoch carries no
-//!    usable probes);
-//! 4. computes the PMD ground-truth bucket energies when the source has a
-//!    reference (zeros otherwise — recorded logs have no PMD);
-//! 5. emits `NodeStart { epochs, truth } → Batch* → NodeEnd`.
+//! ```text
+//! NodeStart → EpochOpen(t0=0) → Batch* → EpochIdentified → Batch*
+//!           [→ EpochOpen(gap/replay) → Batch* → EpochIdentified → …]
+//!           → NodeEnd(truth)
+//! ```
+//!
+//! Unlike the old run-to-completion flow (drain everything, identify,
+//! then ship one header), the stream is **incremental**: batches flow as
+//! the source produces them, each sensor epoch is announced
+//! ([`IngestMsg::EpochOpen`]) *before* its readings and identified
+//! ([`IngestMsg::EpochIdentified`]) the moment its calibration phase
+//! completes ([`super::registry::IncrementalIdentifier`]) — which is what
+//! makes mid-ingest snapshots and live queries possible. Three in-stream
+//! mechanisms ride on that:
+//!
+//! 1. driver-restart detection ([`super::registry::EpochTracker`]): a
+//!    restart-sized gap closes the current epoch (identifying it from
+//!    whatever it buffered, inheriting the previous identity when a
+//!    post-restart epoch carries no usable probes) and opens the next;
+//! 2. drift monitoring ([`super::registry::DriftMonitor`]): armed after
+//!    each identification, it watches the published-value dynamics for the
+//!    signature of a silently changed sensor (a masked driver update);
+//! 3. adaptive re-calibration: when drift is confirmed — or an operator
+//!    sends `ControlMsg::Recalibrate{node}` through the [`RecalBoard`] —
+//!    the producer asks the source to *replay the calibration probes*
+//!    ([`super::source::ReadingSource::replay_probes`]) and opens a fresh
+//!    identification epoch at the replay origin, all at deterministic
+//!    stream positions (chunk boundaries), so worker/batch configuration
+//!    can never change the outcome. Sources that cannot re-probe (a
+//!    recorded log) surface [`IngestMsg::DriftSuspected`] instead.
 //!
 //! Allocation discipline: each worker owns one [`NodeScratch`] arena
-//! (stream + identification + truth buffers, reused node to node) and the
+//! (chunk + identification + truth buffers, reused node to node) and the
 //! sources reuse their capture arenas the same way; batch buffers are
 //! recycled through a pool channel fed back by the consumer — so ingestion
 //! performs O(1) amortised allocation per reading (asserted by the
@@ -30,10 +51,11 @@
 //! `(device, driver, field, service seed, node id, schedule, fault plan)`
 //! — or of the recorded log text — so the stream is deterministic for a
 //! fixed seed regardless of worker count, shard size, or batch size, and
-//! bit-for-bit equal to the materialised batch reference
-//! (`MeasurementRig::capture` + `smi::Poller`), which the integration
-//! tests pin.
+//! the per-epoch identities are bit-for-bit those of the batch reference
+//! (`MeasurementRig::capture` + `smi::Poller` + `identify_epoch`), which
+//! the integration tests pin.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Mutex;
 
@@ -44,9 +66,10 @@ use crate::sim::profile::Generation;
 
 use super::accounting::{pmd_bucket_energies, BucketSpec};
 use super::registry::{
-    detect_epochs, identify_epoch, EpochIdentity, IdentifyScratch, ProbeSchedule, SensorClass,
+    DriftMonitor, IdentifyScratch, IncrementalIdentifier, ProbeSchedule, SensorClass,
+    SensorIdentity,
 };
-use super::source::{ReadingSource, RESTART_OUTAGE_S};
+use super::source::{BreakKind, ReadingSource, MASKED_RESTART_OUTAGE_S, RESTART_OUTAGE_S};
 
 /// Deterministic per-node rig seed (independent of worker/shard claim
 /// order; mirrors `coordinator::scheduler::shard_seed`'s construction).
@@ -91,7 +114,7 @@ pub fn node_activity_into(
     duration_s: f64,
     out: &mut ActivitySignal,
 ) {
-    node_activity_with_restarts(sched, node_id, duration_s, &[], out);
+    node_activity_timeline(sched, node_id, duration_s, &[], out);
 }
 
 /// [`node_activity_into`] for an observation interrupted by driver
@@ -108,59 +131,100 @@ pub fn node_activity_with_restarts(
     restarts: &[f64],
     out: &mut ActivitySignal,
 ) {
+    let breaks: Vec<(f64, BreakKind)> =
+        restarts.iter().map(|&t| (t, BreakKind::Restart)).collect();
+    node_activity_timeline(sched, node_id, duration_s, &breaks, out);
+}
+
+/// Fill `[from, until)` with whole production-workload iterations (the
+/// 0.05 s slack keeps the last iteration clear of the segment boundary).
+/// Shared by [`node_activity_timeline`] and the probe-replay tail planner
+/// (`SimSource::replay_probes`) so the two can never drift apart.
+pub(crate) fn append_workload_iterations(
+    wl: &Workload,
+    from: f64,
+    until: f64,
+    out: &mut ActivitySignal,
+) {
+    let iter_s = wl.iteration_s();
+    let mut t = from;
+    while t + iter_s <= until - 0.05 {
+        for ph in wl.pattern {
+            if ph.util > 0.0 {
+                out.push(t, ph.duration_s, ph.util);
+            }
+            t += ph.duration_s;
+        }
+    }
+}
+
+/// The general form over a break timeline: a [`BreakKind::Restart`]
+/// quiesces for [`RESTART_OUTAGE_S`] and re-runs the calibration probes
+/// (the node noticed); a [`BreakKind::DriverUpdate`] quiesces only for
+/// [`MASKED_RESTART_OUTAGE_S`] and resumes production **without** probes —
+/// nobody noticed, which is exactly why the drift monitor exists.
+pub fn node_activity_timeline(
+    sched: &ProbeSchedule,
+    node_id: usize,
+    duration_s: f64,
+    breaks: &[(f64, BreakKind)],
+    out: &mut ActivitySignal,
+) {
     out.segments.clear();
     let wl = node_workload(node_id);
-    let iter_s = wl.iteration_s();
     let mut origin = 0.0;
-    for &seg_end in restarts.iter().chain(std::iter::once(&duration_s)) {
-        sched.append_activity_at(origin, out);
-        let mut t = origin + sched.calibration_end();
-        while t + iter_s <= seg_end - 0.05 {
-            for ph in wl.pattern {
-                if ph.util > 0.0 {
-                    out.push(t, ph.duration_s, ph.util);
-                }
-                t += ph.duration_s;
+    let mut probes = true;
+    let mut i = 0;
+    loop {
+        let (seg_end, kind) =
+            breaks.get(i).map(|&(t, k)| (t, Some(k))).unwrap_or((duration_s, None));
+        let mut t = origin;
+        if probes {
+            sched.append_activity_at(origin, out);
+            t = origin + sched.calibration_end();
+        }
+        append_workload_iterations(wl, t, seg_end, out);
+        match kind {
+            None => break,
+            Some(BreakKind::Restart) => {
+                origin = seg_end + RESTART_OUTAGE_S;
+                probes = true;
+            }
+            Some(BreakKind::DriverUpdate(_)) => {
+                origin = seg_end + MASKED_RESTART_OUTAGE_S;
+                probes = false;
             }
         }
-        origin = seg_end + RESTART_OUTAGE_S;
+        i += 1;
     }
 }
 
-/// Messages flowing from ingest workers to the accounting consumer.
+/// Messages flowing from ingest workers to the accounting consumer — one
+/// node's life as an ordered protocol (see the module docs).
 #[derive(Debug)]
 pub enum IngestMsg {
-    /// A node finished calibration: per-epoch identities + ground-truth
-    /// bucket energies; its reading batches follow.
-    NodeStart(Box<NodeStart>),
+    /// A node joined the service; its epochs and batches follow.
+    NodeStart { node_id: usize, model: &'static str, generation: Generation },
+    /// A sensor epoch begins at `t0`: every following reading of this node
+    /// (until the next `EpochOpen`) belongs to it. `recal` marks an
+    /// adaptive/commanded probe replay rather than a detected restart.
+    EpochOpen { node_id: usize, t0: f64, recal: bool },
+    /// The open epoch's identity (sent when its calibration completes, or
+    /// at epoch close for epochs that never finished calibrating).
+    EpochIdentified { node_id: usize, t0: f64, identity: SensorIdentity },
     /// One batch of polled `(t, W)` readings, in stream order per node.
     Batch { node_id: usize, points: Vec<(f64, f64)> },
-    /// The node's stream is complete.
-    NodeEnd { node_id: usize },
-}
-
-/// Per-node stream header.
-#[derive(Debug)]
-pub struct NodeStart {
-    pub node_id: usize,
-    pub model: &'static str,
-    pub generation: Generation,
-    /// Identification per sensor epoch (one entry unless the stream
-    /// carried driver restarts), ascending by start time.
-    pub epochs: Vec<EpochIdentity>,
-    /// PMD ground-truth energy per accounting bucket, joules (all zero
-    /// when the source carries no reference, e.g. recorded logs).
-    pub truth_j: Vec<f64>,
-}
-
-impl NodeStart {
-    /// The node's current (latest-epoch) identity.
-    pub fn identity(&self) -> super::registry::SensorIdentity {
-        self.epochs
-            .last()
-            .map(|e| e.identity)
-            .unwrap_or_else(super::registry::SensorIdentity::unsupported)
-    }
+    /// Drift was confirmed but the source cannot replay probes (recorded
+    /// logs): surfaced to operators instead of re-calibrating.
+    DriftSuspected { node_id: usize, t: f64 },
+    /// The node's stream ended; `truth_j` is the PMD ground-truth energy
+    /// per accounting bucket (all zero when the source carries no
+    /// reference), computed at end so probe replays are reflected.
+    /// `complete` is false when the stream was cut short by a shutdown —
+    /// the truth reference is then truncated at the cut and the account
+    /// stays a partial view, so partial-snapshot error metrics never
+    /// compare prefix-only energy against a full-duration reference.
+    NodeEnd { node_id: usize, truth_j: Vec<f64>, complete: bool },
 }
 
 /// Ingest throughput counters.
@@ -169,23 +233,72 @@ pub struct IngestStats {
     pub nodes: usize,
     pub batches: u64,
     pub readings: u64,
+    /// Adaptive/commanded probe replays that actually ran.
+    pub recalibrations: u64,
+    /// Drift confirmations on sources that cannot re-probe.
+    pub drift_suspected: u64,
 }
 
-/// Per-worker scratch arena: the assembled node stream, epoch indices,
-/// identification buffers and truth buckets, reused across every node the
-/// worker processes. (The capture-side arenas live inside the sources.)
-#[derive(Debug, Default)]
+/// Cross-thread re-calibration requests: one flag per node, set by
+/// `ControlMsg::Recalibrate{node}` (or by the producer's own drift
+/// monitor) and consumed by the node's producer at its next chunk
+/// boundary.
+#[derive(Debug)]
+pub struct RecalBoard {
+    flags: Vec<AtomicBool>,
+}
+
+impl RecalBoard {
+    pub fn new(n: usize) -> Self {
+        RecalBoard { flags: (0..n).map(|_| AtomicBool::new(false)).collect() }
+    }
+
+    /// Request a re-calibration of `node`; `false` when the node id is
+    /// outside the fleet.
+    pub fn request(&self, node: usize) -> bool {
+        match self.flags.get(node) {
+            Some(f) => {
+                f.store(true, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Consume a pending request for `node`.
+    pub fn take(&self, node: usize) -> bool {
+        self.flags.get(node).map(|f| f.swap(false, Ordering::Relaxed)).unwrap_or(false)
+    }
+}
+
+/// Per-worker scratch arena: the chunk buffer, the incremental
+/// identifier + drift monitor, identification buffers and truth buckets,
+/// reused across every node the worker processes. (The capture-side
+/// arenas live inside the sources.)
+#[derive(Debug)]
 pub struct NodeScratch {
     pub(crate) id: IdentifyScratch,
-    pub(crate) stream: Vec<(f64, f64)>,
-    pub(crate) epoch_starts: Vec<usize>,
-    pub(crate) epochs: Vec<EpochIdentity>,
+    pub(crate) ident: IncrementalIdentifier,
+    pub(crate) monitor: DriftMonitor,
+    pub(crate) chunk: Vec<(f64, f64)>,
     pub(crate) truth: Vec<f64>,
 }
 
 impl NodeScratch {
     pub fn new() -> Self {
-        NodeScratch::default()
+        NodeScratch {
+            id: IdentifyScratch::default(),
+            ident: IncrementalIdentifier::new(&ProbeSchedule::default()),
+            monitor: DriftMonitor::new(),
+            chunk: Vec::new(),
+            truth: Vec::new(),
+        }
+    }
+}
+
+impl Default for NodeScratch {
+    fn default() -> Self {
+        NodeScratch::new()
     }
 }
 
@@ -198,26 +311,69 @@ pub(crate) struct Emitter<'a> {
 }
 
 impl Emitter<'_> {
-    /// Emit one node's header, its stream as recycled batches, and the end
-    /// marker. Send errors (consumer gone) are ignored — the service is
-    /// already unwinding.
-    fn send_node(&self, start: NodeStart, points: &[(f64, f64)]) {
-        let node_id = start.node_id;
-        if self.tx.send(IngestMsg::NodeStart(Box::new(start))).is_err() {
+    fn fresh_buf(&self) -> Vec<(f64, f64)> {
+        let mut buf = match self.pool.lock() {
+            Ok(rx) => rx.try_recv().unwrap_or_default(),
+            Err(_) => Vec::new(),
+        };
+        buf.clear();
+        buf
+    }
+}
+
+/// Per-node emission state: accumulates readings into recycled batch
+/// buffers and interleaves protocol messages in stream order. A dead
+/// consumer (send error) latches `dead` and every later op is a no-op —
+/// the service is already unwinding.
+pub(crate) struct NodeEmitter<'a, 'b> {
+    emit: &'b Emitter<'a>,
+    node_id: usize,
+    buf: Vec<(f64, f64)>,
+    dead: bool,
+}
+
+impl<'a, 'b> NodeEmitter<'a, 'b> {
+    pub(crate) fn new(emit: &'b Emitter<'a>, node_id: usize) -> Self {
+        let buf = emit.fresh_buf();
+        NodeEmitter { emit, node_id, buf, dead: false }
+    }
+
+    pub(crate) fn is_dead(&self) -> bool {
+        self.dead
+    }
+
+    /// Send a protocol message, flushing buffered readings first so the
+    /// consumer sees everything in stream order.
+    pub(crate) fn send(&mut self, msg: IngestMsg) {
+        self.flush();
+        if self.dead {
             return;
         }
-        for chunk in points.chunks(self.batch.max(1)) {
-            let mut buf = match self.pool.lock() {
-                Ok(rx) => rx.try_recv().unwrap_or_default(),
-                Err(_) => Vec::new(),
-            };
-            buf.clear();
-            buf.extend_from_slice(chunk);
-            if self.tx.send(IngestMsg::Batch { node_id, points: buf }).is_err() {
-                return;
-            }
+        if self.emit.tx.send(msg).is_err() {
+            self.dead = true;
         }
-        let _ = self.tx.send(IngestMsg::NodeEnd { node_id });
+    }
+
+    /// Append one reading, shipping a batch whenever it fills.
+    pub(crate) fn push(&mut self, t: f64, w: f64) {
+        if self.dead {
+            return;
+        }
+        self.buf.push((t, w));
+        if self.buf.len() >= self.emit.batch.max(1) {
+            self.flush();
+        }
+    }
+
+    /// Ship the partial batch (no-op when empty).
+    pub(crate) fn flush(&mut self) {
+        if self.dead || self.buf.is_empty() {
+            return;
+        }
+        let points = std::mem::replace(&mut self.buf, self.emit.fresh_buf());
+        if self.emit.tx.send(IngestMsg::Batch { node_id: self.node_id, points }).is_err() {
+            self.dead = true;
+        }
     }
 }
 
@@ -225,7 +381,7 @@ impl Emitter<'_> {
 /// could use (a re-calibration that never ran leaves the post-restart
 /// epoch quantised/unsupported — the node then keeps its previous
 /// identity rather than forgetting what it knew).
-fn informative(identity: &super::registry::SensorIdentity) -> bool {
+fn informative(identity: &SensorIdentity) -> bool {
     !matches!(identity.class, SensorClass::Quantised | SensorClass::Unsupported)
 }
 
@@ -244,12 +400,20 @@ fn informative(identity: &super::registry::SensorIdentity) -> bool {
 ///   outage, and an "epoch" split off by an outage has no probes at its
 ///   origin, so its estimate is production-workload noise. Stability wins
 ///   — a device's window does not change across restarts.
+///
+/// A *probe replay* epoch is exempt from the window-disagreement clause:
+/// its probes ran for real (the service scheduled them), so a confirmed
+/// large change is precisely the drift being corrected.
 fn reconcile_epoch_identity(
-    prev: super::registry::SensorIdentity,
-    cur: super::registry::SensorIdentity,
-) -> super::registry::SensorIdentity {
+    prev: SensorIdentity,
+    cur: SensorIdentity,
+    probes_ran: bool,
+) -> SensorIdentity {
     if !informative(&cur) {
         return if informative(&prev) { prev } else { cur };
+    }
+    if probes_ran {
+        return cur;
     }
     if cur.class == SensorClass::Boxcar && prev.class == SensorClass::Boxcar {
         if let (Some(pu), Some(cu), Some(pw)) = (prev.update_s, cur.update_s, prev.window_s) {
@@ -259,7 +423,7 @@ fn reconcile_epoch_identity(
                     Some(cw) => (cw - pw).abs() > 0.5 * pw,
                 };
                 if keep_prev_window {
-                    return super::registry::SensorIdentity { window_s: Some(pw), ..cur };
+                    return SensorIdentity { window_s: Some(pw), ..cur };
                 }
             }
         }
@@ -267,54 +431,176 @@ fn reconcile_epoch_identity(
     cur
 }
 
-/// Drain one prepared source, identify its sensor epoch by epoch, and
-/// stream it to the consumer. Pure function of the source's content, so
-/// worker/shard/batch configuration can never change the result.
-pub(crate) fn produce_source<S: ReadingSource>(
+/// One streamed epoch's producer-side bookkeeping.
+struct EpochState {
+    t0: f64,
+    index: usize,
+    identified: bool,
+    /// This epoch's calibration probes were actually scheduled (epoch 0,
+    /// post-restart re-calibrations, probe replays) as opposed to a
+    /// gap-split epoch that merely *might* contain probes.
+    probes_ran: bool,
+}
+
+/// Producer chunk size (constant, so chunk boundaries — and therefore the
+/// deterministic probe-replay decision points — never depend on service
+/// configuration).
+const CHUNK: usize = 1024;
+
+/// Drive one prepared source through the live ingest protocol (see module
+/// docs). Pure function of the source's content plus the (idempotent)
+/// re-calibration requests on `board`, so worker/shard/batch configuration
+/// can never change the result; external `ControlMsg::Recalibrate`
+/// requests land at chunk boundaries of whatever chunk is in flight when
+/// they arrive, which is the one deliberately timing-dependent input.
+pub(crate) fn stream_source<S: ReadingSource>(
     source: &mut S,
     sched: &ProbeSchedule,
     spec: BucketSpec,
     gap_s: f64,
     scratch: &mut NodeScratch,
     emit: &Emitter<'_>,
+    board: Option<&RecalBoard>,
+    stop: Option<&AtomicBool>,
 ) {
-    // 1. assemble the stream (chunked pulls into the reused buffer)
-    scratch.stream.clear();
-    while source.fill(&mut scratch.stream, 1024) > 0 {}
+    use super::registry::EpochTracker;
 
-    // 2. epoch boundaries from the driver-restart signature
-    detect_epochs(&scratch.stream, gap_s, &mut scratch.epoch_starts);
+    let info = source.info();
+    let node_id = info.node_id;
+    let mut em = NodeEmitter::new(emit, node_id);
+    em.send(IngestMsg::NodeStart {
+        node_id,
+        model: info.model,
+        generation: info.generation,
+    });
+    em.send(IngestMsg::EpochOpen { node_id, t0: 0.0, recal: false });
 
-    // 3. identify each epoch from its own origin
-    scratch.epochs.clear();
-    let truth_view = source.truth();
-    if scratch.epoch_starts.is_empty() {
-        // no readings at all: one unidentified epoch
-        let identity = identify_epoch(&[], truth_view, sched, 0.0, &mut scratch.id);
-        scratch.epochs.push(EpochIdentity { t0: 0.0, identity });
-    } else {
-        for (k, &start) in scratch.epoch_starts.iter().enumerate() {
-            let end = scratch
-                .epoch_starts
-                .get(k + 1)
-                .copied()
-                .unwrap_or(scratch.stream.len());
-            let slice = &scratch.stream[start..end];
-            // epoch 0's calibration runs from the stream origin; a
-            // re-calibration runs from the first post-restart reading
-            let origin = if k == 0 { 0.0 } else { slice.first().map(|p| p.0).unwrap_or(0.0) };
-            let t0 = if k == 0 { 0.0 } else { origin };
-            let mut identity = identify_epoch(slice, truth_view, sched, origin, &mut scratch.id);
-            if k > 0 {
-                if let Some(prev) = scratch.epochs.last() {
-                    identity = reconcile_epoch_identity(prev.identity, identity);
+    let mut tracker = EpochTracker::new(gap_s);
+    scratch.ident.reset(sched, 0.0);
+    scratch.monitor.disarm();
+    let mut epoch = EpochState { t0: 0.0, index: 0, identified: false, probes_ran: true };
+    let mut prev_identity: Option<SensorIdentity> = None;
+    let mut replay_at: Option<f64> = None;
+    let mut want_recal = false;
+    let mut drift_reported = false;
+    let mut cut_short = false;
+    let mut last_t = f64::NEG_INFINITY;
+
+    // close the open epoch: identify it from whatever it buffered (the
+    // completed calibration, or the partial slice for short epochs),
+    // reconcile with the node's previous identity, and announce it.
+    macro_rules! close_epoch {
+        ($src:expr) => {{
+            if !epoch.identified {
+                let mut id = scratch.ident.finalize($src.truth(), &mut scratch.id);
+                if epoch.index > 0 {
+                    if let Some(prev) = prev_identity {
+                        id = reconcile_epoch_identity(prev, id, epoch.probes_ran);
+                    }
+                }
+                em.send(IngestMsg::EpochIdentified { node_id, t0: epoch.t0, identity: id });
+                prev_identity = Some(id);
+            }
+        }};
+    }
+
+    loop {
+        scratch.chunk.clear();
+        if source.fill(&mut scratch.chunk, CHUNK) == 0 {
+            break;
+        }
+        for i in 0..scratch.chunk.len() {
+            let (t, w) = scratch.chunk[i];
+            let mut switched = false;
+            if tracker.observe(t).is_some() {
+                // driver-restart signature: a new sensor epoch from this
+                // reading; its re-calibration (if any) runs from here. A
+                // pending probe-replay origin the gap swallowed — and any
+                // not-yet-actioned drift confirmation — is stale: the
+                // restart already forces a fresh identification.
+                close_epoch!(source);
+                em.send(IngestMsg::EpochOpen { node_id, t0: t, recal: false });
+                scratch.ident.reset(sched, t);
+                scratch.monitor.disarm();
+                epoch = EpochState {
+                    t0: t,
+                    index: epoch.index + 1,
+                    identified: false,
+                    probes_ran: false,
+                };
+                replay_at = replay_at.filter(|&tr| tr > t);
+                want_recal = false;
+                switched = true;
+            }
+            if !switched {
+                if let Some(tr) = replay_at {
+                    if t >= tr {
+                        // the probe replay's epoch begins: close the stale
+                        // one
+                        close_epoch!(source);
+                        em.send(IngestMsg::EpochOpen { node_id, t0: tr, recal: true });
+                        scratch.ident.reset(sched, tr);
+                        scratch.monitor.disarm();
+                        epoch = EpochState {
+                            t0: tr,
+                            index: epoch.index + 1,
+                            identified: false,
+                            probes_ran: true,
+                        };
+                        replay_at = None;
+                    }
                 }
             }
-            scratch.epochs.push(EpochIdentity { t0, identity });
+            if !epoch.identified {
+                if scratch.ident.push(t, w, source.truth(), &mut scratch.id)
+                    == Some(super::registry::CalPhase::Complete)
+                {
+                    let mut id = scratch.ident.identity();
+                    if epoch.index > 0 {
+                        if let Some(prev) = prev_identity {
+                            id = reconcile_epoch_identity(prev, id, epoch.probes_ran);
+                        }
+                    }
+                    em.send(IngestMsg::EpochIdentified { node_id, t0: epoch.t0, identity: id });
+                    prev_identity = Some(id);
+                    epoch.identified = true;
+                    scratch.monitor.arm(&id, t);
+                }
+            } else if scratch.monitor.observe(t, w) {
+                want_recal = true; // adaptive: drift confirmed
+            }
+            em.push(t, w);
+            last_t = t;
+        }
+        if em.is_dead() {
+            return;
+        }
+        // chunk boundary: act on re-calibration requests (external ones
+        // are consumed only when actionable, so an early request waits for
+        // the calibration to finish rather than vanishing)
+        if epoch.identified && replay_at.is_none() {
+            let external = board.map(|b| b.take(node_id)).unwrap_or(false);
+            if want_recal || external {
+                want_recal = false;
+                match source.replay_probes(last_t) {
+                    Some(tr) => replay_at = Some(tr),
+                    None => {
+                        if !drift_reported {
+                            em.send(IngestMsg::DriftSuspected { node_id, t: last_t });
+                            drift_reported = true;
+                        }
+                    }
+                }
+            }
+        }
+        if stop.map(|s| s.load(Ordering::Relaxed)).unwrap_or(false) {
+            cut_short = true;
+            break;
         }
     }
 
-    // 4. ground-truth bucket energies (zeros without a reference)
+    close_epoch!(source);
+
     match source.truth() {
         Some(view) => pmd_bucket_energies(view, &spec, &mut scratch.truth),
         None => {
@@ -322,17 +608,21 @@ pub(crate) fn produce_source<S: ReadingSource>(
             scratch.truth.resize(spec.n, 0.0);
         }
     }
-
-    // 5. header + batches + end
-    let info = source.info();
-    let start = NodeStart {
-        node_id: info.node_id,
-        model: info.model,
-        generation: info.generation,
-        epochs: scratch.epochs.clone(),
+    if cut_short {
+        // a shutdown cut the reading stream at `last_t`: zero the truth
+        // for buckets the readings never reached, so the partial account
+        // is not compared against a full-duration reference
+        for b in 0..spec.n {
+            if spec.bounds(b).0 >= last_t {
+                scratch.truth[b] = 0.0;
+            }
+        }
+    }
+    em.send(IngestMsg::NodeEnd {
+        node_id,
         truth_j: scratch.truth.clone(),
-    };
-    emit.send_node(start, &scratch.stream);
+        complete: !cut_short,
+    });
 }
 
 #[cfg(test)]
@@ -419,5 +709,78 @@ mod tests {
         let mut reference = ActivitySignal::idle();
         node_activity_into(&sched, 1, 40.0, &mut reference);
         assert_eq!(plain.segments, reference.segments);
+    }
+
+    /// A masked driver update quiesces briefly and resumes production
+    /// *without* probes — the stream carries no re-calibration signature.
+    #[test]
+    fn masked_update_activity_resumes_without_probes() {
+        use crate::sim::profile::DriverEpoch;
+        let sched = ProbeSchedule::default();
+        let cal = sched.calibration_end();
+        let update = cal + 3.0;
+        let duration = update + 10.0;
+        let mut act = ActivitySignal::idle();
+        node_activity_timeline(
+            &sched,
+            1,
+            duration,
+            &[(update, BreakKind::DriverUpdate(DriverEpoch::Post530))],
+            &mut act,
+        );
+        for w in act.segments.windows(2) {
+            assert!(w[1].t0 >= w[0].t1 - 1e-12, "{w:?}");
+        }
+        // quiesced only for the short masked outage
+        let down = (update, update + MASKED_RESTART_OUTAGE_S);
+        assert!(act
+            .segments
+            .iter()
+            .all(|s| s.t1 <= down.0 + 1e-12 || s.t0 >= down.1 - 1e-12));
+        // and NO step probe after it (the step would sit at down.1 + step_t)
+        let ghost_step = down.1 + sched.step_t;
+        assert!(
+            !act.segments.iter().any(|s| (s.t0 - ghost_step).abs() < 1e-9),
+            "a masked update must not re-run probes"
+        );
+        // production resumes soon after the outage
+        assert!(act
+            .segments
+            .iter()
+            .any(|s| s.t0 >= down.1 - 1e-12 && s.t0 < down.1 + 1.0));
+    }
+
+    #[test]
+    fn recal_board_requests_are_consumed_once() {
+        let board = RecalBoard::new(3);
+        assert!(!board.take(1));
+        assert!(board.request(1));
+        assert!(board.take(1));
+        assert!(!board.take(1), "requests are one-shot");
+        assert!(!board.request(7), "out-of-fleet ids are rejected");
+        assert!(!board.take(7));
+    }
+
+    #[test]
+    fn reconcile_keeps_previous_identity_for_uninformative_epochs() {
+        let boxcar = |u: f64, w: Option<f64>| SensorIdentity {
+            class: SensorClass::Boxcar,
+            update_s: Some(u),
+            window_s: w,
+            smi_rise_s: None,
+        };
+        let prev = boxcar(0.1, Some(0.025));
+        // uninformative fresh epoch -> previous wins
+        let out = reconcile_epoch_identity(prev, SensorIdentity::unsupported(), false);
+        assert_eq!(out, prev);
+        // wild window disagreement without real probes -> keep the window
+        let out = reconcile_epoch_identity(prev, boxcar(0.1, Some(0.3)), false);
+        assert_eq!(out.window_s, Some(0.025));
+        // but a probe replay's confirmed change is accepted
+        let out = reconcile_epoch_identity(prev, boxcar(0.1, Some(0.3)), true);
+        assert_eq!(out.window_s, Some(0.3));
+        // failed fresh estimate inherits the previous window
+        let out = reconcile_epoch_identity(prev, boxcar(0.1, None), false);
+        assert_eq!(out.window_s, Some(0.025));
     }
 }

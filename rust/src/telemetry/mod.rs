@@ -1,72 +1,102 @@
-//! Online fleet-telemetry service: streaming ingestion from any reading
-//! source, live sensor identification with driver-restart re-calibration,
-//! and corrected multi-window energy accounting.
+//! Online fleet telemetry as a **live service**: streaming ingestion from
+//! any reading source, incremental sensor identification, mid-ingest
+//! queries, and adaptive re-calibration.
 //!
 //! The paper's headline warning is fleet-scale: with only ~25% of runtime
 //! sampled on A100/H100-class sensors, a datacenter of 10,000s of GPUs
 //! silently mis-bills energy unless readings are corrected (§7, the
 //! "$1 million per year" example). Batch measurement campaigns
 //! (`coordinator::Scheduler`) answer that question offline; this module is
-//! the *online* counterpart — a long-running collector that consumes
-//! nvidia-smi poll streams and maintains live, corrected energy accounts:
+//! the *online* counterpart — a collector you **start, query while it
+//! runs, steer, and join**:
+//!
+//! ```no_run
+//! # use gpupower::coordinator::{Fleet, FleetConfig};
+//! # use gpupower::sim::profile::{DriverEpoch, PowerField};
+//! use gpupower::telemetry::{ControlMsg, ServiceSource, TelemetryService, TelemetryConfig};
+//! # let fleet = Fleet::build(FleetConfig { size: 4, models: vec![],
+//! #     driver: DriverEpoch::Post530, field: PowerField::Instant, seed: 1 });
+//! let cfg = TelemetryConfig::default();
+//! let handle = TelemetryService::start(&fleet, &cfg, &ServiceSource::Sim);
+//! let _events = handle.subscribe();           // progress: NodeIdentified, …
+//! let _live = handle.snapshot();              // mid-ingest snapshot
+//! let _e = handle.fleet_energy(0.0, 30.0);    // live range query
+//! handle.control(ControlMsg::Recalibrate { node: 3 });
+//! let _snap = handle.join();                  // final snapshot
+//! ```
 //!
 //! * [`source`] — the unified [`ReadingSource`] layer: simulated nodes
 //!   ([`SimSource`]), recorded nvidia-smi CSV logs ([`ReplaySource`],
 //!   parsed by the `smi::cli` parser that round-trips the emitter), and a
 //!   streaming fault injector ([`FaultSource`]: dropout, outages, stuck
-//!   values, driver restarts) that can wrap either;
+//!   values, driver restarts, *masked driver updates*) that can wrap
+//!   either; sources can also **replay their calibration probes**
+//!   mid-stream (`ReadingSource::replay_probes`) for re-calibration;
 //! * [`ingest`] — sharded producers drive each node's source through the
-//!   chunked, allocation-free pipeline and push reading batches over a
-//!   bounded queue (backpressure, batch-buffer recycling);
+//!   chunked, allocation-free pipeline and push an ordered message
+//!   protocol (`NodeStart → EpochOpen → Batch* → EpochIdentified → … →
+//!   NodeEnd`) over a bounded queue; epoch boundaries (restart gaps) and
+//!   drift-triggered probe replays are detected *in stream*, at
+//!   deterministic positions;
 //! * [`registry`] — every node runs the paper's §4 micro-benchmarks as an
-//!   online calibration protocol; the registry converges to the encoded
-//!   `sim::profile` ground truth, scores itself per generation, and tracks
-//!   *sensor epochs*: a driver restart's outage signature triggers
-//!   re-identification from the post-restart calibration;
+//!   online calibration protocol, identified **incrementally**
+//!   ([`registry::IncrementalIdentifier`]): the identity refines as each
+//!   probe phase completes and is final the moment calibration ends — not
+//!   at stream close. [`registry::DriftMonitor`] then watches the
+//!   published dynamics for silently changed sensors (a masked driver
+//!   update flipping the averaging window, Fig. 14) and schedules the
+//!   *adaptive re-calibration* probe replay;
 //! * [`accounting`] — per-node and fleet-level time-bucketed energy:
 //!   naive trapezoid, good-practice corrected (per-epoch boxcar-latency
 //!   shift from the *identified* window) with coverage-derived error
-//!   bounds, and the PMD ground truth — all maintained incrementally,
-//!   bit-for-bit equal to the batch reference — plus rolling
-//!   per-observation-window snapshots for continuous operation;
+//!   bounds, and the PMD ground truth — maintained incrementally with
+//!   epoch-aware deferral, so live partial-bucket snapshots expose
+//!   `frozen_n` already-final buckets and the finished account is
+//!   bit-for-bit the batch reference;
+//! * [`service`] — [`TelemetryService::start`] → [`ServiceHandle`]:
+//!   `snapshot()`, `fleet_energy()`, `subscribe()` ([`ServiceEvent`]),
+//!   `control()` ([`ControlMsg`]), `join()`/`shutdown()`;
 //! * [`query`] — fleet energy over a time range, per-window and
 //!   per-generation breakdowns, top-k mis-estimated nodes, and the
-//!   annualised cost error, rendered through [`crate::report::Table`].
+//!   annualised cost error, rendered through [`crate::report::Table`] —
+//!   all of which work on mid-ingest snapshots too.
+//!
+//! The historical one-call entry points ([`run_service`],
+//! [`run_service_with`], [`run_replay_service`]) are thin wrappers over
+//! start → drain → join and return exactly what they always did.
 //!
 //! Determinism: for a fixed [`TelemetryConfig::seed`] (and fault plan /
-//! log set) the accounts, the registry, and the ingested reading count are
+//! log set) the accounts, the registry, the per-epoch identities, the
+//! adaptive re-calibrations, and the ingested reading count are
 //! bit-for-bit identical regardless of worker count, shard size, batch
 //! size, or queue depth (per-node streams are pure functions of their
-//! inputs; fleet aggregation folds in node-id order). Only
-//! `stats.batches` depends on the batch size, trivially
-//! (`ceil(points / batch_size)` per node).
+//! inputs; drift decisions land at fixed chunk boundaries; fleet
+//! aggregation folds in node-id order). Only `stats.batches` depends on
+//! the batch size, trivially. The one deliberately timing-dependent input
+//! is an *external* `ControlMsg::Recalibrate`, which lands at whatever
+//! chunk boundary is next when it arrives.
 
 pub mod accounting;
 pub mod ingest;
 pub mod query;
 pub mod registry;
+pub mod service;
 pub mod source;
 
 pub use accounting::{
     BucketSpec, FleetAccounts, FleetEnergy, NodeAccount, NodeAccountant, WindowSnapshot,
 };
-pub use ingest::{IngestStats, NodeScratch};
+pub use ingest::{IngestStats, NodeScratch, RecalBoard};
 pub use registry::{
-    detect_epochs, EpochIdentity, EpochTracker, GenAccuracy, NodeIdentity, ProbeSchedule,
-    Registry, SensorClass, SensorIdentity, DRIVER_RESTART_GAP_S,
+    detect_epochs, CalPhase, DriftMonitor, EpochIdentity, EpochTracker, GenAccuracy,
+    IncrementalIdentifier, NodeIdentity, ProbeSchedule, Registry, SensorClass, SensorIdentity,
+    DRIVER_RESTART_GAP_S,
 };
+pub use service::{ControlMsg, ServiceEvent, ServiceHandle, TelemetryService};
 pub use source::{
-    FaultPlan, FaultSource, ReadingSource, ReplaySource, ServiceSource, SimSource, SourceInfo,
-    RESTART_OUTAGE_S,
+    BreakKind, FaultPlan, FaultSource, NodeTimeline, ReadingSource, ReplaySource, ServiceSource,
+    SimSource, SourceInfo, MASKED_RESTART_OUTAGE_S, RESTART_OUTAGE_S,
 };
-
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex};
-
-use crate::coordinator::Fleet;
-
-use ingest::{produce_source, Emitter, IngestMsg, NodeStart};
 
 /// Service configuration.
 #[derive(Debug, Clone, Copy)]
@@ -112,8 +142,11 @@ impl Default for TelemetryConfig {
     }
 }
 
-/// Everything the service learned about the fleet over its observation
-/// windows.
+/// Everything the service learned about the fleet — either a final
+/// snapshot (after `join`) or a live mid-ingest view
+/// ([`ServiceHandle::snapshot`]: partial accounts carry
+/// `complete == false` and expose their already-final `frozen_n`
+/// buckets).
 #[derive(Debug)]
 pub struct TelemetrySnapshot {
     /// Total observed stream time per node (all windows), seconds.
@@ -129,7 +162,8 @@ pub struct TelemetrySnapshot {
 }
 
 impl TelemetrySnapshot {
-    /// Fleet energy over `[t0, t1]` (whole-bucket granularity).
+    /// Fleet energy over `[t0, t1]` (whole-bucket granularity, clamped to
+    /// the bucketed span; inverted/out-of-range queries return zeros).
     pub fn fleet_energy(&self, t0: f64, t1: f64) -> FleetEnergy {
         self.accounts.energy_between(t0, t1)
     }
@@ -142,116 +176,15 @@ impl TelemetrySnapshot {
 
 /// One observation window's effective length under `cfg` (the calibration
 /// probes must fit).
-fn effective_window_s(cfg: &TelemetryConfig, sched: &ProbeSchedule) -> f64 {
+pub(crate) fn effective_window_s(cfg: &TelemetryConfig, sched: &ProbeSchedule) -> f64 {
     cfg.duration_s.max(sched.calibration_end() + 2.0)
 }
 
-/// The generic service scaffold: a bounded queue between `workers`
-/// producer threads (claiming node shards off an atomic counter, each with
-/// its own source state `W` and scratch arena) and the accounting
-/// consumer. Everything source-specific lives in `init`/`per_node`.
-fn run_core<W, I, P>(
-    n: usize,
-    cfg: &TelemetryConfig,
-    spec: BucketSpec,
-    init: I,
-    per_node: P,
-) -> (Vec<NodeAccount>, Registry, IngestStats)
-where
-    I: Fn() -> W + Sync,
-    P: Fn(&mut W, usize, &mut NodeScratch, &Emitter<'_>) + Sync,
-{
-    let shard_size = cfg.shard_size.max(1);
-    let n_shards = (n + shard_size - 1) / shard_size;
-    let workers = cfg.workers.max(1);
-    let next_shard = AtomicUsize::new(0);
+use crate::coordinator::Fleet;
 
-    let (tx, rx) = mpsc::sync_channel::<IngestMsg>(cfg.queue_depth.max(2));
-    let (pool_tx, pool_rx) = mpsc::channel::<Vec<(f64, f64)>>();
-    let pool = Mutex::new(pool_rx);
-
-    std::thread::scope(|scope| {
-        // The accounting consumer: drains the bounded queue, maintains one
-        // incremental accountant per in-flight node, recycles batch
-        // buffers back to the producers.
-        let consumer = scope.spawn(move || {
-            let mut inflight: HashMap<usize, (Box<NodeStart>, NodeAccountant)> = HashMap::new();
-            let mut finished: Vec<NodeAccount> = Vec::new();
-            let mut registry = Registry::default();
-            let mut stats = IngestStats::default();
-            for msg in rx {
-                match msg {
-                    IngestMsg::NodeStart(start) => {
-                        stats.nodes += 1;
-                        let acct = NodeAccountant::for_epochs(spec, &start.epochs);
-                        inflight.insert(start.node_id, (start, acct));
-                    }
-                    IngestMsg::Batch { node_id, points } => {
-                        stats.batches += 1;
-                        stats.readings += points.len() as u64;
-                        if let Some((_, acct)) = inflight.get_mut(&node_id) {
-                            acct.push_points(&points);
-                        }
-                        let _ = pool_tx.send(points); // recycle the buffer
-                    }
-                    IngestMsg::NodeEnd { node_id } => {
-                        if let Some((start, acct)) = inflight.remove(&node_id) {
-                            let identity = start.identity();
-                            let NodeStart { node_id, model, generation, epochs, truth_j } = *start;
-                            registry.insert(NodeIdentity {
-                                node_id,
-                                model,
-                                generation,
-                                identity,
-                                epochs,
-                            });
-                            finished
-                                .push(acct.finish(node_id, model, generation, identity, truth_j));
-                        }
-                    }
-                }
-            }
-            (finished, registry, stats)
-        });
-
-        for _ in 0..workers {
-            let tx = tx.clone();
-            let pool = &pool;
-            let next_shard = &next_shard;
-            let init = &init;
-            let per_node = &per_node;
-            let batch = cfg.batch_size.max(1);
-            scope.spawn(move || {
-                let emit = Emitter { tx, pool, batch };
-                let mut state = init();
-                let mut scratch = NodeScratch::new();
-                loop {
-                    let s = next_shard.fetch_add(1, Ordering::Relaxed);
-                    if s >= n_shards {
-                        break;
-                    }
-                    let lo = s * shard_size;
-                    let hi = (lo + shard_size).min(n);
-                    for idx in lo..hi {
-                        per_node(&mut state, idx, &mut scratch, &emit);
-                    }
-                }
-            });
-        }
-        drop(tx);
-        consumer.join().expect("telemetry consumer panicked")
-    })
-}
-
-/// Per-worker simulated-source state: plain, or wrapped in the streaming
-/// fault injector.
-enum SimWorker {
-    Plain(SimSource),
-    Faulty(FaultSource<SimSource>),
-}
-
-/// Run the telemetry service over a simulated fleet and return the
-/// snapshot (the original service: [`ServiceSource::Sim`]).
+/// Run the telemetry service over a simulated fleet to completion and
+/// return the snapshot (one-call convenience over
+/// [`TelemetryService::start`] + [`ServiceHandle::join`]).
 pub fn run_service(fleet: &Fleet, cfg: &TelemetryConfig) -> TelemetrySnapshot {
     run_service_with(fleet, cfg, &ServiceSource::Sim)
 }
@@ -265,121 +198,16 @@ pub fn run_service_with(
     cfg: &TelemetryConfig,
     src: &ServiceSource,
 ) -> TelemetrySnapshot {
-    if let ServiceSource::Replay(logs) = src {
-        return run_replay_service(logs, cfg).expect("invalid replay logs");
-    }
-    let sched = ProbeSchedule::default();
-    let window_s = effective_window_s(cfg, &sched);
-    let duration_s = window_s * cfg.windows.max(1) as f64;
-    let spec = BucketSpec::new(duration_s, cfg.bucket_s);
-    let driver = fleet.config.driver;
-    let field = fleet.config.field;
-    let plan = match src {
-        ServiceSource::Faulty(plan) => Some(plan),
-        _ => None,
-    };
-    let restarts = plan
-        .map(|p| p.effective_restarts(&sched, duration_s))
-        .unwrap_or_default();
-    let nodes = &fleet.nodes;
-
-    let (finished, mut registry, stats) = run_core(
-        nodes.len(),
-        cfg,
-        spec,
-        || match plan {
-            None => SimWorker::Plain(SimSource::new()),
-            Some(p) => SimWorker::Faulty(FaultSource::new(SimSource::new(), p.clone())),
-        },
-        |state, idx, scratch, emit| {
-            let node = &nodes[idx];
-            match state {
-                SimWorker::Plain(sim) => {
-                    sim.prepare(
-                        node.device.clone(),
-                        node.id,
-                        driver,
-                        field,
-                        cfg.seed,
-                        cfg.poll_period_s,
-                        &sched,
-                        duration_s,
-                        &[],
-                    );
-                    produce_source(sim, &sched, spec, DRIVER_RESTART_GAP_S, scratch, emit);
-                }
-                SimWorker::Faulty(faulty) => {
-                    let rig_seed = ingest::node_rig_seed(cfg.seed, node.id);
-                    faulty.inner_mut().prepare(
-                        node.device.clone(),
-                        node.id,
-                        driver,
-                        field,
-                        cfg.seed,
-                        cfg.poll_period_s,
-                        &sched,
-                        duration_s,
-                        &restarts,
-                    );
-                    faulty.reset(ingest::node_fault_seed(rig_seed), &restarts);
-                    produce_source(faulty, &sched, spec, DRIVER_RESTART_GAP_S, scratch, emit);
-                }
-            }
-        },
-    );
-
-    registry.finalize();
-    let accounts = FleetAccounts::merge(spec, finished);
-    TelemetrySnapshot { duration_s, window_s, schedule: sched, accounts, registry, stats }
+    TelemetryService::start(fleet, cfg, src).join()
 }
 
 /// Run the telemetry service over recorded nvidia-smi CSV logs (one node
-/// per log, node ids in log order). Each log is parsed exactly once, up
-/// front; the bucket span covers the *longer* of the configured duration
-/// and the logs' own recorded range, so a long recording is never
-/// silently truncated. The snapshot's truth/bound columns stay zero where
-/// no reference exists.
+/// per log, node ids in log order) to completion.
 pub fn run_replay_service(
     logs: &[String],
     cfg: &TelemetryConfig,
 ) -> Result<TelemetrySnapshot, String> {
-    use crate::smi::cli::{LogValue, QueryField, SmiLog};
-
-    let mut parsed: Vec<SmiLog> = Vec::with_capacity(logs.len());
-    let mut t_max = 0.0f64;
-    for (i, text) in logs.iter().enumerate() {
-        let log = crate::smi::cli::parse_log(text).map_err(|e| format!("replay log {i}: {e}"))?;
-        if let Some(tc) = log.column(&QueryField::Timestamp) {
-            for row in &log.rows {
-                if let LogValue::Seconds(t) = &row[tc] {
-                    t_max = t_max.max(*t);
-                }
-            }
-        }
-        parsed.push(log);
-    }
-    let sched = ProbeSchedule::default();
-    let window_s = effective_window_s(cfg, &sched);
-    // extend past the last recorded reading so its final bucket exists
-    let duration_s = (window_s * cfg.windows.max(1) as f64).max(t_max + 1e-9);
-    let spec = BucketSpec::new(duration_s, cfg.bucket_s);
-
-    let (finished, mut registry, stats) = run_core(
-        logs.len(),
-        cfg,
-        spec,
-        ReplaySource::new,
-        |src, idx, scratch, emit| {
-            // pre-validated above; a failure here would be a logic error
-            if src.prepare_from_parsed(idx, &parsed[idx]).is_ok() {
-                produce_source(src, &sched, spec, DRIVER_RESTART_GAP_S, scratch, emit);
-            }
-        },
-    );
-
-    registry.finalize();
-    let accounts = FleetAccounts::merge(spec, finished);
-    Ok(TelemetrySnapshot { duration_s, window_s, schedule: sched, accounts, registry, stats })
+    Ok(TelemetryService::start_replay(logs, cfg)?.join())
 }
 
 #[cfg(test)]
@@ -409,6 +237,7 @@ mod tests {
     fn assert_snapshots_identical(a: &TelemetrySnapshot, b: &TelemetrySnapshot) {
         assert_eq!(a.stats.nodes, b.stats.nodes);
         assert_eq!(a.stats.readings, b.stats.readings);
+        assert_eq!(a.stats.recalibrations, b.stats.recalibrations);
         assert_eq!(a.accounts.nodes.len(), b.accounts.nodes.len());
         for (x, y) in a.accounts.nodes.iter().zip(&b.accounts.nodes) {
             assert_eq!(x.node_id, y.node_id);
@@ -472,6 +301,8 @@ mod tests {
             assert_eq!(e.epochs.len(), 1, "no restarts -> single epoch");
         }
         assert_eq!(snap.registry.recalibrated(), 0);
+        assert_eq!(snap.stats.recalibrations, 0, "clean stream: no adaptive recal");
+        assert_eq!(snap.stats.drift_suspected, 0);
         assert!(
             snap.registry.overall_accuracy(PowerField::Instant, DriverEpoch::Post530) > 0.74,
             "uniform A100 fleet must identify nearly all nodes (the hard >=90% catalogue \
@@ -479,6 +310,11 @@ mod tests {
         );
         // part-time coverage -> nonzero error bound
         assert!(whole.bound_j > 0.0);
+        // every finished account is complete with all buckets frozen
+        for n in &snap.accounts.nodes {
+            assert!(n.complete);
+            assert_eq!(n.frozen_n, snap.accounts.spec.n);
+        }
         // single window configured -> one rolling snapshot covering it all
         let wins = snap.windows();
         assert_eq!(wins.len(), 1);
@@ -570,6 +406,62 @@ mod tests {
         // the accounts still close: truth untouched by collection faults
         for (f, c) in a.accounts.nodes.iter().zip(&clean.accounts.nodes) {
             assert_eq!(f.truth_total_j().to_bits(), c.truth_total_j().to_bits());
+        }
+    }
+
+    /// The live handle answers queries mid-ingest and the events stream
+    /// reports identification progress; the wrapper's one-call result is
+    /// reproduced by start → join.
+    #[test]
+    fn service_handle_live_queries_and_events() {
+        use std::time::Duration;
+        let fleet = small_fleet(2, &["A100 PCIe-40G"], 77);
+        let cfg = TelemetryConfig { workers: 1, shard_size: 1, ..fast_cfg() };
+        let reference = run_service(&fleet, &cfg);
+
+        let handle = TelemetryService::start(&fleet, &cfg, &ServiceSource::Sim);
+        let events = handle.subscribe();
+        // a snapshot can be taken at ANY moment without disturbing the run
+        let _early = handle.snapshot();
+        let _energy = handle.fleet_energy(0.0, 10.0);
+
+        let mut identified = 0usize;
+        let mut complete = 0usize;
+        let mut service_done = false;
+        while let Ok(ev) = events.recv_timeout(Duration::from_secs(30)) {
+            match ev {
+                ServiceEvent::NodeIdentified { .. } => identified += 1,
+                ServiceEvent::NodeComplete { .. } => complete += 1,
+                ServiceEvent::ServiceComplete => {
+                    service_done = true;
+                    break;
+                }
+                _ => {}
+            }
+        }
+        assert!(service_done, "service must announce completion");
+        assert_eq!(identified, 2, "every node identified exactly once");
+        assert_eq!(complete, 2);
+
+        let snap = handle.join();
+        assert_snapshots_identical(&reference, &snap);
+        // windows closed exactly once each
+        let wins = snap.windows();
+        assert_eq!(wins.len(), 1);
+    }
+
+    /// Shutdown mid-run yields a usable partial snapshot.
+    #[test]
+    fn shutdown_returns_partial_snapshot() {
+        let fleet = small_fleet(6, &["A100 PCIe-40G"], 78);
+        let cfg = TelemetryConfig { workers: 1, shard_size: 1, ..fast_cfg() };
+        let handle = TelemetryService::start(&fleet, &cfg, &ServiceSource::Sim);
+        let snap = handle.shutdown();
+        // whatever was ingested is accounted; never more than the fleet
+        assert!(snap.stats.nodes <= 6);
+        assert!(snap.accounts.nodes.len() <= 6);
+        for n in &snap.accounts.nodes {
+            assert!(n.readings > 0 || !n.complete);
         }
     }
 }

@@ -192,4 +192,23 @@ mod tests {
         assert_eq!(wt.rows.len(), snap.windows().len());
         assert!(wt.render().contains("rolling window snapshots"));
     }
+
+    /// Satellite: inverted or out-of-range query windows render as zeroed
+    /// tables over the clamped span instead of garbage.
+    #[test]
+    fn fleet_energy_table_clamps_bad_ranges() {
+        let snap = snapshot();
+        // inverted
+        let t = fleet_energy_table(&snap, 20.0, 5.0);
+        assert_eq!(t.rows.len(), 4);
+        assert_eq!(t.rows[0][1], "0.000", "inverted range -> zero truth kJ");
+        assert_eq!(t.rows[1][1], "0.000", "inverted range -> zero naive kJ");
+        // entirely outside the observation
+        let t = fleet_energy_table(&snap, 1e6, 2e6);
+        assert_eq!(t.rows[0][1], "0.000");
+        assert!(t.title.contains(&format!("{:.1}", snap.accounts.spec.t_end())));
+        // negative range clamps to the span start
+        let t = fleet_energy_table(&snap, -50.0, -10.0);
+        assert_eq!(t.rows[2][1], "0.000");
+    }
 }

@@ -158,17 +158,27 @@ pub struct SensorIdentity {
     pub smi_rise_s: Option<f64>,
 }
 
+/// Upper bound on the boxcar latency shift the corrected account will
+/// apply, seconds: half the largest averaging window in the catalogue
+/// (1 s). Identified windows are *estimates* — a noisy transient can read
+/// far past any real window — and an unbounded shift would both
+/// mis-correct and break the accounting layer's freeze watermark
+/// (`accounting::NodeAccountant::frozen_before` subtracts exactly this
+/// bound for epochs whose identity is still pending).
+pub const MAX_SHIFT_S: f64 = 0.5;
+
 impl SensorIdentity {
     /// Identity for a node that never published a reading.
     pub fn unsupported() -> Self {
         SensorIdentity { class: SensorClass::Unsupported, update_s: None, window_s: None, smi_rise_s: None }
     }
 
-    /// Boxcar latency shift the corrected account should apply (half the
-    /// identified window; 0 when the window is unknown or not a boxcar).
+    /// Boxcar latency shift the corrected account should apply: half the
+    /// identified window, capped at [`MAX_SHIFT_S`] (0 when the window is
+    /// unknown or not a boxcar).
     pub fn shift_s(&self) -> f64 {
         match (self.class, self.window_s) {
-            (SensorClass::Boxcar, Some(w)) => w / 2.0,
+            (SensorClass::Boxcar, Some(w)) => (w / 2.0).min(MAX_SHIFT_S),
             _ => 0.0,
         }
     }
@@ -252,26 +262,7 @@ pub fn identify_epoch(
         return SensorIdentity::unsupported();
     }
 
-    // --- §4.1: update period = median time between value changes over the
-    // fast square wave ---
-    scratch.deltas.clear();
-    let mut last_change_t = None;
-    let mut prev: Option<f64> = None;
-    let (u_lo, u_hi) = (origin + sched.update_start + 0.4, origin + sched.update_end());
-    for &(t, w) in points.iter().filter(|p| p.0 >= u_lo && p.0 <= u_hi) {
-        if let Some(pw) = prev {
-            if (w - pw).abs() >= CHANGE_EPS {
-                if let Some(lt) = last_change_t {
-                    scratch.deltas.push(t - lt);
-                }
-                last_change_t = Some(t);
-            }
-        } else {
-            last_change_t = Some(t);
-        }
-        prev = Some(w);
-    }
-    if scratch.deltas.len() < 5 {
+    let Some(update_s) = update_period_scan(points, sched, origin, scratch) else {
         // readings exist but the sensor never tracks a varying load
         return SensorIdentity {
             class: SensorClass::Quantised,
@@ -279,8 +270,7 @@ pub fn identify_epoch(
             window_s: None,
             smi_rise_s: None,
         };
-    }
-    let update_s = median(&scratch.deltas);
+    };
 
     // --- §4.2: transient classification over the step probe ---
     let transient = classify_transient(points, pmd, sched, origin, scratch);
@@ -363,6 +353,41 @@ pub fn identify_epoch(
         update_s: Some(update_s),
         window_s,
         smi_rise_s: transient.map(|t| t.smi_rise_s),
+    }
+}
+
+/// §4.1's update-period scan over the fast square wave: the median time
+/// between value changes, or `None` when fewer than five changes were seen
+/// (a sensor that never tracks a varying load). Shared verbatim by
+/// [`identify_epoch`] and the [`IncrementalIdentifier`]'s mid-calibration
+/// refinement so the two can never disagree.
+fn update_period_scan(
+    points: &[(f64, f64)],
+    sched: &ProbeSchedule,
+    origin: f64,
+    scratch: &mut IdentifyScratch,
+) -> Option<f64> {
+    scratch.deltas.clear();
+    let mut last_change_t = None;
+    let mut prev: Option<f64> = None;
+    let (u_lo, u_hi) = (origin + sched.update_start + 0.4, origin + sched.update_end());
+    for &(t, w) in points.iter().filter(|p| p.0 >= u_lo && p.0 <= u_hi) {
+        if let Some(pw) = prev {
+            if (w - pw).abs() >= CHANGE_EPS {
+                if let Some(lt) = last_change_t {
+                    scratch.deltas.push(t - lt);
+                }
+                last_change_t = Some(t);
+            }
+        } else {
+            last_change_t = Some(t);
+        }
+        prev = Some(w);
+    }
+    if scratch.deltas.len() < 5 {
+        None
+    } else {
+        Some(median(&scratch.deltas))
     }
 }
 
@@ -546,6 +571,338 @@ pub fn detect_epochs(points: &[(f64, f64)], gap_s: f64, out: &mut Vec<usize>) {
     for (i, &(t, _)) in points.iter().enumerate() {
         if tracker.observe(t).is_some() {
             out.push(i);
+        }
+    }
+}
+
+/// Which calibration phase of the [`ProbeSchedule`] a stream position is
+/// in (relative to the epoch's origin).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CalPhase {
+    /// The step probe is still running.
+    Transient,
+    /// The step finished; the update-period square wave is running.
+    UpdateProbe,
+    /// The update wave finished; the aliased window waves are running.
+    WindowProbe,
+    /// Calibration is over: the identity is final for this epoch.
+    Complete,
+}
+
+/// Incremental per-epoch identification: feed readings in stream order and
+/// the identity refines as each calibration phase of the [`ProbeSchedule`]
+/// completes — transient class after the step probe, update period after
+/// the §4.1 wave, and the full [`identify_epoch`] result (bit-for-bit, it
+/// runs the same code over the buffered calibration readings) once the
+/// schedule ends. This is what lets the service answer "what is node N's
+/// sensor?" *while* node N is still streaming, instead of only after its
+/// stream closes.
+#[derive(Debug)]
+pub struct IncrementalIdentifier {
+    sched: ProbeSchedule,
+    origin: f64,
+    phase: CalPhase,
+    /// Readings buffered until the calibration completes (identification
+    /// needs them; buffering stops at [`CalPhase::Complete`]).
+    buf: Vec<(f64, f64)>,
+    draft: SensorIdentity,
+}
+
+impl IncrementalIdentifier {
+    pub fn new(sched: &ProbeSchedule) -> Self {
+        IncrementalIdentifier {
+            sched: *sched,
+            origin: 0.0,
+            phase: CalPhase::Transient,
+            buf: Vec::new(),
+            draft: SensorIdentity::unsupported(),
+        }
+    }
+
+    /// Rewind for a new epoch whose calibration schedule starts at
+    /// `origin` (buffer capacity is kept — the arena discipline).
+    pub fn reset(&mut self, sched: &ProbeSchedule, origin: f64) {
+        self.sched = *sched;
+        self.origin = origin;
+        self.phase = CalPhase::Transient;
+        self.buf.clear();
+        self.draft = SensorIdentity::unsupported();
+    }
+
+    pub fn phase(&self) -> CalPhase {
+        self.phase
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.phase == CalPhase::Complete
+    }
+
+    /// The best identity known so far (partial until
+    /// [`CalPhase::Complete`]).
+    pub fn identity(&self) -> SensorIdentity {
+        self.draft
+    }
+
+    /// Observe the next reading. Returns the phase that was *entered* when
+    /// this reading crossed one or more phase boundaries (the last one
+    /// entered, for sparse streams), refining the draft identity at each
+    /// crossing.
+    pub fn push(
+        &mut self,
+        t: f64,
+        w: f64,
+        pmd: Option<TraceView<'_>>,
+        scratch: &mut IdentifyScratch,
+    ) -> Option<CalPhase> {
+        if self.phase == CalPhase::Complete {
+            return None;
+        }
+        self.buf.push((t, w));
+        let mut entered = None;
+        loop {
+            let next = match self.phase {
+                CalPhase::Transient if t >= self.origin + self.sched.step_end => {
+                    Some(CalPhase::UpdateProbe)
+                }
+                CalPhase::UpdateProbe if t >= self.origin + self.sched.update_end() => {
+                    Some(CalPhase::WindowProbe)
+                }
+                CalPhase::WindowProbe if t >= self.origin + self.sched.calibration_end() => {
+                    Some(CalPhase::Complete)
+                }
+                _ => None,
+            };
+            let Some(next) = next else { break };
+            self.phase = next;
+            self.refine(next, pmd, scratch);
+            entered = Some(next);
+        }
+        entered
+    }
+
+    fn refine(
+        &mut self,
+        entered: CalPhase,
+        pmd: Option<TraceView<'_>>,
+        scratch: &mut IdentifyScratch,
+    ) {
+        match entered {
+            CalPhase::Transient => {}
+            CalPhase::UpdateProbe => {
+                // step probe complete: transient preview (rise + RC flag)
+                if let Some(tr) = classify_transient(&self.buf, pmd, &self.sched, self.origin, scratch)
+                {
+                    self.draft.smi_rise_s = Some(tr.smi_rise_s);
+                    if tr.is_rc {
+                        self.draft.class = SensorClass::RcFilter;
+                    }
+                }
+            }
+            CalPhase::WindowProbe => {
+                // update wave complete: §4.1 update period
+                match update_period_scan(&self.buf, &self.sched, self.origin, scratch) {
+                    Some(u) => {
+                        self.draft.update_s = Some(u);
+                        if self.draft.class != SensorClass::RcFilter {
+                            self.draft.class = SensorClass::Boxcar;
+                        }
+                    }
+                    None => {
+                        if !self.buf.is_empty() {
+                            self.draft.class = SensorClass::Quantised;
+                        }
+                    }
+                }
+            }
+            CalPhase::Complete => {
+                // the full identification over the buffered calibration
+                // readings — the same function the batch path runs, so the
+                // mid-ingest identity IS the final identity
+                self.draft = identify_epoch(&self.buf, pmd, &self.sched, self.origin, scratch);
+            }
+        }
+    }
+
+    /// Final identity for an epoch that closed (stream end, restart gap or
+    /// probe replay) — the completed identification if calibration
+    /// finished, else [`identify_epoch`] over whatever was buffered
+    /// (exactly what the batch path would have computed for a short epoch).
+    pub fn finalize(
+        &mut self,
+        pmd: Option<TraceView<'_>>,
+        scratch: &mut IdentifyScratch,
+    ) -> SensorIdentity {
+        if self.phase == CalPhase::Complete {
+            self.draft
+        } else {
+            identify_epoch(&self.buf, pmd, &self.sched, self.origin, scratch)
+        }
+    }
+}
+
+/// Drift-assessment window width, seconds.
+pub const DRIFT_ASSESS_S: f64 = 2.0;
+/// Minimum published-value swing for an assessment window to be judged.
+pub const DRIFT_MIN_SWING_W: f64 = 5.0;
+/// Valid windows collected before the baseline is frozen.
+pub const DRIFT_BASELINE_WINDOWS: usize = 3;
+/// Consecutive suspect windows required to fire.
+pub const DRIFT_TRIP: usize = 2;
+/// Two-sided factor by which the statistic must leave its baseline.
+pub const DRIFT_RATIO: f64 = 4.0;
+/// Assessment windows allowed before a baseline forms; past this the
+/// workload is too flat to monitor and the monitor disarms itself.
+const DRIFT_MAX_BASELINE_TRIES: usize = 8;
+/// Minimum value changes for a window to be judged.
+const DRIFT_MIN_CHANGES: usize = 3;
+
+/// Adaptive re-calibration scheduler: decides *when* a probe replay is
+/// worth its cost. A window change (e.g. a silent driver update flipping
+/// `power.draw` between a 100 ms and a 1 s boxcar, Fig. 14) cannot be seen
+/// in the update cadence — update periods are driver-stable — but it
+/// drastically changes how *sharply* published values move: a sensor whose
+/// window ≤ update publishes load transitions in one step, while a 10×
+/// window smears them over ten updates. The monitor tracks, per
+/// [`DRIFT_ASSESS_S`] window, the largest single value change relative to
+/// the window's swing (`r = max|Δ| / (max − min)`), establishes the
+/// node's own post-calibration baseline (workload-relative, so fast bursty
+/// loads don't read as drift), and fires once when `r` — or the swing
+/// itself — leaves that baseline by [`DRIFT_RATIO`]× for [`DRIFT_TRIP`]
+/// consecutive windows. Pure O(1)-state function of the reading stream, so
+/// adaptive re-calibrations are deterministic under any worker/batch
+/// configuration.
+#[derive(Debug)]
+pub struct DriftMonitor {
+    armed: bool,
+    win_end: f64,
+    last_v: Option<f64>,
+    n_changes: usize,
+    max_step: f64,
+    min_v: f64,
+    max_v: f64,
+    base_r: Vec<f64>,
+    base_swing: Vec<f64>,
+    baseline_r: Option<f64>,
+    baseline_swing: f64,
+    tries: usize,
+    suspect: usize,
+}
+
+impl Default for DriftMonitor {
+    fn default() -> Self {
+        DriftMonitor {
+            armed: false,
+            win_end: 0.0,
+            last_v: None,
+            n_changes: 0,
+            max_step: 0.0,
+            min_v: f64::INFINITY,
+            max_v: f64::NEG_INFINITY,
+            base_r: Vec::new(),
+            base_swing: Vec::new(),
+            baseline_r: None,
+            baseline_swing: 0.0,
+            tries: 0,
+            suspect: 0,
+        }
+    }
+}
+
+impl DriftMonitor {
+    pub fn new() -> Self {
+        DriftMonitor::default()
+    }
+
+    /// Stop monitoring (epoch closed / restart detected — a fresh
+    /// calibration will re-arm).
+    pub fn disarm(&mut self) {
+        self.armed = false;
+    }
+
+    /// Arm against a freshly identified sensor from time `t`. Only boxcar
+    /// identities are monitorable (an RC filter has no window to drift and
+    /// quantised/unsupported streams carry no dynamics).
+    pub fn arm(&mut self, identity: &SensorIdentity, t: f64) {
+        *self = DriftMonitor::default();
+        if identity.class == SensorClass::Boxcar {
+            self.armed = true;
+            self.win_end = t + DRIFT_ASSESS_S;
+        }
+    }
+
+    pub fn is_armed(&self) -> bool {
+        self.armed
+    }
+
+    /// Observe the next reading; `true` exactly once, when drift is
+    /// confirmed (the monitor then disarms until re-armed).
+    pub fn observe(&mut self, t: f64, w: f64) -> bool {
+        if !self.armed {
+            return false;
+        }
+        let mut fired = false;
+        while t >= self.win_end {
+            fired |= self.roll();
+            self.win_end += DRIFT_ASSESS_S;
+            if !self.armed {
+                return fired;
+            }
+        }
+        self.min_v = self.min_v.min(w);
+        self.max_v = self.max_v.max(w);
+        if let Some(lv) = self.last_v {
+            let d = (w - lv).abs();
+            if d >= CHANGE_EPS {
+                self.n_changes += 1;
+                self.max_step = self.max_step.max(d);
+            }
+        }
+        self.last_v = Some(w);
+        fired
+    }
+
+    /// Judge one completed assessment window.
+    fn roll(&mut self) -> bool {
+        let swing = if self.min_v.is_finite() { self.max_v - self.min_v } else { 0.0 };
+        let valid = self.n_changes >= DRIFT_MIN_CHANGES && swing >= DRIFT_MIN_SWING_W;
+        let r = if valid { self.max_step / swing } else { 0.0 };
+        self.n_changes = 0;
+        self.max_step = 0.0;
+        self.min_v = f64::INFINITY;
+        self.max_v = f64::NEG_INFINITY;
+        match self.baseline_r {
+            None => {
+                self.tries += 1;
+                if valid {
+                    self.base_r.push(r);
+                    self.base_swing.push(swing);
+                    if self.base_r.len() >= DRIFT_BASELINE_WINDOWS {
+                        self.baseline_r = Some(median(&self.base_r));
+                        self.baseline_swing = median(&self.base_swing);
+                    }
+                } else if self.tries >= DRIFT_MAX_BASELINE_TRIES {
+                    self.armed = false; // workload too flat to monitor
+                }
+                false
+            }
+            Some(base) => {
+                let suspicious = if valid {
+                    r < base / DRIFT_RATIO || r > base * DRIFT_RATIO
+                } else {
+                    swing < self.baseline_swing / DRIFT_RATIO
+                };
+                if suspicious {
+                    self.suspect += 1;
+                } else {
+                    self.suspect = 0;
+                }
+                if self.suspect >= DRIFT_TRIP {
+                    self.armed = false;
+                    true
+                } else {
+                    false
+                }
+            }
         }
     }
 }
@@ -920,6 +1277,202 @@ mod tests {
         assert_eq!(tracker.observe(0.01), None);
         assert_eq!(tracker.observe(1.5), Some(1.5));
         assert_eq!(tracker.epochs_seen(), 2);
+    }
+
+    /// Satellite: boundary semantics of the restart detector. A gap of
+    /// *exactly* `gap_s` opens a new epoch (the comparison is `>=`), a
+    /// stream that starts late ("restart before the first chunk") opens
+    /// epoch 0 silently regardless of how late, and back-to-back restarts
+    /// inside one calibration window produce one epoch per gap.
+    #[test]
+    fn epoch_tracker_boundary_cases() {
+        // gap exactly equal to gap_s fires
+        let mut tracker = EpochTracker::new(0.75);
+        assert_eq!(tracker.observe(1.0), None);
+        assert_eq!(tracker.observe(1.75), Some(1.75), "t - last == gap_s must open an epoch");
+        // and a hair under does not
+        let mut tracker = EpochTracker::new(0.75);
+        assert_eq!(tracker.observe(1.0), None);
+        assert_eq!(tracker.observe(1.0 + 0.75 - 1e-9), None);
+
+        // a stream whose first reading arrives seconds late (the driver
+        // restarted before any reading) still opens epoch 0 silently: the
+        // gap test needs a predecessor
+        let mut tracker = EpochTracker::default();
+        assert_eq!(tracker.observe(5.0), None);
+        assert_eq!(tracker.epochs_seen(), 1);
+        let mut out = Vec::new();
+        detect_epochs(&[(5.0, 100.0), (5.01, 100.0)], DRIVER_RESTART_GAP_S, &mut out);
+        assert_eq!(out, vec![0], "late stream head is one epoch, not two");
+
+        // back-to-back restarts within one calibration window: every gap
+        // opens its own epoch, even when the middle epoch is a sliver
+        let mut pts: Vec<(f64, f64)> = (0..50).map(|i| (i as f64 * 0.01, 100.0)).collect();
+        pts.push((1.5, 110.0)); // gap 1: ~1 s
+        pts.push((1.51, 110.0));
+        pts.extend((0..30).map(|i| (2.6 + i as f64 * 0.01, 120.0))); // gap 2: ~1.1 s
+        detect_epochs(&pts, DRIVER_RESTART_GAP_S, &mut out);
+        assert_eq!(out, vec![0, 50, 52], "two gaps -> three epochs");
+    }
+
+    /// The incremental identifier's final identity is bit-for-bit the
+    /// batch `identify_epoch` result, and the draft refines as calibration
+    /// phases complete (update period known before the window probes end).
+    #[test]
+    fn incremental_identifier_matches_batch_and_refines_by_phase() {
+        let sched = ProbeSchedule::default();
+        let (points, scratch, meta) = poll_model("A100 PCIe-40G", 0.0, 33);
+        let pmd = meta.pmd_view(&scratch.pmd);
+
+        let mut id_scratch = IdentifyScratch::new();
+        let want = identify_epoch(&points, Some(pmd), &sched, 0.0, &mut id_scratch);
+
+        let mut inc = IncrementalIdentifier::new(&sched);
+        let mut update_known_at = None;
+        let mut transitions = Vec::new();
+        for &(t, w) in &points {
+            if let Some(phase) = inc.push(t, w, Some(pmd), &mut id_scratch) {
+                transitions.push(phase);
+                if phase == CalPhase::WindowProbe {
+                    // §4.1 phase just completed: the update period must
+                    // already be known, before any window probe finishes
+                    assert!(inc.identity().update_s.is_some(), "{:?}", inc.identity());
+                    update_known_at = Some(t);
+                }
+            }
+        }
+        assert_eq!(
+            transitions,
+            vec![CalPhase::UpdateProbe, CalPhase::WindowProbe, CalPhase::Complete]
+        );
+        let u = inc.identity().update_s.unwrap();
+        assert!((u - 0.1).abs() < 0.02, "update {u}");
+        assert!(update_known_at.unwrap() < sched.w_slow_end());
+        assert!(inc.is_complete());
+
+        // final == batch, bit for bit
+        let got = inc.identity();
+        assert_eq!(got.class, want.class);
+        assert_eq!(got.update_s.map(f64::to_bits), want.update_s.map(f64::to_bits));
+        assert_eq!(got.window_s.map(f64::to_bits), want.window_s.map(f64::to_bits));
+        assert_eq!(got.smi_rise_s.map(f64::to_bits), want.smi_rise_s.map(f64::to_bits));
+        // finalize after completion returns the same identity
+        assert_eq!(inc.finalize(Some(pmd), &mut id_scratch), got);
+    }
+
+    /// An epoch that closes before its calibration completes finalizes to
+    /// whatever the batch path would compute over the same short slice.
+    #[test]
+    fn incremental_identifier_finalizes_short_epochs_like_batch() {
+        let sched = ProbeSchedule::default();
+        let (points, scratch, meta) = poll_model("A100 PCIe-40G", 0.0, 34);
+        let pmd = meta.pmd_view(&scratch.pmd);
+        // cut the epoch off mid-update-wave
+        let cut = points.partition_point(|p| p.0 < sched.update_start + 1.0);
+        let slice = &points[..cut];
+
+        let mut id_scratch = IdentifyScratch::new();
+        let want = identify_epoch(slice, Some(pmd), &sched, 0.0, &mut id_scratch);
+        let mut inc = IncrementalIdentifier::new(&sched);
+        for &(t, w) in slice {
+            inc.push(t, w, Some(pmd), &mut id_scratch);
+        }
+        assert!(!inc.is_complete());
+        let got = inc.finalize(Some(pmd), &mut id_scratch);
+        assert_eq!(got.class, want.class);
+        assert_eq!(got.update_s.map(f64::to_bits), want.update_s.map(f64::to_bits));
+        assert_eq!(got.window_s.map(f64::to_bits), want.window_s.map(f64::to_bits));
+    }
+
+    fn boxcar_identity() -> SensorIdentity {
+        SensorIdentity {
+            class: SensorClass::Boxcar,
+            update_s: Some(0.1),
+            window_s: Some(0.1),
+            smi_rise_s: None,
+        }
+    }
+
+    /// Synthetic published-value stream: `levels[k]` held for `hold_s`
+    /// each, re-published every `update_s` (the polled zero-order hold).
+    fn feed_levels(
+        mon: &mut DriftMonitor,
+        t0: f64,
+        hold_s: f64,
+        update_s: f64,
+        levels: &[f64],
+    ) -> (usize, f64) {
+        let mut fires = 0;
+        let mut t = t0;
+        for &lv in levels {
+            let mut h = 0.0;
+            while h < hold_s {
+                if mon.observe(t, lv) {
+                    fires += 1;
+                }
+                t += update_s;
+                h += update_s;
+            }
+        }
+        (fires, t)
+    }
+
+    #[test]
+    fn drift_monitor_fires_once_on_smoothness_collapse_and_not_on_baseline() {
+        let mut mon = DriftMonitor::new();
+        mon.arm(&boxcar_identity(), 0.0);
+        assert!(mon.is_armed());
+        // sharp alternation 100 <-> 300 W every 0.5 s: r ~ 1 per window
+        let levels: Vec<f64> =
+            (0..40).map(|k| if k % 2 == 0 { 100.0 } else { 300.0 }).collect();
+        let (fires, t) = feed_levels(&mut mon, 0.0, 0.5, 0.1, &levels);
+        assert_eq!(fires, 0, "stationary sharp dynamics must not read as drift");
+        assert!(mon.is_armed());
+
+        // the window grows 10x: the same 200 W load swing now smears into
+        // 20 W increments (a triangle wave) — max|delta|/swing collapses
+        // ~10x below the baseline
+        let smeared: Vec<f64> = (0..200)
+            .map(|k| {
+                let m = k % 20;
+                if m < 10 {
+                    100.0 + 20.0 * m as f64
+                } else {
+                    300.0 - 20.0 * (m - 10) as f64
+                }
+            })
+            .collect();
+        let (fires, _) = feed_levels(&mut mon, t, 0.1, 0.1, &smeared);
+        assert_eq!(fires, 1, "drift must fire exactly once");
+        assert!(!mon.is_armed(), "fired monitor disarms until re-armed");
+    }
+
+    #[test]
+    fn drift_monitor_variance_collapse_fires_and_flat_loads_disarm() {
+        // swing collapse: baseline has 200 W swings, then the stream goes
+        // nearly flat (a long window averaging a fast workload)
+        let mut mon = DriftMonitor::new();
+        mon.arm(&boxcar_identity(), 0.0);
+        let levels: Vec<f64> =
+            (0..40).map(|k| if k % 2 == 0 { 100.0 } else { 300.0 }).collect();
+        let (_, t) = feed_levels(&mut mon, 0.0, 0.5, 0.1, &levels);
+        let flat: Vec<f64> = (0..100).map(|k| 200.0 + (k % 2) as f64 * 2.0).collect();
+        let (fires, _) = feed_levels(&mut mon, t, 0.2, 0.1, &flat);
+        assert_eq!(fires, 1, "sustained swing collapse is drift");
+
+        // a workload with no meaningful swing never forms a baseline: the
+        // monitor disarms instead of guessing
+        let mut mon = DriftMonitor::new();
+        mon.arm(&boxcar_identity(), 0.0);
+        let flat: Vec<f64> = vec![200.0; 300];
+        let (fires, _) = feed_levels(&mut mon, 0.0, 0.1, 0.1, &flat);
+        assert_eq!(fires, 0);
+        assert!(!mon.is_armed(), "flat workload -> monitor gives up");
+
+        // non-boxcar identities never arm
+        let mut mon = DriftMonitor::new();
+        mon.arm(&SensorIdentity::unsupported(), 0.0);
+        assert!(!mon.is_armed());
     }
 
     #[test]

@@ -1,0 +1,723 @@
+//! The live service: [`TelemetryService::start`] returns a
+//! [`ServiceHandle`] that owns the producer shards and the accounting
+//! consumer, and answers queries **while ingestion runs**.
+//!
+//! Lifecycle:
+//!
+//! ```text
+//! let handle = TelemetryService::start(&fleet, &cfg, &ServiceSource::Sim);
+//! let events = handle.subscribe();          // NodeIdentified / EpochDetected / …
+//! let live   = handle.snapshot();           // mid-ingest: partial accounts,
+//!                                           // already-final identities
+//! let e      = handle.fleet_energy(0.0, 30.0);
+//! handle.control(ControlMsg::Recalibrate { node: 3 });
+//! let snap   = handle.join();               // drain to completion
+//! ```
+//!
+//! The consumer drains [`IngestMsg`]s into a mutex-guarded live state:
+//! one incremental [`NodeAccountant`] per in-flight node (naive buckets
+//! eager, corrected buckets deferred until the governing epoch is
+//! identified — see `accounting`), the per-epoch identity history, and the
+//! finished accounts. [`ServiceHandle::snapshot`] clones that state into
+//! an ordinary [`TelemetrySnapshot`], so every existing query
+//! (`query::fleet_energy_table`, `window_table`, …) works mid-ingest
+//! unchanged. Guarantees:
+//!
+//! * a node's **identity** is final from the moment its calibration phase
+//!   completes — a mid-ingest snapshot taken after `NodeIdentified` shows
+//!   bit-for-bit the identity the final snapshot will hold (absent a
+//!   later restart/replay on that node);
+//! * a live account's `frozen_n` leading buckets are final — bit-for-bit
+//!   equal to the finished account's same buckets;
+//! * once `NodeComplete` fires, that node's whole account (truth included)
+//!   is the finished article.
+//!
+//! Control plane: [`ControlMsg::Recalibrate`] flags a node on the shared
+//! [`RecalBoard`]; its producer picks the flag up at the next chunk
+//! boundary and replays the calibration probes
+//! ([`super::source::ReadingSource::replay_probes`]). The *adaptive* path
+//! — the drift monitor confirming a silent sensor change — runs through
+//! the same flag at deterministic stream positions, so it fires
+//! identically under any worker/batch configuration. Progress events are
+//! advisory (their interleaving across nodes depends on scheduling);
+//! snapshots are the authoritative view.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::coordinator::fleet::Node;
+use crate::coordinator::Fleet;
+use crate::sim::profile::{DriverEpoch, Generation, PowerField};
+use crate::smi::cli::{LogValue, QueryField, SmiLog};
+
+use super::accounting::{
+    window_tiles, BucketSpec, FleetAccounts, NodeAccount, NodeAccountant,
+};
+use super::ingest::{
+    node_fault_seed, node_rig_seed, stream_source, Emitter, IngestMsg, IngestStats, NodeScratch,
+    RecalBoard,
+};
+use super::registry::{
+    EpochIdentity, NodeIdentity, ProbeSchedule, Registry, SensorIdentity, DRIVER_RESTART_GAP_S,
+};
+use super::source::{
+    FaultPlan, FaultSource, NodeTimeline, ReplaySource, ServiceSource, SimSource,
+};
+use super::{effective_window_s, TelemetryConfig, TelemetrySnapshot};
+
+/// Operator commands accepted by a running service.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlMsg {
+    /// Replay the calibration probes on one node (picked up at its
+    /// producer's next chunk boundary; a no-op once the node finished).
+    Recalibrate { node: usize },
+    /// Stop producing: nodes mid-stream are cut short, unclaimed nodes
+    /// never start, and the service drains to a partial snapshot.
+    Shutdown,
+}
+
+/// Progress events a running service publishes to subscribers. Advisory:
+/// cross-node ordering follows scheduling; the snapshot is authoritative.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServiceEvent {
+    /// An epoch's calibration completed (or a short epoch closed): the
+    /// node's sensor identity as of `t0` is final.
+    NodeIdentified { node_id: usize, t0: f64, identity: SensorIdentity },
+    /// A restart-sized stream gap opened a new sensor epoch at `t0`.
+    EpochDetected { node_id: usize, t0: f64 },
+    /// An adaptive/commanded probe replay began at `t0`.
+    Recalibrated { node_id: usize, t0: f64 },
+    /// Drift confirmed on a source that cannot re-probe (recorded logs).
+    DriftSuspected { node_id: usize, t: f64 },
+    /// Every node's stream has passed this observation window: its
+    /// fleet aggregates are final.
+    WindowClosed { index: usize, t0: f64, t1: f64 },
+    /// A node's stream ended; its account is finished.
+    NodeComplete { node_id: usize },
+    /// The service drained to completion.
+    ServiceComplete,
+}
+
+/// One in-flight node's live state.
+#[derive(Debug)]
+struct LiveNode {
+    model: &'static str,
+    generation: Generation,
+    acct: NodeAccountant,
+    epochs: Vec<EpochIdentity>,
+}
+
+/// Everything the consumer maintains, behind the handle's mutex.
+#[derive(Debug, Default)]
+struct LiveState {
+    stats: IngestStats,
+    inflight: HashMap<usize, LiveNode>,
+    finished_accounts: Vec<NodeAccount>,
+    finished_entries: Vec<NodeIdentity>,
+    subscribers: Vec<Sender<ServiceEvent>>,
+    /// Every event emitted so far, in order — replayed to late
+    /// subscribers so no subscriber ever misses progress (bounded:
+    /// O(nodes × epochs + windows)).
+    event_log: Vec<ServiceEvent>,
+    windows_closed: usize,
+    done: bool,
+}
+
+impl LiveState {
+    fn emit(&mut self, ev: ServiceEvent) {
+        self.event_log.push(ev);
+        self.subscribers.retain(|s| s.send(ev).is_ok());
+    }
+}
+
+/// Immutable geometry shared by the consumer and the handle.
+#[derive(Debug, Clone)]
+struct ServiceMeta {
+    spec: BucketSpec,
+    window_s: f64,
+    duration_s: f64,
+    n_total: usize,
+    /// `(t0, t1)` of each observation-window tile, in order.
+    tile_bounds: Vec<(f64, f64)>,
+}
+
+impl ServiceMeta {
+    fn new(spec: BucketSpec, window_s: f64, duration_s: f64, n_total: usize) -> Self {
+        let tile_bounds = window_tiles(&spec, window_s)
+            .into_iter()
+            .map(|(lo, hi)| (spec.bounds(lo).0, spec.bounds(hi - 1).1))
+            .collect();
+        ServiceMeta { spec, window_s, duration_s, n_total, tile_bounds }
+    }
+}
+
+/// What the producer workers run over.
+enum ServicePlan {
+    Sim {
+        nodes: Vec<Node>,
+        driver: DriverEpoch,
+        field: PowerField,
+        faults: Option<FaultPlan>,
+        timeline: NodeTimeline,
+    },
+    Replay { logs: Vec<SmiLog> },
+}
+
+struct ProducerCtx {
+    plan: ServicePlan,
+    cfg: TelemetryConfig,
+    sched: ProbeSchedule,
+    spec: BucketSpec,
+    duration_s: f64,
+    n: usize,
+    shard_size: usize,
+    n_shards: usize,
+    next_shard: AtomicUsize,
+    pool: Mutex<Receiver<Vec<(f64, f64)>>>,
+    board: Arc<RecalBoard>,
+    stop: Arc<AtomicBool>,
+}
+
+/// The entry point: start a service over a fleet/source, get a handle.
+pub struct TelemetryService;
+
+impl TelemetryService {
+    /// Start the service over a simulated fleet (optionally behind the
+    /// streaming fault injector) or a set of recorded logs. For
+    /// [`ServiceSource::Replay`] the fleet is ignored (one node per log)
+    /// and the logs must be valid — use [`Self::start_replay`] directly
+    /// for error handling.
+    pub fn start(fleet: &Fleet, cfg: &TelemetryConfig, src: &ServiceSource) -> ServiceHandle {
+        match src {
+            ServiceSource::Replay(logs) => {
+                Self::start_replay(logs, cfg).expect("invalid replay logs")
+            }
+            ServiceSource::Sim => Self::start_sim(fleet, cfg, None),
+            ServiceSource::Faulty(plan) => Self::start_sim(fleet, cfg, Some(plan.clone())),
+        }
+    }
+
+    fn start_sim(fleet: &Fleet, cfg: &TelemetryConfig, faults: Option<FaultPlan>) -> ServiceHandle {
+        let sched = ProbeSchedule::default();
+        let window_s = effective_window_s(cfg, &sched);
+        let duration_s = window_s * cfg.windows.max(1) as f64;
+        let spec = BucketSpec::new(duration_s, cfg.bucket_s);
+        let timeline = faults
+            .as_ref()
+            .map(|p| p.effective_timeline(&sched, duration_s))
+            .unwrap_or_default();
+        let plan = ServicePlan::Sim {
+            nodes: fleet.nodes.clone(),
+            driver: fleet.config.driver,
+            field: fleet.config.field,
+            faults,
+            timeline,
+        };
+        let n = fleet.nodes.len();
+        Self::launch(plan, n, *cfg, sched, spec, window_s, duration_s)
+    }
+
+    /// Start the service over recorded nvidia-smi CSV logs (one node per
+    /// log, node ids in log order). Each log is parsed exactly once, up
+    /// front; the bucket span covers the *longer* of the configured
+    /// duration and the logs' own recorded range, so a long recording is
+    /// never silently truncated.
+    pub fn start_replay(logs: &[String], cfg: &TelemetryConfig) -> Result<ServiceHandle, String> {
+        let mut parsed: Vec<SmiLog> = Vec::with_capacity(logs.len());
+        let mut t_max = 0.0f64;
+        for (i, text) in logs.iter().enumerate() {
+            let log =
+                crate::smi::cli::parse_log(text).map_err(|e| format!("replay log {i}: {e}"))?;
+            if let Some(tc) = log.column(&QueryField::Timestamp) {
+                for row in &log.rows {
+                    if let LogValue::Seconds(t) = &row[tc] {
+                        t_max = t_max.max(*t);
+                    }
+                }
+            }
+            parsed.push(log);
+        }
+        let sched = ProbeSchedule::default();
+        let window_s = effective_window_s(cfg, &sched);
+        // extend past the last recorded reading so its final bucket exists
+        let duration_s = (window_s * cfg.windows.max(1) as f64).max(t_max + 1e-9);
+        let spec = BucketSpec::new(duration_s, cfg.bucket_s);
+        let n = parsed.len();
+        let plan = ServicePlan::Replay { logs: parsed };
+        Ok(Self::launch(plan, n, *cfg, sched, spec, window_s, duration_s))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn launch(
+        plan: ServicePlan,
+        n: usize,
+        cfg: TelemetryConfig,
+        sched: ProbeSchedule,
+        spec: BucketSpec,
+        window_s: f64,
+        duration_s: f64,
+    ) -> ServiceHandle {
+        let (tx, rx) = mpsc::sync_channel::<IngestMsg>(cfg.queue_depth.max(2));
+        let (pool_tx, pool_rx) = mpsc::channel::<Vec<(f64, f64)>>();
+        let board = Arc::new(RecalBoard::new(n));
+        let stop = Arc::new(AtomicBool::new(false));
+        let shard_size = cfg.shard_size.max(1);
+        let ctx = Arc::new(ProducerCtx {
+            plan,
+            cfg,
+            sched,
+            spec,
+            duration_s,
+            n,
+            shard_size,
+            n_shards: (n + shard_size - 1) / shard_size,
+            next_shard: AtomicUsize::new(0),
+            pool: Mutex::new(pool_rx),
+            board: Arc::clone(&board),
+            stop: Arc::clone(&stop),
+        });
+        let shared = Arc::new(Mutex::new(LiveState::default()));
+        let meta = ServiceMeta::new(spec, window_s, duration_s, n);
+
+        let consumer = {
+            let shared = Arc::clone(&shared);
+            let meta = meta.clone();
+            std::thread::spawn(move || consumer_loop(rx, shared, meta, pool_tx))
+        };
+        let producers = (0..cfg.workers.max(1))
+            .map(|_| {
+                let ctx = Arc::clone(&ctx);
+                let tx = tx.clone();
+                std::thread::spawn(move || producer_worker(ctx, tx))
+            })
+            .collect();
+        drop(tx);
+
+        ServiceHandle {
+            shared,
+            board,
+            stop,
+            producers,
+            consumer: Some(consumer),
+            meta,
+            schedule: sched,
+        }
+    }
+}
+
+/// A running telemetry service: query it mid-ingest, steer it, join it.
+pub struct ServiceHandle {
+    shared: Arc<Mutex<LiveState>>,
+    board: Arc<RecalBoard>,
+    stop: Arc<AtomicBool>,
+    producers: Vec<JoinHandle<()>>,
+    consumer: Option<JoinHandle<()>>,
+    meta: ServiceMeta,
+    schedule: ProbeSchedule,
+}
+
+impl ServiceHandle {
+    /// One observation window's effective length, seconds.
+    pub fn window_s(&self) -> f64 {
+        self.meta.window_s
+    }
+
+    /// Total observed stream time per node, seconds.
+    pub fn duration_s(&self) -> f64 {
+        self.meta.duration_s
+    }
+
+    /// The calibration protocol the nodes run.
+    pub fn schedule(&self) -> ProbeSchedule {
+        self.schedule
+    }
+
+    /// Snapshot the service *now*: finished accounts verbatim, in-flight
+    /// accounts as live partial views (`complete == false`, with their
+    /// `frozen_n` final buckets), and a registry holding every identity
+    /// known so far. Works identically mid-ingest and after completion.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let state = self.shared.lock().expect("telemetry state poisoned");
+        snapshot_locked(&state, &self.meta, self.schedule)
+    }
+
+    /// Fleet energy over `[t0, t1]` as of now (whole-bucket granularity,
+    /// clamped — the same edge semantics as
+    /// `FleetAccounts::energy_between`). Answered directly under the lock
+    /// by folding the per-node bucket accumulators — no snapshot clone, so
+    /// live range queries stay O(buckets × nodes) additions with zero
+    /// allocation.
+    pub fn fleet_energy(&self, t0: f64, t1: f64) -> super::accounting::FleetEnergy {
+        use super::accounting::FleetEnergy;
+        let state = self.shared.lock().expect("telemetry state poisoned");
+        let mut naive_j = 0.0;
+        let mut corrected_j = 0.0;
+        let mut bound_j = 0.0;
+        let mut truth_j = 0.0;
+        let (ot0, ot1) = self.meta.spec.visit_range(t0, t1, |b| {
+            for acct in &state.finished_accounts {
+                naive_j += acct.naive_j[b];
+                corrected_j += acct.corrected_j[b];
+                bound_j += acct.bound_j[b];
+                truth_j += acct.truth_j[b];
+            }
+            for ln in state.inflight.values() {
+                let (n, c, bd) = ln.acct.bucket_energy(b);
+                naive_j += n;
+                corrected_j += c;
+                bound_j += bd;
+                // no truth for in-flight nodes: the reference lands at
+                // NodeEnd
+            }
+        });
+        FleetEnergy { t0: ot0, t1: ot1, naive_j, corrected_j, bound_j, truth_j }
+    }
+
+    /// Subscribe to progress events. The full backlog is replayed first,
+    /// so a subscriber sees every event in emission order no matter when
+    /// it joins (the stream ends with `ServiceComplete`).
+    pub fn subscribe(&self) -> Receiver<ServiceEvent> {
+        let (tx, rx) = mpsc::channel();
+        let mut state = self.shared.lock().expect("telemetry state poisoned");
+        for &ev in &state.event_log {
+            let _ = tx.send(ev);
+        }
+        state.subscribers.push(tx);
+        rx
+    }
+
+    /// Send a control command; `false` when it could not be accepted
+    /// (unknown node).
+    pub fn control(&self, msg: ControlMsg) -> bool {
+        match msg {
+            ControlMsg::Recalibrate { node } => self.board.request(node),
+            ControlMsg::Shutdown => {
+                self.stop.store(true, Ordering::Relaxed);
+                true
+            }
+        }
+    }
+
+    /// Convenience for [`ControlMsg::Recalibrate`].
+    pub fn recalibrate(&self, node: usize) -> bool {
+        self.control(ControlMsg::Recalibrate { node })
+    }
+
+    /// Live ingest counters.
+    pub fn progress(&self) -> IngestStats {
+        self.shared.lock().expect("telemetry state poisoned").stats
+    }
+
+    /// Whether the service has drained to completion.
+    pub fn is_done(&self) -> bool {
+        self.shared.lock().expect("telemetry state poisoned").done
+    }
+
+    /// Wait for every node to finish and return the final snapshot —
+    /// exactly what the one-call `run_service*` wrappers produce.
+    pub fn join(mut self) -> TelemetrySnapshot {
+        for p in std::mem::take(&mut self.producers) {
+            p.join().expect("telemetry producer panicked");
+        }
+        if let Some(c) = self.consumer.take() {
+            c.join().expect("telemetry consumer panicked");
+        }
+        self.snapshot()
+    }
+
+    /// Signal shutdown and drain: nodes mid-stream are cut short; the
+    /// returned snapshot covers whatever was ingested.
+    pub fn shutdown(self) -> TelemetrySnapshot {
+        self.stop.store(true, Ordering::Relaxed);
+        self.join()
+    }
+}
+
+impl Drop for ServiceHandle {
+    fn drop(&mut self) {
+        // a dropped handle detaches: tell the producers to wind down but
+        // don't block the dropping thread
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Build a [`TelemetrySnapshot`] from the locked live state.
+fn snapshot_locked(
+    state: &LiveState,
+    meta: &ServiceMeta,
+    schedule: ProbeSchedule,
+) -> TelemetrySnapshot {
+    let mut accounts: Vec<NodeAccount> = state.finished_accounts.clone();
+    let mut live_ids: Vec<usize> = state.inflight.keys().copied().collect();
+    live_ids.sort_unstable();
+    for id in live_ids {
+        let ln = &state.inflight[&id];
+        let identity =
+            ln.epochs.last().map(|e| e.identity).unwrap_or_else(SensorIdentity::unsupported);
+        accounts.push(ln.acct.account_view(
+            id,
+            ln.model,
+            ln.generation,
+            identity,
+            vec![0.0; meta.spec.n],
+            false,
+        ));
+    }
+    let accounts = FleetAccounts::merge(meta.spec, accounts);
+    let mut registry = Registry::default();
+    for e in &state.finished_entries {
+        registry.insert(e.clone());
+    }
+    for (&id, ln) in &state.inflight {
+        if let Some(last) = ln.epochs.last() {
+            registry.insert(NodeIdentity {
+                node_id: id,
+                model: ln.model,
+                generation: ln.generation,
+                identity: last.identity,
+                epochs: ln.epochs.clone(),
+            });
+        }
+    }
+    registry.finalize();
+    TelemetrySnapshot {
+        duration_s: meta.duration_s,
+        window_s: meta.window_s,
+        schedule,
+        accounts,
+        registry,
+        stats: state.stats,
+    }
+}
+
+/// Close every observation window whose fleet aggregates are final: every
+/// node's *freeze watermark* (not merely its last reading — the corrected
+/// account writes up to a latency shift backwards, and a not-yet-identified
+/// epoch defers readings entirely; see `NodeAccountant::frozen_before`)
+/// must have passed the window's end.
+fn check_windows(state: &mut LiveState, meta: &ServiceMeta) {
+    if state.stats.nodes < meta.n_total {
+        return; // some nodes haven't started streaming yet
+    }
+    let watermark = if state.inflight.is_empty() {
+        f64::INFINITY
+    } else {
+        state
+            .inflight
+            .values()
+            .map(|n| n.acct.frozen_before())
+            .fold(f64::INFINITY, f64::min)
+    };
+    while state.windows_closed < meta.tile_bounds.len()
+        && meta.tile_bounds[state.windows_closed].1 <= watermark
+    {
+        let (t0, t1) = meta.tile_bounds[state.windows_closed];
+        let index = state.windows_closed;
+        state.windows_closed += 1;
+        state.emit(ServiceEvent::WindowClosed { index, t0, t1 });
+    }
+}
+
+/// The accounting consumer: drains the bounded queue into the shared live
+/// state, one lock per message.
+fn consumer_loop(
+    rx: Receiver<IngestMsg>,
+    shared: Arc<Mutex<LiveState>>,
+    meta: ServiceMeta,
+    pool_tx: Sender<Vec<(f64, f64)>>,
+) {
+    for msg in rx {
+        let mut state = shared.lock().expect("telemetry state poisoned");
+        match msg {
+            IngestMsg::NodeStart { node_id, model, generation } => {
+                state.stats.nodes += 1;
+                state.inflight.insert(
+                    node_id,
+                    LiveNode {
+                        model,
+                        generation,
+                        acct: NodeAccountant::fresh(meta.spec),
+                        epochs: Vec::new(),
+                    },
+                );
+            }
+            IngestMsg::EpochOpen { node_id, t0, recal } => {
+                if let Some(ln) = state.inflight.get_mut(&node_id) {
+                    ln.acct.open_epoch(t0);
+                }
+                if recal {
+                    state.stats.recalibrations += 1;
+                    state.emit(ServiceEvent::Recalibrated { node_id, t0 });
+                } else if t0 > 0.0 {
+                    state.emit(ServiceEvent::EpochDetected { node_id, t0 });
+                }
+            }
+            IngestMsg::EpochIdentified { node_id, t0, identity } => {
+                if let Some(ln) = state.inflight.get_mut(&node_id) {
+                    ln.acct.identify_span(&identity);
+                    ln.epochs.push(EpochIdentity { t0, identity });
+                }
+                state.emit(ServiceEvent::NodeIdentified { node_id, t0, identity });
+            }
+            IngestMsg::Batch { node_id, points } => {
+                state.stats.batches += 1;
+                state.stats.readings += points.len() as u64;
+                if let Some(ln) = state.inflight.get_mut(&node_id) {
+                    ln.acct.push_points(&points);
+                }
+                let _ = pool_tx.send(points); // recycle the buffer
+                check_windows(&mut state, &meta);
+            }
+            IngestMsg::DriftSuspected { node_id, t } => {
+                state.stats.drift_suspected += 1;
+                state.emit(ServiceEvent::DriftSuspected { node_id, t });
+            }
+            IngestMsg::NodeEnd { node_id, truth_j, complete } => {
+                if let Some(ln) = state.inflight.remove(&node_id) {
+                    let identity = ln
+                        .epochs
+                        .last()
+                        .map(|e| e.identity)
+                        .unwrap_or_else(SensorIdentity::unsupported);
+                    // a shutdown-truncated stream stays a partial view:
+                    // its account keeps `complete == false` and its
+                    // conservative `frozen_n`, with the truth reference
+                    // already truncated at the cut by the producer
+                    let account = ln.acct.account_view(
+                        node_id,
+                        ln.model,
+                        ln.generation,
+                        identity,
+                        truth_j,
+                        complete,
+                    );
+                    state.finished_accounts.push(account);
+                    state.finished_entries.push(NodeIdentity {
+                        node_id,
+                        model: ln.model,
+                        generation: ln.generation,
+                        identity,
+                        epochs: ln.epochs,
+                    });
+                }
+                state.emit(ServiceEvent::NodeComplete { node_id });
+                check_windows(&mut state, &meta);
+            }
+        }
+    }
+    let mut state = shared.lock().expect("telemetry state poisoned");
+    state.done = true;
+    check_windows(&mut state, &meta);
+    state.emit(ServiceEvent::ServiceComplete);
+}
+
+/// Per-worker source state (arenas reused across the worker's nodes).
+enum WorkerSource {
+    Plain(SimSource),
+    Faulty(FaultSource<SimSource>),
+    Replay(ReplaySource),
+}
+
+/// One producer worker: claim node shards, prepare each node's source,
+/// stream it through the ingest protocol.
+fn producer_worker(ctx: Arc<ProducerCtx>, tx: SyncSender<IngestMsg>) {
+    let emit = Emitter { tx, pool: &ctx.pool, batch: ctx.cfg.batch_size.max(1) };
+    let mut scratch = NodeScratch::new();
+    let mut src = match &ctx.plan {
+        ServicePlan::Sim { faults: None, .. } => WorkerSource::Plain(SimSource::new()),
+        ServicePlan::Sim { faults: Some(p), .. } => {
+            WorkerSource::Faulty(FaultSource::new(SimSource::new(), p.clone()))
+        }
+        ServicePlan::Replay { .. } => WorkerSource::Replay(ReplaySource::new()),
+    };
+    loop {
+        let s = ctx.next_shard.fetch_add(1, Ordering::Relaxed);
+        if s >= ctx.n_shards {
+            break;
+        }
+        let lo = s * ctx.shard_size;
+        let hi = (lo + ctx.shard_size).min(ctx.n);
+        for idx in lo..hi {
+            if ctx.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match &ctx.plan {
+                ServicePlan::Sim { nodes, driver, field, timeline, .. } => {
+                    let node = &nodes[idx];
+                    match &mut src {
+                        WorkerSource::Plain(sim) => {
+                            sim.prepare(
+                                node.device.clone(),
+                                node.id,
+                                *driver,
+                                *field,
+                                ctx.cfg.seed,
+                                ctx.cfg.poll_period_s,
+                                &ctx.sched,
+                                ctx.duration_s,
+                                timeline,
+                            );
+                            stream_source(
+                                sim,
+                                &ctx.sched,
+                                ctx.spec,
+                                DRIVER_RESTART_GAP_S,
+                                &mut scratch,
+                                &emit,
+                                Some(ctx.board.as_ref()),
+                                Some(ctx.stop.as_ref()),
+                            );
+                        }
+                        WorkerSource::Faulty(faulty) => {
+                            let rig_seed = node_rig_seed(ctx.cfg.seed, node.id);
+                            faulty.inner_mut().prepare(
+                                node.device.clone(),
+                                node.id,
+                                *driver,
+                                *field,
+                                ctx.cfg.seed,
+                                ctx.cfg.poll_period_s,
+                                &ctx.sched,
+                                ctx.duration_s,
+                                timeline,
+                            );
+                            faulty.reset(node_fault_seed(rig_seed), timeline);
+                            stream_source(
+                                faulty,
+                                &ctx.sched,
+                                ctx.spec,
+                                DRIVER_RESTART_GAP_S,
+                                &mut scratch,
+                                &emit,
+                                Some(ctx.board.as_ref()),
+                                Some(ctx.stop.as_ref()),
+                            );
+                        }
+                        WorkerSource::Replay(_) => unreachable!("sim plan with replay source"),
+                    }
+                }
+                ServicePlan::Replay { logs } => {
+                    if let WorkerSource::Replay(replay) = &mut src {
+                        // pre-validated at start_replay; a failure here
+                        // would be a logic error
+                        if replay.prepare_from_parsed(idx, &logs[idx]).is_ok() {
+                            stream_source(
+                                replay,
+                                &ctx.sched,
+                                ctx.spec,
+                                DRIVER_RESTART_GAP_S,
+                                &mut scratch,
+                                &emit,
+                                Some(ctx.board.as_ref()),
+                                Some(ctx.stop.as_ref()),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,7 +1,7 @@
 //! The unified reading-source layer: everything the telemetry service can
 //! ingest, behind one chunked, allocation-free, scratch-reusing contract.
 //!
-//! The service's producer loop (`ingest::produce_source`) no longer
+//! The service's producer loop (`ingest::stream_source`) no longer
 //! knows where readings come from — it drives any [`ReadingSource`]:
 //!
 //! * [`SimSource`] — the original behaviour: simulate a fleet node through
@@ -37,13 +37,88 @@ use crate::sim::GpuDevice;
 use crate::smi::cli::parse_log;
 use crate::smi::poll_readings;
 
-use super::ingest::{epoch_boot_seed, node_activity_with_restarts, node_boot_seed, node_rig_seed};
+use super::ingest::{
+    append_workload_iterations, epoch_boot_seed, node_activity_timeline, node_boot_seed,
+    node_rig_seed, node_workload,
+};
 use super::registry::ProbeSchedule;
 
 /// How long a driver restart keeps the reading stream down, seconds. Above
 /// [`super::registry::DRIVER_RESTART_GAP_S`], so the epoch tracker always
 /// sees the signature.
 pub const RESTART_OUTAGE_S: f64 = 1.0;
+
+/// How long a *masked* driver update keeps the stream down, seconds —
+/// deliberately below [`super::registry::DRIVER_RESTART_GAP_S`], so the
+/// restart detector cannot see it. The sensor still reboots (fresh phase,
+/// and possibly a different pipeline under the new driver, Fig. 14), which
+/// is exactly the silent drift the adaptive re-calibration scheduler
+/// exists to catch.
+pub const MASKED_RESTART_OUTAGE_S: f64 = 0.4;
+
+/// Pause between an adaptive re-calibration decision and its probe replay
+/// actually starting (the collector has to schedule the probe workload).
+pub const REPLAY_SETUP_S: f64 = 0.25;
+
+/// One mid-observation break in a node's stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BreakKind {
+    /// A detected driver restart: ~[`RESTART_OUTAGE_S`] blackout, the
+    /// sensor epoch re-rolls, and the node re-runs its calibration probes.
+    Restart,
+    /// A fast, *masked* driver update: ~[`MASKED_RESTART_OUTAGE_S`]
+    /// blackout (below the restart-gap threshold), the sensor reboots
+    /// under the new driver epoch, and — because nobody noticed — no
+    /// re-calibration runs.
+    DriverUpdate(DriverEpoch),
+}
+
+impl BreakKind {
+    /// How long the reading stream is down around this break.
+    pub fn outage_s(&self) -> f64 {
+        match self {
+            BreakKind::Restart => RESTART_OUTAGE_S,
+            BreakKind::DriverUpdate(_) => MASKED_RESTART_OUTAGE_S,
+        }
+    }
+}
+
+/// The effective, validated break timeline one node's observation applies
+/// (snapped to the PMD grid, sorted; see [`FaultPlan::effective_timeline`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NodeTimeline {
+    /// `(time, kind)` pairs in ascending time order.
+    pub breaks: Vec<(f64, BreakKind)>,
+}
+
+impl NodeTimeline {
+    pub fn is_empty(&self) -> bool {
+        self.breaks.is_empty()
+    }
+
+    /// The restart times only (the probe-re-running breaks).
+    pub fn restart_times(&self) -> Vec<f64> {
+        self.breaks
+            .iter()
+            .filter(|(_, k)| matches!(k, BreakKind::Restart))
+            .map(|&(t, _)| t)
+            .collect()
+    }
+
+    /// The driver epoch in force at time `t`, starting from `base`.
+    pub fn driver_at(&self, base: DriverEpoch, t: f64) -> DriverEpoch {
+        let mut drv = base;
+        for &(bt, kind) in &self.breaks {
+            if bt > t {
+                break;
+            }
+            if let BreakKind::DriverUpdate(d) = kind {
+                drv = d;
+            }
+        }
+        drv
+    }
+}
 
 /// Static metadata a source announces ahead of its reading stream.
 #[derive(Debug, Clone, Copy)]
@@ -75,6 +150,38 @@ pub trait ReadingSource {
     /// nodes). `None` for recorded logs: identification then synthesizes
     /// the commanded-wave reference and the truth account stays zero.
     fn truth(&self) -> Option<TraceView<'_>>;
+
+    /// Replay the calibration probes on the live node: the remainder of
+    /// the observation after ~`after + `[`REPLAY_SETUP_S`] is re-planned
+    /// as probe schedule + production workload, and the stream continues
+    /// seamlessly (no outage — a probe replay is just work, the §4
+    /// micro-benchmarks run again). Returns the grid-snapped time the
+    /// probes start at, or `None` when the source cannot re-probe (a
+    /// recorded log is immutable history) or there is no room left before
+    /// the observation ends. Only readings at or before `after` may have
+    /// been consumed.
+    fn replay_probes(&mut self, after: f64) -> Option<f64> {
+        let _ = after;
+        None
+    }
+}
+
+/// Everything a prepared [`SimSource`] needs to re-plan its own tail (the
+/// adaptive probe replay) after preparation.
+#[derive(Debug, Clone)]
+struct SimCtx {
+    device: GpuDevice,
+    base_driver: DriverEpoch,
+    field: PowerField,
+    rig_seed: u64,
+    boot_seed: u64,
+    node_id: usize,
+    poll_period_s: f64,
+    sched: ProbeSchedule,
+    duration_s: f64,
+    timeline: NodeTimeline,
+    /// Capture segments realised so far (boot-seed index for the next).
+    segments: usize,
 }
 
 /// Simulated fleet node as a [`ReadingSource`]. One instance per worker,
@@ -86,6 +193,7 @@ pub struct SimSource {
     pub(crate) measure: MeasureScratch,
     info: SourceInfo,
     meta: Option<CaptureMeta>,
+    ctx: Option<SimCtx>,
     pos: usize,
 }
 
@@ -96,11 +204,14 @@ impl SimSource {
 
     /// Realise one node's observation: calibration probes + production
     /// workload, captured through the chunked streaming pipeline and
-    /// polled at `poll_period_s`. `restarts` (already snapped/filtered —
-    /// see [`FaultPlan::effective_restarts`]) split the capture into
-    /// sensor epochs: each restart re-rolls the boot phase and schedules a
-    /// re-calibration [`RESTART_OUTAGE_S`] after it. With no restarts this
-    /// is bit-for-bit the service's original single-epoch behaviour.
+    /// polled at `poll_period_s`. The `timeline` (already snapped/filtered
+    /// — see [`FaultPlan::effective_timeline`]) splits the capture into
+    /// sensor epochs: a [`BreakKind::Restart`] re-rolls the boot phase and
+    /// schedules a re-calibration [`RESTART_OUTAGE_S`] later, while a
+    /// [`BreakKind::DriverUpdate`] re-rolls the phase *and switches the
+    /// sensor pipeline to the new driver* without any re-calibration (the
+    /// masked drift). With an empty timeline this is bit-for-bit the
+    /// service's original single-epoch behaviour.
     #[allow(clippy::too_many_arguments)]
     pub fn prepare(
         &mut self,
@@ -112,7 +223,7 @@ impl SimSource {
         poll_period_s: f64,
         sched: &ProbeSchedule,
         duration_s: f64,
-        restarts: &[f64],
+        timeline: &NodeTimeline,
     ) {
         self.info = SourceInfo {
             node_id,
@@ -121,31 +232,45 @@ impl SimSource {
         };
         let rig_seed = node_rig_seed(service_seed, node_id);
         let boot_seed = node_boot_seed(rig_seed);
-        let rig = MeasurementRig::new(device, driver, field, rig_seed);
 
         let mut activity = std::mem::take(&mut self.measure.activity);
-        node_activity_with_restarts(sched, node_id, duration_s, restarts, &mut activity);
+        node_activity_timeline(sched, node_id, duration_s, &timeline.breaks, &mut activity);
 
         // one capture segment per sensor epoch; readings and PMD samples
-        // concatenate in the shared scratch (restart times sit on the PMD
-        // sample grid, so the PMD buffer stays one uniform trace)
+        // concatenate in the shared scratch (break times sit on the PMD
+        // sample grid, so the PMD buffer stays one uniform trace). The rig
+        // is rebuilt only when a driver update changes the pipeline.
         self.measure.readings.clear();
         self.measure.pmd.clear();
         let mut meta = None;
         let mut seg_t0 = 0.0;
-        for (k, &seg_t1) in restarts.iter().chain(std::iter::once(&duration_s)).enumerate() {
+        let mut drv = driver;
+        let mut rig = MeasurementRig::new(device.clone(), drv, field, rig_seed);
+        let end = [(duration_s, BreakKind::Restart)]; // kind unused for the sentinel
+        let mut segments = 0;
+        for &(seg_t1, kind) in timeline.breaks.iter().chain(end.iter()) {
             let m = capture_streaming_append(
                 &rig,
                 &activity,
                 seg_t0,
                 seg_t1,
-                epoch_boot_seed(boot_seed, k),
+                epoch_boot_seed(boot_seed, segments),
                 &mut self.measure,
             );
             if meta.is_none() {
                 meta = Some(m);
             }
+            segments += 1;
             seg_t0 = seg_t1;
+            if seg_t1 >= duration_s {
+                break;
+            }
+            if let BreakKind::DriverUpdate(d) = kind {
+                if d != drv {
+                    drv = d;
+                    rig = MeasurementRig::new(device.clone(), drv, field, rig_seed);
+                }
+            }
         }
         self.measure.activity = activity;
 
@@ -160,6 +285,19 @@ impl SimSource {
             &mut self.measure.points,
         );
         self.meta = meta;
+        self.ctx = Some(SimCtx {
+            device,
+            base_driver: driver,
+            field,
+            rig_seed,
+            boot_seed,
+            node_id,
+            poll_period_s,
+            sched: *sched,
+            duration_s,
+            timeline: timeline.clone(),
+            segments,
+        });
         self.pos = 0;
     }
 }
@@ -179,6 +317,82 @@ impl ReadingSource for SimSource {
 
     fn truth(&self) -> Option<TraceView<'_>> {
         self.meta.as_ref().map(|m| m.pmd_view(&self.measure.pmd))
+    }
+
+    /// Adaptive probe replay on a simulated node: the not-yet-streamed
+    /// tail of the observation is re-captured with the calibration
+    /// schedule starting at the grid-snapped `t_r` and production workload
+    /// resuming after it, under the driver in force at `t_r`. The already
+    /// polled prefix (readings, PMD samples, poll instants) is untouched —
+    /// `poll_readings` draws its jitter per poll slot, so re-polling the
+    /// patched readings reproduces the prefix exactly and the stream
+    /// position stays valid. Timeline breaks scheduled after `t_r` are
+    /// dropped (the replay owns the tail).
+    fn replay_probes(&mut self, after: f64) -> Option<f64> {
+        let (meta, ctx) = match (&self.meta, self.ctx.as_mut()) {
+            (Some(m), Some(c)) => (*m, c),
+            _ => return None,
+        };
+        let grid = crate::pmd::PMD_SAMPLE_HZ;
+        let t_r = ((after + REPLAY_SETUP_S) * grid).ceil() / grid;
+        // room: the full calibration plus a little workload must fit
+        if t_r + ctx.sched.calibration_end() + 1.0 > ctx.duration_s {
+            return None;
+        }
+        // never rewrite history the producer already consumed
+        let cut = self.measure.points.partition_point(|p| p.0 < t_r);
+        if self.pos > cut {
+            return None;
+        }
+
+        // truncate the realised capture at t_r (grid-snapped, so the PMD
+        // buffer stays a uniform trace)
+        let rcut = self.measure.readings.partition_point(|r| r.t < t_r);
+        self.measure.readings.truncate(rcut);
+        let pmd_cut = ((t_r - meta.pmd_t0) * meta.pmd_hz).round() as usize;
+        self.measure.pmd.truncate(pmd_cut.min(self.measure.pmd.len()));
+
+        // re-plan the tail: probes at t_r, then workload iterations (the
+        // same planner the normal timeline uses)
+        let mut activity = std::mem::take(&mut self.measure.activity);
+        activity.segments.clear();
+        ctx.sched.append_activity_at(t_r, &mut activity);
+        append_workload_iterations(
+            node_workload(ctx.node_id),
+            t_r + ctx.sched.calibration_end(),
+            ctx.duration_s,
+            &mut activity,
+        );
+
+        // capture the tail under the driver in force at t_r; the sensor is
+        // not rebooted by a probe replay, but its phase is unobservable
+        // (§4.3), so a fresh segment seed models it faithfully
+        let drv = ctx.timeline.driver_at(ctx.base_driver, t_r);
+        let rig = MeasurementRig::new(ctx.device.clone(), drv, ctx.field, ctx.rig_seed);
+        capture_streaming_append(
+            &rig,
+            &activity,
+            t_r,
+            ctx.duration_s,
+            epoch_boot_seed(ctx.boot_seed, ctx.segments),
+            &mut self.measure,
+        );
+        ctx.segments += 1;
+        self.measure.activity = activity;
+
+        // re-poll: identical prefix (same readings below t_r, same
+        // per-slot jitter draws), fresh tail
+        self.measure.points.clear();
+        poll_readings(
+            &self.measure.readings,
+            Rng::new(ctx.boot_seed ^ 0x5149),
+            ctx.poll_period_s,
+            0.15,
+            0.0,
+            ctx.duration_s,
+            &mut self.measure.points,
+        );
+        Some(t_r)
     }
 }
 
@@ -260,6 +474,10 @@ pub struct FaultPlan {
     /// Driver restart times: the stream goes down for
     /// [`RESTART_OUTAGE_S`] and the sensor reboots with a fresh epoch.
     pub restarts: Vec<f64>,
+    /// Masked driver updates `(time, new epoch)`: a fast restart (below
+    /// the detection gap) that silently switches the sensor pipeline —
+    /// the drift the adaptive re-calibration scheduler catches.
+    pub driver_updates: Vec<(f64, DriverEpoch)>,
 }
 
 impl FaultPlan {
@@ -269,27 +487,53 @@ impl FaultPlan {
             && self.outages.is_empty()
             && self.stuck.is_empty()
             && self.restarts.is_empty()
+            && self.driver_updates.is_empty()
     }
 
-    /// The restart times the service will actually apply: snapped to the
-    /// PMD sample grid ([`crate::pmd::PMD_SAMPLE_HZ`], so per-epoch
-    /// captures tile exactly), sorted, deduplicated, and dropped when they
-    /// leave no room to finish the preceding calibration or to
-    /// re-calibrate before `duration_s` ends.
+    /// The restart times the service will actually apply (see
+    /// [`Self::effective_timeline`]).
     pub fn effective_restarts(&self, sched: &ProbeSchedule, duration_s: f64) -> Vec<f64> {
+        self.effective_timeline(sched, duration_s).restart_times()
+    }
+
+    /// The break timeline the service will actually apply: restarts and
+    /// masked driver updates snapped to the PMD sample grid
+    /// ([`crate::pmd::PMD_SAMPLE_HZ`], so per-epoch captures tile
+    /// exactly), merged, sorted, deduplicated, and dropped when they leave
+    /// no room for the observation around them — a restart needs the
+    /// preceding calibration finished and a full re-calibration before
+    /// `duration_s` ends (as before), a masked update needs the first
+    /// calibration finished and ≥ 1 s of stream left.
+    pub fn effective_timeline(&self, sched: &ProbeSchedule, duration_s: f64) -> NodeTimeline {
         let grid = crate::pmd::PMD_SAMPLE_HZ;
-        let mut rs: Vec<f64> =
-            self.restarts.iter().map(|&r| (r * grid).round() / grid).collect();
-        rs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mut out: Vec<f64> = Vec::new();
+        let snap = |t: f64| (t * grid).round() / grid;
+        let mut breaks: Vec<(f64, BreakKind)> = self
+            .restarts
+            .iter()
+            .map(|&r| (snap(r), BreakKind::Restart))
+            .chain(self.driver_updates.iter().map(|&(t, d)| (snap(t), BreakKind::DriverUpdate(d))))
+            .collect();
+        breaks.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut out: Vec<(f64, BreakKind)> = Vec::new();
         let mut min_t = sched.calibration_end();
-        for r in rs {
-            if r >= min_t && r + RESTART_OUTAGE_S + sched.calibration_end() <= duration_s {
-                out.push(r);
-                min_t = r + RESTART_OUTAGE_S + sched.calibration_end();
+        for (t, kind) in breaks {
+            let room_ok = match kind {
+                BreakKind::Restart => {
+                    t + RESTART_OUTAGE_S + sched.calibration_end() <= duration_s
+                }
+                BreakKind::DriverUpdate(_) => t + MASKED_RESTART_OUTAGE_S + 1.0 <= duration_s,
+            };
+            if t >= min_t && room_ok {
+                min_t = match kind {
+                    // a restart re-calibrates: nothing else until that ends
+                    BreakKind::Restart => t + RESTART_OUTAGE_S + sched.calibration_end(),
+                    // a masked update just needs its blackout to clear
+                    BreakKind::DriverUpdate(_) => t + MASKED_RESTART_OUTAGE_S + 1.0,
+                };
+                out.push((t, kind));
             }
         }
-        out
+        NodeTimeline { breaks: out }
     }
 }
 
@@ -301,8 +545,10 @@ impl FaultPlan {
 pub struct FaultSource<S> {
     inner: S,
     plan: FaultPlan,
-    /// Snapped restart times (blackout windows derive from these).
-    restarts: Vec<f64>,
+    /// Snapped break timeline (blackout windows derive from it: a full
+    /// [`RESTART_OUTAGE_S`] per restart, the short
+    /// [`MASKED_RESTART_OUTAGE_S`] per masked driver update).
+    timeline: NodeTimeline,
     dropout: Dropout,
     stuck: Vec<StuckHold>,
     staging: Vec<(f64, f64)>,
@@ -314,7 +560,14 @@ impl<S> FaultSource<S> {
     pub fn new(inner: S, plan: FaultPlan) -> Self {
         let dropout = Dropout::new(plan.dropout, 0);
         let stuck = plan.stuck.iter().map(|&w| StuckHold::new(w)).collect();
-        FaultSource { inner, plan, restarts: Vec::new(), dropout, stuck, staging: Vec::new() }
+        FaultSource {
+            inner,
+            plan,
+            timeline: NodeTimeline::default(),
+            dropout,
+            stuck,
+            staging: Vec::new(),
+        }
     }
 
     /// The wrapped source (to prepare it for the next node).
@@ -323,21 +576,21 @@ impl<S> FaultSource<S> {
     }
 
     /// Re-arm the per-node fault state: a fresh dropout RNG from `seed`,
-    /// fresh stuck windows, and the effective restart blackouts.
-    pub fn reset(&mut self, seed: u64, restarts: &[f64]) {
+    /// fresh stuck windows, and the effective break-timeline blackouts.
+    pub fn reset(&mut self, seed: u64, timeline: &NodeTimeline) {
         self.dropout = Dropout::new(self.plan.dropout, seed);
         self.stuck.clear();
         self.stuck.extend(self.plan.stuck.iter().map(|&w| StuckHold::new(w)));
-        self.restarts.clear();
-        self.restarts.extend_from_slice(restarts);
+        self.timeline = timeline.clone();
     }
 
     fn blacked_out(&self, t: f64) -> bool {
         self.plan.outages.iter().any(|w| w.contains(t))
             || self
-                .restarts
+                .timeline
+                .breaks
                 .iter()
-                .any(|&r| FaultWindow::new(r, RESTART_OUTAGE_S).contains(t))
+                .any(|&(bt, kind)| FaultWindow::new(bt, kind.outage_s()).contains(t))
     }
 }
 
@@ -377,6 +630,13 @@ impl<S: ReadingSource> ReadingSource for FaultSource<S> {
     fn truth(&self) -> Option<TraceView<'_>> {
         self.inner.truth()
     }
+
+    /// A probe replay happens on the live node underneath the collection
+    /// faults: delegate to the inner source; the plan's transforms keep
+    /// applying to the replayed tail.
+    fn replay_probes(&mut self, after: f64) -> Option<f64> {
+        self.inner.replay_probes(after)
+    }
 }
 
 /// The service's source selection (`repro telemetry --source ...`).
@@ -398,6 +658,10 @@ mod tests {
     use crate::sim::profile::find_model;
     use crate::sim::trace::SampleSeries;
 
+    fn restarts_only(restarts: &[f64]) -> NodeTimeline {
+        NodeTimeline { breaks: restarts.iter().map(|&t| (t, BreakKind::Restart)).collect() }
+    }
+
     fn a100_source(duration_s: f64, restarts: &[f64]) -> SimSource {
         let device = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, 5);
         let mut src = SimSource::new();
@@ -410,7 +674,7 @@ mod tests {
             0.002,
             &ProbeSchedule::default(),
             duration_s,
-            restarts,
+            &restarts_only(restarts),
         );
         src
     }
@@ -503,10 +767,10 @@ mod tests {
             dropout: 0.2,
             outages: vec![FaultWindow::new(3.0, 0.4)],
             stuck: vec![FaultWindow::new(10.0, 0.5)],
-            restarts: vec![],
+            ..Default::default()
         };
         let mut faulty = FaultSource::new(a100_source(duration, &[]), plan);
-        faulty.reset(42, &[]);
+        faulty.reset(42, &NodeTimeline::default());
         let mut got = Vec::new();
         while faulty.fill(&mut got, 229) > 0 {}
 
@@ -518,6 +782,124 @@ mod tests {
         let want = stick_readings(&after_drop, 10.0, 0.5);
         assert_eq!(got, want.points);
         assert!(faulty.truth().is_some(), "faults never touch the reference");
+    }
+
+    /// A masked driver update slots into the timeline, flips the pipeline
+    /// for the rest of the capture (Fig. 14: the same card, a different
+    /// window), and never opens a restart-sized gap of its own.
+    #[test]
+    fn masked_driver_update_switches_the_pipeline_without_a_detectable_gap() {
+        use crate::telemetry::registry::DRIVER_RESTART_GAP_S;
+        let sched = ProbeSchedule::default();
+        let cal = sched.calibration_end();
+        let update_t = cal + 2.0;
+        let duration = update_t + 8.0;
+        let plan = FaultPlan {
+            driver_updates: vec![(update_t, DriverEpoch::Post530)],
+            ..Default::default()
+        };
+        let timeline = plan.effective_timeline(&sched, duration);
+        assert_eq!(timeline.breaks.len(), 1);
+        assert!(matches!(timeline.breaks[0].1, BreakKind::DriverUpdate(DriverEpoch::Post530)));
+        assert_eq!(timeline.driver_at(DriverEpoch::V530, update_t - 1.0), DriverEpoch::V530);
+        assert_eq!(timeline.driver_at(DriverEpoch::V530, update_t + 1.0), DriverEpoch::Post530);
+        assert!(timeline.restart_times().is_empty());
+
+        // a 3090 on the 530 driver: power.draw has a 100 ms window; the
+        // post-530 update silently widens it to 1 s
+        let device = GpuDevice::new(find_model("RTX 3090").unwrap(), 0, 6);
+        let mut src = SimSource::new();
+        src.prepare(
+            device,
+            0,
+            DriverEpoch::V530,
+            PowerField::Draw,
+            2025,
+            0.002,
+            &sched,
+            duration,
+            &timeline,
+        );
+        let mut pts = Vec::new();
+        while src.fill(&mut pts, 4096) > 0 {}
+        assert!(!pts.is_empty());
+        // the raw sim stream has no restart-sized hole at the update (the
+        // short blackout is a FaultSource concern)
+        let mut worst_gap = 0.0f64;
+        for w in pts.windows(2) {
+            worst_gap = worst_gap.max(w[1].0 - w[0].0);
+        }
+        assert!(worst_gap < DRIVER_RESTART_GAP_S, "masked update must stay masked: {worst_gap}");
+        // the 10x window averages the workload's dips away: the published
+        // value swing collapses — the drift signature the monitor keys on
+        let swing = |lo: f64, hi: f64| -> f64 {
+            let (mut min_v, mut max_v) = (f64::INFINITY, f64::NEG_INFINITY);
+            for &(_, w) in pts.iter().filter(|p| p.0 >= lo && p.0 < hi) {
+                min_v = min_v.min(w);
+                max_v = max_v.max(w);
+            }
+            max_v - min_v
+        };
+        let pre = swing(cal, update_t);
+        let post = swing(update_t + 2.0, duration - 0.5);
+        assert!(
+            post < 0.5 * pre,
+            "window widening must collapse the published swing: {pre:.1} W -> {post:.1} W"
+        );
+    }
+
+    /// `replay_probes` re-plans only the unread tail: the already-polled
+    /// prefix is bit-for-bit untouched, the stream position stays valid,
+    /// and the replayed tail carries the probe signature.
+    #[test]
+    fn replay_probes_preserves_the_streamed_prefix() {
+        let sched = ProbeSchedule::default();
+        let cal = sched.calibration_end();
+        let duration = 2.0 * cal + 8.0;
+        let mut plain = a100_source(duration, &[]);
+        let mut reference = Vec::new();
+        while plain.fill(&mut reference, 8192) > 0 {}
+
+        let mut src = a100_source(duration, &[]);
+        let mut streamed = Vec::new();
+        // consume ~the first calibration + 2 s
+        while streamed.last().map(|p: &(f64, f64)| p.0 < cal + 2.0).unwrap_or(true) {
+            if src.fill(&mut streamed, 256) == 0 {
+                break;
+            }
+        }
+        let consumed_t = streamed.last().unwrap().0;
+        let t_r = src.replay_probes(consumed_t).expect("room for a replay");
+        assert!(t_r > consumed_t && t_r <= consumed_t + REPLAY_SETUP_S + 1e-3);
+        // the PMD grid snap holds exactly
+        assert_eq!((t_r * crate::pmd::PMD_SAMPLE_HZ).round() / crate::pmd::PMD_SAMPLE_HZ, t_r);
+
+        // drain the rest: prefix identical to the pre-replay capture
+        let mut rest = Vec::new();
+        while src.fill(&mut rest, 8192) > 0 {}
+        let all: Vec<(f64, f64)> = streamed.iter().chain(rest.iter()).copied().collect();
+        for (i, (a, b)) in all.iter().zip(reference.iter()).enumerate() {
+            if a.0 >= t_r {
+                break;
+            }
+            assert_eq!(a, b, "point {i} below t_r must be unchanged");
+        }
+        // the tail diverges (probes replaced workload)
+        let tail_a: Vec<_> = all.iter().filter(|p| p.0 >= t_r).collect();
+        let tail_b: Vec<_> = reference.iter().filter(|p| p.0 >= t_r).collect();
+        assert!(!tail_a.is_empty());
+        assert_ne!(tail_a, tail_b, "replayed tail must differ from the original workload");
+
+        // no room near the end -> refused
+        let mut late = a100_source(duration, &[]);
+        let mut sink = Vec::new();
+        while late.fill(&mut sink, 8192) > 0 {}
+        assert_eq!(late.replay_probes(duration - 1.0), None);
+        // recorded logs can never replay probes
+        let text = "timestamp, name, power.draw [W]\n0.100, A100 PCIe-40G, 60.00 W\n";
+        let mut rs = ReplaySource::new();
+        rs.prepare_from_log(0, text).unwrap();
+        assert_eq!(rs.replay_probes(0.05), None);
     }
 
     #[test]

@@ -441,6 +441,205 @@ fn driver_restart_reidentifies_and_multiwindow_stays_deterministic() {
     }
 }
 
+/// ISSUE 4 acceptance: a snapshot taken mid-ingest — after a node's
+/// calibration completes but before the service finishes — is bit-for-bit
+/// identical *for that node* to the end-of-run snapshot: the identity is
+/// final the moment `NodeIdentified` fires, the live account's `frozen_n`
+/// leading buckets hold their final values, and once `NodeComplete` fires
+/// the whole account (truth included) is the finished article.
+#[test]
+fn mid_ingest_snapshot_matches_final_for_identified_node() {
+    use gpupower::telemetry::{
+        ServiceEvent, ServiceSource, TelemetryConfig, TelemetryService, TelemetrySnapshot,
+    };
+
+    let fleet = Fleet::build(FleetConfig {
+        size: 2,
+        models: vec!["A100 PCIe-40G".into()],
+        driver: DriverEpoch::Post530,
+        field: PowerField::Instant,
+        seed: 99,
+    });
+    let cfg = TelemetryConfig {
+        duration_s: 34.0,
+        bucket_s: 2.0,
+        workers: 1,
+        shard_size: 1,
+        ..Default::default()
+    };
+    let handle = TelemetryService::start(&fleet, &cfg, &ServiceSource::Sim);
+    let events = handle.subscribe();
+    let mut at_identified: Option<TelemetrySnapshot> = None;
+    let mut at_complete: Option<TelemetrySnapshot> = None;
+    for ev in events {
+        match ev {
+            ServiceEvent::NodeIdentified { node_id: 0, .. } if at_identified.is_none() => {
+                at_identified = Some(handle.snapshot());
+            }
+            ServiceEvent::NodeComplete { node_id: 0 } if at_complete.is_none() => {
+                at_complete = Some(handle.snapshot());
+            }
+            ServiceEvent::ServiceComplete => break,
+            _ => {}
+        }
+    }
+    let fin = handle.join();
+    let spec = fin.accounts.spec;
+
+    // 1. identity is final from the calibration-complete moment
+    let mid = at_identified.expect("NodeIdentified must fire for node 0");
+    let mid_entry = mid.registry.get(0).expect("identified node is in the live registry");
+    let fin_entry = fin.registry.get(0).unwrap();
+    assert_eq!(mid_entry.identity, fin_entry.identity, "mid-ingest identity IS the final one");
+    assert_eq!(mid_entry.epochs, fin_entry.epochs);
+
+    // 2. the live account's frozen buckets already hold final values
+    let mid_acct = mid.accounts.nodes.iter().find(|n| n.node_id == 0).unwrap();
+    let fin_acct = fin.accounts.nodes.iter().find(|n| n.node_id == 0).unwrap();
+    assert!(fin_acct.complete);
+    assert_eq!(fin_acct.frozen_n, spec.n);
+    for b in 0..mid_acct.frozen_n {
+        assert_eq!(mid_acct.naive_j[b].to_bits(), fin_acct.naive_j[b].to_bits(), "naive[{b}]");
+        assert_eq!(
+            mid_acct.corrected_j[b].to_bits(),
+            fin_acct.corrected_j[b].to_bits(),
+            "corrected[{b}]"
+        );
+        assert_eq!(mid_acct.bound_j[b].to_bits(), fin_acct.bound_j[b].to_bits(), "bound[{b}]");
+    }
+
+    // 3. after NodeComplete the whole account is final, truth included
+    let done = at_complete.expect("NodeComplete must fire for node 0");
+    let done_acct = done.accounts.nodes.iter().find(|n| n.node_id == 0).unwrap();
+    assert!(done_acct.complete);
+    assert_eq!(done_acct.readings, fin_acct.readings);
+    for b in 0..spec.n {
+        assert_eq!(done_acct.naive_j[b].to_bits(), fin_acct.naive_j[b].to_bits());
+        assert_eq!(done_acct.corrected_j[b].to_bits(), fin_acct.corrected_j[b].to_bits());
+        assert_eq!(done_acct.bound_j[b].to_bits(), fin_acct.bound_j[b].to_bits());
+        assert_eq!(done_acct.truth_j[b].to_bits(), fin_acct.truth_j[b].to_bits());
+    }
+}
+
+/// ISSUE 4 acceptance: a silent mid-stream drift — a masked driver update
+/// flipping the 3090's `power.draw` window from 100 ms to 1 s (Fig. 14)
+/// without a detectable restart gap — fires **exactly one** adaptive
+/// re-calibration; the probe replay re-identifies the new window and the
+/// corrected account recovers within the coverage-derived bound. The
+/// whole chain (drift decision, replay origin, re-identification) is
+/// deterministic across worker/batch configurations.
+#[test]
+fn injected_drift_triggers_exactly_one_recalibration_and_recovers() {
+    use gpupower::coordinator::fleet::Node;
+    use gpupower::telemetry::{self, FaultPlan, SensorClass, ServiceSource, TelemetryConfig};
+
+    // node id 8 -> the BERT workload (clear plateau/dip structure for the
+    // drift monitor's baseline); V530 power.draw = 100 ms boxcar
+    let model = find_model("RTX 3090").unwrap();
+    let fleet = Fleet {
+        nodes: vec![Node { id: 8, device: GpuDevice::new(model, 8, 0xD21F7) }],
+        config: FleetConfig {
+            size: 1,
+            models: Vec::new(),
+            driver: DriverEpoch::V530,
+            field: PowerField::Draw,
+            seed: 0xD21F7,
+        },
+    };
+    let sched = telemetry::ProbeSchedule::default();
+    let cal = sched.calibration_end();
+    let update_t = cal + 5.0; // the masked driver update (drift injection)
+    let duration = 70.0;
+    let plan = FaultPlan {
+        driver_updates: vec![(update_t, DriverEpoch::Post530)],
+        ..Default::default()
+    };
+    let cfg = TelemetryConfig { duration_s: duration, bucket_s: 2.0, ..Default::default() };
+    let snap = telemetry::run_service_with(&fleet, &cfg, &ServiceSource::Faulty(plan.clone()));
+
+    // exactly one adaptive probe replay, no undeliverable drift reports
+    assert_eq!(snap.stats.recalibrations, 1, "exactly one re-calibration must fire");
+    assert_eq!(snap.stats.drift_suspected, 0);
+    let entry = snap.registry.get(8).unwrap();
+    assert_eq!(entry.epochs.len(), 2, "{entry:?}");
+
+    // epoch 0: the pre-update 100 ms window was identified
+    let before = entry.epochs[0].identity;
+    assert_eq!(before.class, SensorClass::Boxcar, "{before:?}");
+    let w0 = before.window_s.expect("pre-drift window identified");
+    assert!((w0 - 0.1).abs() < 0.05, "V530 window ~100 ms, got {w0}");
+
+    // the replay epoch starts after the masked update, reasonably soon
+    // after the drift became observable
+    let recal = &entry.epochs[1];
+    assert!(
+        recal.t0 > update_t && recal.t0 < update_t + 12.0,
+        "replay at {:.1} s for an update at {update_t:.1} s",
+        recal.t0
+    );
+    // ... and identifies the silently widened 1 s window
+    let after = recal.identity;
+    assert_eq!(after.class, SensorClass::Boxcar, "{after:?}");
+    let u = after.update_s.unwrap();
+    assert!((u - 0.1).abs() < 0.02, "update period unchanged, got {u}");
+    let w1 = after.window_s.expect("probe replay must recover the new window");
+    assert!(w1 > 0.5 && w1 < 1.6, "post-update window ~1 s, got {w1}");
+
+    // the corrected account recovers: over the post-replay production
+    // phase it tracks truth within the coverage-derived bound (+ sensor
+    // tolerance slack, as elsewhere)
+    let post_t0 = recal.t0 + cal;
+    assert!(post_t0 < duration - 4.0, "room left to account after re-calibration");
+    let post = snap.fleet_energy(post_t0, duration);
+    assert!(post.truth_j > 0.0);
+    assert!(
+        (post.corrected_j - post.truth_j).abs() <= post.bound_j + 0.15 * post.truth_j,
+        "corrected {:.0} J vs truth {:.0} J (bound {:.0} J) after re-calibration",
+        post.corrected_j,
+        post.truth_j,
+        post.bound_j
+    );
+
+    // the adaptive chain is deterministic under concurrency/batching
+    let b = telemetry::run_service_with(
+        &fleet,
+        &TelemetryConfig { workers: 4, shard_size: 1, batch_size: 77, queue_depth: 3, ..cfg },
+        &ServiceSource::Faulty(plan),
+    );
+    assert_eq!(b.stats.recalibrations, 1);
+    assert_eq!(b.registry.get(8).unwrap().epochs, entry.epochs);
+    let (na, nb) = (&snap.accounts.nodes[0], &b.accounts.nodes[0]);
+    assert_eq!(na.readings, nb.readings);
+    for bkt in 0..snap.accounts.spec.n {
+        assert_eq!(na.naive_j[bkt].to_bits(), nb.naive_j[bkt].to_bits());
+        assert_eq!(na.corrected_j[bkt].to_bits(), nb.corrected_j[bkt].to_bits());
+        assert_eq!(na.truth_j[bkt].to_bits(), nb.truth_j[bkt].to_bits());
+    }
+}
+
+/// Satellite: the committed wall-clock example log (raw nvidia-smi
+/// timestamp format, crossing a month boundary at midnight) normalises to
+/// exactly the relative-seconds reference log and replays through the
+/// service unchanged.
+#[test]
+fn committed_wallclock_log_normalises_and_replays() {
+    use gpupower::smi::cli::parse_log;
+    use gpupower::telemetry::{self, TelemetryConfig};
+
+    let rel = include_str!("../../examples/nvidia_smi_a100.csv");
+    let wall = include_str!("../../examples/nvidia_smi_a100_wallclock.csv");
+    let a = parse_log(rel).unwrap();
+    let b = parse_log(wall).unwrap();
+    assert_eq!(a, b, "wall-clock normalisation must reproduce the relative log");
+
+    let cfg = TelemetryConfig { duration_s: 0.0, bucket_s: 1.0, ..Default::default() };
+    let snap = telemetry::run_replay_service(&[wall.to_string()], &cfg).unwrap();
+    assert_eq!(snap.stats.nodes, 1);
+    assert_eq!(snap.stats.readings, 59, "one [N/A] row skipped");
+    let whole = snap.fleet_energy(0.0, snap.duration_s);
+    assert!(whole.naive_j > 0.0);
+}
+
 /// The committed example log (the recorded-log schema's reference file)
 /// parses, resolves its model, and flows through the replay service.
 #[test]
