@@ -34,8 +34,15 @@
 //!   *incremental* sensor identification (identities final at calibration
 //!   end, not stream close), drift monitoring with adaptive probe-replay
 //!   re-calibration, and rolling multi-window corrected energy accounts
-//!   with error bounds. One-call wrappers `run_service*` remain
-//!   (`repro telemetry --source sim|faulty|replay [--live-every S]`);
+//!   with error bounds. The service **checkpoints its durable state to
+//!   disk** (`telemetry::persist`, a versioned dependency-free format
+//!   specified byte-for-byte in `docs/CHECKPOINT_FORMAT.md`) at every
+//!   closed observation window, and `TelemetryService::start_from`
+//!   restores a checkpoint after a collector crash — resuming ingest
+//!   mid-stream with no re-calibration and bit-for-bit identical frozen
+//!   accounts. One-call wrappers `run_service*` remain
+//!   (`repro telemetry --source sim|faulty|replay [--live-every S]
+//!   [--checkpoint-dir D] [--restore PATH]`);
 //! * [`runtime`] — the PJRT artifact runtime (Python never runs at request
 //!   time).
 

@@ -49,6 +49,7 @@ COMMANDS:
             [--dropout P] [--outage T:D ...] [--stuck T:D ...]
             [--restart T ...] [--driver-update T:EPOCH ...]
             [--live-every S]
+            [--checkpoint-dir D] [--checkpoint-every S] [--restore PATH]
                             the live fleet-telemetry service
                             (TelemetryService::start -> ServiceHandle):
                             streaming ingestion over the unified
@@ -81,6 +82,23 @@ COMMANDS:
                                              catches)
                             --source replay  recorded nvidia-smi CSV logs,
                                              one node per --replay-log PATH.
+                            --checkpoint-dir D   persist a checkpoint
+                                             (checkpoint-NNNNNN.gpck, the
+                                             format in docs/
+                                             CHECKPOINT_FORMAT.md) into D
+                                             at every closed observation
+                                             window
+                            --checkpoint-every S w/ --checkpoint-dir: also
+                                             force a checkpoint every S
+                                             wall-clock seconds while the
+                                             service runs
+                            --restore PATH   restore the checkpoint at
+                                             PATH and resume its run
+                                             (same seed/config/source
+                                             flags required; identities
+                                             restore without
+                                             re-calibration and frozen
+                                             accounts bit-for-bit)
                             Recorded-log schema (nvidia-smi
                             --query-gpu=... --format=csv shape): a header
                             row naming the fields (e.g. \"timestamp, name,
@@ -478,6 +496,19 @@ fn main() -> Result<()> {
                 ..Default::default()
             };
             let live_every = args.f64_flag("--live-every", 0.0);
+            // checkpoint/restore persistence (docs/CHECKPOINT_FORMAT.md):
+            // --restore resumes a crashed run from its last checkpoint,
+            // --checkpoint-dir arms the WindowClosed write hook, and
+            // --checkpoint-every additionally forces periodic writes
+            let restore_ck = match args.flag_value("--restore") {
+                Some(p) => Some(
+                    telemetry::Checkpoint::load(std::path::Path::new(p))
+                        .map_err(|e| anyhow::anyhow!("{e}"))?,
+                ),
+                None => None,
+            };
+            let ck_dir = args.flag_value("--checkpoint-dir").map(|s| s.to_string());
+            let ck_every = args.f64_flag("--checkpoint-every", 0.0);
             // score identification against the pipeline the fleet ran; a
             // replayed log set is scored as post-530 instant (the emitter's
             // default), with unrecognised models excluded from the metric
@@ -497,9 +528,28 @@ fn main() -> Result<()> {
                                     .map_err(|e| anyhow::anyhow!("cannot read {p}: {e}"))?,
                             );
                         }
-                        let handle = telemetry::TelemetryService::start_replay(&logs, &cfg)
-                            .map_err(|e| anyhow::anyhow!("{e}"))?;
-                        (handle, logs.len(), PowerField::Instant, DriverEpoch::Post530)
+                        let n = logs.len();
+                        let handle = match &restore_ck {
+                            Some(ck) => {
+                                // start_from ignores the fleet for replay
+                                let fleet = Fleet {
+                                    nodes: Vec::new(),
+                                    config: FleetConfig {
+                                        size: 0,
+                                        models: Vec::new(),
+                                        driver: DriverEpoch::Post530,
+                                        field: PowerField::Instant,
+                                        seed,
+                                    },
+                                };
+                                let src = gpupower::telemetry::ServiceSource::Replay(logs);
+                                telemetry::TelemetryService::start_from(ck, &fleet, &cfg, &src)
+                                    .map_err(|e| anyhow::anyhow!("{e}"))?
+                            }
+                            None => telemetry::TelemetryService::start_replay(&logs, &cfg)
+                                .map_err(|e| anyhow::anyhow!("{e}"))?,
+                        };
+                        (handle, n, PowerField::Instant, DriverEpoch::Post530)
                     }
                     source @ ("sim" | "faulty") => {
                         let fleet = Fleet::build(FleetConfig {
@@ -532,7 +582,13 @@ fn main() -> Result<()> {
                             gpupower::telemetry::ServiceSource::Sim
                         };
                         let n = fleet.len();
-                        let handle = telemetry::TelemetryService::start(&fleet, &cfg, &src);
+                        let handle = match &restore_ck {
+                            Some(ck) => {
+                                telemetry::TelemetryService::start_from(ck, &fleet, &cfg, &src)
+                                    .map_err(|e| anyhow::anyhow!("{e}"))?
+                            }
+                            None => telemetry::TelemetryService::start(&fleet, &cfg, &src),
+                        };
                         (handle, n, fleet.config.field, fleet.config.driver)
                     }
                     other => {
@@ -541,31 +597,74 @@ fn main() -> Result<()> {
                         ))
                     }
                 };
-            if live_every > 0.0 {
-                // rolling mid-ingest snapshots: the service keeps running
-                // while we query it
+            if let Some(ck) = &restore_ck {
+                let finished = ck
+                    .nodes
+                    .iter()
+                    .filter(|n| n.stage != gpupower::telemetry::persist::NodeStage::InFlight)
+                    .count();
+                println!(
+                    "restored checkpoint: {} node(s) recorded ({} finished, {} resuming \
+                     mid-stream), {} window(s) already closed",
+                    ck.nodes.len(),
+                    finished,
+                    ck.nodes.len() - finished,
+                    ck.windows_closed,
+                );
+            }
+            if let Some(dir) = &ck_dir {
+                handle.enable_checkpoints(std::path::Path::new(dir));
+                println!("checkpointing into {dir}/checkpoint-NNNNNN.gpck at every closed window");
+            }
+            let want_live = live_every > 0.0;
+            let want_ck = ck_every > 0.0 && ck_dir.is_some();
+            if want_live || want_ck {
+                // rolling mid-ingest snapshots and/or forced periodic
+                // checkpoints: the service keeps running while we drive it
+                let live_step = live_every.clamp(0.05, 10.0);
+                let ck_step = ck_every.clamp(0.05, 600.0);
+                let begun = std::time::Instant::now();
+                let (mut lives, mut cks) = (0u64, 0u64);
                 while !handle.is_done() {
-                    std::thread::sleep(std::time::Duration::from_secs_f64(
-                        live_every.clamp(0.05, 10.0),
-                    ));
+                    let mut next = f64::INFINITY;
+                    if want_live {
+                        next = next.min((lives + 1) as f64 * live_step);
+                    }
+                    if want_ck {
+                        next = next.min((cks + 1) as f64 * ck_step);
+                    }
+                    let now = begun.elapsed().as_secs_f64();
+                    if next > now {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(next - now));
+                    }
                     if handle.is_done() {
                         break;
                     }
-                    let s = handle.snapshot();
-                    let e = s.fleet_energy(0.0, s.duration_s);
-                    let finished = s.accounts.nodes.iter().filter(|n| n.complete).count();
-                    println!(
-                        "[live] nodes {}/{} streaming, {} finished, {} identified | \
-                         {} readings | naive {:.3} kJ, corrected {:.3} kJ (±{:.3} kJ)",
-                        s.stats.nodes,
-                        n_total,
-                        finished,
-                        s.registry.entries.len(),
-                        s.stats.readings,
-                        e.naive_j / 1e3,
-                        e.corrected_j / 1e3,
-                        e.bound_j / 1e3,
-                    );
+                    let now = begun.elapsed().as_secs_f64();
+                    if want_ck && now >= (cks + 1) as f64 * ck_step {
+                        cks = (now / ck_step) as u64;
+                        if handle.control(telemetry::ControlMsg::Checkpoint) {
+                            println!("[checkpoint] forced write at t+{now:.1} s");
+                        }
+                    }
+                    if want_live && now >= (lives + 1) as f64 * live_step {
+                        lives = (now / live_step) as u64;
+                        let s = handle.snapshot();
+                        let e = s.fleet_energy(0.0, s.duration_s);
+                        let finished = s.accounts.nodes.iter().filter(|n| n.complete).count();
+                        println!(
+                            "[live] nodes {}/{} streaming, {} finished, {} identified | \
+                             {} readings | naive {:.3} kJ, corrected {:.3} kJ (±{:.3} kJ)",
+                            s.stats.nodes,
+                            n_total,
+                            finished,
+                            s.registry.entries.len(),
+                            s.stats.readings,
+                            e.naive_j / 1e3,
+                            e.corrected_j / 1e3,
+                            e.bound_j / 1e3,
+                        );
+                    }
                 }
             }
             let snap = handle.join();

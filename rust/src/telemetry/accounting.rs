@@ -160,6 +160,37 @@ struct EpochSpan {
     coverage: f64,
 }
 
+/// The durable half of a [`NodeAccountant`]'s state at a checkpoint: the
+/// already-final ("frozen") bucket prefix and the stream position a
+/// restored service resumes ingest from. Produced by
+/// [`NodeAccountant::export_frozen`], consumed by
+/// [`NodeAccountant::resume`] — the freeze-watermark export/import pair
+/// behind `telemetry::persist`.
+///
+/// Invariant: every bucket below `frozen_n` can never change again (see
+/// [`NodeAccountant::frozen_before`]), and every reading that can still
+/// influence buckets at or above `frozen_n` sits at stream position
+/// `skip` or later — so restoring the prefix verbatim and re-ingesting
+/// the stream from `skip` reproduces the uninterrupted account.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrozenState {
+    /// Leading buckets whose values are final.
+    pub frozen_n: usize,
+    /// Readings to skip on resume; reading `skip` (0-based) is the
+    /// *anchor* — the last reading at or below the frozen boundary, which
+    /// is re-pushed so the first resumed segment has its left endpoint.
+    pub skip: u64,
+    /// Timestamp of the anchor reading (`-inf` when `skip == 0` and the
+    /// stream resumes from its head).
+    pub anchor_t: f64,
+    /// Final naive energy for buckets `0..frozen_n`, joules.
+    pub naive_j: Vec<f64>,
+    /// Final corrected energy for buckets `0..frozen_n`, joules.
+    pub corrected_j: Vec<f64>,
+    /// Final error bound for buckets `0..frozen_n`, ± joules.
+    pub bound_j: Vec<f64>,
+}
+
 /// Incremental per-node account builder: feed it the node's polled
 /// `(t, W)` readings in stream order (across any batch boundaries) and it
 /// maintains the naive and corrected bucket energies plus the coverage
@@ -180,6 +211,15 @@ struct EpochSpan {
 /// naive account eagerly but *deferred* for the corrected account, then
 /// drained in stream order when the identity arrives — so the corrected
 /// bucket sums are bit-for-bit what an up-front epoch timeline produces.
+///
+/// Checkpoint/restore operation: [`Self::export_frozen`] captures the
+/// frozen bucket prefix plus the resume anchor, and [`Self::resume`]
+/// rebuilds an accountant from them. A resumed accountant *clips* all
+/// integration and bookkeeping at the restored frozen boundary (`floor_n`
+/// buckets hold their imported values verbatim and are never written
+/// again), so re-ingesting the stream from the anchor reproduces the
+/// unfrozen suffix while the frozen prefix stays bit-for-bit the
+/// checkpointed one.
 #[derive(Debug)]
 pub struct NodeAccountant {
     spec: BucketSpec,
@@ -209,6 +249,19 @@ pub struct NodeAccountant {
     min_w: Vec<f64>,
     max_w: Vec<f64>,
     readings: u64,
+    /// Restored frozen prefix length (0 for a fresh accountant): buckets
+    /// below it hold imported final values and are never written again.
+    floor_n: usize,
+    /// Imported final error bounds for buckets `0..floor_n` (the live
+    /// swing/coverage bookkeeping for those buckets was not restored).
+    floor_bound: Vec<f64>,
+    /// Next bucket edge (`spec.t0 + edge_next * bucket_s`) the stream has
+    /// not reached yet — drives the `anchors` bookkeeping.
+    edge_next: usize,
+    /// `anchors[k] = (count, t)`: how many readings precede bucket edge
+    /// `k` and the last such reading's timestamp — the per-edge resume
+    /// positions [`Self::export_frozen`] reads the checkpoint anchor from.
+    anchors: Vec<(u64, f64)>,
 }
 
 impl NodeAccountant {
@@ -267,7 +320,67 @@ impl NodeAccountant {
             min_w: vec![f64::INFINITY; spec.n],
             max_w: vec![f64::NEG_INFINITY; spec.n],
             readings: 0,
+            floor_n: 0,
+            floor_bound: Vec::new(),
+            edge_next: 0,
+            anchors: vec![(0, f64::NEG_INFINITY); spec.n + 1],
         }
+    }
+
+    /// Rebuild an accountant from a checkpoint: the frozen prefix is
+    /// imported verbatim (and becomes an immutable *floor* — later pushes
+    /// clip at its boundary), the epoch timeline is restored from the
+    /// per-epoch identities (`None` marks the still-open, unidentified
+    /// span a restored producer will identify), and `readings` resumes at
+    /// the count of skipped readings so the finished total matches the
+    /// uninterrupted run. Re-ingesting the stream from
+    /// [`FrozenState::skip`] then reproduces the uninterrupted account:
+    /// frozen buckets bit-for-bit by construction, the suffix bit-for-bit
+    /// because every segment that can touch it is re-integrated through
+    /// the same arithmetic in the same order.
+    pub fn resume(
+        spec: BucketSpec,
+        epochs: &[(f64, Option<SensorIdentity>)],
+        frozen: &FrozenState,
+        readings_before: u64,
+    ) -> Self {
+        assert!(frozen.frozen_n <= spec.n, "frozen prefix exceeds the bucket span");
+        assert_eq!(frozen.naive_j.len(), frozen.frozen_n, "frozen naive arity");
+        assert_eq!(frozen.corrected_j.len(), frozen.frozen_n, "frozen corrected arity");
+        assert_eq!(frozen.bound_j.len(), frozen.frozen_n, "frozen bound arity");
+        let spans: Vec<EpochSpan> = epochs
+            .iter()
+            .map(|&(t0, id)| match id {
+                Some(id) => EpochSpan {
+                    t0,
+                    shift_s: id.shift_s(),
+                    coverage: id.coverage_or_full().clamp(0.0, 1.0),
+                },
+                None => EpochSpan { t0, shift_s: 0.0, coverage: 1.0 },
+            })
+            .collect();
+        let identified = epochs.iter().take_while(|(_, id)| id.is_some()).count();
+        assert!(
+            identified >= epochs.len().saturating_sub(1),
+            "only the last restored epoch may be unidentified"
+        );
+        let mut acct = NodeAccountant::from_spans(spec, spans);
+        acct.identified = identified;
+        acct.readings = readings_before;
+        acct.floor_n = frozen.frozen_n;
+        acct.floor_bound = frozen.bound_j.clone();
+        acct.naive_j[..frozen.frozen_n].copy_from_slice(&frozen.naive_j);
+        acct.corrected_j[..frozen.frozen_n].copy_from_slice(&frozen.corrected_j);
+        // seed the per-edge anchors for the imported prefix: the resumed
+        // stream re-pushes exactly one reading (the anchor) below the
+        // floor edge, so every covered edge's position is `skip + 1`
+        // readings in with the anchor as its last predecessor — a second
+        // checkpoint taken after this restore exports the same anchor.
+        for k in 1..=frozen.frozen_n {
+            acct.anchors[k] = (readings_before + 1, frozen.anchor_t);
+        }
+        acct.edge_next = frozen.frozen_n;
+        acct
     }
 
     /// Announce a new sensor epoch starting at `t0`. Must be called before
@@ -302,14 +415,20 @@ impl NodeAccountant {
 
     /// Integrate one `[a, b]` reading segment into a bucket account. The
     /// two-point call into `integrate_clipped_points` runs the exact
-    /// reference arithmetic, so incremental == batch bitwise.
-    fn add_segment(spec: &BucketSpec, acc: &mut [f64], a: (f64, f64), b: (f64, f64)) {
+    /// reference arithmetic, so incremental == batch bitwise. Buckets
+    /// below `floor` (a restored frozen prefix) are never written: their
+    /// imported values are already final and the per-bucket arithmetic for
+    /// the remaining buckets is unchanged by the skip.
+    fn add_segment(spec: &BucketSpec, acc: &mut [f64], a: (f64, f64), b: (f64, f64), floor: usize) {
         if b.0 <= spec.t0 || a.0 >= spec.t_end() || b.0 <= a.0 {
             return;
         }
-        let b_lo = spec.clamped(a.0);
+        let b_lo = spec.clamped(a.0).max(floor);
         let b_hi = spec.clamped(b.0);
         for bucket in b_lo..=b_hi {
+            if bucket >= spec.n {
+                break;
+            }
             let (lo, hi) = spec.bounds(bucket);
             if b.0 <= lo || a.0 >= hi {
                 continue;
@@ -319,20 +438,25 @@ impl NodeAccountant {
     }
 
     /// Unobserved-time bookkeeping for one raw segment: each bucket's
-    /// overlap, weighted by the active epoch's `1 - coverage`.
+    /// overlap, weighted by the active epoch's `1 - coverage`. Clips at
+    /// `floor` exactly like [`Self::add_segment`].
     fn add_unobserved(
         spec: &BucketSpec,
         uncovered_s: &mut [f64],
         a: f64,
         b: f64,
         frac: f64,
+        floor: usize,
     ) {
         if b <= spec.t0 || a >= spec.t_end() || b <= a {
             return;
         }
-        let b_lo = spec.clamped(a);
+        let b_lo = spec.clamped(a).max(floor);
         let b_hi = spec.clamped(b);
         for bucket in b_lo..=b_hi {
+            if bucket >= spec.n {
+                break;
+            }
             let (lo, hi) = spec.bounds(bucket);
             let d = b.min(hi) - a.max(lo);
             if d > 0.0 {
@@ -357,9 +481,10 @@ impl NodeAccountant {
                     &mut self.corrected_j,
                     (lt - ep.shift_s, lw),
                     (t - ep.shift_s, w),
+                    self.floor_n,
                 );
                 let frac = 1.0 - ep.coverage;
-                Self::add_unobserved(&self.spec, &mut self.uncovered_s, lt, t, frac);
+                Self::add_unobserved(&self.spec, &mut self.uncovered_s, lt, t, frac, self.floor_n);
             }
             // else: the segment bridges a driver restart — see the type docs
         }
@@ -369,13 +494,27 @@ impl NodeAccountant {
 
     /// Feed one polled reading (stream order).
     pub fn push_point(&mut self, t: f64, w: f64) {
+        // record the resume anchor for every bucket edge this reading
+        // crosses: the count of readings strictly before the edge and the
+        // last such reading's timestamp (readings arrive sorted)
+        while self.edge_next <= self.spec.n {
+            let edge = self.spec.t0 + self.edge_next as f64 * self.spec.bucket_s;
+            if t < edge {
+                break;
+            }
+            let last_t = self.naive_last.map(|p| p.0).unwrap_or(f64::NEG_INFINITY);
+            self.anchors[self.edge_next] = (self.readings, last_t);
+            self.edge_next += 1;
+        }
         self.readings += 1;
         if let Some(b) = self.spec.index_of(t) {
-            self.min_w[b] = self.min_w[b].min(w);
-            self.max_w[b] = self.max_w[b].max(w);
+            if b >= self.floor_n {
+                self.min_w[b] = self.min_w[b].min(w);
+                self.max_w[b] = self.max_w[b].max(w);
+            }
         }
         if let Some((lt, lw)) = self.naive_last {
-            Self::add_segment(&self.spec, &mut self.naive_j, (lt, lw), (t, w));
+            Self::add_segment(&self.spec, &mut self.naive_j, (lt, lw), (t, w), self.floor_n);
         }
         self.naive_last = Some((t, w));
         if !self.epochs.is_empty() && self.identified == self.epochs.len() {
@@ -396,6 +535,9 @@ impl NodeAccountant {
     /// service's lock-cheap range queries read these directly instead of
     /// cloning a full account view.
     pub fn bucket_energy(&self, b: usize) -> (f64, f64, f64) {
+        if b < self.floor_n {
+            return (self.naive_j[b], self.corrected_j[b], self.floor_bound[b]);
+        }
         let swing = self.max_w[b] - self.min_w[b];
         let bound = if swing.is_finite() && swing > 0.0 { swing * self.uncovered_s[b] } else { 0.0 };
         (self.naive_j[b], self.corrected_j[b], bound)
@@ -407,11 +549,18 @@ impl NodeAccountant {
     /// at or before this watermark. Conservative: an epoch whose identity
     /// is still pending might carry any shift up to the hard cap
     /// [`super::registry::MAX_SHIFT_S`] (which `SensorIdentity::shift_s`
-    /// enforces), so that cap is always subtracted.
+    /// enforces), so that cap is always subtracted. A restored accountant
+    /// never reports a watermark below its imported frozen boundary —
+    /// those buckets are final by construction.
     pub fn frozen_before(&self) -> f64 {
+        let floor_t = if self.floor_n > 0 {
+            self.spec.t0 + self.floor_n as f64 * self.spec.bucket_s
+        } else {
+            f64::NEG_INFINITY
+        };
         let naive_t = match self.naive_last {
             Some((t, _)) => t,
-            None => return f64::NEG_INFINITY,
+            None => return floor_t,
         };
         let corr_t = self.pending.front().map(|p| p.0).unwrap_or(naive_t);
         let max_shift = self
@@ -419,7 +568,31 @@ impl NodeAccountant {
             .iter()
             .map(|e| e.shift_s)
             .fold(super::registry::MAX_SHIFT_S, f64::max);
-        naive_t.min(corr_t) - max_shift
+        (naive_t.min(corr_t) - max_shift).max(floor_t)
+    }
+
+    /// Export the durable half of the account for a checkpoint: the
+    /// frozen bucket prefix (final values) plus the stream position —
+    /// skip count and anchor timestamp — a restored service re-ingests
+    /// from. The inverse of [`Self::resume`].
+    pub fn export_frozen(&self) -> FrozenState {
+        let wm = self.frozen_before();
+        let frozen_n = (0..self.spec.n)
+            .take_while(|&b| self.spec.bounds(b).1 <= wm)
+            .count()
+            .max(self.floor_n);
+        let (count, t) = self.anchors[frozen_n];
+        let (skip, anchor_t) =
+            if count == 0 { (0, f64::NEG_INFINITY) } else { (count - 1, t) };
+        let bound_j = (0..frozen_n).map(|b| self.bucket_energy(b).2).collect();
+        FrozenState {
+            frozen_n,
+            skip,
+            anchor_t,
+            naive_j: self.naive_j[..frozen_n].to_vec(),
+            corrected_j: self.corrected_j[..frozen_n].to_vec(),
+            bound_j,
+        }
     }
 
     /// Non-consuming snapshot of the account as it stands — the live
@@ -436,21 +609,15 @@ impl NodeAccountant {
         complete: bool,
     ) -> NodeAccount {
         assert_eq!(truth_j.len(), self.spec.n, "truth bucket arity");
-        let bound_j: Vec<f64> = (0..self.spec.n)
-            .map(|b| {
-                let swing = self.max_w[b] - self.min_w[b];
-                if swing.is_finite() && swing > 0.0 {
-                    swing * self.uncovered_s[b]
-                } else {
-                    0.0
-                }
-            })
-            .collect();
+        let bound_j: Vec<f64> = (0..self.spec.n).map(|b| self.bucket_energy(b).2).collect();
         let frozen_n = if complete {
             self.spec.n
         } else {
             let wm = self.frozen_before();
-            (0..self.spec.n).take_while(|&b| self.spec.bounds(b).1 <= wm).count()
+            (0..self.spec.n)
+                .take_while(|&b| self.spec.bounds(b).1 <= wm)
+                .count()
+                .max(self.floor_n)
         };
         NodeAccount {
             node_id,
@@ -486,10 +653,15 @@ impl NodeAccountant {
 /// A finished per-node account: bucketed naive/corrected/truth energies.
 #[derive(Debug, Clone)]
 pub struct NodeAccount {
+    /// The node's fleet id.
     pub node_id: usize,
+    /// Catalogue model name.
     pub model: &'static str,
+    /// Architecture generation.
     pub generation: Generation,
+    /// The (latest-epoch) sensor identity governing the corrected account.
     pub identity: SensorIdentity,
+    /// Bucket geometry all the energy vectors share.
     pub spec: BucketSpec,
     /// Naive trapezoid energy per bucket, joules.
     pub naive_j: Vec<f64>,
@@ -512,14 +684,17 @@ pub struct NodeAccount {
 }
 
 impl NodeAccount {
+    /// Whole-observation naive energy, joules.
     pub fn naive_total_j(&self) -> f64 {
         self.naive_j.iter().sum()
     }
 
+    /// Whole-observation corrected energy, joules.
     pub fn corrected_total_j(&self) -> f64 {
         self.corrected_j.iter().sum()
     }
 
+    /// Whole-observation PMD ground-truth energy, joules.
     pub fn truth_total_j(&self) -> f64 {
         self.truth_j.iter().sum()
     }
@@ -547,12 +722,19 @@ fn pct(measured: f64, truth: f64) -> f64 {
 /// buckets) — see [`FleetAccounts::window_snapshots`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct WindowSnapshot {
+    /// Zero-based window index.
     pub index: usize,
+    /// Window start, seconds.
     pub t0: f64,
+    /// Window end, seconds.
     pub t1: f64,
+    /// Fleet naive energy over the window, joules.
     pub naive_j: f64,
+    /// Fleet corrected energy over the window, joules.
     pub corrected_j: f64,
+    /// Fleet coverage-derived error bound, ± joules.
     pub bound_j: f64,
+    /// Fleet PMD ground-truth energy, joules.
     pub truth_j: f64,
 }
 
@@ -571,20 +753,27 @@ impl WindowSnapshot {
 /// Energy totals for a queried time range.
 #[derive(Debug, Clone, Copy)]
 pub struct FleetEnergy {
-    /// Queried range actually covered (whole buckets), seconds.
+    /// Start of the range actually covered (whole buckets), seconds.
     pub t0: f64,
+    /// End of the range actually covered, seconds.
     pub t1: f64,
+    /// Fleet naive energy over the range, joules.
     pub naive_j: f64,
+    /// Fleet corrected energy over the range, joules.
     pub corrected_j: f64,
+    /// Fleet coverage-derived error bound, ± joules.
     pub bound_j: f64,
+    /// Fleet PMD ground-truth energy, joules.
     pub truth_j: f64,
 }
 
 impl FleetEnergy {
+    /// Naive accounting error vs truth, percent (0 when truth is 0).
     pub fn naive_pct(&self) -> f64 {
         pct(self.naive_j, self.truth_j)
     }
 
+    /// Corrected accounting error vs truth, percent.
     pub fn corrected_pct(&self) -> f64 {
         pct(self.corrected_j, self.truth_j)
     }
@@ -611,12 +800,17 @@ pub fn window_tiles(spec: &BucketSpec, window_s: f64) -> Vec<(usize, usize)> {
 /// are deterministic regardless of worker count or completion order.
 #[derive(Debug)]
 pub struct FleetAccounts {
+    /// Bucket geometry all the accounts share.
     pub spec: BucketSpec,
     /// Per-node accounts, sorted by node id.
     pub nodes: Vec<NodeAccount>,
+    /// Bucket-wise sum of the nodes' naive energy, joules.
     pub fleet_naive_j: Vec<f64>,
+    /// Bucket-wise sum of the nodes' corrected energy, joules.
     pub fleet_corrected_j: Vec<f64>,
+    /// Bucket-wise sum of the nodes' error bounds, ± joules.
     pub fleet_bound_j: Vec<f64>,
+    /// Bucket-wise sum of the nodes' PMD ground truth, joules.
     pub fleet_truth_j: Vec<f64>,
 }
 
@@ -1117,6 +1311,168 @@ mod tests {
         let part = acc.energy_between(-5.0, 1.5);
         assert_eq!((part.t0, part.t1), (0.0, 2.0));
         assert!((part.truth_j - 180.0).abs() < 1e-9);
+    }
+
+    /// Tentpole: [`NodeAccountant::export_frozen`] + [`NodeAccountant::resume`]
+    /// reproduce the uninterrupted account bit-for-bit — the frozen prefix
+    /// verbatim, the suffix by re-ingesting from the anchor reading.
+    #[test]
+    fn checkpointed_resume_matches_uninterrupted_bitwise() {
+        use crate::telemetry::registry::SensorClass;
+        let spec = BucketSpec::new(10.0, 1.0);
+        let identity = SensorIdentity {
+            class: SensorClass::Boxcar,
+            update_s: Some(0.1),
+            window_s: Some(0.025),
+            smi_rise_s: None,
+        };
+        let pts: Vec<(f64, f64)> =
+            (0..401).map(|i| (i as f64 * 0.025, 100.0 + (i % 11) as f64 * 17.0)).collect();
+
+        let reference = {
+            let mut a = NodeAccountant::fresh(spec);
+            a.open_epoch(0.0);
+            a.identify_span(&identity);
+            a.push_points(&pts);
+            a.finish(0, "m", Generation::Ampere, identity, vec![0.0; spec.n])
+        };
+
+        // checkpoint mid-stream: t = 6.25 s, watermark ≈ 5.75 s
+        let cut = 250;
+        let mut live = NodeAccountant::fresh(spec);
+        live.open_epoch(0.0);
+        live.identify_span(&identity);
+        live.push_points(&pts[..cut]);
+        let frozen = live.export_frozen();
+        assert!(frozen.frozen_n > 0 && frozen.frozen_n < spec.n, "{}", frozen.frozen_n);
+        // the anchor is the last reading below the frozen boundary
+        let floor_t = spec.bounds(frozen.frozen_n).0;
+        assert!(frozen.anchor_t < floor_t);
+        assert_eq!(pts[frozen.skip as usize].0, frozen.anchor_t);
+        assert!(pts[frozen.skip as usize + 1].0 >= floor_t, "anchor is the *last* such reading");
+
+        // restore + re-ingest from the anchor
+        let mut resumed =
+            NodeAccountant::resume(spec, &[(0.0, Some(identity))], &frozen, frozen.skip);
+        resumed.push_points(&pts[frozen.skip as usize..]);
+        let out = resumed.finish(0, "m", Generation::Ampere, identity, vec![0.0; spec.n]);
+        assert_eq!(out.readings, reference.readings);
+        for b in 0..spec.n {
+            assert_eq!(out.naive_j[b].to_bits(), reference.naive_j[b].to_bits(), "naive[{b}]");
+            assert_eq!(
+                out.corrected_j[b].to_bits(),
+                reference.corrected_j[b].to_bits(),
+                "corrected[{b}]"
+            );
+            assert_eq!(out.bound_j[b].to_bits(), reference.bound_j[b].to_bits(), "bound[{b}]");
+        }
+    }
+
+    /// A checkpoint taken while an epoch is still awaiting identification
+    /// restores with the span open: resumed readings defer exactly like
+    /// the uninterrupted run's and drain bit-for-bit when the identity
+    /// lands.
+    #[test]
+    fn resume_with_open_epoch_defers_and_drains_like_uninterrupted() {
+        use crate::telemetry::registry::SensorClass;
+        let spec = BucketSpec::new(10.0, 1.0);
+        let boxcar = |w: f64| SensorIdentity {
+            class: SensorClass::Boxcar,
+            update_s: Some(0.1),
+            window_s: Some(w),
+            smi_rise_s: None,
+        };
+        let (id0, id1) = (boxcar(0.025), boxcar(0.05));
+        let pts: Vec<(f64, f64)> =
+            (0..401).map(|i| (i as f64 * 0.025, 120.0 + (i % 7) as f64 * 23.0)).collect();
+        let boundary_t = 6.4;
+        let boundary = pts.partition_point(|p| p.0 < boundary_t);
+        let identify_at = boundary + 60; // id1 lands here, after the checkpoint cut
+        let cut = boundary + 20; // checkpoint: epoch 1 open, unidentified
+
+        let run = |resume_at: Option<usize>| -> NodeAccount {
+            // drive the same announcement schedule either uninterrupted or
+            // from a mid-stream restore
+            let mut a = NodeAccountant::fresh(spec);
+            a.open_epoch(0.0);
+            a.identify_span(&id0);
+            let mut start = 0usize;
+            if let Some(cut) = resume_at {
+                let mut live = NodeAccountant::fresh(spec);
+                live.open_epoch(0.0);
+                live.identify_span(&id0);
+                for &(t, w) in &pts[..boundary] {
+                    live.push_point(t, w);
+                }
+                live.open_epoch(boundary_t);
+                for &(t, w) in &pts[boundary..cut] {
+                    live.push_point(t, w);
+                }
+                let frozen = live.export_frozen();
+                // the open epoch's pending readings hold the watermark
+                // (and with it the frozen boundary) below the epoch start
+                assert!(spec.bounds(frozen.frozen_n).0 < boundary_t);
+                a = NodeAccountant::resume(
+                    spec,
+                    &[(0.0, Some(id0)), (boundary_t, None)],
+                    &frozen,
+                    frozen.skip,
+                );
+                start = frozen.skip as usize;
+            }
+            for (i, &(t, w)) in pts.iter().enumerate().skip(start) {
+                if resume_at.is_none() && i == boundary {
+                    a.open_epoch(boundary_t);
+                }
+                if i == identify_at {
+                    a.identify_span(&id1);
+                }
+                a.push_point(t, w);
+            }
+            if identify_at >= pts.len() {
+                a.identify_span(&id1);
+            }
+            a.finish(0, "m", Generation::Ampere, id1, vec![0.0; spec.n])
+        };
+
+        let reference = run(None);
+        let restored = run(Some(cut));
+        assert_eq!(restored.readings, reference.readings);
+        for b in 0..spec.n {
+            assert_eq!(restored.naive_j[b].to_bits(), reference.naive_j[b].to_bits(), "naive[{b}]");
+            assert_eq!(
+                restored.corrected_j[b].to_bits(),
+                reference.corrected_j[b].to_bits(),
+                "corrected[{b}]"
+            );
+            assert_eq!(restored.bound_j[b].to_bits(), reference.bound_j[b].to_bits(), "bound[{b}]");
+        }
+    }
+
+    /// A restored accountant's watermark never regresses below the
+    /// imported frozen boundary, and a second checkpoint taken straight
+    /// after the restore round-trips the same frozen state.
+    #[test]
+    fn restored_floor_holds_watermark_and_reexports() {
+        let spec = spec3();
+        let identity = ident();
+        let mut a = NodeAccountant::new(spec, 0.0, 1.0);
+        a.push_points(&(0..30).map(|i| (i as f64 * 0.1, 100.0)).collect::<Vec<_>>());
+        let frozen = a.export_frozen();
+        assert_eq!(frozen.frozen_n, 2, "2.9 s stream, 0.5 s allowance -> 2 frozen buckets");
+
+        let resumed = NodeAccountant::resume(spec, &[(0.0, Some(identity))], &frozen, frozen.skip);
+        assert_eq!(resumed.frozen_before(), spec.bounds(frozen.frozen_n).0);
+        let again = resumed.export_frozen();
+        assert_eq!(again, frozen, "restore immediately re-exports the same frozen state");
+        // the mid-ingest view honours the floor before any re-push
+        let view =
+            resumed.account_view(0, "m", Generation::Ampere, identity, vec![0.0; spec.n], false);
+        assert_eq!(view.frozen_n, frozen.frozen_n);
+        for b in 0..frozen.frozen_n {
+            assert_eq!(view.naive_j[b].to_bits(), frozen.naive_j[b].to_bits());
+            assert_eq!(view.bound_j[b].to_bits(), frozen.bound_j[b].to_bits());
+        }
     }
 
     #[test]

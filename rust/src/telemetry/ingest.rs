@@ -69,7 +69,9 @@ use super::registry::{
     DriftMonitor, IdentifyScratch, IncrementalIdentifier, ProbeSchedule, SensorClass,
     SensorIdentity,
 };
-use super::source::{BreakKind, ReadingSource, MASKED_RESTART_OUTAGE_S, RESTART_OUTAGE_S};
+use super::source::{
+    BreakKind, ReadingSource, MASKED_RESTART_OUTAGE_S, REPLAY_SETUP_S, RESTART_OUTAGE_S,
+};
 
 /// Deterministic per-node rig seed (independent of worker/shard claim
 /// order; mirrors `coordinator::scheduler::shard_seed`'s construction).
@@ -204,19 +206,50 @@ pub fn node_activity_timeline(
 #[derive(Debug)]
 pub enum IngestMsg {
     /// A node joined the service; its epochs and batches follow.
-    NodeStart { node_id: usize, model: &'static str, generation: Generation },
+    NodeStart {
+        /// The node's fleet id.
+        node_id: usize,
+        /// Catalogue model name.
+        model: &'static str,
+        /// Architecture generation.
+        generation: Generation,
+    },
     /// A sensor epoch begins at `t0`: every following reading of this node
     /// (until the next `EpochOpen`) belongs to it. `recal` marks an
     /// adaptive/commanded probe replay rather than a detected restart.
-    EpochOpen { node_id: usize, t0: f64, recal: bool },
+    EpochOpen {
+        /// The node's fleet id.
+        node_id: usize,
+        /// Epoch origin, stream seconds.
+        t0: f64,
+        /// The epoch is a probe replay, not a detected restart.
+        recal: bool,
+    },
     /// The open epoch's identity (sent when its calibration completes, or
     /// at epoch close for epochs that never finished calibrating).
-    EpochIdentified { node_id: usize, t0: f64, identity: SensorIdentity },
+    EpochIdentified {
+        /// The node's fleet id.
+        node_id: usize,
+        /// The identified epoch's origin, stream seconds.
+        t0: f64,
+        /// Its final sensor identity.
+        identity: SensorIdentity,
+    },
     /// One batch of polled `(t, W)` readings, in stream order per node.
-    Batch { node_id: usize, points: Vec<(f64, f64)> },
+    Batch {
+        /// The node's fleet id.
+        node_id: usize,
+        /// The readings (a pool-recycled buffer).
+        points: Vec<(f64, f64)>,
+    },
     /// Drift was confirmed but the source cannot replay probes (recorded
     /// logs): surfaced to operators instead of re-calibrating.
-    DriftSuspected { node_id: usize, t: f64 },
+    DriftSuspected {
+        /// The node's fleet id.
+        node_id: usize,
+        /// When drift was confirmed, stream seconds.
+        t: f64,
+    },
     /// The node's stream ended; `truth_j` is the PMD ground-truth energy
     /// per accounting bucket (all zero when the source carries no
     /// reference), computed at end so probe replays are reflected.
@@ -224,14 +257,26 @@ pub enum IngestMsg {
     /// the truth reference is then truncated at the cut and the account
     /// stays a partial view, so partial-snapshot error metrics never
     /// compare prefix-only energy against a full-duration reference.
-    NodeEnd { node_id: usize, truth_j: Vec<f64>, complete: bool },
+    NodeEnd {
+        /// The node's fleet id.
+        node_id: usize,
+        /// PMD ground-truth energy per bucket, joules.
+        truth_j: Vec<f64>,
+        /// Whether the stream ran to its planned end.
+        complete: bool,
+    },
 }
 
 /// Ingest throughput counters.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct IngestStats {
+    /// Nodes whose streams have started (restored finished nodes count).
     pub nodes: usize,
+    /// Reading batches drained (resets across a checkpoint restore — the
+    /// one deliberately config-dependent counter).
     pub batches: u64,
+    /// Readings accounted (skipped resume prefixes included, so a
+    /// restored run's final count matches the uninterrupted one).
     pub readings: u64,
     /// Adaptive/commanded probe replays that actually ran.
     pub recalibrations: u64,
@@ -249,6 +294,7 @@ pub struct RecalBoard {
 }
 
 impl RecalBoard {
+    /// A board with one request flag per fleet node.
     pub fn new(n: usize) -> Self {
         RecalBoard { flags: (0..n).map(|_| AtomicBool::new(false)).collect() }
     }
@@ -285,6 +331,7 @@ pub struct NodeScratch {
 }
 
 impl NodeScratch {
+    /// Fresh per-worker arenas (reused node to node thereafter).
     pub fn new() -> Self {
         NodeScratch {
             id: IdentifyScratch::default(),
@@ -442,6 +489,31 @@ struct EpochState {
     probes_ran: bool,
 }
 
+/// Producer-side resume directive for one node restored from a
+/// checkpoint (`telemetry::persist`): how much of the re-generated
+/// stream to skip, the known epoch timeline to *re-enter silently*
+/// (the consumer already holds those records — nothing is re-announced
+/// and identified epochs never re-calibrate), and — implicitly, via the
+/// `recal` flags — which probe replays to re-apply to the source before
+/// streaming so the resumed stream is byte-identical to the
+/// checkpointed one.
+#[derive(Debug, Clone)]
+pub struct NodeResumePlan {
+    /// Leading readings to drop (already accounted pre-checkpoint). The
+    /// reading at this position — the *anchor*, the last reading below
+    /// the frozen boundary — is re-pushed so the first resumed segment
+    /// has its left endpoint.
+    pub skip: u64,
+    /// Expected timestamp of the anchor: a consistency check that the
+    /// re-prepared source reproduces the checkpointed stream (`-inf`
+    /// disables the check when nothing is skipped).
+    pub anchor_t: f64,
+    /// Known epochs in stream order: `(t0, was-a-probe-replay,
+    /// identity)`. Only the final epoch may be unidentified (`None`) —
+    /// the restored producer resumes its calibration from its origin.
+    pub epochs: Vec<(f64, bool, Option<SensorIdentity>)>,
+}
+
 /// Producer chunk size (constant, so chunk boundaries — and therefore the
 /// deterministic probe-replay decision points — never depend on service
 /// configuration).
@@ -453,6 +525,14 @@ const CHUNK: usize = 1024;
 /// can never change the result; external `ControlMsg::Recalibrate`
 /// requests land at chunk boundaries of whatever chunk is in flight when
 /// they arrive, which is the one deliberately timing-dependent input.
+///
+/// With `resume` set, the node continues from a checkpoint instead of
+/// starting fresh: recorded probe replays are re-applied to the source,
+/// the already-accounted stream prefix is skipped (the sources regenerate
+/// it deterministically, so fault RNG draws stay aligned), known epochs
+/// are re-entered silently (no `EpochOpen`/`EpochIdentified` is re-sent,
+/// no identified epoch re-calibrates), and only the checkpoint's open
+/// epoch — if any — resumes identification from its recorded origin.
 pub(crate) fn stream_source<S: ReadingSource>(
     source: &mut S,
     sched: &ProbeSchedule,
@@ -462,6 +542,7 @@ pub(crate) fn stream_source<S: ReadingSource>(
     emit: &Emitter<'_>,
     board: Option<&RecalBoard>,
     stop: Option<&AtomicBool>,
+    resume: Option<&NodeResumePlan>,
 ) {
     use super::registry::EpochTracker;
 
@@ -473,13 +554,71 @@ pub(crate) fn stream_source<S: ReadingSource>(
         model: info.model,
         generation: info.generation,
     });
-    em.send(IngestMsg::EpochOpen { node_id, t0: 0.0, recal: false });
 
     let mut tracker = EpochTracker::new(gap_s);
-    scratch.ident.reset(sched, 0.0);
     scratch.monitor.disarm();
-    let mut epoch = EpochState { t0: 0.0, index: 0, identified: false, probes_ran: true };
+
+    // resume bookkeeping: readings still to drop, the anchor timestamp to
+    // verify, the known epochs the stream will re-enter, and the index the
+    // next epoch (known or new) takes.
+    let mut to_skip: u64 = 0;
+    let mut anchor_check = f64::NEG_INFINITY;
+    let mut upcoming: Vec<(f64, bool, Option<SensorIdentity>)> = Vec::new();
+    let mut up_i = 0usize;
+    let mut next_index;
+    let mut epoch;
     let mut prev_identity: Option<SensorIdentity> = None;
+
+    match resume {
+        None => {
+            em.send(IngestMsg::EpochOpen { node_id, t0: 0.0, recal: false });
+            scratch.ident.reset(sched, 0.0);
+            epoch = EpochState { t0: 0.0, index: 0, identified: false, probes_ran: true };
+            next_index = 1;
+        }
+        Some(plan) => {
+            // re-apply recorded probe replays so the re-prepared source's
+            // tail is byte-identical to the checkpointed stream (the
+            // setup offset lands the grid-snapped replay exactly on the
+            // recorded origin)
+            for &(t0, recal, _) in &plan.epochs {
+                if recal {
+                    let after = t0 - REPLAY_SETUP_S - 0.5 / crate::pmd::PMD_SAMPLE_HZ;
+                    let got = source.replay_probes(after);
+                    assert!(
+                        got.map(|tr| (tr - t0).abs() < 1e-9).unwrap_or(false),
+                        "node {node_id}: recorded probe replay at {t0} s could not be \
+                         re-applied ({got:?}) — checkpoint/source mismatch past the fingerprint"
+                    );
+                }
+            }
+            to_skip = plan.skip;
+            anchor_check = if plan.skip > 0 { plan.anchor_t } else { f64::NEG_INFINITY };
+            // the base epoch governs the anchor; later known epochs are
+            // re-entered as the stream reaches their recorded origins
+            let base = plan.epochs.partition_point(|&(t0, _, _)| t0 <= plan.anchor_t);
+            let done = &plan.epochs[..base];
+            upcoming = plan.epochs[base..].to_vec();
+            let base_identity = done.iter().rev().find_map(|&(_, _, id)| id);
+            prev_identity = base_identity;
+            if let Some(id) = base_identity {
+                // post-restore drift baselines re-establish from the
+                // anchor (checkpoints persist accounts, not monitor state)
+                scratch.monitor.arm(&id, plan.anchor_t);
+            }
+            epoch = EpochState {
+                t0: done.last().map(|&(t0, _, _)| t0).unwrap_or(0.0),
+                index: base.saturating_sub(1),
+                // a placeholder until the first reading re-enters a known
+                // epoch; `true` keeps the identifier (stale from the
+                // previous node) out of the loop until that reset
+                identified: true,
+                probes_ran: true,
+            };
+            next_index = base;
+        }
+    }
+
     let mut replay_at: Option<f64> = None;
     let mut want_recal = false;
     let mut drift_reported = false;
@@ -511,8 +650,54 @@ pub(crate) fn stream_source<S: ReadingSource>(
         }
         for i in 0..scratch.chunk.len() {
             let (t, w) = scratch.chunk[i];
+            if to_skip > 0 {
+                // resume fast-forward: the prefix is already accounted
+                // (the source still generated it, so its RNG state — e.g.
+                // fault dropout draws — stays aligned with the tail)
+                to_skip -= 1;
+                continue;
+            }
+            if anchor_check.is_finite() {
+                assert!(
+                    (t - anchor_check).abs() < 1e-9,
+                    "node {node_id}: resume anchor mismatch (stream has {t} s, checkpoint \
+                     recorded {anchor_check} s) — the re-prepared source does not reproduce \
+                     the checkpointed stream"
+                );
+                anchor_check = f64::NEG_INFINITY;
+            }
+            let gap = tracker.observe(t);
             let mut switched = false;
-            if tracker.observe(t).is_some() {
+            // known epochs (restored from a checkpoint) re-enter silently:
+            // the consumer already holds their records, so nothing is
+            // re-announced and identified epochs never re-calibrate
+            while up_i < upcoming.len() && t >= upcoming[up_i].0 {
+                let (t0, recal, identity) = upcoming[up_i];
+                up_i += 1;
+                epoch = EpochState {
+                    t0,
+                    index: next_index,
+                    identified: identity.is_some(),
+                    probes_ran: recal || next_index == 0,
+                };
+                next_index += 1;
+                match identity {
+                    Some(id) => {
+                        prev_identity = Some(id);
+                        scratch.monitor.arm(&id, t0);
+                    }
+                    None => {
+                        // the checkpoint's open epoch: resume its
+                        // calibration from the recorded origin
+                        scratch.ident.reset(sched, t0);
+                        scratch.monitor.disarm();
+                    }
+                }
+                replay_at = None;
+                want_recal = false;
+                switched = true;
+            }
+            if !switched && gap.is_some() {
                 // driver-restart signature: a new sensor epoch from this
                 // reading; its re-calibration (if any) runs from here. A
                 // pending probe-replay origin the gap swallowed — and any
@@ -524,10 +709,11 @@ pub(crate) fn stream_source<S: ReadingSource>(
                 scratch.monitor.disarm();
                 epoch = EpochState {
                     t0: t,
-                    index: epoch.index + 1,
+                    index: next_index,
                     identified: false,
                     probes_ran: false,
                 };
+                next_index += 1;
                 replay_at = replay_at.filter(|&tr| tr > t);
                 want_recal = false;
                 switched = true;
@@ -543,10 +729,11 @@ pub(crate) fn stream_source<S: ReadingSource>(
                         scratch.monitor.disarm();
                         epoch = EpochState {
                             t0: tr,
-                            index: epoch.index + 1,
+                            index: next_index,
                             identified: false,
                             probes_ran: true,
                         };
+                        next_index += 1;
                         replay_at = None;
                     }
                 }
@@ -577,8 +764,13 @@ pub(crate) fn stream_source<S: ReadingSource>(
         }
         // chunk boundary: act on re-calibration requests (external ones
         // are consumed only when actionable, so an early request waits for
-        // the calibration to finish rather than vanishing)
-        if epoch.identified && replay_at.is_none() {
+        // the calibration to finish rather than vanishing). NOT actionable:
+        // a resume fast-forward (the replay origin would predate the
+        // restored position) and the stretch before a restored stream has
+        // re-entered every known epoch (a replay there would open an epoch
+        // the consumer's restored timeline already has later entries for —
+        // the known epochs must land first).
+        if epoch.identified && replay_at.is_none() && to_skip == 0 && up_i == upcoming.len() {
             let external = board.map(|b| b.take(node_id)).unwrap_or(false);
             if want_recal || external {
                 want_recal = false;

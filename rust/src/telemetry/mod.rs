@@ -59,7 +59,16 @@
 //! * [`query`] — fleet energy over a time range, per-window and
 //!   per-generation breakdowns, top-k mis-estimated nodes, and the
 //!   annualised cost error, rendered through [`crate::report::Table`] —
-//!   all of which work on mid-ingest snapshots too.
+//!   all of which work on mid-ingest snapshots too;
+//! * [`persist`] — checkpoint/restore across *collector* restarts: a
+//!   versioned, dependency-free on-disk format
+//!   (`docs/CHECKPOINT_FORMAT.md`) holding every node's identified epoch
+//!   history, frozen account buckets with their freeze watermarks, and
+//!   ingest stream positions. Written at each `WindowClosed` (so files
+//!   are always self-consistent) or on [`ControlMsg::Checkpoint`];
+//!   restored by [`TelemetryService::start_from`], which resumes ingest
+//!   mid-stream with **no re-calibration** of identified epochs and
+//!   bit-for-bit identical frozen buckets.
 //!
 //! The historical one-call entry points ([`run_service`],
 //! [`run_service_with`], [`run_replay_service`]) are thin wrappers over
@@ -76,17 +85,22 @@
 //! is an *external* `ControlMsg::Recalibrate`, which lands at whatever
 //! chunk boundary is next when it arrives.
 
+#![warn(missing_docs)]
+
 pub mod accounting;
 pub mod ingest;
+pub mod persist;
 pub mod query;
 pub mod registry;
 pub mod service;
 pub mod source;
 
 pub use accounting::{
-    BucketSpec, FleetAccounts, FleetEnergy, NodeAccount, NodeAccountant, WindowSnapshot,
+    BucketSpec, FleetAccounts, FleetEnergy, FrozenState, NodeAccount, NodeAccountant,
+    WindowSnapshot,
 };
 pub use ingest::{IngestStats, NodeScratch, RecalBoard};
+pub use persist::{Checkpoint, ServiceFingerprint, SourceKind};
 pub use registry::{
     detect_epochs, CalPhase, DriftMonitor, EpochIdentity, EpochTracker, GenAccuracy,
     IncrementalIdentifier, NodeIdentity, ProbeSchedule, Registry, SensorClass, SensorIdentity,
@@ -156,8 +170,11 @@ pub struct TelemetrySnapshot {
     pub window_s: f64,
     /// The calibration protocol the nodes ran.
     pub schedule: ProbeSchedule,
+    /// Per-node and fleet-level bucketed energy accounts.
     pub accounts: FleetAccounts,
+    /// Everything identified about each node's sensor.
     pub registry: Registry,
+    /// Ingest throughput counters.
     pub stats: IngestStats,
 }
 

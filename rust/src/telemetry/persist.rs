@@ -1,0 +1,1053 @@
+//! Checkpoint/restore persistence for the live telemetry service: a
+//! versioned, hand-rolled on-disk format (no external dependencies,
+//! matching the vendored-shim policy) that serializes a running service's
+//! **durable** state and restores it into
+//! [`TelemetryService::start_from`](super::TelemetryService::start_from).
+//!
+//! The paper's warning is that energy accounting silently diverges when
+//! the measurement pipeline loses attention. The collector already
+//! survives driver restarts and masked driver updates (Fig. 14); this
+//! module closes the remaining gap — a restart of the *collector itself*
+//! — so a crash no longer discards calibrated sensor identities and
+//! frozen accounts.
+//!
+//! What a checkpoint holds, per node:
+//!
+//! * the per-epoch [`SensorIdentity`] history (with each epoch's origin
+//!   and whether it was a probe replay), so a restored service **never
+//!   re-calibrates** an already-identified epoch;
+//! * the frozen account prefix and its freeze watermark
+//!   ([`FrozenState`]): bucket values that can never change again,
+//!   restored verbatim — bit-for-bit;
+//! * the ingest stream position (skip count + anchor timestamp) the
+//!   restored producer resumes from;
+//! * finished nodes' complete accounts (truth buckets included).
+//!
+//! Only *final* state is ever written: the write path hooks the service's
+//! `WindowClosed` event (every node's freeze watermark has passed the
+//! window), so a checkpoint at any window boundary is self-consistent and
+//! a later checkpoint only ever extends an earlier one. Torn or truncated
+//! files are detected by the trailing FNV-1a checksum and refused at
+//! load; a fleet/config mismatch is refused at
+//! [`Checkpoint::validate`] with a line-numbered error instead of
+//! silently corrupting an account.
+//!
+//! The byte-level layout (text preamble + little-endian binary records +
+//! checksum trailer) is specified normatively in
+//! `docs/CHECKPOINT_FORMAT.md` and pinned by the committed golden fixture
+//! `examples/checkpoint_golden.gpck`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::Fleet;
+use crate::sim::profile::{find_model, DriverEpoch, Generation, PowerField};
+
+use super::accounting::FrozenState;
+use super::registry::{SensorClass, SensorIdentity};
+use super::source::{FaultPlan, ServiceSource};
+
+/// The on-disk format version this build writes (and the only one it
+/// reads).
+pub const FORMAT_VERSION: u32 = 1;
+
+/// The magic token opening every checkpoint file's first line.
+pub const MAGIC: &str = "GPCK";
+
+/// 64-bit FNV-1a over `bytes` — the torn-write detector and the digest
+/// primitive for the source/fleet fingerprints. Hand-rolled so the format
+/// stays dependency-free.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = Fnv::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// Incremental FNV-1a accumulator for multi-part digests.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    fn f64(&mut self, v: f64) {
+        self.update(&v.to_bits().to_le_bytes());
+    }
+    fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+/// Which kind of [`ServiceSource`] a checkpoint was taken over (a restored
+/// service must resume the *same* stream).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SourceKind {
+    /// Simulated fleet nodes.
+    Sim,
+    /// Simulated nodes behind the streaming fault injector.
+    Faulty,
+    /// Recorded nvidia-smi CSV logs.
+    Replay,
+}
+
+impl SourceKind {
+    /// The token written on the checkpoint's `config` line.
+    pub fn token(&self) -> &'static str {
+        match self {
+            SourceKind::Sim => "sim",
+            SourceKind::Faulty => "faulty",
+            SourceKind::Replay => "replay",
+        }
+    }
+
+    fn from_token(s: &str) -> Option<Self> {
+        match s {
+            "sim" => Some(SourceKind::Sim),
+            "faulty" => Some(SourceKind::Faulty),
+            "replay" => Some(SourceKind::Replay),
+            _ => None,
+        }
+    }
+}
+
+/// Digest of everything that determines a source's reading streams beyond
+/// the service config: the fault plan for [`ServiceSource::Faulty`], the
+/// log texts for [`ServiceSource::Replay`], nothing for plain
+/// [`ServiceSource::Sim`]. A restored service refuses a checkpoint whose
+/// digest disagrees — resuming a stream that is not byte-identical would
+/// silently corrupt the account.
+pub fn source_digest(src: &ServiceSource) -> (SourceKind, u64) {
+    match src {
+        ServiceSource::Sim => (SourceKind::Sim, 0),
+        ServiceSource::Faulty(plan) => (SourceKind::Faulty, fault_plan_digest(plan)),
+        ServiceSource::Replay(logs) => (SourceKind::Replay, replay_digest(logs)),
+    }
+}
+
+/// [`source_digest`] for a replay log set without constructing a
+/// [`ServiceSource`] (the service start path holds only the slice).
+pub(crate) fn replay_digest(logs: &[String]) -> u64 {
+    let mut h = Fnv::new();
+    for log in logs {
+        h.update(log.as_bytes());
+        h.update(&[0x1e]); // record separator: "ab"+"c" != "a"+"bc"
+    }
+    h.finish()
+}
+
+/// Canonical digest of a [`FaultPlan`] (field order fixed by this
+/// function — part of the format contract).
+pub(crate) fn fault_plan_digest(plan: &FaultPlan) -> u64 {
+    let mut h = Fnv::new();
+    h.f64(plan.dropout);
+    h.update(&(plan.outages.len() as u64).to_le_bytes());
+    for w in &plan.outages {
+        h.f64(w.t0);
+        h.f64(w.duration_s);
+    }
+    h.update(&(plan.stuck.len() as u64).to_le_bytes());
+    for w in &plan.stuck {
+        h.f64(w.t0);
+        h.f64(w.duration_s);
+    }
+    h.update(&(plan.restarts.len() as u64).to_le_bytes());
+    for &t in &plan.restarts {
+        h.f64(t);
+    }
+    h.update(&(plan.driver_updates.len() as u64).to_le_bytes());
+    for &(t, d) in &plan.driver_updates {
+        h.f64(t);
+        h.update(&[driver_code(d)]);
+    }
+    h.finish()
+}
+
+/// Digest of the fleet a sim/faulty checkpoint was taken over: node ids,
+/// model names, and the fleet-level driver/field/seed. Zero for replay
+/// services (no fleet is involved).
+pub fn fleet_digest(fleet: &Fleet) -> u64 {
+    let mut h = Fnv::new();
+    h.update(&(fleet.nodes.len() as u64).to_le_bytes());
+    for node in &fleet.nodes {
+        h.update(&(node.id as u64).to_le_bytes());
+        h.update(node.device.model.name.as_bytes());
+        h.update(&[0x1e]);
+    }
+    h.update(&[driver_code(fleet.config.driver), field_code(fleet.config.field)]);
+    h.update(&fleet.config.seed.to_le_bytes());
+    h.finish()
+}
+
+fn driver_code(d: DriverEpoch) -> u8 {
+    match d {
+        DriverEpoch::Pre530 => 0,
+        DriverEpoch::V530 => 1,
+        DriverEpoch::Post530 => 2,
+    }
+}
+
+fn field_code(f: PowerField) -> u8 {
+    match f {
+        PowerField::Draw => 0,
+        PowerField::Average => 1,
+        PowerField::Instant => 2,
+    }
+}
+
+/// Everything that must match between a checkpoint and the service asked
+/// to restore it: the config geometry (bit-exact), the source identity,
+/// and the fleet. Worker/shard/batch/queue settings are deliberately
+/// *not* part of the fingerprint — the service is bit-for-bit
+/// deterministic across them, so a checkpoint written under one
+/// concurrency configuration restores under any other.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServiceFingerprint {
+    /// Service seed ([`super::TelemetryConfig::seed`]).
+    pub seed: u64,
+    /// Fleet size (or replay log count): every node the service will
+    /// stream.
+    pub n_total: usize,
+    /// Configured observation-window count.
+    pub windows: usize,
+    /// Accounting bucket count ([`super::accounting::BucketSpec::n`]).
+    pub spec_n: usize,
+    /// Effective total stream duration per node, seconds.
+    pub duration_s: f64,
+    /// Effective single observation window, seconds.
+    pub window_s: f64,
+    /// Accounting bucket width, seconds.
+    pub bucket_s: f64,
+    /// Polling cadence, seconds.
+    pub poll_period_s: f64,
+    /// Source kind the service runs over.
+    pub source_kind: SourceKind,
+    /// [`source_digest`] of that source.
+    pub source_digest: u64,
+    /// [`fleet_digest`] of the fleet (0 for replay).
+    pub fleet_digest: u64,
+}
+
+/// One sensor epoch as recorded in a checkpoint: origin, whether it was a
+/// probe replay (a restored producer re-applies replays to its source so
+/// the resumed stream is byte-identical), and the identity when the epoch
+/// finished calibrating (`None` marks the one still-open epoch).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CkptEpoch {
+    /// First reading time of the epoch, stream seconds.
+    pub t0: f64,
+    /// This epoch began as an adaptive/commanded probe replay.
+    pub recal: bool,
+    /// The identified sensor, or `None` for the (single, last) epoch whose
+    /// calibration had not completed at checkpoint time.
+    pub identity: Option<SensorIdentity>,
+}
+
+/// Where a node's stream stood at checkpoint time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeStage {
+    /// Still streaming: the record carries a frozen prefix and a resume
+    /// position.
+    InFlight,
+    /// Stream ended normally: the record is the complete account.
+    Complete,
+    /// Stream was cut short by a shutdown: the account is final but
+    /// partial (`complete == false` on restore, like the live view).
+    Partial,
+}
+
+/// One node's durable state inside a [`Checkpoint`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeCheckpoint {
+    /// The node's fleet id.
+    pub node_id: usize,
+    /// Stream stage at checkpoint time.
+    pub stage: NodeStage,
+    /// Catalogue model name (resolved back to the catalogue on restore;
+    /// unrecognised names restore under the replay path's placeholder).
+    pub model: String,
+    /// Architecture generation.
+    pub generation: Generation,
+    /// Readings accounted so far. For [`NodeStage::InFlight`] this equals
+    /// `frozen.skip` (the readings the restored producer will *not*
+    /// re-send); for finished nodes it is the stream total.
+    pub readings: u64,
+    /// Per-epoch identification history, in stream order.
+    pub epochs: Vec<CkptEpoch>,
+    /// The frozen account prefix + resume position. For finished nodes the
+    /// bucket arrays cover the full span (`naive_j.len() == spec_n`) with
+    /// `frozen_n` still marking the freeze watermark.
+    pub frozen: FrozenState,
+    /// PMD ground-truth buckets — finished nodes only (`None` while the
+    /// stream is in flight: truth lands at `NodeEnd`, and a restored
+    /// source regenerates it over the full span).
+    pub truth_j: Option<Vec<f64>>,
+}
+
+impl NodeCheckpoint {
+    /// The latest identified sensor identity, if any epoch finished
+    /// calibrating.
+    pub fn last_identity(&self) -> Option<SensorIdentity> {
+        self.epochs.iter().rev().find_map(|e| e.identity)
+    }
+}
+
+/// A decoded checkpoint: the service fingerprint it was taken under plus
+/// every node's durable state. Produce one with
+/// [`super::ServiceHandle::checkpoint`] (or the `WindowClosed` write
+/// hook), persist it with [`Checkpoint::save_atomic`], and hand it to
+/// [`super::TelemetryService::start_from`] to resume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// The geometry/source fingerprint the restore must match.
+    pub fingerprint: ServiceFingerprint,
+    /// Observation windows already closed (and therefore already
+    /// checkpoint-covered) — restored so they are not re-announced.
+    pub windows_closed: usize,
+    /// Probe replays that had run by checkpoint time.
+    pub recalibrations: u64,
+    /// Drift confirmations on sources that cannot re-probe.
+    pub drift_suspected: u64,
+    /// Per-node durable state, in ascending node-id order.
+    pub nodes: Vec<NodeCheckpoint>,
+}
+
+// ---------------------------------------------------------------------
+// encoding
+// ---------------------------------------------------------------------
+
+fn push_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn push_f64(out: &mut Vec<u8>, v: f64) {
+    push_u64(out, v.to_bits());
+}
+
+fn class_code(c: SensorClass) -> u8 {
+    match c {
+        SensorClass::Boxcar => 0,
+        SensorClass::RcFilter => 1,
+        SensorClass::Quantised => 2,
+        SensorClass::Unsupported => 3,
+    }
+}
+
+fn class_from(code: u8) -> Option<SensorClass> {
+    match code {
+        0 => Some(SensorClass::Boxcar),
+        1 => Some(SensorClass::RcFilter),
+        2 => Some(SensorClass::Quantised),
+        3 => Some(SensorClass::Unsupported),
+        _ => None,
+    }
+}
+
+fn generation_code(g: Generation) -> u8 {
+    Generation::ALL.iter().position(|&x| x == g).unwrap_or(0) as u8
+}
+
+fn generation_from(code: u8) -> Option<Generation> {
+    Generation::ALL.get(code as usize).copied()
+}
+
+impl Checkpoint {
+    /// Serialize to the on-disk byte format (see
+    /// `docs/CHECKPOINT_FORMAT.md`): the text preamble, the binary node
+    /// records, and the FNV-1a trailer.
+    pub fn encode(&self) -> Vec<u8> {
+        let fp = &self.fingerprint;
+        let mut out = Vec::with_capacity(256 + self.nodes.len() * 256);
+        out.extend_from_slice(format!("{MAGIC} {FORMAT_VERSION}\n").as_bytes());
+        out.extend_from_slice(
+            format!(
+                "config seed={} nodes={} windows={} spec_n={} duration={:016x} \
+                 window={:016x} bucket={:016x} poll={:016x} source={} digest={:016x} \
+                 fleet={:016x}\n",
+                fp.seed,
+                fp.n_total,
+                fp.windows,
+                fp.spec_n,
+                fp.duration_s.to_bits(),
+                fp.window_s.to_bits(),
+                fp.bucket_s.to_bits(),
+                fp.poll_period_s.to_bits(),
+                fp.source_kind.token(),
+                fp.source_digest,
+                fp.fleet_digest,
+            )
+            .as_bytes(),
+        );
+        out.extend_from_slice(
+            format!(
+                "state windows_closed={} recal={} drift={}\n",
+                self.windows_closed, self.recalibrations, self.drift_suspected
+            )
+            .as_bytes(),
+        );
+        out.extend_from_slice(format!("nodes {}\n", self.nodes.len()).as_bytes());
+        out.extend_from_slice(b"BIN\n");
+
+        for node in &self.nodes {
+            push_u32(&mut out, node.node_id as u32);
+            out.push(match node.stage {
+                NodeStage::InFlight => 0,
+                NodeStage::Complete => 1,
+                NodeStage::Partial => 2,
+            });
+            push_u16(&mut out, node.model.len() as u16);
+            out.extend_from_slice(node.model.as_bytes());
+            out.push(generation_code(node.generation));
+            push_u64(&mut out, node.readings);
+            push_u64(&mut out, node.frozen.skip);
+            push_f64(&mut out, node.frozen.anchor_t);
+            push_u16(&mut out, node.epochs.len() as u16);
+            for e in &node.epochs {
+                push_f64(&mut out, e.t0);
+                let mut flags = 0u8;
+                if e.recal {
+                    flags |= 0b01;
+                }
+                if e.identity.is_some() {
+                    flags |= 0b10;
+                }
+                out.push(flags);
+                if let Some(id) = &e.identity {
+                    out.push(class_code(id.class));
+                    let mut mask = 0u8;
+                    if id.update_s.is_some() {
+                        mask |= 0b001;
+                    }
+                    if id.window_s.is_some() {
+                        mask |= 0b010;
+                    }
+                    if id.smi_rise_s.is_some() {
+                        mask |= 0b100;
+                    }
+                    out.push(mask);
+                    if let Some(v) = id.update_s {
+                        push_f64(&mut out, v);
+                    }
+                    if let Some(v) = id.window_s {
+                        push_f64(&mut out, v);
+                    }
+                    if let Some(v) = id.smi_rise_s {
+                        push_f64(&mut out, v);
+                    }
+                }
+            }
+            push_u32(&mut out, node.frozen.frozen_n as u32);
+            push_u32(&mut out, node.frozen.naive_j.len() as u32);
+            for &v in &node.frozen.naive_j {
+                push_f64(&mut out, v);
+            }
+            for &v in &node.frozen.corrected_j {
+                push_f64(&mut out, v);
+            }
+            for &v in &node.frozen.bound_j {
+                push_f64(&mut out, v);
+            }
+            match &node.truth_j {
+                Some(truth) => {
+                    out.push(1);
+                    push_u32(&mut out, truth.len() as u32);
+                    for &v in truth {
+                        push_f64(&mut out, v);
+                    }
+                }
+                None => out.push(0),
+            }
+        }
+
+        let sum = fnv1a(&out);
+        push_u64(&mut out, sum);
+        out
+    }
+
+    /// Decode a checkpoint from its byte format. Refuses torn/truncated
+    /// files (checksum trailer), unknown versions, and structurally
+    /// invalid records; text-preamble errors carry their 1-based line
+    /// number, binary errors their byte offset.
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint, String> {
+        if bytes.len() < 8 {
+            return Err(format!(
+                "checkpoint truncated: {} bytes is too short to carry the checksum trailer",
+                bytes.len()
+            ));
+        }
+        let (body, trailer) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(trailer.try_into().unwrap());
+        let computed = fnv1a(body);
+        if stored != computed {
+            return Err(format!(
+                "checkpoint checksum mismatch (stored {stored:016x}, computed {computed:016x}): \
+                 torn or corrupted file"
+            ));
+        }
+
+        // --- text preamble: 5 LF-terminated lines ---
+        let mut lines: Vec<&str> = Vec::with_capacity(5);
+        let mut pos = 0usize;
+        for _ in 0..5 {
+            let nl = body[pos..]
+                .iter()
+                .position(|&b| b == b'\n')
+                .ok_or_else(|| "checkpoint preamble truncated before line 5".to_string())?;
+            lines.push(std::str::from_utf8(&body[pos..pos + nl]).unwrap_or(""));
+            pos += nl + 1;
+        }
+        let line = |i: usize| lines[i];
+
+        let l1 = line(0);
+        let mut it = l1.split_whitespace();
+        if it.next() != Some(MAGIC) {
+            return Err(format!("checkpoint line 1: bad magic (expected `{MAGIC} <version>`)"));
+        }
+        let version: u32 = it
+            .next()
+            .and_then(|v| v.parse().ok())
+            .ok_or("checkpoint line 1: missing version")?;
+        if version != FORMAT_VERSION {
+            return Err(format!(
+                "checkpoint line 1: format version {version} not supported (this build reads \
+                 version {FORMAT_VERSION}; see the forward-compatibility policy in \
+                 docs/CHECKPOINT_FORMAT.md)"
+            ));
+        }
+
+        let kv = |line_no: usize, text: &str, prefix: &str, keys: &[&str]| -> Result<Vec<String>, String> {
+            let mut it = text.split_whitespace();
+            if it.next() != Some(prefix) {
+                return Err(format!("checkpoint line {line_no}: expected a `{prefix}` line"));
+            }
+            let mut out = Vec::with_capacity(keys.len());
+            for key in keys {
+                let tok = it.next().ok_or_else(|| {
+                    format!("checkpoint line {line_no}: missing `{key}=`")
+                })?;
+                let val = tok.strip_prefix(key).and_then(|r| r.strip_prefix('=')).ok_or_else(
+                    || format!("checkpoint line {line_no}: expected `{key}=...`, found `{tok}`"),
+                )?;
+                out.push(val.to_string());
+            }
+            Ok(out)
+        };
+        let u = |line_no: usize, key: &str, v: &str| -> Result<u64, String> {
+            v.parse().map_err(|_| {
+                format!("checkpoint line {line_no}: `{key}={v}` is not an unsigned integer")
+            })
+        };
+        let hx = |line_no: usize, key: &str, v: &str| -> Result<u64, String> {
+            u64::from_str_radix(v, 16).map_err(|_| {
+                format!("checkpoint line {line_no}: `{key}={v}` is not a 16-digit hex value")
+            })
+        };
+
+        let c = kv(
+            2,
+            line(1),
+            "config",
+            &[
+                "seed", "nodes", "windows", "spec_n", "duration", "window", "bucket", "poll",
+                "source", "digest", "fleet",
+            ],
+        )?;
+        let fingerprint = ServiceFingerprint {
+            seed: u(2, "seed", &c[0])?,
+            n_total: u(2, "nodes", &c[1])? as usize,
+            windows: u(2, "windows", &c[2])? as usize,
+            spec_n: u(2, "spec_n", &c[3])? as usize,
+            duration_s: f64::from_bits(hx(2, "duration", &c[4])?),
+            window_s: f64::from_bits(hx(2, "window", &c[5])?),
+            bucket_s: f64::from_bits(hx(2, "bucket", &c[6])?),
+            poll_period_s: f64::from_bits(hx(2, "poll", &c[7])?),
+            source_kind: SourceKind::from_token(&c[8]).ok_or_else(|| {
+                format!("checkpoint line 2: unknown source kind `{}`", c[8])
+            })?,
+            source_digest: hx(2, "digest", &c[9])?,
+            fleet_digest: hx(2, "fleet", &c[10])?,
+        };
+
+        let s = kv(3, line(2), "state", &["windows_closed", "recal", "drift"])?;
+        let windows_closed = u(3, "windows_closed", &s[0])? as usize;
+        let recalibrations = u(3, "recal", &s[1])?;
+        let drift_suspected = u(3, "drift", &s[2])?;
+
+        let l4 = line(3);
+        let n_nodes: usize = l4
+            .strip_prefix("nodes ")
+            .and_then(|v| v.parse().ok())
+            .ok_or("checkpoint line 4: expected `nodes <count>`")?;
+        if line(4) != "BIN" {
+            return Err("checkpoint line 5: expected the `BIN` section marker".to_string());
+        }
+
+        if n_nodes > fingerprint.n_total {
+            return Err(format!(
+                "checkpoint line 4: {n_nodes} node records exceed the {}-node fleet on line 2",
+                fingerprint.n_total
+            ));
+        }
+
+        // --- binary node records --- (preallocation bounded by what the
+        // remaining bytes could possibly hold, so a crafted count cannot
+        // force an allocation abort before the per-record errors fire)
+        let mut cur = Cursor { body, pos };
+        let mut nodes = Vec::with_capacity(n_nodes.min((body.len() - pos) / 32 + 1));
+        for _ in 0..n_nodes {
+            nodes.push(decode_node(&mut cur, fingerprint.spec_n)?);
+        }
+        if cur.pos != body.len() {
+            return Err(format!(
+                "checkpoint has {} trailing bytes after the last node record (offset {})",
+                body.len() - cur.pos,
+                cur.pos
+            ));
+        }
+
+        Ok(Checkpoint { fingerprint, windows_closed, recalibrations, drift_suspected, nodes })
+    }
+
+    /// Validate this checkpoint against the fingerprint of the service
+    /// about to restore it. Errors name the offending field and the
+    /// checkpoint line it was read from, so a mismatched restore fails
+    /// loudly instead of corrupting an account.
+    pub fn validate(&self, fp: &ServiceFingerprint) -> Result<(), String> {
+        let a = &self.fingerprint;
+        let err = |what: &str, ck: String, now: String| {
+            Err(format!(
+                "checkpoint line 2: {what} mismatch — checkpoint has {ck}, the service was \
+                 configured with {now}; refusing to restore into a different fleet/config"
+            ))
+        };
+        if a.seed != fp.seed {
+            return err("seed", a.seed.to_string(), fp.seed.to_string());
+        }
+        if a.n_total != fp.n_total {
+            return err("fleet size", a.n_total.to_string(), fp.n_total.to_string());
+        }
+        if a.windows != fp.windows {
+            return err("window count", a.windows.to_string(), fp.windows.to_string());
+        }
+        if a.spec_n != fp.spec_n {
+            return err("bucket count", a.spec_n.to_string(), fp.spec_n.to_string());
+        }
+        if a.duration_s.to_bits() != fp.duration_s.to_bits() {
+            return err("duration", format!("{} s", a.duration_s), format!("{} s", fp.duration_s));
+        }
+        if a.window_s.to_bits() != fp.window_s.to_bits() {
+            return err("window length", format!("{} s", a.window_s), format!("{} s", fp.window_s));
+        }
+        if a.bucket_s.to_bits() != fp.bucket_s.to_bits() {
+            return err("bucket width", format!("{} s", a.bucket_s), format!("{} s", fp.bucket_s));
+        }
+        if a.poll_period_s.to_bits() != fp.poll_period_s.to_bits() {
+            return err(
+                "poll period",
+                format!("{} s", a.poll_period_s),
+                format!("{} s", fp.poll_period_s),
+            );
+        }
+        if a.source_kind != fp.source_kind {
+            return err(
+                "source kind",
+                a.source_kind.token().to_string(),
+                fp.source_kind.token().to_string(),
+            );
+        }
+        if a.source_digest != fp.source_digest {
+            return err(
+                "source digest",
+                format!("{:016x}", a.source_digest),
+                format!("{:016x}", fp.source_digest),
+            );
+        }
+        if a.fleet_digest != fp.fleet_digest {
+            return err(
+                "fleet digest",
+                format!("{:016x}", a.fleet_digest),
+                format!("{:016x}", fp.fleet_digest),
+            );
+        }
+        // structural sanity beyond the fingerprint (node *ids* are free-
+        // form — custom fleets carry arbitrary ids, covered by the fleet
+        // digest — but no node may appear twice)
+        let mut seen = HashMap::new();
+        for node in &self.nodes {
+            if seen.insert(node.node_id, ()).is_some() {
+                return Err(format!("checkpoint records node {} twice", node.node_id));
+            }
+        }
+        Ok(())
+    }
+
+    /// Write atomically into `dir` as `checkpoint-<seq>.gpck`: the bytes
+    /// land in a temp file first and are renamed into place, so a crash
+    /// mid-write can never leave a half-written file under the final
+    /// name. Returns the final path.
+    pub fn save_atomic(&self, dir: &Path, seq: u64) -> Result<PathBuf, String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("cannot create checkpoint dir {}: {e}", dir.display()))?;
+        let tmp = dir.join(format!(".tmp-checkpoint-{seq}"));
+        let path = dir.join(format!("checkpoint-{seq:06}.gpck"));
+        std::fs::write(&tmp, self.encode())
+            .map_err(|e| format!("cannot write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| format!("cannot publish {}: {e}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Read + decode a checkpoint file.
+    pub fn load(path: &Path) -> Result<Checkpoint, String> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| format!("cannot read checkpoint {}: {e}", path.display()))?;
+        Checkpoint::decode(&bytes).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+/// Resolve a checkpointed model name back to its `&'static` catalogue
+/// spelling (unrecognised names restore under the replay path's
+/// placeholder — they were never scored anyway).
+pub(crate) fn static_model_name(name: &str) -> &'static str {
+    find_model(name).map(|m| m.name).unwrap_or("unrecognized")
+}
+
+struct Cursor<'a> {
+    body: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        if self.pos + n > self.body.len() {
+            return Err(format!(
+                "checkpoint truncated at byte offset {}: need {} more byte(s) for {what}",
+                self.pos,
+                self.pos + n - self.body.len()
+            ));
+        }
+        let out = &self.body[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+    fn u8(&mut self, what: &str) -> Result<u8, String> {
+        Ok(self.take(1, what)?[0])
+    }
+    fn u16(&mut self, what: &str) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+    fn u32(&mut self, what: &str) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+    fn u64(&mut self, what: &str) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+    fn f64(&mut self, what: &str) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+    fn f64s(&mut self, n: usize, what: &str) -> Result<Vec<f64>, String> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64(what)?);
+        }
+        Ok(out)
+    }
+}
+
+fn decode_node(cur: &mut Cursor<'_>, spec_n: usize) -> Result<NodeCheckpoint, String> {
+    let at = cur.pos;
+    let node_id = cur.u32("node id")? as usize;
+    let stage = match cur.u8("node stage")? {
+        0 => NodeStage::InFlight,
+        1 => NodeStage::Complete,
+        2 => NodeStage::Partial,
+        other => {
+            return Err(format!("checkpoint byte offset {at}: unknown node stage {other}"))
+        }
+    };
+    let model_len = cur.u16("model name length")? as usize;
+    let model = std::str::from_utf8(cur.take(model_len, "model name")?)
+        .map_err(|_| format!("checkpoint byte offset {at}: model name is not UTF-8"))?
+        .to_string();
+    let gen_code = cur.u8("generation")?;
+    let generation = generation_from(gen_code)
+        .ok_or_else(|| format!("checkpoint byte offset {at}: unknown generation {gen_code}"))?;
+    let readings = cur.u64("readings")?;
+    let skip = cur.u64("skip")?;
+    let anchor_t = cur.f64("anchor timestamp")?;
+
+    let n_epochs = cur.u16("epoch count")? as usize;
+    let mut epochs = Vec::with_capacity(n_epochs);
+    for i in 0..n_epochs {
+        let t0 = cur.f64("epoch t0")?;
+        let flags = cur.u8("epoch flags")?;
+        let recal = flags & 0b01 != 0;
+        let identity = if flags & 0b10 != 0 {
+            let class_code = cur.u8("identity class")?;
+            let class = class_from(class_code).ok_or_else(|| {
+                format!("checkpoint node {node_id}: unknown sensor class {class_code}")
+            })?;
+            let mask = cur.u8("identity mask")?;
+            let update_s = if mask & 0b001 != 0 { Some(cur.f64("update period")?) } else { None };
+            let window_s = if mask & 0b010 != 0 { Some(cur.f64("window")?) } else { None };
+            let smi_rise_s = if mask & 0b100 != 0 { Some(cur.f64("rise")?) } else { None };
+            Some(SensorIdentity { class, update_s, window_s, smi_rise_s })
+        } else {
+            if i + 1 != n_epochs {
+                return Err(format!(
+                    "checkpoint node {node_id}: epoch {i} is unidentified but not the last — \
+                     only the open epoch may await identification"
+                ));
+            }
+            None
+        };
+        epochs.push(CkptEpoch { t0, recal, identity });
+    }
+
+    let frozen_n = cur.u32("frozen bucket count")? as usize;
+    let arr_len = cur.u32("bucket array length")? as usize;
+    if frozen_n > arr_len || arr_len > spec_n {
+        return Err(format!(
+            "checkpoint node {node_id}: frozen_n {frozen_n} / array length {arr_len} exceed the \
+             {spec_n}-bucket span"
+        ));
+    }
+    match stage {
+        NodeStage::InFlight if arr_len != frozen_n => {
+            return Err(format!(
+                "checkpoint node {node_id}: in-flight records must carry exactly their frozen \
+                 prefix ({frozen_n}), found {arr_len} buckets"
+            ));
+        }
+        NodeStage::Complete | NodeStage::Partial if arr_len != spec_n => {
+            return Err(format!(
+                "checkpoint node {node_id}: finished records must carry the full {spec_n}-bucket \
+                 span, found {arr_len}"
+            ));
+        }
+        _ => {}
+    }
+    let naive_j = cur.f64s(arr_len, "naive buckets")?;
+    let corrected_j = cur.f64s(arr_len, "corrected buckets")?;
+    let bound_j = cur.f64s(arr_len, "bound buckets")?;
+    let truth_j = match cur.u8("truth marker")? {
+        0 => None,
+        1 => {
+            let n = cur.u32("truth length")? as usize;
+            if n != spec_n {
+                return Err(format!(
+                    "checkpoint node {node_id}: truth must cover the full {spec_n}-bucket span, \
+                     found {n}"
+                ));
+            }
+            Some(cur.f64s(n, "truth buckets")?)
+        }
+        other => {
+            return Err(format!("checkpoint node {node_id}: bad truth marker {other}"))
+        }
+    };
+
+    Ok(NodeCheckpoint {
+        node_id,
+        stage,
+        model,
+        generation,
+        readings,
+        epochs,
+        frozen: FrozenState { frozen_n, skip, anchor_t, naive_j, corrected_j, bound_j },
+        truth_j,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn boxcar() -> SensorIdentity {
+        SensorIdentity {
+            class: SensorClass::Boxcar,
+            update_s: Some(0.1),
+            window_s: Some(0.025),
+            smi_rise_s: Some(0.05),
+        }
+    }
+
+    fn sample_checkpoint() -> Checkpoint {
+        Checkpoint {
+            fingerprint: ServiceFingerprint {
+                seed: 2024,
+                n_total: 2,
+                windows: 1,
+                spec_n: 4,
+                duration_s: 8.0,
+                window_s: 8.0,
+                bucket_s: 2.0,
+                poll_period_s: 0.002,
+                source_kind: SourceKind::Sim,
+                source_digest: 0,
+                fleet_digest: 0xDEAD_BEEF,
+            },
+            windows_closed: 0,
+            recalibrations: 1,
+            drift_suspected: 0,
+            nodes: vec![
+                NodeCheckpoint {
+                    node_id: 0,
+                    stage: NodeStage::Complete,
+                    model: "A100 PCIe-40G".into(),
+                    generation: Generation::AmpereGa100,
+                    readings: 4000,
+                    epochs: vec![CkptEpoch { t0: 0.0, recal: false, identity: Some(boxcar()) }],
+                    frozen: FrozenState {
+                        frozen_n: 4,
+                        skip: 0,
+                        anchor_t: f64::NEG_INFINITY,
+                        naive_j: vec![100.0, 110.0, 120.0, 130.0],
+                        corrected_j: vec![99.0, 111.0, 119.0, 131.0],
+                        bound_j: vec![5.0, 5.5, 6.0, 6.5],
+                    },
+                    truth_j: Some(vec![101.0, 109.0, 121.0, 129.0]),
+                },
+                NodeCheckpoint {
+                    node_id: 1,
+                    stage: NodeStage::InFlight,
+                    model: "RTX 3090".into(),
+                    generation: Generation::Ampere,
+                    readings: 900,
+                    epochs: vec![
+                        CkptEpoch { t0: 0.0, recal: false, identity: Some(boxcar()) },
+                        CkptEpoch { t0: 5.5, recal: true, identity: None },
+                    ],
+                    frozen: FrozenState {
+                        frozen_n: 2,
+                        skip: 900,
+                        anchor_t: 3.998,
+                        naive_j: vec![80.0, 82.0],
+                        corrected_j: vec![79.5, 82.5],
+                        bound_j: vec![3.0, 3.1],
+                    },
+                    truth_j: None,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trips_exactly() {
+        let ck = sample_checkpoint();
+        let bytes = ck.encode();
+        let back = Checkpoint::decode(&bytes).unwrap();
+        assert_eq!(back, ck);
+        // re-encoding the decoded checkpoint is byte-identical
+        assert_eq!(back.encode(), bytes);
+    }
+
+    #[test]
+    fn truncated_and_corrupted_files_are_refused() {
+        let bytes = sample_checkpoint().encode();
+        // torn write: any strict prefix fails the checksum (or the length
+        // floor) — never decodes to a half-checkpoint
+        for cut in [0, 4, 7, 40, bytes.len() / 2, bytes.len() - 1] {
+            let err = Checkpoint::decode(&bytes[..cut]).unwrap_err();
+            assert!(
+                err.contains("checksum") || err.contains("truncated"),
+                "cut at {cut}: {err}"
+            );
+        }
+        // bit rot anywhere in the body is caught
+        let mut flipped = bytes.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x40;
+        let err = Checkpoint::decode(&flipped).unwrap_err();
+        assert!(err.contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn unknown_version_is_refused_with_policy_pointer() {
+        let ck = sample_checkpoint();
+        let mut bytes = format!("{MAGIC} 99\n").into_bytes();
+        let rest = ck.encode();
+        let nl = rest.iter().position(|&b| b == b'\n').unwrap();
+        bytes.extend_from_slice(&rest[nl + 1..rest.len() - 8]);
+        let sum = fnv1a(&bytes);
+        bytes.extend_from_slice(&sum.to_le_bytes());
+        let err = Checkpoint::decode(&bytes).unwrap_err();
+        assert!(err.contains("line 1") && err.contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_mismatches_with_line_numbers() {
+        let ck = sample_checkpoint();
+        let mut fp = ck.fingerprint;
+        assert!(ck.validate(&fp).is_ok());
+        fp.seed = 7;
+        let err = ck.validate(&fp).unwrap_err();
+        assert!(err.contains("line 2") && err.contains("seed"), "{err}");
+        let mut fp = ck.fingerprint;
+        fp.n_total = 64;
+        let err = ck.validate(&fp).unwrap_err();
+        assert!(err.contains("fleet size"), "{err}");
+        let mut fp = ck.fingerprint;
+        fp.source_kind = SourceKind::Replay;
+        let err = ck.validate(&fp).unwrap_err();
+        assert!(err.contains("source kind"), "{err}");
+        let mut fp = ck.fingerprint;
+        fp.bucket_s = 1.0;
+        let err = ck.validate(&fp).unwrap_err();
+        assert!(err.contains("bucket width"), "{err}");
+    }
+
+    #[test]
+    fn digests_are_stable_and_sensitive() {
+        let plan = FaultPlan { dropout: 0.25, ..Default::default() };
+        let (k1, d1) = source_digest(&ServiceSource::Faulty(plan.clone()));
+        let (k2, d2) = source_digest(&ServiceSource::Faulty(plan));
+        assert_eq!(k1, SourceKind::Faulty);
+        assert_eq!(d1, d2, "same plan, same digest");
+        let (_, d3) =
+            source_digest(&ServiceSource::Faulty(FaultPlan { dropout: 0.3, ..Default::default() }));
+        assert_ne!(d1, d3, "different plan, different digest");
+        let (_, r1) = source_digest(&ServiceSource::Replay(vec!["ab".into(), "c".into()]));
+        let (_, r2) = source_digest(&ServiceSource::Replay(vec!["a".into(), "bc".into()]));
+        assert_ne!(r1, r2, "record separator keeps log boundaries in the digest");
+        assert_eq!(source_digest(&ServiceSource::Sim), (SourceKind::Sim, 0));
+        // the reference FNV-1a vector: empty input hashes to the offset basis
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c, "FNV-1a 64 test vector");
+    }
+
+    #[test]
+    fn decode_rejects_structurally_invalid_records() {
+        // an unidentified epoch that is not the last
+        let mut ck = sample_checkpoint();
+        ck.nodes[1].epochs = vec![
+            CkptEpoch { t0: 0.0, recal: false, identity: None },
+            CkptEpoch { t0: 5.5, recal: false, identity: Some(boxcar()) },
+        ];
+        let err = Checkpoint::decode(&ck.encode()).unwrap_err();
+        assert!(err.contains("unidentified but not the last"), "{err}");
+
+        // an in-flight record whose arrays disagree with its frozen_n
+        let mut ck = sample_checkpoint();
+        ck.nodes[1].frozen.frozen_n = 1;
+        let err = Checkpoint::decode(&ck.encode()).unwrap_err();
+        assert!(err.contains("frozen"), "{err}");
+
+        // a duplicated node id fails validation
+        let mut ck = sample_checkpoint();
+        ck.nodes[1].node_id = 0;
+        let ck = Checkpoint::decode(&ck.encode()).unwrap();
+        let err = ck.validate(&ck.fingerprint).unwrap_err();
+        assert!(err.contains("twice"), "{err}");
+    }
+}

@@ -55,18 +55,25 @@ use crate::smi::logger::VALUE_CHANGE_EPS as CHANGE_EPS;
 pub struct ProbeSchedule {
     /// Transient probe: step up at `step_t`, down at `step_end`.
     pub step_t: f64,
+    /// End of the transient step probe, seconds.
     pub step_end: f64,
     /// Update-period probe: square wave of `update_period` seconds.
     pub update_start: f64,
+    /// Update-period probe wave period, seconds.
     pub update_period: f64,
+    /// Update-period probe cycle count.
     pub update_cycles: usize,
     /// Fast window probe (for ~20 ms update sensors): aliased square wave.
     pub w_fast_start: f64,
+    /// Fast window probe wave period, seconds.
     pub w_fast_period: f64,
+    /// Fast window probe cycle count.
     pub w_fast_cycles: usize,
     /// Slow window probe (for ~100 ms update sensors).
     pub w_slow_start: f64,
+    /// Slow window probe wave period, seconds.
     pub w_slow_period: f64,
+    /// Slow window probe cycle count.
     pub w_slow_cycles: usize,
 }
 
@@ -149,6 +156,7 @@ pub enum SensorClass {
 /// What the registry learned about one node's sensor.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SensorIdentity {
+    /// Identified sensor behaviour class.
     pub class: SensorClass,
     /// Identified update period, seconds.
     pub update_s: Option<f64>,
@@ -209,6 +217,7 @@ pub struct IdentifyScratch {
 }
 
 impl IdentifyScratch {
+    /// Fresh (empty) identification buffers.
     pub fn new() -> Self {
         IdentifyScratch::default()
     }
@@ -528,6 +537,7 @@ impl Default for EpochTracker {
 }
 
 impl EpochTracker {
+    /// Detector treating gaps of at least `gap_s` seconds as restarts.
     pub fn new(gap_s: f64) -> Self {
         EpochTracker { gap_s, last_t: None, epochs: 0 }
     }
@@ -609,6 +619,7 @@ pub struct IncrementalIdentifier {
 }
 
 impl IncrementalIdentifier {
+    /// Identifier for an epoch whose calibration starts at t = 0.
     pub fn new(sched: &ProbeSchedule) -> Self {
         IncrementalIdentifier {
             sched: *sched,
@@ -629,10 +640,12 @@ impl IncrementalIdentifier {
         self.draft = SensorIdentity::unsupported();
     }
 
+    /// The calibration phase the stream position is in.
     pub fn phase(&self) -> CalPhase {
         self.phase
     }
 
+    /// Whether the calibration finished (the identity is final).
     pub fn is_complete(&self) -> bool {
         self.phase == CalPhase::Complete
     }
@@ -809,6 +822,7 @@ impl Default for DriftMonitor {
 }
 
 impl DriftMonitor {
+    /// A disarmed monitor (arm it after each identification).
     pub fn new() -> Self {
         DriftMonitor::default()
     }
@@ -830,6 +844,7 @@ impl DriftMonitor {
         }
     }
 
+    /// Whether the monitor is currently watching for drift.
     pub fn is_armed(&self) -> bool {
         self.armed
     }
@@ -912,14 +927,18 @@ impl DriftMonitor {
 pub struct EpochIdentity {
     /// First reading time of the epoch (0 for the stream head).
     pub t0: f64,
+    /// The identified sensor for this epoch.
     pub identity: SensorIdentity,
 }
 
 /// One registered node.
 #[derive(Debug, Clone)]
 pub struct NodeIdentity {
+    /// The node's fleet id.
     pub node_id: usize,
+    /// Catalogue model name.
     pub model: &'static str,
+    /// Architecture generation.
     pub generation: Generation,
     /// The *current* (latest-epoch) identity — what the accountant applies.
     pub identity: SensorIdentity,
@@ -957,6 +976,7 @@ pub struct Registry {
 /// Per-generation identification accuracy vs `sim::profile` ground truth.
 #[derive(Debug, Clone, Copy)]
 pub struct GenAccuracy {
+    /// The generation this row aggregates.
     pub generation: Generation,
     /// Nodes of this generation seen by the registry.
     pub nodes: usize,
@@ -968,6 +988,7 @@ pub struct GenAccuracy {
 }
 
 impl Registry {
+    /// Register one node's identification outcome.
     pub fn insert(&mut self, entry: NodeIdentity) {
         self.entries.push(entry);
     }
@@ -977,6 +998,7 @@ impl Registry {
         self.entries.sort_by_key(|e| e.node_id);
     }
 
+    /// Look one node up by id.
     pub fn get(&self, node_id: usize) -> Option<&NodeIdentity> {
         self.entries.iter().find(|e| e.node_id == node_id)
     }

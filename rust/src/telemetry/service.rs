@@ -41,8 +41,19 @@
 //! identically under any worker/batch configuration. Progress events are
 //! advisory (their interleaving across nodes depends on scheduling);
 //! snapshots are the authoritative view.
+//!
+//! Persistence: [`ServiceHandle::enable_checkpoints`] makes the service
+//! write a durable checkpoint (`super::persist`) at every `WindowClosed`
+//! — the moment all recorded state is final — and
+//! [`ControlMsg::Checkpoint`] forces one on demand. After a collector
+//! crash, [`TelemetryService::start_from`] restores the checkpoint into a
+//! fresh service that resumes ingest mid-stream: identities restored (no
+//! re-calibration), frozen buckets bit-for-bit, stream positions
+//! re-entered per node. `docs/CHECKPOINT_FORMAT.md` specifies the file
+//! format; `docs/ARCHITECTURE.md` places the subsystem in the module map.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -54,11 +65,14 @@ use crate::sim::profile::{DriverEpoch, Generation, PowerField};
 use crate::smi::cli::{LogValue, QueryField, SmiLog};
 
 use super::accounting::{
-    window_tiles, BucketSpec, FleetAccounts, NodeAccount, NodeAccountant,
+    window_tiles, BucketSpec, FleetAccounts, FrozenState, NodeAccount, NodeAccountant,
 };
 use super::ingest::{
-    node_fault_seed, node_rig_seed, stream_source, Emitter, IngestMsg, IngestStats, NodeScratch,
-    RecalBoard,
+    node_fault_seed, node_rig_seed, stream_source, Emitter, IngestMsg, IngestStats,
+    NodeResumePlan, NodeScratch, RecalBoard,
+};
+use super::persist::{
+    self, Checkpoint, CkptEpoch, NodeCheckpoint, NodeStage, ServiceFingerprint, SourceKind,
 };
 use super::registry::{
     EpochIdentity, NodeIdentity, ProbeSchedule, Registry, SensorIdentity, DRIVER_RESTART_GAP_S,
@@ -73,7 +87,14 @@ use super::{effective_window_s, TelemetryConfig, TelemetrySnapshot};
 pub enum ControlMsg {
     /// Replay the calibration probes on one node (picked up at its
     /// producer's next chunk boundary; a no-op once the node finished).
-    Recalibrate { node: usize },
+    Recalibrate {
+        /// Fleet id of the node to re-calibrate.
+        node: usize,
+    },
+    /// Write a checkpoint *now* (on top of the automatic `WindowClosed`
+    /// writes). Rejected (`false`) when no checkpoint directory was
+    /// configured — see [`ServiceHandle::enable_checkpoints`].
+    Checkpoint,
     /// Stop producing: nodes mid-stream are cut short, unclaimed nodes
     /// never start, and the service drains to a partial snapshot.
     Shutdown,
@@ -85,18 +106,58 @@ pub enum ControlMsg {
 pub enum ServiceEvent {
     /// An epoch's calibration completed (or a short epoch closed): the
     /// node's sensor identity as of `t0` is final.
-    NodeIdentified { node_id: usize, t0: f64, identity: SensorIdentity },
+    NodeIdentified {
+        /// The identified node's fleet id.
+        node_id: usize,
+        /// The identified epoch's origin, stream seconds.
+        t0: f64,
+        /// Its final sensor identity.
+        identity: SensorIdentity,
+    },
     /// A restart-sized stream gap opened a new sensor epoch at `t0`.
-    EpochDetected { node_id: usize, t0: f64 },
+    EpochDetected {
+        /// The affected node's fleet id.
+        node_id: usize,
+        /// The new epoch's origin, stream seconds.
+        t0: f64,
+    },
     /// An adaptive/commanded probe replay began at `t0`.
-    Recalibrated { node_id: usize, t0: f64 },
+    Recalibrated {
+        /// The re-calibrating node's fleet id.
+        node_id: usize,
+        /// The replay's origin, stream seconds.
+        t0: f64,
+    },
     /// Drift confirmed on a source that cannot re-probe (recorded logs).
-    DriftSuspected { node_id: usize, t: f64 },
+    DriftSuspected {
+        /// The suspected node's fleet id.
+        node_id: usize,
+        /// When drift was confirmed, stream seconds.
+        t: f64,
+    },
     /// Every node's stream has passed this observation window: its
     /// fleet aggregates are final.
-    WindowClosed { index: usize, t0: f64, t1: f64 },
+    WindowClosed {
+        /// Zero-based window index.
+        index: usize,
+        /// Window start, stream seconds.
+        t0: f64,
+        /// Window end, stream seconds.
+        t1: f64,
+    },
+    /// A checkpoint file was published (`checkpoint-<seq>.gpck` in the
+    /// configured directory) covering all state frozen so far.
+    CheckpointWritten {
+        /// The file's sequence number.
+        seq: u64,
+        /// Observation windows closed at write time.
+        windows_closed: usize,
+    },
     /// A node's stream ended; its account is finished.
-    NodeComplete { node_id: usize },
+    NodeComplete {
+        /// The finished node's fleet id.
+        node_id: usize,
+    },
     /// The service drained to completion.
     ServiceComplete,
 }
@@ -108,6 +169,18 @@ struct LiveNode {
     generation: Generation,
     acct: NodeAccountant,
     epochs: Vec<EpochIdentity>,
+    /// Every epoch announced so far — `(t0, was-a-probe-replay)` — the
+    /// open one included; aligned with `epochs` for the identified
+    /// prefix. The durable recal flags a checkpoint needs.
+    epoch_log: Vec<(f64, bool)>,
+}
+
+/// Where (and how often) checkpoints are written once
+/// [`ServiceHandle::enable_checkpoints`] configures a directory.
+#[derive(Debug)]
+struct CheckpointSink {
+    dir: PathBuf,
+    seq: u64,
 }
 
 /// Everything the consumer maintains, behind the handle's mutex.
@@ -117,12 +190,17 @@ struct LiveState {
     inflight: HashMap<usize, LiveNode>,
     finished_accounts: Vec<NodeAccount>,
     finished_entries: Vec<NodeIdentity>,
+    /// Per finished node (parallel to `finished_accounts`): the epoch log
+    /// with recal flags — kept so checkpoints stay faithful after the
+    /// live node is retired.
+    finished_logs: Vec<Vec<(f64, bool)>>,
     subscribers: Vec<Sender<ServiceEvent>>,
     /// Every event emitted so far, in order — replayed to late
     /// subscribers so no subscriber ever misses progress (bounded:
     /// O(nodes × epochs + windows)).
     event_log: Vec<ServiceEvent>,
     windows_closed: usize,
+    sink: Option<CheckpointSink>,
     done: bool,
 }
 
@@ -131,6 +209,32 @@ impl LiveState {
         self.event_log.push(ev);
         self.subscribers.retain(|s| s.send(ev).is_ok());
     }
+}
+
+/// One restored in-flight node's full resume state.
+#[derive(Debug)]
+struct NodeRestore {
+    /// Producer side: skip count, anchor, known-epoch timeline.
+    plan: NodeResumePlan,
+    /// Accountant side: epoch timeline with the open span marked `None`.
+    timeline: Vec<(f64, Option<SensorIdentity>)>,
+    /// The frozen prefix to import verbatim.
+    frozen: FrozenState,
+    /// Identified epoch history for the live registry view.
+    epochs: Vec<EpochIdentity>,
+    /// Announced-epoch log (open epoch included), with recal flags.
+    epoch_log: Vec<(f64, bool)>,
+}
+
+/// Everything a restored service carries from its checkpoint, shared by
+/// the producers (skip finished nodes, resume in-flight ones) and the
+/// consumer (rebuild each resumed node's accountant).
+#[derive(Debug, Default)]
+struct RestoreData {
+    /// Nodes whose streams already ended — never re-streamed.
+    finished: HashSet<usize>,
+    /// Resume state per in-flight node id.
+    nodes: HashMap<usize, NodeRestore>,
 }
 
 /// Immutable geometry shared by the consumer and the handle.
@@ -142,15 +246,24 @@ struct ServiceMeta {
     n_total: usize,
     /// `(t0, t1)` of each observation-window tile, in order.
     tile_bounds: Vec<(f64, f64)>,
+    /// The config/source fingerprint every checkpoint is stamped with
+    /// (and every restore validated against).
+    fingerprint: ServiceFingerprint,
 }
 
 impl ServiceMeta {
-    fn new(spec: BucketSpec, window_s: f64, duration_s: f64, n_total: usize) -> Self {
+    fn new(
+        spec: BucketSpec,
+        window_s: f64,
+        duration_s: f64,
+        n_total: usize,
+        fingerprint: ServiceFingerprint,
+    ) -> Self {
         let tile_bounds = window_tiles(&spec, window_s)
             .into_iter()
             .map(|(lo, hi)| (spec.bounds(lo).0, spec.bounds(hi - 1).1))
             .collect();
-        ServiceMeta { spec, window_s, duration_s, n_total, tile_bounds }
+        ServiceMeta { spec, window_s, duration_s, n_total, tile_bounds, fingerprint }
     }
 }
 
@@ -179,10 +292,24 @@ struct ProducerCtx {
     pool: Mutex<Receiver<Vec<(f64, f64)>>>,
     board: Arc<RecalBoard>,
     stop: Arc<AtomicBool>,
+    /// Checkpoint restore state: finished nodes are skipped, in-flight
+    /// nodes resume from their recorded stream position.
+    restore: Option<Arc<RestoreData>>,
 }
 
 /// The entry point: start a service over a fleet/source, get a handle.
 pub struct TelemetryService;
+
+/// Everything a start path computes before launching threads.
+struct ServiceSetup {
+    plan: ServicePlan,
+    n: usize,
+    sched: ProbeSchedule,
+    spec: BucketSpec,
+    window_s: f64,
+    duration_s: f64,
+    fingerprint: ServiceFingerprint,
+}
 
 impl TelemetryService {
     /// Start the service over a simulated fleet (optionally behind the
@@ -190,6 +317,30 @@ impl TelemetryService {
     /// [`ServiceSource::Replay`] the fleet is ignored (one node per log)
     /// and the logs must be valid — use [`Self::start_replay`] directly
     /// for error handling.
+    ///
+    /// # Examples
+    ///
+    /// Run a two-node simulated fleet to completion and query the final
+    /// snapshot:
+    ///
+    /// ```
+    /// use gpupower::coordinator::{Fleet, FleetConfig};
+    /// use gpupower::sim::profile::{DriverEpoch, PowerField};
+    /// use gpupower::telemetry::{ServiceSource, TelemetryConfig, TelemetryService};
+    ///
+    /// let fleet = Fleet::build(FleetConfig {
+    ///     size: 2,
+    ///     models: vec!["A100 PCIe-40G".into()],
+    ///     driver: DriverEpoch::Post530,
+    ///     field: PowerField::Instant,
+    ///     seed: 7,
+    /// });
+    /// let cfg = TelemetryConfig { duration_s: 0.0, bucket_s: 2.0, ..Default::default() };
+    /// let handle = TelemetryService::start(&fleet, &cfg, &ServiceSource::Sim);
+    /// let snap = handle.join();
+    /// assert_eq!(snap.accounts.nodes.len(), 2);
+    /// assert!(snap.fleet_energy(0.0, snap.duration_s).truth_j > 0.0);
+    /// ```
     pub fn start(fleet: &Fleet, cfg: &TelemetryConfig, src: &ServiceSource) -> ServiceHandle {
         match src {
             ServiceSource::Replay(logs) => {
@@ -201,6 +352,14 @@ impl TelemetryService {
     }
 
     fn start_sim(fleet: &Fleet, cfg: &TelemetryConfig, faults: Option<FaultPlan>) -> ServiceHandle {
+        Self::launch(Self::sim_setup(fleet, cfg, faults), *cfg, None)
+    }
+
+    fn sim_setup(
+        fleet: &Fleet,
+        cfg: &TelemetryConfig,
+        faults: Option<FaultPlan>,
+    ) -> ServiceSetup {
         let sched = ProbeSchedule::default();
         let window_s = effective_window_s(cfg, &sched);
         let duration_s = window_s * cfg.windows.max(1) as f64;
@@ -209,6 +368,24 @@ impl TelemetryService {
             .as_ref()
             .map(|p| p.effective_timeline(&sched, duration_s))
             .unwrap_or_default();
+        let (source_kind, source_digest) = match &faults {
+            None => (SourceKind::Sim, 0),
+            Some(p) => (SourceKind::Faulty, persist::fault_plan_digest(p)),
+        };
+        let n = fleet.nodes.len();
+        let fingerprint = ServiceFingerprint {
+            seed: cfg.seed,
+            n_total: n,
+            windows: cfg.windows,
+            spec_n: spec.n,
+            duration_s,
+            window_s,
+            bucket_s: spec.bucket_s,
+            poll_period_s: cfg.poll_period_s,
+            source_kind,
+            source_digest,
+            fleet_digest: persist::fleet_digest(fleet),
+        };
         let plan = ServicePlan::Sim {
             nodes: fleet.nodes.clone(),
             driver: fleet.config.driver,
@@ -216,8 +393,7 @@ impl TelemetryService {
             faults,
             timeline,
         };
-        let n = fleet.nodes.len();
-        Self::launch(plan, n, *cfg, sched, spec, window_s, duration_s)
+        ServiceSetup { plan, n, sched, spec, window_s, duration_s, fingerprint }
     }
 
     /// Start the service over recorded nvidia-smi CSV logs (one node per
@@ -226,6 +402,10 @@ impl TelemetryService {
     /// duration and the logs' own recorded range, so a long recording is
     /// never silently truncated.
     pub fn start_replay(logs: &[String], cfg: &TelemetryConfig) -> Result<ServiceHandle, String> {
+        Ok(Self::launch(Self::replay_setup(logs, cfg)?, *cfg, None))
+    }
+
+    fn replay_setup(logs: &[String], cfg: &TelemetryConfig) -> Result<ServiceSetup, String> {
         let mut parsed: Vec<SmiLog> = Vec::with_capacity(logs.len());
         let mut t_max = 0.0f64;
         for (i, text) in logs.iter().enumerate() {
@@ -246,25 +426,91 @@ impl TelemetryService {
         let duration_s = (window_s * cfg.windows.max(1) as f64).max(t_max + 1e-9);
         let spec = BucketSpec::new(duration_s, cfg.bucket_s);
         let n = parsed.len();
+        let fingerprint = ServiceFingerprint {
+            seed: cfg.seed,
+            n_total: n,
+            windows: cfg.windows,
+            spec_n: spec.n,
+            duration_s,
+            window_s,
+            bucket_s: spec.bucket_s,
+            poll_period_s: cfg.poll_period_s,
+            source_kind: SourceKind::Replay,
+            source_digest: persist::replay_digest(logs),
+            fleet_digest: 0,
+        };
         let plan = ServicePlan::Replay { logs: parsed };
-        Ok(Self::launch(plan, n, *cfg, sched, spec, window_s, duration_s))
+        Ok(ServiceSetup { plan, n, sched, spec, window_s, duration_s, fingerprint })
     }
 
-    #[allow(clippy::too_many_arguments)]
+    /// Restore a service from a checkpoint and **resume ingest
+    /// mid-stream**: finished nodes come back verbatim (accounts,
+    /// identities, truth), in-flight nodes re-enter their recorded epoch
+    /// timeline with **no re-calibration of already-identified epochs**,
+    /// their frozen buckets restored bit-for-bit, and ingest continuing
+    /// from each node's recorded stream position.
+    ///
+    /// The checkpoint must match the offered fleet/config/source — seed,
+    /// geometry (bit-exact), source kind and digest, fleet digest — or
+    /// the restore is refused with a line-numbered error
+    /// ([`Checkpoint::validate`]). Worker/shard/batch/queue settings are
+    /// free to differ: the service is deterministic across them.
+    ///
+    /// # Examples
+    ///
+    /// ```no_run
+    /// use std::path::Path;
+    /// use gpupower::coordinator::{Fleet, FleetConfig};
+    /// use gpupower::sim::profile::{DriverEpoch, PowerField};
+    /// use gpupower::telemetry::persist::Checkpoint;
+    /// use gpupower::telemetry::{ServiceSource, TelemetryConfig, TelemetryService};
+    ///
+    /// let fleet = Fleet::build(FleetConfig {
+    ///     size: 8,
+    ///     models: vec![],
+    ///     driver: DriverEpoch::Post530,
+    ///     field: PowerField::Instant,
+    ///     seed: 2024,
+    /// });
+    /// let cfg = TelemetryConfig::default();
+    /// // the collector crashed; pick up where the last checkpoint left off
+    /// let ckpt = Checkpoint::load(Path::new("ckpts/checkpoint-000003.gpck"))?;
+    /// let handle = TelemetryService::start_from(&ckpt, &fleet, &cfg, &ServiceSource::Sim)?;
+    /// let snap = handle.join(); // equals the uninterrupted run's snapshot
+    /// # let _ = snap;
+    /// # Ok::<(), String>(())
+    /// ```
+    pub fn start_from(
+        ckpt: &Checkpoint,
+        fleet: &Fleet,
+        cfg: &TelemetryConfig,
+        src: &ServiceSource,
+    ) -> Result<ServiceHandle, String> {
+        let setup = match src {
+            ServiceSource::Replay(logs) => Self::replay_setup(logs, cfg)?,
+            ServiceSource::Sim => Self::sim_setup(fleet, cfg, None),
+            ServiceSource::Faulty(plan) => Self::sim_setup(fleet, cfg, Some(plan.clone())),
+        };
+        ckpt.validate(&setup.fingerprint)?;
+        let init = build_restore(ckpt, setup.spec)?;
+        Ok(Self::launch(setup, *cfg, Some(init)))
+    }
+
     fn launch(
-        plan: ServicePlan,
-        n: usize,
+        setup: ServiceSetup,
         cfg: TelemetryConfig,
-        sched: ProbeSchedule,
-        spec: BucketSpec,
-        window_s: f64,
-        duration_s: f64,
+        restore: Option<RestoreInit>,
     ) -> ServiceHandle {
+        let ServiceSetup { plan, n, sched, spec, window_s, duration_s, fingerprint } = setup;
         let (tx, rx) = mpsc::sync_channel::<IngestMsg>(cfg.queue_depth.max(2));
         let (pool_tx, pool_rx) = mpsc::channel::<Vec<(f64, f64)>>();
         let board = Arc::new(RecalBoard::new(n));
         let stop = Arc::new(AtomicBool::new(false));
         let shard_size = cfg.shard_size.max(1);
+        let (state, restore_data) = match restore {
+            Some(init) => (init.state, Some(init.data)),
+            None => (LiveState::default(), None),
+        };
         let ctx = Arc::new(ProducerCtx {
             plan,
             cfg,
@@ -278,14 +524,15 @@ impl TelemetryService {
             pool: Mutex::new(pool_rx),
             board: Arc::clone(&board),
             stop: Arc::clone(&stop),
+            restore: restore_data.clone(),
         });
-        let shared = Arc::new(Mutex::new(LiveState::default()));
-        let meta = ServiceMeta::new(spec, window_s, duration_s, n);
+        let shared = Arc::new(Mutex::new(state));
+        let meta = ServiceMeta::new(spec, window_s, duration_s, n, fingerprint);
 
         let consumer = {
             let shared = Arc::clone(&shared);
             let meta = meta.clone();
-            std::thread::spawn(move || consumer_loop(rx, shared, meta, pool_tx))
+            std::thread::spawn(move || consumer_loop(rx, shared, meta, pool_tx, restore_data))
         };
         let producers = (0..cfg.workers.max(1))
             .map(|_| {
@@ -306,6 +553,94 @@ impl TelemetryService {
             schedule: sched,
         }
     }
+}
+
+/// The consumer-side half of a restore: the pre-seeded live state plus
+/// the shared per-node resume data.
+struct RestoreInit {
+    state: LiveState,
+    data: Arc<RestoreData>,
+}
+
+/// Translate a validated checkpoint into launch state: finished nodes
+/// become retired accounts/registry entries, in-flight nodes become
+/// producer resume plans + consumer accountant-resume data, and the
+/// ingest counters resume where the durable state left them.
+fn build_restore(ckpt: &Checkpoint, spec: BucketSpec) -> Result<RestoreInit, String> {
+    let mut data = RestoreData::default();
+    let mut state = LiveState {
+        windows_closed: ckpt.windows_closed,
+        ..Default::default()
+    };
+    state.stats.recalibrations = ckpt.recalibrations;
+    state.stats.drift_suspected = ckpt.drift_suspected;
+
+    for node in &ckpt.nodes {
+        let model = persist::static_model_name(&node.model);
+        let identity = node.last_identity().unwrap_or_else(SensorIdentity::unsupported);
+        let epochs: Vec<EpochIdentity> = node
+            .epochs
+            .iter()
+            .filter_map(|e| e.identity.map(|identity| EpochIdentity { t0: e.t0, identity }))
+            .collect();
+        let epoch_log: Vec<(f64, bool)> = node.epochs.iter().map(|e| (e.t0, e.recal)).collect();
+        match node.stage {
+            NodeStage::Complete | NodeStage::Partial => {
+                let complete = node.stage == NodeStage::Complete;
+                state.stats.nodes += 1;
+                state.stats.readings += node.readings;
+                state.finished_accounts.push(NodeAccount {
+                    node_id: node.node_id,
+                    model,
+                    generation: node.generation,
+                    identity,
+                    spec,
+                    naive_j: node.frozen.naive_j.clone(),
+                    corrected_j: node.frozen.corrected_j.clone(),
+                    bound_j: node.frozen.bound_j.clone(),
+                    truth_j: node.truth_j.clone().unwrap_or_else(|| vec![0.0; spec.n]),
+                    readings: node.readings,
+                    complete,
+                    frozen_n: if complete { spec.n } else { node.frozen.frozen_n },
+                });
+                state.finished_entries.push(NodeIdentity {
+                    node_id: node.node_id,
+                    model,
+                    generation: node.generation,
+                    identity,
+                    epochs,
+                });
+                state.finished_logs.push(epoch_log);
+                data.finished.insert(node.node_id);
+            }
+            NodeStage::InFlight => {
+                if node.epochs.is_empty() {
+                    // the node had started but no epoch was announced yet:
+                    // nothing durable to resume — stream it fresh
+                    continue;
+                }
+                state.stats.readings += node.frozen.skip;
+                let plan = NodeResumePlan {
+                    skip: node.frozen.skip,
+                    anchor_t: node.frozen.anchor_t,
+                    epochs: node.epochs.iter().map(|e| (e.t0, e.recal, e.identity)).collect(),
+                };
+                let timeline: Vec<(f64, Option<SensorIdentity>)> =
+                    node.epochs.iter().map(|e| (e.t0, e.identity)).collect();
+                data.nodes.insert(
+                    node.node_id,
+                    NodeRestore {
+                        plan,
+                        timeline,
+                        frozen: node.frozen.clone(),
+                        epochs,
+                        epoch_log,
+                    },
+                );
+            }
+        }
+    }
+    Ok(RestoreInit { state, data: Arc::new(data) })
 }
 
 /// A running telemetry service: query it mid-ingest, steer it, join it.
@@ -379,6 +714,34 @@ impl ServiceHandle {
     /// Subscribe to progress events. The full backlog is replayed first,
     /// so a subscriber sees every event in emission order no matter when
     /// it joins (the stream ends with `ServiceComplete`).
+    ///
+    /// # Examples
+    ///
+    /// Count the identification events of a one-node run:
+    ///
+    /// ```
+    /// use gpupower::coordinator::{Fleet, FleetConfig};
+    /// use gpupower::sim::profile::{DriverEpoch, PowerField};
+    /// use gpupower::telemetry::{ServiceEvent, ServiceSource, TelemetryConfig, TelemetryService};
+    ///
+    /// let fleet = Fleet::build(FleetConfig {
+    ///     size: 1,
+    ///     models: vec!["A100 PCIe-40G".into()],
+    ///     driver: DriverEpoch::Post530,
+    ///     field: PowerField::Instant,
+    ///     seed: 11,
+    /// });
+    /// let cfg = TelemetryConfig { duration_s: 0.0, bucket_s: 2.0, ..Default::default() };
+    /// let handle = TelemetryService::start(&fleet, &cfg, &ServiceSource::Sim);
+    /// let events = handle.subscribe();
+    /// let identified = events
+    ///     .iter()
+    ///     .take_while(|ev| *ev != ServiceEvent::ServiceComplete)
+    ///     .filter(|ev| matches!(ev, ServiceEvent::NodeIdentified { .. }))
+    ///     .count();
+    /// assert_eq!(identified, 1);
+    /// handle.join();
+    /// ```
     pub fn subscribe(&self) -> Receiver<ServiceEvent> {
         let (tx, rx) = mpsc::channel();
         let mut state = self.shared.lock().expect("telemetry state poisoned");
@@ -390,15 +753,68 @@ impl ServiceHandle {
     }
 
     /// Send a control command; `false` when it could not be accepted
-    /// (unknown node).
+    /// (unknown node, or a checkpoint request with no directory
+    /// configured).
+    ///
+    /// # Examples
+    ///
+    /// ```no_run
+    /// # use gpupower::coordinator::{Fleet, FleetConfig};
+    /// # use gpupower::sim::profile::{DriverEpoch, PowerField};
+    /// use gpupower::telemetry::{ControlMsg, ServiceSource, TelemetryConfig, TelemetryService};
+    /// # let fleet = Fleet::build(FleetConfig { size: 4, models: vec![],
+    /// #     driver: DriverEpoch::Post530, field: PowerField::Instant, seed: 1 });
+    /// let handle =
+    ///     TelemetryService::start(&fleet, &TelemetryConfig::default(), &ServiceSource::Sim);
+    /// handle.enable_checkpoints(std::path::Path::new("ckpts"));
+    /// assert!(handle.control(ControlMsg::Recalibrate { node: 3 }));
+    /// assert!(handle.control(ControlMsg::Checkpoint), "sink configured above");
+    /// assert!(!handle.control(ControlMsg::Recalibrate { node: 99 }), "unknown node");
+    /// handle.control(ControlMsg::Shutdown);
+    /// ```
     pub fn control(&self, msg: ControlMsg) -> bool {
         match msg {
             ControlMsg::Recalibrate { node } => self.board.request(node),
+            ControlMsg::Checkpoint => {
+                let mut state = self.shared.lock().expect("telemetry state poisoned");
+                if state.sink.is_none() {
+                    return false;
+                }
+                write_checkpoint(&mut state, &self.meta);
+                true
+            }
             ControlMsg::Shutdown => {
                 self.stop.store(true, Ordering::Relaxed);
                 true
             }
         }
+    }
+
+    /// Configure checkpoint persistence: from now on a checkpoint file
+    /// (`checkpoint-<seq>.gpck`) is written into `dir` at every
+    /// `WindowClosed` — the moment all state it covers is final — and on
+    /// every explicit [`ControlMsg::Checkpoint`]. Writes happen under the
+    /// service lock (checkpoints are small: frozen prefixes + identities),
+    /// and each file is published by atomic rename so a crash mid-write
+    /// never leaves a torn file under a checkpoint name. Numbering
+    /// continues past any `checkpoint-*.gpck` already in `dir`, so a
+    /// restored run's files never overwrite (or sort below) the pre-crash
+    /// ones — "pick the newest file" stays correct across repeated
+    /// crashes.
+    pub fn enable_checkpoints(&self, dir: &std::path::Path) {
+        let seq = next_checkpoint_seq(dir);
+        let mut state = self.shared.lock().expect("telemetry state poisoned");
+        state.sink = Some(CheckpointSink { dir: dir.to_path_buf(), seq });
+    }
+
+    /// Build an in-memory [`Checkpoint`] of the service *now* — exactly
+    /// what the write hooks persist. Callers can
+    /// [`encode`](Checkpoint::encode) /
+    /// [`save_atomic`](Checkpoint::save_atomic) it themselves or hand it
+    /// straight to [`TelemetryService::start_from`].
+    pub fn checkpoint(&self) -> Checkpoint {
+        let state = self.shared.lock().expect("telemetry state poisoned");
+        build_checkpoint(&state, &self.meta)
     }
 
     /// Convenience for [`ControlMsg::Recalibrate`].
@@ -497,7 +913,10 @@ fn snapshot_locked(
 /// node's *freeze watermark* (not merely its last reading — the corrected
 /// account writes up to a latency shift backwards, and a not-yet-identified
 /// epoch defers readings entirely; see `NodeAccountant::frozen_before`)
-/// must have passed the window's end.
+/// must have passed the window's end. Each close triggers a checkpoint
+/// write when a sink is configured — the moment everything a checkpoint
+/// records is final, which is what keeps every written file
+/// self-consistent.
 fn check_windows(state: &mut LiveState, meta: &ServiceMeta) {
     if state.stats.nodes < meta.n_total {
         return; // some nodes haven't started streaming yet
@@ -511,6 +930,7 @@ fn check_windows(state: &mut LiveState, meta: &ServiceMeta) {
             .map(|n| n.acct.frozen_before())
             .fold(f64::INFINITY, f64::min)
     };
+    let before = state.windows_closed;
     while state.windows_closed < meta.tile_bounds.len()
         && meta.tile_bounds[state.windows_closed].1 <= watermark
     {
@@ -518,6 +938,118 @@ fn check_windows(state: &mut LiveState, meta: &ServiceMeta) {
         let index = state.windows_closed;
         state.windows_closed += 1;
         state.emit(ServiceEvent::WindowClosed { index, t0, t1 });
+    }
+    if state.windows_closed > before && state.sink.is_some() {
+        write_checkpoint(state, meta);
+    }
+}
+
+/// Serialize the live state into a [`Checkpoint`]: finished nodes
+/// verbatim (truth included), in-flight nodes as their frozen prefix +
+/// resume position ([`NodeAccountant::export_frozen`]) + epoch history.
+/// Nodes are ordered by id so identical states write identical bytes.
+fn build_checkpoint(state: &LiveState, meta: &ServiceMeta) -> Checkpoint {
+    let ckpt_epochs = |epochs: &[EpochIdentity], log: &[(f64, bool)]| -> Vec<CkptEpoch> {
+        let mut out: Vec<CkptEpoch> = epochs
+            .iter()
+            .enumerate()
+            .map(|(k, e)| CkptEpoch {
+                t0: e.t0,
+                recal: log.get(k).map(|&(_, r)| r).unwrap_or(false),
+                identity: Some(e.identity),
+            })
+            .collect();
+        if log.len() > epochs.len() {
+            // the still-open epoch: announced, not yet identified
+            let &(t0, recal) = log.last().unwrap();
+            out.push(CkptEpoch { t0, recal, identity: None });
+        }
+        out
+    };
+
+    let mut nodes: Vec<NodeCheckpoint> =
+        Vec::with_capacity(state.finished_accounts.len() + state.inflight.len());
+    for (i, acct) in state.finished_accounts.iter().enumerate() {
+        let entry = &state.finished_entries[i];
+        let log = &state.finished_logs[i];
+        nodes.push(NodeCheckpoint {
+            node_id: acct.node_id,
+            stage: if acct.complete { NodeStage::Complete } else { NodeStage::Partial },
+            model: acct.model.to_string(),
+            generation: acct.generation,
+            readings: acct.readings,
+            epochs: ckpt_epochs(&entry.epochs, log),
+            frozen: FrozenState {
+                frozen_n: acct.frozen_n,
+                skip: 0,
+                anchor_t: f64::NEG_INFINITY,
+                naive_j: acct.naive_j.clone(),
+                corrected_j: acct.corrected_j.clone(),
+                bound_j: acct.bound_j.clone(),
+            },
+            truth_j: Some(acct.truth_j.clone()),
+        });
+    }
+    let mut live_ids: Vec<usize> = state.inflight.keys().copied().collect();
+    live_ids.sort_unstable();
+    for id in live_ids {
+        let ln = &state.inflight[&id];
+        let frozen = ln.acct.export_frozen();
+        nodes.push(NodeCheckpoint {
+            node_id: id,
+            stage: NodeStage::InFlight,
+            model: ln.model.to_string(),
+            generation: ln.generation,
+            readings: frozen.skip,
+            epochs: ckpt_epochs(&ln.epochs, &ln.epoch_log),
+            frozen,
+            truth_j: None,
+        });
+    }
+    nodes.sort_by_key(|n| n.node_id);
+
+    Checkpoint {
+        fingerprint: meta.fingerprint,
+        windows_closed: state.windows_closed,
+        recalibrations: state.stats.recalibrations,
+        drift_suspected: state.stats.drift_suspected,
+        nodes,
+    }
+}
+
+/// First unused checkpoint sequence number in `dir`: one past the highest
+/// existing `checkpoint-<seq>.gpck`, or 0 for a fresh/unreadable
+/// directory.
+fn next_checkpoint_seq(dir: &std::path::Path) -> u64 {
+    let Ok(entries) = std::fs::read_dir(dir) else { return 0 };
+    entries
+        .flatten()
+        .filter_map(|e| {
+            let name = e.file_name();
+            let name = name.to_str()?;
+            name.strip_prefix("checkpoint-")?.strip_suffix(".gpck")?.parse::<u64>().ok()
+        })
+        .max()
+        .map(|s| s + 1)
+        .unwrap_or(0)
+}
+
+/// Build + persist a checkpoint through the configured sink (no-op
+/// without one), emitting [`ServiceEvent::CheckpointWritten`] on success.
+/// A failed write is reported to stderr and the service keeps running —
+/// persistence is a safety net, not a correctness dependency.
+fn write_checkpoint(state: &mut LiveState, meta: &ServiceMeta) {
+    let Some(sink) = state.sink.as_mut() else { return };
+    let seq = sink.seq;
+    let dir = sink.dir.clone();
+    sink.seq += 1;
+    let ck = build_checkpoint(state, meta);
+    match ck.save_atomic(&dir, seq) {
+        Ok(_path) => {
+            let windows_closed = state.windows_closed;
+            state.emit(ServiceEvent::CheckpointWritten { seq, windows_closed });
+        }
+        Err(e) => eprintln!("[telemetry] checkpoint {seq} write failed: {e}"),
     }
 }
 
@@ -528,25 +1060,43 @@ fn consumer_loop(
     shared: Arc<Mutex<LiveState>>,
     meta: ServiceMeta,
     pool_tx: Sender<Vec<(f64, f64)>>,
+    restore: Option<Arc<RestoreData>>,
 ) {
     for msg in rx {
         let mut state = shared.lock().expect("telemetry state poisoned");
         match msg {
             IngestMsg::NodeStart { node_id, model, generation } => {
                 state.stats.nodes += 1;
-                state.inflight.insert(
-                    node_id,
-                    LiveNode {
+                let node = match restore.as_ref().and_then(|r| r.nodes.get(&node_id)) {
+                    // a checkpointed node resumes: frozen prefix imported
+                    // verbatim, epoch timeline restored, readings counter
+                    // continuing from the skipped prefix
+                    Some(r) => LiveNode {
+                        model,
+                        generation,
+                        acct: NodeAccountant::resume(
+                            meta.spec,
+                            &r.timeline,
+                            &r.frozen,
+                            r.plan.skip,
+                        ),
+                        epochs: r.epochs.clone(),
+                        epoch_log: r.epoch_log.clone(),
+                    },
+                    None => LiveNode {
                         model,
                         generation,
                         acct: NodeAccountant::fresh(meta.spec),
                         epochs: Vec::new(),
+                        epoch_log: Vec::new(),
                     },
-                );
+                };
+                state.inflight.insert(node_id, node);
             }
             IngestMsg::EpochOpen { node_id, t0, recal } => {
                 if let Some(ln) = state.inflight.get_mut(&node_id) {
                     ln.acct.open_epoch(t0);
+                    ln.epoch_log.push((t0, recal));
                 }
                 if recal {
                     state.stats.recalibrations += 1;
@@ -602,6 +1152,7 @@ fn consumer_loop(
                         identity,
                         epochs: ln.epochs,
                     });
+                    state.finished_logs.push(ln.epoch_log);
                 }
                 state.emit(ServiceEvent::NodeComplete { node_id });
                 check_windows(&mut state, &meta);
@@ -644,6 +1195,17 @@ fn producer_worker(ctx: Arc<ProducerCtx>, tx: SyncSender<IngestMsg>) {
             if ctx.stop.load(Ordering::Relaxed) {
                 return;
             }
+            let node_id = match &ctx.plan {
+                ServicePlan::Sim { nodes, .. } => nodes[idx].id,
+                ServicePlan::Replay { .. } => idx,
+            };
+            // a restored service never re-streams a finished node, and a
+            // checkpointed in-flight node resumes from its recorded
+            // position instead of its stream head
+            if ctx.restore.as_ref().map(|r| r.finished.contains(&node_id)).unwrap_or(false) {
+                continue;
+            }
+            let resume = ctx.restore.as_ref().and_then(|r| r.nodes.get(&node_id).map(|n| &n.plan));
             match &ctx.plan {
                 ServicePlan::Sim { nodes, driver, field, timeline, .. } => {
                     let node = &nodes[idx];
@@ -669,6 +1231,7 @@ fn producer_worker(ctx: Arc<ProducerCtx>, tx: SyncSender<IngestMsg>) {
                                 &emit,
                                 Some(ctx.board.as_ref()),
                                 Some(ctx.stop.as_ref()),
+                                resume,
                             );
                         }
                         WorkerSource::Faulty(faulty) => {
@@ -694,6 +1257,7 @@ fn producer_worker(ctx: Arc<ProducerCtx>, tx: SyncSender<IngestMsg>) {
                                 &emit,
                                 Some(ctx.board.as_ref()),
                                 Some(ctx.stop.as_ref()),
+                                resume,
                             );
                         }
                         WorkerSource::Replay(_) => unreachable!("sim plan with replay source"),
@@ -713,6 +1277,7 @@ fn producer_worker(ctx: Arc<ProducerCtx>, tx: SyncSender<IngestMsg>) {
                                 &emit,
                                 Some(ctx.board.as_ref()),
                                 Some(ctx.stop.as_ref()),
+                                resume,
                             );
                         }
                     }

@@ -92,6 +92,7 @@ pub struct NodeTimeline {
 }
 
 impl NodeTimeline {
+    /// No breaks planned?
     pub fn is_empty(&self) -> bool {
         self.breaks.is_empty()
     }
@@ -123,8 +124,11 @@ impl NodeTimeline {
 /// Static metadata a source announces ahead of its reading stream.
 #[derive(Debug, Clone, Copy)]
 pub struct SourceInfo {
+    /// The node's fleet id.
     pub node_id: usize,
+    /// Catalogue model name (or a placeholder for unrecognised logs).
     pub model: &'static str,
+    /// Architecture generation.
     pub generation: Generation,
 }
 
@@ -198,6 +202,7 @@ pub struct SimSource {
 }
 
 impl SimSource {
+    /// An unprepared source (call [`Self::prepare`] per node).
     pub fn new() -> Self {
         SimSource::default()
     }
@@ -408,6 +413,8 @@ pub struct ReplaySource {
 }
 
 impl ReplaySource {
+    /// An unprepared source (stage a log with
+    /// [`Self::prepare_from_log`] per node).
     pub fn new() -> Self {
         ReplaySource::default()
     }

@@ -662,6 +662,377 @@ fn committed_example_log_replays_through_the_service() {
     assert_eq!(whole.truth_j, 0.0, "no PMD for a recorded log");
 }
 
+/// ISSUE 5 acceptance (tentpole): kill a service mid-ingest after a
+/// checkpoint, restore, replay the remaining stream — the final fleet
+/// account equals the uninterrupted run's bit-for-bit for every bucket
+/// frozen at checkpoint time, the totals land within the coverage-derived
+/// bound, and every already-identified epoch restores **without
+/// re-calibrating**.
+#[test]
+fn checkpoint_restore_resumes_the_uninterrupted_account() {
+    use gpupower::telemetry::{
+        self, Checkpoint, ServiceEvent, ServiceSource, TelemetryConfig, TelemetryService,
+    };
+
+    let fleet = Fleet::build(FleetConfig {
+        size: 2,
+        models: vec!["A100 PCIe-40G".into()],
+        driver: DriverEpoch::Post530,
+        field: PowerField::Instant,
+        seed: 103,
+    });
+    let cfg = TelemetryConfig {
+        duration_s: 30.0,
+        bucket_s: 2.0,
+        workers: 1,
+        shard_size: 1,
+        ..Default::default()
+    };
+    let reference = telemetry::run_service(&fleet, &cfg);
+
+    // run again, checkpoint once node 0's identity is final, then "crash"
+    let handle = TelemetryService::start(&fleet, &cfg, &ServiceSource::Sim);
+    let events = handle.subscribe();
+    let mut ck: Option<Checkpoint> = None;
+    for ev in events {
+        match ev {
+            ServiceEvent::NodeIdentified { node_id: 0, .. } if ck.is_none() => {
+                ck = Some(handle.checkpoint());
+                break;
+            }
+            ServiceEvent::ServiceComplete => break,
+            _ => {}
+        }
+    }
+    let ck = ck.expect("NodeIdentified must fire for node 0");
+    drop(handle.shutdown()); // the collector dies; its partial run is discarded
+
+    // the checkpoint's frozen buckets are already bit-for-bit the
+    // uninterrupted run's — the freeze-watermark invariant the format
+    // relies on — and at least one node froze real state
+    assert!(ck.nodes.iter().any(|n| n.frozen.frozen_n > 0), "checkpoint must freeze state");
+    for node in &ck.nodes {
+        let want = reference.accounts.nodes.iter().find(|n| n.node_id == node.node_id).unwrap();
+        for b in 0..node.frozen.frozen_n {
+            assert_eq!(
+                node.frozen.naive_j[b].to_bits(),
+                want.naive_j[b].to_bits(),
+                "node {} frozen naive[{b}]",
+                node.node_id
+            );
+            assert_eq!(
+                node.frozen.corrected_j[b].to_bits(),
+                want.corrected_j[b].to_bits(),
+                "node {} frozen corrected[{b}]",
+                node.node_id
+            );
+        }
+    }
+
+    // round-trip through the real on-disk format
+    let dir = std::env::temp_dir().join(format!("gpck-acceptance-{}", std::process::id()));
+    let path = ck.save_atomic(&dir, 0).expect("checkpoint writes");
+    let loaded = Checkpoint::load(&path).expect("checkpoint loads");
+    assert_eq!(loaded, ck, "save/load round-trips exactly");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // restore and drain the remaining stream
+    let restored = TelemetryService::start_from(&loaded, &fleet, &cfg, &ServiceSource::Sim)
+        .expect("fingerprint matches");
+    let events = restored.subscribe();
+    let snap = restored.join();
+    let recal_events = events
+        .try_iter()
+        .filter(|ev| matches!(ev, ServiceEvent::Recalibrated { .. }))
+        .count();
+    assert_eq!(recal_events, 0, "restored identities must not re-calibrate");
+    assert_eq!(snap.stats.recalibrations, 0);
+
+    // identities: restored registry is the uninterrupted one, bit-for-bit
+    assert_eq!(snap.registry.entries.len(), reference.registry.entries.len());
+    for (got, want) in snap.registry.entries.iter().zip(&reference.registry.entries) {
+        assert_eq!(got.node_id, want.node_id);
+        assert_eq!(got.identity, want.identity, "node {}", got.node_id);
+        assert_eq!(got.epochs, want.epochs, "node {}", got.node_id);
+    }
+
+    // accounts: readings identical; checkpoint-frozen buckets bit-for-bit;
+    // whole-run totals equal to numerical identity and inside the bound
+    assert_eq!(snap.stats.readings, reference.stats.readings);
+    for node in &loaded.nodes {
+        let got = snap.accounts.nodes.iter().find(|n| n.node_id == node.node_id).unwrap();
+        let want = reference.accounts.nodes.iter().find(|n| n.node_id == node.node_id).unwrap();
+        assert_eq!(got.readings, want.readings, "node {}", node.node_id);
+        for b in 0..node.frozen.frozen_n {
+            assert_eq!(
+                got.naive_j[b].to_bits(),
+                want.naive_j[b].to_bits(),
+                "node {} naive[{b}] (frozen at checkpoint)",
+                node.node_id
+            );
+            assert_eq!(
+                got.corrected_j[b].to_bits(),
+                want.corrected_j[b].to_bits(),
+                "node {} corrected[{b}] (frozen at checkpoint)",
+                node.node_id
+            );
+            assert_eq!(
+                got.bound_j[b].to_bits(),
+                want.bound_j[b].to_bits(),
+                "node {} bound[{b}] (frozen at checkpoint)",
+                node.node_id
+            );
+        }
+    }
+    let whole_ref = reference.fleet_energy(0.0, reference.duration_s);
+    let whole_res = snap.fleet_energy(0.0, snap.duration_s);
+    let close = |a: f64, b: f64, what: &str| {
+        assert!((a - b).abs() <= 1e-6 * b.abs().max(1.0), "{what}: {a} vs {b}");
+    };
+    close(whole_res.truth_j, whole_ref.truth_j, "truth");
+    close(whole_res.naive_j, whole_ref.naive_j, "naive");
+    close(whole_res.corrected_j, whole_ref.corrected_j, "corrected");
+    assert!(
+        (whole_res.corrected_j - whole_ref.corrected_j).abs() <= whole_ref.bound_j.max(1e-9),
+        "restored total inside the coverage-derived bound: {} vs {} (±{})",
+        whole_res.corrected_j,
+        whole_ref.corrected_j,
+        whole_ref.bound_j
+    );
+}
+
+/// ISSUE 5 satellites: restore edge cases. A checkpoint with zero
+/// identified nodes restores into a run bit-for-bit identical to a fresh
+/// one; a fleet/config mismatch is rejected with a line-numbered error;
+/// a truncated file is detected and refused.
+#[test]
+fn checkpoint_restore_edge_cases() {
+    use gpupower::telemetry::persist::{NodeCheckpoint, NodeStage};
+    use gpupower::telemetry::{
+        self, Checkpoint, FrozenState, ServiceSource, TelemetryConfig, TelemetryService,
+    };
+
+    let fleet = Fleet::build(FleetConfig {
+        size: 2,
+        models: vec!["A100 PCIe-40G".into()],
+        driver: DriverEpoch::Post530,
+        field: PowerField::Instant,
+        seed: 104,
+    });
+    let cfg = TelemetryConfig { duration_s: 0.0, bucket_s: 2.0, ..Default::default() };
+    let reference = telemetry::run_service(&fleet, &cfg);
+
+    // grab the (deterministic) fingerprint without finishing a run
+    let probe = TelemetryService::start(&fleet, &cfg, &ServiceSource::Sim);
+    let fingerprint = probe.checkpoint().fingerprint;
+    drop(probe.shutdown());
+
+    // 1. zero identified nodes: one node never started, one in flight with
+    // its epoch not yet announced — both restore as fresh streams and the
+    // run reproduces the uninterrupted snapshot bit-for-bit
+    let empty = Checkpoint {
+        fingerprint,
+        windows_closed: 0,
+        recalibrations: 0,
+        drift_suspected: 0,
+        nodes: vec![NodeCheckpoint {
+            node_id: 0,
+            stage: NodeStage::InFlight,
+            model: "A100 PCIe-40G".into(),
+            generation: gpupower::sim::profile::Generation::AmpereGa100,
+            readings: 0,
+            epochs: Vec::new(),
+            frozen: FrozenState {
+                frozen_n: 0,
+                skip: 0,
+                anchor_t: f64::NEG_INFINITY,
+                naive_j: Vec::new(),
+                corrected_j: Vec::new(),
+                bound_j: Vec::new(),
+            },
+            truth_j: None,
+        }],
+    };
+    let decoded = Checkpoint::decode(&empty.encode()).unwrap();
+    let snap = TelemetryService::start_from(&decoded, &fleet, &cfg, &ServiceSource::Sim)
+        .expect("zero-identified checkpoint restores")
+        .join();
+    assert_eq!(snap.stats.nodes, reference.stats.nodes);
+    assert_eq!(snap.stats.readings, reference.stats.readings);
+    for (got, want) in snap.accounts.nodes.iter().zip(&reference.accounts.nodes) {
+        assert_eq!(got.node_id, want.node_id);
+        assert_eq!(got.identity, want.identity);
+        for b in 0..snap.accounts.spec.n {
+            assert_eq!(got.naive_j[b].to_bits(), want.naive_j[b].to_bits());
+            assert_eq!(got.corrected_j[b].to_bits(), want.corrected_j[b].to_bits());
+            assert_eq!(got.truth_j[b].to_bits(), want.truth_j[b].to_bits());
+        }
+    }
+
+    // 2. fleet/config mismatches are refused with line-numbered errors,
+    // never a silently corrupted account
+    let wrong_seed = TelemetryConfig { seed: 9999, ..cfg };
+    let err = TelemetryService::start_from(&decoded, &fleet, &wrong_seed, &ServiceSource::Sim)
+        .unwrap_err();
+    assert!(err.contains("checkpoint line 2") && err.contains("seed"), "{err}");
+
+    let other_fleet = Fleet::build(FleetConfig {
+        size: 5,
+        models: vec!["A100 PCIe-40G".into()],
+        driver: DriverEpoch::Post530,
+        field: PowerField::Instant,
+        seed: 104,
+    });
+    let err = TelemetryService::start_from(&decoded, &other_fleet, &cfg, &ServiceSource::Sim)
+        .unwrap_err();
+    assert!(err.contains("checkpoint line 2") && err.contains("fleet size"), "{err}");
+
+    let err = TelemetryService::start_from(
+        &decoded,
+        &fleet,
+        &cfg,
+        &ServiceSource::Faulty(telemetry::FaultPlan { dropout: 0.1, ..Default::default() }),
+    )
+    .unwrap_err();
+    assert!(err.contains("source kind"), "{err}");
+
+    // 3. a torn/truncated checkpoint file is detected and refused
+    let dir = std::env::temp_dir().join(format!("gpck-torn-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let bytes = decoded.encode();
+    let torn = dir.join("torn.gpck");
+    std::fs::write(&torn, &bytes[..bytes.len() - 11]).unwrap();
+    let err = Checkpoint::load(&torn).unwrap_err();
+    assert!(err.contains("checksum") || err.contains("truncated"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// ISSUE 5: the `WindowClosed` write hook persists a checkpoint per
+/// closed window; the final file holds every node complete and restores
+/// into the finished snapshot without re-streaming anything.
+#[test]
+fn window_closed_hook_writes_restorable_checkpoints() {
+    use gpupower::telemetry::persist::NodeStage;
+    use gpupower::telemetry::{
+        Checkpoint, ServiceEvent, ServiceSource, TelemetryConfig, TelemetryService,
+    };
+
+    let fleet = Fleet::build(FleetConfig {
+        size: 2,
+        models: vec!["A100 PCIe-40G".into()],
+        driver: DriverEpoch::Post530,
+        field: PowerField::Instant,
+        seed: 105,
+    });
+    let cfg = TelemetryConfig { duration_s: 0.0, windows: 2, bucket_s: 2.0, ..Default::default() };
+    let reference = gpupower::telemetry::run_service(&fleet, &cfg);
+
+    let dir = std::env::temp_dir().join(format!("gpck-hook-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let handle = TelemetryService::start(&fleet, &cfg, &ServiceSource::Sim);
+    handle.enable_checkpoints(&dir);
+    let events = handle.subscribe();
+    let snap = handle.join();
+    let written: Vec<u64> = events
+        .try_iter()
+        .filter_map(|ev| match ev {
+            ServiceEvent::CheckpointWritten { seq, .. } => Some(seq),
+            _ => None,
+        })
+        .collect();
+    assert!(!written.is_empty(), "closing windows must write checkpoints");
+    assert_eq!(snap.windows().len(), 2);
+
+    // the newest checkpoint holds the whole finished fleet…
+    let last = written.iter().max().unwrap();
+    let path = dir.join(format!("checkpoint-{last:06}.gpck"));
+    let ck = Checkpoint::load(&path).expect("published checkpoint loads");
+    assert_eq!(ck.nodes.len(), 2);
+    assert!(ck.nodes.iter().all(|n| n.stage == NodeStage::Complete));
+    assert_eq!(ck.windows_closed, 2);
+
+    // …and restores into the finished snapshot with nothing re-streamed
+    let restored =
+        TelemetryService::start_from(&ck, &fleet, &cfg, &ServiceSource::Sim).unwrap().join();
+    assert_eq!(restored.stats.readings, reference.stats.readings);
+    assert_eq!(restored.accounts.nodes.len(), 2);
+    for (got, want) in restored.accounts.nodes.iter().zip(&reference.accounts.nodes) {
+        assert_eq!(got.node_id, want.node_id);
+        assert_eq!(got.identity, want.identity);
+        assert!(got.complete);
+        for b in 0..restored.accounts.spec.n {
+            assert_eq!(got.naive_j[b].to_bits(), want.naive_j[b].to_bits());
+            assert_eq!(got.corrected_j[b].to_bits(), want.corrected_j[b].to_bits());
+            assert_eq!(got.bound_j[b].to_bits(), want.bound_j[b].to_bits());
+            assert_eq!(got.truth_j[b].to_bits(), want.truth_j[b].to_bits());
+        }
+    }
+    let wr = reference.fleet_energy(0.0, reference.duration_s);
+    let wg = restored.fleet_energy(0.0, restored.duration_s);
+    assert_eq!(wg.truth_j.to_bits(), wr.truth_j.to_bits());
+    assert_eq!(wg.naive_j.to_bits(), wr.naive_j.to_bits());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// ISSUE 5 satellite: the committed golden checkpoint fixture decodes
+/// exactly as `docs/CHECKPOINT_FORMAT.md` specifies, and re-encoding the
+/// decoded value reproduces the committed bytes — pinning both directions
+/// of the format against drift.
+#[test]
+fn golden_checkpoint_fixture_matches_the_documented_format() {
+    use gpupower::sim::profile::Generation;
+    use gpupower::telemetry::persist::{NodeStage, SourceKind};
+    use gpupower::telemetry::{Checkpoint, SensorClass};
+
+    let bytes: &[u8] = include_bytes!("../../examples/checkpoint_golden.gpck");
+    assert_eq!(&bytes[..7], b"GPCK 1\n", "magic + version line");
+    assert_eq!(bytes.len(), 393, "fixture size is part of the documented example");
+
+    let ck = Checkpoint::decode(bytes).expect("golden fixture decodes");
+    let fp = &ck.fingerprint;
+    assert_eq!(fp.seed, 7);
+    assert_eq!(fp.n_total, 1);
+    assert_eq!(fp.windows, 1);
+    assert_eq!(fp.spec_n, 10);
+    assert_eq!(fp.duration_s.to_bits(), 10.0f64.to_bits());
+    assert_eq!(fp.window_s.to_bits(), 10.0f64.to_bits());
+    assert_eq!(fp.bucket_s.to_bits(), 1.0f64.to_bits());
+    assert_eq!(fp.poll_period_s.to_bits(), 0.002f64.to_bits());
+    assert_eq!(fp.source_kind, SourceKind::Sim);
+    assert_eq!(fp.source_digest, 0);
+    assert_eq!(fp.fleet_digest, 0);
+    assert_eq!(ck.windows_closed, 0);
+    assert_eq!(ck.recalibrations, 0);
+    assert_eq!(ck.drift_suspected, 0);
+
+    assert_eq!(ck.nodes.len(), 1);
+    let node = &ck.nodes[0];
+    assert_eq!(node.node_id, 0);
+    assert_eq!(node.stage, NodeStage::InFlight);
+    assert_eq!(node.model, "A100 PCIe-40G");
+    assert_eq!(node.generation, Generation::AmpereGa100);
+    assert_eq!(node.readings, 119, "in-flight records carry readings == skip");
+    assert_eq!(node.frozen.skip, 119);
+    assert_eq!(node.frozen.anchor_t.to_bits(), 1.9f64.to_bits());
+    assert_eq!(node.epochs.len(), 1);
+    let ep = &node.epochs[0];
+    assert_eq!(ep.t0, 0.0);
+    assert!(!ep.recal);
+    let id = ep.identity.expect("epoch 0 is identified");
+    assert_eq!(id.class, SensorClass::Boxcar);
+    assert_eq!(id.update_s.map(f64::to_bits), Some(0.1f64.to_bits()));
+    assert_eq!(id.window_s.map(f64::to_bits), Some(0.025f64.to_bits()));
+    assert_eq!(id.smi_rise_s, None);
+    assert_eq!(node.frozen.frozen_n, 2);
+    assert_eq!(node.frozen.naive_j, vec![150.0, 151.5]);
+    assert_eq!(node.frozen.corrected_j, vec![149.0, 150.25]);
+    assert_eq!(node.frozen.bound_j, vec![10.0, 0.5]);
+    assert!(node.truth_j.is_none(), "in-flight nodes carry no truth");
+
+    // the committed bytes are exactly what the current encoder writes
+    assert_eq!(ck.encode(), bytes, "encoder drift against the golden fixture");
+}
+
 /// Extension modules compose: a recorded production trace replayed on a
 /// multi-GPU host, polled serially, with the Kepler RC distortion
 /// corrected before integration.
