@@ -290,5 +290,119 @@ fn main() {
         assert_eq!(short.stats.nodes, nodes, "every node accounted");
     }
 
+    // --- L6: sharded accounting — the committed BENCH trajectory ---
+    // ISSUE 6 acceptance: readings/s at 1/2/4/8 accounting shards,
+    // allocations per reading, and mid-ingest snapshot latency, written
+    // as machine-readable JSON (BENCH_TELEMETRY_OUT) so the repo carries
+    // a perf trajectory (BENCH_telemetry.json) that CI can regress
+    // against. BENCH_SMOKE=1 shrinks the fleet/window for CI runners.
+    {
+        use gpupower::telemetry::{
+            ServiceEvent, ServiceSource, TelemetryConfig, TelemetryService,
+        };
+
+        let smoke = std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+        let (default_nodes, duration_s) = if smoke { (8usize, 12.0) } else { (32usize, 30.0) };
+        let nodes: usize = std::env::var("SHARD_BENCH_NODES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default_nodes);
+        let fleet = Fleet::build(FleetConfig {
+            size: nodes,
+            models: vec!["A100".into(), "3090".into()],
+            driver: DriverEpoch::Post530,
+            field: PowerField::Instant,
+            seed: 6,
+        });
+        let shard_counts = [1usize, 2, 4, 8];
+        // (shards, readings/s, allocs/reading, mid-ingest snapshot µs)
+        let mut entries: Vec<(usize, f64, f64, f64)> = Vec::new();
+        let mut reference_readings: Option<u64> = None;
+
+        for &shards in &shard_counts {
+            let cfg = TelemetryConfig { duration_s, shards, ..Default::default() };
+
+            // mid-ingest snapshot latency: wait for the first identity
+            // (ingest is ramped and accounts are non-trivial), then time
+            // one live snapshot while every shard keeps ingesting
+            let handle = TelemetryService::start(&fleet, &cfg, &ServiceSource::Sim);
+            let events = handle.subscribe();
+            let mut snap_us = 0.0f64;
+            for ev in &events {
+                if matches!(ev, ServiceEvent::NodeIdentified { .. }) {
+                    let t = std::time::Instant::now();
+                    let live = handle.snapshot();
+                    snap_us = t.elapsed().as_secs_f64() * 1e6;
+                    assert!(live.accounts.nodes.len() <= nodes);
+                    break;
+                }
+            }
+            drop(events);
+            handle.join();
+
+            // throughput + allocations over a full drain
+            let a0 = allocs_now();
+            let mut out = None;
+            let mut r = bench(&format!("telemetry {nodes} nodes, {shards} shard(s)"), 0, 1, || {
+                out = Some(gpupower::telemetry::run_service_with(
+                    &fleet,
+                    &cfg,
+                    &ServiceSource::Sim,
+                ));
+            });
+            let run_allocs = allocs_now() - a0;
+            let snap = out.unwrap();
+            match reference_readings {
+                None => reference_readings = Some(snap.stats.readings),
+                Some(want) => assert_eq!(
+                    snap.stats.readings, want,
+                    "{shards} shards must ingest the identical reading count"
+                ),
+            }
+            let readings_per_s = snap.stats.readings as f64 / (r.mean_ms / 1000.0);
+            let allocs_per_reading = run_allocs as f64 / snap.stats.readings.max(1) as f64;
+            r.note = format!(
+                "{:.2} Mreadings/s, {allocs_per_reading:.3} allocs/reading, snapshot {snap_us:.0} µs",
+                readings_per_s / 1e6
+            );
+            rows.push(r);
+            entries.push((shards, readings_per_s, allocs_per_reading, snap_us));
+        }
+
+        let base = entries[0].1;
+        println!("\ntelemetry shard trajectory ({nodes} nodes, {duration_s:.0} s window):");
+        for &(shards, rps, apr, us) in &entries {
+            println!(
+                "  {shards} shard(s): {:.2} Mreadings/s ({:.2}x), {apr:.3} allocs/reading, snapshot {us:.0} µs",
+                rps / 1e6,
+                rps / base
+            );
+        }
+
+        // machine-readable trajectory for BENCH_telemetry.json
+        if let Ok(path) = std::env::var("BENCH_TELEMETRY_OUT") {
+            let mut json = String::new();
+            json.push_str("{\n");
+            json.push_str("  \"schema\": \"bench_telemetry/v1\",\n");
+            json.push_str(&format!(
+                "  \"mode\": \"{}\",\n",
+                if smoke { "smoke" } else { "full" }
+            ));
+            json.push_str(&format!("  \"nodes\": {nodes},\n"));
+            json.push_str(&format!("  \"duration_s\": {duration_s:.1},\n"));
+            json.push_str("  \"shards\": {\n");
+            for (i, &(shards, rps, apr, us)) in entries.iter().enumerate() {
+                json.push_str(&format!(
+                    "    \"{shards}\": {{\"readings_per_s\": {:.0}, \"allocs_per_reading\": {apr:.4}, \"snapshot_latency_us\": {us:.1}}}{}\n",
+                    rps,
+                    if i + 1 < entries.len() { "," } else { "" }
+                ));
+            }
+            json.push_str("  }\n}\n");
+            std::fs::write(&path, json).expect("write BENCH_TELEMETRY_OUT");
+            println!("telemetry trajectory written to {path}");
+        }
+    }
+
     report("hot-path benches", &rows);
 }

@@ -44,7 +44,7 @@ COMMANDS:
                             datacenter fleet campaign (streaming scheduler;
                             campaign-seed 0 = canonical boot phases)
   telemetry [--gpus N] [--duration S] [--windows N] [--bucket S]
-            [--model NAME ...] [--shard N] [--batch N] [--queue N]
+            [--model NAME ...] [--shard N] [--shards N] [--batch N] [--queue N]
             [--source sim|faulty|replay] [--replay-log PATH ...]
             [--dropout P] [--outage T:D ...] [--stuck T:D ...]
             [--restart T ...] [--driver-update T:EPOCH ...]
@@ -492,6 +492,7 @@ fn main() -> Result<()> {
                 batch_size: args.usize_flag("--batch", 512),
                 queue_depth: args.usize_flag("--queue", 64),
                 shard_size: args.usize_flag("--shard", 16),
+                shards: args.usize_flag("--shards", 0),
                 seed,
                 ..Default::default()
             };

@@ -525,9 +525,88 @@ impl NodeAccountant {
     }
 
     /// Feed a batch of readings.
+    ///
+    /// The hot path: once a node is in its steady state — every epoch
+    /// identified, nothing pending, the open epoch current — the
+    /// overwhelmingly common reading extends the stream *inside one
+    /// bucket* with no edge crossing. This loop recognises that case per
+    /// reading and handles it with exactly one trapezoid per account
+    /// (the same [`integrate_clipped_points`] call [`Self::add_segment`]
+    /// would issue, over the same clip window, so the result is
+    /// bit-for-bit identical), skipping the per-bucket scans, the anchor
+    /// edge walk, and the epoch/pending dispatch of the general
+    /// [`Self::push_point`] path. Any reading that fails a guard —
+    /// bucket-crossing, edge-crossing, shift straddling a boundary, out
+    /// of range — falls back to `push_point`, which is the unabridged
+    /// arithmetic. Invariance is pinned by
+    /// `batched_fast_path_matches_single_push_bitwise`.
     pub fn push_points(&mut self, points: &[(f64, f64)]) {
+        let steady = !self.epochs.is_empty()
+            && self.identified == self.epochs.len()
+            && self.cur + 1 == self.epochs.len()
+            && self.pending.is_empty()
+            && self.corr_last_epoch == self.cur
+            && match (self.naive_last, self.corr_last) {
+                (Some(a), Some(b)) => a == b,
+                _ => false,
+            };
+        if !steady {
+            // cold: calibration, identification, or a restart in flight —
+            // the general path handles every transition (and epochs never
+            // change inside a batch, so re-checking per reading is moot)
+            for &(t, w) in points {
+                self.push_point(t, w);
+            }
+            return;
+        }
+        let ep = self.epochs[self.cur];
+        let shift = ep.shift_s;
+        let frac = 1.0 - ep.coverage;
+        let spec = self.spec;
         for &(t, w) in points {
-            self.push_point(t, w);
+            // `steady` holds across the batch: a fast reading restores it
+            // by construction and a fallback `push_point` re-establishes
+            // it (both watermarks land on (t, w), the epoch is unchanged)
+            let (lt, lw) = self.naive_last.expect("steady state has a watermark");
+            let next_edge = if self.edge_next <= spec.n {
+                spec.t0 + self.edge_next as f64 * spec.bucket_s
+            } else {
+                f64::INFINITY
+            };
+            // raw segment: strictly forward, inside one unfrozen bucket,
+            // short of the next anchor edge
+            let b = match (spec.index_of(lt), spec.index_of(t)) {
+                (Some(bl), Some(bt))
+                    if bl == bt && bt >= self.floor_n && t > lt && t < next_edge =>
+                {
+                    bt
+                }
+                _ => {
+                    self.push_point(t, w);
+                    continue;
+                }
+            };
+            // shifted segment: same constraints in the corrected frame
+            let (slt, st) = (lt - shift, t - shift);
+            let cb = match (spec.index_of(slt), spec.index_of(st)) {
+                (Some(cl), Some(ct)) if cl == ct && ct >= self.floor_n && st > slt => ct,
+                _ => {
+                    self.push_point(t, w);
+                    continue;
+                }
+            };
+            self.readings += 1;
+            self.min_w[b] = self.min_w[b].min(w);
+            self.max_w[b] = self.max_w[b].max(w);
+            let (lo, hi) = spec.bounds(b);
+            self.naive_j[b] += integrate_clipped_points(&[(lt, lw), (t, w)], lo, hi);
+            let (clo, chi) = spec.bounds(cb);
+            self.corrected_j[cb] += integrate_clipped_points(&[(slt, lw), (st, w)], clo, chi);
+            // add_unobserved's overlap for an interior segment is the
+            // segment itself
+            self.uncovered_s[b] += frac * (t - lt);
+            self.naive_last = Some((t, w));
+            self.corr_last = Some((t, w));
         }
     }
 
@@ -1092,6 +1171,83 @@ mod tests {
         assert!((q.truth_j - 180.0).abs() < 1e-9);
         let none = acc.energy_between(10.0, 11.0);
         assert_eq!(none.truth_j, 0.0);
+    }
+
+    /// The batched fast path must be indistinguishable — bit for bit,
+    /// every account and bookkeeping vector — from pushing the same
+    /// readings one at a time, across batch sizes, bucket/edge crossings,
+    /// a latency shift that straddles bucket boundaries, an epoch
+    /// restart, and out-of-order readings that force the fallback.
+    #[test]
+    fn batched_fast_path_matches_single_push_bitwise() {
+        use crate::telemetry::registry::SensorClass;
+        let spec = BucketSpec::new(6.0, 1.0);
+        let boxcar = |w: f64| SensorIdentity {
+            class: SensorClass::Boxcar,
+            update_s: Some(0.1),
+            window_s: Some(w),
+            smi_rise_s: None,
+        };
+        let epochs = vec![
+            EpochIdentity { t0: 0.0, identity: boxcar(0.05) },
+            EpochIdentity { t0: 3.1, identity: boxcar(0.025) },
+        ];
+        // an irregular stream: dense in-bucket runs (fast path), edge
+        // crossings, a point exactly on a bucket edge, a duplicate
+        // timestamp, and one out-of-order reading
+        let mut pts: Vec<(f64, f64)> = Vec::new();
+        let mut t = 0.05f64;
+        let mut k = 0u64;
+        while t < 5.9 {
+            let w = 100.0 + ((k * 37) % 115) as f64 * 1.7;
+            pts.push((t, w));
+            t += 0.07 + ((k * 13) % 5) as f64 * 0.011;
+            k += 1;
+        }
+        pts.push((2.0, 150.0)); // out of order: forces the fallback
+        pts.push((2.0, 150.0)); // duplicate timestamp
+        pts.push((5.95, 120.0));
+
+        for batch in [1usize, 2, 3, 7, 16, pts.len()] {
+            let mut single = NodeAccountant::for_epochs(spec, &epochs);
+            for &(t, w) in &pts {
+                single.push_point(t, w);
+            }
+            let mut batched = NodeAccountant::for_epochs(spec, &epochs);
+            for chunk in pts.chunks(batch) {
+                batched.push_points(chunk);
+            }
+            assert_eq!(single.readings, batched.readings, "batch {batch}");
+            for b in 0..spec.n {
+                assert_eq!(
+                    single.naive_j[b].to_bits(),
+                    batched.naive_j[b].to_bits(),
+                    "naive, batch {batch}, bucket {b}"
+                );
+                assert_eq!(
+                    single.corrected_j[b].to_bits(),
+                    batched.corrected_j[b].to_bits(),
+                    "corrected, batch {batch}, bucket {b}"
+                );
+                assert_eq!(
+                    single.uncovered_s[b].to_bits(),
+                    batched.uncovered_s[b].to_bits(),
+                    "uncovered, batch {batch}, bucket {b}"
+                );
+                assert_eq!(
+                    single.min_w[b].to_bits(),
+                    batched.min_w[b].to_bits(),
+                    "min, batch {batch}, bucket {b}"
+                );
+                assert_eq!(
+                    single.max_w[b].to_bits(),
+                    batched.max_w[b].to_bits(),
+                    "max, batch {batch}, bucket {b}"
+                );
+            }
+            assert_eq!(single.anchors, batched.anchors, "anchors, batch {batch}");
+            assert_eq!(single.edge_next, batched.edge_next, "edge walk, batch {batch}");
+        }
     }
 
     #[test]

@@ -7,7 +7,11 @@
 //! replay, or a fault-injected wrapper — through the crate-internal
 //! `stream_source` loop, and
 //! push the node's life as a *message protocol* over a **bounded** queue
-//! (backpressure instead of unbounded buffering):
+//! (backpressure instead of unbounded buffering). With accounting shards
+//! configured there is one bounded queue per shard and every message is
+//! routed by node id through [`ShardMap`], so a node's whole stream
+//! reaches one consumer in order and a slow shard stalls only its own
+//! producers:
 //!
 //! ```text
 //! NodeStart → EpochOpen(t0=0) → Batch* → EpochIdentified → Batch*
@@ -284,6 +288,45 @@ pub struct IngestStats {
     pub drift_suspected: u64,
 }
 
+/// Contiguous node-id → accounting-shard map: shard `k` owns node ids
+/// `[k·span, (k+1)·span)`, with the last shard absorbing the remainder
+/// and any sparse ids past the nominal range clamping into it. Producers
+/// route every [`IngestMsg`] through this map to the owning shard's
+/// bounded queue, so one node's whole protocol stream lands on one
+/// consumer in order.
+///
+/// `shard_of` is monotonic in the node id: concatenating the shards'
+/// node sets in shard order — each sorted by id — yields the global
+/// node-id order, which is what keeps every deterministic fold
+/// (snapshot merge, `fleet_energy`, checkpoint encode) bit-for-bit
+/// independent of the shard count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardMap {
+    /// Number of accounting shards (≥ 1).
+    pub n_shards: usize,
+    /// Node ids per shard (≥ 1; the last shard may own fewer).
+    pub span: usize,
+}
+
+impl ShardMap {
+    /// Map `n_total` node ids onto `n_shards` contiguous ranges.
+    /// `n_shards` is clamped to `[1, max(n_total, 1)]` so no shard is
+    /// empty by construction.
+    pub fn new(n_total: usize, n_shards: usize) -> Self {
+        let n_shards = n_shards.clamp(1, n_total.max(1));
+        let span = (n_total.max(1) + n_shards - 1) / n_shards;
+        ShardMap { n_shards, span }
+    }
+
+    /// The shard owning `node_id` (ids beyond the nominal range clamp
+    /// into the last shard, so a sparse fleet never indexes out of
+    /// bounds).
+    #[inline]
+    pub fn shard_of(&self, node_id: usize) -> usize {
+        (node_id / self.span).min(self.n_shards - 1)
+    }
+}
+
 /// Cross-thread re-calibration requests: one flag per node, set by
 /// `ControlMsg::Recalibrate{node}` (or by the producer's own drift
 /// monitor) and consumed by the node's producer at its next chunk
@@ -349,10 +392,12 @@ impl Default for NodeScratch {
     }
 }
 
-/// The producer side of the bounded queue: batch size, the send handle,
-/// and the buffer-recycling pool.
+/// The producer side of the bounded queues: one send handle per
+/// accounting shard, the node-id routing map, the batch size, and the
+/// buffer-recycling pool (shared — recycled buffers are fungible).
 pub(crate) struct Emitter<'a> {
-    pub(crate) tx: SyncSender<IngestMsg>,
+    pub(crate) txs: &'a [SyncSender<IngestMsg>],
+    pub(crate) map: ShardMap,
     pub(crate) pool: &'a Mutex<Receiver<Vec<(f64, f64)>>>,
     pub(crate) batch: usize,
 }
@@ -369,11 +414,14 @@ impl Emitter<'_> {
 }
 
 /// Per-node emission state: accumulates readings into recycled batch
-/// buffers and interleaves protocol messages in stream order. A dead
+/// buffers and interleaves protocol messages in stream order, all on the
+/// bounded queue of the shard owning the node (per-shard backpressure: a
+/// slow shard stalls only the producers streaming its nodes). A dead
 /// consumer (send error) latches `dead` and every later op is a no-op —
 /// the service is already unwinding.
 pub(crate) struct NodeEmitter<'a, 'b> {
     emit: &'b Emitter<'a>,
+    tx: &'b SyncSender<IngestMsg>,
     node_id: usize,
     buf: Vec<(f64, f64)>,
     dead: bool,
@@ -382,7 +430,8 @@ pub(crate) struct NodeEmitter<'a, 'b> {
 impl<'a, 'b> NodeEmitter<'a, 'b> {
     pub(crate) fn new(emit: &'b Emitter<'a>, node_id: usize) -> Self {
         let buf = emit.fresh_buf();
-        NodeEmitter { emit, node_id, buf, dead: false }
+        let tx = &emit.txs[emit.map.shard_of(node_id)];
+        NodeEmitter { emit, tx, node_id, buf, dead: false }
     }
 
     pub(crate) fn is_dead(&self) -> bool {
@@ -396,7 +445,7 @@ impl<'a, 'b> NodeEmitter<'a, 'b> {
         if self.dead {
             return;
         }
-        if self.emit.tx.send(msg).is_err() {
+        if self.tx.send(msg).is_err() {
             self.dead = true;
         }
     }
@@ -418,7 +467,7 @@ impl<'a, 'b> NodeEmitter<'a, 'b> {
             return;
         }
         let points = std::mem::replace(&mut self.buf, self.emit.fresh_buf());
-        if self.emit.tx.send(IngestMsg::Batch { node_id: self.node_id, points }).is_err() {
+        if self.tx.send(IngestMsg::Batch { node_id: self.node_id, points }).is_err() {
             self.dead = true;
         }
     }
@@ -820,6 +869,33 @@ pub(crate) fn stream_source<S: ReadingSource>(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shard_map_partitions_every_id_contiguously() {
+        for n_total in [0usize, 1, 2, 5, 6, 7, 16, 100] {
+            for n_shards in [1usize, 2, 4, 7, 9, 100] {
+                let map = ShardMap::new(n_total, n_shards);
+                assert!(map.n_shards >= 1 && map.n_shards <= n_total.max(1));
+                assert!(map.span >= 1);
+                // monotonic, in range, and every shard non-empty over the
+                // nominal id space
+                let mut seen = vec![0usize; map.n_shards];
+                let mut prev = 0usize;
+                for id in 0..n_total {
+                    let s = map.shard_of(id);
+                    assert!(s < map.n_shards);
+                    assert!(s >= prev, "shard_of must be monotonic in node id");
+                    prev = s;
+                    seen[s] += 1;
+                }
+                if n_total >= map.n_shards {
+                    assert!(seen.iter().all(|&c| c > 0), "no empty shard for {n_total}/{n_shards}");
+                }
+                // sparse ids clamp into the last shard instead of panicking
+                assert_eq!(map.shard_of(n_total + 1000), map.n_shards - 1);
+            }
+        }
+    }
 
     #[test]
     fn node_seeds_are_distinct_and_deterministic() {

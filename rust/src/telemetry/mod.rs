@@ -77,10 +77,12 @@
 //! Determinism: for a fixed [`TelemetryConfig::seed`] (and fault plan /
 //! log set) the accounts, the registry, the per-epoch identities, the
 //! adaptive re-calibrations, and the ingested reading count are
-//! bit-for-bit identical regardless of worker count, shard size, batch
-//! size, or queue depth (per-node streams are pure functions of their
-//! inputs; drift decisions land at fixed chunk boundaries; fleet
-//! aggregation folds in node-id order). Only `stats.batches` depends on
+//! bit-for-bit identical regardless of worker count, producer shard size,
+//! **accounting shard count** ([`TelemetryConfig::shards`]), batch size,
+//! or queue depth (per-node streams are pure functions of their inputs;
+//! drift decisions land at fixed chunk boundaries; fleet aggregation and
+//! checkpoint serialisation fold in node-id order, which the monotonic
+//! shard partition preserves). Only `stats.batches` depends on
 //! the batch size, trivially. The one deliberately timing-dependent input
 //! is an *external* `ControlMsg::Recalibrate`, which lands at whatever
 //! chunk boundary is next when it arrives.
@@ -99,14 +101,16 @@ pub use accounting::{
     BucketSpec, FleetAccounts, FleetEnergy, FrozenState, NodeAccount, NodeAccountant,
     WindowSnapshot,
 };
-pub use ingest::{IngestStats, NodeScratch, RecalBoard};
+pub use ingest::{IngestStats, NodeScratch, RecalBoard, ShardMap};
 pub use persist::{Checkpoint, ServiceFingerprint, SourceKind};
 pub use registry::{
     detect_epochs, CalPhase, DriftMonitor, EpochIdentity, EpochTracker, GenAccuracy,
     IncrementalIdentifier, NodeIdentity, ProbeSchedule, Registry, SensorClass, SensorIdentity,
     DRIVER_RESTART_GAP_S,
 };
-pub use service::{ControlMsg, ServiceEvent, ServiceHandle, TelemetryService};
+pub use service::{
+    ControlMsg, EventStream, ServiceEvent, ServiceHandle, TelemetryService,
+};
 pub use source::{
     BreakKind, FaultPlan, FaultSource, NodeTimeline, ReadingSource, ReplaySource, ServiceSource,
     SimSource, SourceInfo, MASKED_RESTART_OUTAGE_S, RESTART_OUTAGE_S,
@@ -135,6 +139,12 @@ pub struct TelemetryConfig {
     pub shard_size: usize,
     /// Producer worker threads.
     pub workers: usize,
+    /// Accounting shards: consumer threads, each owning a contiguous
+    /// node-id range with its own bounded queue and state partition.
+    /// 0 (the default) sizes automatically from the machine's
+    /// parallelism; explicit values are clamped to `[1, fleet size]`.
+    /// Results are bit-for-bit identical for every setting.
+    pub shards: usize,
     /// Service seed: fixes every node's boot phase, jitter, fault draws,
     /// and tolerance draw.
     pub seed: u64,
@@ -151,6 +161,7 @@ impl Default for TelemetryConfig {
             queue_depth: 64,
             shard_size: 16,
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            shards: 0,
             seed: 2024,
         }
     }
@@ -293,10 +304,17 @@ mod tests {
     fn service_is_deterministic_across_concurrency_and_batching() {
         let fleet = small_fleet(3, &["A100 PCIe-40G", "3090"], 71);
         let base = fast_cfg();
-        let a = run_service(&fleet, &TelemetryConfig { workers: 1, shard_size: 1, ..base });
+        let a = run_service(&fleet, &TelemetryConfig { workers: 1, shard_size: 1, shards: 1, ..base });
         let b = run_service(
             &fleet,
-            &TelemetryConfig { workers: 4, shard_size: 2, batch_size: 97, queue_depth: 3, ..base },
+            &TelemetryConfig {
+                workers: 4,
+                shard_size: 2,
+                batch_size: 97,
+                queue_depth: 3,
+                shards: 3,
+                ..base
+            },
         );
         assert_snapshots_identical(&a, &b);
     }

@@ -202,10 +202,12 @@ fn field_code(f: PowerField) -> u8 {
 
 /// Everything that must match between a checkpoint and the service asked
 /// to restore it: the config geometry (bit-exact), the source identity,
-/// and the fleet. Worker/shard/batch/queue settings are deliberately
-/// *not* part of the fingerprint — the service is bit-for-bit
-/// deterministic across them, so a checkpoint written under one
-/// concurrency configuration restores under any other.
+/// and the fleet. Worker/shard/batch/queue settings — the accounting
+/// shard count ([`super::TelemetryConfig::shards`]) included — are
+/// deliberately *not* part of the fingerprint: the service is bit-for-bit
+/// deterministic across them (checkpoint nodes are serialised in node-id
+/// order regardless of which shard owned them), so a checkpoint written
+/// under one concurrency configuration restores under any other.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ServiceFingerprint {
     /// Service seed ([`super::TelemetryConfig::seed`]).

@@ -68,15 +68,28 @@ pub fn generation_breakdown(snap: &TelemetrySnapshot, field: PowerField, driver:
 }
 
 /// The `k` nodes whose naive account deviates most from truth.
+///
+/// Ranking is a bounded partial selection: `select_nth_unstable_by`
+/// partitions the k most mis-estimated nodes to the front in O(n), and
+/// only that prefix is sorted — O(n + k log k) instead of the old full
+/// O(n log n) fleet sort. The comparator breaks |error| ties on node id
+/// (and `total_cmp` gives NaN errors a fixed rank), so the table is a
+/// deterministic function
+/// of the snapshot regardless of the selection algorithm's partition
+/// order — pinned against a full sort by `top_k_matches_full_sort`.
 pub fn top_misestimated(snap: &TelemetrySnapshot, k: usize) -> Table {
-    let mut ranked: Vec<&NodeAccount> = snap.accounts.nodes.iter().collect();
-    ranked.sort_by(|a, b| {
+    let cmp = |a: &&NodeAccount, b: &&NodeAccount| {
         b.naive_pct()
             .abs()
-            .partial_cmp(&a.naive_pct().abs())
-            .unwrap_or(std::cmp::Ordering::Equal)
+            .total_cmp(&a.naive_pct().abs())
             .then(a.node_id.cmp(&b.node_id))
-    });
+    };
+    let mut ranked: Vec<&NodeAccount> = snap.accounts.nodes.iter().collect();
+    if k > 0 && k < ranked.len() {
+        ranked.select_nth_unstable_by(k - 1, cmp);
+        ranked.truncate(k);
+    }
+    ranked.sort_unstable_by(cmp);
     let mut t = Table::new(
         format!("top {k} mis-estimated nodes (naive accounting)"),
         &["node", "model", "sensor", "coverage %", "naive %err", "corrected %err"],
@@ -191,6 +204,32 @@ mod tests {
         let wt = window_table(&snap);
         assert_eq!(wt.rows.len(), snap.windows().len());
         assert!(wt.render().contains("rolling window snapshots"));
+    }
+
+    /// Satellite: the bounded partial selection behind
+    /// [`top_misestimated`] must reproduce the old full-fleet sort
+    /// exactly — same rows, same order — for every k including the
+    /// degenerate ends (0, the fleet size, and past it).
+    #[test]
+    fn top_k_matches_full_sort() {
+        let snap = snapshot();
+        let n = snap.accounts.nodes.len();
+        assert!(n >= 3);
+        for k in 0..=n + 1 {
+            // the pre-refactor reference: sort the whole fleet, take k
+            let mut full: Vec<&NodeAccount> = snap.accounts.nodes.iter().collect();
+            full.sort_by(|a, b| {
+                b.naive_pct()
+                    .abs()
+                    .partial_cmp(&a.naive_pct().abs())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.node_id.cmp(&b.node_id))
+            });
+            let want: Vec<String> = full.into_iter().take(k).map(|a| a.node_id.to_string()).collect();
+            let got: Vec<String> =
+                top_misestimated(&snap, k).rows.iter().map(|r| r[0].clone()).collect();
+            assert_eq!(got, want, "k = {k}");
+        }
     }
 
     /// Satellite: inverted or out-of-range query windows render as zeroed

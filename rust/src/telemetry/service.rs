@@ -1,6 +1,8 @@
 //! The live service: [`TelemetryService::start`] returns a
-//! [`ServiceHandle`] that owns the producer shards and the accounting
-//! consumer, and answers queries **while ingestion runs**.
+//! [`ServiceHandle`] that owns the producer workers and the **sharded
+//! accounting core** — N consumer threads, each draining its own bounded
+//! queue into its own state partition — and answers queries **while
+//! ingestion runs**.
 //!
 //! Lifecycle:
 //!
@@ -14,14 +16,18 @@
 //! let snap   = handle.join();               // drain to completion
 //! ```
 //!
-//! The consumer drains [`IngestMsg`]s into a mutex-guarded live state:
-//! one incremental [`NodeAccountant`] per in-flight node (naive buckets
-//! eager, corrected buckets deferred until the governing epoch is
-//! identified — see `accounting`), the per-epoch identity history, and the
-//! finished accounts. [`ServiceHandle::snapshot`] clones that state into
-//! an ordinary [`TelemetrySnapshot`], so every existing query
-//! (`query::fleet_energy_table`, `window_table`, …) works mid-ingest
-//! unchanged. Guarantees:
+//! Sharded accounting: node ids are partitioned into contiguous ranges by
+//! [`ShardMap`]; each shard owns one consumer thread, one bounded
+//! [`IngestMsg`] queue, and one mutex-guarded [`ShardState`] holding the
+//! incremental [`NodeAccountant`]s of its in-flight nodes plus its
+//! finished accounts. Producers route every message to the owning shard,
+//! so two shards never contend on a lock and the historical
+//! one-consumer bottleneck ("part-time" attention in our own collector)
+//! disappears — while every result stays **bit-for-bit identical across
+//! shard counts**, because all cross-shard folds (`snapshot`,
+//! `fleet_energy`, checkpoints) walk the shards in ascending order and
+//! each shard's nodes in ascending node-id order, which the monotonic
+//! `ShardMap` makes the global node-id order. Guarantees:
 //!
 //! * a node's **identity** is final from the moment its calibration phase
 //!   completes — a mid-ingest snapshot taken after `NodeIdentified` shows
@@ -32,15 +38,29 @@
 //! * once `NodeComplete` fires, that node's whole account (truth included)
 //!   is the finished article.
 //!
+//! Events: emissions append to one `Arc`-shared, append-only backlog; a
+//! subscriber ([`EventStream`]) is just a cursor into it, and the cursor
+//! *is* the event's monotonic sequence number — late subscription costs
+//! O(1) and replaying the backlog is O(new events), with no per-subscriber
+//! clone of anything.
+//!
+//! Window closure is a cross-shard barrier: each shard publishes a freeze
+//! watermark (the minimum [`NodeAccountant::frozen_before`] over its
+//! in-flight nodes) into an atomic; a window closes when the minimum over
+//! *all* shards passes its end, so `WindowClosed` — and the checkpoint it
+//! triggers — still means "every node's aggregates for this window are
+//! final". `docs/ARCHITECTURE.md` § Concurrency model walks through the
+//! lock ordering and the invariance argument.
+//!
 //! Control plane: [`ControlMsg::Recalibrate`] flags a node on the shared
 //! [`RecalBoard`]; its producer picks the flag up at the next chunk
 //! boundary and replays the calibration probes
 //! ([`super::source::ReadingSource::replay_probes`]). The *adaptive* path
 //! — the drift monitor confirming a silent sensor change — runs through
 //! the same flag at deterministic stream positions, so it fires
-//! identically under any worker/batch configuration. Progress events are
-//! advisory (their interleaving across nodes depends on scheduling);
-//! snapshots are the authoritative view.
+//! identically under any worker/batch/shard configuration. Progress
+//! events are advisory (their interleaving across nodes depends on
+//! scheduling); snapshots are the authoritative view.
 //!
 //! Persistence: [`ServiceHandle::enable_checkpoints`] makes the service
 //! write a durable checkpoint (`super::persist`) at every `WindowClosed`
@@ -52,12 +72,14 @@
 //! re-entered per node. `docs/CHECKPOINT_FORMAT.md` specifies the file
 //! format; `docs/ARCHITECTURE.md` places the subsystem in the module map.
 
+use std::cell::Cell;
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvError, RecvTimeoutError, Sender, SyncSender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::fleet::Node;
 use crate::coordinator::Fleet;
@@ -69,7 +91,7 @@ use super::accounting::{
 };
 use super::ingest::{
     node_fault_seed, node_rig_seed, stream_source, Emitter, IngestMsg, IngestStats,
-    NodeResumePlan, NodeScratch, RecalBoard,
+    NodeResumePlan, NodeScratch, RecalBoard, ShardMap,
 };
 use super::persist::{
     self, Checkpoint, CkptEpoch, NodeCheckpoint, NodeStage, ServiceFingerprint, SourceKind,
@@ -162,6 +184,19 @@ pub enum ServiceEvent {
     ServiceComplete,
 }
 
+/// Lock a mutex, recovering the inner state if a panicking holder
+/// poisoned it. Every query and control path uses this instead of
+/// `.expect("poisoned")`: a shard consumer that panics mid-message must
+/// surface as an error from [`ServiceHandle::try_join`], not turn every
+/// later `snapshot()`/`fleet_energy()` call into a poisoned-mutex panic
+/// cascade. Safe here because all guarded state is plain accounting data
+/// whose invariants hold between messages — the worst a recovered lock
+/// exposes is the poisoning message's partial effects, which a failed
+/// service reports as partial anyway.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 /// One in-flight node's live state.
 #[derive(Debug)]
 struct LiveNode {
@@ -183,9 +218,10 @@ struct CheckpointSink {
     seq: u64,
 }
 
-/// Everything the consumer maintains, behind the handle's mutex.
+/// One accounting shard's mutable state: the ingest counters and the
+/// node accounts for the contiguous node-id range the shard owns.
 #[derive(Debug, Default)]
-struct LiveState {
+struct ShardState {
     stats: IngestStats,
     inflight: HashMap<usize, LiveNode>,
     finished_accounts: Vec<NodeAccount>,
@@ -194,21 +230,230 @@ struct LiveState {
     /// with recal flags — kept so checkpoints stay faithful after the
     /// live node is retired.
     finished_logs: Vec<Vec<(f64, bool)>>,
-    subscribers: Vec<Sender<ServiceEvent>>,
-    /// Every event emitted so far, in order — replayed to late
-    /// subscribers so no subscriber ever misses progress (bounded:
-    /// O(nodes × epochs + windows)).
-    event_log: Vec<ServiceEvent>,
+}
+
+/// One accounting shard: its guarded state, its published freeze
+/// watermark, and how many node ids it owns.
+#[derive(Debug)]
+struct Shard {
+    state: Mutex<ShardState>,
+    /// The shard's freeze watermark as `f64::to_bits`: `-inf` until every
+    /// owned node has started streaming, the minimum
+    /// [`NodeAccountant::frozen_before`] over its in-flight nodes while
+    /// any remain, `+inf` once all its nodes finished. Published after
+    /// each state change so the window-closure barrier can read it
+    /// without taking the shard lock.
+    watermark: AtomicU64,
+    /// Node ids this shard will ever see (drives the watermark's
+    /// "all started" gate).
+    owned: usize,
+}
+
+/// Cross-shard state: window closure progress and the checkpoint sink.
+#[derive(Debug)]
+struct GlobalState {
     windows_closed: usize,
     sink: Option<CheckpointSink>,
     done: bool,
 }
 
-impl LiveState {
-    fn emit(&mut self, ev: ServiceEvent) {
-        self.event_log.push(ev);
-        self.subscribers.retain(|s| s.send(ev).is_ok());
+/// The shared, append-only event backlog plus its closed flag; emission
+/// order is the event sequence numbering.
+#[derive(Debug, Default)]
+struct EventBacklog {
+    events: Vec<ServiceEvent>,
+    closed: bool,
+}
+
+/// The event log every subscriber shares: one backlog, one condvar.
+#[derive(Debug, Default)]
+struct EventLog {
+    inner: Mutex<EventBacklog>,
+    cond: Condvar,
+}
+
+impl EventLog {
+    fn emit(&self, ev: ServiceEvent) {
+        lock_recover(&self.inner).events.push(ev);
+        self.cond.notify_all();
     }
+
+    fn close(&self) {
+        lock_recover(&self.inner).closed = true;
+        self.cond.notify_all();
+    }
+}
+
+/// A subscriber's view of the service's progress events
+/// ([`ServiceHandle::subscribe`]): a cursor over the `Arc`-shared,
+/// append-only event backlog. The cursor *is* the next event's monotonic
+/// sequence number, so replaying the backlog after a late subscribe is
+/// O(events not yet seen) and costs no per-subscriber clone.
+///
+/// The API mirrors [`std::sync::mpsc::Receiver`] — `recv`,
+/// `recv_timeout`, `try_recv`, `iter`, `try_iter`, and `IntoIterator`
+/// (by value and by reference) — with the same error types, so existing
+/// channel-based subscriber code keeps working unchanged. The stream
+/// ends (blocking receives return `Err`) once the service has completed
+/// and every backlog event was consumed.
+#[derive(Debug)]
+pub struct EventStream {
+    log: Arc<EventLog>,
+    /// Next sequence number to deliver. `Cell`: receives take `&self`
+    /// for `mpsc::Receiver` API parity.
+    cursor: Cell<usize>,
+}
+
+impl EventStream {
+    /// Next event if one is already in the backlog.
+    fn poll(&self, backlog: &EventBacklog) -> Option<ServiceEvent> {
+        let i = self.cursor.get();
+        backlog.events.get(i).map(|&ev| {
+            self.cursor.set(i + 1);
+            ev
+        })
+    }
+
+    /// Wait for the next event; `Err` once the service completed and the
+    /// backlog is fully consumed.
+    pub fn recv(&self) -> Result<ServiceEvent, RecvError> {
+        let mut backlog = lock_recover(&self.log.inner);
+        loop {
+            if let Some(ev) = self.poll(&backlog) {
+                return Ok(ev);
+            }
+            if backlog.closed {
+                return Err(RecvError);
+            }
+            backlog = self
+                .log
+                .cond
+                .wait(backlog)
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+        }
+    }
+
+    /// Wait up to `timeout` for the next event.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<ServiceEvent, RecvTimeoutError> {
+        let deadline = Instant::now() + timeout;
+        let mut backlog = lock_recover(&self.log.inner);
+        loop {
+            if let Some(ev) = self.poll(&backlog) {
+                return Ok(ev);
+            }
+            if backlog.closed {
+                return Err(RecvTimeoutError::Disconnected);
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            let (guard, _) = self
+                .log
+                .cond
+                .wait_timeout(backlog, left)
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            backlog = guard;
+        }
+    }
+
+    /// Next event without blocking.
+    pub fn try_recv(&self) -> Result<ServiceEvent, TryRecvError> {
+        let backlog = lock_recover(&self.log.inner);
+        match self.poll(&backlog) {
+            Some(ev) => Ok(ev),
+            None if backlog.closed => Err(TryRecvError::Disconnected),
+            None => Err(TryRecvError::Empty),
+        }
+    }
+
+    /// Blocking iterator over the remaining events (ends when the
+    /// service completes).
+    pub fn iter(&self) -> EventIter<'_> {
+        EventIter { stream: self }
+    }
+
+    /// Non-blocking iterator over the events already in the backlog.
+    pub fn try_iter(&self) -> EventTryIter<'_> {
+        EventTryIter { stream: self }
+    }
+}
+
+/// Blocking event iterator — see [`EventStream::iter`].
+#[derive(Debug)]
+pub struct EventIter<'a> {
+    stream: &'a EventStream,
+}
+
+impl Iterator for EventIter<'_> {
+    type Item = ServiceEvent;
+
+    fn next(&mut self) -> Option<ServiceEvent> {
+        self.stream.recv().ok()
+    }
+}
+
+/// Non-blocking event iterator — see [`EventStream::try_iter`].
+#[derive(Debug)]
+pub struct EventTryIter<'a> {
+    stream: &'a EventStream,
+}
+
+impl Iterator for EventTryIter<'_> {
+    type Item = ServiceEvent;
+
+    fn next(&mut self) -> Option<ServiceEvent> {
+        self.stream.try_recv().ok()
+    }
+}
+
+/// Owning blocking event iterator — `for ev in handle.subscribe()`.
+#[derive(Debug)]
+pub struct EventIntoIter {
+    stream: EventStream,
+}
+
+impl Iterator for EventIntoIter {
+    type Item = ServiceEvent;
+
+    fn next(&mut self) -> Option<ServiceEvent> {
+        self.stream.recv().ok()
+    }
+}
+
+impl IntoIterator for EventStream {
+    type Item = ServiceEvent;
+    type IntoIter = EventIntoIter;
+
+    fn into_iter(self) -> EventIntoIter {
+        EventIntoIter { stream: self }
+    }
+}
+
+impl<'a> IntoIterator for &'a EventStream {
+    type Item = ServiceEvent;
+    type IntoIter = EventIter<'a>;
+
+    fn into_iter(self) -> EventIter<'a> {
+        self.iter()
+    }
+}
+
+/// Everything the shards, consumers, and handle share.
+#[derive(Debug)]
+struct SharedCore {
+    shards: Vec<Shard>,
+    map: ShardMap,
+    global: Mutex<GlobalState>,
+    /// `f64::to_bits` of the next unclosed window's end (`+inf` when all
+    /// windows are closed) — a lock-free pre-check so consumers whose
+    /// own watermark hasn't reached it skip the barrier entirely.
+    next_close: AtomicU64,
+    events: Arc<EventLog>,
+    /// Consumers still running; the last one out marks the service done
+    /// and closes the event backlog.
+    live_consumers: AtomicUsize,
+    meta: ServiceMeta,
 }
 
 /// One restored in-flight node's full resume state.
@@ -228,7 +473,7 @@ struct NodeRestore {
 
 /// Everything a restored service carries from its checkpoint, shared by
 /// the producers (skip finished nodes, resume in-flight ones) and the
-/// consumer (rebuild each resumed node's accountant).
+/// consumers (rebuild each resumed node's accountant).
 #[derive(Debug, Default)]
 struct RestoreData {
     /// Nodes whose streams already ended — never re-streamed.
@@ -237,7 +482,7 @@ struct RestoreData {
     nodes: HashMap<usize, NodeRestore>,
 }
 
-/// Immutable geometry shared by the consumer and the handle.
+/// Immutable geometry shared by the consumers and the handle.
 #[derive(Debug, Clone)]
 struct ServiceMeta {
     spec: BucketSpec,
@@ -286,9 +531,14 @@ struct ProducerCtx {
     spec: BucketSpec,
     duration_s: f64,
     n: usize,
+    /// Producer *work-claim* shard size (nodes claimed per atomic grab) —
+    /// unrelated to the accounting shards below.
     shard_size: usize,
     n_shards: usize,
     next_shard: AtomicUsize,
+    /// One bounded queue per accounting shard, routed by [`ShardMap`].
+    txs: Vec<SyncSender<IngestMsg>>,
+    map: ShardMap,
     pool: Mutex<Receiver<Vec<(f64, f64)>>>,
     board: Arc<RecalBoard>,
     stop: Arc<AtomicBool>,
@@ -309,6 +559,20 @@ struct ServiceSetup {
     window_s: f64,
     duration_s: f64,
     fingerprint: ServiceFingerprint,
+}
+
+/// Effective accounting-shard count: an explicit `cfg.shards` is clamped
+/// to the fleet; 0 (auto) sizes to about half the available cores,
+/// capped at 8 — the consumers share the machine with the producer
+/// workers, and past a handful of shards the producers are the
+/// bottleneck anyway.
+fn resolve_shards(cfg: &TelemetryConfig, n: usize) -> usize {
+    let want = if cfg.shards == 0 {
+        (std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4) / 2).clamp(1, 8)
+    } else {
+        cfg.shards
+    };
+    want.clamp(1, n.max(1))
 }
 
 impl TelemetryService {
@@ -453,8 +717,9 @@ impl TelemetryService {
     /// The checkpoint must match the offered fleet/config/source — seed,
     /// geometry (bit-exact), source kind and digest, fleet digest — or
     /// the restore is refused with a line-numbered error
-    /// ([`Checkpoint::validate`]). Worker/shard/batch/queue settings are
-    /// free to differ: the service is deterministic across them.
+    /// ([`Checkpoint::validate`]). Worker/shard/batch/queue settings —
+    /// accounting shards included — are free to differ: the service is
+    /// deterministic across them.
     ///
     /// # Examples
     ///
@@ -502,15 +767,91 @@ impl TelemetryService {
         restore: Option<RestoreInit>,
     ) -> ServiceHandle {
         let ServiceSetup { plan, n, sched, spec, window_s, duration_s, fingerprint } = setup;
-        let (tx, rx) = mpsc::sync_channel::<IngestMsg>(cfg.queue_depth.max(2));
         let (pool_tx, pool_rx) = mpsc::channel::<Vec<(f64, f64)>>();
         let board = Arc::new(RecalBoard::new(n));
         let stop = Arc::new(AtomicBool::new(false));
         let shard_size = cfg.shard_size.max(1);
-        let (state, restore_data) = match restore {
-            Some(init) => (init.state, Some(init.data)),
-            None => (LiveState::default(), None),
-        };
+        let map = ShardMap::new(n, resolve_shards(&cfg, n));
+
+        // seed the per-shard states from the checkpoint (if any): each
+        // finished/in-flight node lands on the shard that owns its id, so
+        // a restore under any shard count distributes identically to a
+        // run that was sharded that way from the start
+        let mut states: Vec<ShardState> = (0..map.n_shards).map(|_| ShardState::default()).collect();
+        let mut windows_closed = 0usize;
+        let restore_data = restore.map(|init| {
+            windows_closed = init.windows_closed;
+            // fleet-total counters land on shard 0: stats are summed
+            // across shards, so the attribution is arbitrary but exact
+            states[0].stats.recalibrations = init.recalibrations;
+            states[0].stats.drift_suspected = init.drift_suspected;
+            for (acct, entry, log) in init.finished {
+                let s = &mut states[map.shard_of(acct.node_id)];
+                s.stats.nodes += 1;
+                s.stats.readings += acct.readings;
+                s.finished_accounts.push(acct);
+                s.finished_entries.push(entry);
+                s.finished_logs.push(log);
+            }
+            for (node_id, skip) in init.inflight_skips {
+                states[map.shard_of(node_id)].stats.readings += skip;
+            }
+            init.data
+        });
+
+        // per-shard ownership counts over the ids that will actually
+        // stream (sim node ids may be sparse; replay ids are 0..n)
+        let mut owned = vec![0usize; map.n_shards];
+        match &plan {
+            ServicePlan::Sim { nodes, .. } => {
+                for nd in nodes {
+                    owned[map.shard_of(nd.id)] += 1;
+                }
+            }
+            ServicePlan::Replay { logs } => {
+                for id in 0..logs.len() {
+                    owned[map.shard_of(id)] += 1;
+                }
+            }
+        }
+
+        let meta = ServiceMeta::new(spec, window_s, duration_s, n, fingerprint);
+        let next_close = meta
+            .tile_bounds
+            .get(windows_closed)
+            .map(|&(_, t1)| t1)
+            .unwrap_or(f64::INFINITY);
+        let shards: Vec<Shard> = states
+            .into_iter()
+            .zip(&owned)
+            .map(|(st, &own)| {
+                let wm = shard_watermark(&st, own);
+                Shard { state: Mutex::new(st), watermark: AtomicU64::new(wm.to_bits()), owned: own }
+            })
+            .collect();
+        let core = Arc::new(SharedCore {
+            shards,
+            map,
+            global: Mutex::new(GlobalState { windows_closed, sink: None, done: false }),
+            next_close: AtomicU64::new(next_close.to_bits()),
+            events: Arc::new(EventLog::default()),
+            live_consumers: AtomicUsize::new(map.n_shards),
+            meta,
+        });
+
+        let mut txs = Vec::with_capacity(map.n_shards);
+        let mut consumers = Vec::with_capacity(map.n_shards);
+        for si in 0..map.n_shards {
+            let (tx, rx) = mpsc::sync_channel::<IngestMsg>(cfg.queue_depth.max(2));
+            txs.push(tx);
+            let core = Arc::clone(&core);
+            let pool_tx = pool_tx.clone();
+            let restore_data = restore_data.clone();
+            consumers
+                .push(std::thread::spawn(move || consumer_loop(si, rx, core, pool_tx, restore_data)));
+        }
+        drop(pool_tx);
+
         let ctx = Arc::new(ProducerCtx {
             plan,
             cfg,
@@ -521,44 +862,36 @@ impl TelemetryService {
             shard_size,
             n_shards: (n + shard_size - 1) / shard_size,
             next_shard: AtomicUsize::new(0),
+            txs,
+            map,
             pool: Mutex::new(pool_rx),
             board: Arc::clone(&board),
             stop: Arc::clone(&stop),
-            restore: restore_data.clone(),
+            restore: restore_data,
         });
-        let shared = Arc::new(Mutex::new(state));
-        let meta = ServiceMeta::new(spec, window_s, duration_s, n, fingerprint);
-
-        let consumer = {
-            let shared = Arc::clone(&shared);
-            let meta = meta.clone();
-            std::thread::spawn(move || consumer_loop(rx, shared, meta, pool_tx, restore_data))
-        };
         let producers = (0..cfg.workers.max(1))
             .map(|_| {
                 let ctx = Arc::clone(&ctx);
-                let tx = tx.clone();
-                std::thread::spawn(move || producer_worker(ctx, tx))
+                std::thread::spawn(move || producer_worker(ctx))
             })
             .collect();
-        drop(tx);
 
-        ServiceHandle {
-            shared,
-            board,
-            stop,
-            producers,
-            consumer: Some(consumer),
-            meta,
-            schedule: sched,
-        }
+        ServiceHandle { core, board, stop, producers, consumers, schedule: sched }
     }
 }
 
-/// The consumer-side half of a restore: the pre-seeded live state plus
+/// The launch-side half of a restore: distributable per-node state plus
 /// the shared per-node resume data.
 struct RestoreInit {
-    state: LiveState,
+    windows_closed: usize,
+    recalibrations: u64,
+    drift_suspected: u64,
+    /// Finished nodes — `(account, registry entry, epoch log)` — routed
+    /// to their owning shards at launch.
+    finished: Vec<(NodeAccount, NodeIdentity, Vec<(f64, bool)>)>,
+    /// `(node_id, skipped-prefix readings)` per resuming in-flight node —
+    /// seeds the owning shard's readings counter.
+    inflight_skips: Vec<(usize, u64)>,
     data: Arc<RestoreData>,
 }
 
@@ -568,12 +901,8 @@ struct RestoreInit {
 /// ingest counters resume where the durable state left them.
 fn build_restore(ckpt: &Checkpoint, spec: BucketSpec) -> Result<RestoreInit, String> {
     let mut data = RestoreData::default();
-    let mut state = LiveState {
-        windows_closed: ckpt.windows_closed,
-        ..Default::default()
-    };
-    state.stats.recalibrations = ckpt.recalibrations;
-    state.stats.drift_suspected = ckpt.drift_suspected;
+    let mut finished = Vec::new();
+    let mut inflight_skips = Vec::new();
 
     for node in &ckpt.nodes {
         let model = persist::static_model_name(&node.model);
@@ -587,30 +916,30 @@ fn build_restore(ckpt: &Checkpoint, spec: BucketSpec) -> Result<RestoreInit, Str
         match node.stage {
             NodeStage::Complete | NodeStage::Partial => {
                 let complete = node.stage == NodeStage::Complete;
-                state.stats.nodes += 1;
-                state.stats.readings += node.readings;
-                state.finished_accounts.push(NodeAccount {
-                    node_id: node.node_id,
-                    model,
-                    generation: node.generation,
-                    identity,
-                    spec,
-                    naive_j: node.frozen.naive_j.clone(),
-                    corrected_j: node.frozen.corrected_j.clone(),
-                    bound_j: node.frozen.bound_j.clone(),
-                    truth_j: node.truth_j.clone().unwrap_or_else(|| vec![0.0; spec.n]),
-                    readings: node.readings,
-                    complete,
-                    frozen_n: if complete { spec.n } else { node.frozen.frozen_n },
-                });
-                state.finished_entries.push(NodeIdentity {
-                    node_id: node.node_id,
-                    model,
-                    generation: node.generation,
-                    identity,
-                    epochs,
-                });
-                state.finished_logs.push(epoch_log);
+                finished.push((
+                    NodeAccount {
+                        node_id: node.node_id,
+                        model,
+                        generation: node.generation,
+                        identity,
+                        spec,
+                        naive_j: node.frozen.naive_j.clone(),
+                        corrected_j: node.frozen.corrected_j.clone(),
+                        bound_j: node.frozen.bound_j.clone(),
+                        truth_j: node.truth_j.clone().unwrap_or_else(|| vec![0.0; spec.n]),
+                        readings: node.readings,
+                        complete,
+                        frozen_n: if complete { spec.n } else { node.frozen.frozen_n },
+                    },
+                    NodeIdentity {
+                        node_id: node.node_id,
+                        model,
+                        generation: node.generation,
+                        identity,
+                        epochs,
+                    },
+                    epoch_log,
+                ));
                 data.finished.insert(node.node_id);
             }
             NodeStage::InFlight => {
@@ -619,7 +948,7 @@ fn build_restore(ckpt: &Checkpoint, spec: BucketSpec) -> Result<RestoreInit, Str
                     // nothing durable to resume — stream it fresh
                     continue;
                 }
-                state.stats.readings += node.frozen.skip;
+                inflight_skips.push((node.node_id, node.frozen.skip));
                 let plan = NodeResumePlan {
                     skip: node.frozen.skip,
                     anchor_t: node.frozen.anchor_t,
@@ -640,29 +969,35 @@ fn build_restore(ckpt: &Checkpoint, spec: BucketSpec) -> Result<RestoreInit, Str
             }
         }
     }
-    Ok(RestoreInit { state, data: Arc::new(data) })
+    Ok(RestoreInit {
+        windows_closed: ckpt.windows_closed,
+        recalibrations: ckpt.recalibrations,
+        drift_suspected: ckpt.drift_suspected,
+        finished,
+        inflight_skips,
+        data: Arc::new(data),
+    })
 }
 
 /// A running telemetry service: query it mid-ingest, steer it, join it.
 pub struct ServiceHandle {
-    shared: Arc<Mutex<LiveState>>,
+    core: Arc<SharedCore>,
     board: Arc<RecalBoard>,
     stop: Arc<AtomicBool>,
     producers: Vec<JoinHandle<()>>,
-    consumer: Option<JoinHandle<()>>,
-    meta: ServiceMeta,
+    consumers: Vec<JoinHandle<()>>,
     schedule: ProbeSchedule,
 }
 
 impl ServiceHandle {
     /// One observation window's effective length, seconds.
     pub fn window_s(&self) -> f64 {
-        self.meta.window_s
+        self.core.meta.window_s
     }
 
     /// Total observed stream time per node, seconds.
     pub fn duration_s(&self) -> f64 {
-        self.meta.duration_s
+        self.core.meta.duration_s
     }
 
     /// The calibration protocol the nodes run.
@@ -674,38 +1009,69 @@ impl ServiceHandle {
     /// accounts as live partial views (`complete == false`, with their
     /// `frozen_n` final buckets), and a registry holding every identity
     /// known so far. Works identically mid-ingest and after completion.
+    /// Shards are visited one at a time in ascending order — no global
+    /// lock, and the node-id merge keeps the result independent of the
+    /// shard count.
     pub fn snapshot(&self) -> TelemetrySnapshot {
-        let state = self.shared.lock().expect("telemetry state poisoned");
-        snapshot_locked(&state, &self.meta, self.schedule)
+        snapshot_core(&self.core, self.schedule)
     }
 
     /// Fleet energy over `[t0, t1]` as of now (whole-bucket granularity,
     /// clamped — the same edge semantics as
-    /// `FleetAccounts::energy_between`). Answered directly under the lock
-    /// by folding the per-node bucket accumulators — no snapshot clone, so
-    /// live range queries stay O(buckets × nodes) additions with zero
-    /// allocation.
+    /// `FleetAccounts::energy_between`). Answered by a per-shard fold in
+    /// node-id order over the per-node bucket accumulators: the shard
+    /// guards are held only for the duration of the fold, no global lock
+    /// is taken, and no account is cloned.
     pub fn fleet_energy(&self, t0: f64, t1: f64) -> super::accounting::FleetEnergy {
         use super::accounting::FleetEnergy;
-        let state = self.shared.lock().expect("telemetry state poisoned");
+        // Lock order: shard locks ascending (the global lock is never
+        // taken while these are held).
+        let guards: Vec<MutexGuard<'_, ShardState>> =
+            self.core.shards.iter().map(|s| lock_recover(&s.state)).collect();
+        enum NodeRef<'g> {
+            Done(&'g NodeAccount),
+            Live(&'g LiveNode),
+        }
+        // per-shard node refs sorted by id: concatenated in shard order
+        // this is the global node-id order (ShardMap is monotonic), i.e.
+        // the exact fold order of the unsharded service
+        let ordered: Vec<Vec<NodeRef<'_>>> = guards
+            .iter()
+            .map(|g| {
+                let mut v: Vec<(usize, NodeRef<'_>)> = g
+                    .finished_accounts
+                    .iter()
+                    .map(|a| (a.node_id, NodeRef::Done(a)))
+                    .collect();
+                v.extend(g.inflight.iter().map(|(&id, ln)| (id, NodeRef::Live(ln))));
+                v.sort_by_key(|&(id, _)| id);
+                v.into_iter().map(|(_, r)| r).collect()
+            })
+            .collect();
         let mut naive_j = 0.0;
         let mut corrected_j = 0.0;
         let mut bound_j = 0.0;
         let mut truth_j = 0.0;
-        let (ot0, ot1) = self.meta.spec.visit_range(t0, t1, |b| {
-            for acct in &state.finished_accounts {
-                naive_j += acct.naive_j[b];
-                corrected_j += acct.corrected_j[b];
-                bound_j += acct.bound_j[b];
-                truth_j += acct.truth_j[b];
-            }
-            for ln in state.inflight.values() {
-                let (n, c, bd) = ln.acct.bucket_energy(b);
-                naive_j += n;
-                corrected_j += c;
-                bound_j += bd;
-                // no truth for in-flight nodes: the reference lands at
-                // NodeEnd
+        let (ot0, ot1) = self.core.meta.spec.visit_range(t0, t1, |b| {
+            for shard in &ordered {
+                for r in shard {
+                    match r {
+                        NodeRef::Done(a) => {
+                            naive_j += a.naive_j[b];
+                            corrected_j += a.corrected_j[b];
+                            bound_j += a.bound_j[b];
+                            truth_j += a.truth_j[b];
+                        }
+                        NodeRef::Live(ln) => {
+                            let (n, c, bd) = ln.acct.bucket_energy(b);
+                            naive_j += n;
+                            corrected_j += c;
+                            bound_j += bd;
+                            // no truth for in-flight nodes: the reference
+                            // lands at NodeEnd
+                        }
+                    }
+                }
             }
         });
         FleetEnergy { t0: ot0, t1: ot1, naive_j, corrected_j, bound_j, truth_j }
@@ -713,7 +1079,9 @@ impl ServiceHandle {
 
     /// Subscribe to progress events. The full backlog is replayed first,
     /// so a subscriber sees every event in emission order no matter when
-    /// it joins (the stream ends with `ServiceComplete`).
+    /// it joins (the stream ends with `ServiceComplete`). Subscribing is
+    /// O(1): the backlog is `Arc`-shared and the returned [`EventStream`]
+    /// is just a sequence-number cursor into it.
     ///
     /// # Examples
     ///
@@ -742,14 +1110,8 @@ impl ServiceHandle {
     /// assert_eq!(identified, 1);
     /// handle.join();
     /// ```
-    pub fn subscribe(&self) -> Receiver<ServiceEvent> {
-        let (tx, rx) = mpsc::channel();
-        let mut state = self.shared.lock().expect("telemetry state poisoned");
-        for &ev in &state.event_log {
-            let _ = tx.send(ev);
-        }
-        state.subscribers.push(tx);
-        rx
+    pub fn subscribe(&self) -> EventStream {
+        EventStream { log: Arc::clone(&self.core.events), cursor: Cell::new(0) }
     }
 
     /// Send a control command; `false` when it could not be accepted
@@ -776,11 +1138,11 @@ impl ServiceHandle {
         match msg {
             ControlMsg::Recalibrate { node } => self.board.request(node),
             ControlMsg::Checkpoint => {
-                let mut state = self.shared.lock().expect("telemetry state poisoned");
-                if state.sink.is_none() {
+                let mut global = lock_recover(&self.core.global);
+                if global.sink.is_none() {
                     return false;
                 }
-                write_checkpoint(&mut state, &self.meta);
+                write_checkpoint(&self.core, &mut global);
                 true
             }
             ControlMsg::Shutdown => {
@@ -794,7 +1156,7 @@ impl ServiceHandle {
     /// (`checkpoint-<seq>.gpck`) is written into `dir` at every
     /// `WindowClosed` — the moment all state it covers is final — and on
     /// every explicit [`ControlMsg::Checkpoint`]. Writes happen under the
-    /// service lock (checkpoints are small: frozen prefixes + identities),
+    /// global lock (checkpoints are small: frozen prefixes + identities),
     /// and each file is published by atomic rename so a crash mid-write
     /// never leaves a torn file under a checkpoint name. Numbering
     /// continues past any `checkpoint-*.gpck` already in `dir`, so a
@@ -803,8 +1165,8 @@ impl ServiceHandle {
     /// crashes.
     pub fn enable_checkpoints(&self, dir: &std::path::Path) {
         let seq = next_checkpoint_seq(dir);
-        let mut state = self.shared.lock().expect("telemetry state poisoned");
-        state.sink = Some(CheckpointSink { dir: dir.to_path_buf(), seq });
+        let mut global = lock_recover(&self.core.global);
+        global.sink = Some(CheckpointSink { dir: dir.to_path_buf(), seq });
     }
 
     /// Build an in-memory [`Checkpoint`] of the service *now* — exactly
@@ -813,8 +1175,8 @@ impl ServiceHandle {
     /// [`save_atomic`](Checkpoint::save_atomic) it themselves or hand it
     /// straight to [`TelemetryService::start_from`].
     pub fn checkpoint(&self) -> Checkpoint {
-        let state = self.shared.lock().expect("telemetry state poisoned");
-        build_checkpoint(&state, &self.meta)
+        let global = lock_recover(&self.core.global);
+        build_checkpoint(&self.core, global.windows_closed)
     }
 
     /// Convenience for [`ControlMsg::Recalibrate`].
@@ -822,26 +1184,63 @@ impl ServiceHandle {
         self.control(ControlMsg::Recalibrate { node })
     }
 
-    /// Live ingest counters.
+    /// Live ingest counters, summed over the shards.
     pub fn progress(&self) -> IngestStats {
-        self.shared.lock().expect("telemetry state poisoned").stats
+        let mut stats = IngestStats::default();
+        for shard in &self.core.shards {
+            let s = lock_recover(&shard.state).stats;
+            stats.nodes += s.nodes;
+            stats.batches += s.batches;
+            stats.readings += s.readings;
+            stats.recalibrations += s.recalibrations;
+            stats.drift_suspected += s.drift_suspected;
+        }
+        stats
     }
 
     /// Whether the service has drained to completion.
     pub fn is_done(&self) -> bool {
-        self.shared.lock().expect("telemetry state poisoned").done
+        lock_recover(&self.core.global).done
+    }
+
+    /// Wait for every worker thread to finish; `Err` (with a count of
+    /// what failed) if any producer or consumer panicked, instead of
+    /// propagating the panic. The handle stays usable either way — a
+    /// poisoned shard is recovered by every query path, so `snapshot()`,
+    /// `fleet_energy()`, and `checkpoint()` keep answering over whatever
+    /// state the failed service had accumulated.
+    pub fn try_join(&mut self) -> Result<TelemetrySnapshot, String> {
+        let mut producers_failed = 0usize;
+        for p in std::mem::take(&mut self.producers) {
+            if p.join().is_err() {
+                producers_failed += 1;
+            }
+        }
+        let mut consumers_failed = 0usize;
+        for c in std::mem::take(&mut self.consumers) {
+            if c.join().is_err() {
+                consumers_failed += 1;
+            }
+        }
+        if producers_failed == 0 && consumers_failed == 0 {
+            Ok(self.snapshot())
+        } else {
+            Err(format!(
+                "telemetry service failed: {producers_failed} producer(s) and \
+                 {consumers_failed} consumer(s) panicked"
+            ))
+        }
     }
 
     /// Wait for every node to finish and return the final snapshot —
-    /// exactly what the one-call `run_service*` wrappers produce.
+    /// exactly what the one-call `run_service*` wrappers produce. Panics
+    /// if a worker thread panicked; use [`Self::try_join`] to handle that
+    /// as an error.
     pub fn join(mut self) -> TelemetrySnapshot {
-        for p in std::mem::take(&mut self.producers) {
-            p.join().expect("telemetry producer panicked");
+        match self.try_join() {
+            Ok(snap) => snap,
+            Err(e) => panic!("{e}"),
         }
-        if let Some(c) = self.consumer.take() {
-            c.join().expect("telemetry consumer panicked");
-        }
-        self.snapshot()
     }
 
     /// Signal shutdown and drain: nodes mid-stream are cut short; the
@@ -860,44 +1259,52 @@ impl Drop for ServiceHandle {
     }
 }
 
-/// Build a [`TelemetrySnapshot`] from the locked live state.
-fn snapshot_locked(
-    state: &LiveState,
-    meta: &ServiceMeta,
-    schedule: ProbeSchedule,
-) -> TelemetrySnapshot {
-    let mut accounts: Vec<NodeAccount> = state.finished_accounts.clone();
-    let mut live_ids: Vec<usize> = state.inflight.keys().copied().collect();
-    live_ids.sort_unstable();
-    for id in live_ids {
-        let ln = &state.inflight[&id];
-        let identity =
-            ln.epochs.last().map(|e| e.identity).unwrap_or_else(SensorIdentity::unsupported);
-        accounts.push(ln.acct.account_view(
-            id,
-            ln.model,
-            ln.generation,
-            identity,
-            vec![0.0; meta.spec.n],
-            false,
-        ));
-    }
-    let accounts = FleetAccounts::merge(meta.spec, accounts);
+/// Build a [`TelemetrySnapshot`] by folding the shards in ascending
+/// order (one shard lock at a time). Accounts and registry entries merge
+/// by node id downstream (`FleetAccounts::merge`, `Registry::finalize`),
+/// so the result is bit-for-bit independent of the shard count.
+fn snapshot_core(core: &SharedCore, schedule: ProbeSchedule) -> TelemetrySnapshot {
+    let meta = &core.meta;
+    let mut stats = IngestStats::default();
+    let mut accounts: Vec<NodeAccount> = Vec::new();
     let mut registry = Registry::default();
-    for e in &state.finished_entries {
-        registry.insert(e.clone());
-    }
-    for (&id, ln) in &state.inflight {
-        if let Some(last) = ln.epochs.last() {
-            registry.insert(NodeIdentity {
-                node_id: id,
-                model: ln.model,
-                generation: ln.generation,
-                identity: last.identity,
-                epochs: ln.epochs.clone(),
-            });
+    for shard in &core.shards {
+        let state = lock_recover(&shard.state);
+        stats.nodes += state.stats.nodes;
+        stats.batches += state.stats.batches;
+        stats.readings += state.stats.readings;
+        stats.recalibrations += state.stats.recalibrations;
+        stats.drift_suspected += state.stats.drift_suspected;
+        accounts.extend(state.finished_accounts.iter().cloned());
+        for e in &state.finished_entries {
+            registry.insert(e.clone());
+        }
+        let mut live_ids: Vec<usize> = state.inflight.keys().copied().collect();
+        live_ids.sort_unstable();
+        for id in live_ids {
+            let ln = &state.inflight[&id];
+            let identity =
+                ln.epochs.last().map(|e| e.identity).unwrap_or_else(SensorIdentity::unsupported);
+            accounts.push(ln.acct.account_view(
+                id,
+                ln.model,
+                ln.generation,
+                identity,
+                vec![0.0; meta.spec.n],
+                false,
+            ));
+            if let Some(last) = ln.epochs.last() {
+                registry.insert(NodeIdentity {
+                    node_id: id,
+                    model: ln.model,
+                    generation: ln.generation,
+                    identity: last.identity,
+                    epochs: ln.epochs.clone(),
+                });
+            }
         }
     }
+    let accounts = FleetAccounts::merge(meta.spec, accounts);
     registry.finalize();
     TelemetrySnapshot {
         duration_s: meta.duration_s,
@@ -905,50 +1312,79 @@ fn snapshot_locked(
         schedule,
         accounts,
         registry,
-        stats: state.stats,
+        stats,
     }
+}
+
+/// One shard's freeze watermark over its guarded state: `-inf` until
+/// every owned node has started (an unstarted node could still write
+/// anywhere), the minimum [`NodeAccountant::frozen_before`] over its
+/// in-flight nodes otherwise, `+inf` once none remain.
+fn shard_watermark(state: &ShardState, owned: usize) -> f64 {
+    if state.stats.nodes < owned {
+        return f64::NEG_INFINITY;
+    }
+    if state.inflight.is_empty() {
+        return f64::INFINITY;
+    }
+    state.inflight.values().map(|n| n.acct.frozen_before()).fold(f64::INFINITY, f64::min)
+}
+
+/// The cross-shard window-closure barrier, cheap-path gated: skip the
+/// global lock entirely unless this shard's own freeze watermark has
+/// passed the next unclosed window's end (if *it* hasn't, the cross-shard
+/// minimum can't have either).
+fn maybe_close_windows(core: &SharedCore, own_watermark: f64) {
+    if own_watermark < f64::from_bits(core.next_close.load(Ordering::Acquire)) {
+        return;
+    }
+    close_windows_locked(core);
 }
 
 /// Close every observation window whose fleet aggregates are final: every
-/// node's *freeze watermark* (not merely its last reading — the corrected
-/// account writes up to a latency shift backwards, and a not-yet-identified
-/// epoch defers readings entirely; see `NodeAccountant::frozen_before`)
-/// must have passed the window's end. Each close triggers a checkpoint
-/// write when a sink is configured — the moment everything a checkpoint
-/// records is final, which is what keeps every written file
-/// self-consistent.
-fn check_windows(state: &mut LiveState, meta: &ServiceMeta) {
-    if state.stats.nodes < meta.n_total {
-        return; // some nodes haven't started streaming yet
-    }
-    let watermark = if state.inflight.is_empty() {
-        f64::INFINITY
-    } else {
-        state
-            .inflight
-            .values()
-            .map(|n| n.acct.frozen_before())
-            .fold(f64::INFINITY, f64::min)
-    };
-    let before = state.windows_closed;
-    while state.windows_closed < meta.tile_bounds.len()
-        && meta.tile_bounds[state.windows_closed].1 <= watermark
+/// shard's *freeze watermark* (not merely its nodes' last readings — the
+/// corrected account writes up to a latency shift backwards, and a
+/// not-yet-identified epoch defers readings entirely; see
+/// [`NodeAccountant::frozen_before`]) must have passed the window's end.
+/// Each close triggers a checkpoint write when a sink is configured — the
+/// moment everything a checkpoint records is final, which is what keeps
+/// every written file self-consistent.
+fn close_windows_locked(core: &SharedCore) {
+    let mut global = lock_recover(&core.global);
+    let watermark = core
+        .shards
+        .iter()
+        .map(|s| f64::from_bits(s.watermark.load(Ordering::Acquire)))
+        .fold(f64::INFINITY, f64::min);
+    let before = global.windows_closed;
+    while global.windows_closed < core.meta.tile_bounds.len()
+        && core.meta.tile_bounds[global.windows_closed].1 <= watermark
     {
-        let (t0, t1) = meta.tile_bounds[state.windows_closed];
-        let index = state.windows_closed;
-        state.windows_closed += 1;
-        state.emit(ServiceEvent::WindowClosed { index, t0, t1 });
+        let (t0, t1) = core.meta.tile_bounds[global.windows_closed];
+        let index = global.windows_closed;
+        global.windows_closed += 1;
+        core.events.emit(ServiceEvent::WindowClosed { index, t0, t1 });
     }
-    if state.windows_closed > before && state.sink.is_some() {
-        write_checkpoint(state, meta);
+    let next = core
+        .meta
+        .tile_bounds
+        .get(global.windows_closed)
+        .map(|&(_, t1)| t1)
+        .unwrap_or(f64::INFINITY);
+    core.next_close.store(next.to_bits(), Ordering::Release);
+    if global.windows_closed > before && global.sink.is_some() {
+        write_checkpoint(core, &mut global);
     }
 }
 
-/// Serialize the live state into a [`Checkpoint`]: finished nodes
+/// Serialize the service state into a [`Checkpoint`]: finished nodes
 /// verbatim (truth included), in-flight nodes as their frozen prefix +
 /// resume position ([`NodeAccountant::export_frozen`]) + epoch history.
-/// Nodes are ordered by id so identical states write identical bytes.
-fn build_checkpoint(state: &LiveState, meta: &ServiceMeta) -> Checkpoint {
+/// Shards are gathered in ascending order and the merged node list is
+/// sorted by id, so identical logical states write identical bytes **for
+/// every shard count** — the `.gpck` format and the golden fixture are
+/// untouched by sharding.
+fn build_checkpoint(core: &SharedCore, windows_closed: usize) -> Checkpoint {
     let ckpt_epochs = |epochs: &[EpochIdentity], log: &[(f64, bool)]| -> Vec<CkptEpoch> {
         let mut out: Vec<CkptEpoch> = epochs
             .iter()
@@ -967,52 +1403,58 @@ fn build_checkpoint(state: &LiveState, meta: &ServiceMeta) -> Checkpoint {
         out
     };
 
-    let mut nodes: Vec<NodeCheckpoint> =
-        Vec::with_capacity(state.finished_accounts.len() + state.inflight.len());
-    for (i, acct) in state.finished_accounts.iter().enumerate() {
-        let entry = &state.finished_entries[i];
-        let log = &state.finished_logs[i];
-        nodes.push(NodeCheckpoint {
-            node_id: acct.node_id,
-            stage: if acct.complete { NodeStage::Complete } else { NodeStage::Partial },
-            model: acct.model.to_string(),
-            generation: acct.generation,
-            readings: acct.readings,
-            epochs: ckpt_epochs(&entry.epochs, log),
-            frozen: FrozenState {
-                frozen_n: acct.frozen_n,
-                skip: 0,
-                anchor_t: f64::NEG_INFINITY,
-                naive_j: acct.naive_j.clone(),
-                corrected_j: acct.corrected_j.clone(),
-                bound_j: acct.bound_j.clone(),
-            },
-            truth_j: Some(acct.truth_j.clone()),
-        });
-    }
-    let mut live_ids: Vec<usize> = state.inflight.keys().copied().collect();
-    live_ids.sort_unstable();
-    for id in live_ids {
-        let ln = &state.inflight[&id];
-        let frozen = ln.acct.export_frozen();
-        nodes.push(NodeCheckpoint {
-            node_id: id,
-            stage: NodeStage::InFlight,
-            model: ln.model.to_string(),
-            generation: ln.generation,
-            readings: frozen.skip,
-            epochs: ckpt_epochs(&ln.epochs, &ln.epoch_log),
-            frozen,
-            truth_j: None,
-        });
+    let mut nodes: Vec<NodeCheckpoint> = Vec::new();
+    let mut recalibrations = 0u64;
+    let mut drift_suspected = 0u64;
+    for shard in &core.shards {
+        let state = lock_recover(&shard.state);
+        recalibrations += state.stats.recalibrations;
+        drift_suspected += state.stats.drift_suspected;
+        for (i, acct) in state.finished_accounts.iter().enumerate() {
+            let entry = &state.finished_entries[i];
+            let log = &state.finished_logs[i];
+            nodes.push(NodeCheckpoint {
+                node_id: acct.node_id,
+                stage: if acct.complete { NodeStage::Complete } else { NodeStage::Partial },
+                model: acct.model.to_string(),
+                generation: acct.generation,
+                readings: acct.readings,
+                epochs: ckpt_epochs(&entry.epochs, log),
+                frozen: FrozenState {
+                    frozen_n: acct.frozen_n,
+                    skip: 0,
+                    anchor_t: f64::NEG_INFINITY,
+                    naive_j: acct.naive_j.clone(),
+                    corrected_j: acct.corrected_j.clone(),
+                    bound_j: acct.bound_j.clone(),
+                },
+                truth_j: Some(acct.truth_j.clone()),
+            });
+        }
+        let mut live_ids: Vec<usize> = state.inflight.keys().copied().collect();
+        live_ids.sort_unstable();
+        for id in live_ids {
+            let ln = &state.inflight[&id];
+            let frozen = ln.acct.export_frozen();
+            nodes.push(NodeCheckpoint {
+                node_id: id,
+                stage: NodeStage::InFlight,
+                model: ln.model.to_string(),
+                generation: ln.generation,
+                readings: frozen.skip,
+                epochs: ckpt_epochs(&ln.epochs, &ln.epoch_log),
+                frozen,
+                truth_j: None,
+            });
+        }
     }
     nodes.sort_by_key(|n| n.node_id);
 
     Checkpoint {
-        fingerprint: meta.fingerprint,
-        windows_closed: state.windows_closed,
-        recalibrations: state.stats.recalibrations,
-        drift_suspected: state.stats.drift_suspected,
+        fingerprint: core.meta.fingerprint,
+        windows_closed,
+        recalibrations,
+        drift_suspected,
         nodes,
     }
 }
@@ -1036,36 +1478,64 @@ fn next_checkpoint_seq(dir: &std::path::Path) -> u64 {
 
 /// Build + persist a checkpoint through the configured sink (no-op
 /// without one), emitting [`ServiceEvent::CheckpointWritten`] on success.
-/// A failed write is reported to stderr and the service keeps running —
-/// persistence is a safety net, not a correctness dependency.
-fn write_checkpoint(state: &mut LiveState, meta: &ServiceMeta) {
-    let Some(sink) = state.sink.as_mut() else { return };
+/// Called with the global lock held; takes the shard locks (ascending)
+/// to gather the node state. A failed write is reported to stderr and
+/// the service keeps running — persistence is a safety net, not a
+/// correctness dependency.
+fn write_checkpoint(core: &SharedCore, global: &mut GlobalState) {
+    let windows_closed = global.windows_closed;
+    let Some(sink) = global.sink.as_mut() else { return };
     let seq = sink.seq;
     let dir = sink.dir.clone();
     sink.seq += 1;
-    let ck = build_checkpoint(state, meta);
+    let ck = build_checkpoint(core, windows_closed);
     match ck.save_atomic(&dir, seq) {
         Ok(_path) => {
-            let windows_closed = state.windows_closed;
-            state.emit(ServiceEvent::CheckpointWritten { seq, windows_closed });
+            core.events.emit(ServiceEvent::CheckpointWritten { seq, windows_closed });
         }
         Err(e) => eprintln!("[telemetry] checkpoint {seq} write failed: {e}"),
     }
 }
 
-/// The accounting consumer: drains the bounded queue into the shared live
-/// state, one lock per message.
+/// One shard's accounting consumer: drains the shard's bounded queue
+/// into the shard's state, one shard-lock per message — no cross-shard
+/// contention on the hot path. Publishes the shard's freeze watermark
+/// after every state change and runs the window-closure barrier when the
+/// watermark might let one close. The last consumer out (panic included
+/// — see the guard) marks the service done and closes the event backlog.
 fn consumer_loop(
+    si: usize,
     rx: Receiver<IngestMsg>,
-    shared: Arc<Mutex<LiveState>>,
-    meta: ServiceMeta,
+    core: Arc<SharedCore>,
     pool_tx: Sender<Vec<(f64, f64)>>,
     restore: Option<Arc<RestoreData>>,
 ) {
+    /// Completion guard: runs on normal exit AND on unwind, so a
+    /// panicking consumer still decrements the live count — otherwise
+    /// the event backlog would never close and a blocked
+    /// [`EventStream::recv`] would hang forever. The guard is declared
+    /// first so it drops last.
+    struct Completion(Arc<SharedCore>);
+    impl Drop for Completion {
+        fn drop(&mut self) {
+            // AcqRel: every consumer's final watermark store (Release)
+            // happens-before the last decrement, so whoever observes 1
+            // here knows all other shards already published +inf and ran
+            // their own close pass
+            if self.0.live_consumers.fetch_sub(1, Ordering::AcqRel) == 1 {
+                lock_recover(&self.0.global).done = true;
+                self.0.events.emit(ServiceEvent::ServiceComplete);
+                self.0.events.close();
+            }
+        }
+    }
+    let _completion = Completion(Arc::clone(&core));
+
+    let shard = &core.shards[si];
     for msg in rx {
-        let mut state = shared.lock().expect("telemetry state poisoned");
         match msg {
             IngestMsg::NodeStart { node_id, model, generation } => {
+                let mut state = lock_recover(&shard.state);
                 state.stats.nodes += 1;
                 let node = match restore.as_ref().and_then(|r| r.nodes.get(&node_id)) {
                     // a checkpointed node resumes: frozen prefix imported
@@ -1075,7 +1545,7 @@ fn consumer_loop(
                         model,
                         generation,
                         acct: NodeAccountant::resume(
-                            meta.spec,
+                            core.meta.spec,
                             &r.timeline,
                             &r.frozen,
                             r.plan.skip,
@@ -1086,46 +1556,60 @@ fn consumer_loop(
                     None => LiveNode {
                         model,
                         generation,
-                        acct: NodeAccountant::fresh(meta.spec),
+                        acct: NodeAccountant::fresh(core.meta.spec),
                         epochs: Vec::new(),
                         epoch_log: Vec::new(),
                     },
                 };
                 state.inflight.insert(node_id, node);
+                let wm = shard_watermark(&state, shard.owned);
+                shard.watermark.store(wm.to_bits(), Ordering::Release);
             }
             IngestMsg::EpochOpen { node_id, t0, recal } => {
+                let mut state = lock_recover(&shard.state);
                 if let Some(ln) = state.inflight.get_mut(&node_id) {
                     ln.acct.open_epoch(t0);
                     ln.epoch_log.push((t0, recal));
                 }
                 if recal {
                     state.stats.recalibrations += 1;
-                    state.emit(ServiceEvent::Recalibrated { node_id, t0 });
+                    drop(state);
+                    core.events.emit(ServiceEvent::Recalibrated { node_id, t0 });
                 } else if t0 > 0.0 {
-                    state.emit(ServiceEvent::EpochDetected { node_id, t0 });
+                    drop(state);
+                    core.events.emit(ServiceEvent::EpochDetected { node_id, t0 });
                 }
             }
             IngestMsg::EpochIdentified { node_id, t0, identity } => {
+                let mut state = lock_recover(&shard.state);
                 if let Some(ln) = state.inflight.get_mut(&node_id) {
                     ln.acct.identify_span(&identity);
                     ln.epochs.push(EpochIdentity { t0, identity });
                 }
-                state.emit(ServiceEvent::NodeIdentified { node_id, t0, identity });
+                drop(state);
+                core.events.emit(ServiceEvent::NodeIdentified { node_id, t0, identity });
             }
             IngestMsg::Batch { node_id, points } => {
+                let mut state = lock_recover(&shard.state);
                 state.stats.batches += 1;
                 state.stats.readings += points.len() as u64;
                 if let Some(ln) = state.inflight.get_mut(&node_id) {
                     ln.acct.push_points(&points);
                 }
+                let wm = shard_watermark(&state, shard.owned);
+                shard.watermark.store(wm.to_bits(), Ordering::Release);
+                drop(state);
                 let _ = pool_tx.send(points); // recycle the buffer
-                check_windows(&mut state, &meta);
+                maybe_close_windows(&core, wm);
             }
             IngestMsg::DriftSuspected { node_id, t } => {
+                let mut state = lock_recover(&shard.state);
                 state.stats.drift_suspected += 1;
-                state.emit(ServiceEvent::DriftSuspected { node_id, t });
+                drop(state);
+                core.events.emit(ServiceEvent::DriftSuspected { node_id, t });
             }
             IngestMsg::NodeEnd { node_id, truth_j, complete } => {
+                let mut state = lock_recover(&shard.state);
                 if let Some(ln) = state.inflight.remove(&node_id) {
                     let identity = ln
                         .epochs
@@ -1154,15 +1638,24 @@ fn consumer_loop(
                     });
                     state.finished_logs.push(ln.epoch_log);
                 }
-                state.emit(ServiceEvent::NodeComplete { node_id });
-                check_windows(&mut state, &meta);
+                let wm = shard_watermark(&state, shard.owned);
+                shard.watermark.store(wm.to_bits(), Ordering::Release);
+                drop(state);
+                core.events.emit(ServiceEvent::NodeComplete { node_id });
+                maybe_close_windows(&core, wm);
             }
         }
     }
-    let mut state = shared.lock().expect("telemetry state poisoned");
-    state.done = true;
-    check_windows(&mut state, &meta);
-    state.emit(ServiceEvent::ServiceComplete);
+    // stream drained: publish the final watermark and run one last close
+    // pass. Whichever consumer's pass runs last (global-lock order) sees
+    // every shard's final store, so all closable windows close before the
+    // last `Completion` drop emits ServiceComplete.
+    {
+        let state = lock_recover(&shard.state);
+        let wm = shard_watermark(&state, shard.owned);
+        shard.watermark.store(wm.to_bits(), Ordering::Release);
+    }
+    close_windows_locked(&core);
 }
 
 /// Per-worker source state (arenas reused across the worker's nodes).
@@ -1173,9 +1666,15 @@ enum WorkerSource {
 }
 
 /// One producer worker: claim node shards, prepare each node's source,
-/// stream it through the ingest protocol.
-fn producer_worker(ctx: Arc<ProducerCtx>, tx: SyncSender<IngestMsg>) {
-    let emit = Emitter { tx, pool: &ctx.pool, batch: ctx.cfg.batch_size.max(1) };
+/// stream it through the ingest protocol (routed to the owning
+/// accounting shard's queue by node id).
+fn producer_worker(ctx: Arc<ProducerCtx>) {
+    let emit = Emitter {
+        txs: &ctx.txs,
+        map: ctx.map,
+        pool: &ctx.pool,
+        batch: ctx.cfg.batch_size.max(1),
+    };
     let mut scratch = NodeScratch::new();
     let mut src = match &ctx.plan {
         ServicePlan::Sim { faults: None, .. } => WorkerSource::Plain(SimSource::new()),
@@ -1284,5 +1783,117 @@ fn producer_worker(ctx: Arc<ProducerCtx>, tx: SyncSender<IngestMsg>) {
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::FleetConfig;
+    use crate::sim::profile::{DriverEpoch, PowerField};
+
+    fn fleet2() -> Fleet {
+        Fleet::build(FleetConfig {
+            size: 2,
+            models: vec!["A100 PCIe-40G".into()],
+            driver: DriverEpoch::Post530,
+            field: PowerField::Instant,
+            seed: 612,
+        })
+    }
+
+    fn cfg1() -> TelemetryConfig {
+        TelemetryConfig {
+            duration_s: 0.0,
+            bucket_s: 2.0,
+            workers: 1,
+            shards: 1,
+            ..Default::default()
+        }
+    }
+
+    /// Satellite (ISSUE 6): a panicking shard consumer — provoked here by
+    /// a doctored checkpoint whose frozen vectors disagree with their
+    /// recorded arity, tripping the `NodeAccountant::resume` assertion
+    /// inside the consumer — surfaces as an `Err` from `try_join`, and
+    /// every query path keeps answering over the poison-recovered state
+    /// instead of cascading poisoned-mutex panics.
+    #[test]
+    fn panicked_consumer_is_an_error_not_a_poison_cascade() {
+        let fleet = fleet2();
+        let cfg = cfg1();
+        // a clean run donates a structurally valid checkpoint (matching
+        // fingerprint, real model/generation/epochs)
+        let mut donor = TelemetryService::start(&fleet, &cfg, &ServiceSource::Sim);
+        donor.try_join().expect("clean run");
+        let mut ck = donor.checkpoint();
+        assert_eq!(ck.nodes.len(), 2);
+
+        // doctor node 0 back to in-flight with an inconsistent frozen
+        // prefix: frozen_n promises two final buckets, the vectors carry
+        // one — deep corruption Checkpoint::validate (fingerprint-level)
+        // cannot see, so the panic lands inside the shard consumer
+        let mut node = ck.nodes.remove(0);
+        node.stage = NodeStage::InFlight;
+        node.truth_j = None;
+        node.readings = 0;
+        node.epochs.truncate(1);
+        node.frozen = FrozenState {
+            frozen_n: 2,
+            skip: 0,
+            anchor_t: f64::NEG_INFINITY,
+            naive_j: vec![0.0],
+            corrected_j: vec![0.0, 0.0],
+            bound_j: vec![0.0, 0.0],
+        };
+        ck.nodes = vec![node];
+        ck.windows_closed = 0;
+        ck.recalibrations = 0;
+        ck.drift_suspected = 0;
+
+        let mut handle = TelemetryService::start_from(&ck, &fleet, &cfg, &ServiceSource::Sim)
+            .expect("fingerprint matches; the corruption is deeper than validate() checks");
+        let err = handle.try_join().expect_err("the consumer panic must surface as an error");
+        assert!(err.contains("consumer"), "{err}");
+
+        // poison recovery: the same handle still answers every query path
+        let snap = handle.snapshot();
+        assert!(snap.accounts.nodes.len() <= 2);
+        let e = handle.fleet_energy(0.0, 10.0);
+        assert!(e.naive_j.is_finite());
+        let _ = handle.progress();
+        let _ = handle.checkpoint();
+    }
+
+    /// The event stream replays the backlog for late subscribers and ends
+    /// cleanly after `ServiceComplete`, through both the blocking and
+    /// non-blocking receive paths.
+    #[test]
+    fn event_stream_replays_backlog_and_terminates() {
+        let fleet = fleet2();
+        let mut handle = TelemetryService::start(&fleet, &cfg1(), &ServiceSource::Sim);
+        let early = handle.subscribe();
+        let snap = handle.try_join().expect("clean run");
+        assert_eq!(snap.stats.nodes, 2);
+
+        // the early stream (cursor 0 since before any event) sees the
+        // whole backlog through the blocking path and then terminates
+        let mut seen = Vec::new();
+        while let Ok(ev) = early.recv_timeout(Duration::from_secs(30)) {
+            seen.push(ev);
+        }
+        assert_eq!(seen.last(), Some(&ServiceEvent::ServiceComplete));
+        assert_eq!(
+            seen.iter().filter(|e| matches!(e, ServiceEvent::NodeComplete { .. })).count(),
+            2
+        );
+        assert!(matches!(early.try_recv(), Err(TryRecvError::Disconnected)));
+        assert!(early.iter().next().is_none(), "closed backlog ends the blocking iterator");
+
+        // a subscriber created *after* completion replays the identical
+        // backlog from sequence 0, non-blocking
+        let late = handle.subscribe();
+        let replayed: Vec<ServiceEvent> = late.try_iter().collect();
+        assert_eq!(replayed, seen, "late subscription replays the full event sequence");
     }
 }

@@ -974,6 +974,108 @@ fn window_closed_hook_writes_restorable_checkpoints() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// ISSUE 6 satellite: shard-count invariance as a property over the whole
+/// query surface. For accounting shards ∈ {1, 2, 4, 7} — 7 deliberately
+/// not dividing the 6-node fleet, so the last shard owns a short range —
+/// the snapshot, live `fleet_energy` range queries, every `query.rs`
+/// table rendering, the registry summary, the annualised cost error, and
+/// a written checkpoint's *bytes* are all bit-for-bit identical to the
+/// single-shard reference.
+#[test]
+fn accounting_shards_never_change_any_result_bit_for_bit() {
+    use gpupower::telemetry::query::{
+        annual_cost_error_usd, fleet_energy_table, generation_breakdown, registry_summary,
+        top_misestimated, window_table,
+    };
+    use gpupower::telemetry::{
+        ServiceSource, TelemetryConfig, TelemetryService, TelemetrySnapshot,
+    };
+
+    let fleet = Fleet::build(FleetConfig {
+        size: 6,
+        models: vec!["A100 PCIe-40G".into(), "3090".into()],
+        driver: DriverEpoch::Post530,
+        field: PowerField::Instant,
+        seed: 613,
+    });
+    let base = TelemetryConfig { duration_s: 0.0, bucket_s: 2.0, ..Default::default() };
+    let ranges = [(0.0, 1e9), (3.0, 11.0), (7.5, 8.5), (20.0, 5.0)];
+
+    struct Observed {
+        snap: TelemetrySnapshot,
+        energies: Vec<(u64, u64, u64, u64)>,
+        tables: Vec<String>,
+        summary: String,
+        cost_bits: u64,
+        ckpt: Vec<u8>,
+    }
+    let observe = |shards: usize| -> Observed {
+        let cfg = TelemetryConfig { shards, workers: 2, batch_size: 64 + shards, ..base };
+        let mut handle = TelemetryService::start(&fleet, &cfg, &ServiceSource::Sim);
+        let snap = handle.try_join().expect("clean run");
+        let energies = ranges
+            .iter()
+            .map(|&(t0, t1)| {
+                let e = handle.fleet_energy(t0, t1);
+                (e.naive_j.to_bits(), e.corrected_j.to_bits(), e.bound_j.to_bits(), e.truth_j.to_bits())
+            })
+            .collect();
+        let tables = vec![
+            fleet_energy_table(&snap, 0.0, snap.duration_s).render(),
+            generation_breakdown(&snap, PowerField::Instant, DriverEpoch::Post530).render(),
+            top_misestimated(&snap, 3).render(),
+            window_table(&snap).render(),
+        ];
+        let summary = registry_summary(&snap.registry, PowerField::Instant, DriverEpoch::Post530);
+        let cost_bits = annual_cost_error_usd(&snap, 10_000, 0.15).to_bits();
+        let ckpt = handle.checkpoint().encode();
+        Observed { snap, energies, tables, summary, cost_bits, ckpt }
+    };
+
+    let reference = observe(1);
+    assert_eq!(reference.snap.accounts.nodes.len(), 6);
+    for shards in [2usize, 4, 7] {
+        let got = observe(shards);
+        // snapshot: accounts, registry, and counters (except batches)
+        assert_eq!(got.snap.stats.nodes, reference.snap.stats.nodes, "shards {shards}");
+        assert_eq!(got.snap.stats.readings, reference.snap.stats.readings, "shards {shards}");
+        for (x, y) in reference.snap.accounts.nodes.iter().zip(&got.snap.accounts.nodes) {
+            assert_eq!(x.node_id, y.node_id, "shards {shards}");
+            assert_eq!(x.identity, y.identity, "shards {shards}, node {}", x.node_id);
+            for b in 0..reference.snap.accounts.spec.n {
+                for (l, r, what) in [
+                    (&x.naive_j, &y.naive_j, "naive"),
+                    (&x.corrected_j, &y.corrected_j, "corrected"),
+                    (&x.bound_j, &y.bound_j, "bound"),
+                    (&x.truth_j, &y.truth_j, "truth"),
+                ] {
+                    assert_eq!(
+                        l[b].to_bits(),
+                        r[b].to_bits(),
+                        "shards {shards}, node {}, bucket {b}, {what}",
+                        x.node_id
+                    );
+                }
+            }
+        }
+        for (x, y) in reference.snap.registry.entries.iter().zip(&got.snap.registry.entries) {
+            assert_eq!(x.node_id, y.node_id, "shards {shards}");
+            assert_eq!(x.identity, y.identity, "shards {shards}");
+            assert_eq!(x.epochs, y.epochs, "shards {shards}");
+        }
+        // live range queries straight off the handle
+        assert_eq!(got.energies, reference.energies, "shards {shards}");
+        // every operator-facing table, rendered
+        for (i, (a, b)) in reference.tables.iter().zip(&got.tables).enumerate() {
+            assert_eq!(a, b, "shards {shards}, table {i}");
+        }
+        assert_eq!(got.summary, reference.summary, "shards {shards}");
+        assert_eq!(got.cost_bits, reference.cost_bits, "shards {shards}");
+        // the durable format: byte-identical checkpoints
+        assert_eq!(got.ckpt, reference.ckpt, "shards {shards}: checkpoint bytes diverged");
+    }
+}
+
 /// ISSUE 5 satellite: the committed golden checkpoint fixture decodes
 /// exactly as `docs/CHECKPOINT_FORMAT.md` specifies, and re-encoding the
 /// decoded value reproduces the committed bytes — pinning both directions
