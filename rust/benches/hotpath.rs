@@ -369,6 +369,44 @@ fn main() {
             entries.push((shards, readings_per_s, allocs_per_reading, snap_us));
         }
 
+        // instrumentation overhead gate (ISSUE 7): the same 1-shard run
+        // with the metrics registry hot vs cold, reps interleaved so
+        // machine drift hits both arms equally, best-of-each compared —
+        // the observability layer must cost < 2 %
+        let mut best_on = f64::INFINITY;
+        let mut best_off = f64::INFINITY;
+        for _ in 0..3 {
+            for &metrics in &[false, true] {
+                let cfg =
+                    TelemetryConfig { duration_s, shards: 1, metrics, ..Default::default() };
+                let t = std::time::Instant::now();
+                let snap =
+                    gpupower::telemetry::run_service_with(&fleet, &cfg, &ServiceSource::Sim);
+                let dt = t.elapsed().as_secs_f64();
+                assert_eq!(
+                    Some(snap.stats.readings),
+                    reference_readings,
+                    "metrics={metrics} must not change the ingested reading count"
+                );
+                if metrics {
+                    best_on = best_on.min(dt);
+                } else {
+                    best_off = best_off.min(dt);
+                }
+            }
+        }
+        let overhead = best_on / best_off;
+        println!(
+            "\ntelemetry instrumentation overhead: {overhead:.4}x \
+             (best-of-3: metrics on {:.1} ms vs off {:.1} ms; gate < 1.02x)",
+            best_on * 1e3,
+            best_off * 1e3
+        );
+        assert!(
+            overhead < 1.02,
+            "metrics instrumentation must stay under the 2% budget: {overhead:.4}x"
+        );
+
         let base = entries[0].1;
         println!("\ntelemetry shard trajectory ({nodes} nodes, {duration_s:.0} s window):");
         for &(shards, rps, apr, us) in &entries {
@@ -383,13 +421,14 @@ fn main() {
         if let Ok(path) = std::env::var("BENCH_TELEMETRY_OUT") {
             let mut json = String::new();
             json.push_str("{\n");
-            json.push_str("  \"schema\": \"bench_telemetry/v1\",\n");
+            json.push_str("  \"schema\": \"bench_telemetry/v2\",\n");
             json.push_str(&format!(
                 "  \"mode\": \"{}\",\n",
                 if smoke { "smoke" } else { "full" }
             ));
             json.push_str(&format!("  \"nodes\": {nodes},\n"));
             json.push_str(&format!("  \"duration_s\": {duration_s:.1},\n"));
+            json.push_str(&format!("  \"instrumented_overhead\": {overhead:.4},\n"));
             json.push_str("  \"shards\": {\n");
             for (i, &(shards, rps, apr, us)) in entries.iter().enumerate() {
                 json.push_str(&format!(

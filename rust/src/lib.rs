@@ -43,6 +43,12 @@
 //!   accounts. One-call wrappers `run_service*` remain
 //!   (`repro telemetry --source sim|faulty|replay [--live-every S]
 //!   [--checkpoint-dir D] [--restore PATH]`);
+//! * [`obs`] — zero-dependency observability over the service: lock-free
+//!   counters/gauges/log2-histograms (one relaxed atomic op per hot-path
+//!   sample, gated <2 % overhead by the bench), Prometheus/JSON/CSV
+//!   exporters (`ServiceHandle::metrics()`, `repro telemetry
+//!   --metrics-out`), and the `repro watch` live operator console over
+//!   the event stream (deterministic `--headless --frames N` mode);
 //! * [`runtime`] — the PJRT artifact runtime (Python never runs at request
 //!   time).
 
@@ -51,6 +57,7 @@ pub mod coordinator;
 pub mod estimator;
 pub mod experiments;
 pub mod measure;
+pub mod obs;
 pub mod pmd;
 pub mod report;
 pub mod rng;

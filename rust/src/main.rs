@@ -49,6 +49,7 @@ COMMANDS:
             [--dropout P] [--outage T:D ...] [--stuck T:D ...]
             [--restart T ...] [--driver-update T:EPOCH ...]
             [--live-every S]
+            [--metrics-out PATH] [--metrics-every S] [--backlog-cap N]
             [--checkpoint-dir D] [--checkpoint-every S] [--restore PATH]
                             the live fleet-telemetry service
                             (TelemetryService::start -> ServiceHandle):
@@ -99,6 +100,21 @@ COMMANDS:
                                              restore without
                                              re-calibration and frozen
                                              accounts bit-for-bit)
+                            --metrics-out PATH   write the service's
+                                             observability metrics when
+                                             the run completes (and every
+                                             --metrics-every S while it
+                                             runs). Format by extension:
+                                             .json = JSON document, .csv
+                                             = rolling-window CSV
+                                             (pandas-ready), anything
+                                             else = Prometheus text
+                                             exposition
+                            --backlog-cap N  bound the subscriber event
+                                             backlog to N events (default
+                                             65536); older events are
+                                             trimmed and late readers get
+                                             one Lagged gap marker
                             Recorded-log schema (nvidia-smi
                             --query-gpu=... --format=csv shape): a header
                             row naming the fields (e.g. \"timestamp, name,
@@ -110,6 +126,19 @@ COMMANDS:
                             stamps (normalised to relative at the first
                             reading). See examples/nvidia_smi_a100.csv and
                             examples/nvidia_smi_a100_wallclock.csv.
+  watch [telemetry flags] [--every S] [--headless] [--frames N]
+                            live operator console over the telemetry
+                            service (same sources/flags as `telemetry`):
+                            fleet energy ticker, the shared status line,
+                            window/checkpoint state, per-generation
+                            naive-vs-corrected error bars, per-shard
+                            queue gauges, and the drift/recalibration
+                            event feed. Interactive mode redraws every S
+                            seconds (--every, default 0.5) until the
+                            service drains. --headless waits for the
+                            drain, then prints --frames N (default 3)
+                            deterministic frames to stdout for scripts
+                            and CI.
   characterize MODEL [--driver D] [--field F]  sensor characterisation
 
 Flags accept both `--flag value` and `--flag=value`.
@@ -118,7 +147,7 @@ Flags accept both `--flag value` and `--flag=value`.
 /// Boolean switches (flags that take no value). Centralised so that
 /// `Args::positionals` can never silently swallow the positional after a
 /// newly added switch — add new boolean flags HERE, not in `positionals`.
-const BOOLEAN_FLAGS: &[&str] = &["--no-artifacts"];
+const BOOLEAN_FLAGS: &[&str] = &["--no-artifacts", "--headless"];
 
 /// Minimal flag parser: scans for `--flag value` / `--flag=value` pairs
 /// and positionals.
@@ -284,6 +313,160 @@ fn load_runtime(no_artifacts: bool) -> Option<ArtifactRuntime> {
     }
 }
 
+
+/// The service config shared by `repro telemetry` and `repro watch`,
+/// assembled from the common flag set.
+fn telemetry_cfg(args: &Args, seed: u64) -> telemetry::TelemetryConfig {
+    let defaults = telemetry::TelemetryConfig::default();
+    telemetry::TelemetryConfig {
+        duration_s: args.f64_flag("--duration", 40.0),
+        windows: args.usize_flag("--windows", 1),
+        bucket_s: args.f64_flag("--bucket", 1.0),
+        batch_size: args.usize_flag("--batch", 512),
+        queue_depth: args.usize_flag("--queue", 64),
+        shard_size: args.usize_flag("--shard", 16),
+        shards: args.usize_flag("--shards", 0),
+        event_backlog_cap: args.usize_flag("--backlog-cap", defaults.event_backlog_cap),
+        seed,
+        ..defaults
+    }
+}
+
+/// Launch the telemetry service from the shared `telemetry`/`watch` flag
+/// set: resolve the source (sim | faulty | replay), restore a checkpoint
+/// when `--restore` names one, and arm the `--checkpoint-dir` write hook.
+/// Returns the handle plus the fleet size and the pipeline identification
+/// is scored against.
+fn launch_telemetry(
+    args: &Args,
+    cfg: &telemetry::TelemetryConfig,
+    seed: u64,
+) -> Result<(telemetry::ServiceHandle, usize, PowerField, DriverEpoch)> {
+    // checkpoint/restore persistence (docs/CHECKPOINT_FORMAT.md):
+    // --restore resumes a crashed run from its last checkpoint,
+    // --checkpoint-dir arms the WindowClosed write hook
+    let restore_ck = match args.flag_value("--restore") {
+        Some(p) => Some(
+            telemetry::Checkpoint::load(std::path::Path::new(p))
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+        ),
+        None => None,
+    };
+    // score identification against the pipeline the fleet ran; a
+    // replayed log set is scored as post-530 instant (the emitter's
+    // default), with unrecognised models excluded from the metric
+    let (handle, n_total, field, driver) = match args.flag_value("--source").unwrap_or("sim") {
+        "replay" => {
+            let paths = args.flag_values("--replay-log");
+            if paths.is_empty() {
+                return Err(anyhow::anyhow!("--source replay needs at least one --replay-log PATH"));
+            }
+            let mut logs = Vec::with_capacity(paths.len());
+            for p in &paths {
+                logs.push(
+                    std::fs::read_to_string(p)
+                        .map_err(|e| anyhow::anyhow!("cannot read {p}: {e}"))?,
+                );
+            }
+            let n = logs.len();
+            let handle = match &restore_ck {
+                Some(ck) => {
+                    // start_from ignores the fleet for replay
+                    let fleet = Fleet {
+                        nodes: Vec::new(),
+                        config: FleetConfig {
+                            size: 0,
+                            models: Vec::new(),
+                            driver: DriverEpoch::Post530,
+                            field: PowerField::Instant,
+                            seed,
+                        },
+                    };
+                    let src = gpupower::telemetry::ServiceSource::Replay(logs);
+                    telemetry::TelemetryService::start_from(ck, &fleet, cfg, &src)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?
+                }
+                None => telemetry::TelemetryService::start_replay(&logs, cfg)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?,
+            };
+            (handle, n, PowerField::Instant, DriverEpoch::Post530)
+        }
+        source @ ("sim" | "faulty") => {
+            let fleet = Fleet::build(FleetConfig {
+                size: args.usize_flag("--gpus", 64),
+                models: args.flag_values("--model"),
+                driver: DriverEpoch::Post530,
+                field: PowerField::Instant,
+                seed,
+            });
+            let src = if source == "faulty" {
+                gpupower::telemetry::ServiceSource::Faulty(gpupower::telemetry::FaultPlan {
+                    dropout: args.f64_flag("--dropout", 0.0),
+                    outages: parse_fault_windows(&args.flag_values("--outage"))?,
+                    stuck: parse_fault_windows(&args.flag_values("--stuck"))?,
+                    restarts: args
+                        .flag_values("--restart")
+                        .iter()
+                        .map(|v| {
+                            v.parse::<f64>().map_err(|_| anyhow::anyhow!("bad --restart '{v}'"))
+                        })
+                        .collect::<Result<_>>()?,
+                    driver_updates: args
+                        .flag_values("--driver-update")
+                        .iter()
+                        .map(|v| parse_driver_update(v))
+                        .collect::<Result<_>>()?,
+                })
+            } else {
+                gpupower::telemetry::ServiceSource::Sim
+            };
+            let n = fleet.len();
+            let handle = match &restore_ck {
+                Some(ck) => telemetry::TelemetryService::start_from(ck, &fleet, cfg, &src)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?,
+                None => telemetry::TelemetryService::start(&fleet, cfg, &src),
+            };
+            (handle, n, fleet.config.field, fleet.config.driver)
+        }
+        other => return Err(anyhow::anyhow!("unknown --source '{other}' (sim|faulty|replay)")),
+    };
+    if let Some(ck) = &restore_ck {
+        let finished = ck
+            .nodes
+            .iter()
+            .filter(|n| n.stage != gpupower::telemetry::persist::NodeStage::InFlight)
+            .count();
+        println!(
+            "restored checkpoint: {} node(s) recorded ({} finished, {} resuming \
+             mid-stream), {} window(s) already closed",
+            ck.nodes.len(),
+            finished,
+            ck.nodes.len() - finished,
+            ck.windows_closed,
+        );
+    }
+    if let Some(dir) = args.flag_value("--checkpoint-dir") {
+        handle.enable_checkpoints(std::path::Path::new(dir));
+        println!("checkpointing into {dir}/checkpoint-NNNNNN.gpck at every closed window");
+    }
+    Ok((handle, n_total, field, driver))
+}
+
+/// Write the service's metrics to `path`, format chosen by extension:
+/// `.json` → the JSON metrics document, `.csv` → the rolling-window CSV,
+/// anything else → Prometheus text exposition.
+fn write_metrics_file(path: &str, handle: &telemetry::ServiceHandle) {
+    let body = if path.ends_with(".json") {
+        gpupower::obs::json_snapshot(&handle.metrics())
+    } else if path.ends_with(".csv") {
+        gpupower::obs::windows_csv(&handle.snapshot().windows())
+    } else {
+        gpupower::obs::prometheus_text(&handle.metrics())
+    };
+    if let Err(e) = std::fs::write(path, body) {
+        eprintln!("warning: could not write metrics to {path}: {e}");
+    }
+}
 
 fn main() -> Result<()> {
     let args = Args::new();
@@ -485,147 +668,24 @@ fn main() -> Result<()> {
             );
         }
         "telemetry" => {
-            let cfg = telemetry::TelemetryConfig {
-                duration_s: args.f64_flag("--duration", 40.0),
-                windows: args.usize_flag("--windows", 1),
-                bucket_s: args.f64_flag("--bucket", 1.0),
-                batch_size: args.usize_flag("--batch", 512),
-                queue_depth: args.usize_flag("--queue", 64),
-                shard_size: args.usize_flag("--shard", 16),
-                shards: args.usize_flag("--shards", 0),
-                seed,
-                ..Default::default()
-            };
+            let cfg = telemetry_cfg(&args, seed);
             let live_every = args.f64_flag("--live-every", 0.0);
-            // checkpoint/restore persistence (docs/CHECKPOINT_FORMAT.md):
-            // --restore resumes a crashed run from its last checkpoint,
-            // --checkpoint-dir arms the WindowClosed write hook, and
-            // --checkpoint-every additionally forces periodic writes
-            let restore_ck = match args.flag_value("--restore") {
-                Some(p) => Some(
-                    telemetry::Checkpoint::load(std::path::Path::new(p))
-                        .map_err(|e| anyhow::anyhow!("{e}"))?,
-                ),
-                None => None,
-            };
-            let ck_dir = args.flag_value("--checkpoint-dir").map(|s| s.to_string());
             let ck_every = args.f64_flag("--checkpoint-every", 0.0);
-            // score identification against the pipeline the fleet ran; a
-            // replayed log set is scored as post-530 instant (the emitter's
-            // default), with unrecognised models excluded from the metric
-            let (handle, n_total, field, driver) =
-                match args.flag_value("--source").unwrap_or("sim") {
-                    "replay" => {
-                        let paths = args.flag_values("--replay-log");
-                        if paths.is_empty() {
-                            return Err(anyhow::anyhow!(
-                                "--source replay needs at least one --replay-log PATH"
-                            ));
-                        }
-                        let mut logs = Vec::with_capacity(paths.len());
-                        for p in &paths {
-                            logs.push(
-                                std::fs::read_to_string(p)
-                                    .map_err(|e| anyhow::anyhow!("cannot read {p}: {e}"))?,
-                            );
-                        }
-                        let n = logs.len();
-                        let handle = match &restore_ck {
-                            Some(ck) => {
-                                // start_from ignores the fleet for replay
-                                let fleet = Fleet {
-                                    nodes: Vec::new(),
-                                    config: FleetConfig {
-                                        size: 0,
-                                        models: Vec::new(),
-                                        driver: DriverEpoch::Post530,
-                                        field: PowerField::Instant,
-                                        seed,
-                                    },
-                                };
-                                let src = gpupower::telemetry::ServiceSource::Replay(logs);
-                                telemetry::TelemetryService::start_from(ck, &fleet, &cfg, &src)
-                                    .map_err(|e| anyhow::anyhow!("{e}"))?
-                            }
-                            None => telemetry::TelemetryService::start_replay(&logs, &cfg)
-                                .map_err(|e| anyhow::anyhow!("{e}"))?,
-                        };
-                        (handle, n, PowerField::Instant, DriverEpoch::Post530)
-                    }
-                    source @ ("sim" | "faulty") => {
-                        let fleet = Fleet::build(FleetConfig {
-                            size: args.usize_flag("--gpus", 64),
-                            models: args.flag_values("--model"),
-                            driver: DriverEpoch::Post530,
-                            field: PowerField::Instant,
-                            seed,
-                        });
-                        let src = if source == "faulty" {
-                            gpupower::telemetry::ServiceSource::Faulty(gpupower::telemetry::FaultPlan {
-                                dropout: args.f64_flag("--dropout", 0.0),
-                                outages: parse_fault_windows(&args.flag_values("--outage"))?,
-                                stuck: parse_fault_windows(&args.flag_values("--stuck"))?,
-                                restarts: args
-                                    .flag_values("--restart")
-                                    .iter()
-                                    .map(|v| {
-                                        v.parse::<f64>()
-                                            .map_err(|_| anyhow::anyhow!("bad --restart '{v}'"))
-                                    })
-                                    .collect::<Result<_>>()?,
-                                driver_updates: args
-                                    .flag_values("--driver-update")
-                                    .iter()
-                                    .map(|v| parse_driver_update(v))
-                                    .collect::<Result<_>>()?,
-                            })
-                        } else {
-                            gpupower::telemetry::ServiceSource::Sim
-                        };
-                        let n = fleet.len();
-                        let handle = match &restore_ck {
-                            Some(ck) => {
-                                telemetry::TelemetryService::start_from(ck, &fleet, &cfg, &src)
-                                    .map_err(|e| anyhow::anyhow!("{e}"))?
-                            }
-                            None => telemetry::TelemetryService::start(&fleet, &cfg, &src),
-                        };
-                        (handle, n, fleet.config.field, fleet.config.driver)
-                    }
-                    other => {
-                        return Err(anyhow::anyhow!(
-                            "unknown --source '{other}' (sim|faulty|replay)"
-                        ))
-                    }
-                };
-            if let Some(ck) = &restore_ck {
-                let finished = ck
-                    .nodes
-                    .iter()
-                    .filter(|n| n.stage != gpupower::telemetry::persist::NodeStage::InFlight)
-                    .count();
-                println!(
-                    "restored checkpoint: {} node(s) recorded ({} finished, {} resuming \
-                     mid-stream), {} window(s) already closed",
-                    ck.nodes.len(),
-                    finished,
-                    ck.nodes.len() - finished,
-                    ck.windows_closed,
-                );
-            }
-            if let Some(dir) = &ck_dir {
-                handle.enable_checkpoints(std::path::Path::new(dir));
-                println!("checkpointing into {dir}/checkpoint-NNNNNN.gpck at every closed window");
-            }
+            let metrics_out = args.flag_value("--metrics-out").map(|s| s.to_string());
+            let metrics_every = args.f64_flag("--metrics-every", 0.0);
+            let (handle, n_total, field, driver) = launch_telemetry(&args, &cfg, seed)?;
             let want_live = live_every > 0.0;
-            let want_ck = ck_every > 0.0 && ck_dir.is_some();
-            if want_live || want_ck {
-                // rolling mid-ingest snapshots and/or forced periodic
-                // checkpoints: the service keeps running while we drive it
+            let want_ck = ck_every > 0.0 && args.has("--checkpoint-dir");
+            let want_metrics = metrics_every > 0.0 && metrics_out.is_some();
+            if want_live || want_ck || want_metrics {
+                // rolling mid-ingest snapshots, forced periodic
+                // checkpoints, and/or periodic metrics exports: the
+                // service keeps running while we drive it
                 let live_step = live_every.clamp(0.05, 10.0);
                 let ck_step = ck_every.clamp(0.05, 600.0);
+                let met_step = metrics_every.clamp(0.05, 600.0);
                 let begun = std::time::Instant::now();
-                let (mut lives, mut cks) = (0u64, 0u64);
+                let (mut lives, mut cks, mut mets) = (0u64, 0u64, 0u64);
                 while !handle.is_done() {
                     let mut next = f64::INFINITY;
                     if want_live {
@@ -633,6 +693,9 @@ fn main() -> Result<()> {
                     }
                     if want_ck {
                         next = next.min((cks + 1) as f64 * ck_step);
+                    }
+                    if want_metrics {
+                        next = next.min((mets + 1) as f64 * met_step);
                     }
                     let now = begun.elapsed().as_secs_f64();
                     if next > now {
@@ -648,25 +711,42 @@ fn main() -> Result<()> {
                             println!("[checkpoint] forced write at t+{now:.1} s");
                         }
                     }
+                    if want_metrics && now >= (mets + 1) as f64 * met_step {
+                        mets = (now / met_step) as u64;
+                        if let Some(p) = &metrics_out {
+                            write_metrics_file(p, &handle);
+                        }
+                    }
                     if want_live && now >= (lives + 1) as f64 * live_step {
                         lives = (now / live_step) as u64;
+                        // the status body is the exact string `repro
+                        // watch` renders in its status row, built from
+                        // the producer-side progress() gauges — in-queue
+                        // work is counted, so the ticker no longer
+                        // under-reports mid-ingest
                         let s = handle.snapshot();
                         let e = s.fleet_energy(0.0, s.duration_s);
                         let finished = s.accounts.nodes.iter().filter(|n| n.complete).count();
                         println!(
-                            "[live] nodes {}/{} streaming, {} finished, {} identified | \
-                             {} readings | naive {:.3} kJ, corrected {:.3} kJ (±{:.3} kJ)",
-                            s.stats.nodes,
-                            n_total,
-                            finished,
-                            s.registry.entries.len(),
-                            s.stats.readings,
-                            e.naive_j / 1e3,
-                            e.corrected_j / 1e3,
-                            e.bound_j / 1e3,
+                            "[live] {}",
+                            gpupower::obs::console::status_line(
+                                &handle.progress(),
+                                n_total,
+                                finished,
+                                s.registry.entries.len(),
+                                &e,
+                            )
                         );
                     }
                 }
+            }
+            if let Some(p) = &metrics_out {
+                // final export once every counter is settled
+                while !handle.is_done() {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                write_metrics_file(p, &handle);
+                println!("metrics written to {p}");
             }
             let snap = handle.join();
             save_and_print(
@@ -703,6 +783,75 @@ fn main() -> Result<()> {
             println!(
                 "scaled to 10,000 GPUs at $0.15/kWh, trusting the naive account is worth ${:.0}/year",
                 telemetry::query::annual_cost_error_usd(&snap, 10_000, 0.15)
+            );
+        }
+        "watch" => {
+            use gpupower::obs::console::{render_frame, EventFeed, WatchFrame};
+            let cfg = telemetry_cfg(&args, seed);
+            let (handle, n_total, _field, _driver) = launch_telemetry(&args, &cfg, seed)?;
+            let events = handle.subscribe();
+            let mut feed = EventFeed::new(6);
+            if args.has("--headless") {
+                // deterministic mode: wait for the drain, then render N
+                // identical post-drain frames (queues empty, accounts
+                // final, no wall-clock-derived field) for scripts/CI
+                let frames = args.usize_flag("--frames", 3).max(1);
+                while !handle.is_done() {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                feed.absorb(events.try_iter());
+                let snap = handle.snapshot();
+                let progress = handle.progress();
+                for i in 1..=frames {
+                    print!(
+                        "{}",
+                        render_frame(&WatchFrame {
+                            frame_no: i,
+                            n_total,
+                            snap: &snap,
+                            progress,
+                            metrics: handle.metrics_handle(),
+                            feed: &feed,
+                            ansi: false,
+                        })
+                    );
+                }
+            } else {
+                let step = args.f64_flag("--every", 0.5).clamp(0.05, 10.0);
+                let mut frame_no = 0usize;
+                loop {
+                    // sample done *before* the snapshot so the final
+                    // frame is guaranteed to render the drained state
+                    let done = handle.is_done();
+                    frame_no += 1;
+                    feed.absorb(events.try_iter());
+                    let snap = handle.snapshot();
+                    let progress = handle.progress();
+                    print!(
+                        "\x1b[2J\x1b[H{}",
+                        render_frame(&WatchFrame {
+                            frame_no,
+                            n_total,
+                            snap: &snap,
+                            progress,
+                            metrics: handle.metrics_handle(),
+                            feed: &feed,
+                            ansi: true,
+                        })
+                    );
+                    if done {
+                        break;
+                    }
+                    std::thread::sleep(std::time::Duration::from_secs_f64(step));
+                }
+            }
+            let snap = handle.join();
+            println!(
+                "watch complete: {} nodes, {} readings, {}/{} windows checkpointed",
+                snap.stats.nodes,
+                snap.stats.readings,
+                snap.windows_published,
+                snap.windows_closed,
             );
         }
         "characterize" => {

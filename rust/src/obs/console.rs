@@ -1,0 +1,295 @@
+//! The live operator console behind `repro watch`: renders one
+//! dashboard frame from a [`TelemetrySnapshot`], the live
+//! [`ServiceMetrics`], and the event feed a `subscribe()` stream has
+//! delivered so far.
+//!
+//! Frames are plain strings. In interactive mode the CLI clears the
+//! screen between frames (`--every S` cadence, minimal ANSI); with
+//! `--headless --frames N` it waits for the service to drain and then
+//! prints N identical frames to stdout — every field in a post-drain
+//! frame is a deterministic function of the run (queue depths are zero,
+//! the accounts are final, no wall-clock-derived value is rendered), so
+//! CI and the integration suite can pin frames byte-for-byte.
+//!
+//! [`status_line`] is shared with the `repro telemetry --live-every`
+//! output: both the `[live]` ticker and the watch dashboard build their
+//! progress row through this one function from
+//! `ServiceHandle::progress()`, which is what makes the two surfaces
+//! agree bit-for-bit.
+
+use std::collections::VecDeque;
+
+use super::metrics::ServiceMetrics;
+use crate::telemetry::{FleetEnergy, IngestStats, ServiceEvent, TelemetrySnapshot};
+
+/// The one-line progress summary shared by `repro telemetry
+/// --live-every` (prefixed `[live]`) and the watch dashboard's
+/// `status` row. Same inputs → same bytes, on both surfaces.
+pub fn status_line(
+    stats: &IngestStats,
+    n_total: usize,
+    finished: usize,
+    identified: usize,
+    e: &FleetEnergy,
+) -> String {
+    format!(
+        "nodes {}/{} streaming, {} finished, {} identified | {} readings | naive {:.3} kJ, corrected {:.3} kJ (±{:.3} kJ)",
+        stats.nodes,
+        n_total,
+        finished,
+        identified,
+        stats.readings,
+        e.naive_j / 1e3,
+        e.corrected_j / 1e3,
+        e.bound_j / 1e3,
+    )
+}
+
+/// Rolling digest of a `subscribe()` stream for the dashboard's event
+/// pane: counts drift suspicions, probe replays, and `Lagged` gaps, and
+/// keeps the most recent `cap` human-readable drift/recalibration lines.
+#[derive(Debug)]
+pub struct EventFeed {
+    cap: usize,
+    /// Drift suspicions seen on this stream.
+    pub drift: u64,
+    /// Probe replays (recalibrations) seen on this stream.
+    pub recal: u64,
+    /// Events this subscriber missed to backlog trimming.
+    pub lagged: u64,
+    lines: VecDeque<String>,
+}
+
+impl EventFeed {
+    /// A feed retaining the latest `cap` event lines.
+    pub fn new(cap: usize) -> EventFeed {
+        EventFeed { cap: cap.max(1), drift: 0, recal: 0, lagged: 0, lines: VecDeque::new() }
+    }
+
+    fn push(&mut self, line: String) {
+        self.lines.push_back(line);
+        while self.lines.len() > self.cap {
+            self.lines.pop_front();
+        }
+    }
+
+    /// Fold a batch of events (e.g. `stream.try_iter()`) into the feed.
+    pub fn absorb(&mut self, events: impl Iterator<Item = ServiceEvent>) {
+        for ev in events {
+            match ev {
+                ServiceEvent::DriftSuspected { node_id, t } => {
+                    self.drift += 1;
+                    self.push(format!("drift suspected on node {node_id} at t={t:.1} s"));
+                }
+                ServiceEvent::Recalibrated { node_id, t0 } => {
+                    self.recal += 1;
+                    self.push(format!("probe replay on node {node_id} at t={t0:.1} s"));
+                }
+                ServiceEvent::Lagged { missed } => self.lagged += missed,
+                _ => {}
+            }
+        }
+    }
+
+    /// The retained event lines, oldest first.
+    pub fn lines(&self) -> impl Iterator<Item = &str> {
+        self.lines.iter().map(String::as_str)
+    }
+}
+
+/// Everything one dashboard frame renders from. The snapshot and
+/// metrics are borrowed straight off a `ServiceHandle`; `progress` is
+/// its `progress()` result (producer-side gauges, so mid-batch work
+/// shows up).
+#[derive(Debug)]
+pub struct WatchFrame<'a> {
+    /// 1-based frame number (shown in the title).
+    pub frame_no: usize,
+    /// Fleet size (denominator of the streaming count).
+    pub n_total: usize,
+    /// The service state being rendered.
+    pub snap: &'a TelemetrySnapshot,
+    /// `ServiceHandle::progress()` at render time.
+    pub progress: IngestStats,
+    /// The live instrument set (`ServiceHandle::metrics_handle()`).
+    pub metrics: &'a ServiceMetrics,
+    /// Digest of the events delivered so far.
+    pub feed: &'a EventFeed,
+    /// Emit minimal ANSI styling (bold title). Off for `--headless`.
+    pub ansi: bool,
+}
+
+/// A 20-cell `[####................]` magnitude bar for a percentage
+/// error, 5 % per cell, clamped at 100 %.
+fn bar(pct: f64) -> String {
+    let filled = ((pct.abs().min(100.0) / 5.0).round() as usize).min(20);
+    let mut s = String::with_capacity(22);
+    s.push('[');
+    for i in 0..20 {
+        s.push(if i < filled { '#' } else { '.' });
+    }
+    s.push(']');
+    s
+}
+
+/// Render one dashboard frame: fleet energy ticker, shared status line,
+/// window/checkpoint state, per-generation naive-vs-corrected error
+/// bars, per-shard queue gauges, and the drift/recalibration feed.
+pub fn render_frame(f: &WatchFrame<'_>) -> String {
+    let mut out = String::new();
+    let title = format!("== repro watch — frame {} ==", f.frame_no);
+    if f.ansi {
+        out.push_str(&format!("\x1b[1m{title}\x1b[0m\n"));
+    } else {
+        out.push_str(&title);
+        out.push('\n');
+    }
+
+    // fleet energy ticker
+    let e = f.snap.fleet_energy(0.0, f.snap.duration_s);
+    let truth = if e.truth_j > 0.0 { format!("{:.3} kJ", e.truth_j / 1e3) } else { "-".into() };
+    out.push_str(&format!(
+        "fleet energy    naive {:.3} kJ | corrected {:.3} kJ (±{:.3} kJ) | truth {truth}\n",
+        e.naive_j / 1e3,
+        e.corrected_j / 1e3,
+        e.bound_j / 1e3,
+    ));
+
+    // the shared status line (bit-for-bit the `[live]` ticker's body)
+    let finished = f.snap.accounts.nodes.iter().filter(|n| n.complete).count();
+    let identified = f.snap.registry.entries.len();
+    out.push_str(&format!(
+        "status          {}\n",
+        status_line(&f.progress, f.n_total, finished, identified, &e)
+    ));
+
+    // windows and checkpoint state
+    let age = match f.metrics.checkpoint_age_ms() {
+        a if a < 0 => "-".to_string(),
+        a => format!("{:.1} s", a as f64 / 1e3),
+    };
+    out.push_str(&format!(
+        "windows         {}/{} closed, {} checkpointed | checkpoints {} | checkpoint age {age}\n",
+        f.metrics.windows_closed.get(),
+        f.snap.windows().len(),
+        f.metrics.windows_published.get(),
+        f.metrics.checkpoints_written.get(),
+    ));
+
+    // per-generation naive vs corrected |error| bars (5 % per cell)
+    out.push_str("per-generation  |err%| naive vs corrected (5% per cell)\n");
+    let mut gens: Vec<(String, f64, f64, f64)> = Vec::new();
+    for n in &f.snap.accounts.nodes {
+        let name = n.generation.name();
+        match gens.iter_mut().find(|g| g.0 == name) {
+            Some(g) => {
+                g.1 += n.truth_total_j();
+                g.2 += n.naive_total_j();
+                g.3 += n.corrected_total_j();
+            }
+            None => gens.push((
+                name.to_string(),
+                n.truth_total_j(),
+                n.naive_total_j(),
+                n.corrected_total_j(),
+            )),
+        }
+    }
+    for (name, truth, naive, corrected) in &gens {
+        if *truth > 0.0 {
+            let np = 100.0 * (naive - truth) / truth;
+            let cp = 100.0 * (corrected - truth) / truth;
+            out.push_str(&format!(
+                "  {name:<12} naive {np:>+8.2} {} corrected {cp:>+8.2} {}\n",
+                bar(np),
+                bar(cp)
+            ));
+        } else {
+            out.push_str(&format!("  {name:<12} no truth reference (replayed log)\n"));
+        }
+    }
+    if gens.is_empty() {
+        out.push_str("  (no accounts yet)\n");
+    }
+
+    // per-shard queue gauges
+    for (i, sm) in f.metrics.shards.iter().enumerate() {
+        out.push_str(&format!(
+            "shards          shard {i}: queue {} (high-water {}) | deferred {}\n",
+            sm.queue_depth.get(),
+            sm.queue_high_water.get(),
+            sm.deferred_readings.get(),
+        ));
+    }
+
+    // event feed
+    out.push_str(&format!(
+        "events          {} drift suspected, {} recalibrated | backlog {} ({} trimmed, {} missed)\n",
+        f.feed.drift,
+        f.feed.recal,
+        f.metrics.event_backlog_len.get(),
+        f.metrics.events_trimmed.get(),
+        f.feed.lagged,
+    ));
+    for l in f.feed.lines() {
+        out.push_str(&format!("  {l}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn energy() -> FleetEnergy {
+        FleetEnergy {
+            t0: 0.0,
+            t1: 40.0,
+            naive_j: 750.0,
+            corrected_j: 875.0,
+            bound_j: 25.0,
+            truth_j: 1000.0,
+        }
+    }
+
+    /// The exact status-line bytes are pinned — this is the contract
+    /// that keeps `[live]` and `repro watch` identical.
+    #[test]
+    fn status_line_is_pinned() {
+        let stats = IngestStats { nodes: 3, batches: 7, readings: 1234, ..Default::default() };
+        assert_eq!(
+            status_line(&stats, 4, 2, 3, &energy()),
+            "nodes 3/4 streaming, 2 finished, 3 identified | 1234 readings | \
+             naive 0.750 kJ, corrected 0.875 kJ (±0.025 kJ)"
+        );
+    }
+
+    #[test]
+    fn event_feed_counts_and_caps() {
+        let mut feed = EventFeed::new(2);
+        feed.absorb(
+            [
+                ServiceEvent::DriftSuspected { node_id: 1, t: 41.25 },
+                ServiceEvent::Recalibrated { node_id: 1, t0: 43.0 },
+                ServiceEvent::DriftSuspected { node_id: 2, t: 50.0 },
+                ServiceEvent::Lagged { missed: 5 },
+                ServiceEvent::ServiceComplete,
+            ]
+            .into_iter(),
+        );
+        assert_eq!((feed.drift, feed.recal, feed.lagged), (2, 1, 5));
+        let lines: Vec<&str> = feed.lines().collect();
+        assert_eq!(
+            lines,
+            ["probe replay on node 1 at t=43.0 s", "drift suspected on node 2 at t=50.0 s"],
+            "cap 2 keeps only the newest lines"
+        );
+    }
+
+    #[test]
+    fn bars_clamp_and_scale() {
+        assert_eq!(bar(0.0), "[....................]");
+        assert_eq!(bar(-50.0), "[##########..........]");
+        assert_eq!(bar(1e9), "[####################]");
+    }
+}

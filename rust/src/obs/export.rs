@@ -1,0 +1,346 @@
+//! Hand-rolled exporters over a [`MetricsSnapshot`]: Prometheus
+//! text-exposition, a JSON snapshot, and a pandas-ready CSV dump of
+//! rolling [`WindowSnapshot`]s. Zero dependencies; the escaping rules
+//! are pinned by round-trip tests below so a scraper never sees a
+//! malformed line no matter what ends up in a label value.
+//!
+//! The CLI surface is `repro telemetry --metrics-out PATH
+//! [--metrics-every S]`: the file extension picks the encoder
+//! (`.json` → [`json_snapshot`], `.csv` → [`windows_csv`], anything
+//! else → [`prometheus_text`]), and the library surface is
+//! `ServiceHandle::metrics()` plus these three functions.
+
+use super::metrics::{HistogramSnapshot, MetricDesc, Histogram, MetricsSnapshot};
+use crate::telemetry::WindowSnapshot;
+
+/// Escape a Prometheus label value: backslash, double quote, and
+/// newline, per the text-exposition format.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape a Prometheus HELP text: backslash and newline only (quotes
+/// are legal there).
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a `{k="v",...}` label block; `extra` appends one more pair
+/// (the histogram `le` bound). Empty label sets render as nothing.
+fn label_block(labels: &[(String, String)], extra: Option<(&str, String)>) -> String {
+    let mut pairs: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    if let Some((k, v)) = extra {
+        pairs.push(format!("{k}=\"{}\"", escape_label(&v)));
+    }
+    if pairs.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", pairs.join(","))
+    }
+}
+
+fn header(out: &mut String, last: &mut String, d: &MetricDesc, kind: &str) {
+    if *last != d.name {
+        out.push_str(&format!("# HELP {} {}\n# TYPE {} {}\n", d.name, escape_help(&d.help), d.name, kind));
+        *last = d.name.clone();
+    }
+}
+
+/// Encode a snapshot in the Prometheus text-exposition format:
+/// `# HELP`/`# TYPE` once per metric name, one line per series,
+/// histograms as cumulative `_bucket{le=...}` lines (empty buckets
+/// elided) plus `_sum`/`_count`.
+pub fn prometheus_text(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    let mut last = String::new();
+    for (d, v) in &snap.counters {
+        header(&mut out, &mut last, d, "counter");
+        out.push_str(&format!("{}{} {v}\n", d.name, label_block(&d.labels, None)));
+    }
+    for (d, v) in &snap.gauges {
+        header(&mut out, &mut last, d, "gauge");
+        out.push_str(&format!("{}{} {v}\n", d.name, label_block(&d.labels, None)));
+    }
+    for (d, h) in &snap.histograms {
+        header(&mut out, &mut last, d, "histogram");
+        let mut cum = 0u64;
+        for (b, n) in h.buckets.iter().enumerate() {
+            if *n == 0 {
+                continue;
+            }
+            cum += n;
+            let le = Histogram::upper_bound(b).to_string();
+            out.push_str(&format!(
+                "{}_bucket{} {cum}\n",
+                d.name,
+                label_block(&d.labels, Some(("le", le)))
+            ));
+        }
+        out.push_str(&format!(
+            "{}_bucket{} {}\n",
+            d.name,
+            label_block(&d.labels, Some(("le", "+Inf".to_string()))),
+            h.count()
+        ));
+        out.push_str(&format!("{}_sum{} {}\n", d.name, label_block(&d.labels, None), h.sum));
+        out.push_str(&format!("{}_count{} {}\n", d.name, label_block(&d.labels, None), h.count()));
+    }
+    out
+}
+
+/// Escape a JSON string body: quote, backslash, and all control
+/// characters (named escapes where JSON has them, `\u00XX` otherwise).
+fn escape_json(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_labels(labels: &[(String, String)]) -> String {
+    let pairs: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("\"{}\":\"{}\"", escape_json(k), escape_json(v)))
+        .collect();
+    format!("{{{}}}", pairs.join(","))
+}
+
+fn json_hist(h: &HistogramSnapshot) -> String {
+    let buckets: Vec<String> = h
+        .buckets
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| **n > 0)
+        .map(|(b, n)| format!("[{},{n}]", Histogram::upper_bound(b)))
+        .collect();
+    format!("{{\"count\":{},\"sum\":{},\"buckets\":[{}]}}", h.count(), h.sum, buckets.join(","))
+}
+
+/// Encode a snapshot as a single JSON document
+/// (`telemetry_metrics/v1`): three arrays of `{name, labels, value}`
+/// series, histograms with their non-empty `[upper_bound, count]`
+/// bucket pairs.
+pub fn json_snapshot(snap: &MetricsSnapshot) -> String {
+    let mut out = String::from("{\n  \"schema\": \"telemetry_metrics/v1\",\n  \"counters\": [");
+    let series = |d: &MetricDesc, val: String| {
+        format!(
+            "\n    {{\"name\":\"{}\",\"labels\":{},\"value\":{val}}}",
+            escape_json(&d.name),
+            json_labels(&d.labels)
+        )
+    };
+    let join = |items: Vec<String>| items.join(",");
+    out.push_str(&join(snap.counters.iter().map(|(d, v)| series(d, v.to_string())).collect()));
+    out.push_str("\n  ],\n  \"gauges\": [");
+    out.push_str(&join(snap.gauges.iter().map(|(d, v)| series(d, v.to_string())).collect()));
+    out.push_str("\n  ],\n  \"histograms\": [");
+    out.push_str(&join(snap.histograms.iter().map(|(d, h)| series(d, json_hist(h))).collect()));
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Dump rolling window snapshots as a pandas-ready CSV: one row per
+/// observation window, full-precision floats (`read_csv` round-trips
+/// them), percentage errors precomputed.
+pub fn windows_csv(wins: &[WindowSnapshot]) -> String {
+    let mut out = String::from(
+        "window,t0_s,t1_s,truth_j,naive_j,corrected_j,bound_j,naive_pct_err,corrected_pct_err\n",
+    );
+    for w in wins {
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{}\n",
+            w.index,
+            w.t0,
+            w.t1,
+            w.truth_j,
+            w.naive_j,
+            w.corrected_j,
+            w.bound_j,
+            w.naive_pct(),
+            w.corrected_pct()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::MetricsRegistry;
+
+    fn labelled_snapshot() -> MetricsSnapshot {
+        let reg = MetricsRegistry::default();
+        let c = reg.counter(
+            "demo_total",
+            "demo help",
+            &[("path", "C:\\tmp\n\"x\"".to_string())],
+        );
+        c.add(3);
+        let g = reg.gauge("demo_depth", "a depth", &[]);
+        g.set(-2);
+        let h = reg.histogram("demo_ns", "a latency", &[("shard", "0".to_string())]);
+        h.record(1);
+        h.record(3);
+        h.record(3);
+        h.record(900);
+        reg.snapshot()
+    }
+
+    /// The exact text-exposition bytes are pinned, escaping included:
+    /// backslash → `\\`, quote → `\"`, newline → `\n`, histograms
+    /// cumulative with `+Inf`.
+    #[test]
+    fn prometheus_encoding_is_pinned() {
+        let text = prometheus_text(&labelled_snapshot());
+        let want = "\
+# HELP demo_total demo help
+# TYPE demo_total counter
+demo_total{path=\"C:\\\\tmp\\n\\\"x\\\"\"} 3
+# HELP demo_depth a depth
+# TYPE demo_depth gauge
+demo_depth -2
+# HELP demo_ns a latency
+# TYPE demo_ns histogram
+demo_ns_bucket{shard=\"0\",le=\"2\"} 1
+demo_ns_bucket{shard=\"0\",le=\"4\"} 3
+demo_ns_bucket{shard=\"0\",le=\"1024\"} 4
+demo_ns_bucket{shard=\"0\",le=\"+Inf\"} 4
+demo_ns_sum{shard=\"0\"} 907
+demo_ns_count{shard=\"0\"} 4
+";
+        assert_eq!(text, want);
+    }
+
+    /// Un-escaping the escaped label value recovers the original string
+    /// — the "round-trip" guarantee a scraper relies on.
+    #[test]
+    fn label_escaping_round_trips() {
+        let nasty = "a\\b \"quoted\"\nnext \\n literal \\\" too";
+        let escaped = escape_label(nasty);
+        assert!(!escaped.contains('\n'), "escaped value is single-line");
+        // the text-format unescape: \\ -> \, \" -> ", \n -> newline
+        let mut back = String::new();
+        let mut it = escaped.chars();
+        while let Some(c) = it.next() {
+            if c != '\\' {
+                back.push(c);
+                continue;
+            }
+            match it.next() {
+                Some('\\') => back.push('\\'),
+                Some('"') => back.push('"'),
+                Some('n') => back.push('\n'),
+                other => panic!("unknown escape \\{other:?}"),
+            }
+        }
+        assert_eq!(back, nasty);
+    }
+
+    /// JSON escaping is pinned and round-trips through a standard JSON
+    /// string unescape (quotes, backslashes, control characters).
+    #[test]
+    fn json_escaping_round_trips() {
+        let nasty = "say \"hi\"\\\n\tctrl:\u{1}";
+        let escaped = escape_json(nasty);
+        assert_eq!(escaped, "say \\\"hi\\\"\\\\\\n\\tctrl:\\u0001");
+        let mut back = String::new();
+        let mut it = escaped.chars();
+        while let Some(c) = it.next() {
+            if c != '\\' {
+                back.push(c);
+                continue;
+            }
+            match it.next() {
+                Some('"') => back.push('"'),
+                Some('\\') => back.push('\\'),
+                Some('n') => back.push('\n'),
+                Some('r') => back.push('\r'),
+                Some('t') => back.push('\t'),
+                Some('u') => {
+                    let hex: String = (0..4).map(|_| it.next().unwrap()).collect();
+                    back.push(char::from_u32(u32::from_str_radix(&hex, 16).unwrap()).unwrap());
+                }
+                other => panic!("unknown escape \\{other:?}"),
+            }
+        }
+        assert_eq!(back, nasty);
+    }
+
+    #[test]
+    fn json_document_shape_is_pinned() {
+        let doc = json_snapshot(&labelled_snapshot());
+        assert!(doc.starts_with("{\n  \"schema\": \"telemetry_metrics/v1\""));
+        assert!(doc.contains(
+            "{\"name\":\"demo_total\",\"labels\":{\"path\":\"C:\\\\tmp\\n\\\"x\\\"\"},\"value\":3}"
+        ));
+        assert!(doc.contains("{\"name\":\"demo_depth\",\"labels\":{},\"value\":-2}"));
+        assert!(doc.contains("\"value\":{\"count\":4,\"sum\":907,\"buckets\":[[2,1],[4,2],[1024,1]]}"));
+        assert!(doc.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn windows_csv_is_pandas_ready() {
+        // energies chosen so the percentage errors are exact in binary
+        // (−25 %, −12.5 %) and the pinned strings can't drift by an ulp
+        let wins = [
+            WindowSnapshot {
+                index: 0,
+                t0: 0.0,
+                t1: 40.0,
+                naive_j: 750.0,
+                corrected_j: 875.0,
+                bound_j: 25.0,
+                truth_j: 1000.0,
+            },
+            WindowSnapshot {
+                index: 1,
+                t0: 40.0,
+                t1: 80.0,
+                naive_j: 375.0,
+                corrected_j: 437.5,
+                bound_j: 12.5,
+                truth_j: 500.0,
+            },
+        ];
+        let csv = windows_csv(&wins);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(
+            lines[0],
+            "window,t0_s,t1_s,truth_j,naive_j,corrected_j,bound_j,naive_pct_err,corrected_pct_err"
+        );
+        assert_eq!(lines[1], "0,0,40,1000,750,875,25,-25,-12.5");
+        assert_eq!(lines[2], "1,40,80,500,375,437.5,12.5,-25,-12.5");
+        // every row has the header's arity — what read_csv needs
+        for l in &lines[1..] {
+            assert_eq!(l.split(',').count(), 9);
+        }
+    }
+}

@@ -1,0 +1,593 @@
+//! Lock-free metric primitives and the process-wide registry.
+//!
+//! Three instrument kinds, all safe to sample from any thread without a
+//! lock:
+//!
+//! * [`Counter`] — monotone `AtomicU64`; one relaxed `fetch_add` per
+//!   sample.
+//! * [`Gauge`] — signed `AtomicI64` level (queue depths, backlog lengths,
+//!   byte sizes, millisecond marks); relaxed `store`/`fetch_add`.
+//! * [`Histogram`] — fixed array of log2 buckets plus a running sum; a
+//!   sample is two relaxed `fetch_add`s (bucket + sum), no allocation,
+//!   no resizing, no lock.
+//!
+//! Ordering: every operation is `Ordering::Relaxed` on purpose. Metrics
+//! are *observational* — they never gate control flow, so they need
+//! atomicity (no torn counts) but not inter-thread ordering. A reader
+//! may observe counters from an in-flight batch slightly out of step
+//! with each other; totals are exact once the writers quiesce (thread
+//! join is the synchronisation point, exactly as for
+//! `IngestStats`). This is what keeps the hot-path cost to one relaxed
+//! atomic op per reading.
+//!
+//! [`MetricsRegistry`] is the cold-path directory: registration takes a
+//! `Mutex` once per metric at service launch, hands back an `Arc` to the
+//! instrument, and never touches the hot path again. [`snapshot`]
+//! ([`MetricsRegistry::snapshot`]) produces a [`MetricsSnapshot`] — a
+//! plain, sorted value type the [`super::export`] encoders and the
+//! [`super::console`] dashboard render without holding any lock.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Monotone event counter. One relaxed atomic add per sample.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add 1.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current total.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Signed instantaneous level (queue depth, backlog length, bytes,
+/// millisecond marks). Relaxed atomics throughout.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    /// Overwrite the level.
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Shift the level by `d` and return the post-shift value (so a
+    /// producer can feed a high-water mark without a second load).
+    pub fn add(&self, d: i64) -> i64 {
+        self.0.fetch_add(d, Ordering::Relaxed) + d
+    }
+
+    /// Raise the level to `v` if `v` is higher (high-water marks).
+    pub fn fetch_max(&self, v: i64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Current level.
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of log2 buckets a [`Histogram`] holds. Bucket `b` covers
+/// `[2^b, 2^(b+1))`, so 44 buckets span 1 ns to ~4.8 hours when samples
+/// are nanoseconds — wide enough that no latency this service can
+/// produce falls off the end.
+pub const HISTOGRAM_BUCKETS: usize = 44;
+
+/// Fixed-bucket log2 histogram: bucket `b` counts samples in
+/// `[2^b, 2^(b+1))` (samples of 0 land in bucket 0). Recording is two
+/// relaxed atomic adds — bucket count and running sum — with no lock,
+/// allocation, or resize ever.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HISTOGRAM_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// The bucket index `v` falls into: `floor(log2(v))`, clamped to the
+    /// top bucket; 0 and 1 land in bucket 0.
+    pub fn bucket_of(v: u64) -> usize {
+        if v <= 1 {
+            0
+        } else {
+            ((63 - v.leading_zeros()) as usize).min(HISTOGRAM_BUCKETS - 1)
+        }
+    }
+
+    /// Exclusive upper bound of bucket `b` (`2^(b+1)`); the top bucket
+    /// is unbounded in spirit but reports its nominal edge.
+    pub fn upper_bound(b: usize) -> u64 {
+        1u64 << (b as u32 + 1).min(63)
+    }
+
+    /// Record one sample.
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Copy the current counts out into a plain value.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// Name, help text, and label set identifying one metric series.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct MetricDesc {
+    /// Metric name (`snake_case`, Prometheus-compatible).
+    pub name: String,
+    /// One-line human description (the Prometheus `# HELP` line).
+    pub help: String,
+    /// Label key/value pairs distinguishing series of the same name.
+    pub labels: Vec<(String, String)>,
+}
+
+/// Point-in-time copy of one [`Histogram`].
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HistogramSnapshot {
+    /// Per-bucket sample counts ([`HISTOGRAM_BUCKETS`] entries; bucket
+    /// `b` covers `[2^b, 2^(b+1))`).
+    pub buckets: Vec<u64>,
+    /// Sum of all recorded sample values.
+    pub sum: u64,
+}
+
+impl HistogramSnapshot {
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+}
+
+enum Instrument {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+struct Registration {
+    desc: MetricDesc,
+    instrument: Instrument,
+}
+
+/// Cold-path directory of every registered instrument. Registration
+/// locks a `Mutex` once (at service launch); sampling goes through the
+/// returned `Arc` and never sees the registry again.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Vec<Registration>>,
+}
+
+impl std::fmt::Debug for MetricsRegistry {
+    fn fmt(&self, fm: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let n = self.inner.lock().map(|v| v.len()).unwrap_or(0);
+        write!(fm, "MetricsRegistry({n} series)")
+    }
+}
+
+impl MetricsRegistry {
+    fn desc(name: &str, help: &str, labels: &[(&str, String)]) -> MetricDesc {
+        MetricDesc {
+            name: name.to_string(),
+            help: help.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+        }
+    }
+
+    /// Register (and return) a counter series.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, String)]) -> Arc<Counter> {
+        let c = Arc::new(Counter::default());
+        let mut reg = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        reg.push(Registration {
+            desc: Self::desc(name, help, labels),
+            instrument: Instrument::Counter(Arc::clone(&c)),
+        });
+        c
+    }
+
+    /// Register (and return) a gauge series.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, String)]) -> Arc<Gauge> {
+        let g = Arc::new(Gauge::default());
+        let mut reg = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        reg.push(Registration {
+            desc: Self::desc(name, help, labels),
+            instrument: Instrument::Gauge(Arc::clone(&g)),
+        });
+        g
+    }
+
+    /// Register (and return) a histogram series.
+    pub fn histogram(&self, name: &str, help: &str, labels: &[(&str, String)]) -> Arc<Histogram> {
+        let h = Arc::new(Histogram::new());
+        let mut reg = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        reg.push(Registration {
+            desc: Self::desc(name, help, labels),
+            instrument: Instrument::Histogram(Arc::clone(&h)),
+        });
+        h
+    }
+
+    /// Copy every series into a sorted, lock-free value the exporters
+    /// and the console render from. Sorted by (name, labels) so output
+    /// is deterministic regardless of registration order.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let reg = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let mut snap = MetricsSnapshot::default();
+        for r in reg.iter() {
+            match &r.instrument {
+                Instrument::Counter(c) => snap.counters.push((r.desc.clone(), c.get())),
+                Instrument::Gauge(g) => snap.gauges.push((r.desc.clone(), g.get())),
+                Instrument::Histogram(h) => snap.histograms.push((r.desc.clone(), h.snapshot())),
+            }
+        }
+        snap.counters.sort_by(|a, b| a.0.cmp(&b.0));
+        snap.gauges.sort_by(|a, b| a.0.cmp(&b.0));
+        snap.histograms.sort_by(|a, b| a.0.cmp(&b.0));
+        snap
+    }
+}
+
+/// Point-in-time copy of every registered series, sorted by
+/// (name, labels). Plain data: clone it, ship it across threads, render
+/// it — no locks, no `Arc`s back into the live service.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricsSnapshot {
+    /// Counter series and their totals.
+    pub counters: Vec<(MetricDesc, u64)>,
+    /// Gauge series and their levels.
+    pub gauges: Vec<(MetricDesc, i64)>,
+    /// Histogram series and their bucket counts.
+    pub histograms: Vec<(MetricDesc, HistogramSnapshot)>,
+}
+
+impl MetricsSnapshot {
+    /// Sum of every counter series named `name` (labelled series of one
+    /// name add up — e.g. total readings across shards).
+    pub fn counter_total(&self, name: &str) -> u64 {
+        self.counters.iter().filter(|(d, _)| d.name == name).map(|(_, v)| v).sum()
+    }
+
+    /// Sum of every gauge series named `name`, or `None` if no such
+    /// series exists.
+    pub fn gauge_total(&self, name: &str) -> Option<i64> {
+        let mut hit = false;
+        let mut total = 0i64;
+        for (d, v) in &self.gauges {
+            if d.name == name {
+                hit = true;
+                total += v;
+            }
+        }
+        hit.then_some(total)
+    }
+}
+
+/// Per-accounting-shard instruments. Producer workers drive the
+/// counters and queue gauges (so they see mid-batch work the consumer
+/// hasn't drained yet); the consumer drives the deferred-readings gauge
+/// and decrements the queue depth as it drains.
+#[derive(Debug)]
+pub struct ShardMetrics {
+    /// Node streams started on this shard.
+    pub nodes: Arc<Counter>,
+    /// Reading batches pushed to this shard's queue.
+    pub batches: Arc<Counter>,
+    /// Power readings pushed to this shard's queue.
+    pub readings: Arc<Counter>,
+    /// Messages currently in flight (queued or being consumed).
+    pub queue_depth: Arc<Gauge>,
+    /// Highest queue depth ever observed (backpressure indicator).
+    pub queue_high_water: Arc<Gauge>,
+    /// Readings deferred in accountants awaiting epoch identification.
+    pub deferred_readings: Arc<Gauge>,
+    /// Producer batch-push latency (blocking send), nanoseconds.
+    pub push_wait_ns: Arc<Histogram>,
+}
+
+/// Every instrument the telemetry service exposes, pre-registered at
+/// launch so the hot path never touches the registry. Held in the
+/// service's shared core; [`crate::telemetry::ServiceHandle::metrics`]
+/// snapshots it and `repro watch` renders it live.
+///
+/// `enabled == false` (from `TelemetryConfig::metrics`) turns the
+/// *hot-path* sampling off — the instruments still exist and read as
+/// zero/idle — which is what the instrumentation-overhead bench A/Bs.
+/// Cold-path updates (event backlog, windows, checkpoints) are always
+/// on: they are one atomic op per *event*, not per reading.
+#[derive(Debug)]
+pub struct ServiceMetrics {
+    /// Whether hot-path (per-reading / per-batch) sampling is active.
+    pub enabled: bool,
+    /// The directory behind [`ServiceMetrics::snapshot`].
+    pub registry: MetricsRegistry,
+    /// Per-shard instruments, indexed by shard id.
+    pub shards: Vec<ShardMetrics>,
+    /// Adaptive/commanded probe replays observed at the producers.
+    pub recalibrations: Arc<Counter>,
+    /// Drift-monitor suspicions raised at the producers.
+    pub drift_suspected: Arc<Counter>,
+    /// Service events emitted (retained + trimmed).
+    pub events_emitted: Arc<Counter>,
+    /// Events evicted from the bounded backlog.
+    pub events_trimmed: Arc<Counter>,
+    /// Events currently retained in the backlog.
+    pub event_backlog_len: Arc<Gauge>,
+    /// Observation windows closed (final) so far.
+    pub windows_closed: Arc<Gauge>,
+    /// Observation windows covered by a published checkpoint file.
+    pub windows_published: Arc<Gauge>,
+    /// Checkpoint files published.
+    pub checkpoints_written: Arc<Counter>,
+    /// Checkpoint encode+write+rename duration, nanoseconds.
+    pub checkpoint_write_ns: Arc<Histogram>,
+    /// Byte size of the most recent checkpoint file.
+    pub checkpoint_bytes: Arc<Gauge>,
+    /// Service uptime at the most recent checkpoint write, milliseconds
+    /// (−1 until the first write).
+    pub checkpoint_last_write_ms: Arc<Gauge>,
+    uptime_ms: Arc<Gauge>,
+    started: Instant,
+}
+
+impl ServiceMetrics {
+    /// Register the full instrument set for an `n_shards`-shard service.
+    pub fn new(n_shards: usize, enabled: bool) -> ServiceMetrics {
+        let reg = MetricsRegistry::default();
+        let shards = (0..n_shards.max(1))
+            .map(|i| {
+                let l = [("shard", i.to_string())];
+                ShardMetrics {
+                    nodes: reg.counter(
+                        "telemetry_shard_nodes_total",
+                        "Node streams started, by owning accounting shard.",
+                        &l,
+                    ),
+                    batches: reg.counter(
+                        "telemetry_shard_batches_total",
+                        "Reading batches pushed to the shard queue.",
+                        &l,
+                    ),
+                    readings: reg.counter(
+                        "telemetry_shard_readings_total",
+                        "Power readings pushed to the shard queue.",
+                        &l,
+                    ),
+                    queue_depth: reg.gauge(
+                        "telemetry_shard_queue_depth",
+                        "Messages currently in flight on the shard queue.",
+                        &l,
+                    ),
+                    queue_high_water: reg.gauge(
+                        "telemetry_shard_queue_high_water",
+                        "Highest observed shard queue depth.",
+                        &l,
+                    ),
+                    deferred_readings: reg.gauge(
+                        "telemetry_shard_deferred_readings",
+                        "Readings deferred awaiting epoch identification.",
+                        &l,
+                    ),
+                    push_wait_ns: reg.histogram(
+                        "telemetry_shard_push_wait_ns",
+                        "Producer batch-push latency (blocking send), nanoseconds.",
+                        &l,
+                    ),
+                }
+            })
+            .collect();
+        let m = ServiceMetrics {
+            enabled,
+            shards,
+            recalibrations: reg.counter(
+                "telemetry_recalibrations_total",
+                "Adaptive/commanded probe replays.",
+                &[],
+            ),
+            drift_suspected: reg.counter(
+                "telemetry_drift_suspected_total",
+                "Drift-monitor suspicions raised.",
+                &[],
+            ),
+            events_emitted: reg.counter("telemetry_events_total", "Service events emitted.", &[]),
+            events_trimmed: reg.counter(
+                "telemetry_events_trimmed_total",
+                "Events evicted from the bounded backlog.",
+                &[],
+            ),
+            event_backlog_len: reg.gauge(
+                "telemetry_event_backlog_len",
+                "Events currently retained in the backlog.",
+                &[],
+            ),
+            windows_closed: reg.gauge(
+                "telemetry_windows_closed",
+                "Observation windows closed (final).",
+                &[],
+            ),
+            windows_published: reg.gauge(
+                "telemetry_windows_published",
+                "Observation windows covered by a published checkpoint.",
+                &[],
+            ),
+            checkpoints_written: reg.counter(
+                "telemetry_checkpoints_total",
+                "Checkpoint files published.",
+                &[],
+            ),
+            checkpoint_write_ns: reg.histogram(
+                "telemetry_checkpoint_write_ns",
+                "Checkpoint encode+write+rename duration, nanoseconds.",
+                &[],
+            ),
+            checkpoint_bytes: reg.gauge(
+                "telemetry_checkpoint_bytes",
+                "Size of the most recent checkpoint file, bytes.",
+                &[],
+            ),
+            checkpoint_last_write_ms: reg.gauge(
+                "telemetry_checkpoint_last_write_ms",
+                "Uptime at the most recent checkpoint write, ms (-1 before any).",
+                &[],
+            ),
+            uptime_ms: reg.gauge("telemetry_uptime_ms", "Service uptime, milliseconds.", &[]),
+            registry: reg,
+            started: Instant::now(),
+        };
+        m.checkpoint_last_write_ms.set(-1);
+        m
+    }
+
+    /// Milliseconds since the service launched.
+    pub fn elapsed_ms(&self) -> i64 {
+        self.started.elapsed().as_millis() as i64
+    }
+
+    /// Milliseconds since the last checkpoint write, or −1 if none has
+    /// been written.
+    pub fn checkpoint_age_ms(&self) -> i64 {
+        let last = self.checkpoint_last_write_ms.get();
+        if last < 0 {
+            -1
+        } else {
+            (self.elapsed_ms() - last).max(0)
+        }
+    }
+
+    /// Refresh the derived gauges (uptime) and snapshot every series.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.uptime_ms.set(self.elapsed_ms());
+        self.registry.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::default();
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+
+        let g = Gauge::default();
+        g.set(7);
+        assert_eq!(g.add(-3), 4);
+        g.fetch_max(10);
+        assert_eq!(g.get(), 10);
+        g.fetch_max(2);
+        assert_eq!(g.get(), 10, "fetch_max never lowers");
+    }
+
+    #[test]
+    fn histogram_bucket_edges() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 0);
+        assert_eq!(Histogram::bucket_of(2), 1);
+        assert_eq!(Histogram::bucket_of(3), 1);
+        assert_eq!(Histogram::bucket_of(4), 2);
+        assert_eq!(Histogram::bucket_of(1023), 9);
+        assert_eq!(Histogram::bucket_of(1024), 10);
+        assert_eq!(Histogram::bucket_of(u64::MAX), HISTOGRAM_BUCKETS - 1);
+        assert_eq!(Histogram::upper_bound(0), 2);
+        assert_eq!(Histogram::upper_bound(9), 1024);
+
+        let h = Histogram::new();
+        h.record(0);
+        h.record(1);
+        h.record(1000);
+        let s = h.snapshot();
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.sum, 1001);
+        assert_eq!(s.buckets[0], 2);
+        assert_eq!(s.buckets[9], 1);
+    }
+
+    #[test]
+    fn registry_snapshot_is_sorted_and_summable() {
+        let reg = MetricsRegistry::default();
+        // register out of order on purpose
+        let b = reg.counter("zzz_total", "last by name", &[]);
+        let a1 = reg.counter("aaa_total", "first by name", &[("shard", "1".to_string())]);
+        let a0 = reg.counter("aaa_total", "first by name", &[("shard", "0".to_string())]);
+        let g = reg.gauge("depth", "a gauge", &[]);
+        a0.add(2);
+        a1.add(3);
+        b.inc();
+        g.set(-5);
+
+        let snap = reg.snapshot();
+        let names: Vec<&str> = snap.counters.iter().map(|(d, _)| d.name.as_str()).collect();
+        assert_eq!(names, ["aaa_total", "aaa_total", "zzz_total"]);
+        assert_eq!(snap.counters[0].0.labels[0].1, "0", "label order sorted too");
+        assert_eq!(snap.counter_total("aaa_total"), 5);
+        assert_eq!(snap.gauge_total("depth"), Some(-5));
+        assert_eq!(snap.gauge_total("missing"), None);
+    }
+
+    #[test]
+    fn counters_are_exact_under_contention() {
+        let c = Arc::new(Counter::default());
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), 40_000);
+    }
+
+    #[test]
+    fn service_metrics_register_per_shard_series() {
+        let m = ServiceMetrics::new(3, true);
+        assert_eq!(m.shards.len(), 3);
+        m.shards[2].readings.add(9);
+        assert_eq!(m.checkpoint_age_ms(), -1, "no checkpoint yet");
+        let snap = m.snapshot();
+        assert_eq!(snap.counter_total("telemetry_shard_readings_total"), 9);
+        assert_eq!(
+            snap.counters.iter().filter(|(d, _)| d.name == "telemetry_shard_readings_total").count(),
+            3
+        );
+        assert!(snap.gauge_total("telemetry_uptime_ms").is_some());
+    }
+}

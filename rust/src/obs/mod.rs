@@ -1,0 +1,44 @@
+//! Zero-dependency observability for the telemetry service: the paper's
+//! warning applied to ourselves.
+//!
+//! The paper's finding is that operators trust a sensor they cannot see
+//! into — nvidia-smi attends to the power rail ~25 % of the time on
+//! A100/H100 and nobody notices until an external meter is attached.
+//! The collector this crate grew has the same blind spot one level up:
+//! a sharded, checkpointing, drift-recalibrating service whose internal
+//! health (queue depths, push latency, deferred backlogs, event-backlog
+//! growth, checkpoint age) was invisible at runtime. This module is the
+//! external meter for the collector itself.
+//!
+//! * [`metrics`] — lock-free primitives ([`metrics::Counter`],
+//!   [`metrics::Gauge`], fixed-bucket log2 [`metrics::Histogram`]) and
+//!   the pre-registered [`metrics::ServiceMetrics`] instrument set. One
+//!   relaxed atomic op per hot-path sample; registration is cold-path
+//!   only. Sampling is **purely observational**: it never changes
+//!   accounting arithmetic, event ordering, or any snapshot the
+//!   determinism doctrine covers, and `TelemetryConfig::metrics = false`
+//!   turns hot-path sampling off entirely (the A/B the overhead bench
+//!   gates at <2 %).
+//! * [`export`] — hand-rolled Prometheus text-exposition and JSON
+//!   encoders over a [`metrics::MetricsSnapshot`] (escaping pinned by
+//!   tests) plus a pandas-ready CSV dump of rolling window snapshots;
+//!   surfaced as `ServiceHandle::metrics()` and `repro telemetry
+//!   --metrics-out PATH --metrics-every S`.
+//! * [`console`] — the `repro watch` dashboard: fleet energy ticker,
+//!   the status line shared bit-for-bit with `--live-every`,
+//!   per-generation error bars, per-shard queue gauges, checkpoint age,
+//!   and the drift/recalibration event feed, with a deterministic
+//!   `--headless --frames N` mode for CI.
+
+#![warn(missing_docs)]
+
+pub mod console;
+pub mod export;
+pub mod metrics;
+
+pub use console::{render_frame, status_line, EventFeed, WatchFrame};
+pub use export::{json_snapshot, prometheus_text, windows_csv};
+pub use metrics::{
+    Counter, Gauge, Histogram, HistogramSnapshot, MetricDesc, MetricsRegistry, MetricsSnapshot,
+    ServiceMetrics, ShardMetrics,
+};

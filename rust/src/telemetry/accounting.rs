@@ -396,6 +396,15 @@ impl NodeAccountant {
         self.epochs.push(EpochSpan { t0, shift_s: 0.0, coverage: 1.0 });
     }
 
+    /// Readings currently deferred awaiting their epoch's identification
+    /// (drained through the corrected account by
+    /// [`Self::identify_span`]). The observability layer's per-shard
+    /// deferred-readings gauge tracks this after each accountant
+    /// mutation.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
     /// Supply the identity of the oldest unidentified span, draining every
     /// deferred reading it governs through the corrected account.
     pub fn identify_span(&mut self, identity: &SensorIdentity) {

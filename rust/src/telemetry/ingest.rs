@@ -62,8 +62,10 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::bench::workloads::{Workload, WORKLOADS};
+use crate::obs::metrics::{ServiceMetrics, ShardMetrics};
 use crate::rng::splitmix64;
 use crate::sim::activity::ActivitySignal;
 use crate::sim::profile::Generation;
@@ -393,13 +395,16 @@ impl Default for NodeScratch {
 }
 
 /// The producer side of the bounded queues: one send handle per
-/// accounting shard, the node-id routing map, the batch size, and the
-/// buffer-recycling pool (shared — recycled buffers are fungible).
+/// accounting shard, the node-id routing map, the batch size, the
+/// buffer-recycling pool (shared — recycled buffers are fungible), and
+/// the service's instrument set (producer-side counters/gauges — see
+/// [`ShardMetrics`]).
 pub(crate) struct Emitter<'a> {
     pub(crate) txs: &'a [SyncSender<IngestMsg>],
     pub(crate) map: ShardMap,
     pub(crate) pool: &'a Mutex<Receiver<Vec<(f64, f64)>>>,
     pub(crate) batch: usize,
+    pub(crate) metrics: &'a ServiceMetrics,
 }
 
 impl Emitter<'_> {
@@ -422,6 +427,7 @@ impl Emitter<'_> {
 pub(crate) struct NodeEmitter<'a, 'b> {
     emit: &'b Emitter<'a>,
     tx: &'b SyncSender<IngestMsg>,
+    sm: &'a ShardMetrics,
     node_id: usize,
     buf: Vec<(f64, f64)>,
     dead: bool,
@@ -430,23 +436,57 @@ pub(crate) struct NodeEmitter<'a, 'b> {
 impl<'a, 'b> NodeEmitter<'a, 'b> {
     pub(crate) fn new(emit: &'b Emitter<'a>, node_id: usize) -> Self {
         let buf = emit.fresh_buf();
-        let tx = &emit.txs[emit.map.shard_of(node_id)];
-        NodeEmitter { emit, tx, node_id, buf, dead: false }
+        let shard = emit.map.shard_of(node_id);
+        let tx = &emit.txs[shard];
+        let sm = &emit.metrics.shards[shard];
+        NodeEmitter { emit, tx, sm, node_id, buf, dead: false }
     }
 
     pub(crate) fn is_dead(&self) -> bool {
         self.dead
     }
 
+    /// Count a successfully queued message on the shard's in-flight
+    /// gauge (the consumer decrements as it drains).
+    fn count_queued(&self) {
+        let depth = self.sm.queue_depth.add(1);
+        self.sm.queue_high_water.fetch_max(depth);
+    }
+
     /// Send a protocol message, flushing buffered readings first so the
-    /// consumer sees everything in stream order.
+    /// consumer sees everything in stream order. Protocol sends are the
+    /// producer-side sample points for the node/recalibration/drift
+    /// counters — counting *at the send* (not at the consumer) is what
+    /// lets `ServiceHandle::progress()` see work the consumer has not
+    /// drained yet.
     pub(crate) fn send(&mut self, msg: IngestMsg) {
         self.flush();
         if self.dead {
             return;
         }
+        let m = self.emit.metrics;
+        let kind = if m.enabled {
+            match &msg {
+                IngestMsg::NodeStart { .. } => 1u8,
+                IngestMsg::EpochOpen { recal: true, .. } => 2,
+                IngestMsg::DriftSuspected { .. } => 3,
+                _ => 0,
+            }
+        } else {
+            0
+        };
         if self.tx.send(msg).is_err() {
             self.dead = true;
+            return;
+        }
+        if m.enabled {
+            match kind {
+                1 => self.sm.nodes.inc(),
+                2 => m.recalibrations.inc(),
+                3 => m.drift_suspected.inc(),
+                _ => {}
+            }
+            self.count_queued();
         }
     }
 
@@ -461,13 +501,30 @@ impl<'a, 'b> NodeEmitter<'a, 'b> {
         }
     }
 
-    /// Ship the partial batch (no-op when empty).
+    /// Ship the partial batch (no-op when empty). With metrics enabled
+    /// this is the hot-path sample point: one timed (blocking) send per
+    /// batch feeds the push-wait histogram, and the batch/reading
+    /// counters advance by whole batches — so the per-reading cost stays
+    /// at one relaxed `fetch_add` amortised far below once per reading.
     pub(crate) fn flush(&mut self) {
         if self.dead || self.buf.is_empty() {
             return;
         }
+        let n = self.buf.len() as u64;
         let points = std::mem::replace(&mut self.buf, self.emit.fresh_buf());
-        if self.tx.send(IngestMsg::Batch { node_id: self.node_id, points }).is_err() {
+        let msg = IngestMsg::Batch { node_id: self.node_id, points };
+        if self.emit.metrics.enabled {
+            let t = Instant::now();
+            let ok = self.tx.send(msg).is_ok();
+            self.sm.push_wait_ns.record(t.elapsed().as_nanos() as u64);
+            if !ok {
+                self.dead = true;
+                return;
+            }
+            self.sm.batches.inc();
+            self.sm.readings.add(n);
+            self.count_queued();
+        } else if self.tx.send(msg).is_err() {
             self.dead = true;
         }
     }

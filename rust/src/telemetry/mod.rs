@@ -148,6 +148,21 @@ pub struct TelemetryConfig {
     /// Service seed: fixes every node's boot phase, jitter, fault draws,
     /// and tolerance draw.
     pub seed: u64,
+    /// Retention cap on the service event backlog (subscribers replay it
+    /// on subscribe). Long runs used to grow the backlog without bound;
+    /// now the oldest events are trimmed past this cap and a subscriber
+    /// whose cursor fell behind receives one
+    /// [`ServiceEvent::Lagged`]`{missed}` before resuming. The default is
+    /// generous (65 536) — no existing workload trims. Excluded from the
+    /// checkpoint fingerprint (purely observational).
+    pub event_backlog_cap: usize,
+    /// Enable hot-path metrics sampling ([`crate::obs`]). Purely
+    /// observational — accounts, events, and snapshots are bit-for-bit
+    /// identical either way (the instrumentation-overhead bench asserts
+    /// it); disabling exists for that A/B and costs
+    /// [`ServiceHandle::progress`] its lock-free mid-batch path. Excluded
+    /// from the checkpoint fingerprint.
+    pub metrics: bool,
 }
 
 impl Default for TelemetryConfig {
@@ -163,6 +178,8 @@ impl Default for TelemetryConfig {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             shards: 0,
             seed: 2024,
+            event_backlog_cap: 65_536,
+            metrics: true,
         }
     }
 }
@@ -187,6 +204,13 @@ pub struct TelemetrySnapshot {
     pub registry: Registry,
     /// Ingest throughput counters.
     pub stats: IngestStats,
+    /// Observation windows closed (final) at snapshot time.
+    pub windows_closed: usize,
+    /// Observation windows covered by a published checkpoint file at
+    /// snapshot time (`<= windows_closed`; stays 0 when checkpointing
+    /// is not armed). [`query::window_table`] renders the per-window
+    /// written/pending status from this.
+    pub windows_published: usize,
 }
 
 impl TelemetrySnapshot {

@@ -696,17 +696,20 @@ impl Checkpoint {
     /// Write atomically into `dir` as `checkpoint-<seq>.gpck`: the bytes
     /// land in a temp file first and are renamed into place, so a crash
     /// mid-write can never leave a half-written file under the final
-    /// name. Returns the final path.
-    pub fn save_atomic(&self, dir: &Path, seq: u64) -> Result<PathBuf, String> {
+    /// name. Returns the final path and the byte count written (which
+    /// the observability layer surfaces as `telemetry_checkpoint_bytes`).
+    pub fn save_atomic(&self, dir: &Path, seq: u64) -> Result<(PathBuf, u64), String> {
         std::fs::create_dir_all(dir)
             .map_err(|e| format!("cannot create checkpoint dir {}: {e}", dir.display()))?;
         let tmp = dir.join(format!(".tmp-checkpoint-{seq}"));
         let path = dir.join(format!("checkpoint-{seq:06}.gpck"));
-        std::fs::write(&tmp, self.encode())
+        let bytes = self.encode();
+        let n_bytes = bytes.len() as u64;
+        std::fs::write(&tmp, bytes)
             .map_err(|e| format!("cannot write {}: {e}", tmp.display()))?;
         std::fs::rename(&tmp, &path)
             .map_err(|e| format!("cannot publish {}: {e}", path.display()))?;
-        Ok(path)
+        Ok((path, n_bytes))
     }
 
     /// Read + decode a checkpoint file.

@@ -108,12 +108,26 @@ pub fn top_misestimated(snap: &TelemetrySnapshot, k: usize) -> Table {
 }
 
 /// Rolling per-observation-window breakdown (continuous operation): one
-/// row per window with all four accounts and the naive/corrected errors.
+/// row per window with all four accounts, the naive/corrected errors,
+/// and the window's checkpoint publication status — `written` when the
+/// window is covered by a checkpoint on disk
+/// ([`TelemetrySnapshot::windows_published`]), `pending` otherwise
+/// (including every window of a run without a checkpoint sink).
 pub fn window_table(snap: &TelemetrySnapshot) -> Table {
     let wins = snap.windows();
     let mut t = Table::new(
         format!("rolling window snapshots ({} × {:.1} s)", wins.len(), snap.window_s),
-        &["window", "t0 s", "t1 s", "truth kJ", "naive kJ", "corrected kJ", "naive %err", "corrected %err"],
+        &[
+            "window",
+            "t0 s",
+            "t1 s",
+            "truth kJ",
+            "naive kJ",
+            "corrected kJ",
+            "naive %err",
+            "corrected %err",
+            "checkpoint",
+        ],
     );
     for w in &wins {
         let pct = |v: f64| {
@@ -123,6 +137,7 @@ pub fn window_table(snap: &TelemetrySnapshot) -> Table {
                 "-".into()
             }
         };
+        let published = if w.index < snap.windows_published { "written" } else { "pending" };
         t.row(&[
             w.index.to_string(),
             f(w.t0, 1),
@@ -132,6 +147,7 @@ pub fn window_table(snap: &TelemetrySnapshot) -> Table {
             f(w.corrected_j / 1e3, 3),
             pct(w.naive_pct()),
             pct(w.corrected_pct()),
+            published.into(),
         ]);
     }
     t
@@ -230,6 +246,46 @@ mod tests {
                 top_misestimated(&snap, k).rows.iter().map(|r| r[0].clone()).collect();
             assert_eq!(got, want, "k = {k}");
         }
+    }
+
+    /// Satellite (ISSUE 7): the window table's checkpoint column tracks
+    /// [`TelemetrySnapshot::windows_published`] — every window of a run
+    /// with a checkpoint sink renders `written` once drained, and every
+    /// window of a sink-less run stays `pending`.
+    #[test]
+    fn window_table_reports_checkpoint_status() {
+        use crate::telemetry::{ServiceSource, TelemetryService};
+
+        // without a sink nothing is ever published
+        let snap = snapshot();
+        let wt = window_table(&snap);
+        assert!(!wt.rows.is_empty());
+        assert!(wt.headers.iter().any(|h| h == "checkpoint"));
+        for row in &wt.rows {
+            assert_eq!(row.last().map(String::as_str), Some("pending"));
+        }
+
+        // with a sink, every closed window is covered by a written
+        // checkpoint by the time the service drains
+        let fleet = Fleet::build(FleetConfig {
+            size: 3,
+            models: vec!["A100 PCIe-40G".into(), "3090".into()],
+            driver: DriverEpoch::Post530,
+            field: PowerField::Instant,
+            seed: 81,
+        });
+        let cfg = TelemetryConfig { duration_s: 0.0, bucket_s: 2.0, ..Default::default() };
+        let dir = std::env::temp_dir().join(format!("gpck-wtstatus-{}", std::process::id()));
+        let mut handle = TelemetryService::start(&fleet, &cfg, &ServiceSource::Sim);
+        handle.enable_checkpoints(&dir);
+        let snap = handle.try_join().expect("clean run");
+        assert_eq!(snap.windows_published, snap.windows_closed);
+        let wt = window_table(&snap);
+        assert!(!wt.rows.is_empty());
+        for row in &wt.rows {
+            assert_eq!(row.last().map(String::as_str), Some("written"));
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     /// Satellite: inverted or out-of-range query windows render as zeroed

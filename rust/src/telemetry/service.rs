@@ -83,6 +83,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::fleet::Node;
 use crate::coordinator::Fleet;
+use crate::obs::metrics::{self as obs_metrics, MetricsSnapshot, ServiceMetrics};
 use crate::sim::profile::{DriverEpoch, Generation, PowerField};
 use crate::smi::cli::{LogValue, QueryField, SmiLog};
 
@@ -182,6 +183,15 @@ pub enum ServiceEvent {
     },
     /// The service drained to completion.
     ServiceComplete,
+    /// This subscriber fell behind the bounded event backlog
+    /// ([`TelemetryConfig::event_backlog_cap`]): `missed` events were
+    /// trimmed before it could read them. Synthesised per subscriber at
+    /// the gap (never stored in the backlog); delivery resumes with the
+    /// oldest retained event.
+    Lagged {
+        /// Trimmed events this cursor can no longer observe.
+        missed: u64,
+    },
 }
 
 /// Lock a mutex, recovering the inner state if a panicking holder
@@ -253,28 +263,68 @@ struct Shard {
 #[derive(Debug)]
 struct GlobalState {
     windows_closed: usize,
+    /// Windows covered by the newest checkpoint on disk (0 when
+    /// checkpoints are off). Drives [`TelemetrySnapshot::windows_published`].
+    published_windows: usize,
     sink: Option<CheckpointSink>,
     done: bool,
 }
 
-/// The shared, append-only event backlog plus its closed flag; emission
-/// order is the event sequence numbering.
-#[derive(Debug, Default)]
+/// The shared event backlog plus its closed flag; emission order is the
+/// event sequence numbering. Retention is bounded
+/// ([`TelemetryConfig::event_backlog_cap`]): past the cap the oldest
+/// events are dropped from the front and `base` — the sequence number of
+/// the oldest retained event — advances, so long runs hold O(cap) memory
+/// while cursors keep their absolute numbering.
+#[derive(Debug)]
 struct EventBacklog {
-    events: Vec<ServiceEvent>,
+    events: std::collections::VecDeque<ServiceEvent>,
+    /// Sequence number of `events[0]` (events below it were trimmed).
+    base: usize,
+    cap: usize,
     closed: bool,
 }
 
-/// The event log every subscriber shares: one backlog, one condvar.
-#[derive(Debug, Default)]
+/// The event log every subscriber shares: one backlog, one condvar, and
+/// the backlog's observability hooks (always live — event emission is
+/// cold-path, a few per node per run).
+#[derive(Debug)]
 struct EventLog {
     inner: Mutex<EventBacklog>,
     cond: Condvar,
+    backlog_len: Arc<obs_metrics::Gauge>,
+    trimmed: Arc<obs_metrics::Counter>,
+    emitted: Arc<obs_metrics::Counter>,
 }
 
 impl EventLog {
+    fn new(cap: usize, metrics: &ServiceMetrics) -> EventLog {
+        EventLog {
+            inner: Mutex::new(EventBacklog {
+                events: std::collections::VecDeque::new(),
+                base: 0,
+                cap: cap.max(1),
+                closed: false,
+            }),
+            cond: Condvar::new(),
+            backlog_len: Arc::clone(&metrics.event_backlog_len),
+            trimmed: Arc::clone(&metrics.events_trimmed),
+            emitted: Arc::clone(&metrics.events_emitted),
+        }
+    }
+
     fn emit(&self, ev: ServiceEvent) {
-        lock_recover(&self.inner).events.push(ev);
+        {
+            let mut backlog = lock_recover(&self.inner);
+            backlog.events.push_back(ev);
+            while backlog.events.len() > backlog.cap {
+                backlog.events.pop_front();
+                backlog.base += 1;
+                self.trimmed.inc();
+            }
+            self.backlog_len.set(backlog.events.len() as i64);
+        }
+        self.emitted.inc();
         self.cond.notify_all();
     }
 
@@ -305,10 +355,17 @@ pub struct EventStream {
 }
 
 impl EventStream {
-    /// Next event if one is already in the backlog.
+    /// Next event if one is already in the backlog. A cursor that fell
+    /// below the backlog's trimmed base yields one synthesised
+    /// [`ServiceEvent::Lagged`] covering the gap, then resumes at the
+    /// oldest retained event.
     fn poll(&self, backlog: &EventBacklog) -> Option<ServiceEvent> {
         let i = self.cursor.get();
-        backlog.events.get(i).map(|&ev| {
+        if i < backlog.base {
+            self.cursor.set(backlog.base);
+            return Some(ServiceEvent::Lagged { missed: (backlog.base - i) as u64 });
+        }
+        backlog.events.get(i - backlog.base).map(|&ev| {
             self.cursor.set(i + 1);
             ev
         })
@@ -453,6 +510,9 @@ struct SharedCore {
     /// Consumers still running; the last one out marks the service done
     /// and closes the event backlog.
     live_consumers: AtomicUsize,
+    /// The service's observability registry (shared with producers; the
+    /// handle snapshots it lock-free relative to the hot path).
+    metrics: Arc<ServiceMetrics>,
     meta: ServiceMeta,
 }
 
@@ -545,6 +605,9 @@ struct ProducerCtx {
     /// Checkpoint restore state: finished nodes are skipped, in-flight
     /// nodes resume from their recorded stream position.
     restore: Option<Arc<RestoreData>>,
+    /// Shared observability registry; producers record through the
+    /// per-shard series as they emit.
+    metrics: Arc<ServiceMetrics>,
 }
 
 /// The entry point: start a service over a fleet/source, get a handle.
@@ -772,6 +835,7 @@ impl TelemetryService {
         let stop = Arc::new(AtomicBool::new(false));
         let shard_size = cfg.shard_size.max(1);
         let map = ShardMap::new(n, resolve_shards(&cfg, n));
+        let metrics = Arc::new(ServiceMetrics::new(map.n_shards, cfg.metrics));
 
         // seed the per-shard states from the checkpoint (if any): each
         // finished/in-flight node lands on the shard that owns its id, so
@@ -798,6 +862,18 @@ impl TelemetryService {
             }
             init.data
         });
+
+        // seed the observability counters to the restored baseline so the
+        // producer-side totals (which `progress()` reads) resume exactly
+        // where the durable ingest counters left off
+        for (si, st) in states.iter().enumerate() {
+            let sm = &metrics.shards[si];
+            sm.nodes.add(st.stats.nodes as u64);
+            sm.batches.add(st.stats.batches);
+            sm.readings.add(st.stats.readings);
+            metrics.recalibrations.add(st.stats.recalibrations);
+            metrics.drift_suspected.add(st.stats.drift_suspected);
+        }
 
         // per-shard ownership counts over the ids that will actually
         // stream (sim node ids may be sparse; replay ids are 0..n)
@@ -829,13 +905,23 @@ impl TelemetryService {
                 Shard { state: Mutex::new(st), watermark: AtomicU64::new(wm.to_bits()), owned: own }
             })
             .collect();
+        // windows restored from a checkpoint were, by definition, already
+        // published to disk once — the gauges resume from that baseline
+        metrics.windows_closed.set(windows_closed as i64);
+        metrics.windows_published.set(windows_closed as i64);
         let core = Arc::new(SharedCore {
             shards,
             map,
-            global: Mutex::new(GlobalState { windows_closed, sink: None, done: false }),
+            global: Mutex::new(GlobalState {
+                windows_closed,
+                published_windows: windows_closed,
+                sink: None,
+                done: false,
+            }),
             next_close: AtomicU64::new(next_close.to_bits()),
-            events: Arc::new(EventLog::default()),
+            events: Arc::new(EventLog::new(cfg.event_backlog_cap, &metrics)),
             live_consumers: AtomicUsize::new(map.n_shards),
+            metrics: Arc::clone(&metrics),
             meta,
         });
 
@@ -868,6 +954,7 @@ impl TelemetryService {
             board: Arc::clone(&board),
             stop: Arc::clone(&stop),
             restore: restore_data,
+            metrics: Arc::clone(&metrics),
         });
         let producers = (0..cfg.workers.max(1))
             .map(|_| {
@@ -1184,9 +1271,26 @@ impl ServiceHandle {
         self.control(ControlMsg::Recalibrate { node })
     }
 
-    /// Live ingest counters, summed over the shards.
+    /// Live ingest counters, summed over the shards. With metrics on
+    /// (the default) this reads the producer-side atomic counters, which
+    /// include everything *emitted* — in-queue messages are counted, so a
+    /// live poll no longer under-reports relative to what the producers
+    /// actually pushed. With `metrics: false` it falls back to the
+    /// consumer-side drained totals. Both converge to the same values at
+    /// completion.
     pub fn progress(&self) -> IngestStats {
         let mut stats = IngestStats::default();
+        let m = &self.core.metrics;
+        if m.enabled {
+            for sm in &m.shards {
+                stats.nodes += sm.nodes.get() as usize;
+                stats.batches += sm.batches.get();
+                stats.readings += sm.readings.get();
+            }
+            stats.recalibrations = m.recalibrations.get();
+            stats.drift_suspected = m.drift_suspected.get();
+            return stats;
+        }
         for shard in &self.core.shards {
             let s = lock_recover(&shard.state).stats;
             stats.nodes += s.nodes;
@@ -1196,6 +1300,20 @@ impl ServiceHandle {
             stats.drift_suspected += s.drift_suspected;
         }
         stats
+    }
+
+    /// A point-in-time snapshot of every observability series the
+    /// service registers — see [`crate::obs`] for the export encoders.
+    /// Purely observational: reading it takes no shard lock and never
+    /// perturbs accounting.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.core.metrics.snapshot()
+    }
+
+    /// Borrow the live metrics registry itself (for renderers that want
+    /// the typed handles, e.g. [`crate::obs::console::WatchFrame`]).
+    pub fn metrics_handle(&self) -> &ServiceMetrics {
+        &self.core.metrics
     }
 
     /// Whether the service has drained to completion.
@@ -1265,6 +1383,12 @@ impl Drop for ServiceHandle {
 /// so the result is bit-for-bit independent of the shard count.
 fn snapshot_core(core: &SharedCore, schedule: ProbeSchedule) -> TelemetrySnapshot {
     let meta = &core.meta;
+    // global first, then shards in ascending order — consistent with the
+    // service-wide global → shard lock ordering
+    let (windows_closed, windows_published) = {
+        let global = lock_recover(&core.global);
+        (global.windows_closed, global.published_windows)
+    };
     let mut stats = IngestStats::default();
     let mut accounts: Vec<NodeAccount> = Vec::new();
     let mut registry = Registry::default();
@@ -1313,6 +1437,8 @@ fn snapshot_core(core: &SharedCore, schedule: ProbeSchedule) -> TelemetrySnapsho
         accounts,
         registry,
         stats,
+        windows_closed,
+        windows_published,
     }
 }
 
@@ -1372,6 +1498,7 @@ fn close_windows_locked(core: &SharedCore) {
         .map(|&(_, t1)| t1)
         .unwrap_or(f64::INFINITY);
     core.next_close.store(next.to_bits(), Ordering::Release);
+    core.metrics.windows_closed.set(global.windows_closed as i64);
     if global.windows_closed > before && global.sink.is_some() {
         write_checkpoint(core, &mut global);
     }
@@ -1489,8 +1616,16 @@ fn write_checkpoint(core: &SharedCore, global: &mut GlobalState) {
     let dir = sink.dir.clone();
     sink.seq += 1;
     let ck = build_checkpoint(core, windows_closed);
+    let started = Instant::now();
     match ck.save_atomic(&dir, seq) {
-        Ok(_path) => {
+        Ok((_path, n_bytes)) => {
+            let m = &core.metrics;
+            m.checkpoint_write_ns.record(started.elapsed().as_nanos() as u64);
+            m.checkpoint_bytes.set(n_bytes as i64);
+            m.checkpoint_last_write_ms.set(m.elapsed_ms());
+            m.checkpoints_written.inc();
+            global.published_windows = global.published_windows.max(windows_closed);
+            m.windows_published.set(global.published_windows as i64);
             core.events.emit(ServiceEvent::CheckpointWritten { seq, windows_closed });
         }
         Err(e) => eprintln!("[telemetry] checkpoint {seq} write failed: {e}"),
@@ -1532,7 +1667,11 @@ fn consumer_loop(
     let _completion = Completion(Arc::clone(&core));
 
     let shard = &core.shards[si];
+    let sm = &core.metrics.shards[si];
     for msg in rx {
+        if core.metrics.enabled {
+            sm.queue_depth.add(-1);
+        }
         match msg {
             IngestMsg::NodeStart { node_id, model, generation } => {
                 let mut state = lock_recover(&shard.state);
@@ -1568,7 +1707,13 @@ fn consumer_loop(
             IngestMsg::EpochOpen { node_id, t0, recal } => {
                 let mut state = lock_recover(&shard.state);
                 if let Some(ln) = state.inflight.get_mut(&node_id) {
-                    ln.acct.open_epoch(t0);
+                    if core.metrics.enabled {
+                        let before = ln.acct.pending_len() as i64;
+                        ln.acct.open_epoch(t0);
+                        sm.deferred_readings.add(ln.acct.pending_len() as i64 - before);
+                    } else {
+                        ln.acct.open_epoch(t0);
+                    }
                     ln.epoch_log.push((t0, recal));
                 }
                 if recal {
@@ -1583,7 +1728,13 @@ fn consumer_loop(
             IngestMsg::EpochIdentified { node_id, t0, identity } => {
                 let mut state = lock_recover(&shard.state);
                 if let Some(ln) = state.inflight.get_mut(&node_id) {
-                    ln.acct.identify_span(&identity);
+                    if core.metrics.enabled {
+                        let before = ln.acct.pending_len() as i64;
+                        ln.acct.identify_span(&identity);
+                        sm.deferred_readings.add(ln.acct.pending_len() as i64 - before);
+                    } else {
+                        ln.acct.identify_span(&identity);
+                    }
                     ln.epochs.push(EpochIdentity { t0, identity });
                 }
                 drop(state);
@@ -1594,7 +1745,13 @@ fn consumer_loop(
                 state.stats.batches += 1;
                 state.stats.readings += points.len() as u64;
                 if let Some(ln) = state.inflight.get_mut(&node_id) {
-                    ln.acct.push_points(&points);
+                    if core.metrics.enabled {
+                        let before = ln.acct.pending_len() as i64;
+                        ln.acct.push_points(&points);
+                        sm.deferred_readings.add(ln.acct.pending_len() as i64 - before);
+                    } else {
+                        ln.acct.push_points(&points);
+                    }
                 }
                 let wm = shard_watermark(&state, shard.owned);
                 shard.watermark.store(wm.to_bits(), Ordering::Release);
@@ -1611,6 +1768,9 @@ fn consumer_loop(
             IngestMsg::NodeEnd { node_id, truth_j, complete } => {
                 let mut state = lock_recover(&shard.state);
                 if let Some(ln) = state.inflight.remove(&node_id) {
+                    if core.metrics.enabled {
+                        sm.deferred_readings.add(-(ln.acct.pending_len() as i64));
+                    }
                     let identity = ln
                         .epochs
                         .last()
@@ -1674,6 +1834,7 @@ fn producer_worker(ctx: Arc<ProducerCtx>) {
         map: ctx.map,
         pool: &ctx.pool,
         batch: ctx.cfg.batch_size.max(1),
+        metrics: &ctx.metrics,
     };
     let mut scratch = NodeScratch::new();
     let mut src = match &ctx.plan {
@@ -1895,5 +2056,122 @@ mod tests {
         let late = handle.subscribe();
         let replayed: Vec<ServiceEvent> = late.try_iter().collect();
         assert_eq!(replayed, seen, "late subscription replays the full event sequence");
+    }
+
+    /// Satellite (ISSUE 7): the event backlog is bounded by
+    /// `event_backlog_cap` — a run that emits more events than the cap
+    /// holds O(cap) memory, and a subscriber that missed trimmed events
+    /// gets one synthesised [`ServiceEvent::Lagged`] covering the gap.
+    #[test]
+    fn event_backlog_is_bounded_and_lagged_signaled() {
+        let fleet = Fleet::build(FleetConfig {
+            size: 6,
+            models: vec!["A100 PCIe-40G".into()],
+            driver: DriverEpoch::Post530,
+            field: PowerField::Instant,
+            seed: 77,
+        });
+        let cfg = TelemetryConfig { event_backlog_cap: 4, ..cfg1() };
+        let mut handle = TelemetryService::start(&fleet, &cfg, &ServiceSource::Sim);
+        handle.try_join().expect("clean run");
+
+        let m = handle.metrics();
+        let emitted = m.counter_total("telemetry_events_total").unwrap_or(0);
+        let trimmed = m.counter_total("telemetry_events_trimmed_total").unwrap_or(0);
+        let backlog = m.gauge_total("telemetry_event_backlog_len").unwrap_or(0);
+        assert!(backlog <= 4, "bounded backlog held {backlog} events");
+        assert!(trimmed > 0, "a 6-node run must overflow a 4-event backlog");
+        assert_eq!(emitted, trimmed + backlog, "retained + trimmed = emitted");
+
+        // a late subscriber's cursor (sequence 0) is below the trimmed
+        // base: one Lagged for the gap, then the retained tail verbatim
+        let late = handle.subscribe();
+        let events: Vec<ServiceEvent> = late.try_iter().collect();
+        assert_eq!(events.first(), Some(&ServiceEvent::Lagged { missed: trimmed as u64 }));
+        assert_eq!(events.len() as i64, backlog + 1, "Lagged + every retained event");
+        assert_eq!(events.last(), Some(&ServiceEvent::ServiceComplete));
+    }
+
+    /// Satellite (ISSUE 7): `progress()` (producer-side metric counters)
+    /// and the drained snapshot stats agree field-for-field once the
+    /// service completes — so a `[live]` status line rendered from either
+    /// is bit-for-bit identical. Both the metrics-on fast path and the
+    /// `metrics: false` lock-fold fallback are pinned.
+    #[test]
+    fn progress_gauges_match_drained_stats_bit_for_bit() {
+        for metrics_on in [true, false] {
+            let fleet = fleet2();
+            let cfg = TelemetryConfig { metrics: metrics_on, ..cfg1() };
+            let mut handle = TelemetryService::start(&fleet, &cfg, &ServiceSource::Sim);
+            let snap = handle.try_join().expect("clean run");
+            let live = handle.progress();
+            assert_eq!(live.nodes, snap.stats.nodes, "metrics={metrics_on}");
+            assert_eq!(live.batches, snap.stats.batches, "metrics={metrics_on}");
+            assert_eq!(live.readings, snap.stats.readings, "metrics={metrics_on}");
+            assert_eq!(live.recalibrations, snap.stats.recalibrations, "metrics={metrics_on}");
+            assert_eq!(live.drift_suspected, snap.stats.drift_suspected, "metrics={metrics_on}");
+
+            let e = handle.fleet_energy(0.0, 10.0);
+            let from_live = crate::obs::console::status_line(&live, 2, 2, 2, &e);
+            let from_snap = crate::obs::console::status_line(&snap.stats, 2, 2, 2, &e);
+            assert_eq!(from_live, from_snap, "metrics={metrics_on}");
+        }
+    }
+
+    /// Satellite (ISSUE 7): concurrent subscribers on every receive path
+    /// — blocking iterator, `recv_timeout` loop, `try_recv` spin — racing
+    /// a live multi-shard run all converge on the identical final event
+    /// count, and a post-completion replay matches it.
+    #[test]
+    fn event_stream_concurrent_subscribers_converge_on_one_count() {
+        let fleet = Fleet::build(FleetConfig {
+            size: 4,
+            models: vec!["A100 PCIe-40G".into()],
+            driver: DriverEpoch::Post530,
+            field: PowerField::Instant,
+            seed: 99,
+        });
+        let cfg = TelemetryConfig { shards: 2, ..cfg1() };
+        let mut handle = TelemetryService::start(&fleet, &cfg, &ServiceSource::Sim);
+
+        let blocking = handle.subscribe();
+        let timed = handle.subscribe();
+        let spinning = handle.subscribe();
+        let t1 = std::thread::spawn(move || blocking.iter().count());
+        let t2 = std::thread::spawn(move || {
+            let mut n = 0usize;
+            while timed.recv_timeout(Duration::from_secs(30)).is_ok() {
+                n += 1;
+            }
+            n
+        });
+        let t3 = std::thread::spawn(move || {
+            let mut n = 0usize;
+            loop {
+                match spinning.try_recv() {
+                    Ok(_) => n += 1,
+                    Err(TryRecvError::Empty) => std::thread::yield_now(),
+                    Err(TryRecvError::Disconnected) => break,
+                }
+            }
+            n
+        });
+
+        handle.try_join().expect("clean run");
+        let a = t1.join().expect("blocking subscriber");
+        let b = t2.join().expect("timed subscriber");
+        let c = t3.join().expect("spinning subscriber");
+        assert_eq!(a, b, "blocking vs recv_timeout");
+        assert_eq!(b, c, "recv_timeout vs try_recv spin");
+
+        // the default backlog cap is far above a 4-node run's event count,
+        // so a post-completion subscriber replays the identical sequence
+        let replayed: Vec<ServiceEvent> = handle.subscribe().try_iter().collect();
+        assert_eq!(replayed.len(), a);
+        assert_eq!(replayed.last(), Some(&ServiceEvent::ServiceComplete));
+        assert_eq!(
+            replayed.iter().filter(|e| matches!(e, ServiceEvent::NodeComplete { .. })).count(),
+            4
+        );
     }
 }

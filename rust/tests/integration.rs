@@ -731,7 +731,7 @@ fn checkpoint_restore_resumes_the_uninterrupted_account() {
 
     // round-trip through the real on-disk format
     let dir = std::env::temp_dir().join(format!("gpck-acceptance-{}", std::process::id()));
-    let path = ck.save_atomic(&dir, 0).expect("checkpoint writes");
+    let (path, _bytes) = ck.save_atomic(&dir, 0).expect("checkpoint writes");
     let loaded = Checkpoint::load(&path).expect("checkpoint loads");
     assert_eq!(loaded, ck, "save/load round-trips exactly");
     std::fs::remove_dir_all(&dir).ok();
@@ -1168,4 +1168,45 @@ fn replay_host_and_rc_correction_compose() {
         let err = ((p_fix - p_true) / p_true).abs();
         assert!(err < 0.08, "gpu {i}: corrected err {:.1}%", err * 100.0);
     }
+}
+
+/// The operator console's deterministic mode: after a replay drains,
+/// rendering the same `WatchFrame` twice yields byte-identical frames
+/// (this is what lets CI pin `repro watch --headless --frames N`), and
+/// every pane the dashboard promises is present.
+#[test]
+fn watch_headless_frames_render_deterministically() {
+    use gpupower::obs::console::{render_frame, EventFeed, WatchFrame};
+    use gpupower::telemetry::{TelemetryConfig, TelemetryService};
+
+    let text = include_str!("../../examples/nvidia_smi_a100.csv");
+    let cfg = TelemetryConfig { workers: 1, shards: 1, ..Default::default() };
+    let mut handle =
+        TelemetryService::start_replay(&[text.to_string()], &cfg).expect("replay starts");
+    let events = handle.subscribe();
+    let snap = handle.try_join().expect("service drains cleanly");
+    let progress = handle.progress();
+
+    let mut feed = EventFeed::new(8);
+    feed.absorb(events.try_iter());
+
+    let frame = WatchFrame {
+        frame_no: 1,
+        n_total: 1,
+        snap: &snap,
+        progress,
+        metrics: handle.metrics_handle(),
+        feed: &feed,
+        ansi: false,
+    };
+    let a = render_frame(&frame);
+    let b = render_frame(&frame);
+    assert_eq!(a, b, "post-drain headless frames must be bit-for-bit reproducible");
+
+    for pane in ["fleet energy", "per-generation", "shards", "checkpoint", "events", "readings"] {
+        assert!(a.contains(pane), "frame is missing the {pane:?} pane:\n{a}");
+    }
+    // a replayed log carries no PMD truth, so the per-generation pane
+    // must say so instead of rendering bogus error bars
+    assert!(a.contains("no truth reference (replayed log)"), "{a}");
 }
