@@ -315,8 +315,9 @@ fn main() {
             seed: 6,
         });
         let shard_counts = [1usize, 2, 4, 8];
-        // (shards, readings/s, allocs/reading, mid-ingest snapshot µs)
-        let mut entries: Vec<(usize, f64, f64, f64)> = Vec::new();
+        // (shards, readings/s, allocs/reading, mid-ingest snapshot µs,
+        //  back-to-back cached snapshot µs)
+        let mut entries: Vec<(usize, f64, f64, f64, f64)> = Vec::new();
         let mut reference_readings: Option<u64> = None;
 
         for &shards in &shard_counts {
@@ -324,16 +325,24 @@ fn main() {
 
             // mid-ingest snapshot latency: wait for the first identity
             // (ingest is ramped and accounts are non-trivial), then time
-            // one live snapshot while every shard keeps ingesting
+            // one live snapshot while every shard keeps ingesting, and a
+            // second immediately after — the second is served by the
+            // per-shard fold cache except for shards that moved between
+            // the two calls, so it exposes the O(1)-per-quiet-shard path
             let handle = TelemetryService::start(&fleet, &cfg, &ServiceSource::Sim);
             let events = handle.subscribe();
             let mut snap_us = 0.0f64;
+            let mut snap_cached_us = 0.0f64;
             for ev in &events {
                 if matches!(ev, ServiceEvent::NodeIdentified { .. }) {
                     let t = std::time::Instant::now();
                     let live = handle.snapshot();
                     snap_us = t.elapsed().as_secs_f64() * 1e6;
+                    let t = std::time::Instant::now();
+                    let cached = handle.snapshot();
+                    snap_cached_us = t.elapsed().as_secs_f64() * 1e6;
                     assert!(live.accounts.nodes.len() <= nodes);
+                    assert!(cached.accounts.nodes.len() <= nodes);
                     break;
                 }
             }
@@ -362,11 +371,11 @@ fn main() {
             let readings_per_s = snap.stats.readings as f64 / (r.mean_ms / 1000.0);
             let allocs_per_reading = run_allocs as f64 / snap.stats.readings.max(1) as f64;
             r.note = format!(
-                "{:.2} Mreadings/s, {allocs_per_reading:.3} allocs/reading, snapshot {snap_us:.0} µs",
+                "{:.2} Mreadings/s, {allocs_per_reading:.3} allocs/reading, snapshot {snap_us:.0} µs ({snap_cached_us:.0} µs cached)",
                 readings_per_s / 1e6
             );
             rows.push(r);
-            entries.push((shards, readings_per_s, allocs_per_reading, snap_us));
+            entries.push((shards, readings_per_s, allocs_per_reading, snap_us, snap_cached_us));
         }
 
         // instrumentation overhead gate (ISSUE 7): the same 1-shard run
@@ -408,20 +417,25 @@ fn main() {
         );
 
         let base = entries[0].1;
+        let snap_scaling = entries.last().map(|e| e.3 / entries[0].3.max(1e-9)).unwrap_or(1.0);
         println!("\ntelemetry shard trajectory ({nodes} nodes, {duration_s:.0} s window):");
-        for &(shards, rps, apr, us) in &entries {
+        for &(shards, rps, apr, us, cus) in &entries {
             println!(
-                "  {shards} shard(s): {:.2} Mreadings/s ({:.2}x), {apr:.3} allocs/reading, snapshot {us:.0} µs",
+                "  {shards} shard(s): {:.2} Mreadings/s ({:.2}x), {apr:.3} allocs/reading, snapshot {us:.0} µs ({cus:.0} µs cached)",
                 rps / 1e6,
                 rps / base
             );
         }
+        println!(
+            "  snapshot scaling {}-shard / 1-shard: {snap_scaling:.2}x (flat-in-shards gate lives in check_bench.py)",
+            entries.last().map(|e| e.0).unwrap_or(1)
+        );
 
         // machine-readable trajectory for BENCH_telemetry.json
         if let Ok(path) = std::env::var("BENCH_TELEMETRY_OUT") {
             let mut json = String::new();
             json.push_str("{\n");
-            json.push_str("  \"schema\": \"bench_telemetry/v2\",\n");
+            json.push_str("  \"schema\": \"bench_telemetry/v3\",\n");
             json.push_str(&format!(
                 "  \"mode\": \"{}\",\n",
                 if smoke { "smoke" } else { "full" }
@@ -429,10 +443,11 @@ fn main() {
             json.push_str(&format!("  \"nodes\": {nodes},\n"));
             json.push_str(&format!("  \"duration_s\": {duration_s:.1},\n"));
             json.push_str(&format!("  \"instrumented_overhead\": {overhead:.4},\n"));
+            json.push_str(&format!("  \"snapshot_scaling\": {snap_scaling:.4},\n"));
             json.push_str("  \"shards\": {\n");
-            for (i, &(shards, rps, apr, us)) in entries.iter().enumerate() {
+            for (i, &(shards, rps, apr, us, cus)) in entries.iter().enumerate() {
                 json.push_str(&format!(
-                    "    \"{shards}\": {{\"readings_per_s\": {:.0}, \"allocs_per_reading\": {apr:.4}, \"snapshot_latency_us\": {us:.1}}}{}\n",
+                    "    \"{shards}\": {{\"readings_per_s\": {:.0}, \"allocs_per_reading\": {apr:.4}, \"snapshot_latency_us\": {us:.1}, \"snapshot_cached_us\": {cus:.1}}}{}\n",
                     rps,
                     if i + 1 < entries.len() { "," } else { "" }
                 ));

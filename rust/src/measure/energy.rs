@@ -3,8 +3,59 @@
 //! `(t, W)` slice — the streaming pipeline integrates scratch buffers
 //! through those — and a [`SampleSeries`] wrapper that delegates to it, so
 //! both paths run the identical arithmetic.
+//!
+//! Every integration entry point — the tuple-slice reference, the
+//! columnar (structure-of-arrays) form the telemetry hot path streams
+//! through, and the per-pair fast path inside
+//! `telemetry::accounting::NodeAccountant` — funnels into one
+//! branch-free segment kernel, [`trapezoid_clipped`]. Contributions are
+//! always *accumulated in stream order*, one segment at a time, no
+//! matter how the computation is chunked; that single discipline is what
+//! keeps streaming, batched, and vectorised results bit-for-bit
+//! identical for every chunk width and batch size.
 
 use crate::sim::trace::SampleSeries;
+
+/// Default block width for the chunked columnar accumulation
+/// ([`integrate_clipped_columns`]): segment kernels are evaluated
+/// `INTEGRATE_CHUNK` at a time with no cross-lane dependency (the block
+/// auto-vectorises), then folded into the accumulator in stream order.
+pub const INTEGRATE_CHUNK: usize = 8;
+
+/// Largest block width [`integrate_clipped_columns_width`] accepts (the
+/// lane buffer lives on the stack).
+pub const INTEGRATE_CHUNK_MAX: usize = 64;
+
+/// One clipped trapezoid segment: the energy contribution of the sample
+/// pair `(ta, pa) → (tb, pb)` over `[t0, t1]`, or exactly `0.0` when the
+/// segment lies outside the interval or is degenerate (`tb <= ta`).
+///
+/// Branch-free: the contribution is computed unconditionally and a
+/// select masks it to zero, so blocks of segments evaluate with no
+/// data-dependent control flow. The arithmetic is op-for-op the
+/// historical `integrate_clipped_points` loop body (same max/min clips,
+/// same `(t - ta) / (tb - ta)` interpolation, same multiply/add order),
+/// which is what keeps every caller bit-compatible with the committed
+/// golden fixtures.
+#[inline(always)]
+pub fn trapezoid_clipped(ta: f64, pa: f64, tb: f64, pb: f64, t0: f64, t1: f64) -> f64 {
+    let lo = ta.max(t0);
+    let hi = tb.min(t1);
+    let dp = pb - pa;
+    let dt = tb - ta;
+    // linear interpolation of power at the clipped endpoints
+    let p_lo = pa + dp * ((lo - ta) / dt);
+    let p_hi = pa + dp * ((hi - ta) / dt);
+    let v = 0.5 * (p_lo + p_hi) * (hi - lo);
+    // same skip set as the historical branching loop; `v` may be NaN for
+    // a degenerate pair, but a skipped lane contributes a literal 0.0
+    let skip = (tb <= t0) | (ta >= t1) | (hi <= lo);
+    if skip {
+        0.0
+    } else {
+        v
+    }
+}
 
 /// Trapezoidal energy (J) of a polled `(t, W)` slice over `[t0, t1]`,
 /// clipping boundary segments to the interval (partial segments count
@@ -14,19 +65,53 @@ pub fn integrate_clipped_points(points: &[(f64, f64)], t0: f64, t1: f64) -> f64 
     for w in points.windows(2) {
         let (ta, pa) = w[0];
         let (tb, pb) = w[1];
-        if tb <= t0 || ta >= t1 {
-            continue;
+        e += trapezoid_clipped(ta, pa, tb, pb, t0, t1);
+    }
+    e
+}
+
+/// [`integrate_clipped_points`] over columnar (structure-of-arrays)
+/// samples — the telemetry hot path's layout. Bit-for-bit equal to the
+/// tuple-slice reference on the zipped input, for any data: segments are
+/// evaluated in blocks of [`INTEGRATE_CHUNK`] (branch-free, so the block
+/// vectorises) but folded into the accumulator strictly in stream order.
+pub fn integrate_clipped_columns(ts: &[f64], watts: &[f64], t0: f64, t1: f64) -> f64 {
+    integrate_clipped_columns_width(ts, watts, t0, t1, INTEGRATE_CHUNK)
+}
+
+/// [`integrate_clipped_columns`] with an explicit block width in
+/// `[1, INTEGRATE_CHUNK_MAX]` (clamped). The width changes only how the
+/// segment kernels are grouped for evaluation, never the accumulation
+/// order, so every width returns identical bits — the property the
+/// vectorised-vs-scalar tests pin.
+pub fn integrate_clipped_columns_width(
+    ts: &[f64],
+    watts: &[f64],
+    t0: f64,
+    t1: f64,
+    width: usize,
+) -> f64 {
+    debug_assert_eq!(ts.len(), watts.len());
+    let n = ts.len().min(watts.len());
+    if n < 2 {
+        return 0.0;
+    }
+    let width = width.clamp(1, INTEGRATE_CHUNK_MAX);
+    let mut lanes = [0.0f64; INTEGRATE_CHUNK_MAX];
+    let mut e = 0.0;
+    let pairs = n - 1;
+    let mut i = 0;
+    while i < pairs {
+        let m = width.min(pairs - i);
+        // branch-free lane evaluation: no cross-lane dependency
+        for k in 0..m {
+            lanes[k] = trapezoid_clipped(ts[i + k], watts[i + k], ts[i + k + 1], watts[i + k + 1], t0, t1);
         }
-        let lo = ta.max(t0);
-        let hi = tb.min(t1);
-        if hi <= lo {
-            continue;
+        // sequential fold in stream order: bit-identical for every width
+        for &lane in &lanes[..m] {
+            e += lane;
         }
-        // linear interpolation of power at the clipped endpoints
-        let frac = |t: f64| (t - ta) / (tb - ta);
-        let p_lo = pa + (pb - pa) * frac(lo);
-        let p_hi = pa + (pb - pa) * frac(hi);
-        e += 0.5 * (p_lo + p_hi) * (hi - lo);
+        i += m;
     }
     e
 }
@@ -153,5 +238,127 @@ mod tests {
         assert_eq!(integrate_clipped(&s, 0.8, 0.2), 0.0);
         assert_eq!(mean_power(&s, 0.8, 0.2), 0.0);
         assert_eq!(mean_power(&s, 0.5, 0.5), 0.0);
+    }
+
+    /// The historical branching loop body, kept verbatim as the oracle
+    /// the branch-free kernel must reproduce bit-for-bit.
+    fn scalar_reference(points: &[(f64, f64)], t0: f64, t1: f64) -> f64 {
+        let mut e = 0.0;
+        for w in points.windows(2) {
+            let (ta, pa) = w[0];
+            let (tb, pb) = w[1];
+            if tb <= t0 || ta >= t1 {
+                continue;
+            }
+            let lo = ta.max(t0);
+            let hi = tb.min(t1);
+            if hi <= lo {
+                continue;
+            }
+            let frac = |t: f64| (t - ta) / (tb - ta);
+            let p_lo = pa + (pb - pa) * frac(lo);
+            let p_hi = pa + (pb - pa) * frac(hi);
+            e += 0.5 * (p_lo + p_hi) * (hi - lo);
+        }
+        e
+    }
+
+    /// Adversarial sample sets for the vectorised-vs-scalar pin: jittered
+    /// grids, identical timestamps, epsilon-spaced points, denormal
+    /// powers and spacings, and segments straddling the clip edges.
+    fn adversarial_cases() -> Vec<(Vec<(f64, f64)>, f64, f64)> {
+        let mut rng = crate::rng::Rng::new(0x1f2e3d4c);
+        let mut cases: Vec<(Vec<(f64, f64)>, f64, f64)> = Vec::new();
+
+        // jittered grid with duplicate timestamps spliced in
+        let mut jittered: Vec<(f64, f64)> = Vec::new();
+        let mut t = 0.0;
+        for _ in 0..257 {
+            t += rng.uniform() * 0.004;
+            jittered.push((t, 50.0 + 300.0 * rng.uniform()));
+            if rng.uniform() < 0.15 {
+                // identical timestamp, different power: degenerate pair
+                jittered.push((t, 50.0 + 300.0 * rng.uniform()));
+            }
+        }
+        cases.push((jittered, 0.1, 0.45));
+
+        // epsilon-spaced points hugging a bucket edge at t = 1.0
+        let eps = f64::EPSILON;
+        let hug: Vec<(f64, f64)> = (0..64)
+            .map(|i| (1.0 - 32.0 * eps + i as f64 * eps, 100.0 + i as f64))
+            .collect();
+        cases.push((hug, 0.0, 1.0));
+
+        // denormal powers and denormal spacing
+        let tiny = f64::MIN_POSITIVE / 8.0; // subnormal
+        let denorm: Vec<(f64, f64)> = (0..33)
+            .map(|i| (i as f64 * tiny, if i % 2 == 0 { tiny } else { -tiny }))
+            .collect();
+        cases.push((denorm, 0.0, 20.0 * tiny));
+
+        // segments straddling both clip edges, including fully outside
+        let straddle = vec![
+            (-1.0, 10.0),
+            (0.5, 20.0),   // straddles t0 = 0.0? (t0 below) — clipped at lo
+            (0.999, 30.0), // straddles the t1 edge
+            (1.5, 40.0),
+            (2.0, 50.0), // entirely past t1
+        ];
+        cases.push((straddle, 0.0, 1.0));
+
+        // empty / single-point / inverted-range degenerates
+        cases.push((Vec::new(), 0.0, 1.0));
+        cases.push((vec![(0.5, 100.0)], 0.0, 1.0));
+        cases.push((vec![(0.0, 1.0), (1.0, 2.0)], 0.9, 0.1));
+        cases
+    }
+
+    /// The tentpole's determinism discipline, pinned: the branch-free
+    /// kernel path equals the historical branching loop bit-for-bit on
+    /// adversarial inputs, and the columnar form returns identical bits
+    /// for *every* block width.
+    #[test]
+    fn vectorised_integration_matches_scalar_bitwise_for_every_chunk_width() {
+        for (points, t0, t1) in adversarial_cases() {
+            let want = scalar_reference(&points, t0, t1);
+            let got = integrate_clipped_points(&points, t0, t1);
+            assert_eq!(got.to_bits(), want.to_bits(), "kernel path diverged (n={})", points.len());
+
+            let ts: Vec<f64> = points.iter().map(|p| p.0).collect();
+            let watts: Vec<f64> = points.iter().map(|p| p.1).collect();
+            assert_eq!(
+                integrate_clipped_columns(&ts, &watts, t0, t1).to_bits(),
+                want.to_bits(),
+                "columnar default width diverged (n={})",
+                points.len()
+            );
+            for width in (1..=17).chain([31, 32, 33, INTEGRATE_CHUNK_MAX, usize::MAX]) {
+                let got = integrate_clipped_columns_width(&ts, &watts, t0, t1, width);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "width {width} diverged on {} points over [{t0}, {t1}]",
+                    points.len()
+                );
+            }
+        }
+    }
+
+    /// The per-pair kernel alone (the accounting fast path's unit of
+    /// arithmetic) equals a two-point reference call on the same pair.
+    #[test]
+    fn pair_kernel_matches_two_point_reference() {
+        let pairs = [
+            ((0.0, 100.0), (0.5, 200.0), 0.0, 1.0),
+            ((0.2, 5.0), (0.2, 9.0), 0.0, 1.0), // identical timestamps
+            ((0.9, 50.0), (1.1, 70.0), 0.0, 1.0), // straddles t1
+            ((-0.3, 10.0), (0.1, 20.0), 0.0, 1.0), // straddles t0
+            ((2.0, 10.0), (3.0, 20.0), 0.0, 1.0), // fully outside
+        ];
+        for ((ta, pa), (tb, pb), t0, t1) in pairs {
+            let want = scalar_reference(&[(ta, pa), (tb, pb)], t0, t1);
+            assert_eq!(trapezoid_clipped(ta, pa, tb, pb, t0, t1).to_bits(), want.to_bits());
+        }
     }
 }

@@ -24,6 +24,10 @@
 //!   [`crate::sim::TraceSampler`] through a per-worker [`MeasureScratch`]
 //!   arena, doing O(chunk) allocation per node instead of O(trace).
 
+// The trapezoid integration kernel and streaming capture live here: keep
+// the perf lint family blocking on the whole module tree.
+#![deny(clippy::perf)]
+
 pub mod correction;
 pub mod energy;
 pub mod good_practice;

@@ -32,7 +32,15 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Monotone event counter. One relaxed atomic add per sample.
+///
+/// Cache-line-aligned so two instruments can never share a line: the
+/// per-shard counters are hammered from different producer/consumer
+/// threads, and without the alignment the allocator is free to pack
+/// several 8-byte atomics into one 64-byte line, turning independent
+/// shards' relaxed adds into cross-core cache-line ping-pong (false
+/// sharing) that grows with the shard count.
 #[derive(Debug, Default)]
+#[repr(align(64))]
 pub struct Counter(AtomicU64);
 
 impl Counter {
@@ -54,7 +62,12 @@ impl Counter {
 
 /// Signed instantaneous level (queue depth, backlog length, bytes,
 /// millisecond marks). Relaxed atomics throughout.
+///
+/// Cache-line-aligned for the same false-sharing hygiene as [`Counter`]:
+/// per-shard gauges are written by different threads and must not share
+/// a line.
 #[derive(Debug, Default)]
+#[repr(align(64))]
 pub struct Gauge(AtomicI64);
 
 impl Gauge {
@@ -347,6 +360,11 @@ pub struct ServiceMetrics {
     pub windows_closed: Arc<Gauge>,
     /// Observation windows covered by a published checkpoint file.
     pub windows_published: Arc<Gauge>,
+    /// Query folds served straight from an unchanged shard's cache
+    /// (no shard state lock taken) — see the service's snapshot cache.
+    pub snapshot_cache_hits: Arc<Counter>,
+    /// Query folds that had to re-extract a shard whose version moved.
+    pub snapshot_cache_refolds: Arc<Counter>,
     /// Checkpoint files published.
     pub checkpoints_written: Arc<Counter>,
     /// Checkpoint encode+write+rename duration, nanoseconds.
@@ -440,6 +458,16 @@ impl ServiceMetrics {
                 "Observation windows covered by a published checkpoint.",
                 &[],
             ),
+            snapshot_cache_hits: reg.counter(
+                "telemetry_snapshot_cache_hits_total",
+                "Shard query folds served from an unchanged shard's cache.",
+                &[],
+            ),
+            snapshot_cache_refolds: reg.counter(
+                "telemetry_snapshot_cache_refolds_total",
+                "Shard query folds that re-extracted a changed shard.",
+                &[],
+            ),
             checkpoints_written: reg.counter(
                 "telemetry_checkpoints_total",
                 "Checkpoint files published.",
@@ -494,6 +522,15 @@ impl ServiceMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// False-sharing hygiene (ISSUE 8): every instrument occupies its own
+    /// cache line, so per-shard counters hammered from different threads
+    /// can never ping-pong one line between cores.
+    #[test]
+    fn instruments_are_cache_line_aligned() {
+        assert_eq!(std::mem::align_of::<Counter>(), 64);
+        assert_eq!(std::mem::align_of::<Gauge>(), 64);
+    }
 
     #[test]
     fn counter_and_gauge_basics() {

@@ -13,15 +13,20 @@
 //!     deployment has no per-node PMD, which is the paper's point).
 //!
 //! Every accumulator is driven through the *same* per-segment arithmetic
-//! ([`crate::measure::energy::integrate_clipped_points`] over one segment
-//! at a time, in stream order), so an account built incrementally from
-//! batches is **bit-for-bit** equal to one built from the full materialised
-//! poll log — pinned by tests here and in `tests/integration.rs`.
+//! (the branch-free [`crate::measure::energy::trapezoid_clipped`] kernel,
+//! one segment at a time, in stream order), so an account built
+//! incrementally from batches is **bit-for-bit** equal to one built from
+//! the full materialised poll log — pinned by tests here and in
+//! `tests/integration.rs`.
+//!
+//! Readings arrive in the columnar [`ReadingBatch`] layout the ingest
+//! layer streams (see the hot-path notes in `docs/ARCHITECTURE.md`).
 
-use crate::measure::energy::integrate_clipped_points;
+use crate::measure::energy::trapezoid_clipped;
 use crate::sim::profile::Generation;
 use crate::sim::trace::TraceView;
 
+use super::ingest::ReadingBatch;
 use super::registry::{EpochIdentity, SensorIdentity};
 
 /// Geometry of the accounting time buckets: `n` buckets of `bucket_s`
@@ -423,8 +428,8 @@ impl NodeAccountant {
     }
 
     /// Integrate one `[a, b]` reading segment into a bucket account. The
-    /// two-point call into `integrate_clipped_points` runs the exact
-    /// reference arithmetic, so incremental == batch bitwise. Buckets
+    /// per-pair [`trapezoid_clipped`] kernel is the exact reference
+    /// arithmetic, so incremental == batch bitwise. Buckets
     /// below `floor` (a restored frozen prefix) are never written: their
     /// imported values are already final and the per-bucket arithmetic for
     /// the remaining buckets is unchanged by the skip.
@@ -442,7 +447,7 @@ impl NodeAccountant {
             if b.0 <= lo || a.0 >= hi {
                 continue;
             }
-            acc[bucket] += integrate_clipped_points(&[a, b], lo, hi);
+            acc[bucket] += trapezoid_clipped(a.0, a.1, b.0, b.1, lo, hi);
         }
     }
 
@@ -533,15 +538,17 @@ impl NodeAccountant {
         }
     }
 
-    /// Feed a batch of readings.
+    /// Feed a columnar batch of readings (the ingest layer's pooled
+    /// [`ReadingBatch`] buffers stream straight in — no tuple
+    /// rematerialisation on the hot path).
     ///
     /// The hot path: once a node is in its steady state — every epoch
     /// identified, nothing pending, the open epoch current — the
     /// overwhelmingly common reading extends the stream *inside one
     /// bucket* with no edge crossing. This loop recognises that case per
-    /// reading and handles it with exactly one trapezoid per account
-    /// (the same [`integrate_clipped_points`] call [`Self::add_segment`]
-    /// would issue, over the same clip window, so the result is
+    /// reading and handles it with exactly one [`trapezoid_clipped`]
+    /// kernel per account (the same arithmetic [`Self::add_segment`]
+    /// would run, over the same clip window, so the result is
     /// bit-for-bit identical), skipping the per-bucket scans, the anchor
     /// edge walk, and the epoch/pending dispatch of the general
     /// [`Self::push_point`] path. Any reading that fails a guard —
@@ -549,7 +556,7 @@ impl NodeAccountant {
     /// of range — falls back to `push_point`, which is the unabridged
     /// arithmetic. Invariance is pinned by
     /// `batched_fast_path_matches_single_push_bitwise`.
-    pub fn push_points(&mut self, points: &[(f64, f64)]) {
+    pub fn push_points(&mut self, points: &ReadingBatch) {
         let steady = !self.epochs.is_empty()
             && self.identified == self.epochs.len()
             && self.cur + 1 == self.epochs.len()
@@ -563,7 +570,7 @@ impl NodeAccountant {
             // cold: calibration, identification, or a restart in flight —
             // the general path handles every transition (and epochs never
             // change inside a batch, so re-checking per reading is moot)
-            for &(t, w) in points {
+            for (t, w) in points.iter() {
                 self.push_point(t, w);
             }
             return;
@@ -572,7 +579,7 @@ impl NodeAccountant {
         let shift = ep.shift_s;
         let frac = 1.0 - ep.coverage;
         let spec = self.spec;
-        for &(t, w) in points {
+        for (t, w) in points.iter() {
             // `steady` holds across the batch: a fast reading restores it
             // by construction and a fallback `push_point` re-establishes
             // it (both watermarks land on (t, w), the epoch is unchanged)
@@ -608,9 +615,9 @@ impl NodeAccountant {
             self.min_w[b] = self.min_w[b].min(w);
             self.max_w[b] = self.max_w[b].max(w);
             let (lo, hi) = spec.bounds(b);
-            self.naive_j[b] += integrate_clipped_points(&[(lt, lw), (t, w)], lo, hi);
+            self.naive_j[b] += trapezoid_clipped(lt, lw, t, w, lo, hi);
             let (clo, chi) = spec.bounds(cb);
-            self.corrected_j[cb] += integrate_clipped_points(&[(slt, lw), (st, w)], clo, chi);
+            self.corrected_j[cb] += trapezoid_clipped(slt, lw, st, w, clo, chi);
             // add_unobserved's overlap for an interior segment is the
             // segment itself
             self.uncovered_s[b] += frac * (t - lt);
@@ -1012,7 +1019,13 @@ impl FleetAccounts {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::measure::energy::integrate_clipped_points;
     use crate::sim::trace::PowerTrace;
+
+    /// Tuple slice → columnar batch, for test inputs written as pairs.
+    fn rb(points: &[(f64, f64)]) -> ReadingBatch {
+        ReadingBatch::from_pairs(points)
+    }
 
     fn spec3() -> BucketSpec {
         BucketSpec::new(3.0, 1.0)
@@ -1053,7 +1066,7 @@ mod tests {
             (3.4, 160.0), // beyond the last bucket edge
         ];
         let mut acct = NodeAccountant::new(spec, 0.0, 1.0);
-        acct.push_points(&pts);
+        acct.push_points(&rb(&pts));
         let account = acct.finish(0, "m", Generation::Ampere, ident(), vec![0.0; spec.n]);
         for b in 0..spec.n {
             let (lo, hi) = spec.bounds(b);
@@ -1068,7 +1081,7 @@ mod tests {
         let pts: Vec<(f64, f64)> = (0..31).map(|i| (i as f64 * 0.1, 100.0)).collect();
         let shift = 0.05;
         let mut acct = NodeAccountant::new(spec, shift, 0.25);
-        acct.push_points(&pts);
+        acct.push_points(&rb(&pts));
         let account = acct.finish(0, "m", Generation::Ampere, ident(), vec![0.0; spec.n]);
         let shifted: Vec<(f64, f64)> = pts.iter().map(|&(t, w)| (t - shift, w)).collect();
         for b in 0..spec.n {
@@ -1085,13 +1098,13 @@ mod tests {
             (0..60).map(|i| (i as f64 * 0.05, 100.0 + (i % 7) as f64 * 13.0)).collect();
         let one = {
             let mut a = NodeAccountant::new(spec, 0.0125, 0.25);
-            a.push_points(&pts);
+            a.push_points(&rb(&pts));
             a.finish(0, "m", Generation::Ampere, ident(), vec![0.0; spec.n])
         };
         let chunked = {
             let mut a = NodeAccountant::new(spec, 0.0125, 0.25);
             for c in pts.chunks(7) {
-                a.push_points(c);
+                a.push_points(&rb(c));
             }
             a.finish(0, "m", Generation::Ampere, ident(), vec![0.0; spec.n])
         };
@@ -1109,12 +1122,12 @@ mod tests {
             (0..30).map(|i| (i as f64 * 0.1, if i % 2 == 0 { 100.0 } else { 300.0 })).collect();
         let low_cov = {
             let mut a = NodeAccountant::new(spec, 0.0, 0.25);
-            a.push_points(&pts);
+            a.push_points(&rb(&pts));
             a.finish(0, "m", Generation::Ampere, ident(), vec![0.0; spec.n])
         };
         let full_cov = {
             let mut a = NodeAccountant::new(spec, 0.0, 1.0);
-            a.push_points(&pts);
+            a.push_points(&rb(&pts));
             a.finish(0, "m", Generation::Ampere, ident(), vec![0.0; spec.n])
         };
         assert!(low_cov.bound_j[0] > 0.0, "25% coverage must carry a bound");
@@ -1152,7 +1165,7 @@ mod tests {
         let spec = spec3();
         let mk = |id: usize, w: f64| {
             let mut a = NodeAccountant::new(spec, 0.0, 1.0);
-            a.push_points(&[(0.1, w), (2.9, w)]);
+            a.push_points(&rb(&[(0.1, w), (2.9, w)]));
             a.finish(id, "m", Generation::Ampere, ident(), vec![1.0, 2.0, 3.0])
         };
         let fwd = FleetAccounts::merge(spec, vec![mk(0, 100.0), mk(1, 250.0), mk(2, 50.0)]);
@@ -1169,7 +1182,7 @@ mod tests {
     fn energy_between_whole_buckets() {
         let spec = spec3();
         let mut a = NodeAccountant::new(spec, 0.0, 1.0);
-        a.push_points(&[(0.0, 100.0), (3.0, 100.0)]);
+        a.push_points(&rb(&[(0.0, 100.0), (3.0, 100.0)]));
         let acc = FleetAccounts::merge(
             spec,
             vec![a.finish(0, "m", Generation::Ampere, ident(), vec![90.0, 90.0, 90.0])],
@@ -1224,7 +1237,7 @@ mod tests {
             }
             let mut batched = NodeAccountant::for_epochs(spec, &epochs);
             for chunk in pts.chunks(batch) {
-                batched.push_points(chunk);
+                batched.push_points(&rb(chunk));
             }
             assert_eq!(single.readings, batched.readings, "batch {batch}");
             for b in 0..spec.n {
@@ -1276,7 +1289,7 @@ mod tests {
         ];
         let pts = [(0.2, 100.0), (1.0, 120.0), (1.6, 90.0), (2.4, 110.0)];
         let mut acct = NodeAccountant::for_epochs(spec, &epochs);
-        acct.push_points(&pts);
+        acct.push_points(&rb(&pts));
         let account =
             acct.finish(0, "m", Generation::Ampere, epochs[1].identity, vec![0.0; spec.n]);
 
@@ -1315,13 +1328,13 @@ mod tests {
             (0..60).map(|i| (i as f64 * 0.05, 100.0 + (i % 9) as f64 * 11.0)).collect();
         let a = {
             let mut a = NodeAccountant::for_identity(spec, &identity);
-            a.push_points(&pts);
+            a.push_points(&rb(&pts));
             a.finish(0, "m", Generation::Ampere, identity, vec![0.0; spec.n])
         };
         let b = {
             let epochs = vec![EpochIdentity { t0: 0.0, identity }];
             let mut b = NodeAccountant::for_epochs(spec, &epochs);
-            b.push_points(&pts);
+            b.push_points(&rb(&pts));
             b.finish(0, "m", Generation::Ampere, identity, vec![0.0; spec.n])
         };
         for bkt in 0..spec.n {
@@ -1336,7 +1349,7 @@ mod tests {
         let spec = BucketSpec::new(10.0, 1.0); // 10 buckets
         let mut a = NodeAccountant::new(spec, 0.0, 0.5);
         let pts: Vec<(f64, f64)> = (0..101).map(|i| (i as f64 * 0.1, 200.0)).collect();
-        a.push_points(&pts);
+        a.push_points(&rb(&pts));
         let acc = FleetAccounts::merge(
             spec,
             vec![a.finish(0, "m", Generation::Ampere, SensorIdentity::unsupported(), vec![19.0; 10])],
@@ -1380,7 +1393,7 @@ mod tests {
 
         let upfront = {
             let mut a = NodeAccountant::for_epochs(spec, &epochs);
-            a.push_points(&pts);
+            a.push_points(&rb(&pts));
             a.finish(0, "m", Generation::Ampere, epochs[1].identity, vec![0.0; spec.n])
         };
 
@@ -1431,13 +1444,13 @@ mod tests {
         a.open_epoch(0.0);
         a.identify_span(&identity);
         let cut = 64; // mid-stream: last pushed t = 6.3 s
-        a.push_points(&pts[..cut]);
+        a.push_points(&rb(&pts[..cut]));
         let mid = a.account_view(0, "m", Generation::Ampere, identity, vec![0.0; spec.n], false);
         assert!(!mid.complete);
         // watermark 6.3 - 0.5 (shift allowance) = 5.8 -> buckets 0..5 final
         assert_eq!(mid.frozen_n, 5);
 
-        a.push_points(&pts[cut..]);
+        a.push_points(&rb(&pts[cut..]));
         let done = a.finish(0, "m", Generation::Ampere, identity, vec![0.0; spec.n]);
         for b in 0..mid.frozen_n {
             assert_eq!(mid.naive_j[b].to_bits(), done.naive_j[b].to_bits(), "bucket {b}");
@@ -1452,7 +1465,7 @@ mod tests {
     fn energy_between_clamps_inverted_and_out_of_range_queries() {
         let spec = spec3();
         let mut a = NodeAccountant::new(spec, 0.0, 1.0);
-        a.push_points(&[(0.0, 100.0), (3.0, 100.0)]);
+        a.push_points(&rb(&[(0.0, 100.0), (3.0, 100.0)]));
         let acc = FleetAccounts::merge(
             spec,
             vec![a.finish(0, "m", Generation::Ampere, ident(), vec![90.0, 90.0, 90.0])],
@@ -1498,7 +1511,7 @@ mod tests {
             let mut a = NodeAccountant::fresh(spec);
             a.open_epoch(0.0);
             a.identify_span(&identity);
-            a.push_points(&pts);
+            a.push_points(&rb(&pts));
             a.finish(0, "m", Generation::Ampere, identity, vec![0.0; spec.n])
         };
 
@@ -1507,7 +1520,7 @@ mod tests {
         let mut live = NodeAccountant::fresh(spec);
         live.open_epoch(0.0);
         live.identify_span(&identity);
-        live.push_points(&pts[..cut]);
+        live.push_points(&rb(&pts[..cut]));
         let frozen = live.export_frozen();
         assert!(frozen.frozen_n > 0 && frozen.frozen_n < spec.n, "{}", frozen.frozen_n);
         // the anchor is the last reading below the frozen boundary
@@ -1519,7 +1532,7 @@ mod tests {
         // restore + re-ingest from the anchor
         let mut resumed =
             NodeAccountant::resume(spec, &[(0.0, Some(identity))], &frozen, frozen.skip);
-        resumed.push_points(&pts[frozen.skip as usize..]);
+        resumed.push_points(&rb(&pts[frozen.skip as usize..]));
         let out = resumed.finish(0, "m", Generation::Ampere, identity, vec![0.0; spec.n]);
         assert_eq!(out.readings, reference.readings);
         for b in 0..spec.n {
@@ -1622,7 +1635,7 @@ mod tests {
         let spec = spec3();
         let identity = ident();
         let mut a = NodeAccountant::new(spec, 0.0, 1.0);
-        a.push_points(&(0..30).map(|i| (i as f64 * 0.1, 100.0)).collect::<Vec<_>>());
+        a.push_points(&rb(&(0..30).map(|i| (i as f64 * 0.1, 100.0)).collect::<Vec<_>>()));
         let frozen = a.export_frozen();
         assert_eq!(frozen.frozen_n, 2, "2.9 s stream, 0.5 s allowance -> 2 frozen buckets");
 
@@ -1645,7 +1658,7 @@ mod tests {
         let spec = BucketSpec::new(10.0, 10.0);
         // one node, 10 s, truth 3000 J (300 W), naive 3150 J (+5%)
         let mut a = NodeAccountant::new(spec, 0.0, 1.0);
-        a.push_points(&[(0.0, 315.0), (10.0, 315.0)]);
+        a.push_points(&rb(&[(0.0, 315.0), (10.0, 315.0)]));
         let acc =
             FleetAccounts::merge(spec, vec![a.finish(0, "m", Generation::Ampere, ident(), vec![3000.0])]);
         let c10k = acc.annual_cost_error_usd(10_000, 0.15, 10.0);
@@ -1662,7 +1675,7 @@ mod tests {
         let spec = BucketSpec::new(7.0, 3.0);
         assert_eq!(spec.n, 3);
         let mut a = NodeAccountant::new(spec, 0.0, 1.0);
-        a.push_points(&[(0.0, 315.0), (7.0, 315.0)]);
+        a.push_points(&rb(&[(0.0, 315.0), (7.0, 315.0)]));
         let acc = FleetAccounts::merge(
             spec,
             vec![a.finish(0, "m", Generation::Ampere, ident(), vec![700.0, 700.0, 700.0])],

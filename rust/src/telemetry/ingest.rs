@@ -47,9 +47,13 @@
 //! Allocation discipline: each worker owns one [`NodeScratch`] arena
 //! (chunk + identification + truth buffers, reused node to node) and the
 //! sources reuse their capture arenas the same way; batch buffers are
-//! recycled through a pool channel fed back by the consumer — so ingestion
-//! performs O(1) amortised allocation per reading (asserted by the
-//! `hotpath` benchmark's counting allocator).
+//! columnar [`ReadingBatch`]es recycled through **shard-local** pool
+//! channels ([`BatchPools`]) fed back by each shard's own consumer — a
+//! shard's recycling never contends with another shard's, and the
+//! per-shard buffer population is bounded by that shard's queue depth
+//! alone, so allocations per reading are non-increasing in the shard
+//! count (asserted by the `hotpath` benchmark's counting allocator and
+//! the pool-locality tests below).
 //!
 //! Everything a node produces is a pure function of its source's inputs
 //! `(device, driver, field, service seed, node id, schedule, fault plan)`
@@ -59,8 +63,8 @@
 //! (`MeasurementRig::capture` + `smi::Poller` + `identify_epoch`), which
 //! the integration tests pin.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -207,6 +211,164 @@ pub fn node_activity_timeline(
     }
 }
 
+/// A columnar (structure-of-arrays) batch of polled power readings: the
+/// unit that flows from the producers' chunk loop, over the bounded
+/// shard queues, into [`super::accounting::NodeAccountant::push_points`].
+///
+/// Timestamps and watts live in separate, densely packed columns so the
+/// accounting fast path and the integration kernels
+/// ([`crate::measure::energy::integrate_clipped_columns`]) stream each
+/// column contiguously — no `(f64, f64)` interleaving on the hot path.
+/// The two columns always have equal length.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct ReadingBatch {
+    /// Reading timestamps, stream seconds, non-decreasing per node.
+    pub ts: Vec<f64>,
+    /// Published power readings, watts (same length as `ts`).
+    pub watts: Vec<f64>,
+}
+
+impl ReadingBatch {
+    /// An empty batch with room for `n` readings per column.
+    pub fn with_capacity(n: usize) -> Self {
+        ReadingBatch { ts: Vec::with_capacity(n), watts: Vec::with_capacity(n) }
+    }
+
+    /// A batch holding a copy of `pairs` (test/interop convenience; the
+    /// hot path appends columns directly).
+    pub fn from_pairs(pairs: &[(f64, f64)]) -> Self {
+        let mut b = ReadingBatch::with_capacity(pairs.len());
+        b.extend_from_pairs(pairs);
+        b
+    }
+
+    /// Readings held.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.ts.len()
+    }
+
+    /// No readings held?
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.ts.is_empty()
+    }
+
+    /// Drop all readings, keeping both columns' capacity (the pool
+    /// recycling contract).
+    pub fn clear(&mut self) {
+        self.ts.clear();
+        self.watts.clear();
+    }
+
+    /// Append one reading.
+    #[inline]
+    pub fn push(&mut self, t: f64, w: f64) {
+        self.ts.push(t);
+        self.watts.push(w);
+    }
+
+    /// Reading `i` as a `(t, W)` pair.
+    #[inline]
+    pub fn get(&self, i: usize) -> (f64, f64) {
+        (self.ts[i], self.watts[i])
+    }
+
+    /// The last reading, if any.
+    pub fn last(&self) -> Option<(f64, f64)> {
+        match (self.ts.last(), self.watts.last()) {
+            (Some(&t), Some(&w)) => Some((t, w)),
+            _ => None,
+        }
+    }
+
+    /// Append a tuple slice, transposing into the columns.
+    pub fn extend_from_pairs(&mut self, pairs: &[(f64, f64)]) {
+        self.ts.extend(pairs.iter().map(|p| p.0));
+        self.watts.extend(pairs.iter().map(|p| p.1));
+    }
+
+    /// Iterate readings as `(t, W)` pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (f64, f64)> + '_ {
+        self.ts.iter().copied().zip(self.watts.iter().copied())
+    }
+
+    /// The readings as a freshly allocated tuple vector (tests and
+    /// non-hot-path interop).
+    pub fn to_pairs(&self) -> Vec<(f64, f64)> {
+        self.iter().collect()
+    }
+}
+
+/// Shard-local [`ReadingBatch`] recycling: one unbounded channel per
+/// accounting shard. Each shard's consumer sends drained buffers back on
+/// its own shard's channel (the [`Sender`] half returned by [`BatchPools::new`])
+/// and producers draw replacement buffers for a node from the pool of
+/// the shard that owns it — so recycling never crosses shards, pool
+/// traffic never contends across shards, and the buffer population of a
+/// shard is bounded by that shard's queue depth plus its in-flight
+/// batches, independent of how many other shards exist.
+///
+/// A draw that finds the pool empty allocates a fresh buffer and counts
+/// a *miss*; misses are exactly the batch-buffer allocations, which is
+/// what the pool-locality tests pin.
+#[derive(Debug)]
+pub struct BatchPools {
+    shards: Vec<(Mutex<Receiver<ReadingBatch>>, AtomicU64)>,
+}
+
+impl BatchPools {
+    /// Pools for `n_shards` shards, plus each shard's recycling sender
+    /// (hand sender `i` to shard `i`'s consumer; dropping it just makes
+    /// later draws on that shard allocate).
+    pub fn new(n_shards: usize) -> (Self, Vec<Sender<ReadingBatch>>) {
+        let n = n_shards.max(1);
+        let mut shards = Vec::with_capacity(n);
+        let mut senders = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel::<ReadingBatch>();
+            shards.push((Mutex::new(rx), AtomicU64::new(0)));
+            senders.push(tx);
+        }
+        (BatchPools { shards }, senders)
+    }
+
+    /// A cleared buffer for `shard` (clamped): recycled when the shard's
+    /// pool has one, freshly allocated (and counted as a miss) otherwise.
+    pub fn draw(&self, shard: usize) -> ReadingBatch {
+        let (rx, misses) = &self.shards[shard.min(self.shards.len() - 1)];
+        let recycled = match rx.lock() {
+            Ok(rx) => rx.try_recv().ok(),
+            Err(p) => p.into_inner().try_recv().ok(),
+        };
+        match recycled {
+            Some(mut buf) => {
+                buf.clear();
+                buf
+            }
+            None => {
+                misses.fetch_add(1, Ordering::Relaxed);
+                ReadingBatch::default()
+            }
+        }
+    }
+
+    /// Fresh-allocation count for `shard` (clamped) so far.
+    pub fn misses(&self, shard: usize) -> u64 {
+        self.shards[shard.min(self.shards.len() - 1)].1.load(Ordering::Relaxed)
+    }
+
+    /// Fresh-allocation count across all shards.
+    pub fn total_misses(&self) -> u64 {
+        self.shards.iter().map(|(_, m)| m.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Number of shard pools.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
 /// Messages flowing from ingest workers to the accounting consumer — one
 /// node's life as an ordered protocol (see the module docs).
 #[derive(Debug)]
@@ -241,12 +403,12 @@ pub enum IngestMsg {
         /// Its final sensor identity.
         identity: SensorIdentity,
     },
-    /// One batch of polled `(t, W)` readings, in stream order per node.
+    /// One batch of polled readings, in stream order per node.
     Batch {
         /// The node's fleet id.
         node_id: usize,
-        /// The readings (a pool-recycled buffer).
-        points: Vec<(f64, f64)>,
+        /// The readings (a pool-recycled columnar buffer).
+        points: ReadingBatch,
     },
     /// Drift was confirmed but the source cannot replay probes (recorded
     /// logs): surfaced to operators instead of re-calibrating.
@@ -371,7 +533,7 @@ pub struct NodeScratch {
     pub(crate) id: IdentifyScratch,
     pub(crate) ident: IncrementalIdentifier,
     pub(crate) monitor: DriftMonitor,
-    pub(crate) chunk: Vec<(f64, f64)>,
+    pub(crate) chunk: ReadingBatch,
     pub(crate) truth: Vec<f64>,
 }
 
@@ -382,7 +544,7 @@ impl NodeScratch {
             id: IdentifyScratch::default(),
             ident: IncrementalIdentifier::new(&ProbeSchedule::default()),
             monitor: DriftMonitor::new(),
-            chunk: Vec::new(),
+            chunk: ReadingBatch::default(),
             truth: Vec::new(),
         }
     }
@@ -396,25 +558,21 @@ impl Default for NodeScratch {
 
 /// The producer side of the bounded queues: one send handle per
 /// accounting shard, the node-id routing map, the batch size, the
-/// buffer-recycling pool (shared — recycled buffers are fungible), and
-/// the service's instrument set (producer-side counters/gauges — see
+/// shard-local buffer-recycling pools ([`BatchPools`] — a node's fresh
+/// buffers come from the pool of the shard that owns it), and the
+/// service's instrument set (producer-side counters/gauges — see
 /// [`ShardMetrics`]).
 pub(crate) struct Emitter<'a> {
     pub(crate) txs: &'a [SyncSender<IngestMsg>],
     pub(crate) map: ShardMap,
-    pub(crate) pool: &'a Mutex<Receiver<Vec<(f64, f64)>>>,
+    pub(crate) pools: &'a BatchPools,
     pub(crate) batch: usize,
     pub(crate) metrics: &'a ServiceMetrics,
 }
 
 impl Emitter<'_> {
-    fn fresh_buf(&self) -> Vec<(f64, f64)> {
-        let mut buf = match self.pool.lock() {
-            Ok(rx) => rx.try_recv().unwrap_or_default(),
-            Err(_) => Vec::new(),
-        };
-        buf.clear();
-        buf
+    fn fresh_buf(&self, shard: usize) -> ReadingBatch {
+        self.pools.draw(shard)
     }
 }
 
@@ -429,17 +587,18 @@ pub(crate) struct NodeEmitter<'a, 'b> {
     tx: &'b SyncSender<IngestMsg>,
     sm: &'a ShardMetrics,
     node_id: usize,
-    buf: Vec<(f64, f64)>,
+    shard: usize,
+    buf: ReadingBatch,
     dead: bool,
 }
 
 impl<'a, 'b> NodeEmitter<'a, 'b> {
     pub(crate) fn new(emit: &'b Emitter<'a>, node_id: usize) -> Self {
-        let buf = emit.fresh_buf();
         let shard = emit.map.shard_of(node_id);
+        let buf = emit.fresh_buf(shard);
         let tx = &emit.txs[shard];
         let sm = &emit.metrics.shards[shard];
-        NodeEmitter { emit, tx, sm, node_id, buf, dead: false }
+        NodeEmitter { emit, tx, sm, node_id, shard, buf, dead: false }
     }
 
     pub(crate) fn is_dead(&self) -> bool {
@@ -495,7 +654,7 @@ impl<'a, 'b> NodeEmitter<'a, 'b> {
         if self.dead {
             return;
         }
-        self.buf.push((t, w));
+        self.buf.push(t, w);
         if self.buf.len() >= self.emit.batch.max(1) {
             self.flush();
         }
@@ -511,7 +670,7 @@ impl<'a, 'b> NodeEmitter<'a, 'b> {
             return;
         }
         let n = self.buf.len() as u64;
-        let points = std::mem::replace(&mut self.buf, self.emit.fresh_buf());
+        let points = std::mem::replace(&mut self.buf, self.emit.fresh_buf(self.shard));
         let msg = IngestMsg::Batch { node_id: self.node_id, points };
         if self.emit.metrics.enabled {
             let t = Instant::now();
@@ -755,7 +914,7 @@ pub(crate) fn stream_source<S: ReadingSource>(
             break;
         }
         for i in 0..scratch.chunk.len() {
-            let (t, w) = scratch.chunk[i];
+            let (t, w) = scratch.chunk.get(i);
             if to_skip > 0 {
                 // resume fast-forward: the prefix is already accounted
                 // (the source still generated it, so its RNG state — e.g.
@@ -1073,6 +1232,93 @@ mod tests {
             .segments
             .iter()
             .any(|s| s.t0 >= down.1 - 1e-12 && s.t0 < down.1 + 1.0));
+    }
+
+    #[test]
+    fn reading_batch_round_trips_pairs_and_keeps_capacity() {
+        let pairs = vec![(0.0, 10.0), (0.5, 20.0), (1.0, 30.0)];
+        let mut b = ReadingBatch::from_pairs(&pairs);
+        assert_eq!(b.len(), 3);
+        assert!(!b.is_empty());
+        assert_eq!(b.get(1), (0.5, 20.0));
+        assert_eq!(b.last(), Some((1.0, 30.0)));
+        assert_eq!(b.to_pairs(), pairs);
+        assert_eq!(b.iter().collect::<Vec<_>>(), pairs);
+        let (cap_t, cap_w) = (b.ts.capacity(), b.watts.capacity());
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.last(), None);
+        assert_eq!((b.ts.capacity(), b.watts.capacity()), (cap_t, cap_w));
+        b.push(2.0, 40.0);
+        b.extend_from_pairs(&pairs);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.get(0), (2.0, 40.0));
+        assert_eq!(b.to_pairs()[1..], pairs);
+    }
+
+    /// The satellite fix pinned at the pool level: recycling is
+    /// shard-local, so a drawn buffer returns to (and is reused by) the
+    /// shard that drew it, and one shard's steady-state allocation count
+    /// is *independent of how many other shards exist* — batch-buffer
+    /// allocations per reading can therefore only fall, never rise, as
+    /// shards are added for the same workload.
+    #[test]
+    fn batch_pools_are_shard_local_and_misses_do_not_grow_with_shards() {
+        let mut miss_profile: Option<u64> = None;
+        for n_shards in [1usize, 2, 4, 8] {
+            let (pools, recyclers) = BatchPools::new(n_shards);
+            assert_eq!(pools.n_shards(), n_shards);
+            // the same steady-state draw/recycle trace on EVERY shard:
+            // at most 2 buffers outstanding, 64 batches shipped per shard
+            for shard in 0..n_shards {
+                for _ in 0..32 {
+                    let mut a = pools.draw(shard);
+                    a.push(0.0, 1.0);
+                    let b = pools.draw(shard);
+                    recyclers[shard].send(a).unwrap();
+                    recyclers[shard].send(b).unwrap();
+                }
+            }
+            for shard in 0..n_shards {
+                // steady state: exactly the outstanding high-water mark
+                // allocated, regardless of the total shard count
+                assert_eq!(pools.misses(shard), 2, "shard {shard} of {n_shards}");
+            }
+            match miss_profile {
+                None => miss_profile = Some(pools.misses(0)),
+                Some(want) => assert_eq!(
+                    pools.misses(0),
+                    want,
+                    "per-shard allocations must not depend on the shard count"
+                ),
+            }
+            assert_eq!(pools.total_misses(), 2 * n_shards as u64);
+            // recycled buffers come back cleared, with capacity intact
+            let buf = pools.draw(0);
+            assert!(buf.is_empty());
+            assert!(buf.ts.capacity() > 0, "recycled, not freshly allocated");
+            assert_eq!(pools.misses(0), 2, "the draw above hit the pool");
+        }
+    }
+
+    /// Cross-shard traffic never migrates buffers: shard 1 recycling
+    /// heavily does not stock shard 0's pool.
+    #[test]
+    fn batch_pools_never_share_buffers_across_shards() {
+        let (pools, recyclers) = BatchPools::new(2);
+        for _ in 0..8 {
+            let buf = pools.draw(1);
+            recyclers[1].send(buf).unwrap();
+        }
+        assert_eq!(pools.misses(1), 1, "shard 1 reuses its one buffer");
+        // shard 0's pool is still empty: every draw allocates
+        for _ in 0..3 {
+            let _ = pools.draw(0);
+        }
+        assert_eq!(pools.misses(0), 3, "shard 0 never sees shard 1's buffers");
+        // out-of-range shard indices clamp instead of panicking
+        let _ = pools.draw(99);
+        assert_eq!(pools.misses(99), pools.misses(1));
     }
 
     #[test]

@@ -88,6 +88,9 @@
 //! chunk boundary is next when it arrives.
 
 #![warn(missing_docs)]
+// The ingest -> accounting hot path lives here: keep the perf lint family
+// blocking so clones-in-loops and friends cannot creep back in.
+#![deny(clippy::perf)]
 
 pub mod accounting;
 pub mod ingest;
@@ -101,7 +104,7 @@ pub use accounting::{
     BucketSpec, FleetAccounts, FleetEnergy, FrozenState, NodeAccount, NodeAccountant,
     WindowSnapshot,
 };
-pub use ingest::{IngestStats, NodeScratch, RecalBoard, ShardMap};
+pub use ingest::{BatchPools, IngestStats, NodeScratch, ReadingBatch, RecalBoard, ShardMap};
 pub use persist::{Checkpoint, ServiceFingerprint, SourceKind};
 pub use registry::{
     detect_epochs, CalPhase, DriftMonitor, EpochIdentity, EpochTracker, GenAccuracy,

@@ -39,7 +39,7 @@ use crate::smi::poll_readings;
 
 use super::ingest::{
     append_workload_iterations, epoch_boot_seed, node_activity_timeline, node_boot_seed,
-    node_rig_seed, node_workload,
+    node_rig_seed, node_workload, ReadingBatch,
 };
 use super::registry::ProbeSchedule;
 
@@ -141,14 +141,14 @@ impl Default for SourceInfo {
 /// A chunked producer of `(t, W)` power readings for one node, plus the
 /// ground-truth reference when one exists. The same contract as the
 /// streaming capture path: `fill` appends in non-decreasing time order
-/// into a caller-owned buffer, returns the count appended, and 0 means
-/// exhausted.
+/// into a caller-owned columnar [`ReadingBatch`], returns the count
+/// appended, and 0 means exhausted.
 pub trait ReadingSource {
     /// Node metadata (valid after the source is prepared).
     fn info(&self) -> SourceInfo;
 
     /// Append up to `max` readings to `out`; 0 = stream complete.
-    fn fill(&mut self, out: &mut Vec<(f64, f64)>, max: usize) -> usize;
+    fn fill(&mut self, out: &mut ReadingBatch, max: usize) -> usize;
 
     /// The PMD reference capture, when the source has one (simulated
     /// nodes). `None` for recorded logs: identification then synthesizes
@@ -312,9 +312,9 @@ impl ReadingSource for SimSource {
         self.info
     }
 
-    fn fill(&mut self, out: &mut Vec<(f64, f64)>, max: usize) -> usize {
+    fn fill(&mut self, out: &mut ReadingBatch, max: usize) -> usize {
         let end = (self.pos + max).min(self.measure.points.len());
-        out.extend_from_slice(&self.measure.points[self.pos..end]);
+        out.extend_from_pairs(&self.measure.points[self.pos..end]);
         let n = end - self.pos;
         self.pos = end;
         n
@@ -456,9 +456,9 @@ impl ReadingSource for ReplaySource {
         self.info
     }
 
-    fn fill(&mut self, out: &mut Vec<(f64, f64)>, max: usize) -> usize {
+    fn fill(&mut self, out: &mut ReadingBatch, max: usize) -> usize {
         let end = (self.pos + max).min(self.points.len());
-        out.extend_from_slice(&self.points[self.pos..end]);
+        out.extend_from_pairs(&self.points[self.pos..end]);
         let n = end - self.pos;
         self.pos = end;
         n
@@ -558,7 +558,7 @@ pub struct FaultSource<S> {
     timeline: NodeTimeline,
     dropout: Dropout,
     stuck: Vec<StuckHold>,
-    staging: Vec<(f64, f64)>,
+    staging: ReadingBatch,
 }
 
 impl<S> FaultSource<S> {
@@ -573,7 +573,7 @@ impl<S> FaultSource<S> {
             timeline: NodeTimeline::default(),
             dropout,
             stuck,
-            staging: Vec::new(),
+            staging: ReadingBatch::default(),
         }
     }
 
@@ -609,7 +609,7 @@ impl<S: ReadingSource> ReadingSource for FaultSource<S> {
     /// Pull from the inner source until at least one reading survives the
     /// fault transforms (or the inner stream ends) — a fully-dropped chunk
     /// must not read as end-of-stream.
-    fn fill(&mut self, out: &mut Vec<(f64, f64)>, max: usize) -> usize {
+    fn fill(&mut self, out: &mut ReadingBatch, max: usize) -> usize {
         let before = out.len();
         while out.len() == before {
             self.staging.clear();
@@ -617,7 +617,7 @@ impl<S: ReadingSource> ReadingSource for FaultSource<S> {
                 break;
             }
             for i in 0..self.staging.len() {
-                let (t, w) = self.staging[i];
+                let (t, w) = self.staging.get(i);
                 if self.blacked_out(t) {
                     continue;
                 }
@@ -628,7 +628,7 @@ impl<S: ReadingSource> ReadingSource for FaultSource<S> {
                 for hold in &mut self.stuck {
                     v = hold.apply(t, v);
                 }
-                out.push((t, v));
+                out.push(t, v);
             }
         }
         out.len() - before
@@ -669,6 +669,14 @@ mod tests {
         NodeTimeline { breaks: restarts.iter().map(|&t| (t, BreakKind::Restart)).collect() }
     }
 
+    /// Drain a source to exhaustion through the columnar batch contract
+    /// and hand the stream back as `(t, W)` pairs for comparison.
+    fn drain(src: &mut impl ReadingSource, chunk: usize) -> Vec<(f64, f64)> {
+        let mut buf = ReadingBatch::default();
+        while src.fill(&mut buf, chunk) > 0 {}
+        buf.to_pairs()
+    }
+
     fn a100_source(duration_s: f64, restarts: &[f64]) -> SimSource {
         let device = GpuDevice::new(find_model("A100 PCIe-40G").unwrap(), 0, 5);
         let mut src = SimSource::new();
@@ -691,19 +699,16 @@ mod tests {
         let sched = ProbeSchedule::default();
         let duration = sched.calibration_end() + 1.0;
         let mut a = a100_source(duration, &[]);
-        let mut whole = Vec::new();
-        while a.fill(&mut whole, 10_000) > 0 {}
+        let whole = drain(&mut a, 10_000);
         assert!(whole.len() > 1000, "{}", whole.len());
         assert!(a.truth().is_some());
 
         let mut b = a100_source(duration, &[]);
-        let mut chunked = Vec::new();
-        while b.fill(&mut chunked, 97) > 0 {}
+        let chunked = drain(&mut b, 97);
         assert_eq!(whole, chunked, "chunk boundaries never change the stream");
         // preparing again reuses the arenas and reproduces the stream
         let mut c = a100_source(duration, &[]);
-        let mut again = Vec::new();
-        while c.fill(&mut again, 513) > 0 {}
+        let again = drain(&mut c, 513);
         assert_eq!(whole, again);
     }
 
@@ -719,10 +724,8 @@ mod tests {
 
         let mut plain = a100_source(duration, &[]);
         let mut with_restart = a100_source(duration, &effective);
-        let mut p0 = Vec::new();
-        let mut p1 = Vec::new();
-        while plain.fill(&mut p0, 8192) > 0 {}
-        while with_restart.fill(&mut p1, 8192) > 0 {}
+        let p0 = drain(&mut plain, 8192);
+        let p1 = drain(&mut with_restart, 8192);
         // before the restart the two captures are identical...
         let pre0: Vec<_> = p0.iter().filter(|p| p.0 < effective[0]).collect();
         let pre1: Vec<_> = p1.iter().filter(|p| p.0 < effective[0]).collect();
@@ -767,8 +770,7 @@ mod tests {
         let sched = ProbeSchedule::default();
         let duration = sched.calibration_end() + 1.0;
         let mut clean_src = a100_source(duration, &[]);
-        let mut clean = Vec::new();
-        while clean_src.fill(&mut clean, 4096) > 0 {}
+        let clean = drain(&mut clean_src, 4096);
 
         let plan = FaultPlan {
             dropout: 0.2,
@@ -778,8 +780,7 @@ mod tests {
         };
         let mut faulty = FaultSource::new(a100_source(duration, &[]), plan);
         faulty.reset(42, &NodeTimeline::default());
-        let mut got = Vec::new();
-        while faulty.fill(&mut got, 229) > 0 {}
+        let got = drain(&mut faulty, 229);
 
         // reference: outage first (blackout), then dropout over the
         // survivors, then the stuck transform — the same order FaultSource
@@ -827,8 +828,7 @@ mod tests {
             duration,
             &timeline,
         );
-        let mut pts = Vec::new();
-        while src.fill(&mut pts, 4096) > 0 {}
+        let pts = drain(&mut src, 4096);
         assert!(!pts.is_empty());
         // the raw sim stream has no restart-sized hole at the update (the
         // short blackout is a FaultSource concern)
@@ -864,13 +864,12 @@ mod tests {
         let cal = sched.calibration_end();
         let duration = 2.0 * cal + 8.0;
         let mut plain = a100_source(duration, &[]);
-        let mut reference = Vec::new();
-        while plain.fill(&mut reference, 8192) > 0 {}
+        let reference = drain(&mut plain, 8192);
 
         let mut src = a100_source(duration, &[]);
-        let mut streamed = Vec::new();
+        let mut streamed = ReadingBatch::default();
         // consume ~the first calibration + 2 s
-        while streamed.last().map(|p: &(f64, f64)| p.0 < cal + 2.0).unwrap_or(true) {
+        while streamed.last().map(|p| p.0 < cal + 2.0).unwrap_or(true) {
             if src.fill(&mut streamed, 256) == 0 {
                 break;
             }
@@ -882,9 +881,8 @@ mod tests {
         assert_eq!((t_r * crate::pmd::PMD_SAMPLE_HZ).round() / crate::pmd::PMD_SAMPLE_HZ, t_r);
 
         // drain the rest: prefix identical to the pre-replay capture
-        let mut rest = Vec::new();
-        while src.fill(&mut rest, 8192) > 0 {}
-        let all: Vec<(f64, f64)> = streamed.iter().chain(rest.iter()).copied().collect();
+        let rest = drain(&mut src, 8192);
+        let all: Vec<(f64, f64)> = streamed.iter().chain(rest.iter().copied()).collect();
         for (i, (a, b)) in all.iter().zip(reference.iter()).enumerate() {
             if a.0 >= t_r {
                 break;
@@ -899,8 +897,7 @@ mod tests {
 
         // no room near the end -> refused
         let mut late = a100_source(duration, &[]);
-        let mut sink = Vec::new();
-        while late.fill(&mut sink, 8192) > 0 {}
+        drain(&mut late, 8192);
         assert_eq!(late.replay_probes(duration - 1.0), None);
         // recorded logs can never replay probes
         let text = "timestamp, name, power.draw [W]\n0.100, A100 PCIe-40G, 60.00 W\n";
@@ -922,8 +919,7 @@ mod tests {
         assert_eq!(info.model, "A100 PCIe-40G");
         assert_eq!(info.generation, Generation::AmpereGa100);
         assert!(src.truth().is_none(), "recorded logs carry no reference");
-        let mut pts = Vec::new();
-        while src.fill(&mut pts, 2) > 0 {}
+        let pts = drain(&mut src, 2);
         assert_eq!(pts, vec![(0.1, 60.0), (0.3, 61.25)], "[N/A] rows skipped");
 
         let mut bad = ReplaySource::new();

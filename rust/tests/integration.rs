@@ -218,7 +218,7 @@ fn telemetry_accounts_match_materialised_batch_reference_bit_for_bit() {
         let mut truth = Vec::new();
         accounting::pmd_bucket_energies(cap.pmd_trace.view(), &spec, &mut truth);
         let mut acct = NodeAccountant::for_identity(spec, &identity);
-        acct.push_points(&log.series.points);
+        acct.push_points(&ingest::ReadingBatch::from_pairs(&log.series.points));
         let reference = acct.finish(
             node.id,
             node.device.model.name,
