@@ -49,6 +49,14 @@
 //!   exporters (`ServiceHandle::metrics()`, `repro telemetry
 //!   --metrics-out`), and the `repro watch` live operator console over
 //!   the event stream (deterministic `--headless --frames N` mode);
+//! * [`net`] — the network query/control plane: `repro serve` exposes a
+//!   live `ServiceHandle` over a hand-rolled TCP protocol (versioned
+//!   length-prefixed FNV-1a-checksummed frames; `.gpck` checkpoint bytes
+//!   as the fleet-state interchange unit), `repro query` / `repro watch
+//!   --connect` drive it remotely with reconnect + seq-resumed event
+//!   subscriptions, and `repro federate` folds N served collectors into
+//!   one fleet account that is bit-for-bit the single-service account of
+//!   the union fleet;
 //! * [`runtime`] — the PJRT artifact runtime (Python never runs at request
 //!   time).
 
@@ -57,6 +65,7 @@ pub mod coordinator;
 pub mod estimator;
 pub mod experiments;
 pub mod measure;
+pub mod net;
 pub mod obs;
 pub mod pmd;
 pub mod report;

@@ -126,7 +126,41 @@ COMMANDS:
                             stamps (normalised to relative at the first
                             reading). See examples/nvidia_smi_a100.csv and
                             examples/nvidia_smi_a100_wallclock.csv.
-  watch [telemetry flags] [--every S] [--headless] [--frames N]
+  serve [telemetry flags] [--listen ADDR]
+                            run the telemetry service and expose it over
+                            TCP (default 127.0.0.1:7070): a framed,
+                            versioned, checksummed binary protocol with
+                            a fingerprint handshake; snapshot / query /
+                            control / event-subscribe requests answered
+                            while ingestion runs, and kept answered after
+                            the run drains (kill to stop). Protocol
+                            grammar in docs/ARCHITECTURE.md.
+  query ADDR [energy|windows|top|progress] [--k N]
+                            query a served collector. `energy` (default)
+                            fetches the checkpoint interchange bytes and
+                            renders the fleet-energy table client-side —
+                            byte-identical to the serving `repro
+                            telemetry` output; `windows` / `top` render
+                            collector-side; `progress` prints the shared
+                            status line.
+  federate --upstream ADDR [--upstream ADDR ...] [--poll-every S]
+           [--metrics-out PATH]
+                            poll N served collectors until all complete
+                            and fold them into ONE fleet account: node
+                            ids remapped into disjoint per-collector
+                            ranges (--upstream order), fingerprints
+                            validated on every poll (a restarted
+                            upstream re-joins only if unchanged), folds
+                            in global node-id order — the federated
+                            tables are bit-for-bit what one in-process
+                            service over the union fleet prints. A
+                            failed poll keeps that upstream's last good
+                            view and shows up in the health table's
+                            stale column instead of poisoning the
+                            account. --metrics-out writes per-upstream
+                            staleness/poll metrics (.json or Prometheus
+                            text).
+  watch [telemetry flags | --connect ADDR] [--every S] [--headless] [--frames N]
                             live operator console over the telemetry
                             service (same sources/flags as `telemetry`):
                             fleet energy ticker, the shared status line,
@@ -138,7 +172,11 @@ COMMANDS:
                             service drains. --headless waits for the
                             drain, then prints --frames N (default 3)
                             deterministic frames to stdout for scripts
-                            and CI.
+                            and CI. --connect ADDR renders the same
+                            console from a collector served elsewhere
+                            (`repro serve`) instead of launching one —
+                            headless frames over loopback are
+                            byte-identical to the local ones.
   characterize MODEL [--driver D] [--field F]  sensor characterisation
 
 Flags accept both `--flag value` and `--flag=value`.
@@ -353,8 +391,9 @@ fn launch_telemetry(
         None => None,
     };
     // score identification against the pipeline the fleet ran; a
-    // replayed log set is scored as post-530 instant (the emitter's
-    // default), with unrecognised models excluded from the metric
+    // replayed log set is scored against the power column its header
+    // names (post-R535 logs carry power.draw.average / power.draw.instant
+    // explicitly), with unrecognised models excluded from the metric
     let (handle, n_total, field, driver) = match args.flag_value("--source").unwrap_or("sim") {
         "replay" => {
             let paths = args.flag_values("--replay-log");
@@ -369,6 +408,11 @@ fn launch_telemetry(
                 );
             }
             let n = logs.len();
+            let field = gpupower::smi::cli::parse_log(&logs[0])
+                .ok()
+                .and_then(|l| l.first_power_field())
+                .and_then(|f| f.sensor_field())
+                .unwrap_or(PowerField::Instant);
             let handle = match &restore_ck {
                 Some(ck) => {
                     // start_from ignores the fleet for replay
@@ -389,7 +433,7 @@ fn launch_telemetry(
                 None => telemetry::TelemetryService::start_replay(&logs, cfg)
                     .map_err(|e| anyhow::anyhow!("{e}"))?,
             };
-            (handle, n, PowerField::Instant, DriverEpoch::Post530)
+            (handle, n, field, DriverEpoch::Post530)
         }
         source @ ("sim" | "faulty") => {
             let fleet = Fleet::build(FleetConfig {
@@ -785,8 +829,235 @@ fn main() -> Result<()> {
                 telemetry::query::annual_cost_error_usd(&snap, 10_000, 0.15)
             );
         }
+        "serve" => {
+            let cfg = telemetry_cfg(&args, seed);
+            let listen = args.flag_value("--listen").unwrap_or("127.0.0.1:7070").to_string();
+            let (handle, n_total, _field, _driver) = launch_telemetry(&args, &cfg, seed)?;
+            let handle = std::sync::Arc::new(handle);
+            let server = gpupower::net::NetServer::bind(std::sync::Arc::clone(&handle), &listen)
+                .map_err(|e| anyhow::anyhow!("cannot listen on {listen}: {e}"))?;
+            // flushed before blocking: scripts scrape this line for the
+            // bound address (--listen with port 0 picks a free one)
+            println!("serving {} node(s) on {}", n_total, server.local_addr());
+            while !handle.is_done() {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            let snap = handle.snapshot();
+            println!(
+                "service complete: {} readings from {} node(s); still serving queries on {} (kill to stop)",
+                snap.stats.readings,
+                snap.stats.nodes,
+                server.local_addr(),
+            );
+            // a drained collector keeps answering: federations and late
+            // queries read the final account until the process is killed
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "query" => {
+            let addr = pos
+                .get(1)
+                .copied()
+                .ok_or_else(|| anyhow::anyhow!("usage: repro query ADDR [energy|windows|top|progress]"))?;
+            let what = pos.get(2).copied().unwrap_or("energy");
+            let mut c = gpupower::net::RemoteCollector::connect(addr)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            match what {
+                "energy" => {
+                    // render client-side from the checkpoint interchange:
+                    // the table bytes match the serving `repro telemetry`
+                    // run's own output
+                    let snap = c.snapshot().map_err(|e| anyhow::anyhow!("{e}"))?;
+                    save_and_print(
+                        &out,
+                        "query_energy",
+                        &telemetry::query::fleet_energy_table(&snap, 0.0, snap.duration_s),
+                    );
+                }
+                "windows" => {
+                    let t = c.window_table().map_err(|e| anyhow::anyhow!("{e}"))?;
+                    save_and_print(&out, "query_windows", &t);
+                }
+                "top" => {
+                    let t = c
+                        .top_misestimated(args.usize_flag("--k", 10))
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                    save_and_print(&out, "query_top", &t);
+                }
+                "progress" => {
+                    let p = c.progress().map_err(|e| anyhow::anyhow!("{e}"))?;
+                    let snap = c.snapshot().map_err(|e| anyhow::anyhow!("{e}"))?;
+                    let e = snap.fleet_energy(0.0, snap.duration_s);
+                    let finished = snap.accounts.nodes.iter().filter(|n| n.complete).count();
+                    println!(
+                        "[{}] {}",
+                        if p.done { "done" } else { "live" },
+                        gpupower::obs::console::status_line(
+                            &p.stats,
+                            p.n_total,
+                            finished,
+                            snap.registry.entries.len(),
+                            &e,
+                        )
+                    );
+                }
+                other => {
+                    return Err(anyhow::anyhow!(
+                        "unknown query '{other}' (energy|windows|top|progress)"
+                    ))
+                }
+            }
+        }
+        "federate" => {
+            let upstreams = args.flag_values("--upstream");
+            if upstreams.is_empty() {
+                return Err(anyhow::anyhow!(
+                    "usage: repro federate --upstream ADDR [--upstream ADDR ...]"
+                ));
+            }
+            let poll_every = args.f64_flag("--poll-every", 0.25).clamp(0.05, 60.0);
+            let metrics_out = args.flag_value("--metrics-out").map(|s| s.to_string());
+            let write_fed_metrics = |fed: &gpupower::net::Federation| {
+                if let Some(p) = &metrics_out {
+                    let snap = fed.metrics().snapshot();
+                    let body = if p.ends_with(".json") {
+                        gpupower::obs::json_snapshot(&snap)
+                    } else {
+                        gpupower::obs::prometheus_text(&snap)
+                    };
+                    if let Err(e) = std::fs::write(p, body) {
+                        eprintln!("warning: could not write metrics to {p}: {e}");
+                    }
+                }
+            };
+            let mut fed =
+                gpupower::net::Federation::connect(&upstreams, gpupower::net::NetConfig::default())
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+            println!(
+                "federating {} collector(s), {} node(s) total",
+                upstreams.len(),
+                fed.n_total()
+            );
+            // poll through degraded spells until every upstream's service
+            // has drained; each poll revalidates fingerprints, so a
+            // killed-and-restarted upstream re-joins here
+            loop {
+                fed.poll();
+                write_fed_metrics(&fed);
+                if fed.all_done() {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_secs_f64(poll_every));
+            }
+            println!("{}", fed.status_table().render());
+            let snap = fed.snapshot().map_err(|e| anyhow::anyhow!("{e}"))?;
+            save_and_print(
+                &out,
+                "federate_energy",
+                &telemetry::query::fleet_energy_table(&snap, 0.0, snap.duration_s),
+            );
+            save_and_print(&out, "federate_top", &telemetry::query::top_misestimated(&snap, 10));
+            if snap.windows().len() > 1 {
+                save_and_print(&out, "federate_windows", &telemetry::query::window_table(&snap));
+            }
+            println!(
+                "federated account: {} readings from {} node(s) across {} collector(s)",
+                snap.stats.readings,
+                snap.stats.nodes,
+                upstreams.len(),
+            );
+        }
         "watch" => {
-            use gpupower::obs::console::{render_frame, EventFeed, WatchFrame};
+            use gpupower::obs::console::{render_frame, ConsoleMetrics, EventFeed, WatchFrame};
+            if let Some(addr) = args.flag_value("--connect") {
+                let addr = addr.to_string();
+                let mut c = gpupower::net::RemoteCollector::connect(&addr)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                let mut feed = EventFeed::new(6);
+                if args.has("--headless") {
+                    // the remote twin of local headless mode: wait for
+                    // the drain, drain the full event stream from seq 0,
+                    // then render N frames from the wire payloads — over
+                    // loopback these are byte-identical to local frames
+                    let frames = args.usize_flag("--frames", 3).max(1);
+                    loop {
+                        let p = c.progress().map_err(|e| anyhow::anyhow!("{e}"))?;
+                        if p.done {
+                            break;
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                    }
+                    let mut events = Vec::new();
+                    c.drain_events(0, |_seq, ev| events.push(ev))
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                    feed.absorb(events.into_iter());
+                    for i in 1..=frames {
+                        let p = c.progress().map_err(|e| anyhow::anyhow!("{e}"))?;
+                        let snap = c.snapshot().map_err(|e| anyhow::anyhow!("{e}"))?;
+                        print!(
+                            "{}",
+                            render_frame(&WatchFrame {
+                                frame_no: i,
+                                n_total: p.n_total,
+                                snap: &snap,
+                                progress: p.stats,
+                                metrics: p.console,
+                                feed: &feed,
+                                ansi: false,
+                            })
+                        );
+                    }
+                } else {
+                    // a second connection streams events concurrently
+                    // (seq-resumed on reconnect) while this one polls
+                    // snapshots for the redraw loop
+                    let step = args.f64_flag("--every", 0.5).clamp(0.05, 10.0);
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    let sub_addr = addr.clone();
+                    let sub = std::thread::spawn(move || {
+                        if let Ok(mut c2) = gpupower::net::RemoteCollector::connect(&sub_addr) {
+                            let _ = c2.drain_events(0, |_seq, ev| {
+                                let _ = tx.send(ev);
+                            });
+                        }
+                    });
+                    let mut frame_no = 0usize;
+                    loop {
+                        let p = c.progress().map_err(|e| anyhow::anyhow!("{e}"))?;
+                        let done = p.done;
+                        frame_no += 1;
+                        feed.absorb(rx.try_iter());
+                        let snap = c.snapshot().map_err(|e| anyhow::anyhow!("{e}"))?;
+                        print!(
+                            "\x1b[2J\x1b[H{}",
+                            render_frame(&WatchFrame {
+                                frame_no,
+                                n_total: p.n_total,
+                                snap: &snap,
+                                progress: p.stats,
+                                metrics: p.console,
+                                feed: &feed,
+                                ansi: true,
+                            })
+                        );
+                        if done {
+                            break;
+                        }
+                        std::thread::sleep(std::time::Duration::from_secs_f64(step));
+                    }
+                    let _ = sub.join();
+                }
+                let snap = c.snapshot().map_err(|e| anyhow::anyhow!("{e}"))?;
+                println!(
+                    "watch complete: {} nodes, {} readings, {}/{} windows checkpointed",
+                    snap.stats.nodes,
+                    snap.stats.readings,
+                    snap.windows_published,
+                    snap.windows_closed,
+                );
+                return Ok(());
+            }
             let cfg = telemetry_cfg(&args, seed);
             let (handle, n_total, _field, _driver) = launch_telemetry(&args, &cfg, seed)?;
             let events = handle.subscribe();
@@ -815,7 +1086,7 @@ fn main() -> Result<()> {
                             n_total,
                             snap: &snap,
                             progress,
-                            metrics: handle.metrics_handle(),
+                            metrics: ConsoleMetrics::from(handle.metrics_handle()),
                             feed: &feed,
                             ansi: false,
                         })
@@ -839,7 +1110,7 @@ fn main() -> Result<()> {
                             n_total,
                             snap: &snap,
                             progress,
-                            metrics: handle.metrics_handle(),
+                            metrics: ConsoleMetrics::from(handle.metrics_handle()),
                             feed: &feed,
                             ansi: true,
                         })

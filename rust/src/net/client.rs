@@ -1,0 +1,473 @@
+//! `RemoteCollector` — the blocking client side of the network plane.
+//!
+//! One TCP connection per collector, request/response framed by
+//! [`frame`](super::frame). The client owns the reliability policy:
+//! connect and read timeouts, exponential-backoff reconnect (a dead
+//! persistent connection is retried transparently once per call), and
+//! seq-based subscribe resume — every `Event` frame carries the cursor to
+//! resume from, so a dropped event stream reconnects with
+//! `Subscribe { from_seq }` and loses nothing the bounded backlog still
+//! holds (and observes the same `Lagged` gap marker an in-process
+//! subscriber would when it does not).
+//!
+//! The first `Hello` pins the collector's fingerprint: every later
+//! handshake and every snapshot is validated against it, so a collector
+//! that restarts *with the same config/fleet/source* re-joins silently,
+//! while one that comes back different is refused with
+//! [`NetError::FingerprintMismatch`] instead of quietly corrupting the
+//! account — the federation's re-join rule, enforced at the client layer.
+
+use std::io::{self, Read};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use crate::net::frame;
+use crate::net::proto::{
+    snapshot_from_checkpoint, HelloInfo, ProgressPayload, Request, Response,
+};
+use crate::report::Table;
+use crate::telemetry::accounting::FleetEnergy;
+use crate::telemetry::ingest::IngestStats;
+use crate::telemetry::persist::{Checkpoint, ServiceFingerprint};
+use crate::telemetry::registry::ProbeSchedule;
+use crate::telemetry::service::{ControlMsg, ServiceEvent};
+use crate::telemetry::TelemetrySnapshot;
+
+/// Why a remote call failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NetError {
+    /// Transport failure (connect, read, write, or reconnect exhausted).
+    Io(String),
+    /// The peer spoke, but not the protocol (frame or message violation).
+    Protocol(String),
+    /// The collector answered with an `Error` response.
+    Remote(String),
+    /// The collector's fingerprint no longer matches the one pinned at
+    /// first contact: it restarted with a different config/fleet/source.
+    FingerprintMismatch {
+        /// The collector's address.
+        addr: String,
+    },
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Io(e) => write!(f, "transport: {e}"),
+            NetError::Protocol(e) => write!(f, "protocol: {e}"),
+            NetError::Remote(e) => write!(f, "collector refused: {e}"),
+            NetError::FingerprintMismatch { addr } => write!(
+                f,
+                "collector at {addr} restarted with a different fingerprint \
+                 (config/fleet/source changed); refusing to mix accounts"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+/// Client reliability knobs. The defaults suit loopback and LAN
+/// collectors; scripts can widen them for WAN hops.
+#[derive(Debug, Clone, Copy)]
+pub struct NetConfig {
+    /// TCP connect timeout per address attempt.
+    pub connect_timeout: Duration,
+    /// How long one response may take before the call fails.
+    pub read_timeout: Duration,
+    /// First reconnect backoff step (doubles per attempt).
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+    /// Connect attempts per reconnect (with backoff between them).
+    pub attempts: u32,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            connect_timeout: Duration::from_secs(2),
+            read_timeout: Duration::from_secs(10),
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+            attempts: 5,
+        }
+    }
+}
+
+/// A blocking client for one serving collector.
+pub struct RemoteCollector {
+    addr: String,
+    cfg: NetConfig,
+    stream: Option<TcpStream>,
+    pinned: Option<ServiceFingerprint>,
+}
+
+impl RemoteCollector {
+    /// Connect to `addr` (host:port) and run the fingerprint handshake.
+    pub fn connect(addr: &str) -> Result<RemoteCollector, NetError> {
+        RemoteCollector::with_config(addr, NetConfig::default())
+    }
+
+    /// [`connect`](RemoteCollector::connect) with explicit reliability
+    /// knobs.
+    pub fn with_config(addr: &str, cfg: NetConfig) -> Result<RemoteCollector, NetError> {
+        let mut c =
+            RemoteCollector { addr: addr.to_string(), cfg, stream: None, pinned: None };
+        c.hello()?;
+        Ok(c)
+    }
+
+    /// The collector's address, as given.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// The fingerprint pinned at first contact.
+    pub fn fingerprint(&self) -> Option<ServiceFingerprint> {
+        self.pinned
+    }
+
+    fn dial(&self) -> Result<TcpStream, NetError> {
+        let addrs: Vec<SocketAddr> = self
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| NetError::Io(format!("cannot resolve {}: {e}", self.addr)))?
+            .collect();
+        let mut last = NetError::Io(format!("{} resolves to no address", self.addr));
+        for a in addrs {
+            match TcpStream::connect_timeout(&a, self.cfg.connect_timeout) {
+                Ok(s) => {
+                    s.set_read_timeout(Some(self.cfg.read_timeout))
+                        .map_err(|e| NetError::Io(e.to_string()))?;
+                    s.set_write_timeout(Some(self.cfg.read_timeout))
+                        .map_err(|e| NetError::Io(e.to_string()))?;
+                    s.set_nodelay(true).ok();
+                    return Ok(s);
+                }
+                Err(e) => last = NetError::Io(format!("connect {a}: {e}")),
+            }
+        }
+        Err(last)
+    }
+
+    /// Make sure a live connection exists, reconnecting with exponential
+    /// backoff when it does not.
+    fn ensure(&mut self) -> Result<(), NetError> {
+        if self.stream.is_some() {
+            return Ok(());
+        }
+        let mut delay = self.cfg.backoff_base;
+        let mut last = NetError::Io("no connect attempts configured".into());
+        for attempt in 0..self.cfg.attempts.max(1) {
+            if attempt > 0 {
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(self.cfg.backoff_cap);
+            }
+            match self.dial() {
+                Ok(s) => {
+                    self.stream = Some(s);
+                    return Ok(());
+                }
+                Err(e) => last = e,
+            }
+        }
+        Err(last)
+    }
+
+    /// One request/response exchange, with one transparent reconnect: a
+    /// persistent connection whose peer went away surfaces the death on
+    /// the first write or read, so the call is retried once on a fresh
+    /// connection before failing.
+    fn call(&mut self, req: &Request) -> Result<Response, NetError> {
+        for attempt in 0..2 {
+            self.ensure()?;
+            let stream = self.stream.as_mut().expect("ensured above");
+            let exchange = (|| -> io::Result<Vec<u8>> {
+                frame::write_frame(stream, &req.encode())?;
+                frame::read_frame(stream)
+            })();
+            match exchange {
+                Ok(payload) => {
+                    let resp = Response::decode(&payload)
+                        .map_err(|e| NetError::Protocol(e.to_string()))?;
+                    if let Response::Error { message } = resp {
+                        return Err(NetError::Remote(message));
+                    }
+                    return Ok(resp);
+                }
+                Err(e) => {
+                    self.stream = None;
+                    if attempt == 1 {
+                        return Err(NetError::Io(e.to_string()));
+                    }
+                }
+            }
+        }
+        unreachable!("two attempts above always return")
+    }
+
+    /// Fingerprint handshake. Pins on first success; later calls
+    /// re-validate, which is how a federation detects an upstream that
+    /// restarted as something else.
+    pub fn hello(&mut self) -> Result<HelloInfo, NetError> {
+        match self.call(&Request::Hello)? {
+            Response::Hello(info) => match self.pinned {
+                Some(fp) if fp != info.fingerprint => {
+                    Err(NetError::FingerprintMismatch { addr: self.addr.clone() })
+                }
+                _ => {
+                    self.pinned = Some(info.fingerprint);
+                    Ok(info)
+                }
+            },
+            other => Err(unexpected("Hello", &other)),
+        }
+    }
+
+    /// The collector's fleet state as a validated, fingerprint-checked
+    /// [`Checkpoint`], plus the live-view counters the interchange bytes
+    /// do not carry.
+    pub fn raw_snapshot(&mut self) -> Result<(Checkpoint, u64, IngestStats), NetError> {
+        match self.call(&Request::Snapshot)? {
+            Response::Snapshot { gpck, windows_published, stats } => {
+                let ck = Checkpoint::decode(&gpck).map_err(NetError::Protocol)?;
+                if let Some(fp) = self.pinned {
+                    if ck.fingerprint != fp {
+                        return Err(NetError::FingerprintMismatch { addr: self.addr.clone() });
+                    }
+                }
+                Ok((ck, windows_published, stats))
+            }
+            other => Err(unexpected("Snapshot", &other)),
+        }
+    }
+
+    /// The collector's state reconstructed as a [`TelemetrySnapshot`] —
+    /// bit-for-bit the collector's own snapshot once its service drained
+    /// (see [`snapshot_from_checkpoint`]).
+    pub fn snapshot(&mut self) -> Result<TelemetrySnapshot, NetError> {
+        let (ck, windows_published, stats) = self.raw_snapshot()?;
+        Ok(snapshot_from_checkpoint(
+            &ck,
+            windows_published as usize,
+            stats,
+            ProbeSchedule::default(),
+        ))
+    }
+
+    /// Fleet energy over `[t0, t1]`, served by the collector's
+    /// shard-fold-cache path.
+    pub fn fleet_energy(&mut self, t0: f64, t1: f64) -> Result<FleetEnergy, NetError> {
+        match self.call(&Request::FleetEnergy { t0, t1 })? {
+            Response::FleetEnergy(e) => Ok(e),
+            other => Err(unexpected("FleetEnergy", &other)),
+        }
+    }
+
+    /// The per-window aggregate table, rendered collector-side.
+    pub fn window_table(&mut self) -> Result<Table, NetError> {
+        match self.call(&Request::WindowTable)? {
+            Response::Table(t) => Ok(t),
+            other => Err(unexpected("WindowTable", &other)),
+        }
+    }
+
+    /// The top-`k` misestimated-node table, rendered collector-side.
+    pub fn top_misestimated(&mut self, k: usize) -> Result<Table, NetError> {
+        match self.call(&Request::TopMisestimated { k })? {
+            Response::Table(t) => Ok(t),
+            other => Err(unexpected("TopMisestimated", &other)),
+        }
+    }
+
+    /// Steer the collector; `Ok(false)` when the command was understood
+    /// but not accepted (unknown node, no checkpoint sink).
+    pub fn control(&mut self, msg: ControlMsg) -> Result<bool, NetError> {
+        match self.call(&Request::Control(msg))? {
+            Response::Ack { accepted } => Ok(accepted),
+            other => Err(unexpected("Control", &other)),
+        }
+    }
+
+    /// Fetch the raw current checkpoint.
+    pub fn fetch_checkpoint(&mut self) -> Result<Checkpoint, NetError> {
+        match self.call(&Request::FetchCheckpoint)? {
+            Response::Checkpoint { gpck } => {
+                Checkpoint::decode(&gpck).map_err(NetError::Protocol)
+            }
+            other => Err(unexpected("FetchCheckpoint", &other)),
+        }
+    }
+
+    /// Ingest progress + the console gauge values.
+    pub fn progress(&mut self) -> Result<ProgressPayload, NetError> {
+        match self.call(&Request::Progress)? {
+            Response::Progress(p) => Ok(p),
+            other => Err(unexpected("Progress", &other)),
+        }
+    }
+
+    /// Switch the connection into event streaming from `from_seq`. The
+    /// returned [`RemoteEvents`] yields `(next_seq, event)` pairs until
+    /// the collector sends `EndOfEvents` (service complete, backlog
+    /// drained), after which the connection is back in request mode.
+    pub fn subscribe_from(&mut self, from_seq: u64) -> Result<RemoteEvents<'_>, NetError> {
+        self.ensure()?;
+        let stream = self.stream.as_mut().expect("ensured above");
+        frame::write_frame(stream, &Request::Subscribe { from_seq }.encode())
+            .map_err(|e| NetError::Io(e.to_string()))?;
+        Ok(RemoteEvents { collector: self, next_seq: from_seq, finished: false })
+    }
+
+    /// Stream every event from `from_seq` to the end of the service into
+    /// `f`, transparently reconnecting and resuming (seq-based) if the
+    /// collector drops mid-stream. Returns the final resume cursor.
+    pub fn drain_events(
+        &mut self,
+        from_seq: u64,
+        mut f: impl FnMut(u64, ServiceEvent),
+    ) -> Result<u64, NetError> {
+        let mut seq = from_seq;
+        loop {
+            let mut events = self.subscribe_from(seq)?;
+            let ended = loop {
+                match events.next() {
+                    Ok(Some((next_seq, event))) => {
+                        seq = next_seq;
+                        f(next_seq, event);
+                    }
+                    Ok(None) => break true,
+                    Err(NetError::Io(_)) => break false,
+                    Err(e) => return Err(e),
+                }
+            };
+            if ended {
+                return Ok(seq);
+            }
+            // dropped mid-stream: reconnect (backoff inside ensure) and
+            // resume exactly where the last delivered event left off
+        }
+    }
+}
+
+/// The event-streaming mode of a [`RemoteCollector`] connection.
+pub struct RemoteEvents<'a> {
+    collector: &'a mut RemoteCollector,
+    next_seq: u64,
+    finished: bool,
+}
+
+impl RemoteEvents<'_> {
+    /// The cursor to resume from if this stream is dropped.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Block for the next event. `Ok(None)` once the stream ended
+    /// normally. An `Err(Io)` invalidates the connection; resume with
+    /// [`RemoteCollector::subscribe_from`] at [`RemoteEvents::next_seq`].
+    pub fn next(&mut self) -> Result<Option<(u64, ServiceEvent)>, NetError> {
+        if self.finished {
+            return Ok(None);
+        }
+        let payload = match self.read_event_frame() {
+            Ok(p) => p,
+            Err(e) => {
+                self.collector.stream = None;
+                return Err(NetError::Io(e.to_string()));
+            }
+        };
+        match Response::decode(&payload).map_err(|e| NetError::Protocol(e.to_string()))? {
+            Response::Event { next_seq, event } => {
+                self.next_seq = next_seq;
+                Ok(Some((next_seq, event)))
+            }
+            Response::EndOfEvents => {
+                self.finished = true;
+                Ok(None)
+            }
+            Response::Error { message } => Err(NetError::Remote(message)),
+            other => Err(unexpected("Subscribe", &other)),
+        }
+    }
+
+    /// Read one frame, waiting patiently while the socket is merely idle
+    /// (events can be sparse): a read timeout with no bytes consumed is a
+    /// quiet stream, not an error. Once a frame starts it must finish
+    /// within the socket's read timeout per chunk.
+    fn read_event_frame(&mut self) -> io::Result<Vec<u8>> {
+        let stream =
+            self.collector.stream.as_mut().ok_or_else(|| {
+                io::Error::new(io::ErrorKind::NotConnected, "stream was invalidated")
+            })?;
+        let mut header = [0u8; frame::HEADER_LEN];
+        let mut got = 0usize;
+        while got < header.len() {
+            match stream.read(&mut header[got..]) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "collector closed the event stream",
+                    ))
+                }
+                Ok(n) => got += n,
+                Err(e)
+                    if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+                        && got == 0 =>
+                {
+                    // idle stream: keep waiting for the next event
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        let len = frame::parse_header(&header)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?
+            as usize;
+        let mut buf = vec![0u8; frame::HEADER_LEN + len + frame::TRAILER_LEN];
+        buf[..frame::HEADER_LEN].copy_from_slice(&header);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut at = frame::HEADER_LEN;
+        while at < buf.len() {
+            match stream.read(&mut buf[at..]) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "collector closed mid-frame",
+                    ))
+                }
+                Ok(n) => at += n,
+                Err(e)
+                    if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) =>
+                {
+                    if Instant::now() > deadline {
+                        return Err(io::Error::new(io::ErrorKind::TimedOut, "frame stalled"));
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        match frame::decode_frame(&buf) {
+            Ok((payload, _)) => Ok(payload.to_vec()),
+            Err(e) => Err(io::Error::new(io::ErrorKind::InvalidData, e)),
+        }
+    }
+}
+
+fn unexpected(wanted: &str, got: &Response) -> NetError {
+    let tag = match got {
+        Response::Hello(_) => "Hello",
+        Response::Snapshot { .. } => "Snapshot",
+        Response::FleetEnergy(_) => "FleetEnergy",
+        Response::Table(_) => "Table",
+        Response::Event { .. } => "Event",
+        Response::EndOfEvents => "EndOfEvents",
+        Response::Ack { .. } => "Ack",
+        Response::Checkpoint { .. } => "Checkpoint",
+        Response::Progress(_) => "Progress",
+        Response::Error { .. } => "Error",
+    };
+    NetError::Protocol(format!("expected a {wanted} response, got {tag}"))
+}

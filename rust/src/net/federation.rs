@@ -1,0 +1,321 @@
+//! Multi-collector federation: N served collectors, one fleet account.
+//!
+//! `repro federate` polls each upstream collector for its checkpoint
+//! interchange bytes, validates fingerprints, remaps node ids into
+//! disjoint per-collector ranges (upstream `i` owns
+//! `[base_i, base_i + n_total_i)`, bases assigned by prefix sums in the
+//! `--upstream` order), and folds the per-node payloads in global
+//! node-id order — the same fold discipline
+//! [`FleetAccounts::merge`] imposes on the sharded in-process service.
+//! That shared discipline is the determinism claim: the federated
+//! snapshot over collectors A and B is bit-for-bit the snapshot one
+//! in-process service would produce over the union fleet, regardless of
+//! upstream poll order (pinned by `tests/net.rs`).
+//!
+//! Failure semantics: a poll that fails (dead upstream, fingerprint
+//! mismatch after a restart-as-something-else) never poisons the
+//! aggregate — the federation keeps that upstream's last good view and
+//! reports the degradation per-collector (stale-age column in
+//! [`Federation::status_table`], staleness gauge in the metrics
+//! registry). A killed-then-restarted upstream whose fingerprint still
+//! matches re-joins transparently on the next poll.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::net::client::{NetConfig, NetError, RemoteCollector};
+use crate::net::proto;
+use crate::obs::metrics::{Counter, Gauge, MetricsRegistry};
+use crate::report::Table;
+use crate::telemetry::accounting::{BucketSpec, FleetAccounts, FleetEnergy};
+use crate::telemetry::ingest::IngestStats;
+use crate::telemetry::persist::{Checkpoint, ServiceFingerprint};
+use crate::telemetry::registry::{ProbeSchedule, Registry};
+use crate::telemetry::TelemetrySnapshot;
+
+/// The last state successfully fetched from one upstream.
+struct UpstreamView {
+    ck: Checkpoint,
+    windows_published: u64,
+    stats: IngestStats,
+    done: bool,
+}
+
+struct Upstream {
+    collector: RemoteCollector,
+    /// Global node-id offset: this upstream's node `k` is federated node
+    /// `base + k`.
+    base: usize,
+    n_total: usize,
+    view: Option<UpstreamView>,
+    fetched_at: Option<Instant>,
+    last_error: Option<String>,
+    stale_ms: Arc<Gauge>,
+    polls: Arc<Counter>,
+    poll_errors: Arc<Counter>,
+}
+
+/// One row of [`Federation::status`]: how healthy an upstream is.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UpstreamStatus {
+    /// The upstream's address, as given on the command line.
+    pub addr: String,
+    /// First global node id assigned to this upstream.
+    pub base: usize,
+    /// How many nodes the upstream owns.
+    pub nodes: usize,
+    /// Whether the most recent poll succeeded.
+    pub ok: bool,
+    /// Whether the upstream's service has completed.
+    pub done: bool,
+    /// Milliseconds since the last successful fetch, or -1 if none yet.
+    pub stale_ms: i64,
+    /// The most recent poll error, if the last poll failed.
+    pub error: Option<String>,
+}
+
+/// A federated view over N serving collectors.
+pub struct Federation {
+    upstreams: Vec<Upstream>,
+    spec: BucketSpec,
+    duration_s: f64,
+    window_s: f64,
+    windows: usize,
+    metrics: MetricsRegistry,
+}
+
+impl Federation {
+    /// Connect to every upstream, run the fingerprint handshakes, check
+    /// that all collectors share the same accounting geometry (bucket
+    /// grid, window layout, run duration — bit-exact), and assign the
+    /// disjoint node-id ranges. Fails if any upstream is unreachable: the
+    /// id ranges are positional in `addrs`, so a federation must see its
+    /// full roster once before it can tolerate outages.
+    pub fn connect(addrs: &[String], cfg: NetConfig) -> Result<Federation, NetError> {
+        if addrs.is_empty() {
+            return Err(NetError::Io("federation needs at least one --upstream".into()));
+        }
+        let metrics = MetricsRegistry::default();
+        let mut upstreams = Vec::with_capacity(addrs.len());
+        let mut base = 0usize;
+        let mut geometry: Option<ServiceFingerprint> = None;
+        for addr in addrs {
+            let collector = RemoteCollector::with_config(addr, cfg)?;
+            let fp = collector.fingerprint().expect("handshake pins a fingerprint");
+            match geometry {
+                None => geometry = Some(fp),
+                Some(g) => {
+                    let same = g.spec_n == fp.spec_n
+                        && g.windows == fp.windows
+                        && g.bucket_s.to_bits() == fp.bucket_s.to_bits()
+                        && g.window_s.to_bits() == fp.window_s.to_bits()
+                        && g.duration_s.to_bits() == fp.duration_s.to_bits();
+                    if !same {
+                        return Err(NetError::Protocol(format!(
+                            "upstream {addr} disagrees on accounting geometry \
+                             (bucket/window/duration); a federation must fold \
+                             identical grids"
+                        )));
+                    }
+                }
+            }
+            let labels = [("upstream", addr.to_string())];
+            upstreams.push(Upstream {
+                collector,
+                base,
+                n_total: fp.n_total,
+                view: None,
+                fetched_at: None,
+                last_error: None,
+                stale_ms: metrics.gauge(
+                    "telemetry_federation_upstream_stale_ms",
+                    "Milliseconds since the last successful fetch from this upstream (-1 before the first).",
+                    &labels,
+                ),
+                polls: metrics.counter(
+                    "telemetry_federation_polls_total",
+                    "Poll attempts against this upstream.",
+                    &labels,
+                ),
+                poll_errors: metrics.counter(
+                    "telemetry_federation_poll_errors_total",
+                    "Failed polls against this upstream (kept serving the last good view).",
+                    &labels,
+                ),
+            });
+            base += fp.n_total;
+        }
+        let g = geometry.expect("at least one upstream");
+        let federation = Federation {
+            upstreams,
+            spec: BucketSpec { t0: 0.0, bucket_s: g.bucket_s, n: g.spec_n },
+            duration_s: g.duration_s,
+            window_s: g.window_s,
+            windows: g.windows,
+            metrics,
+        };
+        Ok(federation)
+    }
+
+    /// Total nodes across the federation.
+    pub fn n_total(&self) -> usize {
+        self.upstreams.iter().map(|u| u.n_total).sum()
+    }
+
+    /// Windows per service run (shared geometry).
+    pub fn windows(&self) -> usize {
+        self.windows
+    }
+
+    /// The federation's metrics registry (per-upstream staleness gauge,
+    /// poll counters) — hand it to an exporter for `--metrics-out`.
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    /// Poll every upstream once. Each poll re-runs the fingerprint
+    /// handshake (so a restarted-as-something-else upstream is rejected,
+    /// while a same-fingerprint restart re-joins) and then fetches the
+    /// checkpoint interchange bytes. Failures keep the last good view.
+    /// Returns how many upstreams refreshed.
+    pub fn poll(&mut self) -> usize {
+        let mut refreshed = 0;
+        for u in &mut self.upstreams {
+            u.polls.inc();
+            let fetched = u.collector.hello().and_then(|info| {
+                let (ck, windows_published, stats) = u.collector.raw_snapshot()?;
+                Ok(UpstreamView { ck, windows_published, stats, done: info.done })
+            });
+            match fetched {
+                Ok(view) => {
+                    u.view = Some(view);
+                    u.fetched_at = Some(Instant::now());
+                    u.last_error = None;
+                    refreshed += 1;
+                }
+                Err(e) => {
+                    u.poll_errors.inc();
+                    u.last_error = Some(e.to_string());
+                }
+            }
+            u.stale_ms.set(match u.fetched_at {
+                Some(t) => t.elapsed().as_millis() as i64,
+                None => -1,
+            });
+        }
+        refreshed
+    }
+
+    /// Whether every upstream's service has completed (as of its last
+    /// good view).
+    pub fn all_done(&self) -> bool {
+        self.upstreams.iter().all(|u| u.view.as_ref().is_some_and(|v| v.done))
+    }
+
+    /// Per-upstream health.
+    pub fn status(&self) -> Vec<UpstreamStatus> {
+        self.upstreams
+            .iter()
+            .map(|u| UpstreamStatus {
+                addr: u.collector.addr().to_string(),
+                base: u.base,
+                nodes: u.n_total,
+                ok: u.last_error.is_none() && u.view.is_some(),
+                done: u.view.as_ref().is_some_and(|v| v.done),
+                stale_ms: match u.fetched_at {
+                    Some(t) => t.elapsed().as_millis() as i64,
+                    None => -1,
+                },
+                error: u.last_error.clone(),
+            })
+            .collect()
+    }
+
+    /// The health table `repro federate` prints.
+    pub fn status_table(&self) -> Table {
+        let mut t = Table::new(
+            "federation upstreams",
+            &["upstream", "nodes", "node ids", "state", "stale", "last error"],
+        );
+        for s in self.status() {
+            let state = if !s.ok {
+                "degraded"
+            } else if s.done {
+                "done"
+            } else {
+                "running"
+            };
+            let stale = if s.stale_ms < 0 {
+                "never".to_string()
+            } else {
+                format!("{:.1}s", s.stale_ms as f64 / 1000.0)
+            };
+            t.row(&[
+                s.addr,
+                s.nodes.to_string(),
+                format!("{}..{}", s.base, s.base + s.nodes),
+                state.to_string(),
+                stale,
+                s.error.unwrap_or_else(|| "-".to_string()),
+            ]);
+        }
+        t
+    }
+
+    /// Fold the last good views into one federated snapshot: per-node
+    /// accounts and identities from every upstream, node ids remapped
+    /// into this federation's disjoint ranges, merged in ascending global
+    /// node-id order. Fails until every upstream has produced at least
+    /// one good view (a partial roster would silently misreport the
+    /// fleet).
+    pub fn snapshot(&self) -> Result<TelemetrySnapshot, NetError> {
+        let mut accounts = Vec::with_capacity(self.n_total());
+        let mut entries = Vec::with_capacity(self.n_total());
+        let mut stats = IngestStats::default();
+        let mut windows_closed = usize::MAX;
+        let mut windows_published = usize::MAX;
+        for u in &self.upstreams {
+            let view = u.view.as_ref().ok_or_else(|| {
+                NetError::Io(format!(
+                    "upstream {} has no successful fetch yet; federated account \
+                     would omit its {} node(s)",
+                    u.collector.addr(),
+                    u.n_total
+                ))
+            })?;
+            let (mut accs, mut ids) = proto::node_views(&view.ck, self.spec);
+            for a in &mut accs {
+                a.node_id += u.base;
+            }
+            for id in &mut ids {
+                id.node_id += u.base;
+            }
+            accounts.extend(accs);
+            entries.extend(ids);
+            stats.nodes += view.stats.nodes;
+            stats.batches += view.stats.batches;
+            stats.readings += view.stats.readings;
+            stats.recalibrations += view.stats.recalibrations;
+            stats.drift_suspected += view.stats.drift_suspected;
+            windows_closed = windows_closed.min(view.ck.windows_closed);
+            windows_published = windows_published.min(view.windows_published as usize);
+        }
+        let mut registry = Registry { entries };
+        registry.finalize();
+        Ok(TelemetrySnapshot {
+            duration_s: self.duration_s,
+            window_s: self.window_s,
+            schedule: ProbeSchedule::default(),
+            accounts: FleetAccounts::merge(self.spec, accounts),
+            registry,
+            stats,
+            windows_closed,
+            windows_published,
+        })
+    }
+
+    /// Federated fleet energy over `[t0, t1]`.
+    pub fn fleet_energy(&self, t0: f64, t1: f64) -> Result<FleetEnergy, NetError> {
+        Ok(self.snapshot()?.fleet_energy(t0, t1))
+    }
+}

@@ -1,0 +1,253 @@
+//! The wire frame: magic, protocol version, length prefix, payload,
+//! FNV-1a trailer.
+//!
+//! Grammar (all integers little-endian):
+//!
+//! ```text
+//! frame   := magic version length payload check
+//! magic   := "GPNW"                      (4 bytes)
+//! version := u16                         (PROTOCOL_VERSION)
+//! length  := u32                         (payload byte count, <= MAX_PAYLOAD)
+//! payload := length bytes                (one proto message)
+//! check   := u64                         (FNV-1a over magic..payload)
+//! ```
+//!
+//! The trailer is the same FNV-1a the `.gpck` checkpoint format ends
+//! with ([`fnv1a`]), taken over everything before it — header included,
+//! so a bit flip anywhere in the frame (even in the length field, when
+//! the flipped length still lands in bounds) fails the check. Decoding is
+//! total: any byte sequence produces either a payload or an
+//! offset-carrying [`FrameError`], never a panic — the server feeds
+//! sockets straight into [`decode_frame`], so this totality is what the
+//! "malformed frames never kill the collector" guarantee rests on
+//! (property-tested in `tests/proptests.rs`).
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+use crate::telemetry::persist::fnv1a;
+
+/// Frame magic: "GPNW" (GPu power NetWork), sibling of `.gpck`'s "GPCK".
+pub const MAGIC: [u8; 4] = *b"GPNW";
+/// Protocol version stamped into every frame; receivers reject mismatches
+/// before touching the payload.
+pub const PROTOCOL_VERSION: u16 = 1;
+/// Fixed header size: magic + version + length.
+pub const HEADER_LEN: usize = 10;
+/// Trailer size: the FNV-1a check.
+pub const TRAILER_LEN: usize = 8;
+/// Payload size cap. Checkpoint interchange for a large fleet is the
+/// biggest message; 64 MiB is ~30k nodes of full per-bucket accounts.
+/// Anything larger is rejected at the header, before any allocation.
+pub const MAX_PAYLOAD: u32 = 64 << 20;
+
+/// Why a byte sequence is not a frame. Every variant carries the byte
+/// offset at which decoding stopped, so a rejected frame is debuggable
+/// from the error alone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameError {
+    /// The input ends before the frame does: `needed` total bytes were
+    /// required, only `offset` were available.
+    Truncated {
+        /// Bytes actually available.
+        offset: usize,
+        /// Total bytes the frame needs (header + payload + trailer).
+        needed: usize,
+    },
+    /// The first four bytes are not [`MAGIC`].
+    BadMagic {
+        /// Offset of the first mismatching magic byte.
+        offset: usize,
+    },
+    /// The version field does not match [`PROTOCOL_VERSION`].
+    BadVersion {
+        /// Offset of the version field (always 4).
+        offset: usize,
+        /// The version the frame claims.
+        found: u16,
+    },
+    /// The length field exceeds [`MAX_PAYLOAD`].
+    Oversized {
+        /// Offset of the length field (always 6).
+        offset: usize,
+        /// The payload length the frame claims.
+        len: u32,
+    },
+    /// The FNV-1a trailer does not match the frame contents.
+    Checksum {
+        /// Offset of the trailer.
+        offset: usize,
+        /// The check the frame carries.
+        stored: u64,
+        /// The check the bytes actually hash to.
+        computed: u64,
+    },
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Truncated { offset, needed } => {
+                write!(f, "truncated frame: {offset} byte(s), {needed} needed")
+            }
+            FrameError::BadMagic { offset } => {
+                write!(f, "bad frame magic at byte {offset} (want \"GPNW\")")
+            }
+            FrameError::BadVersion { offset, found } => write!(
+                f,
+                "unsupported protocol version {found} at byte {offset} \
+                 (this build speaks {PROTOCOL_VERSION})"
+            ),
+            FrameError::Oversized { offset, len } => write!(
+                f,
+                "oversized frame at byte {offset}: {len} byte payload exceeds {MAX_PAYLOAD}"
+            ),
+            FrameError::Checksum { offset, stored, computed } => write!(
+                f,
+                "frame checksum mismatch at byte {offset}: stored {stored:#018x}, \
+                 computed {computed:#018x}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Wrap `payload` into one wire frame.
+///
+/// # Panics
+///
+/// If `payload` exceeds [`MAX_PAYLOAD`] — proto messages are built by
+/// this crate and never approach the cap; the cap guards the *decoder*
+/// against adversarial length fields.
+pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= MAX_PAYLOAD as usize, "frame payload over MAX_PAYLOAD");
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + TRAILER_LEN);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    let check = fnv1a(&out);
+    out.extend_from_slice(&check.to_le_bytes());
+    out
+}
+
+/// Validate a fixed-size header, returning the payload length it
+/// declares. Shared by [`decode_frame`] and the socket read path, so a
+/// streaming reader rejects garbage before allocating the payload.
+pub fn parse_header(header: &[u8; HEADER_LEN]) -> Result<u32, FrameError> {
+    for (i, (&got, &want)) in header.iter().zip(MAGIC.iter()).enumerate() {
+        if got != want {
+            return Err(FrameError::BadMagic { offset: i });
+        }
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != PROTOCOL_VERSION {
+        return Err(FrameError::BadVersion { offset: 4, found: version });
+    }
+    let len = u32::from_le_bytes([header[6], header[7], header[8], header[9]]);
+    if len > MAX_PAYLOAD {
+        return Err(FrameError::Oversized { offset: 6, len });
+    }
+    Ok(len)
+}
+
+/// Decode one frame from the head of `bytes`: the payload slice and the
+/// total bytes the frame spans (so a buffer of back-to-back frames can be
+/// walked). Total over arbitrary input — see the module docs.
+pub fn decode_frame(bytes: &[u8]) -> Result<(&[u8], usize), FrameError> {
+    if bytes.len() < HEADER_LEN {
+        return Err(FrameError::Truncated { offset: bytes.len(), needed: HEADER_LEN });
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header.copy_from_slice(&bytes[..HEADER_LEN]);
+    let len = parse_header(&header)? as usize;
+    let total = HEADER_LEN + len + TRAILER_LEN;
+    if bytes.len() < total {
+        return Err(FrameError::Truncated { offset: bytes.len(), needed: total });
+    }
+    let body_end = HEADER_LEN + len;
+    let stored = u64::from_le_bytes(bytes[body_end..total].try_into().expect("trailer is 8 bytes"));
+    let computed = fnv1a(&bytes[..body_end]);
+    if stored != computed {
+        return Err(FrameError::Checksum { offset: body_end, stored, computed });
+    }
+    Ok((&bytes[HEADER_LEN..body_end], total))
+}
+
+/// Write one frame to a stream.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    w.write_all(&encode_frame(payload))
+}
+
+/// Read one full frame from a stream, validating as it goes; the header
+/// is parsed before the payload is allocated, so an adversarial length
+/// field costs nothing. Frame violations surface as
+/// [`io::ErrorKind::InvalidData`] carrying the [`FrameError`] text.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Vec<u8>> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header)?;
+    let len =
+        parse_header(&header).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))? as usize;
+    let mut buf = vec![0u8; HEADER_LEN + len + TRAILER_LEN];
+    buf[..HEADER_LEN].copy_from_slice(&header);
+    r.read_exact(&mut buf[HEADER_LEN..])?;
+    match decode_frame(&buf) {
+        Ok((payload, _)) => Ok(payload.to_vec()),
+        Err(e) => Err(io::Error::new(io::ErrorKind::InvalidData, e)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_span() {
+        let payload = b"federate all the collectors";
+        let frame = encode_frame(payload);
+        assert_eq!(frame.len(), HEADER_LEN + payload.len() + TRAILER_LEN);
+        let (got, span) = decode_frame(&frame).unwrap();
+        assert_eq!(got, payload);
+        assert_eq!(span, frame.len());
+        // back-to-back frames walk by span
+        let mut two = frame.clone();
+        two.extend_from_slice(&encode_frame(b"second"));
+        let (first, span) = decode_frame(&two).unwrap();
+        assert_eq!(first, payload);
+        let (second, _) = decode_frame(&two[span..]).unwrap();
+        assert_eq!(second, b"second");
+    }
+
+    #[test]
+    fn empty_payload_is_a_valid_frame() {
+        let frame = encode_frame(b"");
+        let (payload, span) = decode_frame(&frame).unwrap();
+        assert!(payload.is_empty());
+        assert_eq!(span, HEADER_LEN + TRAILER_LEN);
+    }
+
+    #[test]
+    fn header_rejections_carry_offsets() {
+        let mut frame = encode_frame(b"x");
+        frame[2] ^= 0xFF;
+        assert_eq!(decode_frame(&frame), Err(FrameError::BadMagic { offset: 2 }));
+
+        let mut frame = encode_frame(b"x");
+        frame[4] = 0x7F;
+        assert!(matches!(decode_frame(&frame), Err(FrameError::BadVersion { offset: 4, .. })));
+
+        let mut header = [0u8; HEADER_LEN];
+        header[..4].copy_from_slice(&MAGIC);
+        header[4..6].copy_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+        header[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(parse_header(&header), Err(FrameError::Oversized { offset: 6, len: u32::MAX }));
+    }
+
+    #[test]
+    fn stream_read_matches_buffer_decode() {
+        let frame = encode_frame(b"over the wire");
+        let mut cursor = std::io::Cursor::new(frame);
+        assert_eq!(read_frame(&mut cursor).unwrap(), b"over the wire");
+    }
+}

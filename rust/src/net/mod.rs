@@ -1,0 +1,51 @@
+//! Network query/control plane + multi-collector federation.
+//!
+//! The paper's fleet-scale claim — nvidia-smi's ~25% attention mis-states
+//! energy "especially when considering data centres housing tens of
+//! thousands of GPUs" (§1) — only bites when one accounting core is *not*
+//! enough. This module turns the in-process
+//! [`ServiceHandle`](crate::telemetry::ServiceHandle) into a wire-reachable
+//! collector and a set of collectors into one federated fleet account,
+//! with zero external dependencies (std::net only — in the spirit of the
+//! hand-rolled `.gpck` checkpoint format):
+//!
+//! - [`frame`] — versioned, length-prefixed, FNV-1a-checksummed binary
+//!   frames (the transport grammar; property-tested to never panic on
+//!   adversarial bytes).
+//! - [`proto`] — the request/response message codec layered on frames.
+//!   `.gpck` checkpoint bytes are the fleet-state interchange unit:
+//!   [`persist`](crate::telemetry::persist) already fingerprints the
+//!   fleet/config/source, so a snapshot travels as the same durable record
+//!   a restore would consume.
+//! - [`server`] — `repro serve`: a [`TcpListener`](std::net::TcpListener)
+//!   accept loop + per-client threads wrapping a live service handle.
+//!   Queries ride the existing shard-fold-cache path; `Subscribe` bridges
+//!   the event backlog cursor over the socket with the bounded-backlog
+//!   `Lagged` semantics intact; slow or dead clients get write deadlines
+//!   and a disconnect, never a stalled ingest.
+//! - [`client`] — a blocking [`RemoteCollector`](client::RemoteCollector)
+//!   with connect/read timeouts, exponential-backoff reconnect, and
+//!   seq-based subscribe resume; powers `repro query` and
+//!   `repro watch --connect`.
+//! - [`federation`] — `repro federate`: polls N collectors, validates
+//!   fingerprints (a killed-then-restarted upstream re-joins only if its
+//!   fingerprint still matches), remaps node ids into disjoint
+//!   per-collector ranges, and folds per-node payloads in global node-id
+//!   order — the same fold discipline the sharded service uses — so the
+//!   federated account is bit-for-bit the single-service account of the
+//!   union fleet. Degraded upstreams are reported per-collector (stale-age
+//!   column) instead of poisoning the aggregate.
+
+#![warn(missing_docs)]
+
+pub mod client;
+pub mod federation;
+pub mod frame;
+pub mod proto;
+pub mod server;
+
+pub use client::{NetConfig, NetError, RemoteCollector, RemoteEvents};
+pub use federation::{Federation, UpstreamStatus};
+pub use frame::{decode_frame, encode_frame, FrameError};
+pub use proto::{snapshot_from_checkpoint, HelloInfo, ProgressPayload, Request, Response};
+pub use server::NetServer;

@@ -1,0 +1,897 @@
+//! Request/response messages layered on [`frame`](super::frame)s.
+//!
+//! Every message is one frame payload: a tag byte followed by
+//! little-endian fields (strings and byte blobs are u32-length-prefixed,
+//! `f64`s travel as IEEE-754 bits so values survive bit-for-bit).
+//! Decoding is total and offset-carrying, like the frame layer: malformed
+//! payloads yield a [`ProtoError`] naming the byte where decoding
+//! stopped, never a panic.
+//!
+//! The fleet-state interchange unit is the `.gpck` checkpoint
+//! ([`Checkpoint::encode`]): [`persist`] already fingerprints the
+//! fleet/config/source and checksums the record, so the Snapshot response
+//! ships those bytes verbatim and [`snapshot_from_checkpoint`]
+//! reconstructs the query-side [`TelemetrySnapshot`] with the exact
+//! recipe a checkpoint restore uses — which is what makes remote and
+//! federated accounts bit-for-bit comparable to in-process ones.
+
+use crate::obs::console::ConsoleMetrics;
+use crate::report::Table;
+use crate::telemetry::accounting::{BucketSpec, FleetAccounts, NodeAccount};
+use crate::telemetry::ingest::IngestStats;
+use crate::telemetry::persist::{
+    self, Checkpoint, NodeStage, ServiceFingerprint, SourceKind,
+};
+use crate::telemetry::registry::{
+    EpochIdentity, NodeIdentity, ProbeSchedule, Registry, SensorIdentity,
+};
+use crate::telemetry::service::{ControlMsg, ServiceEvent};
+use crate::telemetry::TelemetrySnapshot;
+
+use std::fmt;
+
+/// Where and why a payload stopped decoding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProtoError {
+    /// Byte offset into the payload at which decoding stopped.
+    pub offset: usize,
+    /// What the decoder expected there.
+    pub what: String,
+}
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "bad message at payload byte {}: {}", self.offset, self.what)
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+// ---------------------------------------------------------------- writer
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_i64(out: &mut Vec<u8>, v: i64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+fn put_opt_f64(out: &mut Vec<u8>, v: Option<f64>) {
+    match v {
+        Some(x) => {
+            put_u8(out, 1);
+            put_f64(out, x);
+        }
+        None => put_u8(out, 0),
+    }
+}
+fn put_bytes(out: &mut Vec<u8>, v: &[u8]) {
+    put_u32(out, v.len() as u32);
+    out.extend_from_slice(v);
+}
+fn put_str(out: &mut Vec<u8>, v: &str) {
+    put_bytes(out, v.as_bytes());
+}
+
+// ---------------------------------------------------------------- reader
+
+/// Cursor over a payload; every read names its offset on failure.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+    fn err<T>(&self, what: &str) -> Result<T, ProtoError> {
+        Err(ProtoError { offset: self.pos, what: what.to_string() })
+    }
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], ProtoError> {
+        if self.buf.len() - self.pos < n {
+            return self.err(what);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self, what: &str) -> Result<u8, ProtoError> {
+        Ok(self.take(1, what)?[0])
+    }
+    fn u16(&mut self, what: &str) -> Result<u16, ProtoError> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().expect("2 bytes")))
+    }
+    fn u32(&mut self, what: &str) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().expect("4 bytes")))
+    }
+    fn u64(&mut self, what: &str) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().expect("8 bytes")))
+    }
+    fn i64(&mut self, what: &str) -> Result<i64, ProtoError> {
+        Ok(i64::from_le_bytes(self.take(8, what)?.try_into().expect("8 bytes")))
+    }
+    fn f64(&mut self, what: &str) -> Result<f64, ProtoError> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+    fn opt_f64(&mut self, what: &str) -> Result<Option<f64>, ProtoError> {
+        match self.u8(what)? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f64(what)?)),
+            _ => self.err(what),
+        }
+    }
+    /// A u32-length-prefixed blob; the length is bounded by the remaining
+    /// payload, so an adversarial count cannot drive an allocation.
+    fn bytes(&mut self, what: &str) -> Result<&'a [u8], ProtoError> {
+        let n = self.u32(what)? as usize;
+        self.take(n, what)
+    }
+    fn string(&mut self, what: &str) -> Result<String, ProtoError> {
+        let raw = self.bytes(what)?;
+        match std::str::from_utf8(raw) {
+            Ok(s) => Ok(s.to_string()),
+            Err(_) => self.err(what),
+        }
+    }
+    /// An element count for a vector about to be decoded: at least one
+    /// byte per element must remain, which caps pre-allocation.
+    fn count(&mut self, what: &str) -> Result<usize, ProtoError> {
+        let n = self.u32(what)? as usize;
+        if self.buf.len() - self.pos < n {
+            return self.err(what);
+        }
+        Ok(n)
+    }
+    fn finish(&self) -> Result<(), ProtoError> {
+        if self.pos != self.buf.len() {
+            return Err(ProtoError {
+                offset: self.pos,
+                what: format!("{} trailing byte(s)", self.buf.len() - self.pos),
+            });
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------- shared codecs
+
+fn put_fingerprint(out: &mut Vec<u8>, fp: &ServiceFingerprint) {
+    put_u64(out, fp.seed);
+    put_u64(out, fp.n_total as u64);
+    put_u64(out, fp.windows as u64);
+    put_u64(out, fp.spec_n as u64);
+    put_f64(out, fp.duration_s);
+    put_f64(out, fp.window_s);
+    put_f64(out, fp.bucket_s);
+    put_f64(out, fp.poll_period_s);
+    put_u8(
+        out,
+        match fp.source_kind {
+            SourceKind::Sim => 0,
+            SourceKind::Faulty => 1,
+            SourceKind::Replay => 2,
+        },
+    );
+    put_u64(out, fp.source_digest);
+    put_u64(out, fp.fleet_digest);
+}
+
+fn get_fingerprint(r: &mut Reader<'_>) -> Result<ServiceFingerprint, ProtoError> {
+    Ok(ServiceFingerprint {
+        seed: r.u64("fingerprint.seed")?,
+        n_total: r.u64("fingerprint.n_total")? as usize,
+        windows: r.u64("fingerprint.windows")? as usize,
+        spec_n: r.u64("fingerprint.spec_n")? as usize,
+        duration_s: r.f64("fingerprint.duration_s")?,
+        window_s: r.f64("fingerprint.window_s")?,
+        bucket_s: r.f64("fingerprint.bucket_s")?,
+        poll_period_s: r.f64("fingerprint.poll_period_s")?,
+        source_kind: match r.u8("fingerprint.source_kind")? {
+            0 => SourceKind::Sim,
+            1 => SourceKind::Faulty,
+            2 => SourceKind::Replay,
+            _ => return r.err("fingerprint.source_kind"),
+        },
+        source_digest: r.u64("fingerprint.source_digest")?,
+        fleet_digest: r.u64("fingerprint.fleet_digest")?,
+    })
+}
+
+fn put_identity(out: &mut Vec<u8>, id: &SensorIdentity) {
+    put_u8(out, persist::class_code(id.class));
+    put_opt_f64(out, id.update_s);
+    put_opt_f64(out, id.window_s);
+    put_opt_f64(out, id.smi_rise_s);
+}
+
+fn get_identity(r: &mut Reader<'_>) -> Result<SensorIdentity, ProtoError> {
+    let code = r.u8("identity.class")?;
+    let Some(class) = persist::class_from(code) else {
+        return r.err("identity.class");
+    };
+    Ok(SensorIdentity {
+        class,
+        update_s: r.opt_f64("identity.update_s")?,
+        window_s: r.opt_f64("identity.window_s")?,
+        smi_rise_s: r.opt_f64("identity.smi_rise_s")?,
+    })
+}
+
+fn put_stats(out: &mut Vec<u8>, s: &IngestStats) {
+    put_u64(out, s.nodes as u64);
+    put_u64(out, s.batches);
+    put_u64(out, s.readings);
+    put_u64(out, s.recalibrations);
+    put_u64(out, s.drift_suspected);
+}
+
+fn get_stats(r: &mut Reader<'_>) -> Result<IngestStats, ProtoError> {
+    Ok(IngestStats {
+        nodes: r.u64("stats.nodes")? as usize,
+        batches: r.u64("stats.batches")?,
+        readings: r.u64("stats.readings")?,
+        recalibrations: r.u64("stats.recalibrations")?,
+        drift_suspected: r.u64("stats.drift_suspected")?,
+    })
+}
+
+fn put_console(out: &mut Vec<u8>, c: &ConsoleMetrics) {
+    put_i64(out, c.windows_closed);
+    put_i64(out, c.windows_published);
+    put_u64(out, c.checkpoints_written);
+    put_i64(out, c.checkpoint_age_ms);
+    put_i64(out, c.event_backlog_len);
+    put_u64(out, c.events_trimmed);
+    put_u32(out, c.shards.len() as u32);
+    for &(depth, high, deferred) in &c.shards {
+        put_i64(out, depth);
+        put_i64(out, high);
+        put_i64(out, deferred);
+    }
+}
+
+fn get_console(r: &mut Reader<'_>) -> Result<ConsoleMetrics, ProtoError> {
+    let windows_closed = r.i64("console.windows_closed")?;
+    let windows_published = r.i64("console.windows_published")?;
+    let checkpoints_written = r.u64("console.checkpoints_written")?;
+    let checkpoint_age_ms = r.i64("console.checkpoint_age_ms")?;
+    let event_backlog_len = r.i64("console.event_backlog_len")?;
+    let events_trimmed = r.u64("console.events_trimmed")?;
+    let n = r.count("console.shards")?;
+    let mut shards = Vec::with_capacity(n);
+    for _ in 0..n {
+        shards.push((
+            r.i64("console.shard.queue_depth")?,
+            r.i64("console.shard.queue_high_water")?,
+            r.i64("console.shard.deferred")?,
+        ));
+    }
+    Ok(ConsoleMetrics {
+        windows_closed,
+        windows_published,
+        checkpoints_written,
+        checkpoint_age_ms,
+        event_backlog_len,
+        events_trimmed,
+        shards,
+    })
+}
+
+fn put_table(out: &mut Vec<u8>, t: &Table) {
+    put_str(out, &t.title);
+    put_u32(out, t.headers.len() as u32);
+    for h in &t.headers {
+        put_str(out, h);
+    }
+    put_u32(out, t.rows.len() as u32);
+    for row in &t.rows {
+        put_u32(out, row.len() as u32);
+        for cell in row {
+            put_str(out, cell);
+        }
+    }
+}
+
+fn get_table(r: &mut Reader<'_>) -> Result<Table, ProtoError> {
+    let title = r.string("table.title")?;
+    let n = r.count("table.headers")?;
+    let mut headers = Vec::with_capacity(n);
+    for _ in 0..n {
+        headers.push(r.string("table.header")?);
+    }
+    let n = r.count("table.rows")?;
+    let mut rows = Vec::with_capacity(n);
+    for _ in 0..n {
+        let m = r.count("table.row")?;
+        let mut row = Vec::with_capacity(m);
+        for _ in 0..m {
+            row.push(r.string("table.cell")?);
+        }
+        rows.push(row);
+    }
+    Ok(Table { title, headers, rows })
+}
+
+fn put_event(out: &mut Vec<u8>, ev: &ServiceEvent) {
+    match ev {
+        ServiceEvent::NodeIdentified { node_id, t0, identity } => {
+            put_u8(out, 0);
+            put_u64(out, *node_id as u64);
+            put_f64(out, *t0);
+            put_identity(out, identity);
+        }
+        ServiceEvent::EpochDetected { node_id, t0 } => {
+            put_u8(out, 1);
+            put_u64(out, *node_id as u64);
+            put_f64(out, *t0);
+        }
+        ServiceEvent::Recalibrated { node_id, t0 } => {
+            put_u8(out, 2);
+            put_u64(out, *node_id as u64);
+            put_f64(out, *t0);
+        }
+        ServiceEvent::DriftSuspected { node_id, t } => {
+            put_u8(out, 3);
+            put_u64(out, *node_id as u64);
+            put_f64(out, *t);
+        }
+        ServiceEvent::WindowClosed { index, t0, t1 } => {
+            put_u8(out, 4);
+            put_u64(out, *index as u64);
+            put_f64(out, *t0);
+            put_f64(out, *t1);
+        }
+        ServiceEvent::CheckpointWritten { seq, windows_closed } => {
+            put_u8(out, 5);
+            put_u64(out, *seq);
+            put_u64(out, *windows_closed as u64);
+        }
+        ServiceEvent::NodeComplete { node_id } => {
+            put_u8(out, 6);
+            put_u64(out, *node_id as u64);
+        }
+        ServiceEvent::ServiceComplete => put_u8(out, 7),
+        ServiceEvent::Lagged { missed } => {
+            put_u8(out, 8);
+            put_u64(out, *missed);
+        }
+    }
+}
+
+fn get_event(r: &mut Reader<'_>) -> Result<ServiceEvent, ProtoError> {
+    Ok(match r.u8("event.tag")? {
+        0 => ServiceEvent::NodeIdentified {
+            node_id: r.u64("event.node_id")? as usize,
+            t0: r.f64("event.t0")?,
+            identity: get_identity(r)?,
+        },
+        1 => ServiceEvent::EpochDetected {
+            node_id: r.u64("event.node_id")? as usize,
+            t0: r.f64("event.t0")?,
+        },
+        2 => ServiceEvent::Recalibrated {
+            node_id: r.u64("event.node_id")? as usize,
+            t0: r.f64("event.t0")?,
+        },
+        3 => ServiceEvent::DriftSuspected {
+            node_id: r.u64("event.node_id")? as usize,
+            t: r.f64("event.t")?,
+        },
+        4 => ServiceEvent::WindowClosed {
+            index: r.u64("event.index")? as usize,
+            t0: r.f64("event.t0")?,
+            t1: r.f64("event.t1")?,
+        },
+        5 => ServiceEvent::CheckpointWritten {
+            seq: r.u64("event.seq")?,
+            windows_closed: r.u64("event.windows_closed")? as usize,
+        },
+        6 => ServiceEvent::NodeComplete { node_id: r.u64("event.node_id")? as usize },
+        7 => ServiceEvent::ServiceComplete,
+        8 => ServiceEvent::Lagged { missed: r.u64("event.missed")? },
+        _ => return r.err("event.tag"),
+    })
+}
+
+// ------------------------------------------------------------- requests
+
+/// A client→collector request. One request per frame; the collector
+/// answers with exactly one [`Response`] frame, except `Subscribe`, which
+/// switches the connection into a stream of `Event` frames terminated by
+/// `EndOfEvents`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Identify the collector: fingerprint handshake.
+    Hello,
+    /// The full fleet state as `.gpck` interchange bytes.
+    Snapshot,
+    /// Fleet energy over `[t0, t1]` (whole-bucket clamped, the
+    /// shard-fold-cache path).
+    FleetEnergy {
+        /// Range start, stream seconds.
+        t0: f64,
+        /// Range end, stream seconds.
+        t1: f64,
+    },
+    /// The per-window aggregate table.
+    WindowTable,
+    /// The top-`k` misestimated-node table.
+    TopMisestimated {
+        /// How many nodes to rank.
+        k: usize,
+    },
+    /// Stream events starting at emission sequence `from_seq`. A
+    /// `from_seq` below the backlog's trimmed base yields one
+    /// `Lagged` event covering the gap — the in-process semantics,
+    /// end-to-end.
+    Subscribe {
+        /// First emission sequence to deliver.
+        from_seq: u64,
+    },
+    /// Steer the collector ([`ControlMsg`]): recalibrate, checkpoint,
+    /// shutdown.
+    Control(ControlMsg),
+    /// The raw current checkpoint (`.gpck` bytes), for archival or
+    /// out-of-band restore.
+    FetchCheckpoint,
+    /// Ingest progress + console gauges (what `repro watch` renders).
+    Progress,
+}
+
+impl Request {
+    /// Encode into one frame payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Request::Hello => put_u8(&mut out, 0),
+            Request::Snapshot => put_u8(&mut out, 1),
+            Request::FleetEnergy { t0, t1 } => {
+                put_u8(&mut out, 2);
+                put_f64(&mut out, *t0);
+                put_f64(&mut out, *t1);
+            }
+            Request::WindowTable => put_u8(&mut out, 3),
+            Request::TopMisestimated { k } => {
+                put_u8(&mut out, 4);
+                put_u64(&mut out, *k as u64);
+            }
+            Request::Subscribe { from_seq } => {
+                put_u8(&mut out, 5);
+                put_u64(&mut out, *from_seq);
+            }
+            Request::Control(msg) => {
+                put_u8(&mut out, 6);
+                match msg {
+                    ControlMsg::Recalibrate { node } => {
+                        put_u8(&mut out, 0);
+                        put_u64(&mut out, *node as u64);
+                    }
+                    ControlMsg::Checkpoint => put_u8(&mut out, 1),
+                    ControlMsg::Shutdown => put_u8(&mut out, 2),
+                }
+            }
+            Request::FetchCheckpoint => put_u8(&mut out, 7),
+            Request::Progress => put_u8(&mut out, 8),
+        }
+        out
+    }
+
+    /// Decode one frame payload.
+    pub fn decode(payload: &[u8]) -> Result<Request, ProtoError> {
+        let mut r = Reader::new(payload);
+        let req = match r.u8("request.tag")? {
+            0 => Request::Hello,
+            1 => Request::Snapshot,
+            2 => Request::FleetEnergy { t0: r.f64("request.t0")?, t1: r.f64("request.t1")? },
+            3 => Request::WindowTable,
+            4 => Request::TopMisestimated { k: r.u64("request.k")? as usize },
+            5 => Request::Subscribe { from_seq: r.u64("request.from_seq")? },
+            6 => Request::Control(match r.u8("control.tag")? {
+                0 => ControlMsg::Recalibrate { node: r.u64("control.node")? as usize },
+                1 => ControlMsg::Checkpoint,
+                2 => ControlMsg::Shutdown,
+                _ => return r.err("control.tag"),
+            }),
+            7 => Request::FetchCheckpoint,
+            8 => Request::Progress,
+            _ => return r.err("request.tag"),
+        };
+        r.finish()?;
+        Ok(req)
+    }
+}
+
+// ------------------------------------------------------------ responses
+
+/// The fingerprint handshake: who the collector is and whether its
+/// service has drained.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HelloInfo {
+    /// The collector's geometry/source fingerprint — the identity the
+    /// federation pins and re-validates on every reconnect.
+    pub fingerprint: ServiceFingerprint,
+    /// Whether the underlying service has drained to completion.
+    pub done: bool,
+}
+
+/// Ingest progress + console gauges, enough for a remote `repro watch`
+/// frame to render byte-identically to a local one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgressPayload {
+    /// Producer-side ingest counters.
+    pub stats: IngestStats,
+    /// The instrument values the console panes print.
+    pub console: ConsoleMetrics,
+    /// Fleet size (denominator of the status line).
+    pub n_total: usize,
+    /// Whether the service has drained.
+    pub done: bool,
+}
+
+/// A collector→client response frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Answer to [`Request::Hello`].
+    Hello(HelloInfo),
+    /// Answer to [`Request::Snapshot`]: `.gpck` bytes plus the live-view
+    /// counters a checkpoint does not carry.
+    Snapshot {
+        /// The encoded [`Checkpoint`] (validated, fingerprinted,
+        /// checksummed by the persist layer).
+        gpck: Vec<u8>,
+        /// Windows covered by a published checkpoint file.
+        windows_published: u64,
+        /// Consumer-side ingest counters at snapshot time.
+        stats: IngestStats,
+    },
+    /// Answer to [`Request::FleetEnergy`].
+    FleetEnergy(crate::telemetry::accounting::FleetEnergy),
+    /// Answer to the table requests (window table, top-misestimated).
+    Table(Table),
+    /// One subscribed event. `next_seq` is the cursor *after* this event:
+    /// resuming with `Subscribe` at `from_seq = next_seq` continues the
+    /// stream without loss or duplication.
+    Event {
+        /// Resume cursor after this event.
+        next_seq: u64,
+        /// The event itself (including synthesised `Lagged` markers).
+        event: ServiceEvent,
+    },
+    /// The subscribed stream is exhausted: the service completed and the
+    /// backlog is fully consumed. The connection returns to
+    /// request/response mode.
+    EndOfEvents,
+    /// Answer to [`Request::Control`].
+    Ack {
+        /// Whether the control command was accepted.
+        accepted: bool,
+    },
+    /// Answer to [`Request::FetchCheckpoint`].
+    Checkpoint {
+        /// The encoded [`Checkpoint`].
+        gpck: Vec<u8>,
+    },
+    /// Answer to [`Request::Progress`].
+    Progress(ProgressPayload),
+    /// The request could not be served.
+    Error {
+        /// Human-readable reason.
+        message: String,
+    },
+}
+
+impl Response {
+    /// Encode into one frame payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Response::Hello(info) => {
+                put_u8(&mut out, 0);
+                put_fingerprint(&mut out, &info.fingerprint);
+                put_u8(&mut out, info.done as u8);
+            }
+            Response::Snapshot { gpck, windows_published, stats } => {
+                put_u8(&mut out, 1);
+                put_u64(&mut out, *windows_published);
+                put_stats(&mut out, stats);
+                put_bytes(&mut out, gpck);
+            }
+            Response::FleetEnergy(e) => {
+                put_u8(&mut out, 2);
+                put_f64(&mut out, e.t0);
+                put_f64(&mut out, e.t1);
+                put_f64(&mut out, e.naive_j);
+                put_f64(&mut out, e.corrected_j);
+                put_f64(&mut out, e.bound_j);
+                put_f64(&mut out, e.truth_j);
+            }
+            Response::Table(t) => {
+                put_u8(&mut out, 3);
+                put_table(&mut out, t);
+            }
+            Response::Event { next_seq, event } => {
+                put_u8(&mut out, 4);
+                put_u64(&mut out, *next_seq);
+                put_event(&mut out, event);
+            }
+            Response::EndOfEvents => put_u8(&mut out, 5),
+            Response::Ack { accepted } => {
+                put_u8(&mut out, 6);
+                put_u8(&mut out, *accepted as u8);
+            }
+            Response::Checkpoint { gpck } => {
+                put_u8(&mut out, 7);
+                put_bytes(&mut out, gpck);
+            }
+            Response::Progress(p) => {
+                put_u8(&mut out, 8);
+                put_stats(&mut out, &p.stats);
+                put_console(&mut out, &p.console);
+                put_u64(&mut out, p.n_total as u64);
+                put_u8(&mut out, p.done as u8);
+            }
+            Response::Error { message } => {
+                put_u8(&mut out, 9);
+                put_str(&mut out, message);
+            }
+        }
+        out
+    }
+
+    /// Decode one frame payload.
+    pub fn decode(payload: &[u8]) -> Result<Response, ProtoError> {
+        let mut r = Reader::new(payload);
+        let resp = match r.u8("response.tag")? {
+            0 => Response::Hello(HelloInfo {
+                fingerprint: get_fingerprint(&mut r)?,
+                done: r.u8("hello.done")? != 0,
+            }),
+            1 => {
+                let windows_published = r.u64("snapshot.windows_published")?;
+                let stats = get_stats(&mut r)?;
+                let gpck = r.bytes("snapshot.gpck")?.to_vec();
+                Response::Snapshot { gpck, windows_published, stats }
+            }
+            2 => Response::FleetEnergy(crate::telemetry::accounting::FleetEnergy {
+                t0: r.f64("energy.t0")?,
+                t1: r.f64("energy.t1")?,
+                naive_j: r.f64("energy.naive_j")?,
+                corrected_j: r.f64("energy.corrected_j")?,
+                bound_j: r.f64("energy.bound_j")?,
+                truth_j: r.f64("energy.truth_j")?,
+            }),
+            3 => Response::Table(get_table(&mut r)?),
+            4 => Response::Event {
+                next_seq: r.u64("event.next_seq")?,
+                event: get_event(&mut r)?,
+            },
+            5 => Response::EndOfEvents,
+            6 => Response::Ack { accepted: r.u8("ack.accepted")? != 0 },
+            7 => Response::Checkpoint { gpck: r.bytes("checkpoint.gpck")?.to_vec() },
+            8 => {
+                let stats = get_stats(&mut r)?;
+                let console = get_console(&mut r)?;
+                let n_total = r.u64("progress.n_total")? as usize;
+                let done = r.u8("progress.done")? != 0;
+                Response::Progress(ProgressPayload { stats, console, n_total, done })
+            }
+            9 => Response::Error { message: r.string("error.message")? },
+            _ => return r.err("response.tag"),
+        };
+        r.finish()?;
+        Ok(resp)
+    }
+}
+
+// ------------------------------------- checkpoint → snapshot reconstruction
+
+/// Expand a decoded checkpoint's nodes into query-side accounts +
+/// registry entries — the exact per-node recipe a checkpoint *restore*
+/// uses, so a finished node's account is bit-for-bit the account the
+/// collector itself folds. In-flight nodes surface their frozen prefix
+/// (unfrozen buckets zero, `complete == false`): the remote view is the
+/// durable view, which converges to the live view once the stream drains.
+pub fn node_views(ck: &Checkpoint, spec: BucketSpec) -> (Vec<NodeAccount>, Vec<NodeIdentity>) {
+    let mut accounts = Vec::with_capacity(ck.nodes.len());
+    let mut entries = Vec::with_capacity(ck.nodes.len());
+    for node in &ck.nodes {
+        let model = persist::static_model_name(&node.model);
+        let identity = node.last_identity().unwrap_or_else(SensorIdentity::unsupported);
+        let epochs: Vec<EpochIdentity> = node
+            .epochs
+            .iter()
+            .filter_map(|e| e.identity.map(|identity| EpochIdentity { t0: e.t0, identity }))
+            .collect();
+        let complete = node.stage == NodeStage::Complete;
+        let pad = |v: &[f64]| {
+            let mut out = v.to_vec();
+            out.resize(spec.n, 0.0);
+            out
+        };
+        accounts.push(NodeAccount {
+            node_id: node.node_id,
+            model,
+            generation: node.generation,
+            identity,
+            spec,
+            naive_j: pad(&node.frozen.naive_j),
+            corrected_j: pad(&node.frozen.corrected_j),
+            bound_j: pad(&node.frozen.bound_j),
+            truth_j: node.truth_j.clone().unwrap_or_else(|| vec![0.0; spec.n]),
+            readings: node.readings,
+            complete,
+            frozen_n: if complete { spec.n } else { node.frozen.frozen_n },
+        });
+        entries.push(NodeIdentity {
+            node_id: node.node_id,
+            model,
+            generation: node.generation,
+            identity,
+            epochs,
+        });
+    }
+    (accounts, entries)
+}
+
+/// Reconstruct a [`TelemetrySnapshot`] from `.gpck` interchange plus the
+/// live-view counters the Snapshot response carries alongside it. For a
+/// drained service this is bit-for-bit the snapshot the collector holds
+/// in-process (same accounts, same node-id fold order via
+/// [`FleetAccounts::merge`], same registry) — the property the remote
+/// console and the federation acceptance tests pin.
+pub fn snapshot_from_checkpoint(
+    ck: &Checkpoint,
+    windows_published: usize,
+    stats: IngestStats,
+    schedule: ProbeSchedule,
+) -> TelemetrySnapshot {
+    let fp = &ck.fingerprint;
+    let spec = BucketSpec { t0: 0.0, bucket_s: fp.bucket_s, n: fp.spec_n };
+    let (accounts, entries) = node_views(ck, spec);
+    let mut registry = Registry { entries };
+    registry.finalize();
+    TelemetrySnapshot {
+        duration_s: fp.duration_s,
+        window_s: fp.window_s,
+        schedule,
+        accounts: FleetAccounts::merge(spec, accounts),
+        registry,
+        stats,
+        windows_closed: ck.windows_closed,
+        windows_published,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_fingerprint() -> ServiceFingerprint {
+        ServiceFingerprint {
+            seed: 2024,
+            n_total: 3,
+            windows: 2,
+            spec_n: 20,
+            duration_s: 40.0,
+            window_s: 20.0,
+            bucket_s: 2.0,
+            poll_period_s: 0.1,
+            source_kind: SourceKind::Replay,
+            source_digest: 0xDEAD_BEEF,
+            fleet_digest: 0,
+        }
+    }
+
+    #[test]
+    fn every_request_roundtrips() {
+        let all = vec![
+            Request::Hello,
+            Request::Snapshot,
+            Request::FleetEnergy { t0: 0.25, t1: 39.75 },
+            Request::WindowTable,
+            Request::TopMisestimated { k: 10 },
+            Request::Subscribe { from_seq: 77 },
+            Request::Control(ControlMsg::Recalibrate { node: 5 }),
+            Request::Control(ControlMsg::Checkpoint),
+            Request::Control(ControlMsg::Shutdown),
+            Request::FetchCheckpoint,
+            Request::Progress,
+        ];
+        for req in all {
+            assert_eq!(Request::decode(&req.encode()).unwrap(), req, "{req:?}");
+        }
+    }
+
+    #[test]
+    fn every_response_roundtrips() {
+        let identity = SensorIdentity {
+            class: crate::telemetry::registry::SensorClass::Boxcar,
+            update_s: Some(0.1),
+            window_s: Some(0.025),
+            smi_rise_s: None,
+        };
+        let all = vec![
+            Response::Hello(HelloInfo { fingerprint: sample_fingerprint(), done: true }),
+            Response::Snapshot {
+                gpck: vec![1, 2, 3, 4],
+                windows_published: 2,
+                stats: IngestStats {
+                    nodes: 3,
+                    batches: 9,
+                    readings: 1200,
+                    recalibrations: 1,
+                    drift_suspected: 0,
+                },
+            },
+            Response::FleetEnergy(crate::telemetry::accounting::FleetEnergy {
+                t0: 0.0,
+                t1: 40.0,
+                naive_j: 1.5,
+                corrected_j: 2.5,
+                bound_j: 0.25,
+                truth_j: 2.75,
+            }),
+            Response::Table(Table {
+                title: "fleet".into(),
+                headers: vec!["a".into(), "b".into()],
+                rows: vec![vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+            }),
+            Response::Event {
+                next_seq: 8,
+                event: ServiceEvent::NodeIdentified { node_id: 2, t0: 0.0, identity },
+            },
+            Response::Event { next_seq: 9, event: ServiceEvent::Lagged { missed: 41 } },
+            Response::EndOfEvents,
+            Response::Ack { accepted: false },
+            Response::Checkpoint { gpck: b"GPCK 1\n".to_vec() },
+            Response::Progress(ProgressPayload {
+                stats: IngestStats::default(),
+                console: ConsoleMetrics {
+                    windows_closed: 2,
+                    windows_published: 1,
+                    checkpoints_written: 3,
+                    checkpoint_age_ms: -1,
+                    event_backlog_len: 17,
+                    events_trimmed: 0,
+                    shards: vec![(0, 12, 0), (0, 9, 3)],
+                },
+                n_total: 4,
+                done: false,
+            }),
+            Response::Error { message: "no such node".into() },
+        ];
+        for resp in all {
+            assert_eq!(Response::decode(&resp.encode()).unwrap(), resp, "{resp:?}");
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected_with_offset() {
+        let mut payload = Request::Hello.encode();
+        payload.push(0xFF);
+        let err = Request::decode(&payload).unwrap_err();
+        assert_eq!(err.offset, 1);
+    }
+
+    #[test]
+    fn truncated_payloads_carry_the_stop_offset() {
+        let full = Response::Hello(HelloInfo { fingerprint: sample_fingerprint(), done: false })
+            .encode();
+        for cut in 0..full.len() {
+            let err = Response::decode(&full[..cut]).unwrap_err();
+            assert!(err.offset <= cut, "offset {} past cut {cut}", err.offset);
+        }
+    }
+}

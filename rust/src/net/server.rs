@@ -1,0 +1,350 @@
+//! `repro serve` — the collector's socket front-end.
+//!
+//! A [`TcpListener`] accept loop plus one thread per client wraps a live
+//! [`ServiceHandle`]. The ingest path is never on this thread: queries go
+//! through the handle's existing lock discipline (fleet energy through
+//! the shard-fold-cache path, snapshots through the per-shard snapshot
+//! cache), so a slow — or adversarial — client can at worst stall its own
+//! connection:
+//!
+//! - **Framing violations disconnect.** Once a frame fails to parse the
+//!   byte stream is unsynchronised, so the server sends one `Error`
+//!   response (best-effort) and drops the connection. Malformed *message
+//!   payloads* inside a valid frame keep the connection: framing is still
+//!   in sync, so an `Error` response is returned and the next request is
+//!   served.
+//! - **Write deadlines.** Every response write carries a deadline
+//!   ([`WRITE_DEADLINE`]); a client that stops draining its socket is
+//!   disconnected rather than parked on.
+//! - **Subscribe bridges the backlog cursor.** `Subscribe { from_seq }`
+//!   turns the connection into an event stream driven by
+//!   [`ServiceHandle::subscribe_from`]: the bounded-backlog `Lagged`
+//!   semantics are preserved end-to-end (a subscriber that falls behind
+//!   the backlog cap receives the same synthesised gap marker an
+//!   in-process subscriber would), and the stream ends with `EndOfEvents`
+//!   once the service completes and the backlog is drained, returning the
+//!   connection to request/response mode.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::net::frame;
+use crate::net::proto::{HelloInfo, ProgressPayload, Request, Response};
+use crate::obs::console::ConsoleMetrics;
+use crate::obs::metrics::NetMetrics;
+use crate::telemetry::query;
+use crate::telemetry::service::{ServiceEvent, ServiceHandle};
+
+/// Poll granularity for idle reads and the accept loop: how quickly the
+/// server notices a shutdown request.
+const IDLE_POLL: Duration = Duration::from_millis(200);
+/// How long a started frame may stall before its client is declared slow
+/// and disconnected.
+const FRAME_DEADLINE: Duration = Duration::from_secs(5);
+/// How long a response write may block before its client is declared
+/// dead and disconnected.
+const WRITE_DEADLINE: Duration = Duration::from_secs(5);
+
+/// A serving collector: the accept loop plus its client threads.
+/// Dropping (or [`NetServer::shutdown`]) stops accepting, signals every
+/// client thread, and joins them.
+pub struct NetServer {
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `127.0.0.1:7070`, port 0 for ephemeral) and
+    /// start serving `handle`. Connection metrics are registered into the
+    /// service's own metrics registry, so `--metrics-out` exporters
+    /// surface the network plane automatically.
+    pub fn bind(handle: Arc<ServiceHandle>, addr: &str) -> io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(NetMetrics::register(&handle.metrics_handle().registry));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || accept_loop(listener, handle, stop, metrics))
+        };
+        Ok(NetServer { local, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Stop accepting, disconnect clients, and join every thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    handle: Arc<ServiceHandle>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<NetMetrics>,
+) {
+    let mut clients: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let handle = Arc::clone(&handle);
+                let stop = Arc::clone(&stop);
+                let metrics = Arc::clone(&metrics);
+                clients.push(std::thread::spawn(move || {
+                    client_loop(stream, handle, stop, metrics)
+                }));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(IDLE_POLL);
+            }
+            Err(_) => std::thread::sleep(IDLE_POLL),
+        }
+    }
+    for c in clients {
+        let _ = c.join();
+    }
+}
+
+fn client_loop(
+    mut stream: TcpStream,
+    handle: Arc<ServiceHandle>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<NetMetrics>,
+) {
+    metrics.clients_connected.add(1);
+    let _ = serve_client(&mut stream, &handle, &stop, &metrics);
+    metrics.clients_connected.add(-1);
+}
+
+/// What a bounded-blocking read produced.
+enum Fill {
+    /// The buffer is full.
+    Full,
+    /// Nothing arrived within one poll (only when `idle_ok`).
+    Idle,
+    /// The peer closed the connection cleanly before the first byte.
+    Closed,
+    /// The server is shutting down.
+    Stopped,
+}
+
+/// Fill `buf` from `stream` under the slow-client policy: with `idle_ok`,
+/// a quiet socket returns [`Fill::Idle`] so the caller can re-check the
+/// stop flag; once bytes start flowing the whole buffer must land within
+/// [`FRAME_DEADLINE`] or the read fails (the disconnect).
+fn fill(stream: &mut TcpStream, buf: &mut [u8], idle_ok: bool, stop: &AtomicBool) -> io::Result<Fill> {
+    let mut got = 0usize;
+    let mut deadline: Option<Instant> = None;
+    while got < buf.len() {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(Fill::Stopped);
+        }
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 && idle_ok {
+                    return Ok(Fill::Closed);
+                }
+                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "peer closed mid-frame"));
+            }
+            Ok(n) => {
+                got += n;
+                deadline = Some(Instant::now() + FRAME_DEADLINE);
+            }
+            Err(e)
+                if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) =>
+            {
+                if got == 0 && idle_ok {
+                    return Ok(Fill::Idle);
+                }
+                match deadline {
+                    Some(d) if Instant::now() > d => {
+                        return Err(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            "slow client: frame stalled past the deadline",
+                        ))
+                    }
+                    Some(_) => {}
+                    None => deadline = Some(Instant::now() + FRAME_DEADLINE),
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Fill::Full)
+}
+
+fn reply(stream: &mut TcpStream, metrics: &NetMetrics, resp: &Response) -> io::Result<()> {
+    let frame = frame::encode_frame(&resp.encode());
+    stream.write_all(&frame)?;
+    metrics.frames_out.inc();
+    metrics.bytes_out.add(frame.len() as u64);
+    Ok(())
+}
+
+fn serve_client(
+    stream: &mut TcpStream,
+    handle: &ServiceHandle,
+    stop: &AtomicBool,
+    metrics: &NetMetrics,
+) -> io::Result<()> {
+    stream.set_read_timeout(Some(IDLE_POLL))?;
+    stream.set_write_timeout(Some(WRITE_DEADLINE))?;
+    stream.set_nodelay(true).ok();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let mut header = [0u8; frame::HEADER_LEN];
+        match fill(stream, &mut header, true, stop)? {
+            Fill::Idle => continue,
+            Fill::Closed | Fill::Stopped => return Ok(()),
+            Fill::Full => {}
+        }
+        // Validate the header before allocating: an adversarial length
+        // field is rejected here, and any framing violation ends the
+        // connection — the byte stream is out of sync past this point.
+        let len = match frame::parse_header(&header) {
+            Ok(len) => len as usize,
+            Err(e) => {
+                metrics.frames_rejected.inc();
+                let _ = reply(stream, metrics, &Response::Error { message: e.to_string() });
+                return Ok(());
+            }
+        };
+        let mut buf = vec![0u8; frame::HEADER_LEN + len + frame::TRAILER_LEN];
+        buf[..frame::HEADER_LEN].copy_from_slice(&header);
+        match fill(stream, &mut buf[frame::HEADER_LEN..], false, stop)? {
+            Fill::Full => {}
+            _ => return Ok(()),
+        }
+        let payload = match frame::decode_frame(&buf) {
+            Ok((payload, _)) => payload.to_vec(),
+            Err(e) => {
+                metrics.frames_rejected.inc();
+                let _ = reply(stream, metrics, &Response::Error { message: e.to_string() });
+                return Ok(());
+            }
+        };
+        metrics.frames_in.inc();
+        metrics.bytes_in.add(buf.len() as u64);
+        // A bad message inside a good frame keeps the connection: framing
+        // is still synchronised, so answer with Error and keep serving.
+        let req = match Request::decode(&payload) {
+            Ok(req) => req,
+            Err(e) => {
+                metrics.frames_rejected.inc();
+                reply(stream, metrics, &Response::Error { message: e.to_string() })?;
+                continue;
+            }
+        };
+        match req {
+            Request::Subscribe { from_seq } => {
+                stream_events(stream, handle, stop, metrics, from_seq)?
+            }
+            other => {
+                let resp = answer(handle, other);
+                reply(stream, metrics, &resp)?;
+            }
+        }
+    }
+}
+
+/// Serve one request/response exchange. Total: every request variant
+/// (Subscribe is handled by the caller) maps to exactly one response.
+fn answer(handle: &ServiceHandle, req: Request) -> Response {
+    match req {
+        Request::Hello => Response::Hello(HelloInfo {
+            fingerprint: handle.fingerprint(),
+            done: handle.is_done(),
+        }),
+        Request::Snapshot => {
+            // live-view counters from the snapshot, durable state as
+            // `.gpck` interchange; after the drain the two views are the
+            // same account bit-for-bit
+            let snap = handle.snapshot();
+            let ck = handle.checkpoint();
+            Response::Snapshot {
+                gpck: ck.encode(),
+                windows_published: snap.windows_published as u64,
+                stats: snap.stats,
+            }
+        }
+        Request::FleetEnergy { t0, t1 } => Response::FleetEnergy(handle.fleet_energy(t0, t1)),
+        Request::WindowTable => Response::Table(query::window_table(&handle.snapshot())),
+        Request::TopMisestimated { k } => {
+            Response::Table(query::top_misestimated(&handle.snapshot(), k))
+        }
+        Request::Control(msg) => Response::Ack { accepted: handle.control(msg) },
+        Request::FetchCheckpoint => {
+            Response::Checkpoint { gpck: handle.checkpoint().encode() }
+        }
+        Request::Progress => Response::Progress(ProgressPayload {
+            stats: handle.progress(),
+            console: ConsoleMetrics::from(handle.metrics_handle()),
+            n_total: handle.fingerprint().n_total,
+            done: handle.is_done(),
+        }),
+        Request::Subscribe { .. } => {
+            Response::Error { message: "subscribe is a streaming request".into() }
+        }
+    }
+}
+
+/// Bridge the event backlog cursor over the socket until the service
+/// completes (then `EndOfEvents`) or the client/server goes away. Each
+/// frame carries the resume cursor, so a dropped subscriber reconnects
+/// with `Subscribe { from_seq: last_next_seq }` and loses nothing the
+/// backlog still holds — and observes a `Lagged` gap marker when it
+/// does not, exactly like an in-process subscriber.
+fn stream_events(
+    stream: &mut TcpStream,
+    handle: &ServiceHandle,
+    stop: &AtomicBool,
+    metrics: &NetMetrics,
+    from_seq: u64,
+) -> io::Result<()> {
+    let events = handle.subscribe_from(from_seq);
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        match events.recv_timeout(IDLE_POLL) {
+            Ok(event) => {
+                if let ServiceEvent::Lagged { missed } = event {
+                    metrics.subscribe_lagged.add(missed);
+                }
+                reply(stream, metrics, &Response::Event { next_seq: events.next_seq(), event })?;
+            }
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => {
+                reply(stream, metrics, &Response::EndOfEvents)?;
+                return Ok(());
+            }
+        }
+    }
+}

@@ -1,7 +1,15 @@
 //! The live operator console behind `repro watch`: renders one
-//! dashboard frame from a [`TelemetrySnapshot`], the live
-//! [`ServiceMetrics`], and the event feed a `subscribe()` stream has
+//! dashboard frame from a [`TelemetrySnapshot`], a [`ConsoleMetrics`]
+//! gauge capture, and the event feed a `subscribe()` stream has
 //! delivered so far.
+//!
+//! [`ConsoleMetrics`] is a plain-data capture of exactly the instrument
+//! values a frame renders, rather than a borrow of the live
+//! [`ServiceMetrics`] — so the same renderer serves a local handle
+//! (`ConsoleMetrics::from(handle.metrics_handle())`) and a remote
+//! collector (`repro watch --connect`, which receives the capture in a
+//! `Progress` response). Local and remote frames over the same state
+//! are byte-identical by construction.
 //!
 //! Frames are plain strings. In interactive mode the CLI clears the
 //! screen between frames (`--every S` cadence, minimal ANSI); with
@@ -97,10 +105,51 @@ impl EventFeed {
     }
 }
 
-/// Everything one dashboard frame renders from. The snapshot and
-/// metrics are borrowed straight off a `ServiceHandle`; `progress` is
-/// its `progress()` result (producer-side gauges, so mid-batch work
-/// shows up).
+/// The instrument values one dashboard frame renders, captured as plain
+/// data. Build it [`From`] a live [`ServiceMetrics`] locally, or decode
+/// it off the wire remotely — the renderer cannot tell the difference.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ConsoleMetrics {
+    /// Observation windows closed (final).
+    pub windows_closed: i64,
+    /// Windows covered by a published checkpoint.
+    pub windows_published: i64,
+    /// Checkpoint files published.
+    pub checkpoints_written: u64,
+    /// Milliseconds since the last checkpoint write, −1 before any.
+    pub checkpoint_age_ms: i64,
+    /// Events currently retained in the backlog.
+    pub event_backlog_len: i64,
+    /// Events evicted from the bounded backlog.
+    pub events_trimmed: u64,
+    /// Per-shard `(queue_depth, queue_high_water, deferred_readings)`.
+    pub shards: Vec<(i64, i64, i64)>,
+}
+
+impl From<&ServiceMetrics> for ConsoleMetrics {
+    fn from(m: &ServiceMetrics) -> ConsoleMetrics {
+        ConsoleMetrics {
+            windows_closed: m.windows_closed.get(),
+            windows_published: m.windows_published.get(),
+            checkpoints_written: m.checkpoints_written.get(),
+            checkpoint_age_ms: m.checkpoint_age_ms(),
+            event_backlog_len: m.event_backlog_len.get(),
+            events_trimmed: m.events_trimmed.get(),
+            shards: m
+                .shards
+                .iter()
+                .map(|s| {
+                    (s.queue_depth.get(), s.queue_high_water.get(), s.deferred_readings.get())
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Everything one dashboard frame renders from. The snapshot is
+/// borrowed straight off a `ServiceHandle` (or reconstructed from a
+/// remote checkpoint); `progress` is its `progress()` result
+/// (producer-side gauges, so mid-batch work shows up).
 #[derive(Debug)]
 pub struct WatchFrame<'a> {
     /// 1-based frame number (shown in the title).
@@ -111,8 +160,8 @@ pub struct WatchFrame<'a> {
     pub snap: &'a TelemetrySnapshot,
     /// `ServiceHandle::progress()` at render time.
     pub progress: IngestStats,
-    /// The live instrument set (`ServiceHandle::metrics_handle()`).
-    pub metrics: &'a ServiceMetrics,
+    /// Instrument capture at render time (local or off the wire).
+    pub metrics: ConsoleMetrics,
     /// Digest of the events delivered so far.
     pub feed: &'a EventFeed,
     /// Emit minimal ANSI styling (bold title). Off for `--headless`.
@@ -164,16 +213,16 @@ pub fn render_frame(f: &WatchFrame<'_>) -> String {
     ));
 
     // windows and checkpoint state
-    let age = match f.metrics.checkpoint_age_ms() {
+    let age = match f.metrics.checkpoint_age_ms {
         a if a < 0 => "-".to_string(),
         a => format!("{:.1} s", a as f64 / 1e3),
     };
     out.push_str(&format!(
         "windows         {}/{} closed, {} checkpointed | checkpoints {} | checkpoint age {age}\n",
-        f.metrics.windows_closed.get(),
+        f.metrics.windows_closed,
         f.snap.windows().len(),
-        f.metrics.windows_published.get(),
-        f.metrics.checkpoints_written.get(),
+        f.metrics.windows_published,
+        f.metrics.checkpoints_written,
     ));
 
     // per-generation naive vs corrected |error| bars (5 % per cell)
@@ -213,12 +262,9 @@ pub fn render_frame(f: &WatchFrame<'_>) -> String {
     }
 
     // per-shard queue gauges
-    for (i, sm) in f.metrics.shards.iter().enumerate() {
+    for (i, &(depth, high_water, deferred)) in f.metrics.shards.iter().enumerate() {
         out.push_str(&format!(
-            "shards          shard {i}: queue {} (high-water {}) | deferred {}\n",
-            sm.queue_depth.get(),
-            sm.queue_high_water.get(),
-            sm.deferred_readings.get(),
+            "shards          shard {i}: queue {depth} (high-water {high_water}) | deferred {deferred}\n",
         ));
     }
 
@@ -227,8 +273,8 @@ pub fn render_frame(f: &WatchFrame<'_>) -> String {
         "events          {} drift suspected, {} recalibrated | backlog {} ({} trimmed, {} missed)\n",
         f.feed.drift,
         f.feed.recal,
-        f.metrics.event_backlog_len.get(),
-        f.metrics.events_trimmed.get(),
+        f.metrics.event_backlog_len,
+        f.metrics.events_trimmed,
         f.feed.lagged,
     ));
     for l in f.feed.lines() {

@@ -519,6 +519,73 @@ impl ServiceMetrics {
     }
 }
 
+/// Instruments for the network plane (`repro serve`). Registered into
+/// the *service's* registry so connection telemetry flows through the
+/// same exporters (`--metrics-out`, watch console) as the accounting
+/// instruments, with no extra plumbing.
+#[derive(Debug, Clone)]
+pub struct NetMetrics {
+    /// Clients currently connected.
+    pub clients_connected: Arc<Gauge>,
+    /// Frames accepted from clients.
+    pub frames_in: Arc<Counter>,
+    /// Frames written to clients.
+    pub frames_out: Arc<Counter>,
+    /// Bytes accepted from clients (framing included).
+    pub bytes_in: Arc<Counter>,
+    /// Bytes written to clients (framing included).
+    pub bytes_out: Arc<Counter>,
+    /// Events subscribers missed to backlog trimming (sum of `Lagged`
+    /// gap sizes observed on the wire).
+    pub subscribe_lagged: Arc<Counter>,
+    /// Frames rejected at the framing layer (bad magic/version/length/
+    /// checksum, truncation). Each costs the sender its connection.
+    pub frames_rejected: Arc<Counter>,
+}
+
+impl NetMetrics {
+    /// Register the network instrument set into `reg`.
+    pub fn register(reg: &MetricsRegistry) -> NetMetrics {
+        NetMetrics {
+            clients_connected: reg.gauge(
+                "telemetry_net_clients_connected",
+                "Network clients currently connected.",
+                &[],
+            ),
+            frames_in: reg.counter(
+                "telemetry_net_frames_in_total",
+                "Wire frames accepted from clients.",
+                &[],
+            ),
+            frames_out: reg.counter(
+                "telemetry_net_frames_out_total",
+                "Wire frames written to clients.",
+                &[],
+            ),
+            bytes_in: reg.counter(
+                "telemetry_net_bytes_in_total",
+                "Bytes accepted from clients, framing included.",
+                &[],
+            ),
+            bytes_out: reg.counter(
+                "telemetry_net_bytes_out_total",
+                "Bytes written to clients, framing included.",
+                &[],
+            ),
+            subscribe_lagged: reg.counter(
+                "telemetry_net_subscribe_lagged_total",
+                "Events wire subscribers missed to backlog trimming.",
+                &[],
+            ),
+            frames_rejected: reg.counter(
+                "telemetry_net_frames_rejected_total",
+                "Frames rejected at the framing layer (connection dropped).",
+                &[],
+            ),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

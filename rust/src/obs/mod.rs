@@ -36,9 +36,9 @@ pub mod console;
 pub mod export;
 pub mod metrics;
 
-pub use console::{render_frame, status_line, EventFeed, WatchFrame};
+pub use console::{render_frame, status_line, ConsoleMetrics, EventFeed, WatchFrame};
 pub use export::{json_snapshot, prometheus_text, windows_csv};
 pub use metrics::{
     Counter, Gauge, Histogram, HistogramSnapshot, MetricDesc, MetricsRegistry, MetricsSnapshot,
-    ServiceMetrics, ShardMetrics,
+    NetMetrics, ServiceMetrics, ShardMetrics,
 };

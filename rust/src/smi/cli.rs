@@ -65,6 +65,21 @@ impl QueryField {
             QueryField::Timestamp => "timestamp",
         }
     }
+
+    /// The simulator [`PowerField`] a column of this query field was
+    /// recorded from — what a replayed log should be *scored against*:
+    /// `power.draw` is the epoch-dependent default field,
+    /// `power.draw.average` the post-R535 averaged sensor class, and
+    /// `power.draw.instant` the post-R535 instantaneous one. `None` for
+    /// non-power columns.
+    pub fn sensor_field(&self) -> Option<PowerField> {
+        match self {
+            QueryField::PowerDraw => Some(PowerField::Draw),
+            QueryField::PowerDrawAverage => Some(PowerField::Average),
+            QueryField::PowerDrawInstant => Some(PowerField::Instant),
+            _ => None,
+        }
+    }
 }
 
 /// Parse a full `--query-gpu=a,b,c` list; unknown fields are an error,

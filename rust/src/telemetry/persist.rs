@@ -336,7 +336,9 @@ fn push_f64(out: &mut Vec<u8>, v: f64) {
     push_u64(out, v.to_bits());
 }
 
-fn class_code(c: SensorClass) -> u8 {
+// pub(crate): the network plane's message codec reuses the same sensor
+// class encoding, so the wire and the checkpoint never drift apart.
+pub(crate) fn class_code(c: SensorClass) -> u8 {
     match c {
         SensorClass::Boxcar => 0,
         SensorClass::RcFilter => 1,
@@ -345,7 +347,7 @@ fn class_code(c: SensorClass) -> u8 {
     }
 }
 
-fn class_from(code: u8) -> Option<SensorClass> {
+pub(crate) fn class_from(code: u8) -> Option<SensorClass> {
     match code {
         0 => Some(SensorClass::Boxcar),
         1 => Some(SensorClass::RcFilter),

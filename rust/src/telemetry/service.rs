@@ -393,6 +393,15 @@ pub struct EventStream {
 }
 
 impl EventStream {
+    /// The sequence number of the next event this stream will deliver.
+    /// After receiving an event, this is the value to hand
+    /// [`ServiceHandle::subscribe_from`] to resume exactly where the
+    /// stream left off — the network plane stamps it into every `Event`
+    /// frame for reconnect resume.
+    pub fn next_seq(&self) -> u64 {
+        self.cursor.get() as u64
+    }
+
     /// Next event if one is already in the backlog. A cursor that fell
     /// below the backlog's trimmed base yields one synthesised
     /// [`ServiceEvent::Lagged`] covering the gap, then resumes at the
@@ -1222,6 +1231,25 @@ impl ServiceHandle {
     /// ```
     pub fn subscribe(&self) -> EventStream {
         EventStream { log: Arc::clone(&self.core.events), cursor: Cell::new(0) }
+    }
+
+    /// Subscribe starting at event sequence `from_seq` instead of 0 —
+    /// the resume path for network subscribers (`repro serve`'s
+    /// `Subscribe { from_seq }`): a reconnecting client passes the
+    /// `next_seq` of the last event it saw and observes exactly the
+    /// bounded-backlog semantics an in-process subscriber would,
+    /// including a synthesised [`ServiceEvent::Lagged`] if the backlog
+    /// already trimmed past that point.
+    pub fn subscribe_from(&self, from_seq: u64) -> EventStream {
+        EventStream { log: Arc::clone(&self.core.events), cursor: Cell::new(from_seq as usize) }
+    }
+
+    /// The service's [`ServiceFingerprint`] — identity of
+    /// config/fleet/source, as stamped into checkpoints. The network
+    /// plane's `Hello` handshake serves this so remote clients and
+    /// federations can pin it.
+    pub fn fingerprint(&self) -> ServiceFingerprint {
+        self.core.meta.fingerprint
     }
 
     /// Send a control command; `false` when it could not be accepted

@@ -662,6 +662,51 @@ fn committed_example_log_replays_through_the_service() {
     assert_eq!(whole.truth_j, 0.0, "no PMD for a recorded log");
 }
 
+/// Satellite: the committed post-R535 example log exercises the
+/// `power.draw.average` / `power.draw.instant` headers nvidia-smi grew in
+/// R535 — it parses, byte-round-trips through the emitter (the file *is*
+/// the canonical emission), maps its first power column onto the averaged
+/// sensor pipeline, and replays through the service.
+#[test]
+fn committed_post_r535_log_roundtrips_and_replays() {
+    use gpupower::smi::cli::{parse_log, QueryField};
+    use gpupower::telemetry::{self, TelemetryConfig};
+
+    let text = include_str!("../../examples/nvidia_smi_a100_post_r535.csv");
+    let log = parse_log(text).unwrap();
+    assert_eq!(log.model_name(), Some("A100 PCIe-40G"));
+    assert_eq!(log.rows.len(), 60);
+    assert_eq!(
+        log.format(),
+        text,
+        "the committed post-R535 log must be its own canonical emission"
+    );
+
+    // the header's first power column drives replay scoring: average, not
+    // the pre-R535 catch-all power.draw
+    let field = log.first_power_field().expect("log has power columns");
+    assert_eq!(field, QueryField::PowerDrawAverage);
+    assert_eq!(field.sensor_field(), Some(PowerField::Average));
+    assert_eq!(
+        QueryField::PowerDrawInstant.sensor_field(),
+        Some(PowerField::Instant),
+        "instant header maps onto the instantaneous pipeline"
+    );
+
+    // both post-R535 series parse; the instant column carries the [N/A]
+    let avg = log.power_series(&QueryField::PowerDrawAverage).unwrap();
+    let inst = log.power_series(&QueryField::PowerDrawInstant).unwrap();
+    assert_eq!(avg.len(), 60);
+    assert_eq!(inst.len(), 59);
+
+    let cfg = TelemetryConfig { duration_s: 0.0, bucket_s: 1.0, ..Default::default() };
+    let snap = telemetry::run_replay_service(&[text.to_string()], &cfg).unwrap();
+    assert_eq!(snap.stats.nodes, 1);
+    assert_eq!(snap.stats.readings, 60, "the averaged column has no [N/A] rows");
+    let whole = snap.fleet_energy(0.0, snap.duration_s);
+    assert!(whole.naive_j > 0.0, "recorded energy accounted: {whole:?}");
+}
+
 /// ISSUE 5 acceptance (tentpole): kill a service mid-ingest after a
 /// checkpoint, restore, replay the remaining stream — the final fleet
 /// account equals the uninterrupted run's bit-for-bit for every bucket
@@ -1176,7 +1221,7 @@ fn replay_host_and_rc_correction_compose() {
 /// every pane the dashboard promises is present.
 #[test]
 fn watch_headless_frames_render_deterministically() {
-    use gpupower::obs::console::{render_frame, EventFeed, WatchFrame};
+    use gpupower::obs::console::{render_frame, ConsoleMetrics, EventFeed, WatchFrame};
     use gpupower::telemetry::{TelemetryConfig, TelemetryService};
 
     let text = include_str!("../../examples/nvidia_smi_a100.csv");
@@ -1195,7 +1240,7 @@ fn watch_headless_frames_render_deterministically() {
         n_total: 1,
         snap: &snap,
         progress,
-        metrics: handle.metrics_handle(),
+        metrics: ConsoleMetrics::from(handle.metrics_handle()),
         feed: &feed,
         ansi: false,
     };

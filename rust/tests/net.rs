@@ -1,0 +1,367 @@
+//! ISSUE 9 acceptance: the network query/control plane and
+//! multi-collector federation (`rust/src/net/`).
+//!
+//! Everything here runs over real loopback sockets. The committed replay
+//! logs are the fleet substrate because a replay source is a pure
+//! function of its log text — which is what lets the federated account be
+//! compared *bit-for-bit* against the single-service account of the
+//! union fleet.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use gpupower::net::{encode_frame, Federation, NetConfig, NetServer, RemoteCollector};
+use gpupower::obs::console::{render_frame, ConsoleMetrics, EventFeed, WatchFrame};
+use gpupower::telemetry::{
+    self, query, ServiceEvent, ServiceHandle, TelemetryConfig, TelemetryService,
+};
+
+const LOG_A: &str = include_str!("../../examples/nvidia_smi_a100.csv");
+const LOG_B: &str = include_str!("../../examples/nvidia_smi_a100_post_r535.csv");
+
+fn replay_cfg() -> TelemetryConfig {
+    TelemetryConfig { duration_s: 0.0, bucket_s: 1.0, ..Default::default() }
+}
+
+/// Start one collector over `logs` and expose it on an ephemeral
+/// loopback port.
+fn serve(logs: &[&str]) -> (Arc<ServiceHandle>, NetServer, String) {
+    let logs: Vec<String> = logs.iter().map(|s| s.to_string()).collect();
+    let handle =
+        Arc::new(TelemetryService::start_replay(&logs, &replay_cfg()).expect("replay starts"));
+    let server = NetServer::bind(handle.clone(), "127.0.0.1:0").expect("bind loopback");
+    let addr = server.local_addr().to_string();
+    (handle, server, addr)
+}
+
+fn wait_done(handle: &ServiceHandle) {
+    while !handle.is_done() {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// A client config that fails fast when an upstream is down, so the
+/// degraded-upstream paths don't stall the suite.
+fn fast_net() -> NetConfig {
+    NetConfig {
+        connect_timeout: Duration::from_millis(500),
+        backoff_base: Duration::from_millis(5),
+        backoff_cap: Duration::from_millis(20),
+        attempts: 1,
+        ..Default::default()
+    }
+}
+
+fn energy_bits(e: &telemetry::accounting::FleetEnergy) -> [u64; 6] {
+    [
+        e.t0.to_bits(),
+        e.t1.to_bits(),
+        e.naive_j.to_bits(),
+        e.corrected_j.to_bits(),
+        e.bound_j.to_bits(),
+        e.truth_j.to_bits(),
+    ]
+}
+
+/// Tentpole acceptance: federating two served single-node collectors
+/// yields the *bit-for-bit* snapshot, fleet-energy, and query tables of
+/// one in-process service run over the union of their logs — and the
+/// result does not depend on how often the federation polled.
+#[test]
+fn federated_account_is_bitwise_the_union_run() {
+    let union =
+        telemetry::run_replay_service(&[LOG_A.to_string(), LOG_B.to_string()], &replay_cfg())
+            .unwrap();
+
+    let (h1, _s1, addr1) = serve(&[LOG_A]);
+    let (h2, _s2, addr2) = serve(&[LOG_B]);
+    wait_done(&h1);
+    wait_done(&h2);
+
+    let addrs = vec![addr1.clone(), addr2.clone()];
+    let mut fed = Federation::connect(&addrs, fast_net()).unwrap();
+    assert_eq!(fed.n_total(), 2);
+    assert_eq!(fed.poll(), 2, "both upstreams refresh");
+    assert!(fed.all_done());
+
+    let snap = fed.snapshot().unwrap();
+    assert_eq!(snap.accounts.nodes.len(), 2);
+    // node ids remapped into disjoint ranges, in --upstream order
+    assert_eq!(snap.accounts.nodes[0].node_id, 0);
+    assert_eq!(snap.accounts.nodes[1].node_id, 1);
+
+    // the fleet fold is bitwise the union run's
+    let fed_e = fed.fleet_energy(0.0, snap.duration_s).unwrap();
+    let union_e = union.fleet_energy(0.0, union.duration_s);
+    assert_eq!(energy_bits(&fed_e), energy_bits(&union_e), "{fed_e:?} vs {union_e:?}");
+
+    // ... and so is every rendered query table CI diffs
+    assert_eq!(
+        query::fleet_energy_table(&snap, 0.0, snap.duration_s).render(),
+        query::fleet_energy_table(&union, 0.0, union.duration_s).render(),
+    );
+    assert_eq!(query::window_table(&snap).render(), query::window_table(&union).render());
+    assert_eq!(
+        query::top_misestimated(&snap, 10).render(),
+        query::top_misestimated(&union, 10).render(),
+    );
+
+    // extra polls change nothing: the fold is a pure function of the
+    // upstreams' durable state, not of poll cadence
+    for _ in 0..3 {
+        fed.poll();
+    }
+    let again = fed.fleet_energy(0.0, snap.duration_s).unwrap();
+    assert_eq!(energy_bits(&again), energy_bits(&fed_e));
+
+    // reversing the upstream order federates the union of the reversed
+    // logs — same node-id remapping discipline, opposite assignment
+    let reversed =
+        telemetry::run_replay_service(&[LOG_B.to_string(), LOG_A.to_string()], &replay_cfg())
+            .unwrap();
+    let mut fed_rev = Federation::connect(&[addr2, addr1], fast_net()).unwrap();
+    assert_eq!(fed_rev.poll(), 2);
+    let rev_e = fed_rev.fleet_energy(0.0, reversed.duration_s).unwrap();
+    assert_eq!(energy_bits(&rev_e), energy_bits(&reversed.fleet_energy(0.0, reversed.duration_s)));
+    assert_eq!(
+        query::top_misestimated(&fed_rev.snapshot().unwrap(), 10).render(),
+        query::top_misestimated(&reversed, 10).render(),
+    );
+}
+
+/// Remote queries answer with exactly what the served handle would say
+/// locally.
+#[test]
+fn remote_queries_match_local() {
+    let (handle, _server, addr) = serve(&[LOG_A, LOG_B]);
+    wait_done(&handle);
+
+    let mut c = RemoteCollector::connect(&addr).unwrap();
+    let local = handle.snapshot();
+
+    let remote_e = c.fleet_energy(0.0, local.duration_s).unwrap();
+    assert_eq!(energy_bits(&remote_e), energy_bits(&local.fleet_energy(0.0, local.duration_s)));
+
+    assert_eq!(c.window_table().unwrap().render(), query::window_table(&local).render());
+    assert_eq!(
+        c.top_misestimated(5).unwrap().render(),
+        query::top_misestimated(&local, 5).render()
+    );
+
+    // the snapshot travels as checkpoint interchange bytes and
+    // reconstructs the same fleet account
+    let remote_snap = c.snapshot().unwrap();
+    assert_eq!(remote_snap.accounts.nodes.len(), local.accounts.nodes.len());
+    assert_eq!(
+        query::fleet_energy_table(&remote_snap, 0.0, remote_snap.duration_s).render(),
+        query::fleet_energy_table(&local, 0.0, local.duration_s).render(),
+    );
+
+    // hello pinned the fingerprint and the service reports done
+    assert_eq!(c.fingerprint().unwrap(), handle.fingerprint());
+    assert!(c.progress().unwrap().done);
+}
+
+/// Acceptance: malformed, truncated, and garbage frames never panic the
+/// server — every violation is rejected (and counted) while the service
+/// keeps answering well-formed clients on new connections.
+#[test]
+fn malformed_frames_never_kill_the_server() {
+    let (handle, _server, addr) = serve(&[LOG_A]);
+    wait_done(&handle);
+
+    let poke = |bytes: &[u8]| {
+        let mut s = TcpStream::connect(&addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        s.write_all(bytes).expect("write");
+        // the server replies best-effort (an Error frame) and hangs up;
+        // all we require here is that the exchange terminates
+        let mut sink = Vec::new();
+        let _ = s.read_to_end(&mut sink);
+    };
+
+    // garbage magic
+    poke(b"this is definitely not a GPNW frame, sorry");
+    // wrong protocol version
+    let mut bad = encode_frame(b"payload");
+    bad[4] = 0x7F;
+    poke(&bad);
+    // oversized length field
+    let mut bad = encode_frame(b"payload");
+    bad[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+    poke(&bad);
+    // checksum failure (bit flip in the payload)
+    let mut bad = encode_frame(b"payload");
+    bad[12] ^= 0x40;
+    poke(&bad);
+    // truncation: a header promising a payload that never arrives
+    let frame = encode_frame(&[7u8; 256]);
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    s.write_all(&frame[..40]).unwrap();
+    drop(s);
+
+    // the server is still alive and serving
+    let mut c = RemoteCollector::connect(&addr).expect("server survived the garbage");
+    let snap = handle.snapshot();
+    let e = c.fleet_energy(0.0, snap.duration_s).unwrap();
+    assert!(e.naive_j > 0.0);
+
+    // and the violations were counted through the obs registry (the
+    // connection-metrics satellite: same exporters as every other metric)
+    let ms = handle.metrics_handle().registry.snapshot();
+    let counter = |name: &str| {
+        ms.counters
+            .iter()
+            .find(|(d, _)| d.name == name)
+            .unwrap_or_else(|| panic!("{name} not registered"))
+            .1
+    };
+    assert!(counter("telemetry_net_frames_rejected_total") >= 4, "rejections counted");
+    assert!(counter("telemetry_net_frames_in_total") > 0);
+    assert!(counter("telemetry_net_frames_out_total") > 0);
+    let text = gpupower::obs::prometheus_text(&ms);
+    assert!(text.contains("telemetry_net_frames_rejected_total"), "{text}");
+    assert!(text.contains("telemetry_net_bytes_in_total"), "{text}");
+}
+
+/// Acceptance: a killed-then-restarted upstream re-joins the federation
+/// transparently when its fingerprint still matches — and an impostor
+/// serving a *different* fleet on the same address is rejected while the
+/// federation keeps serving the last good view.
+#[test]
+fn killed_then_restarted_upstream_rejoins_via_fingerprint() {
+    let (h1, server, addr) = serve(&[LOG_A]);
+    wait_done(&h1);
+
+    let mut fed = Federation::connect(&[addr.clone()], fast_net()).unwrap();
+    assert_eq!(fed.poll(), 1);
+    let good = fed.fleet_energy(0.0, f64::MAX).unwrap();
+
+    // kill the upstream: polls degrade, but the last good view survives
+    server.shutdown();
+    assert_eq!(fed.poll(), 0, "dead upstream cannot refresh");
+    let st = &fed.status()[0];
+    assert!(!st.ok && st.error.is_some(), "degradation is reported: {st:?}");
+    assert!(fed.status_table().render().contains("degraded"));
+    let stale = fed.fleet_energy(0.0, f64::MAX).unwrap();
+    assert_eq!(energy_bits(&stale), energy_bits(&good), "stale view is non-poisoned");
+
+    // restart the same fleet on the same address: fingerprint matches,
+    // the upstream re-joins on the next poll
+    let logs = vec![LOG_A.to_string()];
+    let h2 = Arc::new(TelemetryService::start_replay(&logs, &replay_cfg()).unwrap());
+    let server2 = NetServer::bind(h2.clone(), &addr).expect("rebind the vacated address");
+    wait_done(&h2);
+    assert_eq!(fed.poll(), 1, "same-fingerprint restart re-joins");
+    let st = &fed.status()[0];
+    assert!(st.ok && st.error.is_none(), "{st:?}");
+    let rejoined = fed.fleet_energy(0.0, f64::MAX).unwrap();
+    assert_eq!(energy_bits(&rejoined), energy_bits(&good));
+
+    // restart as a *different* fleet: the fingerprint handshake refuses it
+    server2.shutdown();
+    let logs = vec![LOG_B.to_string()];
+    let h3 = Arc::new(TelemetryService::start_replay(&logs, &replay_cfg()).unwrap());
+    let _server3 = NetServer::bind(h3.clone(), &addr).expect("rebind again");
+    wait_done(&h3);
+    assert_eq!(fed.poll(), 0, "fingerprint mismatch must not refresh");
+    let st = &fed.status()[0];
+    assert!(!st.ok, "{st:?}");
+    assert!(
+        st.error.as_deref().unwrap_or("").contains("fingerprint"),
+        "the error names the fingerprint: {st:?}"
+    );
+    let still = fed.fleet_energy(0.0, f64::MAX).unwrap();
+    assert_eq!(energy_bits(&still), energy_bits(&good), "impostor never poisons the account");
+}
+
+/// Satellite: `repro watch --connect` renders, for a drained service, the
+/// byte-identical headless frame the local console would — the wire
+/// carries everything the dashboard needs.
+#[test]
+fn remote_watch_frames_match_local_byte_for_byte() {
+    let (handle, _server, addr) = serve(&[LOG_A]);
+    let local_events = handle.subscribe_from(0);
+    wait_done(&handle);
+
+    // local rendering, exactly as `repro watch --headless` does it
+    let local_snap = handle.snapshot();
+    let mut local_feed = EventFeed::new(8);
+    local_feed.absorb(local_events.try_iter());
+    let local_frame = render_frame(&WatchFrame {
+        frame_no: 1,
+        n_total: 1,
+        snap: &local_snap,
+        progress: handle.progress(),
+        metrics: ConsoleMetrics::from(handle.metrics_handle()),
+        feed: &local_feed,
+        ansi: false,
+    });
+
+    // remote rendering from wire payloads only
+    let mut c = RemoteCollector::connect(&addr).unwrap();
+    let p = c.progress().unwrap();
+    assert!(p.done);
+    let mut evs = Vec::new();
+    c.drain_events(0, |_seq, ev| evs.push(ev)).unwrap();
+    let mut remote_feed = EventFeed::new(8);
+    remote_feed.absorb(evs.into_iter());
+    let remote_snap = c.snapshot().unwrap();
+    let remote_frame = render_frame(&WatchFrame {
+        frame_no: 1,
+        n_total: p.n_total,
+        snap: &remote_snap,
+        progress: p.stats,
+        metrics: p.console,
+        feed: &remote_feed,
+        ansi: false,
+    });
+
+    assert_eq!(
+        remote_frame, local_frame,
+        "remote console must render the local console's bytes"
+    );
+}
+
+/// Event subscriptions resume by sequence number: a subscriber that reads
+/// a prefix, disconnects, and re-subscribes from its cursor sees exactly
+/// the suffix — no gaps, no duplicates.
+#[test]
+fn event_subscription_resumes_by_sequence() {
+    let (handle, _server, addr) = serve(&[LOG_A, LOG_B]);
+    wait_done(&handle);
+
+    let mut c = RemoteCollector::connect(&addr).unwrap();
+    let mut full: Vec<(u64, ServiceEvent)> = Vec::new();
+    c.drain_events(0, |seq, ev| full.push((seq, ev))).unwrap();
+    assert!(full.len() >= 3, "a two-node replay emits a real event stream: {full:?}");
+    assert!(
+        matches!(full.last(), Some((_, ServiceEvent::ServiceComplete))),
+        "{full:?}"
+    );
+
+    // read a prefix on one connection...
+    let mut c1 = RemoteCollector::connect(&addr).unwrap();
+    let mut sub = c1.subscribe_from(0).unwrap();
+    let mut prefix = Vec::new();
+    for _ in 0..2 {
+        let (seq, ev) = sub.next().unwrap().expect("stream has events");
+        prefix.push((seq, ev));
+    }
+    let cursor = sub.next_seq();
+    drop(sub);
+    drop(c1);
+
+    // ...resume from the cursor on a fresh connection
+    let mut c2 = RemoteCollector::connect(&addr).unwrap();
+    let mut suffix = Vec::new();
+    let mut sub = c2.subscribe_from(cursor).unwrap();
+    while let Some((seq, ev)) = sub.next().unwrap() {
+        suffix.push((seq, ev));
+    }
+
+    let stitched: Vec<_> = prefix.into_iter().chain(suffix).collect();
+    assert_eq!(stitched, full, "prefix + resumed suffix must equal the full stream");
+}

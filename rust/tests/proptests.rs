@@ -13,7 +13,9 @@ use gpupower::measure::energy::{integrate_clipped, mean_power};
 use gpupower::measure::{
     measure_naive_streaming, naive::measure_naive, MeasureScratch, MeasurementRig,
 };
+use gpupower::net::{decode_frame, encode_frame, FrameError, Request, Response};
 use gpupower::rng::Rng;
+use gpupower::telemetry::ControlMsg;
 use gpupower::sim::sensor::{run_pipeline, run_pipeline_chunked};
 use gpupower::sim::trace::SampleSeries;
 use gpupower::sim::{
@@ -311,5 +313,132 @@ fn prop_update_period_respected_for_random_specs() {
             (med - update_ms / 1000.0).abs() < update_ms / 1000.0 * 0.1 + 0.003,
             "case {seed}: median gap {med} vs {update_ms} ms"
         );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Network wire format (satellite: a malformed frame must never panic the
+// collector — decoding is total and every rejection carries the offset it
+// stopped at; see rust/src/net/frame.rs)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_frame_roundtrips_and_rejects_every_truncation() {
+    for_cases(30, 15, |seed, rng| {
+        let n = rng.below(600) as usize;
+        let payload: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        let frame = encode_frame(&payload);
+        let (back, span) = decode_frame(&frame).unwrap_or_else(|e| panic!("case {seed}: {e}"));
+        assert_eq!(back, &payload[..], "case {seed}");
+        assert_eq!(span, frame.len(), "case {seed}");
+
+        // every proper prefix is Truncated, stopping exactly at the cut
+        for cut in 0..frame.len() {
+            match decode_frame(&frame[..cut]) {
+                Err(FrameError::Truncated { offset, needed }) => {
+                    assert_eq!(offset, cut, "case {seed} cut {cut}");
+                    assert!(needed > cut, "case {seed} cut {cut}: needed {needed}");
+                }
+                other => panic!("case {seed} cut {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_frame_bit_flips_never_produce_a_different_payload() {
+    for_cases(30, 16, |seed, rng| {
+        let n = rng.below(400) as usize;
+        let payload: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        let frame = encode_frame(&payload);
+        for _ in 0..60 {
+            let bit = rng.below((frame.len() * 8) as u64) as usize;
+            let mut bad = frame.clone();
+            bad[bit / 8] ^= 1 << (bit % 8);
+            // a flipped frame is either rejected outright (magic, version,
+            // length, checksum — all covered by the trailer or the header
+            // checks) or — vacuously, for the unreachable Ok — must still
+            // carry the original payload; silent corruption is the one
+            // outcome the format must rule out
+            if let Ok((p, _)) = decode_frame(&bad) {
+                assert_eq!(p, &payload[..], "case {seed} bit {bit}: corrupted frame accepted");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_frame_header_garbage_is_rejected_with_offsets() {
+    for_cases(40, 17, |seed, rng| {
+        let frame = encode_frame(b"payload");
+
+        // garbage magic: rejected at the first mismatching byte
+        let i = rng.below(4) as usize;
+        let mut bad = frame.clone();
+        bad[i] = bad[i].wrapping_add(1 + rng.below(255) as u8);
+        match decode_frame(&bad) {
+            Err(FrameError::BadMagic { offset }) => {
+                assert!(offset <= i, "case {seed}: offset {offset} past flipped byte {i}")
+            }
+            other => panic!("case {seed}: expected BadMagic, got {other:?}"),
+        }
+
+        // wrong version: rejected at the version field, echoing the claim
+        let v = 2 + rng.below(u16::MAX as u64 - 1) as u16;
+        let mut bad = frame.clone();
+        bad[4..6].copy_from_slice(&v.to_le_bytes());
+        assert_eq!(
+            decode_frame(&bad),
+            Err(FrameError::BadVersion { offset: 4, found: v }),
+            "case {seed}"
+        );
+
+        // oversized length: rejected at the length field before allocating
+        let len = gpupower::net::frame::MAX_PAYLOAD + 1 + rng.below(1 << 20) as u32;
+        let mut bad = frame.clone();
+        bad[6..10].copy_from_slice(&len.to_le_bytes());
+        assert_eq!(
+            decode_frame(&bad),
+            Err(FrameError::Oversized { offset: 6, len }),
+            "case {seed}"
+        );
+    });
+}
+
+#[test]
+fn prop_proto_decode_is_total_on_random_bytes() {
+    for_cases(200, 18, |_seed, rng| {
+        let n = rng.below(300) as usize;
+        let bytes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        // any outcome but a panic is fine; a Response carrying garbage is
+        // caught one level up by the fingerprint/typestate checks
+        let _ = Request::decode(&bytes);
+        let _ = Response::decode(&bytes);
+    });
+}
+
+#[test]
+fn prop_random_requests_roundtrip() {
+    for_cases(120, 19, |seed, rng| {
+        let req = match rng.below(8) {
+            0 => Request::Hello,
+            1 => Request::Snapshot,
+            2 => Request::FleetEnergy {
+                t0: rng.uniform_range(0.0, 50.0),
+                t1: rng.uniform_range(0.0, 50.0),
+            },
+            3 => Request::WindowTable,
+            4 => Request::TopMisestimated { k: rng.below(100_000) as usize },
+            5 => Request::Subscribe { from_seq: rng.next_u64() },
+            6 => Request::Control(match rng.below(3) {
+                0 => ControlMsg::Recalibrate { node: rng.below(1 << 20) as usize },
+                1 => ControlMsg::Checkpoint,
+                _ => ControlMsg::Shutdown,
+            }),
+            _ => Request::Progress,
+        };
+        let decoded =
+            Request::decode(&req.encode()).unwrap_or_else(|e| panic!("case {seed}: {e}"));
+        assert_eq!(decoded, req, "case {seed}");
     });
 }
