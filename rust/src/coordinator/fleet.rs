@@ -167,7 +167,7 @@ impl FleetReport {
         if self.truth_j <= 0.0 || self.nodes_measured == 0 || self.measured_s <= 0.0 {
             return 0.0;
         }
-        let kwh_year = self.err_w_per_gpu().abs() * 24.0 * 365.0 / 1000.0;
+        let kwh_year = crate::units::w_to_kwh_per_year(self.err_w_per_gpu().abs());
         kwh_year * usd_per_kwh * n_gpus as f64
     }
 }

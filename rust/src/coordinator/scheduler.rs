@@ -101,12 +101,12 @@ fn node_sensor(
         return None;
     }
     Some(SensorCharacterization {
-        update_s: spec.update_ms / 1000.0,
+        update_s: crate::units::ms_to_s(spec.update_ms),
         window_s: match spec.kind {
-            PipelineKind::Boxcar { window_ms } => window_ms / 1000.0,
-            _ => spec.update_ms / 1000.0,
+            PipelineKind::Boxcar { window_ms } => crate::units::ms_to_s(window_ms),
+            _ => crate::units::ms_to_s(spec.update_ms),
         },
-        rise_s: device.model.rise_ms / 1000.0,
+        rise_s: crate::units::ms_to_s(device.model.rise_ms),
     })
 }
 

@@ -16,6 +16,7 @@ pub fn table1() -> Table {
             ProductLine::Tesla => "Tesla",
             ProductLine::Quadro => "Quadro",
             ProductLine::GeForce => "GeForce",
+            ProductLine::Instinct => "Instinct",
         };
         t.row(&[
             m.generation.name().into(),

@@ -8,7 +8,14 @@
 //!   architecture generations of the paper's 70-GPU study (the hardware
 //!   substitute; DESIGN.md §2);
 //! * [`smi`] — an emulation of the `nvidia-smi` power query surface,
-//!   including driver-epoch-dependent field semantics;
+//!   including driver-epoch-dependent field semantics, plus
+//!   [`smi::schemas`] — parsers/writers for the foreign telemetry zoo
+//!   (NVML milliwatt logs, amdsmi socket-power CSV, DCGM/Prometheus
+//!   exposition scrapes, IPMI host sensor dumps), each normalising into
+//!   the canonical recorded-log form so the identification + accounting
+//!   core ingests every vendor unchanged;
+//! * [`units`] — the canonical watt/milliwatt/joule/second conversion
+//!   helpers every parser and table renderer routes through;
 //! * [`pmd`] — the external shunt-resistor power meter (ground truth);
 //! * [`bench`] — the paper's micro-benchmark suite: a controllable
 //!   square-wave load whose compute is the AOT-compiled Pallas FMA-chain
@@ -74,5 +81,6 @@ pub mod runtime;
 pub mod sim;
 pub mod smi;
 pub mod telemetry;
+pub mod units;
 
 pub use sim::{ActivitySignal, GpuDevice, PowerTrace};

@@ -45,7 +45,8 @@ COMMANDS:
                             campaign-seed 0 = canonical boot phases)
   telemetry [--gpus N] [--duration S] [--windows N] [--bucket S]
             [--model NAME ...] [--shard N] [--shards N] [--batch N] [--queue N]
-            [--source sim|faulty|replay] [--replay-log PATH ...]
+            [--source sim|faulty|replay|nvml|amdsmi|dcgm|ipmi]
+            [--replay-log PATH ...] [--host-log PATH]
             [--dropout P] [--outage T:D ...] [--stuck T:D ...]
             [--restart T ...] [--driver-update T:EPOCH ...]
             [--live-every S]
@@ -83,6 +84,30 @@ COMMANDS:
                                              catches)
                             --source replay  recorded nvidia-smi CSV logs,
                                              one node per --replay-log PATH.
+                            --source nvml|amdsmi|dcgm|ipmi
+                                             foreign sensor dumps, one node
+                                             per --replay-log PATH,
+                                             normalised at the CLI boundary
+                                             into the recorded-log schema
+                                             and replayed through the
+                                             unchanged core: nvml = mW poll
+                                             log (# device: preamble),
+                                             amdsmi = AMD profiler CSV
+                                             (integer-W socket power), dcgm
+                                             = DCGM/Prometheus exposition
+                                             (epoch-ms samples), ipmi = BMC
+                                             sensor dump (GPU Board Power
+                                             rail). See examples/
+                                             nvml_3090.log, amdsmi_mi210
+                                             .csv, dcgm_prom_scrape.txt,
+                                             ipmi_host.csv.
+                            --host-log PATH  IPMI host dump to reconcile
+                                             against the device account:
+                                             prints the host-vs-device
+                                             reconciliation table (board-
+                                             rail energy per bucket vs
+                                             naive/corrected, residual vs
+                                             the coverage bound)
                             --checkpoint-dir D   persist a checkpoint
                                              (checkpoint-NNNNNN.gpck, the
                                              format in docs/
@@ -395,17 +420,26 @@ fn launch_telemetry(
     // names (post-R535 logs carry power.draw.average / power.draw.instant
     // explicitly), with unrecognised models excluded from the metric
     let (handle, n_total, field, driver) = match args.flag_value("--source").unwrap_or("sim") {
-        "replay" => {
+        source @ ("replay" | "nvml" | "amdsmi" | "dcgm" | "ipmi") => {
             let paths = args.flag_values("--replay-log");
             if paths.is_empty() {
-                return Err(anyhow::anyhow!("--source replay needs at least one --replay-log PATH"));
+                return Err(anyhow::anyhow!(
+                    "--source {source} needs at least one --replay-log PATH"
+                ));
             }
             let mut logs = Vec::with_capacity(paths.len());
             for p in &paths {
-                logs.push(
-                    std::fs::read_to_string(p)
-                        .map_err(|e| anyhow::anyhow!("cannot read {p}: {e}"))?,
-                );
+                let text = std::fs::read_to_string(p)
+                    .map_err(|e| anyhow::anyhow!("cannot read {p}: {e}"))?;
+                // foreign dumps normalise into the canonical recorded-log
+                // form here, at the CLI boundary — the service below runs
+                // the byte-identical replay path for every vendor (so
+                // --restore sees the same stream digest either way)
+                logs.push(match gpupower::smi::SchemaKind::from_flag(source) {
+                    Some(kind) => gpupower::smi::schemas::normalize(kind, &text)
+                        .map_err(|e| anyhow::anyhow!("{p}: {e}"))?,
+                    None => text,
+                });
             }
             let n = logs.len();
             let field = gpupower::smi::cli::parse_log(&logs[0])
@@ -472,7 +506,9 @@ fn launch_telemetry(
             };
             (handle, n, fleet.config.field, fleet.config.driver)
         }
-        other => return Err(anyhow::anyhow!("unknown --source '{other}' (sim|faulty|replay)")),
+        other => return Err(anyhow::anyhow!(
+            "unknown --source '{other}' (sim|faulty|replay|nvml|amdsmi|dcgm|ipmi)"
+        )),
     };
     if let Some(ck) = &restore_ck {
         let finished = ck
@@ -824,6 +860,24 @@ fn main() -> Result<()> {
                 );
             }
             println!("{}", telemetry::query::registry_summary(&snap.registry, field, driver));
+            // host-vs-device reconciliation: an IPMI dump's GPU Board
+            // Power rail integrated per bucket against the device-derived
+            // corrected account (residual checked against the coverage
+            // bound)
+            if let Some(p) = args.flag_value("--host-log") {
+                let text = std::fs::read_to_string(p)
+                    .map_err(|e| anyhow::anyhow!("cannot read {p}: {e}"))?;
+                let dump = gpupower::smi::schemas::ipmi::parse_ipmi(&text)
+                    .map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
+                let rail = dump
+                    .rail_series(gpupower::smi::schemas::ipmi::GPU_BOARD_RAIL)
+                    .map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
+                save_and_print(
+                    &out,
+                    "telemetry_reconciliation",
+                    &telemetry::query::host_reconciliation_table(&snap, &rail),
+                );
+            }
             println!(
                 "scaled to 10,000 GPUs at $0.15/kWh, trusting the naive account is worth ${:.0}/year",
                 telemetry::query::annual_cost_error_usd(&snap, 10_000, 0.15)

@@ -248,7 +248,7 @@ impl Federation {
             let stale = if s.stale_ms < 0 {
                 "never".to_string()
             } else {
-                format!("{:.1}s", s.stale_ms as f64 / 1000.0)
+                format!("{:.1}s", crate::units::ms_to_s(s.stale_ms as f64))
             };
             t.row(&[
                 s.addr,

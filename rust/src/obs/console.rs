@@ -47,9 +47,9 @@ pub fn status_line(
         finished,
         identified,
         stats.readings,
-        e.naive_j / 1e3,
-        e.corrected_j / 1e3,
-        e.bound_j / 1e3,
+        crate::units::j_to_kj(e.naive_j),
+        crate::units::j_to_kj(e.corrected_j),
+        crate::units::j_to_kj(e.bound_j),
     )
 }
 
@@ -196,12 +196,16 @@ pub fn render_frame(f: &WatchFrame<'_>) -> String {
 
     // fleet energy ticker
     let e = f.snap.fleet_energy(0.0, f.snap.duration_s);
-    let truth = if e.truth_j > 0.0 { format!("{:.3} kJ", e.truth_j / 1e3) } else { "-".into() };
+    let truth = if e.truth_j > 0.0 {
+        format!("{:.3} kJ", crate::units::j_to_kj(e.truth_j))
+    } else {
+        "-".into()
+    };
     out.push_str(&format!(
         "fleet energy    naive {:.3} kJ | corrected {:.3} kJ (±{:.3} kJ) | truth {truth}\n",
-        e.naive_j / 1e3,
-        e.corrected_j / 1e3,
-        e.bound_j / 1e3,
+        crate::units::j_to_kj(e.naive_j),
+        crate::units::j_to_kj(e.corrected_j),
+        crate::units::j_to_kj(e.bound_j),
     ));
 
     // the shared status line (bit-for-bit the `[live]` ticker's body)
@@ -215,7 +219,7 @@ pub fn render_frame(f: &WatchFrame<'_>) -> String {
     // windows and checkpoint state
     let age = match f.metrics.checkpoint_age_ms {
         a if a < 0 => "-".to_string(),
-        a => format!("{:.1} s", a as f64 / 1e3),
+        a => format!("{:.1} s", crate::units::ms_to_s(a as f64)),
     };
     out.push_str(&format!(
         "windows         {}/{} closed, {} checkpointed | checkpoints {} | checkpoint age {age}\n",

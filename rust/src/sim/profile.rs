@@ -28,11 +28,18 @@ pub enum Generation {
     Hopper,
     /// GH200 module (Grace CPU + Hopper GPU); see superchip.rs.
     GraceHopper,
+    /// AMD CDNA accelerators (Instinct MI2xx): amdsmi socket power is a
+    /// long boxcar average behind a much faster readout cadence — the
+    /// paper's mechanism on different silicon (multi-vendor ingestion).
+    Cdna,
 }
 
 impl Generation {
-    /// All generations, oldest first (Fig. 14 row order reversed).
-    pub const ALL: [Generation; 14] = [
+    /// All generations, oldest first (Fig. 14 row order reversed), the
+    /// AMD extension last. Append-only: checkpoint files encode a
+    /// generation as its index in this array
+    /// (`telemetry::persist`), so reordering would corrupt restores.
+    pub const ALL: [Generation; 15] = [
         Generation::Fermi1,
         Generation::Fermi2,
         Generation::Kepler1,
@@ -47,6 +54,7 @@ impl Generation {
         Generation::Ada,
         Generation::Hopper,
         Generation::GraceHopper,
+        Generation::Cdna,
     ];
 
     /// Human name.
@@ -66,6 +74,7 @@ impl Generation {
             Generation::Ada => "Ada Lovelace",
             Generation::Hopper => "Hopper",
             Generation::GraceHopper => "Grace Hopper (GH200)",
+            Generation::Cdna => "CDNA (Instinct)",
         }
     }
 }
@@ -79,6 +88,8 @@ pub enum ProductLine {
     Quadro,
     /// Gaming ("GeForce") parts.
     GeForce,
+    /// AMD data-center ("Instinct") parts — the amdsmi ingestion class.
+    Instinct,
 }
 
 /// Physical form factor.
@@ -242,6 +253,12 @@ pub fn sensor_pipeline(gen: Generation, field: PowerField, driver: DriverEpoch) 
             Average => PipelineSpec::boxcar(100.0, 1000.0),
             _ => PipelineSpec::boxcar(100.0, 20.0),
         },
+        // AMD CDNA (Instinct): amdsmi's `current_socket_power` is a ~1 s
+        // boxcar republished every 100 ms regardless of which field name
+        // the normalised log carries — the same averaging class as
+        // post-530 Ampere `power.draw`, so the online identifier scores
+        // these devices with no NVIDIA-specific assumptions.
+        Cdna => PipelineSpec::boxcar(100.0, 1000.0),
     }
 }
 
@@ -312,6 +329,9 @@ pub const CATALOGUE: &[GpuModel] = &[
     // Fermi
     GpuModel { name: "Tesla M2090", generation: Generation::Fermi2, line: ProductLine::Tesla, form: FormFactor::Pcie, tdp_w: 225.0, power_limit_w: 225.0, idle_w: 30.0, sm_count: 16, rise_ms: 60.0, ramp_frac: 0.08, tested_count: 1 },
     GpuModel { name: "Tesla C2050", generation: Generation::Fermi1, line: ProductLine::Tesla, form: FormFactor::Pcie, tdp_w: 238.0, power_limit_w: 238.0, idle_w: 32.0, sm_count: 14, rise_ms: 60.0, ramp_frac: 0.08, tested_count: 1 },
+    // AMD CDNA (multi-vendor extension; sm_count is the CU count)
+    GpuModel { name: "Instinct MI210", generation: Generation::Cdna, line: ProductLine::Instinct, form: FormFactor::Pcie, tdp_w: 300.0, power_limit_w: 300.0, idle_w: 41.0, sm_count: 104, rise_ms: 150.0, ramp_frac: 0.08, tested_count: 2 },
+    GpuModel { name: "Instinct MI250X", generation: Generation::Cdna, line: ProductLine::Instinct, form: FormFactor::Module, tdp_w: 560.0, power_limit_w: 560.0, idle_w: 90.0, sm_count: 220, rise_ms: 150.0, ramp_frac: 0.08, tested_count: 1 },
 ];
 
 /// Look up a model by (case-insensitive substring) name.
@@ -411,6 +431,32 @@ mod tests {
         assert!(find_model("3090").is_some());
         assert!(find_model("a100 pcie-40g").is_some());
         assert!(find_model("nonexistent-gpu").is_none());
+    }
+
+    #[test]
+    fn cdna_is_a_long_boxcar_on_every_field_and_driver() {
+        // amdsmi socket power: ~1 s average behind a 100 ms readout —
+        // 10% coverage, same class as post-530 Ampere power.draw, on
+        // every field name a normalised foreign log can carry
+        for d in DriverEpoch::ALL {
+            for f in PowerField::ALL {
+                let spec = sensor_pipeline(Generation::Cdna, f, d);
+                if matches!(f, PowerField::Average | PowerField::Instant)
+                    && !matches!(d, DriverEpoch::Post530)
+                {
+                    assert_eq!(spec.kind, PipelineKind::Unsupported);
+                    continue;
+                }
+                assert_eq!(spec.kind, PipelineKind::Boxcar { window_ms: 1000.0 });
+                assert_eq!(spec.update_ms, 100.0);
+                assert!((spec.coverage() - 0.1).abs() < 1e-12, "CDNA covers 10%");
+            }
+        }
+        // the catalogue carries the class and stays append-only
+        let m = find_model("Instinct MI210").unwrap();
+        assert_eq!(m.generation, Generation::Cdna);
+        assert_eq!(m.idle_w, 41.0);
+        assert_eq!(Generation::ALL[14], Generation::Cdna, "appended last");
     }
 
     #[test]

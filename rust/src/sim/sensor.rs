@@ -81,8 +81,8 @@ pub fn value_at_readings(readings: &[Reading], t: f64) -> Option<f64> {
 /// from a [`TraceSampler`]: the boxcar (or estimation) averaging window.
 pub fn lookback_samples(spec: &PipelineSpec, hz: f64) -> usize {
     let window_s = match spec.kind {
-        PipelineKind::Boxcar { window_ms } => window_ms / 1000.0,
-        PipelineKind::Estimation => spec.update_ms / 1000.0,
+        PipelineKind::Boxcar { window_ms } => crate::units::ms_to_s(window_ms),
+        PipelineKind::Estimation => crate::units::ms_to_s(spec.update_ms),
         PipelineKind::RcFilter { .. } | PipelineKind::Unsupported => 0.0,
     };
     (window_s * hz).ceil() as usize + 4
@@ -177,18 +177,18 @@ impl SensorConsumer {
         chunk_size: usize,
     ) -> Self {
         let mut rng = Rng::new(boot_seed ^ device.seed);
-        let update_s = spec.update_ms / 1000.0;
+        let update_s = crate::units::ms_to_s(spec.update_ms);
         let phase_s = if update_s > 0.0 { rng.uniform() * update_s } else { 0.0 };
 
         let kind = match spec.kind {
             PipelineKind::Unsupported => KindState::Unsupported,
             PipelineKind::Boxcar { window_ms } => {
-                KindState::Boxcar { window_s: window_ms / 1000.0 }
+                KindState::Boxcar { window_s: crate::units::ms_to_s(window_ms) }
             }
             PipelineKind::RcFilter { tau_ms } => {
                 let dt = 1.0 / hz;
                 KindState::Rc {
-                    alpha: (dt / (tau_ms / 1000.0)).min(1.0),
+                    alpha: (dt / crate::units::ms_to_s(tau_ms)).min(1.0),
                     state: 0.0,
                     initialized: false,
                     ring: vec![0.0; chunk_size.max(1) + 4],

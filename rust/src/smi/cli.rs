@@ -310,7 +310,7 @@ pub fn parse_log(text: &str) -> Result<SmiLog, String> {
                 if let LogValue::Seconds(t) = &mut row[tc] {
                     // round to the emitted millisecond resolution so the
                     // normalised log re-emits losslessly
-                    *t = ((*t - t0) * 1000.0).round() / 1000.0;
+                    *t = crate::units::ms_to_s(crate::units::s_to_ms(*t - t0).round());
                 }
             }
         }

@@ -38,9 +38,9 @@ pub fn run_counter(
     truth: &PowerTrace,
     design: CounterDesign,
 ) -> EnergyCounter {
-    let update_s = spec.update_ms / 1000.0;
+    let update_s = crate::units::ms_to_s(spec.update_ms);
     let window_s = match spec.kind {
-        crate::sim::profile::PipelineKind::Boxcar { window_ms } => window_ms / 1000.0,
+        crate::sim::profile::PipelineKind::Boxcar { window_ms } => crate::units::ms_to_s(window_ms),
         _ => update_s,
     };
     let prefix = truth.prefix_sums();

@@ -6,15 +6,23 @@
 //! the last *published* reading, held constant between updates, with query
 //! timestamps jittering by a few milliseconds around the requested cadence.
 
+//!
+//! [`schemas`] extends the recorded-log surface beyond nvidia-smi CSV to
+//! the foreign telemetry zoo (NVML mW logs, amdsmi CSV, DCGM/Prometheus
+//! scrapes, IPMI host rails), each normalising into [`SmiLog`] so the
+//! replay pipeline ingests every vendor unchanged.
+
 pub mod cli;
 pub mod energy_counter;
 pub mod logger;
+pub mod schemas;
 
 pub use cli::{
     format_log, format_row, parse_header, parse_log, parse_query, LogValue, QueryField, SmiLog,
 };
 pub use energy_counter::{run_counter, CounterDesign, EnergyCounter};
 pub use logger::{poll_readings, PollLog, Poller};
+pub use schemas::SchemaKind;
 
 use crate::rng::Rng;
 use crate::sim::device::GpuDevice;

@@ -1,0 +1,238 @@
+//! amdsmi profiler CSV: integer-watt socket power with `N/A` dropouts.
+//!
+//! The format AMD-side LLM-inference power profilers dump from
+//! `amdsmi_get_power_info` (`current_socket_power`, integer watts or the
+//! literal string `N/A`), `amdsmi_get_gpu_activity` (`gfx_activity`, %),
+//! and `amdsmi_get_gpu_vram_usage` (MiB):
+//!
+//! ```text
+//! timestamp,device,socket_power_w,gfx_activity_pct,vram_used_mb
+//! 0.000,Instinct MI210,41,2,512
+//! 0.100,Instinct MI210,N/A,97,16384
+//! ```
+//!
+//! Socket power is a **boxcar average over a much longer window than the
+//! telemetry readout cadence** (the CDNA entries in
+//! [`crate::sim::profile`] encode this class), which is exactly the
+//! paper's mechanism on different silicon: naive integration of these
+//! rows mis-states energy until the window is identified and corrected.
+
+use crate::smi::{LogValue, QueryField, SmiLog};
+
+/// One sampled amdsmi row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AmdsmiRow {
+    /// Sample time, milliseconds since the log started (stored in ms so
+    /// the row is `Eq`/exact; rendered as seconds with 3 decimals).
+    pub time_ms: u64,
+    /// Socket power, integer watts; `None` is amdsmi's literal `N/A`.
+    pub socket_power_w: Option<u64>,
+    /// `gfx_activity` percent; `None` is `N/A`.
+    pub gfx_activity_pct: Option<u64>,
+    /// VRAM used, MiB; `None` is `N/A`.
+    pub vram_used_mb: Option<u64>,
+}
+
+/// A parsed amdsmi profiler CSV.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AmdsmiLog {
+    /// Device name (constant across rows; mismatching rows are an error).
+    pub device: String,
+    /// Sample rows, in file order.
+    pub rows: Vec<AmdsmiRow>,
+}
+
+const HEADER: [&str; 5] = ["timestamp", "device", "socket_power_w", "gfx_activity_pct", "vram_used_mb"];
+
+fn parse_na_u64(cell: &str, ln: usize, what: &str) -> Result<Option<u64>, String> {
+    if cell == "N/A" {
+        return Ok(None);
+    }
+    cell.parse::<u64>()
+        .map(Some)
+        .map_err(|_| format!("line {}: bad {what} '{cell}' (integer or N/A)", ln + 1))
+}
+
+/// Parse an amdsmi profiler CSV. Total: malformed input yields a
+/// line-numbered `Err`, never a panic. CRLF endings and blank lines are
+/// tolerated; every row must name the same device.
+pub fn parse_amdsmi(text: &str) -> Result<AmdsmiLog, String> {
+    let mut saw_header = false;
+    let mut device: Option<String> = None;
+    let mut rows = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').map(str::trim).collect();
+        if !saw_header {
+            if cells != HEADER {
+                return Err(format!(
+                    "line {}: expected header '{}', got '{line}'",
+                    ln + 1,
+                    HEADER.join(",")
+                ));
+            }
+            saw_header = true;
+            continue;
+        }
+        if cells.len() != HEADER.len() {
+            return Err(format!(
+                "line {}: expected {} columns, got {}",
+                ln + 1,
+                HEADER.len(),
+                cells.len()
+            ));
+        }
+        let t: f64 = cells[0]
+            .parse()
+            .map_err(|_| format!("line {}: bad timestamp '{}'", ln + 1, cells[0]))?;
+        if !t.is_finite() || t < 0.0 {
+            return Err(format!("line {}: bad timestamp '{}'", ln + 1, cells[0]));
+        }
+        match &device {
+            None => device = Some(cells[1].to_string()),
+            Some(d) if d != cells[1] => {
+                return Err(format!(
+                    "line {}: device '{}' differs from first row's '{d}'",
+                    ln + 1,
+                    cells[1]
+                ))
+            }
+            Some(_) => {}
+        }
+        rows.push(AmdsmiRow {
+            time_ms: crate::units::s_to_ms(t).round() as u64,
+            socket_power_w: parse_na_u64(cells[2], ln, "socket_power_w")?,
+            gfx_activity_pct: parse_na_u64(cells[3], ln, "gfx_activity_pct")?,
+            vram_used_mb: parse_na_u64(cells[4], ln, "vram_used_mb")?,
+        });
+    }
+    if !saw_header {
+        return Err("log is empty (no header row)".into());
+    }
+    // a device name is only known once a data row exists
+    let device = device.ok_or("log has a header but no data rows")?;
+    Ok(AmdsmiLog { device, rows })
+}
+
+impl AmdsmiLog {
+    /// Re-emit in the canonical amdsmi CSV form; inverse of
+    /// [`parse_amdsmi`] on canonical text (byte round-trip pinned).
+    pub fn format(&self) -> String {
+        let na = |v: Option<u64>| v.map_or_else(|| "N/A".into(), |x| x.to_string());
+        let mut out = HEADER.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:.3},{},{},{},{}\n",
+                crate::units::ms_to_s(r.time_ms as f64),
+                self.device,
+                na(r.socket_power_w),
+                na(r.gfx_activity_pct),
+                na(r.vram_used_mb),
+            ));
+        }
+        out
+    }
+
+    /// Normalise into the canonical recorded-log form (socket power as
+    /// the `power.draw` column, `N/A` dropouts preserved).
+    pub fn to_smi_log(&self) -> SmiLog {
+        let fields = vec![QueryField::Timestamp, QueryField::Name, QueryField::PowerDraw];
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    LogValue::Seconds(crate::units::ms_to_s(r.time_ms as f64)),
+                    LogValue::Text(self.device.clone()),
+                    LogValue::Watts(r.socket_power_w.map(|w| w as f64)),
+                ]
+            })
+            .collect();
+        SmiLog { fields, rows }
+    }
+
+    /// Writer: render a `(seconds, watts)` series as an amdsmi CSV —
+    /// quantising to the format's native **integer watts** (the coarsest
+    /// quantisation of the four schemas; the differential test's naive
+    /// tolerance accounts for up to 0.5 W per sample).
+    pub fn from_series(device: &str, points: &[(f64, f64)]) -> AmdsmiLog {
+        let rows = points
+            .iter()
+            .map(|&(t, w)| AmdsmiRow {
+                time_ms: crate::units::s_to_ms(t).round().max(0.0) as u64,
+                socket_power_w: Some(w.round().max(0.0) as u64),
+                gfx_activity_pct: None,
+                vram_used_mb: None,
+            })
+            .collect();
+        AmdsmiLog { device: device.to_string(), rows }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CANONICAL: &str = "timestamp,device,socket_power_w,gfx_activity_pct,vram_used_mb\n\
+                             0.000,Instinct MI210,41,2,512\n\
+                             0.100,Instinct MI210,N/A,97,16384\n\
+                             0.200,Instinct MI210,290,99,16384\n";
+
+    #[test]
+    fn canonical_text_round_trips_byte_for_byte() {
+        let log = parse_amdsmi(CANONICAL).unwrap();
+        assert_eq!(log.device, "Instinct MI210");
+        assert_eq!(log.rows.len(), 3);
+        assert_eq!(log.rows[0].socket_power_w, Some(41));
+        assert_eq!(log.rows[1].socket_power_w, None);
+        assert_eq!(log.rows[2].vram_used_mb, Some(16_384));
+        assert_eq!(log.format(), CANONICAL);
+    }
+
+    #[test]
+    fn normalisation_maps_socket_power_to_power_draw() {
+        let smi = parse_amdsmi(CANONICAL).unwrap().to_smi_log();
+        assert_eq!(smi.model_name(), Some("Instinct MI210"));
+        assert_eq!(smi.first_power_field(), Some(QueryField::PowerDraw));
+        let series = smi.power_series(&QueryField::PowerDraw).unwrap();
+        assert_eq!(series, vec![(0.0, 41.0), (0.2, 290.0)]);
+        let text = smi.format();
+        assert_eq!(crate::smi::parse_log(&text).unwrap().format(), text);
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let hdr = "timestamp,device,socket_power_w,gfx_activity_pct,vram_used_mb\n";
+        let e = parse_amdsmi(&format!("{hdr}0.0,MI210,watts,1,2\n")).unwrap_err();
+        assert!(e.contains("line 2") && e.contains("socket_power_w"), "{e}");
+        let e = parse_amdsmi(&format!("{hdr}0.0,MI210,1,2\n")).unwrap_err();
+        assert!(e.contains("line 2") && e.contains("columns"), "{e}");
+        let e = parse_amdsmi(&format!("{hdr}nan,MI210,1,2,3\n")).unwrap_err();
+        assert!(e.contains("line 2") && e.contains("timestamp"), "{e}");
+        let e = parse_amdsmi(&format!("{hdr}0.0,MI210,1,2,3\n0.1,MI250X,1,2,3\n")).unwrap_err();
+        assert!(e.contains("line 3") && e.contains("differs"), "{e}");
+        let e = parse_amdsmi("time,power\n").unwrap_err();
+        assert!(e.contains("line 1"), "{e}");
+        assert!(parse_amdsmi("").is_err());
+        assert!(parse_amdsmi(hdr).is_err(), "header but no rows");
+    }
+
+    #[test]
+    fn crlf_is_tolerated() {
+        let text = CANONICAL.replace('\n', "\r\n");
+        assert_eq!(parse_amdsmi(&text).unwrap(), parse_amdsmi(CANONICAL).unwrap());
+    }
+
+    #[test]
+    fn writer_round_trips_and_quantises_to_integer_watts() {
+        let log = AmdsmiLog::from_series("Instinct MI210", &[(0.0, 41.4), (0.1, 289.6)]);
+        assert_eq!(log.rows[0].socket_power_w, Some(41));
+        assert_eq!(log.rows[1].socket_power_w, Some(290));
+        let text = log.format();
+        assert_eq!(parse_amdsmi(&text).unwrap(), log);
+    }
+}

@@ -1,0 +1,235 @@
+//! DCGM/Prometheus text exposition scrapes: timestamped
+//! `DCGM_FI_DEV_POWER_USAGE` samples.
+//!
+//! The format a Prometheus server (or `curl` against dcgm-exporter)
+//! accumulates when it scrapes the DCGM power gauge — `# HELP`/`# TYPE`
+//! preamble, then one sample line per scrape with float watts and a
+//! **millisecond** epoch timestamp:
+//!
+//! ```text
+//! # HELP DCGM_FI_DEV_POWER_USAGE Power draw (in W).
+//! # TYPE DCGM_FI_DEV_POWER_USAGE gauge
+//! DCGM_FI_DEV_POWER_USAGE{gpu="0",modelName="A100 PCIe-40G"} 61.15 1700000000000
+//! DCGM_FI_DEV_POWER_USAGE{gpu="0",modelName="A100 PCIe-40G"} 63.79 1700000000100
+//! ```
+//!
+//! Sample lines for *other* metrics are skipped (a real scrape carries
+//! dozens), the label set must stay constant across samples, and epoch
+//! timestamps are normalised to relative seconds at the first sample in
+//! [`DcgmScrape::to_smi_log`] — mirroring how the canonical parser
+//! normalises nvidia-smi wall-clock stamps.
+
+use crate::smi::{LogValue, QueryField, SmiLog};
+use crate::units;
+
+/// The one metric this reproduction consumes from a scrape.
+pub const POWER_METRIC: &str = "DCGM_FI_DEV_POWER_USAGE";
+
+/// A parsed scrape: the power gauge's samples for one GPU.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DcgmScrape {
+    /// `gpu` label value (exporter device index).
+    pub gpu: String,
+    /// `modelName` label value — what replay scores the device against.
+    pub model_name: String,
+    /// `(epoch ms, watts)` samples, in file order.
+    pub rows: Vec<(u64, f64)>,
+}
+
+/// Split `gpu="0",modelName="A100"` into label pairs; `None` on any
+/// malformed pair (missing quotes/equals).
+fn parse_labels(body: &str) -> Option<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    if body.trim().is_empty() {
+        return Some(out);
+    }
+    for pair in body.split(',') {
+        let (k, v) = pair.split_once('=')?;
+        let v = v.trim().strip_prefix('"')?.strip_suffix('"')?;
+        out.push((k.trim().to_string(), v.to_string()));
+    }
+    Some(out)
+}
+
+fn label<'a>(labels: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+/// Parse a Prometheus exposition scrape, extracting the
+/// [`POWER_METRIC`] samples. Total: malformed sample lines of the power
+/// metric are line-numbered errors; other metrics and comments are
+/// skipped; label sets must not change mid-scrape.
+pub fn parse_dcgm(text: &str) -> Result<DcgmScrape, String> {
+    let mut scrape: Option<DcgmScrape> = None;
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if !line.starts_with(POWER_METRIC) {
+            continue; // a real scrape carries many metrics; only power matters here
+        }
+        let rest = &line[POWER_METRIC.len()..];
+        let (labels, rest) = if let Some(r) = rest.strip_prefix('{') {
+            let (body, tail) = r
+                .split_once('}')
+                .ok_or_else(|| format!("line {}: unterminated label set", ln + 1))?;
+            let labels = parse_labels(body)
+                .ok_or_else(|| format!("line {}: malformed label set '{{{body}}}'", ln + 1))?;
+            (labels, tail)
+        } else {
+            (Vec::new(), rest)
+        };
+        let mut parts = rest.split_whitespace();
+        let value: f64 = parts
+            .next()
+            .ok_or_else(|| format!("line {}: sample has no value", ln + 1))?
+            .parse()
+            .map_err(|_| format!("line {}: bad sample value", ln + 1))?;
+        if !value.is_finite() {
+            return Err(format!("line {}: non-finite sample value", ln + 1));
+        }
+        let stamp: u64 = parts
+            .next()
+            .ok_or_else(|| format!("line {}: sample has no timestamp (replay needs one)", ln + 1))?
+            .parse()
+            .map_err(|_| format!("line {}: bad timestamp (epoch milliseconds)", ln + 1))?;
+        if parts.next().is_some() {
+            return Err(format!("line {}: trailing tokens after timestamp", ln + 1));
+        }
+        let gpu = label(&labels, "gpu").unwrap_or("0").to_string();
+        let model_name = label(&labels, "modelName")
+            .ok_or_else(|| format!("line {}: sample lacks a modelName label", ln + 1))?
+            .to_string();
+        match &mut scrape {
+            None => scrape = Some(DcgmScrape { gpu, model_name, rows: vec![(stamp, value)] }),
+            Some(s) => {
+                if s.gpu != gpu || s.model_name != model_name {
+                    return Err(format!(
+                        "line {}: labels (gpu={gpu}, modelName={model_name}) differ from first sample",
+                        ln + 1
+                    ));
+                }
+                s.rows.push((stamp, value));
+            }
+        }
+    }
+    scrape.ok_or_else(|| format!("scrape has no {POWER_METRIC} samples"))
+}
+
+impl DcgmScrape {
+    /// Re-emit in canonical exposition form; inverse of [`parse_dcgm`]
+    /// on canonical text (byte round-trip pinned by tests).
+    pub fn format(&self) -> String {
+        let mut out = format!("# HELP {POWER_METRIC} Power draw (in W).\n# TYPE {POWER_METRIC} gauge\n");
+        for &(ms, w) in &self.rows {
+            out.push_str(&format!(
+                "{POWER_METRIC}{{gpu=\"{}\",modelName=\"{}\"}} {w:.2} {ms}\n",
+                self.gpu, self.model_name
+            ));
+        }
+        out
+    }
+
+    /// Normalise into the canonical recorded-log form: epoch
+    /// milliseconds → relative seconds at the first sample.
+    pub fn to_smi_log(&self) -> SmiLog {
+        let fields = vec![QueryField::Timestamp, QueryField::Name, QueryField::PowerDraw];
+        let t0 = self.rows.first().map_or(0, |&(ms, _)| ms);
+        let rows = self
+            .rows
+            .iter()
+            .map(|&(ms, w)| {
+                vec![
+                    LogValue::Seconds(units::ms_to_s(ms.saturating_sub(t0) as f64)),
+                    LogValue::Text(self.model_name.clone()),
+                    LogValue::Watts(Some(w)),
+                ]
+            })
+            .collect();
+        SmiLog { fields, rows }
+    }
+
+    /// Writer: render a `(seconds, watts)` series as a scrape anchored
+    /// at epoch `t0_ms`. Quantises to the format's native resolution:
+    /// millisecond timestamps and the exporter's 2-decimal watts.
+    pub fn from_series(model_name: &str, t0_ms: u64, points: &[(f64, f64)]) -> DcgmScrape {
+        let rows = points
+            .iter()
+            .map(|&(t, w)| (t0_ms + units::s_to_ms(t).round().max(0.0) as u64, w))
+            .collect();
+        DcgmScrape { gpu: "0".into(), model_name: model_name.to_string(), rows }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CANONICAL: &str = "# HELP DCGM_FI_DEV_POWER_USAGE Power draw (in W).\n\
+                             # TYPE DCGM_FI_DEV_POWER_USAGE gauge\n\
+                             DCGM_FI_DEV_POWER_USAGE{gpu=\"0\",modelName=\"A100 PCIe-40G\"} 61.15 1700000000000\n\
+                             DCGM_FI_DEV_POWER_USAGE{gpu=\"0\",modelName=\"A100 PCIe-40G\"} 63.79 1700000000100\n";
+
+    #[test]
+    fn canonical_text_round_trips_byte_for_byte() {
+        let s = parse_dcgm(CANONICAL).unwrap();
+        assert_eq!(s.gpu, "0");
+        assert_eq!(s.model_name, "A100 PCIe-40G");
+        assert_eq!(s.rows, vec![(1_700_000_000_000, 61.15), (1_700_000_000_100, 63.79)]);
+        assert_eq!(s.format(), CANONICAL);
+    }
+
+    #[test]
+    fn epoch_timestamps_normalise_to_relative_seconds() {
+        let smi = parse_dcgm(CANONICAL).unwrap().to_smi_log();
+        assert_eq!(smi.model_name(), Some("A100 PCIe-40G"));
+        let series = smi.power_series(&QueryField::PowerDraw).unwrap();
+        assert_eq!(series, vec![(0.0, 61.15), (0.1, 63.79)]);
+        let text = smi.format();
+        assert_eq!(crate::smi::parse_log(&text).unwrap().format(), text);
+    }
+
+    #[test]
+    fn unrelated_metrics_and_comments_are_skipped() {
+        let text = format!(
+            "# HELP DCGM_FI_DEV_GPU_TEMP temp\n\
+             DCGM_FI_DEV_GPU_TEMP{{gpu=\"0\"}} 55 1700000000000\n\
+             {CANONICAL}\
+             DCGM_FI_DEV_SM_CLOCK{{gpu=\"0\"}} 1410 1700000000100\n"
+        );
+        assert_eq!(parse_dcgm(&text).unwrap(), parse_dcgm(CANONICAL).unwrap());
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let e = parse_dcgm("DCGM_FI_DEV_POWER_USAGE{gpu=\"0\",modelName=\"X\"} 61.15\n").unwrap_err();
+        assert!(e.contains("line 1") && e.contains("timestamp"), "{e}");
+        let e = parse_dcgm("DCGM_FI_DEV_POWER_USAGE{gpu=\"0\"} 61.15 1700000000000\n").unwrap_err();
+        assert!(e.contains("line 1") && e.contains("modelName"), "{e}");
+        let e = parse_dcgm("DCGM_FI_DEV_POWER_USAGE{gpu=0} 61.15 1\n").unwrap_err();
+        assert!(e.contains("line 1") && e.contains("label"), "{e}");
+        let e = parse_dcgm("DCGM_FI_DEV_POWER_USAGE{gpu=\"0\",modelName=\"X\"} watts 1\n").unwrap_err();
+        assert!(e.contains("line 1") && e.contains("value"), "{e}");
+        let e = parse_dcgm(
+            "DCGM_FI_DEV_POWER_USAGE{gpu=\"0\",modelName=\"X\"} 1.0 1\n\
+             DCGM_FI_DEV_POWER_USAGE{gpu=\"1\",modelName=\"X\"} 2.0 2\n",
+        )
+        .unwrap_err();
+        assert!(e.contains("line 2") && e.contains("differ"), "{e}");
+        assert!(parse_dcgm("").is_err());
+        assert!(parse_dcgm("# only comments\n").is_err());
+    }
+
+    #[test]
+    fn writer_round_trips() {
+        let s = DcgmScrape::from_series("A100 PCIe-40G", 1_700_000_000_000, &[(0.0, 61.154), (0.1, 63.786)]);
+        let text = s.format();
+        let back = parse_dcgm(&text).unwrap();
+        // values survive at the exporter's 2-decimal resolution
+        assert_eq!(back.rows[0].0, 1_700_000_000_000);
+        assert!((back.rows[0].1 - 61.15).abs() < 1e-12);
+        assert!((back.rows[1].1 - 63.79).abs() < 1e-12);
+        assert_eq!(back.format(), text);
+    }
+}

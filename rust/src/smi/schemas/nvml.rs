@@ -1,0 +1,236 @@
+//! NVML-style power/utilisation logs: power in **milliwatts**.
+//!
+//! The format real collectors write when they poll
+//! `nvmlDeviceGetPowerUsage` (mW) + `nvmlDeviceGetUtilizationRates`
+//! (integer %) in a logging thread — a comment preamble naming the
+//! device, then one CSV row per poll:
+//!
+//! ```text
+//! # nvml power log v1
+//! # device: RTX 3090
+//! time_ms, power_mw, util_pct
+//! 0, 25150, 4
+//! 100, 301230, 98
+//! ```
+//!
+//! Power cells are integer milliwatts or `[N/A]` (a query that failed
+//! mid-run); util cells likewise. [`parse_nvml`] inverts
+//! [`NvmlLog::format`] byte-for-byte on canonical text; the milliwatt →
+//! watt normalisation in [`NvmlLog::to_smi_log`] routes through
+//! [`crate::units::mw_to_w`] — the exact conversion site the units
+//! satellite exists to protect.
+
+use crate::smi::{LogValue, QueryField, SmiLog};
+use crate::units;
+
+/// One polled NVML row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NvmlRow {
+    /// Poll time, milliseconds since the log started.
+    pub time_ms: u64,
+    /// Power draw in milliwatts; `None` is a failed query (`[N/A]`).
+    pub power_mw: Option<u64>,
+    /// GPU utilisation percent; `None` is `[N/A]`.
+    pub util_pct: Option<u32>,
+}
+
+/// A parsed NVML-style log.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NvmlLog {
+    /// Device name from the `# device:` preamble line.
+    pub device: String,
+    /// Poll rows, in file order.
+    pub rows: Vec<NvmlRow>,
+}
+
+const HEADER: [&str; 3] = ["time_ms", "power_mw", "util_pct"];
+
+fn parse_opt_u64(cell: &str, ln: usize, what: &str) -> Result<Option<u64>, String> {
+    if cell == "[N/A]" {
+        return Ok(None);
+    }
+    cell.parse::<u64>()
+        .map(Some)
+        .map_err(|_| format!("line {}: bad {what} '{cell}' (integer or [N/A])", ln + 1))
+}
+
+/// Parse an NVML-style log. Total: any malformed input yields a
+/// line-numbered `Err`. CRLF endings and blank lines are tolerated;
+/// unknown `#` comment lines are skipped; the `# device:` line is
+/// required (replay needs a model name to score against).
+pub fn parse_nvml(text: &str) -> Result<NvmlLog, String> {
+    let mut device: Option<String> = None;
+    let mut saw_header = false;
+    let mut rows = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim(); // also strips the '\r' of CRLF input
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            if let Some(name) = rest.trim().strip_prefix("device:") {
+                device = Some(name.trim().to_string());
+            }
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').map(str::trim).collect();
+        if !saw_header {
+            if cells != HEADER {
+                return Err(format!(
+                    "line {}: expected header '{}', got '{line}'",
+                    ln + 1,
+                    HEADER.join(", ")
+                ));
+            }
+            saw_header = true;
+            continue;
+        }
+        if cells.len() != HEADER.len() {
+            return Err(format!(
+                "line {}: expected {} columns, got {}",
+                ln + 1,
+                HEADER.len(),
+                cells.len()
+            ));
+        }
+        let time_ms = cells[0]
+            .parse::<u64>()
+            .map_err(|_| format!("line {}: bad time_ms '{}'", ln + 1, cells[0]))?;
+        let power_mw = parse_opt_u64(cells[1], ln, "power_mw")?;
+        let util_pct = parse_opt_u64(cells[2], ln, "util_pct")?.map(|u| u.min(u32::MAX as u64) as u32);
+        rows.push(NvmlRow { time_ms, power_mw, util_pct });
+    }
+    if !saw_header {
+        return Err("log is empty (no header row)".into());
+    }
+    let device = device.ok_or("log names no device (missing '# device:' line)")?;
+    Ok(NvmlLog { device, rows })
+}
+
+impl NvmlLog {
+    /// Re-emit the log in the canonical NVML-style format; inverse of
+    /// [`parse_nvml`] on canonical text (byte round-trip pinned by tests).
+    pub fn format(&self) -> String {
+        let mut out = String::from("# nvml power log v1\n");
+        out.push_str(&format!("# device: {}\n", self.device));
+        out.push_str(&HEADER.join(", "));
+        out.push('\n');
+        for r in &self.rows {
+            let p = match r.power_mw {
+                Some(mw) => mw.to_string(),
+                None => "[N/A]".into(),
+            };
+            let u = match r.util_pct {
+                Some(u) => u.to_string(),
+                None => "[N/A]".into(),
+            };
+            out.push_str(&format!("{}, {p}, {u}\n", r.time_ms));
+        }
+        out
+    }
+
+    /// Normalise into the canonical recorded-log form: milliwatts →
+    /// watts, milliseconds → seconds, failed queries stay `[N/A]`.
+    pub fn to_smi_log(&self) -> SmiLog {
+        let fields = vec![QueryField::Timestamp, QueryField::Name, QueryField::PowerDraw];
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    LogValue::Seconds(units::ms_to_s(r.time_ms as f64)),
+                    LogValue::Text(self.device.clone()),
+                    LogValue::Watts(r.power_mw.map(|mw| units::mw_to_w(mw as f64))),
+                ]
+            })
+            .collect();
+        SmiLog { fields, rows }
+    }
+
+    /// Writer: render a `(seconds, watts)` series as an NVML log for
+    /// `device` — the differential-test path (same synthetic trace out
+    /// through every schema, back in through the unchanged core).
+    /// Quantises to the format's native resolution: integer milliseconds
+    /// and integer milliwatts.
+    pub fn from_series(device: &str, points: &[(f64, f64)]) -> NvmlLog {
+        let rows = points
+            .iter()
+            .map(|&(t, w)| NvmlRow {
+                time_ms: units::s_to_ms(t).round().max(0.0) as u64,
+                power_mw: Some(units::w_to_mw(w).round().max(0.0) as u64),
+                util_pct: None,
+            })
+            .collect();
+        NvmlLog { device: device.to_string(), rows }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CANONICAL: &str = "# nvml power log v1\n\
+                             # device: RTX 3090\n\
+                             time_ms, power_mw, util_pct\n\
+                             0, 25150, 4\n\
+                             100, [N/A], [N/A]\n\
+                             200, 301230, 98\n";
+
+    #[test]
+    fn canonical_text_round_trips_byte_for_byte() {
+        let log = parse_nvml(CANONICAL).unwrap();
+        assert_eq!(log.device, "RTX 3090");
+        assert_eq!(log.rows.len(), 3);
+        assert_eq!(log.rows[0], NvmlRow { time_ms: 0, power_mw: Some(25_150), util_pct: Some(4) });
+        assert_eq!(log.rows[1].power_mw, None);
+        assert_eq!(log.format(), CANONICAL);
+    }
+
+    #[test]
+    fn normalisation_converts_milliwatts_and_milliseconds() {
+        let smi = parse_nvml(CANONICAL).unwrap().to_smi_log();
+        assert_eq!(smi.model_name(), Some("RTX 3090"));
+        let series = smi.power_series(&QueryField::PowerDraw).unwrap();
+        // [N/A] row skipped; mW -> W, ms -> s
+        assert_eq!(series, vec![(0.0, 25.15), (0.2, 301.23)]);
+        // the normalised text is a valid canonical log (idempotent)
+        let text = smi.format();
+        assert_eq!(crate::smi::parse_log(&text).unwrap().format(), text);
+    }
+
+    #[test]
+    fn crlf_and_extra_comments_are_tolerated() {
+        let text = "# banner\r\n# device: RTX 3090\r\n# interval: 100ms\r\n\
+                    time_ms, power_mw, util_pct\r\n\r\n0, 25150, 4\r\n";
+        let log = parse_nvml(text).unwrap();
+        assert_eq!(log.rows.len(), 1);
+        assert_eq!(log.device, "RTX 3090");
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let e = parse_nvml("# device: X\ntime_ms, power_mw, util_pct\n0, oops, 4\n").unwrap_err();
+        assert!(e.contains("line 3") && e.contains("power_mw"), "{e}");
+        let e = parse_nvml("# device: X\ntime_ms, power_mw, util_pct\n0, 100\n").unwrap_err();
+        assert!(e.contains("line 3") && e.contains("columns"), "{e}");
+        let e = parse_nvml("# device: X\nbogus header\n").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+        let e = parse_nvml("time_ms, power_mw, util_pct\n0, 1, 2\n").unwrap_err();
+        assert!(e.contains("device"), "{e}");
+        assert!(parse_nvml("").is_err());
+        assert!(parse_nvml("# device: X\n").is_err(), "no header row");
+    }
+
+    #[test]
+    fn writer_quantises_to_native_resolution() {
+        let log = NvmlLog::from_series("RTX 3090", &[(0.0, 25.1504), (0.1001, 300.0)]);
+        assert_eq!(log.rows[0].power_mw, Some(25_150));
+        assert_eq!(log.rows[1].time_ms, 100);
+        // writer output parses back and round-trips
+        let text = log.format();
+        assert_eq!(parse_nvml(&text).unwrap(), log);
+        // quantisation error bounded by half a milliwatt
+        let series = log.to_smi_log().power_series(&QueryField::PowerDraw).unwrap();
+        assert!((series[0].1 - 25.1504).abs() <= 0.0005 + 1e-12);
+    }
+}

@@ -1012,7 +1012,22 @@ impl FleetAccounts {
         }
         // error watts per GPU = (naive - truth) energy / total observed time
         let err_w = (whole.naive_j - whole.truth_j) / observed_s;
-        err_w.abs() * 24.0 * 365.0 / 1000.0 * usd_per_kwh * n_gpus as f64
+        crate::units::w_to_kwh_per_year(err_w.abs()) * usd_per_kwh * n_gpus as f64
+    }
+}
+
+/// Host-rail energy per bucket: trapezoid-integrate an irregular
+/// `(seconds, watts)` series — an IPMI `GPU Board Power` rail — over each
+/// bucket of `spec`, clipped to the bucket bounds. The host side of the
+/// reconciliation pass ([`crate::telemetry::query::host_reconciliation_table`]):
+/// a chassis rail has no part-time averaging, so its per-bucket energy is
+/// the reference the device-derived corrected account must agree with.
+pub fn host_bucket_energies(points: &[(f64, f64)], spec: &BucketSpec, out: &mut Vec<f64>) {
+    out.clear();
+    out.resize(spec.n, 0.0);
+    for (b, slot) in out.iter_mut().enumerate() {
+        let (lo, hi) = spec.bounds(b);
+        *slot = crate::measure::energy::integrate_clipped_points(points, lo, hi);
     }
 }
 
@@ -1046,6 +1061,24 @@ mod tests {
         assert_eq!(s.index_of(11.9), Some(3));
         assert_eq!(s.index_of(12.0), None);
         assert_eq!(s.bounds(1), (3.0, 6.0));
+    }
+
+    #[test]
+    fn host_bucket_energies_tile_the_whole_integral() {
+        let spec = spec3();
+        let pts: Vec<(f64, f64)> = vec![(0.0, 250.0), (0.5, 250.0), (1.5, 610.0), (2.9, 610.0)];
+        let mut out = Vec::new();
+        host_bucket_energies(&pts, &spec, &mut out);
+        assert_eq!(out.len(), 3);
+        // constant 250 W over the first half-bucket sample pair
+        assert!((out[0] - integrate_clipped_points(&pts, 0.0, 1.0)).abs() < 1e-12);
+        // buckets tile: their sum is the whole-range integral
+        let sum: f64 = out.iter().sum();
+        let whole = integrate_clipped_points(&pts, 0.0, 3.0);
+        assert!((sum - whole).abs() < 1e-9, "sum {sum} vs whole {whole}");
+        // an empty rail accounts zero everywhere
+        host_bucket_energies(&[], &spec, &mut out);
+        assert!(out.iter().all(|&j| j == 0.0));
     }
 
     /// The incremental per-segment clipping must agree with the batch

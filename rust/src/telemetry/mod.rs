@@ -73,6 +73,10 @@
 //! The historical one-call entry points ([`run_service`],
 //! [`run_service_with`], [`run_replay_service`]) are thin wrappers over
 //! start → drain → join and return exactly what they always did.
+//! [`run_foreign_service`] extends replay to the foreign telemetry zoo
+//! (NVML mW logs, amdsmi CSV, DCGM/Prometheus scrapes, IPMI host rails)
+//! by normalising each dump through [`crate::smi::schemas`] first — the
+//! pipeline below the normalisation boundary is byte-for-byte the same.
 //!
 //! Determinism: for a fixed [`TelemetryConfig::seed`] (and fault plan /
 //! log set) the accounts, the registry, the per-epoch identities, the
@@ -263,6 +267,28 @@ pub fn run_replay_service(
     cfg: &TelemetryConfig,
 ) -> Result<TelemetrySnapshot, String> {
     Ok(TelemetryService::start_replay(logs, cfg)?.join())
+}
+
+/// Run the telemetry service over foreign-schema telemetry dumps (one
+/// node per dump, node ids in dump order) to completion. Each dump is
+/// normalised into the canonical recorded-log form by
+/// [`crate::smi::schemas::normalize`] and then replayed through the
+/// *unchanged* ingestion + identification + accounting pipeline — the
+/// core never learns which vendor produced the bytes.
+pub fn run_foreign_service(
+    kind: crate::smi::SchemaKind,
+    dumps: &[String],
+    cfg: &TelemetryConfig,
+) -> Result<TelemetrySnapshot, String> {
+    let normalized = dumps
+        .iter()
+        .enumerate()
+        .map(|(i, text)| {
+            crate::smi::schemas::normalize(kind, text)
+                .map_err(|e| format!("{} dump {i}: {e}", kind.name()))
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    run_replay_service(&normalized, cfg)
 }
 
 #[cfg(test)]

@@ -10,8 +10,9 @@
 
 use crate::report::{f, Table};
 use crate::sim::profile::{DriverEpoch, PowerField};
+use crate::units;
 
-use super::accounting::NodeAccount;
+use super::accounting::{host_bucket_energies, NodeAccount};
 use super::registry::Registry;
 use super::TelemetrySnapshot;
 
@@ -22,10 +23,83 @@ pub fn fleet_energy_table(snap: &TelemetrySnapshot, t0: f64, t1: f64) -> Table {
         format!("fleet energy, t = {:.1}..{:.1} s ({} nodes)", e.t0, e.t1, snap.accounts.nodes.len()),
         &["account", "energy kJ", "vs truth %"],
     );
-    t.row(&["pmd truth".into(), f(e.truth_j / 1e3, 3), "-".into()]);
-    t.row(&["naive".into(), f(e.naive_j / 1e3, 3), format!("{:+.2}", e.naive_pct())]);
-    t.row(&["corrected".into(), f(e.corrected_j / 1e3, 3), format!("{:+.2}", e.corrected_pct())]);
-    t.row(&["error bound".into(), format!("±{}", f(e.bound_j / 1e3, 3)), "-".into()]);
+    t.row(&["pmd truth".into(), f(units::j_to_kj(e.truth_j), 3), "-".into()]);
+    t.row(&["naive".into(), f(units::j_to_kj(e.naive_j), 3), format!("{:+.2}", e.naive_pct())]);
+    t.row(&[
+        "corrected".into(),
+        f(units::j_to_kj(e.corrected_j), 3),
+        format!("{:+.2}", e.corrected_pct()),
+    ]);
+    t.row(&["error bound".into(), format!("±{}", f(units::j_to_kj(e.bound_j), 3)), "-".into()]);
+    t
+}
+
+/// Host-vs-device power reconciliation over the bucket grid: an IPMI
+/// `GPU Board Power` rail ([`crate::smi::schemas::ipmi`]) integrated per
+/// bucket against the fleet's device-derived accounts. One row per
+/// bucket: the host rail's energy, the naive and corrected device
+/// accounts, the residual `host − corrected`, the coverage-derived bound,
+/// and whether the residual falls within it — the chassis rail sees the
+/// board full-time, so a residual beyond the bound flags either a
+/// mis-identified sensor or genuinely unmetered draw. A final `total` row
+/// sums the span.
+pub fn host_reconciliation_table(snap: &TelemetrySnapshot, host_points: &[(f64, f64)]) -> Table {
+    let spec = &snap.accounts.spec;
+    let mut host_j = Vec::new();
+    host_bucket_energies(host_points, spec, &mut host_j);
+    let mut t = Table::new(
+        format!(
+            "host vs device power reconciliation ({} buckets × {:.1} s)",
+            spec.n, spec.bucket_s
+        ),
+        &[
+            "bucket",
+            "t0 s",
+            "t1 s",
+            "host kJ",
+            "naive kJ",
+            "corrected kJ",
+            "residual kJ",
+            "bound ±kJ",
+            "within",
+        ],
+    );
+    let a = &snap.accounts;
+    let (mut th, mut tn, mut tc, mut tr, mut tb) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    let mut all_within = true;
+    for b in 0..spec.n {
+        let (lo, hi) = spec.bounds(b);
+        let residual = host_j[b] - a.fleet_corrected_j[b];
+        let within = residual.abs() <= a.fleet_bound_j[b];
+        all_within &= within;
+        th += host_j[b];
+        tn += a.fleet_naive_j[b];
+        tc += a.fleet_corrected_j[b];
+        tr += residual;
+        tb += a.fleet_bound_j[b];
+        t.row(&[
+            b.to_string(),
+            f(lo, 1),
+            f(hi, 1),
+            f(units::j_to_kj(host_j[b]), 3),
+            f(units::j_to_kj(a.fleet_naive_j[b]), 3),
+            f(units::j_to_kj(a.fleet_corrected_j[b]), 3),
+            format!("{:+.3}", units::j_to_kj(residual)),
+            format!("±{}", f(units::j_to_kj(a.fleet_bound_j[b]), 3)),
+            if within { "yes" } else { "NO" }.into(),
+        ]);
+    }
+    t.row(&[
+        "total".into(),
+        f(spec.t0, 1),
+        f(spec.t_end(), 1),
+        f(units::j_to_kj(th), 3),
+        f(units::j_to_kj(tn), 3),
+        f(units::j_to_kj(tc), 3),
+        format!("{:+.3}", units::j_to_kj(tr)),
+        format!("±{}", f(units::j_to_kj(tb), 3)),
+        if all_within { "yes" } else { "NO" }.into(),
+    ]);
     t
 }
 
@@ -58,7 +132,7 @@ pub fn generation_breakdown(snap: &TelemetrySnapshot, field: PowerField, driver:
         t.row(&[
             g.generation.name().into(),
             g.nodes.to_string(),
-            f(truth / 1e3, 2),
+            f(units::j_to_kj(truth), 2),
             pct(naive),
             pct(corrected),
             id_acc,
@@ -142,9 +216,9 @@ pub fn window_table(snap: &TelemetrySnapshot) -> Table {
             w.index.to_string(),
             f(w.t0, 1),
             f(w.t1, 1),
-            f(w.truth_j / 1e3, 3),
-            f(w.naive_j / 1e3, 3),
-            f(w.corrected_j / 1e3, 3),
+            f(units::j_to_kj(w.truth_j), 3),
+            f(units::j_to_kj(w.naive_j), 3),
+            f(units::j_to_kj(w.corrected_j), 3),
             pct(w.naive_pct()),
             pct(w.corrected_pct()),
             published.into(),
@@ -220,6 +294,39 @@ mod tests {
         let wt = window_table(&snap);
         assert_eq!(wt.rows.len(), snap.windows().len());
         assert!(wt.render().contains("rolling window snapshots"));
+    }
+
+    /// A host rail that integrates to exactly the corrected account
+    /// reconciles in every bucket; an absent rail (all-zero host energy)
+    /// flags the residual.
+    #[test]
+    fn host_reconciliation_table_checks_residual_against_bound() {
+        let snap = snapshot();
+        let spec = snap.accounts.spec;
+        // piecewise-constant host trace matching the corrected account:
+        // per bucket, a flat segment whose trapezoid is corrected_j[b]
+        let mut pts = Vec::new();
+        for b in 0..spec.n {
+            let (lo, hi) = spec.bounds(b);
+            let w = snap.accounts.fleet_corrected_j[b] / spec.bucket_s;
+            pts.push((lo, w));
+            pts.push((hi, w));
+        }
+        let t = host_reconciliation_table(&snap, &pts);
+        assert_eq!(t.rows.len(), spec.n + 1, "one row per bucket plus totals");
+        assert!(t.headers.iter().any(|h| h == "within"));
+        for row in &t.rows {
+            assert_eq!(row.last().map(String::as_str), Some("yes"), "{row:?}");
+        }
+        // totals row spans the whole bucket grid
+        let total = t.rows.last().unwrap();
+        assert_eq!(total[0], "total");
+        assert_eq!(total[2], f(spec.t_end(), 1));
+
+        // no host samples at all: every bucket's residual is the full
+        // corrected energy, far outside the bound
+        let t = host_reconciliation_table(&snap, &[]);
+        assert_eq!(t.rows.last().unwrap().last().map(String::as_str), Some("NO"));
     }
 
     /// Satellite: the bounded partial selection behind

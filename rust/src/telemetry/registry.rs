@@ -1020,7 +1020,7 @@ impl Registry {
     ) -> Option<bool> {
         let spec = sensor_pipeline(entry.generation, field, driver);
         let id = &entry.identity;
-        let true_update = spec.update_ms / 1000.0;
+        let true_update = crate::units::ms_to_s(spec.update_ms);
         let update_ok = |est: Option<f64>| {
             est.map(|e| (e - true_update).abs() <= (0.25 * true_update).max(0.006))
                 .unwrap_or(false)
@@ -1034,7 +1034,7 @@ impl Registry {
             // its class can legitimately read as a coarse boxcar.
             PipelineKind::RcFilter { .. } => Some(update_ok(id.update_s)),
             PipelineKind::Boxcar { window_ms } => {
-                let true_w = window_ms / 1000.0;
+                let true_w = crate::units::ms_to_s(window_ms);
                 let window_ok = id
                     .window_s
                     .map(|w| (w - true_w).abs() <= (0.35 * true_w).max(0.006))

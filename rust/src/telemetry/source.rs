@@ -428,6 +428,23 @@ impl ReplaySource {
         self.prepare_from_parsed(node_id, &log)
     }
 
+    /// Parse a **foreign-schema** log (NVML mW log, amdsmi CSV,
+    /// DCGM/Prometheus scrape, IPMI host dump — see
+    /// [`crate::smi::schemas`]) and stage it as node `node_id`'s stream:
+    /// every vendor format is a [`ReadingSource`] through this one entry
+    /// point, normalised into the canonical recorded-log form first so
+    /// downstream identification + accounting code paths are literally
+    /// the ones the native replay exercises.
+    pub fn prepare_from_foreign(
+        &mut self,
+        node_id: usize,
+        kind: crate::smi::SchemaKind,
+        text: &str,
+    ) -> Result<(), String> {
+        let log = crate::smi::schemas::parse_to_smi(kind, text)?;
+        self.prepare_from_parsed(node_id, &log)
+    }
+
     /// [`Self::prepare_from_log`] over an already-parsed session (the
     /// replay service parses each log exactly once, up front).
     pub fn prepare_from_parsed(

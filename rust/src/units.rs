@@ -1,0 +1,148 @@
+//! Canonical unit conversions for the power/energy pipeline.
+//!
+//! Every foreign telemetry schema arrives in its own units — NVML reports
+//! **milliwatts**, amdsmi integer **watts**, DCGM float watts against
+//! **millisecond** epoch timestamps, IPMI integer watts per host rail —
+//! and the accounting layer reports **joules** rolled up to kilojoules
+//! and annualised kWh. Before this module each conversion was an ad-hoc
+//! `/ 1000.0` at its call site, which is exactly how a milliwatt adapter
+//! multiplies a latent factor-of-1000 bug. All scale changes now route
+//! through these helpers.
+//!
+//! Bit-compatibility note: the helpers deliberately keep the *same
+//! floating-point operation order* as the expressions they replaced
+//! (`x / 1000.0`, `w * 24.0 * 365.0 / 1000.0`, …), so swapping a call
+//! site over is bit-for-bit neutral — pinned by tests below.
+
+/// Milliseconds per second.
+pub const MS_PER_S: f64 = 1000.0;
+/// Milliwatts per watt (NVML's `nvmlDeviceGetPowerUsage` unit).
+pub const MW_PER_W: f64 = 1000.0;
+/// Joules per kilojoule.
+pub const J_PER_KJ: f64 = 1000.0;
+/// Joules per kilowatt-hour.
+pub const J_PER_KWH: f64 = 3.6e6;
+/// Hours in the accounting year used by the paper's cost projection.
+pub const HOURS_PER_YEAR: f64 = 24.0 * 365.0;
+
+/// Milliwatts → watts (NVML power readings).
+#[inline]
+pub fn mw_to_w(mw: f64) -> f64 {
+    mw / MW_PER_W
+}
+
+/// Watts → milliwatts (NVML log writer).
+#[inline]
+pub fn w_to_mw(w: f64) -> f64 {
+    w * MW_PER_W
+}
+
+/// Milliseconds → seconds (DCGM/Prometheus timestamps, identified
+/// sensor windows).
+#[inline]
+pub fn ms_to_s(ms: f64) -> f64 {
+    ms / MS_PER_S
+}
+
+/// Seconds → milliseconds.
+#[inline]
+pub fn s_to_ms(s: f64) -> f64 {
+    s * MS_PER_S
+}
+
+/// Joules → kilojoules (table rendering).
+#[inline]
+pub fn j_to_kj(j: f64) -> f64 {
+    j / J_PER_KJ
+}
+
+/// Joules → kilowatt-hours (cost accounting).
+#[inline]
+pub fn j_to_kwh(j: f64) -> f64 {
+    j / J_PER_KWH
+}
+
+/// A steady draw of `w` watts → kWh consumed per year. Same operation
+/// order as the annual-cost expressions this replaced
+/// (`w * 24.0 * 365.0 / 1000.0`), so the USD projections are unchanged
+/// bit-for-bit.
+#[inline]
+pub fn w_to_kwh_per_year(w: f64) -> f64 {
+    w * 24.0 * 365.0 / 1000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_constants_are_exact() {
+        // all power-of-ten scales used here are exactly representable
+        assert_eq!(MS_PER_S, 1000.0);
+        assert_eq!(MS_PER_S, 1e3);
+        assert_eq!(MW_PER_W, 1000.0);
+        assert_eq!(J_PER_KJ, 1e3);
+        assert_eq!(J_PER_KWH, 3_600_000.0);
+        assert_eq!(HOURS_PER_YEAR, 8760.0);
+    }
+
+    #[test]
+    fn milliwatt_round_trips() {
+        assert_eq!(mw_to_w(61_150.0), 61.15);
+        assert_eq!(mw_to_w(0.0), 0.0);
+        assert_eq!(w_to_mw(250.0), 250_000.0);
+        // exact for every integer milliwatt value a sensor can report
+        for mw in [1u64, 999, 1_000, 65_535, 300_000, 700_001] {
+            let w = mw_to_w(mw as f64);
+            assert_eq!(w_to_mw(w).round() as u64, mw, "{mw} mW");
+        }
+    }
+
+    #[test]
+    fn time_round_trips() {
+        assert_eq!(ms_to_s(1500.0), 1.5);
+        assert_eq!(s_to_ms(0.1), 100.0);
+        for ms in [0u64, 1, 100, 999, 1_000, 86_400_000] {
+            assert_eq!(s_to_ms(ms_to_s(ms as f64)).round() as u64, ms, "{ms} ms");
+        }
+    }
+
+    #[test]
+    fn energy_conversions() {
+        assert_eq!(j_to_kj(2500.0), 2.5);
+        assert_eq!(j_to_kwh(3.6e6), 1.0);
+        assert_eq!(j_to_kwh(1.8e6), 0.5);
+        // a 1 kW draw burns 8760 kWh in the accounting year
+        assert_eq!(w_to_kwh_per_year(1000.0), 8760.0);
+    }
+
+    /// The helpers replaced in-line expressions; these pins guarantee the
+    /// swap is bit-for-bit neutral at the original call sites.
+    #[test]
+    fn bit_identical_to_replaced_expressions() {
+        for x in [0.0, 1.0e-12, 0.37, 61.15, 1234.567, 9.9e9] {
+            assert_eq!(j_to_kj(x).to_bits(), (x / 1e3).to_bits());
+            assert_eq!(mw_to_w(x).to_bits(), (x / 1000.0).to_bits());
+            assert_eq!(ms_to_s(x).to_bits(), (x / 1000.0).to_bits());
+            assert_eq!(s_to_ms(x).to_bits(), (x * 1000.0).to_bits());
+            assert_eq!(
+                w_to_kwh_per_year(x).to_bits(),
+                (x * 24.0 * 365.0 / 1000.0).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn conversions_are_monotone_and_total() {
+        // NaN propagates, infinities stay infinite, no panics anywhere
+        assert!(mw_to_w(f64::NAN).is_nan());
+        assert_eq!(j_to_kwh(f64::INFINITY), f64::INFINITY);
+        assert!(ms_to_s(-5.0) < 0.0);
+        let mut prev = f64::NEG_INFINITY;
+        for x in [-1.0e6, -1.0, 0.0, 1.0, 1.0e6] {
+            let y = w_to_kwh_per_year(x);
+            assert!(y >= prev);
+            prev = y;
+        }
+    }
+}

@@ -442,3 +442,131 @@ fn prop_random_requests_roundtrip() {
         assert_eq!(decoded, req, "case {seed}");
     });
 }
+
+// ---------------------------------------------------------------------------
+// Foreign telemetry schemas (ISSUE 10 satellite: every parser is total —
+// random byte mutations, truncation at every offset, CRLF/whitespace
+// variants, and N/A cells must yield a line-numbered Err or a valid log,
+// never a panic; same discipline as the net/frame.rs suite above)
+// ---------------------------------------------------------------------------
+
+use gpupower::smi::schemas::{self, SchemaKind};
+
+/// One valid canonical text per schema, built through the writers.
+fn schema_samples() -> Vec<(SchemaKind, String)> {
+    let pts = [(0.0, 61.15), (0.1, 240.5), (0.2, 239.75), (0.3, 62.0)];
+    vec![
+        (SchemaKind::Nvml, schemas::nvml::NvmlLog::from_series("RTX 3090", &pts).format()),
+        (SchemaKind::Amdsmi, schemas::amdsmi::AmdsmiLog::from_series("Instinct MI210", &pts).format()),
+        (
+            SchemaKind::Dcgm,
+            schemas::dcgm::DcgmScrape::from_series("A100 PCIe-40G", 1_700_000_000_000, &pts).format(),
+        ),
+        (SchemaKind::Ipmi, schemas::ipmi::IpmiLog::from_gpu_board_series(&pts).format()),
+    ]
+}
+
+#[test]
+fn prop_schema_parsers_survive_truncation_at_every_offset() {
+    for (kind, text) in schema_samples() {
+        // the full text parses; every byte-truncated prefix either parses
+        // (a shorter but valid log) or errs — never panics. Truncation can
+        // split a UTF-8 boundary only in device names; all samples are
+        // ASCII so byte cuts are char cuts.
+        assert!(schemas::parse_to_smi(kind, &text).is_ok(), "{kind:?}");
+        for cut in 0..text.len() {
+            let _ = schemas::parse_to_smi(kind, &text[..cut]);
+        }
+    }
+}
+
+#[test]
+fn prop_schema_parsers_survive_random_byte_mutations() {
+    for_cases(25, 21, |seed, rng| {
+        for (kind, text) in schema_samples() {
+            let mut bytes = text.clone().into_bytes();
+            for _ in 0..8 {
+                let i = rng.below(bytes.len() as u64) as usize;
+                bytes[i] = rng.next_u64() as u8;
+            }
+            // mutated text may no longer be UTF-8; both paths must be total
+            if let Ok(s) = String::from_utf8(bytes) {
+                let _ = schemas::parse_to_smi(kind, &s);
+                let _ = schemas::normalize(kind, &s);
+            }
+            let _ = seed;
+        }
+    });
+}
+
+#[test]
+fn prop_schema_parsers_are_total_on_random_ascii() {
+    for_cases(60, 22, |_seed, rng| {
+        let n = rng.below(400) as usize;
+        let junk: String =
+            (0..n).map(|_| (0x20 + (rng.below(95) as u8)) as char).collect();
+        for kind in SchemaKind::ALL {
+            let _ = schemas::parse_to_smi(kind, &junk);
+        }
+    });
+}
+
+#[test]
+fn prop_schema_crlf_and_whitespace_variants_parse_identically() {
+    for (kind, text) in schema_samples() {
+        let crlf = text.replace('\n', "\r\n");
+        let a = schemas::normalize(kind, &text).unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        let b = schemas::normalize(kind, &crlf).unwrap_or_else(|e| panic!("{kind:?} CRLF: {e}"));
+        assert_eq!(a, b, "{kind:?}: CRLF must normalise identically");
+        // blank lines between rows are tolerated everywhere
+        let gappy = text.replace('\n', "\n\n");
+        let c = schemas::normalize(kind, &gappy).unwrap_or_else(|e| panic!("{kind:?} gaps: {e}"));
+        assert_eq!(a, c, "{kind:?}: blank lines must not change the log");
+    }
+}
+
+#[test]
+fn prop_schema_errors_are_line_numbered() {
+    // corrupt one data cell per schema; the error must carry its line
+    let cases: Vec<(SchemaKind, String, &str)> = vec![
+        (
+            SchemaKind::Nvml,
+            "# device: X\ntime_ms, power_mw, util_pct\n0, 100, 1\n10, frog, 1\n".into(),
+            "line 4",
+        ),
+        (
+            SchemaKind::Amdsmi,
+            "timestamp,device,socket_power_w,gfx_activity_pct,vram_used_mb\n0.000,X,41,2,512\n0.100,X,frog,2,512\n".into(),
+            "line 3",
+        ),
+        (
+            SchemaKind::Dcgm,
+            "DCGM_FI_DEV_POWER_USAGE{gpu=\"0\",modelName=\"X\"} 1.0 1\nDCGM_FI_DEV_POWER_USAGE{gpu=\"0\",modelName=\"X\"} frog 2\n".into(),
+            "line 2",
+        ),
+        (
+            SchemaKind::Ipmi,
+            "time_s,GPU Board Power\n0.000,100\n0.500,frog\n".into(),
+            "line 3",
+        ),
+    ];
+    for (kind, text, want) in cases {
+        let e = schemas::parse_to_smi(kind, &text).unwrap_err();
+        assert!(e.contains(want), "{kind:?}: '{e}' should name {want}");
+    }
+}
+
+#[test]
+fn prop_schema_na_cells_never_panic_and_are_skipped() {
+    // every schema's dropout spelling survives parsing and normalisation
+    let texts = [
+        (SchemaKind::Nvml, "# device: X\ntime_ms, power_mw, util_pct\n0, [N/A], [N/A]\n100, 2000, 5\n"),
+        (SchemaKind::Amdsmi, "timestamp,device,socket_power_w,gfx_activity_pct,vram_used_mb\n0.000,X,N/A,N/A,N/A\n0.100,X,2,3,4\n"),
+        (SchemaKind::Ipmi, "time_s,GPU Board Power\n0.000,N/A\n0.500,250\n"),
+    ];
+    for (kind, text) in texts {
+        let norm = schemas::normalize(kind, text).unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        // the N/A row survives normalisation as a canonical [N/A] cell
+        assert!(norm.contains("[N/A]"), "{kind:?}: {norm}");
+    }
+}
